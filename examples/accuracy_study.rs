@@ -1,0 +1,45 @@
+//! Accuracy study (paper Table 4): FP64 vs FP32 on the same long thermal
+//! evolution, bucketed per-cell deviations.
+//!
+//! Run: `cargo run --release --example accuracy_study`
+//! Env: TETRIS_ACC_BLOCKS (Tb-blocks to evolve; default 50).
+
+use tetris::apps::accuracy;
+use tetris::runtime::XlaService;
+
+fn main() -> anyhow::Result<()> {
+    let svc = XlaService::spawn_default().ok();
+    let blocks: usize = std::env::var("TETRIS_ACC_BLOCKS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(50);
+    let n = svc
+        .as_ref()
+        .and_then(|s| s.manifest().thermal_core.first().copied())
+        .unwrap_or(96);
+
+    let rep = accuracy::run_accuracy(svc.as_ref(), n, blocks)?;
+    println!(
+        "== Table 4: FP64 vs FP32 after {} steps on {n}x{n} ({}) ==",
+        rep.steps,
+        if rep.used_artifacts { "PJRT artifacts" } else { "rust fallback" }
+    );
+    println!("{:<20} {:>9} {:>11} {:>9}", "deviation", "<0.1°C", "0.1-1.0°C", ">1.0°C");
+    println!(
+        "{:<20} {:>8.1}% {:>10.1}% {:>8.1}%",
+        "Tetris FP64 (ref)", 100.0, 0.0, 0.0
+    );
+    println!(
+        "{:<20} {:>8.1}% {:>10.1}% {:>8.1}%",
+        "FP32 pipeline", rep.fp32_buckets[0], rep.fp32_buckets[1], rep.fp32_buckets[2]
+    );
+    println!(
+        "\nmax |FP64 - FP32| = {:.4} °C, mean drift = {:.6} °C",
+        rep.fp64.max_abs_diff(&rep.fp32),
+        (rep.fp64.mean() - rep.fp32.mean()).abs()
+    );
+    // The paper's point: FP32 deviations are NOT ignorable on long
+    // evolutions (they report 73.1% of cells off by >= 0.1 °C at 3.8e6
+    // steps; scaled runs show the same monotone drift).
+    Ok(())
+}

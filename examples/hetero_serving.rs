@@ -1,0 +1,108 @@
+//! Heterogeneous scheduling demo (paper §5, Fig. 11 + Fig. 14 ratios):
+//! drive a stream of stencil evolution jobs through the concurrent
+//! scheduler, showing profile-initialized partitioning, the auto-tuner
+//! converging, memory squeezing under a constrained "device", and the
+//! centralized-communication accounting.
+//!
+//! Run: `make artifacts && cargo run --release --example hetero_serving`
+
+use tetris::coordinator::{
+    partition::capacity_units, tuner, CommModel, NativeWorker, Partition, Scheduler, Worker,
+    XlaWorker,
+};
+use tetris::runtime::XlaService;
+use tetris::stencil::{spec, Field};
+
+fn main() -> anyhow::Result<()> {
+    let svc = XlaService::spawn_default()
+        .map_err(|e| anyhow::anyhow!("this example needs artifacts (`make artifacts`): {e}"))?;
+    let bench = "heat2d";
+    let meta = svc.bench(bench)?.clone();
+    let s = spec::get(bench).unwrap();
+    let halo = s.radius * meta.tb;
+    let rest_cells: usize = meta.global_core[1..].iter().map(|n| n + 2 * halo).product();
+
+    // Two heterogeneous workers; the "device" (XLA) capacity is squeezed
+    // to force bidirectional spill (paper §5.1).
+    let device_cap = 5 * 3 * meta.unit * rest_cells * 8; // ~5 units
+    let workers: Vec<Box<dyn Worker>> = vec![
+        Box::new(NativeWorker::new(tetris::engine::by_name("tetris-cpu", 2).unwrap(), 1 << 33)),
+        Box::new(XlaWorker::new(svc.clone(), &format!("{bench}_block"), device_cap)?),
+    ];
+
+    // §5.2 profile initialization.
+    let unit_core: Vec<usize> = std::iter::once(meta.unit)
+        .chain(meta.global_core[1..].iter().copied())
+        .collect();
+    let prof = tuner::profile_workers(&workers, &s, &unit_core, meta.tb, 3)?;
+    println!("startup profile (s/unit-block): native={:.4} xla={:.4}", prof[0], prof[1]);
+
+    let units = meta.global_core[0] / meta.unit;
+    let caps: Vec<usize> = workers
+        .iter()
+        .map(|w| capacity_units(w.mem_capacity(), meta.unit, rest_cells))
+        .collect();
+    println!("capacity (units): native={} xla={} (device squeezed)", caps[0], caps[1]);
+    let weights: Vec<f64> = prof.iter().map(|t| 1.0 / t).collect();
+    let mut partition = Partition::balanced(meta.unit, units, &weights, &caps);
+    println!(
+        "initial partition: native={} xla={} units (xla ratio {:.1}%)",
+        partition.shares[0],
+        partition.shares[1],
+        partition.ratio(1) * 100.0
+    );
+
+    // Serve a stream of jobs, retuning between jobs (§5.2 rebalance).
+    let comm_model = CommModel::default();
+    for job in 0..4 {
+        let sched = Scheduler {
+            spec: s.clone(),
+            tb: meta.tb,
+            workers: if job == 0 { workers_clone(&svc, bench, device_cap)? } else { workers_clone(&svc, bench, device_cap)? },
+            partition: partition.clone(),
+            comm_model,
+        };
+        let core = Field::random(&meta.global_core, 100 + job as u64);
+        let steps = meta.tb * 4;
+        let (out, metrics) = sched.run(&core, steps, 0.0)?;
+        println!(
+            "\njob {job}: {} steps, {:.4} GStencils/s, bubble {:.1}%, out mean {:.6}",
+            steps,
+            metrics.gstencils_per_sec(),
+            metrics.bubble_fraction() * 100.0,
+            out.mean()
+        );
+        let (central, split) = metrics.comm.modeled_cost(&comm_model);
+        println!(
+            "  comm: {} batched msgs ({} bytes); modeled {:.2}ms centralized vs {:.2}ms per-step",
+            metrics.comm.messages,
+            metrics.comm.bytes,
+            central * 1e3,
+            split * 1e3
+        );
+        // Retune from measured busy times.
+        let measured: Vec<f64> = metrics.worker_busy.iter().map(|d| d.as_secs_f64()).collect();
+        let next = tuner::retune(&partition, &measured, &sched.workers, rest_cells);
+        if next != partition {
+            println!(
+                "  retuned partition: native {} -> {}, xla {} -> {}",
+                partition.shares[0], next.shares[0], partition.shares[1], next.shares[1]
+            );
+            partition = next;
+        } else {
+            println!("  partition stable (converged)");
+        }
+    }
+    Ok(())
+}
+
+fn workers_clone(
+    svc: &XlaService,
+    bench: &str,
+    device_cap: usize,
+) -> anyhow::Result<Vec<Box<dyn Worker>>> {
+    Ok(vec![
+        Box::new(NativeWorker::new(tetris::engine::by_name("tetris-cpu", 2).unwrap(), 1 << 33)),
+        Box::new(XlaWorker::new(svc.clone(), &format!("{bench}_block"), device_cap)?),
+    ])
+}

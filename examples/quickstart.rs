@@ -1,0 +1,53 @@
+//! Quickstart: the public API in ~40 lines.
+//!
+//! Builds the Heat-2D dwarf, runs the optimized Tetris (CPU) engine,
+//! checks it against the reference oracle, and — if `make artifacts` has
+//! run — executes the same computation through the AOT-compiled PJRT
+//! artifact (the accelerator path).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tetris::engine;
+use tetris::runtime::XlaService;
+use tetris::stencil::{reference, spec, Field};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick a stencil dwarf from the paper's Table-1 suite.
+    let heat2d = spec::get("heat2d").expect("built-in benchmark");
+    println!("dwarf: {} ({} points, radius {})", heat2d.name, heat2d.points(), heat2d.radius);
+
+    // 2. Make a domain with a ghost ring for 4 fused steps (valid mode).
+    let steps = 4;
+    let halo = heat2d.halo(steps);
+    let core = [256usize, 256];
+    let input = Field::random(&[core[0] + 2 * halo, core[1] + 2 * halo], 42);
+
+    // 3. Run the optimized engine (tessellate tiling + skewed swizzling).
+    let eng = engine::by_name("tetris-cpu", 2).unwrap();
+    let t0 = std::time::Instant::now();
+    let out = eng.block(&heat2d, &input, steps);
+    let dt = t0.elapsed();
+
+    // 4. Verify against the naive oracle.
+    let want = reference::block(&input, &heat2d, steps);
+    assert!(out.allclose(&want, 1e-12, 1e-14), "engine disagrees with oracle!");
+    let gst = (core[0] * core[1] * steps) as f64 / dt.as_secs_f64() / 1e9;
+    println!("tetris-cpu: {steps} steps on {core:?} in {dt:?} ({gst:.3} GStencils/s) — verified");
+
+    // 5. Same computation through the AOT PJRT artifact, if built.
+    match XlaService::spawn_default() {
+        Ok(svc) => {
+            let meta = svc.meta("heat2d_block")?.clone();
+            let unit_in = Field::random(&meta.input_shape, 7);
+            let xla_out = svc.run("heat2d_block", &unit_in)?;
+            let oracle = reference::block(&unit_in, &heat2d, meta.steps);
+            assert!(xla_out.allclose(&oracle, 1e-12, 1e-14));
+            println!(
+                "xla artifact {}: {:?} -> {:?} — verified against the oracle",
+                meta.name, meta.input_shape, meta.output_shape
+            );
+        }
+        Err(e) => println!("(skipping PJRT path: {e}; run `make artifacts`)"),
+    }
+    Ok(())
+}

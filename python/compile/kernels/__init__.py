@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for the Tetris stencil stack.
+
+Modules:
+  spec           - stencil specifications (paper Table 1)
+  ref            - pure-jnp correctness oracle
+  stencil_step   - single-step tiled Pallas kernel
+  temporal_block - Tb-step fused Pallas kernel (tessellation / AN5D analogue)
+  mxu_fold       - trapezoid-folding banded-matmul kernel (MXU adaptation)
+  vmem           - VMEM-footprint / MXU-utilization estimators
+"""
+
+from . import spec, ref, stencil_step, temporal_block, mxu_fold, vmem  # noqa: F401

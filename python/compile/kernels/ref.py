@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for every stencil kernel — the CORE correctness signal.
+
+Everything else in the stack (Pallas kernels, AOT artifacts, the rust
+engines) is validated against these functions, directly via pytest or
+transitively through golden vectors embedded in the artifact manifest.
+
+All functions use valid-mode semantics (see kernels.spec docstring).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .spec import StencilSpec
+
+
+def step(u: jnp.ndarray, spec: StencilSpec) -> jnp.ndarray:
+    """One valid-mode stencil update: (n+2r, ..) -> (n, ..).
+
+    out[i] = sum_o c_o * u[i + r + o]  for every interior cell i.
+    """
+    r = spec.radius
+    if u.ndim != spec.ndim:
+        raise ValueError(f"{spec.name}: expected {spec.ndim}d input, got {u.ndim}d")
+    core = tuple(n - 2 * r for n in u.shape)
+    if any(n <= 0 for n in core):
+        raise ValueError(f"{spec.name}: input {u.shape} too small for radius {r}")
+    out = jnp.zeros(core, dtype=u.dtype)
+    for off, c in sorted(spec.coeffs.items()):
+        idx = tuple(
+            slice(r + o, r + o + n) for o, n in zip(off, core)
+        )
+        out = out + u.dtype.type(c) * u[idx]
+    return out
+
+
+def block(u: jnp.ndarray, spec: StencilSpec, steps: int) -> jnp.ndarray:
+    """`steps` fused valid-mode updates: (n + 2*r*steps, ..) -> (n, ..)."""
+    for _ in range(steps):
+        u = step(u, spec)
+    return u
+
+
+def evolve_periodic(u: jnp.ndarray, spec: StencilSpec, steps: int) -> jnp.ndarray:
+    """`steps` updates on a periodic domain (shape-preserving).
+
+    Used by the thermal-diffusion accuracy study where the global domain
+    wraps; implemented with jnp.roll so it is exact for any radius.
+    """
+    for _ in range(steps):
+        out = jnp.zeros_like(u)
+        for off, c in sorted(spec.coeffs.items()):
+            shifted = u
+            for axis, o in enumerate(off):
+                if o != 0:
+                    shifted = jnp.roll(shifted, -o, axis=axis)
+            out = out + u.dtype.type(c) * shifted
+        u = out
+    return u

@@ -1,0 +1,147 @@
+"""Stencil specifications for the Tetris benchmark suite (paper Table 1).
+
+A :class:`StencilSpec` fully describes one stencil dwarf: dimensionality,
+shape family (star / box), radius and the FP64 coefficient set.  Both the
+pure-jnp oracle (:mod:`.ref`), the Pallas kernels and the AOT pipeline are
+driven by these specs, and the rust side mirrors them byte-for-byte in
+``rust/src/stencil/spec.rs`` (checked by an integration test through the
+artifact manifest).
+
+Semantics
+---------
+All kernels use *valid-mode* (shrinking) updates: one step maps an array of
+shape ``(n_0 + 2r, ..)`` to ``(n_0, ..)``.  A fused temporal block of ``Tb``
+steps maps ``(n_0 + 2 r Tb, ..)`` to ``(n_0, ..)``.  This is exactly the
+contract the L3 halo-exchange coordinator needs: a worker owns its core
+cells plus a halo ring of width ``r * Tb`` and refills the ring once per
+block (the paper's §5.3 "centralized communication launch").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+Offset = Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilSpec:
+    """A single stencil dwarf.
+
+    Attributes:
+      name: benchmark name as in paper Table 1 (lower-case).
+      ndim: number of spatial dimensions (1, 2 or 3).
+      kind: "star" (axis-aligned arms) or "box" (dense hypercube).
+      radius: arm length / half-width.
+      coeffs: mapping offset-tuple -> FP64 coefficient.
+    """
+
+    name: str
+    ndim: int
+    kind: str
+    radius: int
+    coeffs: Dict[Offset, float]
+
+    @property
+    def points(self) -> int:
+        """Number of taps (paper Table 1 "Pts")."""
+        return len(self.coeffs)
+
+    @property
+    def flops_per_cell(self) -> int:
+        """One multiply + one add per tap (fused as FMA on real HW)."""
+        return 2 * self.points
+
+    def offsets_array(self) -> np.ndarray:
+        """(points, ndim) int32 array of offsets, deterministic order."""
+        return np.array(sorted(self.coeffs.keys()), dtype=np.int32)
+
+    def coeffs_array(self) -> np.ndarray:
+        """(points,) float64 coefficients, matching offsets_array order."""
+        return np.array(
+            [self.coeffs[o] for o in sorted(self.coeffs.keys())],
+            dtype=np.float64,
+        )
+
+    def halo(self, steps: int = 1) -> int:
+        """Ghost-ring width consumed by `steps` fused valid-mode steps."""
+        return self.radius * steps
+
+
+def _star(ndim: int, radius: int, center: float, arm: float) -> Dict[Offset, float]:
+    """Star coefficients: `center` at origin, `arm` on each axis tap.
+
+    Normalized so the sum is 1 (heat-equation style convex update), which
+    keeps long evolutions numerically stable and mirrors Eq. 3 of the
+    paper with CFL number mu.
+    """
+    coeffs: Dict[Offset, float] = {}
+    origin = tuple([0] * ndim)
+    coeffs[origin] = center
+    for d in range(ndim):
+        for r in range(1, radius + 1):
+            for sign in (-1, 1):
+                off = [0] * ndim
+                off[d] = sign * r
+                # Decay arm weight with distance, as in high-order FD taps.
+                coeffs[tuple(off)] = arm / r
+    total = sum(coeffs.values())
+    return {k: v / total for k, v in coeffs.items()}
+
+
+def _box(ndim: int, radius: int) -> Dict[Offset, float]:
+    """Box coefficients: separable triangular profile, normalized to 1."""
+    axis = np.arange(-radius, radius + 1, dtype=np.float64)
+    w1 = (radius + 1.0) - np.abs(axis)  # triangular weights per axis
+    coeffs: Dict[Offset, float] = {}
+
+    def rec(prefix: Tuple[int, ...], weight: float) -> None:
+        if len(prefix) == ndim:
+            coeffs[prefix] = weight
+            return
+        for i, o in enumerate(axis.astype(int)):
+            rec(prefix + (int(o),), weight * w1[i])
+
+    rec(tuple(), 1.0)
+    total = sum(coeffs.values())
+    return {k: v / total for k, v in coeffs.items()}
+
+
+def heat_coeffs_2d(mu: float) -> Dict[Offset, float]:
+    """Paper Eq. 3: u' = (1-4mu) u + mu (N + S + E + W)."""
+    return {
+        (0, 0): 1.0 - 4.0 * mu,
+        (-1, 0): mu,
+        (1, 0): mu,
+        (0, -1): mu,
+        (0, 1): mu,
+    }
+
+
+#: CFL number used in the paper's thermal-diffusion case study (§6.5).
+THERMAL_MU = 0.23
+
+#: The 8 benchmark stencils of paper Table 1.
+BENCHMARKS: Dict[str, StencilSpec] = {
+    "heat1d": StencilSpec("heat1d", 1, "star", 1, _star(1, 1, 0.5, 0.25)),
+    "star1d5p": StencilSpec("star1d5p", 1, "star", 2, _star(1, 2, 0.4, 0.2)),
+    "heat2d": StencilSpec("heat2d", 2, "star", 1, heat_coeffs_2d(THERMAL_MU)),
+    "star2d9p": StencilSpec("star2d9p", 2, "star", 2, _star(2, 2, 0.3, 0.1)),
+    "box2d9p": StencilSpec("box2d9p", 2, "box", 1, _box(2, 1)),
+    "box2d25p": StencilSpec("box2d25p", 2, "box", 2, _box(2, 2)),
+    "heat3d": StencilSpec("heat3d", 3, "star", 1, _star(3, 1, 0.4, 0.1)),
+    "box3d27p": StencilSpec("box3d27p", 3, "box", 1, _box(3, 1)),
+}
+
+
+def get(name: str) -> StencilSpec:
+    """Look up a benchmark spec by name, raising KeyError with choices."""
+    try:
+        return BENCHMARKS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown stencil {name!r}; choices: {sorted(BENCHMARKS)}"
+        ) from None

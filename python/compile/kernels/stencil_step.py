@@ -1,0 +1,90 @@
+"""Single-step tiled Pallas stencil kernel.
+
+This is the Pallas adaptation of the paper's register-level "pattern
+mapping" (§3): the output is tessellated into rectangular tiles (the
+"straight tetrominoes"); each grid program DMAs its tile plus a halo ring
+from the (HBM-resident) input into VMEM, accumulates the weighted taps as
+aligned slot-wise FMA chains — the conflict-free schedule of Vector Skewed
+Swizzling: no gather, no cross-lane shuffle, every tap is a contiguous
+slice — and writes the tile back.
+
+Lowered with ``interpret=True`` everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls (see DESIGN.md §Hardware-Adaptation); structure — tile
+shapes, VMEM footprint, tap schedule — is what we optimize and what the
+estimators in :mod:`.vmem` analyse.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .spec import StencilSpec
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _check_tiles(core: Tuple[int, ...], tiles: Tuple[int, ...]) -> None:
+    if len(core) != len(tiles):
+        raise ValueError(f"tile rank {len(tiles)} != core rank {len(core)}")
+    for n, t in zip(core, tiles):
+        if n % t != 0:
+            raise ValueError(f"core dim {n} not divisible by tile {t}")
+
+
+def _kernel(u_ref, out_ref, *, spec: StencilSpec, tiles: Tuple[int, ...]):
+    """Grid program: load tile+halo window, accumulate taps, store tile."""
+    r = spec.radius
+    nd = spec.ndim
+    # Element offset of this program's output tile.
+    starts = [pl.program_id(d) * tiles[d] for d in range(nd)]
+    # Window = tile + halo ring, loaded once into VMEM (registers in
+    # interpret mode); all taps below are views into this window.
+    window = pl.load(
+        u_ref,
+        tuple(pl.ds(starts[d], tiles[d] + 2 * r) for d in range(nd)),
+    )
+    acc = jnp.zeros(tiles, dtype=out_ref.dtype)
+    for off, c in sorted(spec.coeffs.items()):
+        idx = tuple(slice(r + o, r + o + t) for o, t in zip(off, tiles))
+        acc = acc + out_ref.dtype.type(c) * window[idx]
+    pl.store(out_ref, tuple(pl.ds(starts[d], tiles[d]) for d in range(nd)), acc)
+
+
+def stencil_step(
+    u: jnp.ndarray,
+    spec: StencilSpec,
+    tiles: Optional[Sequence[int]] = None,
+) -> jnp.ndarray:
+    """One valid-mode stencil update via a tiled Pallas kernel.
+
+    Args:
+      u: input of shape ``core + 2*radius`` per dim.
+      spec: stencil specification.
+      tiles: output tile shape; defaults to the whole core (single program).
+
+    Returns:
+      Updated array of core shape.
+    """
+    r = spec.radius
+    core = tuple(n - 2 * r for n in u.shape)
+    if any(n <= 0 for n in core):
+        raise ValueError(f"{spec.name}: input {u.shape} too small for r={r}")
+    tiles = tuple(tiles) if tiles is not None else core
+    _check_tiles(core, tiles)
+    grid = tuple(n // t for n, t in zip(core, tiles))
+    kern = functools.partial(_kernel, spec=spec, tiles=tiles)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        # Whole-array specs: the kernel addresses its own window with
+        # dynamic slices (the HBM->VMEM DMA schedule is explicit).
+        in_specs=[pl.BlockSpec(u.shape, lambda *_: tuple([0] * spec.ndim))],
+        out_specs=pl.BlockSpec(core, lambda *_: tuple([0] * spec.ndim)),
+        out_shape=jax.ShapeDtypeStruct(core, u.dtype),
+        interpret=True,
+    )(u)

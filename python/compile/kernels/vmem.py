@@ -1,0 +1,146 @@
+"""VMEM-footprint and MXU-utilization estimators for the Pallas kernels.
+
+``interpret=True`` timings are CPU-numpy and say nothing about TPU
+performance, so — per DESIGN.md §8 — kernel *structure* is validated
+analytically: does the chosen tile fit the 16 MiB VMEM budget, what
+fraction of HBM traffic the temporal block saves, and what MXU occupancy
+the trapezoid-folding matmuls reach.  The same numbers are embedded into
+the AOT manifest so the rust scheduler's cost model (rust/src/model/) can
+reason about them without Python.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Sequence, Tuple
+
+from .spec import StencilSpec
+
+#: Per-core VMEM on contemporary TPU (v4/v5p), bytes.
+VMEM_BYTES = 16 * 1024 * 1024
+#: MXU systolic array edge (128x128 MACs).
+MXU_EDGE = 128
+#: Peak HBM bandwidth proxy (bytes/s) used for roofline ratios only.
+HBM_BW = 1.2e12
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEstimate:
+    """Static estimate for one kernel configuration."""
+
+    vmem_bytes: int
+    vmem_fraction: float
+    flops_per_cell: int
+    hbm_bytes_per_cell: float
+    arithmetic_intensity: float  # flops / HBM byte
+    mxu_utilization: float  # 0 for VPU-only kernels
+
+    def fits(self) -> bool:
+        return self.vmem_fraction <= 1.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def step_estimate(
+    spec: StencilSpec, tiles: Sequence[int], itemsize: int = 8
+) -> KernelEstimate:
+    """Estimate for the single-step tiled kernel (VPU path)."""
+    r = spec.radius
+    window = math.prod(t + 2 * r for t in tiles)
+    out = math.prod(tiles)
+    vmem = (window + 2 * out) * itemsize  # window + acc + out tile
+    flops = spec.flops_per_cell
+    hbm_per_cell = itemsize * (window / out + 1.0)  # read window, write core
+    return KernelEstimate(
+        vmem_bytes=vmem,
+        vmem_fraction=vmem / VMEM_BYTES,
+        flops_per_cell=flops,
+        hbm_bytes_per_cell=hbm_per_cell,
+        arithmetic_intensity=flops / hbm_per_cell,
+        mxu_utilization=0.0,
+    )
+
+
+def temporal_estimate(
+    spec: StencilSpec, tiles: Sequence[int], steps: int, itemsize: int = 8
+) -> KernelEstimate:
+    """Estimate for the Tb-fused kernel: HBM traffic amortized over Tb."""
+    r = spec.radius
+    halo = r * steps
+    window = math.prod(t + 2 * halo for t in tiles)
+    out = math.prod(tiles)
+    # window + two ping-pong scratch buffers of the first-shrink size.
+    scratch = math.prod(t + 2 * r * (steps - 1) for t in tiles)
+    vmem = (window + 2 * scratch) * itemsize
+    flops = spec.flops_per_cell * steps  # per output cell, Tb updates
+    hbm_per_cell = itemsize * (window / out + 1.0)  # ONE round-trip per Tb
+    return KernelEstimate(
+        vmem_bytes=vmem,
+        vmem_fraction=vmem / VMEM_BYTES,
+        flops_per_cell=flops,
+        hbm_bytes_per_cell=hbm_per_cell,
+        arithmetic_intensity=flops / hbm_per_cell,
+        mxu_utilization=0.0,
+    )
+
+
+def mxu_estimate(
+    spec: StencilSpec, tile_m: int, ny: int, itemsize: int = 8
+) -> KernelEstimate:
+    """Estimate for the trapezoid-folding banded-matmul kernel.
+
+    MXU utilization = useful MACs / MACs issued.  A dense
+    (tile_m x ny+2r) @ (ny+2r x ny) matmul issues tile_m*(ny+2r)*ny MACs,
+    of which only the band (2r+1 diagonals) carries taps; however the
+    systolic array is *fully busy* either way, so we report both occupancy
+    (issue efficiency vs an ideal sparse engine) and the padding
+    efficiency of the tile against the 128-lane MXU edge.
+    """
+    r = spec.radius
+    slabs = len({dx for (dx, _dy) in spec.coeffs})
+    issued = slabs * tile_m * (ny + 2 * r) * ny * 2  # MACs * 2 flops
+    useful = spec.flops_per_cell * tile_m * ny
+    # Edge padding: how well tile_m and ny fill 128-multiples.
+    pad = (
+        (math.ceil(tile_m / MXU_EDGE) * MXU_EDGE / tile_m)
+        * (math.ceil(ny / MXU_EDGE) * MXU_EDGE / ny)
+    )
+    window = (tile_m + 2 * r) * (ny + 2 * r)
+    bands = (2 * r + 1) * (ny + 2 * r) * ny
+    vmem = (window + bands + 2 * tile_m * ny) * itemsize
+    hbm_per_cell = itemsize * (window / (tile_m * ny) + 1.0)
+    return KernelEstimate(
+        vmem_bytes=vmem,
+        vmem_fraction=vmem / VMEM_BYTES,
+        flops_per_cell=spec.flops_per_cell,
+        hbm_bytes_per_cell=hbm_per_cell,
+        arithmetic_intensity=issued / (tile_m * ny) / hbm_per_cell,
+        mxu_utilization=(useful / issued) / pad,
+    )
+
+
+def pick_tiles(
+    spec: StencilSpec, core: Sequence[int], steps: int = 1, itemsize: int = 8
+) -> Tuple[int, ...]:
+    """Choose the largest divisor tile per dim whose block fits VMEM.
+
+    Greedy from the full core downward: halve the leading dimension until
+    the temporal estimate fits the budget.  Deterministic, so rust and
+    python agree on artifact shapes.
+    """
+    tiles = list(core)
+    for _ in range(64):
+        est = temporal_estimate(spec, tiles, steps, itemsize)
+        if est.fits():
+            return tuple(tiles)
+        # halve the largest tile dimension that can still be halved evenly
+        d = max(range(len(tiles)), key=lambda i: tiles[i])
+        if tiles[d] % 2 != 0 or tiles[d] <= 2 * spec.radius:
+            return tuple(tiles)  # cannot shrink further; caller may reject
+        tiles[d] //= 2
+        # keep divisibility of the core
+        while core[d] % tiles[d] != 0:
+            tiles[d] -= 1
+    return tuple(tiles)

@@ -1,0 +1,125 @@
+"""Layer-2 JAX models: the compute graphs that get AOT-lowered to HLO.
+
+Three families of jittable functions, all calling the L1 Pallas kernels:
+
+* ``subdomain_block`` — the workhorse of the L3 coordinator.  A worker owns
+  a slab of the global domain plus a ghost ring of width ``radius * Tb``;
+  one call advances the slab Tb steps (valid mode).  The rust scheduler
+  chains these calls with halo exchanges in between (paper §5).
+* ``mxu_subdomain_block`` — same contract, trapezoid-folding MXU kernel.
+* ``thermal_step_block`` — shape-preserving periodic evolution used by the
+  thermal-diffusion case study (§6.5) and the FP32-vs-FP64 accuracy study
+  (Table 4).
+
+Everything here is traced exactly once by ``aot.py``; no Python survives
+to the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mxu_fold, ref, stencil_step, temporal_block
+from .kernels.spec import StencilSpec
+
+jax.config.update("jax_enable_x64", True)
+
+
+def subdomain_block(
+    spec: StencilSpec,
+    steps: int,
+    tiles: Optional[Sequence[int]] = None,
+):
+    """Build fn: (core + 2*r*steps, ..) -> (core, ..), Tb fused steps.
+
+    With ``steps == 1`` this is the plain tiled step kernel (the "GPU
+    naive" rung of the Fig-12 breakdown); with ``steps > 1`` it is the
+    temporal-block kernel (checkerboard/locality-enhancer rung).
+    """
+
+    def fn(u: jnp.ndarray) -> Tuple[jnp.ndarray]:
+        if steps == 1:
+            return (stencil_step.stencil_step(u, spec, tiles),)
+        return (temporal_block.temporal_block(u, spec, steps, tiles),)
+
+    fn.__name__ = f"{spec.name}_block{steps}"
+    return fn
+
+
+def mxu_subdomain_block(spec: StencilSpec, steps: int, tile_m: Optional[int] = None):
+    """Build the trapezoid-folding variant (2D specs only)."""
+
+    def fn(u: jnp.ndarray) -> Tuple[jnp.ndarray]:
+        return (mxu_fold.mxu_fold_block(u, spec, steps, tile_m),)
+
+    fn.__name__ = f"{spec.name}_mxu{steps}"
+    return fn
+
+
+def mxu_step_with_bands(spec: StencilSpec, tile_m: Optional[int] = None):
+    """AOT variant of the trapezoid-folding step: takes (u, bands).
+
+    The band stack must be a runtime parameter — as a traced constant the
+    HLO *text* printer elides it ("constant({...})") and the rust loader
+    would reconstruct zeros.  The rust runtime regenerates the bands from
+    the manifest spec (`runtime/client.rs::band_matrices`).
+    """
+
+    def fn(u: jnp.ndarray, bands: jnp.ndarray) -> Tuple[jnp.ndarray]:
+        return (mxu_fold.mxu_fold(u, spec, tile_m, bands),)
+
+    fn.__name__ = f"{spec.name}_mxu_b"
+    return fn
+
+
+def reference_block(spec: StencilSpec, steps: int):
+    """Pure-jnp oracle with the same contract — lowered too, so the rust
+    integration tests can diff kernel-vs-oracle entirely inside PJRT."""
+
+    def fn(u: jnp.ndarray) -> Tuple[jnp.ndarray]:
+        return (ref.block(u, spec, steps),)
+
+    fn.__name__ = f"{spec.name}_ref{steps}"
+    return fn
+
+
+def thermal_step_block(spec: StencilSpec, steps: int, dtype=jnp.float64):
+    """Shape-preserving periodic Tb-block for the case study.
+
+    Uses jnp.roll (exact periodic boundary); jitted into a single fused
+    loop by XLA via lax.scan so one PJRT call advances Tb steps.
+    """
+
+    def one(u, _):
+        out = jnp.zeros_like(u)
+        for off, c in sorted(spec.coeffs.items()):
+            shifted = u
+            for axis, o in enumerate(off):
+                if o != 0:
+                    shifted = jnp.roll(shifted, -o, axis=axis)
+            out = out + u.dtype.type(c) * shifted
+        return out, None
+
+    def fn(u: jnp.ndarray) -> Tuple[jnp.ndarray]:
+        u = u.astype(dtype)
+        out, _ = jax.lax.scan(one, u, None, length=steps)
+        return (out,)
+
+    fn.__name__ = f"{spec.name}_thermal{steps}_{jnp.dtype(dtype).name}"
+    return fn
+
+
+def energy_stats(dtype=jnp.float64):
+    """Tiny reduction graph: (mean, min, max) of a field — used by the L3
+    metrics path so the leader never scans arrays host-side."""
+
+    def fn(u: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        u = u.astype(dtype)
+        return (jnp.mean(u), jnp.min(u), jnp.max(u))
+
+    fn.__name__ = f"energy_stats_{jnp.dtype(dtype).name}"
+    return fn

@@ -1,0 +1,51 @@
+"""SplitMix64 PRNG — bit-identical twin of ``rust/src/util/prng.rs``.
+
+Golden test vectors in the AOT manifest are generated from this stream so
+the rust integration tests can regenerate the exact same inputs without
+any Python at runtime.  Keep in lockstep with the rust implementation
+(checked by tests on both sides against the shared vectors below).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Sebastiano Vigna's splitmix64; state advances by the golden gamma."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return z ^ (z >> 31)
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1): top 53 bits / 2^53 (same as rand's convention)."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def fill(self, shape, dtype=np.float64) -> np.ndarray:
+        """Row-major array of next_f64 draws."""
+        n = int(np.prod(shape))
+        out = np.empty(n, dtype=np.float64)
+        for i in range(n):
+            out[i] = self.next_f64()
+        return out.reshape(shape).astype(dtype)
+
+
+#: First three u64 draws for seed 42 — assert these on both sides.
+VECTORS_SEED42 = [
+    0xBDD732262FEB6E95,
+    0x28EFE333B266F103,
+    0x47526757130F9F52,
+]
+
+if __name__ == "__main__":
+    rng = SplitMix64(42)
+    print([hex(rng.next_u64()) for _ in range(3)])

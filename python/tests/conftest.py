@@ -1,0 +1,16 @@
+import os
+import sys
+
+import jax
+
+# Make `compile` importable when pytest runs from the repo root.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+jax.config.update("jax_enable_x64", True)
+
+from hypothesis import settings
+
+# interpret-mode pallas is slow; keep example counts sane and disable the
+# per-example deadline (first call pays trace+lower cost).
+settings.register_profile("tetris", max_examples=12, deadline=None)
+settings.load_profile("tetris")

@@ -1,0 +1,80 @@
+"""AOT pipeline: artifact inventory, seeds, and one real lowering."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.kernels import spec as specs
+
+
+def test_bench_configs_cover_table1():
+    assert sorted(aot.BENCH_CONFIGS) == sorted(specs.BENCHMARKS)
+    for name, cfg in aot.BENCH_CONFIGS.items():
+        assert cfg.core[0] % cfg.unit == 0
+        assert cfg.tb >= 1
+        assert cfg.unit_core()[0] == cfg.unit
+
+
+def test_artifact_inventory():
+    arts = aot.build_artifacts()
+    names = [a.name for a in arts]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    for bench in aot.BENCH_CONFIGS:
+        assert f"{bench}_step" in names
+        assert f"{bench}_block" in names
+        assert f"{bench}_oracle" in names
+    for bench in ("heat2d", "star2d9p", "box2d9p", "box2d25p"):
+        assert f"{bench}_mxu" in names
+    for dt in ("f64", "f32"):
+        assert f"thermal_{dt}" in names
+        assert f"stats_{dt}" in names
+
+
+def test_artifact_shapes_respect_halo():
+    for a in aot.build_artifacts():
+        meta = a.meta
+        if meta["variant"] in ("step", "block", "oracle", "mxu"):
+            uc = meta["unit_core"]
+            halo = meta["halo"]
+            assert list(a.input_shape) == [n + 2 * halo for n in uc]
+            assert meta["halo"] == meta["radius"] * meta["steps"]
+
+
+def test_seed_fnv1a_vectors():
+    # FNV-1a 64 of known strings; rust mirrors these in util/prng.rs.
+    assert aot._seed_for("") == 0xCBF29CE484222325
+    assert aot._seed_for("a") == 0xAF63DC4C8601EC8C
+    assert aot._seed_for("heat2d_step") == aot._seed_for("heat2d_step")
+    assert aot._seed_for("heat2d_step") != aot._seed_for("heat2d_block")
+
+
+@pytest.mark.slow
+def test_lower_one_artifact(tmp_path):
+    (art,) = [a for a in aot.build_artifacts() if a.name == "heat2d_step"]
+    entry = art.lower_and_golden(str(tmp_path))
+    text = (tmp_path / "heat2d_step.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+    assert np.isfinite(entry["golden"]["out_mean"])
+    assert entry["golden"]["out_shape"] == entry["output_shape"]
+    # golden reproducibility
+    entry2 = art.lower_and_golden(str(tmp_path))
+    assert entry2["golden"]["out_l2"] == entry["golden"]["out_l2"]
+
+
+def test_manifest_written_by_make(tmp_path):
+    """If `make artifacts` has run, the manifest must be consistent."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                        "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built yet")
+    with open(path) as f:
+        m = json.load(f)
+    assert m["version"] == 1
+    names = {e["name"] for e in m["artifacts"]}
+    for e in m["artifacts"]:
+        hlo = os.path.join(os.path.dirname(path), e["file"])
+        assert os.path.exists(hlo), e["file"]
+    assert {f"{b}_step" for b in m["benches"]} <= names

@@ -1,0 +1,207 @@
+"""Pallas kernels vs the pure-jnp oracle — the core correctness signal.
+
+hypothesis sweeps shapes, tile factorizations, dtypes and step counts for
+every benchmark kernel; assert_allclose against ref.py throughout.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import mxu_fold, ref
+from compile.kernels import spec as specs
+from compile.kernels import stencil_step, temporal_block
+
+ALL = sorted(specs.BENCHMARKS)
+TWO_D = [n for n in ALL if specs.get(n).ndim == 2]
+
+
+def _rand(shape, dtype=np.float64, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).random(shape).astype(dtype))
+
+
+# ---------------------------------------------------------------- step ----
+
+@pytest.mark.parametrize("name", ALL)
+def test_step_single_tile(name):
+    s = specs.get(name)
+    shape = tuple(12 + 2 * s.radius for _ in range(s.ndim))
+    u = _rand(shape)
+    np.testing.assert_allclose(
+        np.asarray(stencil_step.stencil_step(u, s)),
+        np.asarray(ref.step(u, s)),
+        rtol=1e-12,
+    )
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_step_multi_tile(name):
+    s = specs.get(name)
+    core = tuple(12 for _ in range(s.ndim))
+    u = _rand(tuple(n + 2 * s.radius for n in core), seed=1)
+    got = stencil_step.stencil_step(u, s, tiles=tuple(4 for _ in core))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.step(u, s)), rtol=1e-12)
+
+
+@given(core=st.integers(4, 24), tile=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 99))
+def test_step_1d_sweep(core, tile, seed):
+    s = specs.get("star1d5p")
+    core = core - core % tile or tile
+    u = _rand((core + 2 * s.radius,), seed=seed)
+    got = stencil_step.stencil_step(u, s, tiles=(tile,))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.step(u, s)), rtol=1e-12)
+
+
+@given(cx=st.sampled_from([4, 8, 12]), cy=st.sampled_from([4, 6, 10]),
+       tx=st.sampled_from([2, 4]), seed=st.integers(0, 9))
+def test_step_2d_sweep(cx, cy, tx, seed):
+    s = specs.get("box2d9p")
+    u = _rand((cx + 2 * s.radius, cy + 2 * s.radius), seed=seed)
+    ty = 2 if cy % 2 == 0 else 1
+    got = stencil_step.stencil_step(u, s, tiles=(tx if cx % tx == 0 else 1, ty))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.step(u, s)), rtol=1e-12)
+
+
+@pytest.mark.parametrize("dtype,rtol", [(np.float32, 2e-5), (np.float64, 1e-12)])
+def test_step_dtypes(dtype, rtol):
+    s = specs.get("heat2d")
+    u = _rand((18, 18), dtype=dtype, seed=3)
+    got = stencil_step.stencil_step(u, s, tiles=(8, 8))
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.step(u, s)), rtol=rtol)
+
+
+def test_step_rejects_bad_tiles():
+    s = specs.get("heat2d")
+    u = _rand((18, 18))
+    with pytest.raises(ValueError, match="divisible"):
+        stencil_step.stencil_step(u, s, tiles=(5, 8))
+
+
+def test_step_rejects_small_input():
+    s = specs.get("star2d9p")
+    with pytest.raises(ValueError, match="too small"):
+        stencil_step.stencil_step(jnp.zeros((4, 4)), s)
+
+
+# ----------------------------------------------------------- temporal ----
+
+@pytest.mark.parametrize("name", ALL)
+@pytest.mark.parametrize("steps", [2, 3])
+def test_temporal_block_matches_ref(name, steps):
+    s = specs.get(name)
+    core = tuple(8 for _ in range(s.ndim))
+    u = _rand(tuple(n + 2 * s.radius * steps for n in core), seed=4)
+    got = temporal_block.temporal_block(u, s, steps)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.block(u, s, steps)), rtol=1e-12
+    )
+
+
+@pytest.mark.parametrize("name", ["heat1d", "heat2d", "heat3d"])
+def test_temporal_block_tiled(name):
+    s = specs.get(name)
+    steps = 2
+    core = tuple(8 for _ in range(s.ndim))
+    u = _rand(tuple(n + 2 * s.radius * steps for n in core), seed=5)
+    got = temporal_block.temporal_block(u, s, steps, tiles=tuple(4 for _ in core))
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.block(u, s, steps)), rtol=1e-12
+    )
+
+
+@given(steps=st.integers(1, 4), core=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 9))
+def test_temporal_1d_sweep(steps, core, seed):
+    s = specs.get("heat1d")
+    u = _rand((core + 2 * s.radius * steps,), seed=seed)
+    got = temporal_block.temporal_block(u, s, steps, tiles=(4,) if core % 4 == 0 else None)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.block(u, s, steps)), rtol=1e-12
+    )
+
+
+def test_temporal_step1_equals_step():
+    s = specs.get("box2d25p")
+    u = _rand((12 + 2 * s.radius, 12 + 2 * s.radius), seed=6)
+    np.testing.assert_allclose(
+        np.asarray(temporal_block.temporal_block(u, s, 1)),
+        np.asarray(stencil_step.stencil_step(u, s)),
+        rtol=1e-13,
+    )
+
+
+def test_temporal_rejects_zero_steps():
+    s = specs.get("heat1d")
+    with pytest.raises(ValueError, match="steps"):
+        temporal_block.temporal_block(_rand((10,)), s, 0)
+
+
+# ---------------------------------------------------------------- mxu ----
+
+@pytest.mark.parametrize("name", TWO_D)
+def test_mxu_matches_ref(name):
+    s = specs.get(name)
+    u = _rand((16 + 2 * s.radius, 12 + 2 * s.radius), seed=7)
+    got = mxu_fold.mxu_fold(u, s, tile_m=8)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.step(u, s)), rtol=1e-12, atol=1e-13
+    )
+
+
+@pytest.mark.parametrize("name", TWO_D)
+def test_mxu_block_matches_ref(name):
+    s = specs.get(name)
+    steps = 2
+    u = _rand((8 + 2 * s.radius * steps, 8 + 2 * s.radius * steps), seed=8)
+    got = mxu_fold.mxu_fold_block(u, s, steps)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.block(u, s, steps)), rtol=1e-12, atol=1e-13
+    )
+
+
+@given(nx=st.sampled_from([8, 16]), ny=st.sampled_from([6, 10, 12]),
+       seed=st.integers(0, 9))
+def test_mxu_sweep(nx, ny, seed):
+    s = specs.get("box2d25p")
+    u = _rand((nx + 2 * s.radius, ny + 2 * s.radius), seed=seed)
+    got = mxu_fold.mxu_fold(u, s, tile_m=8 if nx % 8 == 0 else None)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.step(u, s)), rtol=1e-12, atol=1e-13
+    )
+
+
+def test_band_matrix_structure():
+    """B_dx[j + r + dy, j] == c[(dx, dy)] and zero elsewhere."""
+    s = specs.get("box2d9p")
+    ny, r = 7, s.radius
+    bands = mxu_fold.band_matrices(s, ny)
+    assert bands.shape == (2 * r + 1, ny + 2 * r, ny)
+    for (dx, dy), c in s.coeffs.items():
+        for j in range(ny):
+            assert bands[dx + r, j + r + dy, j] == pytest.approx(c)
+    # total mass: each column of the full stack sums to sum(coeffs) == 1
+    col = bands.sum(axis=(0, 1))
+    np.testing.assert_allclose(col, 1.0, rtol=1e-12)
+
+
+def test_mxu_star_band_sparsity():
+    """Star stencils: off-center slabs carry exactly one diagonal."""
+    s = specs.get("star2d9p")
+    bands = mxu_fold.band_matrices(s, 6)
+    r = s.radius
+    for dx in range(-r, r + 1):
+        nnz = np.count_nonzero(bands[dx + r])
+        if dx == 0:
+            assert nnz > 6  # center slab holds the full y-arm
+        else:
+            assert nnz == 6  # single diagonal (dy = 0)
+
+
+def test_mxu_rejects_1d():
+    s = specs.get("heat1d")
+    with pytest.raises(ValueError, match="2D"):
+        mxu_fold.mxu_fold(_rand((10, 10)), s)

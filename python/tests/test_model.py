@@ -1,0 +1,93 @@
+"""L2 model graphs: contracts, shapes, and agreement with the oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels import spec as specs
+
+
+def _rand(shape, dtype=np.float64, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).random(shape).astype(dtype))
+
+
+@pytest.mark.parametrize("name", sorted(specs.BENCHMARKS))
+def test_subdomain_block_contract(name):
+    s = specs.get(name)
+    steps = 2
+    core = tuple(6 for _ in range(s.ndim))
+    u = _rand(tuple(n + 2 * s.radius * steps for n in core))
+    (out,) = model.subdomain_block(s, steps)(u)
+    assert out.shape == core
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.block(u, s, steps)), rtol=1e-12
+    )
+
+
+def test_subdomain_block_step1_uses_step_kernel():
+    s = specs.get("heat2d")
+    u = _rand((10, 10), seed=1)
+    (out,) = model.subdomain_block(s, 1)(u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.step(u, s)), rtol=1e-12)
+
+
+@pytest.mark.parametrize("name", ["heat2d", "box2d25p"])
+def test_mxu_subdomain_block(name):
+    s = specs.get(name)
+    u = _rand((8 + 2 * s.radius, 8 + 2 * s.radius), seed=2)
+    (out,) = model.mxu_subdomain_block(s, 1)(u)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.step(u, s)), rtol=1e-12, atol=1e-13
+    )
+
+
+def test_reference_block_agrees():
+    s = specs.get("star1d5p")
+    u = _rand((20,), seed=3)
+    (a,) = model.reference_block(s, 2)(u)
+    (b,) = model.subdomain_block(s, 2)(u)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-12)
+
+
+def test_thermal_block_matches_periodic_oracle():
+    s = specs.get("heat2d")
+    u = _rand((16, 16), seed=4)
+    (out,) = model.thermal_step_block(s, 5)(u)
+    expect = ref.evolve_periodic(u, s, 5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-12)
+    assert out.shape == u.shape  # shape-preserving
+
+
+def test_thermal_block_fp32():
+    s = specs.get("heat2d")
+    u = _rand((12, 12), dtype=np.float32, seed=5)
+    (out,) = model.thermal_step_block(s, 3, jnp.float32)(u)
+    assert out.dtype == jnp.float32
+    expect = ref.evolve_periodic(u, s, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5)
+
+
+def test_thermal_preserves_mean():
+    s = specs.get("heat2d")
+    u = _rand((16, 16), seed=6)
+    (out,) = model.thermal_step_block(s, 8)(u)
+    assert float(jnp.mean(out)) == pytest.approx(float(jnp.mean(u)), rel=1e-12)
+
+
+def test_energy_stats():
+    u = _rand((9, 9), seed=7)
+    mean, lo, hi = model.energy_stats()(u)
+    assert float(mean) == pytest.approx(float(jnp.mean(u)))
+    assert float(lo) == pytest.approx(float(jnp.min(u)))
+    assert float(hi) == pytest.approx(float(jnp.max(u)))
+
+
+def test_models_are_jittable():
+    s = specs.get("heat2d")
+    fn = jax.jit(model.subdomain_block(s, 2))
+    u = _rand((12, 12), seed=8)
+    (out,) = fn(u)
+    assert out.shape == (8, 8)

@@ -1,0 +1,45 @@
+"""SplitMix64 lockstep vectors (mirrored by rust/src/util/prng.rs tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.prng import MASK, VECTORS_SEED42, SplitMix64
+
+
+def test_seed42_vectors():
+    rng = SplitMix64(42)
+    assert [rng.next_u64() for _ in range(3)] == VECTORS_SEED42
+
+
+def test_f64_range():
+    rng = SplitMix64(7)
+    xs = [rng.next_f64() for _ in range(1000)]
+    assert all(0.0 <= x < 1.0 for x in xs)
+    assert 0.4 < sum(xs) / len(xs) < 0.6
+
+
+def test_fill_deterministic():
+    a = SplitMix64(123).fill((4, 5))
+    b = SplitMix64(123).fill((4, 5))
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (4, 5) and a.dtype == np.float64
+
+
+def test_fill_row_major_order():
+    flat = SplitMix64(9).fill((6,))
+    grid = SplitMix64(9).fill((2, 3))
+    np.testing.assert_array_equal(grid.reshape(-1), flat)
+
+
+@given(seed=st.integers(0, 2**64 - 1))
+def test_state_stays_64bit(seed):
+    rng = SplitMix64(seed)
+    for _ in range(5):
+        assert 0 <= rng.next_u64() <= MASK
+    assert 0 <= rng.state <= MASK
+
+
+def test_distinct_seeds_distinct_streams():
+    assert SplitMix64(1).next_u64() != SplitMix64(2).next_u64()

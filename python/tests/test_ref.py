@@ -1,0 +1,93 @@
+"""Oracle sanity: ref.py against hand-rolled numpy convolutions."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels import spec as specs
+
+
+def numpy_step(u: np.ndarray, s: specs.StencilSpec) -> np.ndarray:
+    """Direct loop-free numpy implementation, independent of ref.py."""
+    r = s.radius
+    core = tuple(n - 2 * r for n in u.shape)
+    out = np.zeros(core, dtype=u.dtype)
+    for off, c in s.coeffs.items():
+        idx = tuple(slice(r + o, r + o + n) for o, n in zip(off, core))
+        out += c * u[idx]
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(specs.BENCHMARKS))
+def test_step_matches_numpy(name):
+    s = specs.get(name)
+    rng = np.random.default_rng(7)
+    shape = tuple(10 + 2 * s.radius for _ in range(s.ndim))
+    u = rng.random(shape)
+    got = np.asarray(ref.step(jnp.asarray(u), s))
+    np.testing.assert_allclose(got, numpy_step(u, s), rtol=1e-13)
+
+
+@pytest.mark.parametrize("name", sorted(specs.BENCHMARKS))
+def test_block_is_iterated_step(name):
+    s = specs.get(name)
+    rng = np.random.default_rng(8)
+    steps = 3
+    shape = tuple(6 + 2 * s.radius * steps for _ in range(s.ndim))
+    u = jnp.asarray(rng.random(shape))
+    via_block = ref.block(u, s, steps)
+    via_steps = u
+    for _ in range(steps):
+        via_steps = ref.step(via_steps, s)
+    np.testing.assert_allclose(np.asarray(via_block), np.asarray(via_steps), rtol=1e-13)
+
+
+@pytest.mark.parametrize("name", ["heat1d", "heat2d", "box2d9p"])
+def test_periodic_preserves_mean(name):
+    """Normalized convex coefficients conserve the mean on a torus."""
+    s = specs.get(name)
+    rng = np.random.default_rng(9)
+    shape = tuple(12 for _ in range(s.ndim))
+    u = jnp.asarray(rng.random(shape))
+    out = ref.evolve_periodic(u, s, steps=4)
+    assert float(jnp.mean(out)) == pytest.approx(float(jnp.mean(u)), rel=1e-12)
+
+
+def test_periodic_uniform_fixed_point():
+    s = specs.get("heat2d")
+    u = jnp.full((9, 9), 3.25)
+    out = ref.evolve_periodic(u, s, steps=5)
+    np.testing.assert_allclose(np.asarray(out), 3.25, rtol=1e-14)
+
+
+def test_step_rejects_wrong_rank():
+    s = specs.get("heat2d")
+    with pytest.raises(ValueError, match="2d"):
+        ref.step(jnp.zeros((5,)), s)
+
+
+def test_step_rejects_too_small():
+    s = specs.get("star2d9p")  # r=2 needs > 4 per dim
+    with pytest.raises(ValueError, match="too small"):
+        ref.step(jnp.zeros((4, 4)), s)
+
+
+@given(n=st.integers(5, 20), steps=st.integers(1, 3))
+def test_block_shrinks_exactly(n, steps):
+    s = specs.get("heat1d")
+    u = jnp.zeros((n + 2 * s.radius * steps,))
+    assert ref.block(u, s, steps).shape == (n,)
+
+
+def test_linearity():
+    """Stencil is linear: step(a*u + b*v) == a*step(u) + b*step(v)."""
+    s = specs.get("box2d25p")
+    rng = np.random.default_rng(10)
+    u = jnp.asarray(rng.random((14, 14)))
+    v = jnp.asarray(rng.random((14, 14)))
+    lhs = ref.step(2.0 * u + 3.0 * v, s)
+    rhs = 2.0 * ref.step(u, s) + 3.0 * ref.step(v, s)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-12)

@@ -1,0 +1,100 @@
+"""Spec invariants: Table-1 benchmark definitions are well-formed."""
+
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import spec as specs
+
+
+ALL = sorted(specs.BENCHMARKS)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_points_match_table1(name):
+    expected = {
+        "heat1d": 3, "star1d5p": 5, "heat2d": 5, "star2d9p": 9,
+        "box2d9p": 9, "box2d25p": 25, "heat3d": 7, "box3d27p": 27,
+    }
+    assert specs.get(name).points == expected[name]
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_coeffs_normalized(name):
+    s = specs.get(name)
+    assert abs(sum(s.coeffs.values()) - 1.0) < 1e-12
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_offsets_within_radius(name):
+    s = specs.get(name)
+    for off in s.coeffs:
+        assert len(off) == s.ndim
+        assert all(abs(o) <= s.radius for o in off)
+        if s.kind == "star":
+            # star: at most one nonzero component
+            assert sum(1 for o in off if o != 0) <= 1
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_offsets_symmetric(name):
+    s = specs.get(name)
+    for off in s.coeffs:
+        neg = tuple(-o for o in off)
+        assert neg in s.coeffs
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_arrays_consistent(name):
+    s = specs.get(name)
+    offs = s.offsets_array()
+    cs = s.coeffs_array()
+    assert offs.shape == (s.points, s.ndim)
+    assert cs.shape == (s.points,)
+    rebuilt = {tuple(int(x) for x in o): float(c) for o, c in zip(offs, cs)}
+    assert rebuilt == {k: pytest.approx(v) for k, v in s.coeffs.items()}
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_halo_scales_with_steps(name):
+    s = specs.get(name)
+    for steps in (1, 2, 5):
+        assert s.halo(steps) == s.radius * steps
+
+
+@given(ndim=st.integers(1, 3), radius=st.integers(1, 3),
+       center=st.floats(0.1, 0.9), arm=st.floats(0.05, 0.5))
+def test_star_generator_properties(ndim, radius, center, arm):
+    coeffs = specs._star(ndim, radius, center, arm)
+    assert abs(sum(coeffs.values()) - 1.0) < 1e-12
+    assert len(coeffs) == 1 + 2 * ndim * radius
+    assert all(v > 0 for v in coeffs.values())
+
+
+@given(ndim=st.integers(1, 3), radius=st.integers(1, 2))
+def test_box_generator_properties(ndim, radius):
+    coeffs = specs._box(ndim, radius)
+    assert abs(sum(coeffs.values()) - 1.0) < 1e-12
+    assert len(coeffs) == (2 * radius + 1) ** ndim
+    # separable triangular profile is symmetric under reflection
+    for off, v in coeffs.items():
+        assert coeffs[tuple(-o for o in off)] == pytest.approx(v)
+
+
+def test_heat2d_matches_eq3():
+    mu = specs.THERMAL_MU
+    s = specs.get("heat2d")
+    assert s.coeffs[(0, 0)] == pytest.approx(1 - 4 * mu)
+    for off in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+        assert s.coeffs[off] == pytest.approx(mu)
+
+
+def test_unknown_name_raises():
+    with pytest.raises(KeyError, match="choices"):
+        specs.get("nope")
+
+
+def test_flops_per_cell():
+    assert specs.get("heat2d").flops_per_cell == 10
+    assert specs.get("box3d27p").flops_per_cell == 54

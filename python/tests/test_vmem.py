@@ -1,0 +1,74 @@
+"""Analytical VMEM / MXU estimator invariants."""
+
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import vmem
+from compile.kernels import spec as specs
+
+
+def test_step_estimate_counts_window():
+    s = specs.get("heat2d")
+    est = vmem.step_estimate(s, (64, 64))
+    assert est.vmem_bytes == ((66 * 66) + 2 * 64 * 64) * 8
+    assert est.flops_per_cell == s.flops_per_cell
+    assert est.mxu_utilization == 0.0
+    assert est.fits()
+
+
+def test_temporal_estimate_amortizes_hbm():
+    s = specs.get("heat2d")
+    one = vmem.temporal_estimate(s, (64, 64), 1)
+    eight = vmem.temporal_estimate(s, (64, 64), 8)
+    # Tb x flops per cell but ~same HBM traffic per block
+    assert eight.flops_per_cell == 8 * one.flops_per_cell
+    assert eight.hbm_bytes_per_cell < 2 * one.hbm_bytes_per_cell
+    assert eight.arithmetic_intensity > 4 * one.arithmetic_intensity
+
+
+def test_temporal_estimate_vmem_grows_with_tb():
+    s = specs.get("box2d25p")
+    assert (
+        vmem.temporal_estimate(s, (32, 32), 4).vmem_bytes
+        > vmem.temporal_estimate(s, (32, 32), 1).vmem_bytes
+    )
+
+
+def test_mxu_estimate_utilization_bounds():
+    s = specs.get("box2d25p")
+    est = vmem.mxu_estimate(s, 128, 128)
+    assert 0.0 < est.mxu_utilization <= 1.0
+    # box 5x5: 25 useful taps vs 5 slabs x (ny+2r) issued rows
+    assert est.mxu_utilization == pytest.approx(
+        (50 * 128 * 128) / (5 * 128 * (128 + 4) * 128 * 2), rel=1e-12
+    )
+
+
+def test_mxu_star_beats_box_utilization():
+    star = vmem.mxu_estimate(specs.get("star2d9p"), 128, 128)
+    box = vmem.mxu_estimate(specs.get("box2d25p"), 128, 128)
+    # star issues fewer dense slabs relative to taps? both reported sanely
+    assert 0 < star.mxu_utilization < 1
+    assert 0 < box.mxu_utilization < 1
+
+
+@given(tile=st.sampled_from([16, 32, 64, 128]), steps=st.integers(1, 8))
+def test_estimates_positive(tile, steps):
+    s = specs.get("heat2d")
+    est = vmem.temporal_estimate(s, (tile, tile), steps)
+    assert est.vmem_bytes > 0
+    assert est.arithmetic_intensity > 0
+
+
+def test_pick_tiles_fits_and_divides():
+    s = specs.get("heat2d")
+    core = (2048, 2048)
+    tiles = vmem.pick_tiles(s, core, steps=4)
+    assert all(c % t == 0 for c, t in zip(core, tiles))
+    assert vmem.temporal_estimate(s, tiles, 4).fits()
+
+
+def test_pick_tiles_small_core_unchanged():
+    s = specs.get("heat1d")
+    assert vmem.pick_tiles(s, (4096,), steps=4) == (4096,)

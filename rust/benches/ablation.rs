@@ -1,0 +1,110 @@
+//! Ablation study for the design choices DESIGN.md calls out:
+//!
+//!  A. temporal block depth Tb (how deep should fused time tiles be?)
+//!  B. tessellation tile budget (pyramid working-set size vs L2)
+//!  C. inner-loop strategy: tap-outer axpy vs fused single-pass rows
+//!  D. tessellation (non-redundant) vs AN5D-style overlapped blocking
+//!
+//! Run: `cargo bench --bench ablation`
+//! Env: TETRIS_ABL_SCALE (default 1.0 — out-of-cache sizes make the
+//! temporal ablations meaningful).
+
+use tetris::bench::{print_table, time_engine, Row};
+use tetris::engine::tessellate::{Inner, TessellateEngine};
+use tetris::stencil::spec;
+
+fn main() {
+    let scale: f64 = std::env::var("TETRIS_ABL_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    let s2 = spec::get("heat2d").unwrap();
+    let core2: Vec<usize> = vec![(512.0 * scale) as usize, (512.0 * scale) as usize];
+
+    // A: Tb sweep at fixed total steps.
+    let total = 16;
+    let mut rows = Vec::new();
+    let mut base = 0.0;
+    for tb in [1usize, 2, 4, 8] {
+        let eng = TessellateEngine::tetris(1);
+        let (g, _) = time_engine(&eng, &s2, &core2, total, tb);
+        if tb == 1 {
+            base = g;
+        }
+        rows.push(Row {
+            label: format!("Tb={tb}"),
+            gstencils: g,
+            speedup: g / base,
+            extra: format!("halo {}", s2.radius * tb),
+        });
+    }
+    print_table("Ablation A: temporal depth (heat2d, tetris-cpu)", &rows);
+
+    // B: tile budget sweep (explicit tile widths standing in for budgets).
+    let mut rows = Vec::new();
+    let mut base = 0.0;
+    for (label, tile_w) in
+        [("64 rows", 64usize), ("128 rows", 128), ("256 rows", 256), ("auto", 0)]
+    {
+        let eng = TessellateEngine {
+            inner: Inner::Fused,
+            threads: 1,
+            tile_w: if tile_w == 0 { None } else { Some(tile_w) },
+        };
+        let (g, _) = time_engine(&eng, &s2, &core2, total, 4);
+        if base == 0.0 {
+            base = g;
+        }
+        rows.push(Row {
+            label: label.into(),
+            gstencils: g,
+            speedup: g / base,
+            extra: String::new(),
+        });
+    }
+    print_table("Ablation B: tessellation tile width (heat2d)", &rows);
+
+    // C: inner loop strategy inside the same tessellation schedule.
+    let mut rows = Vec::new();
+    let mut base = 0.0;
+    for (label, inner) in [("tap-outer axpy", Inner::Axpy), ("fused rows", Inner::Fused)] {
+        let eng = TessellateEngine { inner, threads: 1, tile_w: None };
+        let (g, _) = time_engine(&eng, &s2, &core2, total, 4);
+        if base == 0.0 {
+            base = g;
+        }
+        rows.push(Row {
+            label: label.into(),
+            gstencils: g,
+            speedup: g / base,
+            extra: String::new(),
+        });
+    }
+    print_table("Ablation C: inner rows (heat2d, tessellated)", &rows);
+
+    // D: non-redundant tessellation vs overlapped temporal blocking,
+    // box kernel where redundancy costs most (r=2).
+    let s25 = spec::get("box2d25p").unwrap();
+    let core25: Vec<usize> = vec![(384.0 * scale) as usize, (384.0 * scale) as usize];
+    let mut rows = Vec::new();
+    let mut base = 0.0;
+    for tb in [2usize, 4] {
+        for (label, eng) in [
+            (
+                format!("tessellate Tb={tb}"),
+                Box::new(TessellateEngine::tetris(1)) as Box<dyn tetris::engine::Engine>,
+            ),
+            (
+                format!("an5d-overlap Tb={tb}"),
+                Box::new(tetris::baselines::an5d::An5dEngine { tile_w: 64, threads: 1 }),
+            ),
+        ] {
+            let (g, _) = time_engine(eng.as_ref(), &s25, &core25, 2 * tb, tb);
+            if base == 0.0 {
+                base = g;
+            }
+            rows.push(Row { label, gstencils: g, speedup: g / base, extra: String::new() });
+        }
+    }
+    print_table("Ablation D: non-redundant vs overlapped (box2d25p)", &rows);
+}

@@ -1,0 +1,25 @@
+//! Paper Fig. 12: performance breakdown of Tetris optimizations on
+//! Star-1D5P, Box-2D25P and Box-3D27P.
+//!
+//! Rungs: naive -> +Tessellate Tiling -> +Vector Skewed Swizzling ->
+//! +multicore (Tetris CPU) -> +MXU trapezoid folding -> +checkerboard
+//! temporal block (both via PJRT artifacts when built).
+//!
+//! Run: `cargo bench --bench breakdown`
+//! Env: TETRIS_BENCH_SCALE (default 0.25), TETRIS_THREADS (default 2).
+
+fn main() {
+    let scale: f64 = std::env::var("TETRIS_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.25);
+    let threads: usize = std::env::var("TETRIS_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let rt = tetris::runtime::XlaService::spawn_default().ok();
+    if rt.is_none() {
+        println!("(no artifacts: MXU/checkerboard rungs skipped — run `make artifacts`)");
+    }
+    tetris::bench::run_breakdown(rt.as_ref(), scale, threads);
+}

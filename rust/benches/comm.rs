@@ -1,0 +1,37 @@
+//! Paper §5.3: centralized communication launch — k(α + nβ) vs α + k·n·β
+//! under the α+β latency-bandwidth model, plus measured halo-copy
+//! bandwidth on this host (the memcpy that stands in for the PCIe
+//! transfer on a real two-device deployment).
+//!
+//! Run: `cargo bench --bench comm`
+
+use std::time::Instant;
+
+use tetris::stencil::Field;
+
+fn main() {
+    // Modeled: the paper's launch-latency argument.
+    tetris::bench::run_comm();
+
+    // Measured: actual halo extract+paste cost per block on this host.
+    println!("== measured halo-copy cost (host memcpy standing in for PCIe) ==");
+    for (rows, width) in [(4usize, 392usize), (8, 392), (16, 392), (8, 4096)] {
+        let global = Field::random(&[512, width], 1);
+        let mut slab = Field::zeros(&[rows, width]);
+        let reps = 2000;
+        let t0 = Instant::now();
+        for i in 0..reps {
+            let off = (i * 17) % (512 - rows);
+            slab = global.extract(&[off, 0], &[rows, width]);
+        }
+        let dt = t0.elapsed().as_secs_f64() / reps as f64;
+        let bytes = rows * width * 8;
+        println!(
+            "  halo {rows}x{width} ({:>8} B): {:>8.2} us/copy, {:>6.2} GB/s",
+            bytes,
+            dt * 1e6,
+            bytes as f64 / dt / 1e9
+        );
+        let _ = slab.len();
+    }
+}

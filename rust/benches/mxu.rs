@@ -1,0 +1,15 @@
+//! §3.2 Tensor Trapezoid Folding study: the banded-matmul (MXU) artifact
+//! vs the VPU step artifact for every 2-D benchmark, with the analytical
+//! MXU-utilization / VMEM estimates the real-TPU discussion is based on
+//! (interpret-mode CPU timings are NOT a TPU proxy — see DESIGN.md §8).
+//!
+//! Run: `make artifacts && cargo bench --bench mxu`
+
+fn main() {
+    match tetris::runtime::XlaService::spawn_default() {
+        Ok(rt) => {
+            tetris::bench::run_mxu(&rt).expect("mxu bench");
+        }
+        Err(e) => println!("mxu bench needs artifacts (`make artifacts`): {e}"),
+    }
+}

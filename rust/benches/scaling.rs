@@ -1,0 +1,24 @@
+//! Paper Fig. 14: scalability of Tetris (CPU) with core count, plus the
+//! auto-tuned GPU:CPU scheduling ratio of the heterogeneous run.
+//!
+//! NOTE: this CI node exposes a single hardware core; thread counts above
+//! 1 measure oversubscription, so the expected shape here is a flat line
+//! (documented in EXPERIMENTS.md).  On a multi-core host the same bench
+//! produces the paper's near-linear curve.
+//!
+//! Run: `cargo bench --bench scaling`
+
+fn main() {
+    let scale: f64 = std::env::var("TETRIS_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.25);
+    let max_threads: usize = std::env::var("TETRIS_MAX_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get().max(4)).unwrap_or(4)
+        });
+    let rt = tetris::runtime::XlaService::spawn_default().ok();
+    tetris::bench::run_scaling(rt.as_ref(), scale, max_threads);
+}

@@ -1,0 +1,22 @@
+//! Paper Fig. 13: state-of-the-art comparison — DataReorg, AutoVec,
+//! Pluto, Folding, Brick, AN5D, Tetris(CPU), Tetris(GPU), Tetris — on all
+//! eight Table-1 benchmarks.
+//!
+//! Run: `cargo bench --bench sota`
+//! Env: TETRIS_BENCH_SCALE (default 0.25), TETRIS_THREADS (default 2).
+
+fn main() {
+    let scale: f64 = std::env::var("TETRIS_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.25);
+    let threads: usize = std::env::var("TETRIS_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let rt = tetris::runtime::XlaService::spawn_default().ok();
+    if rt.is_none() {
+        println!("(no artifacts: Tetris(GPU)/Tetris rows skipped — run `make artifacts`)");
+    }
+    tetris::bench::run_sota(rt.as_ref(), scale, threads);
+}

@@ -1,0 +1,162 @@
+//! FP64-vs-FP32 accuracy study (paper Table 4, Fig. 16(c)(d)).
+//!
+//! Evolves the same Gaussian initial state with the FP64 and FP32
+//! periodic thermal artifacts (or a pure-rust fallback when artifacts are
+//! absent) and buckets per-cell deviations against the FP64 run, exactly
+//! the paper's error histogram (<0.1 °C, 0.1–1.0 °C, >1.0 °C).
+
+use anyhow::Result;
+
+use crate::runtime::XlaService;
+use crate::stencil::{spec, Field, StencilSpec};
+
+/// Percentage of cells in each |error| bucket: [<0.1, 0.1..1.0, >=1.0].
+pub fn deviation_buckets(reference: &Field, other: &Field) -> [f64; 3] {
+    assert_eq!(reference.shape(), other.shape());
+    let n = reference.len() as f64;
+    let mut buckets = [0usize; 3];
+    for (a, b) in reference.data().iter().zip(other.data()) {
+        let e = (a - b).abs();
+        if e < 0.1 {
+            buckets[0] += 1;
+        } else if e < 1.0 {
+            buckets[1] += 1;
+        } else {
+            buckets[2] += 1;
+        }
+    }
+    [
+        100.0 * buckets[0] as f64 / n,
+        100.0 * buckets[1] as f64 / n,
+        100.0 * buckets[2] as f64 / n,
+    ]
+}
+
+/// Pure-rust FP32 periodic evolution (fallback oracle): every arithmetic
+/// step is rounded to f32, mirroring an all-f32 pipeline.
+pub fn evolve_periodic_f32(u: &Field, s: &StencilSpec, steps: usize) -> Field {
+    let shape = u.shape().to_vec();
+    let mut cur: Vec<f32> = u.data().iter().map(|&x| x as f32).collect();
+    let (offs, cs) = s.taps();
+    let cs32: Vec<f32> = cs.iter().map(|&c| c as f32).collect();
+    let strides: Vec<i64> = {
+        let mut st = vec![1i64; shape.len()];
+        for i in (0..shape.len() - 1).rev() {
+            st[i] = st[i + 1] * shape[i + 1] as i64;
+        }
+        st
+    };
+    for _ in 0..steps {
+        let mut out = vec![0.0f32; cur.len()];
+        let mut idx = vec![0usize; shape.len()];
+        for (i, o) in out.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (off, c) in offs.iter().zip(&cs32) {
+                let mut flat = 0i64;
+                for d in 0..shape.len() {
+                    let n = shape[d] as i64;
+                    let x = ((idx[d] as i64 + off[d]) % n + n) % n;
+                    flat += x * strides[d];
+                }
+                acc += c * cur[flat as usize];
+            }
+            *o = acc;
+            let _ = i;
+            for k in (0..shape.len()).rev() {
+                idx[k] += 1;
+                if idx[k] < shape[k] {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+        cur = out;
+    }
+    Field::from_vec(&shape, cur.into_iter().map(|x| x as f64).collect())
+}
+
+/// Result of the accuracy study.
+#[derive(Clone, Debug)]
+pub struct AccuracyReport {
+    pub steps: usize,
+    /// [<0.1, 0.1..1.0, >=1.0] percentage buckets for FP32 vs FP64.
+    pub fp32_buckets: [f64; 3],
+    pub fp64: Field,
+    pub fp32: Field,
+    pub used_artifacts: bool,
+}
+
+/// Run the study: `blocks` x Tb steps from the Gaussian plate.
+pub fn run_accuracy(rt: Option<&XlaService>, n: usize, blocks: usize) -> Result<AccuracyReport> {
+    let s = spec::get("heat2d").unwrap();
+    let init = super::thermal::gaussian_plate(n);
+    if let Some(svc) = rt {
+        let meta64 = svc.meta("thermal_f64")?.clone();
+        let shape = &meta64.input_shape;
+        anyhow::ensure!(
+            shape == &init.shape().to_vec(),
+            "thermal artifacts are {shape:?}; pass n={}",
+            shape[0]
+        );
+        let tb = meta64.steps;
+        let mut a = init.clone();
+        let mut b = init.clone();
+        for _ in 0..blocks {
+            a = svc.run("thermal_f64", &a)?;
+            b = svc.run("thermal_f32", &b)?;
+        }
+        Ok(AccuracyReport {
+            steps: blocks * tb,
+            fp32_buckets: deviation_buckets(&a, &b),
+            fp64: a,
+            fp32: b,
+            used_artifacts: true,
+        })
+    } else {
+        let steps = blocks * 8;
+        let a = crate::stencil::reference::evolve_periodic(&init, &s, steps);
+        let b = evolve_periodic_f32(&init, &s, steps);
+        Ok(AccuracyReport {
+            steps,
+            fp32_buckets: deviation_buckets(&a, &b),
+            fp64: a,
+            fp32: b,
+            used_artifacts: false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_sum_to_100() {
+        let a = Field::random(&[20, 20], 1);
+        let mut b = a.clone();
+        b.data_mut()[0] += 0.5; // one cell in the middle bucket
+        b.data_mut()[1] += 5.0; // one cell in the top bucket
+        let k = deviation_buckets(&a, &b);
+        assert!((k[0] + k[1] + k[2] - 100.0).abs() < 1e-9);
+        assert!((k[1] - 0.25).abs() < 1e-9); // 1/400 cells
+        assert!((k[2] - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fp32_drifts_from_fp64() {
+        let s = spec::get("heat2d").unwrap();
+        let init = super::super::thermal::gaussian_plate(24);
+        let a = crate::stencil::reference::evolve_periodic(&init, &s, 30);
+        let b = evolve_periodic_f32(&init, &s, 30);
+        let d = a.max_abs_diff(&b);
+        assert!(d > 0.0, "fp32 should differ");
+        assert!(d < 1.0, "but not catastrophically at 30 steps: {d}");
+    }
+
+    #[test]
+    fn fallback_study_runs() {
+        let rep = run_accuracy(None, 16, 2).unwrap();
+        assert!(!rep.used_artifacts);
+        assert!((rep.fp32_buckets.iter().sum::<f64>() - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,5 @@
+//! Applications built on the Tetris stack: the paper's §6.5 case study.
+
+pub mod accuracy;
+pub mod thermal;
+pub mod viz;

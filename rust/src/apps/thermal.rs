@@ -1,0 +1,180 @@
+//! Thermal-diffusion case study (paper §6.5, Table 3, Fig. 16).
+//!
+//! Simulates heat diffusion on a square copper plate: Gaussian initial
+//! condition (hottest at the centre, 100 °C), 5-point Heat-2D stencil
+//! with the paper's CFL number μ = 0.23, ambient Dirichlet boundary.
+//! The Table-3 method rows map to scheduler configurations:
+//!   Naive        — one native `naive` worker
+//!   Tetris (CPU) — one native `tetris-cpu` worker
+//!   Tetris (GPU) — one XLA worker (AOT temporal-block artifact)
+//!   Tetris       — auto-tuned heterogeneous mix of both
+
+use anyhow::Result;
+
+use crate::coordinator::{
+    partition::capacity_units, tuner, CommModel, NativeWorker, Partition, Scheduler, Worker,
+    XlaWorker,
+};
+use crate::runtime::XlaService;
+use crate::stencil::{spec, Field};
+
+/// Ambient plate temperature (°C) at the boundary and far field.
+pub const AMBIENT: f64 = 25.0;
+/// Peak initial temperature (°C) at the plate centre.
+pub const PEAK: f64 = 100.0;
+
+/// Gaussian initial temperature distribution (paper Fig. 16(a)).
+pub fn gaussian_plate(n: usize) -> Field {
+    let mut f = Field::zeros(&[n, n]);
+    let c = (n as f64 - 1.0) / 2.0;
+    let sigma = n as f64 / 6.0;
+    for i in 0..n {
+        for j in 0..n {
+            let d2 = ((i as f64 - c).powi(2) + (j as f64 - c).powi(2)) / (2.0 * sigma * sigma);
+            f.set(&[i, j], AMBIENT + (PEAK - AMBIENT) * (-d2).exp());
+        }
+    }
+    f
+}
+
+/// One Table-3 row.
+#[derive(Clone, Debug)]
+pub struct ThermalRow {
+    pub method: String,
+    pub seconds: f64,
+    pub gstencils: f64,
+    pub speedup: f64,
+    pub final_center: f64,
+    pub max_diff_vs_naive: f64,
+}
+
+/// Build the Table-3 scheduler for a given method name.
+fn scheduler_for(
+    method: &str,
+    rt: Option<&XlaService>,
+    spec_: &crate::stencil::StencilSpec,
+    n: usize,
+    tb: usize,
+    threads: usize,
+) -> Result<Scheduler> {
+    let unit = n / 8;
+    let units = 8;
+    let mk_native = |eng: &str| -> Box<dyn Worker> {
+        Box::new(NativeWorker::new(crate::engine::by_name(eng, threads).unwrap(), 1 << 33))
+    };
+    let workers: Vec<Box<dyn Worker>> = match method {
+        "naive" => vec![mk_native("naive")],
+        "tetris-cpu" => vec![mk_native("tetris-cpu")],
+        "tetris-gpu" => {
+            let svc = rt.ok_or_else(|| anyhow::anyhow!("tetris-gpu needs artifacts"))?;
+            vec![Box::new(XlaWorker::new(svc.clone(), "thermal_block", 1 << 33)?)]
+        }
+        "tetris" => {
+            let svc = rt.ok_or_else(|| anyhow::anyhow!("tetris needs artifacts"))?;
+            vec![
+                mk_native("tetris-cpu"),
+                Box::new(XlaWorker::new(svc.clone(), "thermal_block", 1 << 33)?),
+            ]
+        }
+        _ => anyhow::bail!("unknown method {method}"),
+    };
+    let partition = if workers.len() == 1 {
+        Partition { unit, shares: vec![units] }
+    } else {
+        // §5.2 profile initialization + balanced partition.
+        let prof = tuner::profile_workers(&workers, spec_, &[unit, n], tb, 2)?;
+        let rest_cells = (n + 2 * spec_.radius * tb) as usize;
+        let caps: Vec<usize> = workers
+            .iter()
+            .map(|w| capacity_units(w.mem_capacity(), unit, rest_cells))
+            .collect();
+        let weights: Vec<f64> = prof.iter().map(|t| 1.0 / t.max(1e-12)).collect();
+        Partition::balanced(unit, units, &weights, &caps)
+    };
+    Ok(Scheduler {
+        spec: spec_.clone(),
+        tb,
+        workers,
+        partition,
+        comm_model: CommModel::default(),
+    })
+}
+
+/// Run the full Table-3 sweep.  `steps` must be a multiple of `tb`.
+pub fn run_table3(
+    rt: Option<&XlaService>,
+    n: usize,
+    steps: usize,
+    tb: usize,
+    threads: usize,
+) -> Result<(Vec<ThermalRow>, Vec<(String, Field)>)> {
+    let s = spec::get("heat2d").unwrap();
+    let init = gaussian_plate(n);
+    let methods: Vec<&str> = if rt.is_some() {
+        vec!["naive", "tetris-cpu", "tetris-gpu", "tetris"]
+    } else {
+        vec!["naive", "tetris-cpu"]
+    };
+    let mut rows = Vec::new();
+    let mut fields = Vec::new();
+    let mut naive_secs = 0.0;
+    let mut naive_field: Option<Field> = None;
+    for m in methods {
+        let sched = scheduler_for(m, rt, &s, n, tb, threads)?;
+        let t0 = std::time::Instant::now();
+        let (out, metrics) = sched.run(&init, steps, AMBIENT)?;
+        let secs = t0.elapsed().as_secs_f64();
+        if m == "naive" {
+            naive_secs = secs;
+            naive_field = Some(out.clone());
+        }
+        let diff = naive_field
+            .as_ref()
+            .map(|f| out.max_abs_diff(f))
+            .unwrap_or(0.0);
+        rows.push(ThermalRow {
+            method: m.to_string(),
+            seconds: secs,
+            gstencils: metrics.gstencils_per_sec(),
+            speedup: if naive_secs > 0.0 { naive_secs / secs } else { 1.0 },
+            final_center: out.get(&[n / 2, n / 2]),
+            max_diff_vs_naive: diff,
+        });
+        fields.push((m.to_string(), out));
+    }
+    Ok((rows, fields))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_shape_and_range() {
+        let f = gaussian_plate(33);
+        assert!((f.get(&[16, 16]) - PEAK).abs() < 1e-9);
+        assert!(f.get(&[0, 0]) < 40.0);
+        assert!(f.min() >= AMBIENT - 1e-12);
+    }
+
+    #[test]
+    fn diffusion_cools_the_center() {
+        let s = spec::get("heat2d").unwrap();
+        let init = gaussian_plate(33);
+        let out = crate::coordinator::pipeline::reference_evolution(&init, &s, 40, 4, AMBIENT);
+        assert!(out.get(&[16, 16]) < init.get(&[16, 16]) - 5.0);
+        // heat flows out through the ambient boundary: mean decreases
+        assert!(out.mean() < init.mean());
+        // nothing dips below ambient or exceeds the initial peak
+        assert!(out.min() >= AMBIENT - 1e-9 && out.max() <= PEAK + 1e-9);
+    }
+
+    #[test]
+    fn table3_cpu_rows_agree() {
+        let (rows, fields) = run_table3(None, 64, 8, 4, 1).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows[1].max_diff_vs_naive < 1e-10, "{}", rows[1].max_diff_vs_naive);
+        assert_eq!(fields.len(), 2);
+        assert!(rows[0].speedup == 1.0 || rows[0].speedup > 0.0);
+    }
+}

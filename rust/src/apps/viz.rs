@@ -1,0 +1,102 @@
+//! PPM visualization for the thermal case study (paper Fig. 16).
+//!
+//! Binary PPM (P6) writers: a blue→red temperature ramp and the paper's
+//! signed error map (reds = positive/hotter, greens = zero, blues =
+//! negative/colder).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::stencil::Field;
+
+/// Map t in [0,1] to a blue->cyan->yellow->red heat ramp.
+fn heat_rgb(t: f64) -> [u8; 3] {
+    let t = t.clamp(0.0, 1.0);
+    let seg = |a: f64, b: f64| ((t - a) / (b - a)).clamp(0.0, 1.0);
+    let (r, g, b) = if t < 0.25 {
+        (0.0, seg(0.0, 0.25), 1.0)
+    } else if t < 0.5 {
+        (0.0, 1.0, 1.0 - seg(0.25, 0.5))
+    } else if t < 0.75 {
+        (seg(0.5, 0.75), 1.0, 0.0)
+    } else {
+        (1.0, 1.0 - seg(0.75, 1.0), 0.0)
+    };
+    [(r * 255.0) as u8, (g * 255.0) as u8, (b * 255.0) as u8]
+}
+
+/// Signed error map: positive -> red, ~zero -> green, negative -> blue.
+fn error_rgb(e: f64, scale: f64) -> [u8; 3] {
+    let t = (e / scale).clamp(-1.0, 1.0);
+    if t > 0.0 {
+        let s = t;
+        [(255.0 * s) as u8, (255.0 * (1.0 - s)) as u8, 0]
+    } else {
+        let s = -t;
+        [0, (255.0 * (1.0 - s)) as u8, (255.0 * s) as u8]
+    }
+}
+
+fn write_ppm(path: &Path, w: usize, h: usize, rgb: &[u8]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write!(f, "P6\n{w} {h}\n255\n")?;
+    f.write_all(rgb)?;
+    Ok(())
+}
+
+/// Render a 2D field with the heat ramp over [lo, hi].
+pub fn save_heatmap(field: &Field, lo: f64, hi: f64, path: impl AsRef<Path>) -> Result<()> {
+    anyhow::ensure!(field.ndim() == 2, "heatmap needs a 2D field");
+    let (h, w) = (field.shape()[0], field.shape()[1]);
+    let span = (hi - lo).max(1e-300);
+    let mut rgb = Vec::with_capacity(3 * w * h);
+    for &v in field.data() {
+        rgb.extend_from_slice(&heat_rgb((v - lo) / span));
+    }
+    write_ppm(path.as_ref(), w, h, &rgb)
+}
+
+/// Render the signed difference a-b (paper Fig. 16(d)).
+pub fn save_error_map(a: &Field, b: &Field, scale: f64, path: impl AsRef<Path>) -> Result<()> {
+    anyhow::ensure!(a.shape() == b.shape() && a.ndim() == 2, "shape mismatch");
+    let (h, w) = (a.shape()[0], a.shape()[1]);
+    let mut rgb = Vec::with_capacity(3 * w * h);
+    for (&x, &y) in a.data().iter().zip(b.data()) {
+        rgb.extend_from_slice(&error_rgb(x - y, scale));
+    }
+    write_ppm(path.as_ref(), w, h, &rgb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ramp_endpoints() {
+        assert_eq!(heat_rgb(0.0), [0, 0, 255]);
+        assert_eq!(heat_rgb(1.0), [255, 0, 0]);
+        let mid = heat_rgb(0.5);
+        assert_eq!(mid[1], 255); // green-ish middle
+    }
+
+    #[test]
+    fn error_colors() {
+        assert_eq!(error_rgb(1.0, 1.0), [255, 0, 0]);
+        assert_eq!(error_rgb(-1.0, 1.0), [0, 0, 255]);
+        assert_eq!(error_rgb(0.0, 1.0), [0, 255, 0]);
+    }
+
+    #[test]
+    fn writes_valid_ppm() {
+        let f = Field::random(&[4, 6], 1);
+        let dir = std::env::temp_dir().join("tetris_viz_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.ppm");
+        save_heatmap(&f, 0.0, 1.0, &p).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        assert!(data.starts_with(b"P6\n6 4\n255\n"));
+        assert_eq!(data.len(), 11 + 3 * 24);
+    }
+}

@@ -1,0 +1,96 @@
+//! AN5D baseline (Matsumura et al. [37]): high-degree temporal blocking
+//! with *overlapped* (redundant) halos.
+//!
+//! Each dim-0 tile independently loads tile + `radius*Tb` halo and
+//! advances Tb steps locally — the GPU-style associative temporal
+//! blocking AN5D generates.  Unlike tessellation, the overlap regions are
+//! recomputed by both neighbouring tiles (the redundancy the paper's §4.1
+//! eliminates); unlike Tetris (GPU) there is no MXU mapping.
+
+use crate::engine::{rowwise, Engine, FlatTaps};
+use crate::stencil::{Field, StencilSpec};
+
+pub struct An5dEngine {
+    /// Tile width along dim 0 (output cells per tile).
+    pub tile_w: usize,
+    pub threads: usize,
+}
+
+impl Default for An5dEngine {
+    fn default() -> Self {
+        An5dEngine { tile_w: 256, threads: 1 }
+    }
+}
+
+impl Engine for An5dEngine {
+    fn name(&self) -> &'static str {
+        "an5d"
+    }
+
+    fn preferred_tb(&self) -> usize {
+        4
+    }
+
+    fn block(&self, spec: &StencilSpec, input: &Field, steps: usize) -> Field {
+        let r = spec.radius;
+        let halo = r * steps;
+        let ext = input.shape().to_vec();
+        let core: Vec<usize> = ext.iter().map(|n| n - 2 * halo).collect();
+        let mut out = Field::zeros(&core);
+        let tile_w = self.tile_w.max(1);
+        let ntiles = core[0].div_ceil(tile_w);
+        let results: Vec<(usize, Field)> = crate::engine::parallel_map(
+            self.threads,
+            ntiles,
+            |k| {
+                let x0 = k * tile_w;
+                let x1 = ((k + 1) * tile_w).min(core[0]);
+                // Load tile + full halo (the overlapped/redundant read).
+                let mut off = vec![x0];
+                off.extend(vec![0usize; ext.len() - 1]);
+                let mut shape = vec![(x1 - x0) + 2 * halo];
+                shape.extend(ext[1..].iter().copied());
+                let mut cur = input.extract(&off, &shape);
+                for _ in 0..steps {
+                    let taps = FlatTaps::build(spec, cur.shape());
+                    cur = rowwise::fused_step(&cur, spec, &taps);
+                }
+                (x0, cur)
+            },
+        );
+        for (x0, f) in results {
+            let mut off = vec![x0];
+            off.extend(vec![0usize; ext.len() - 1]);
+            out.paste(&off, &f);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::{reference, spec};
+
+    #[test]
+    fn matches_reference() {
+        for name in ["heat1d", "box2d25p", "heat3d"] {
+            let s = spec::get(name).unwrap();
+            let eng = An5dEngine { tile_w: 6, threads: 2 };
+            let ext: Vec<usize> = (0..s.ndim).map(|_| 14 + 2 * s.radius * 3).collect();
+            let u = Field::random(&ext, 51);
+            let got = eng.block(&s, &u, 3);
+            let want = reference::block(&u, &s, 3);
+            assert!(got.allclose(&want, 1e-13, 1e-15), "{name}");
+        }
+    }
+
+    #[test]
+    fn uneven_last_tile() {
+        let s = spec::get("heat1d").unwrap();
+        let eng = An5dEngine { tile_w: 7, threads: 1 };
+        let u = Field::random(&[33], 52); // core 29 = 4*7 + 1
+        let got = eng.block(&s, &u, 2);
+        assert!(got.allclose(&reference::block(&u, &s, 2), 1e-14, 0.0));
+    }
+}

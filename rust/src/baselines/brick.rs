@@ -1,0 +1,105 @@
+//! Brick baseline (Zhao et al. [66]): fixed-size micro-brick layout.
+//!
+//! The domain is processed through fixed 8-wide bricks: each brick (plus
+//! its ghost cells) is copied into a small contiguous buffer, updated
+//! there, and copied back.  Bricks give excellent locality for complex
+//! kernels but pay per-brick copy overhead and (like Folding/AutoVec)
+//! have no temporal reuse across steps — and per the paper they run CPU
+//! and GPU paths separately rather than coordinating them.
+
+use crate::engine::{Engine, FlatTaps};
+use crate::stencil::{Field, StencilSpec};
+
+pub struct BrickEngine {
+    pub brick: usize,
+}
+
+impl Default for BrickEngine {
+    fn default() -> Self {
+        BrickEngine { brick: 8 }
+    }
+}
+
+impl Engine for BrickEngine {
+    fn name(&self) -> &'static str {
+        "brick"
+    }
+
+    fn block(&self, spec: &StencilSpec, input: &Field, steps: usize) -> Field {
+        let r = spec.radius;
+        let mut cur = input.clone();
+        for _ in 0..steps {
+            let ext = cur.shape().to_vec();
+            let core: Vec<usize> = ext.iter().map(|n| n - 2 * r).collect();
+            let mut out = Field::zeros(&core);
+            // Brick grid over the core.
+            let b = self.brick;
+            let nbricks: Vec<usize> = core.iter().map(|n| n.div_ceil(b)).collect();
+            let total: usize = nbricks.iter().product();
+            let mut bid = vec![0usize; core.len()];
+            for _ in 0..total {
+                // Brick core region.
+                let off: Vec<usize> = bid.iter().map(|&i| i * b).collect();
+                let shape: Vec<usize> = off
+                    .iter()
+                    .zip(&core)
+                    .map(|(&o, &n)| b.min(n - o))
+                    .collect();
+                // Copy brick + ghosts into the contiguous brick buffer.
+                let gshape: Vec<usize> = shape.iter().map(|n| n + 2 * r).collect();
+                let buf = cur.extract(&off, &gshape);
+                let taps = FlatTaps::build(spec, &gshape);
+                let mut bout = Field::zeros(&shape);
+                brick_update(&buf, &mut bout, &taps);
+                out.paste(&off, &bout);
+                for k in (0..bid.len()).rev() {
+                    bid[k] += 1;
+                    if bid[k] < nbricks[k] {
+                        break;
+                    }
+                    bid[k] = 0;
+                }
+            }
+            cur = out;
+        }
+        cur
+    }
+}
+
+/// Scalar update of one brick buffer (buffers are tiny: stays in L1).
+fn brick_update(buf: &Field, out: &mut Field, taps: &FlatTaps) {
+    let core = out.shape().to_vec();
+    let w = *core.last().unwrap();
+    let bdata = buf.data();
+    let odata = out.data_mut();
+    crate::engine::rowwise::for_each_row(buf.shape(), &core, |dst0, src0| {
+        crate::engine::rowwise::fused_row(&mut odata[dst0..dst0 + w], bdata, src0, taps);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::{reference, spec};
+
+    #[test]
+    fn matches_reference_all() {
+        for s in spec::benchmarks() {
+            let eng = BrickEngine { brick: 4 };
+            let ext: Vec<usize> = (0..s.ndim).map(|_| 11 + 2 * s.radius * 2).collect();
+            let u = Field::random(&ext, 71);
+            let got = eng.block(&s, &u, 2);
+            let want = reference::block(&u, &s, 2);
+            assert!(got.allclose(&want, 1e-12, 1e-14), "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn non_divisible_core() {
+        let s = spec::get("heat1d").unwrap();
+        let eng = BrickEngine { brick: 8 };
+        let u = Field::random(&[23], 72); // core 21 = 2*8 + 5
+        let got = eng.block(&s, &u, 1);
+        assert!(got.allclose(&reference::step(&u, &s), 1e-14, 0.0));
+    }
+}

@@ -1,0 +1,68 @@
+//! State-of-the-art baseline engines for the Fig-13 comparison.
+//!
+//! Each module reimplements the *algorithmic strategy* of one comparator
+//! from paper Table 2, sharing the same [`Engine`] contract so the bench
+//! harness sweeps them uniformly.  These are honest analogues, not
+//! strawmen: each uses the best inner loop its strategy admits.
+//!
+//! | Module     | Paper row              | Strategy reproduced              |
+//! |------------|------------------------|----------------------------------|
+//! | datareorg  | Data Reorg. [64]       | split tiling + lane reorg passes |
+//! | pluto      | Pluto [7]              | diamond/time-skewed tiling       |
+//! | folding    | Folding [34]           | in-register reuse, per-step      |
+//! | brick      | Brick [66]             | fixed micro-brick layout         |
+//! | an5d       | AN5D [37]              | overlapped (redundant) temporal  |
+//!
+//! ("Auto Vec." is `engine::autovec`; Tetris rows are `engine::*` and the
+//! XLA workers.)
+
+pub mod an5d;
+pub mod brick;
+pub mod datareorg;
+pub mod folding;
+pub mod pluto;
+
+use crate::engine::Engine;
+
+/// Baseline registry by paper name.
+pub fn by_name(name: &str) -> Option<Box<dyn Engine>> {
+    match name {
+        "datareorg" => Some(Box::new(datareorg::DataReorgEngine)),
+        "pluto" => Some(Box::new(pluto::PlutoEngine::default())),
+        "folding" => Some(Box::new(folding::FoldingEngine)),
+        "brick" => Some(Box::new(brick::BrickEngine::default())),
+        "an5d" => Some(Box::new(an5d::An5dEngine::default())),
+        _ => None,
+    }
+}
+
+pub const BASELINE_NAMES: &[&str] = &["datareorg", "pluto", "folding", "brick", "an5d"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::{reference, spec, Field};
+
+    /// Every baseline must agree with the oracle on every benchmark.
+    #[test]
+    fn baselines_match_reference() {
+        for name in BASELINE_NAMES {
+            let eng = by_name(name).unwrap();
+            for s in spec::benchmarks() {
+                for steps in [1usize, 3] {
+                    let ext: Vec<usize> =
+                        (0..s.ndim).map(|_| 9 + 2 * s.radius * steps).collect();
+                    let u = Field::random(&ext, 31);
+                    let got = eng.block(&s, &u, steps);
+                    let want = reference::block(&u, &s, steps);
+                    assert!(
+                        got.allclose(&want, 1e-12, 1e-14),
+                        "{name} vs ref: {} steps={steps} maxdiff={}",
+                        s.name,
+                        got.max_abs_diff(&want)
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,404 @@
+//! Bench harness: workload generators, timed sweeps, table printers.
+//!
+//! Every paper exhibit has a `run_*` entry point here; the `[[bench]]`
+//! binaries and the `tetris bench` CLI subcommand are thin wrappers.
+//! Problem sizes are scaled from paper Table 1 (see DESIGN.md §4) and
+//! configurable through [`BenchScale`].
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::{
+    partition::capacity_units, tuner, CommModel, NativeWorker, Partition, Scheduler, Worker,
+    XlaWorker,
+};
+use crate::engine::Engine;
+use crate::runtime::XlaService;
+use crate::stencil::{spec, Field, StencilSpec};
+use crate::util::timer;
+
+/// Scaled problem sizes per benchmark: (core shape, total steps, Tb).
+pub fn scaled_problem(name: &str, scale: f64) -> (Vec<usize>, usize, usize) {
+    let s = |x: usize| ((x as f64 * scale) as usize).max(8);
+    match name {
+        "heat1d" => (vec![s(262144)], 16, 8),
+        "star1d5p" => (vec![s(262144)], 16, 4),
+        "heat2d" => (vec![s(512), s(512)], 16, 4),
+        "star2d9p" => (vec![s(512), s(512)], 16, 2),
+        "box2d9p" => (vec![s(512), s(512)], 16, 4),
+        "box2d25p" => (vec![s(384), s(384)], 16, 2),
+        "heat3d" => (vec![s(64), s(64), s(64)], 8, 2),
+        "box3d27p" => (vec![s(64), s(64), s(64)], 8, 2),
+        _ => panic!("unknown bench {name}"),
+    }
+}
+
+/// One table row: label + throughput + speedup vs the row marked base.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub gstencils: f64,
+    pub speedup: f64,
+    pub extra: String,
+}
+
+/// Render rows as an aligned text table (and return it).
+pub fn print_table(title: &str, rows: &[Row]) -> String {
+    let mut s = format!("== {title} ==\n");
+    let wl = rows.iter().map(|r| r.label.len()).max().unwrap_or(8).max(12);
+    s.push_str(&format!(
+        "{:<wl$} {:>14} {:>9}  note\n",
+        "method", "GStencils/s", "speedup"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<wl$} {:>14.4} {:>8.2}x  {}\n",
+            r.label, r.gstencils, r.speedup, r.extra
+        ));
+    }
+    println!("{s}");
+    s
+}
+
+/// Time one engine on a benchmark's scaled problem (valid-mode blocks).
+pub fn time_engine(
+    eng: &dyn Engine,
+    spec_: &StencilSpec,
+    core: &[usize],
+    total_steps: usize,
+    tb: usize,
+) -> (f64, Duration) {
+    let halo = spec_.radius * tb;
+    let ext: Vec<usize> = core.iter().map(|n| n + 2 * halo).collect();
+    let input = Field::random(&ext, 0xA11CE);
+    let blocks = total_steps / tb;
+    let d = timer::time_median(0, 1, || {
+        let mut cur = input.clone();
+        for _ in 0..blocks {
+            let out = eng.block(spec_, &cur, tb);
+            // re-pad to keep iterating (Dirichlet ring)
+            cur = out.pad(halo, 0.0);
+        }
+        cur
+    });
+    let cells: usize = core.iter().product();
+    (timer::gstencils_per_sec(cells, total_steps, d), d)
+}
+
+/// Time a scheduler configuration end-to-end.
+pub fn time_scheduler(
+    sched: &Scheduler,
+    core: &Field,
+    total_steps: usize,
+) -> Result<(f64, crate::coordinator::RunMetrics)> {
+    let (_, metrics) = sched.run(core, total_steps, 0.0)?;
+    Ok((metrics.gstencils_per_sec(), metrics))
+}
+
+fn native(eng: &str, threads: usize) -> Box<dyn Worker> {
+    Box::new(NativeWorker::new(crate::engine::by_name(eng, threads).unwrap(), 1 << 33))
+}
+
+/// Build the auto-tuned heterogeneous scheduler for a bench, mixing
+/// tetris-cpu with the XLA block artifact when available.
+pub fn hetero_scheduler(
+    rt: &XlaService,
+    bench: &str,
+    threads: usize,
+) -> Result<(Scheduler, Vec<usize>)> {
+    let meta = rt.bench(bench)?.clone();
+    let s = spec::get(bench).unwrap();
+    let workers: Vec<Box<dyn Worker>> = vec![
+        native("tetris-cpu", threads),
+        Box::new(XlaWorker::new(rt.clone(), &format!("{bench}_block"), 1 << 33)?),
+    ];
+    let unit_core: Vec<usize> = {
+        let mut u = vec![meta.unit];
+        u.extend(&meta.global_core[1..]);
+        u
+    };
+    let prof = tuner::profile_workers(&workers, &s, &unit_core, meta.tb, 2)?;
+    let halo = s.radius * meta.tb;
+    let rest_cells: usize = meta.global_core[1..].iter().map(|n| n + 2 * halo).product::<usize>().max(1);
+    let caps: Vec<usize> = workers
+        .iter()
+        .map(|w| capacity_units(w.mem_capacity(), meta.unit, rest_cells))
+        .collect();
+    let weights: Vec<f64> = prof.iter().map(|t| 1.0 / t.max(1e-12)).collect();
+    let units = meta.global_core[0] / meta.unit;
+    let partition = Partition::balanced(meta.unit, units, &weights, &caps);
+    Ok((
+        Scheduler {
+            spec: s,
+            tb: meta.tb,
+            workers,
+            partition,
+            comm_model: CommModel::default(),
+        },
+        meta.global_core.clone(),
+    ))
+}
+
+// ---------------------------------------------------------------------
+// Paper exhibits
+// ---------------------------------------------------------------------
+
+/// Fig. 12: performance breakdown on Star-1D5P, Box-2D25P, Box-3D27P.
+pub fn run_breakdown(rt: Option<&XlaService>, scale: f64, threads: usize) -> Vec<(String, Vec<Row>)> {
+    let mut out = Vec::new();
+    for bench in ["star1d5p", "box2d25p", "box3d27p"] {
+        let s = spec::get(bench).unwrap();
+        let (core, steps, tb) = scaled_problem(bench, scale);
+        let mut rows = Vec::new();
+        let mut base = 0.0;
+        let rungs: Vec<(&str, Box<dyn Engine>)> = vec![
+            ("naive", crate::engine::by_name("naive", 1).unwrap()),
+            ("+tessellate", crate::engine::by_name("tessellate", 1).unwrap()),
+            ("+skewed-swizzle", Box::new(crate::engine::tessellate::TessellateEngine {
+                inner: crate::engine::tessellate::Inner::Fused,
+                threads: 1,
+                tile_w: None,
+            })),
+            ("+multicore (Tetris CPU)", crate::engine::by_name("tetris-cpu", threads).unwrap()),
+        ];
+        for (label, eng) in rungs {
+            let (g, _) = time_engine(eng.as_ref(), &s, &core, steps, tb);
+            if base == 0.0 {
+                base = g;
+            }
+            rows.push(Row {
+                label: label.into(),
+                gstencils: g,
+                speedup: g / base,
+                extra: String::new(),
+            });
+        }
+        if let Some(rt) = rt {
+            // +Tensor Cores (MXU trapezoid folding) and +Checkerboard
+            // (temporal-block artifact) rungs via PJRT, unit-slab sized.
+            for (label, art) in [("+mxu (trapezoid)", format!("{bench}_mxu")),
+                                  ("+checkerboard (block)", format!("{bench}_block"))] {
+                if let Ok(meta) = rt.meta(&art).cloned() {
+                    let input = Field::random(&meta.input_shape, 0xF00D);
+                    let d = timer::time_median(1, 3, || rt.run(&art, &input).unwrap());
+                    let cells: usize = meta.unit_core.iter().product();
+                    let g = timer::gstencils_per_sec(cells, meta.steps, d);
+                    rows.push(Row {
+                        label: label.into(),
+                        gstencils: g,
+                        speedup: g / base,
+                        extra: format!("artifact {art}"),
+                    });
+                }
+            }
+        }
+        print_table(&format!("Fig.12 breakdown: {bench}"), &rows);
+        out.push((bench.to_string(), rows));
+    }
+    out
+}
+
+/// Fig. 13: state-of-the-art comparison across all 8 benchmarks.
+pub fn run_sota(rt: Option<&XlaService>, scale: f64, threads: usize) -> Vec<(String, Vec<Row>)> {
+    let mut out = Vec::new();
+    for bench in spec::benchmarks() {
+        let name = bench.name;
+        let (core, steps, tb) = scaled_problem(name, scale);
+        let mut rows: Vec<Row> = Vec::new();
+        let engines: Vec<(&str, Box<dyn Engine>)> = vec![
+            ("DataReorg", crate::baselines::by_name("datareorg").unwrap()),
+            ("AutoVec", crate::engine::by_name("autovec", 1).unwrap()),
+            ("Pluto", crate::baselines::by_name("pluto").unwrap()),
+            ("Folding", crate::baselines::by_name("folding").unwrap()),
+            ("Brick", crate::baselines::by_name("brick").unwrap()),
+            ("AN5D", crate::baselines::by_name("an5d").unwrap()),
+            ("Tetris(CPU)", crate::engine::by_name("tetris-cpu", threads).unwrap()),
+        ];
+        for (label, eng) in engines {
+            let (g, _) = time_engine(eng.as_ref(), &bench, &core, steps, tb);
+            rows.push(Row { label: label.into(), gstencils: g, speedup: 0.0, extra: String::new() });
+        }
+        if let Some(rt) = rt {
+            let art = format!("{name}_block");
+            if let Ok(meta) = rt.meta(&art).cloned() {
+                let input = Field::random(&meta.input_shape, 0xF00D);
+                let d = timer::time_median(1, 3, || rt.run(&art, &input).unwrap());
+                let cells: usize = meta.unit_core.iter().product();
+                rows.push(Row {
+                    label: "Tetris(GPU)".into(),
+                    gstencils: timer::gstencils_per_sec(cells, meta.steps, d),
+                    speedup: 0.0,
+                    extra: "xla block artifact".into(),
+                });
+            }
+            if let Ok((sched, global)) = hetero_scheduler(rt, name, threads) {
+                let core_f = Field::random(&global, 0xF00D);
+                let total = sched.tb * 2;
+                if let Ok((g, m)) = time_scheduler(&sched, &core_f, total) {
+                    rows.push(Row {
+                        label: "Tetris".into(),
+                        gstencils: g,
+                        speedup: 0.0,
+                        extra: format!("ratio {:.1}%", m.ratios.last().unwrap_or(&0.0) * 100.0),
+                    });
+                }
+            }
+        }
+        let base = rows
+            .iter()
+            .map(|r| r.gstencils)
+            .fold(f64::INFINITY, f64::min)
+            .max(1e-12);
+        for r in &mut rows {
+            r.speedup = r.gstencils / base;
+        }
+        print_table(&format!("Fig.13: {name}"), &rows);
+        out.push((name.to_string(), rows));
+    }
+    out
+}
+
+/// Fig. 14: scalability vs thread count + scheduling ratio.
+pub fn run_scaling(rt: Option<&XlaService>, scale: f64, max_threads: usize) -> Vec<(String, Vec<Row>)> {
+    let mut out = Vec::new();
+    for bench in ["heat1d", "heat2d", "heat3d"] {
+        let s = spec::get(bench).unwrap();
+        let (core, steps, tb) = scaled_problem(bench, scale);
+        let mut rows = Vec::new();
+        let mut base = 0.0;
+        let mut t = 1;
+        while t <= max_threads {
+            let eng = crate::engine::by_name("tetris-cpu", t).unwrap();
+            let (g, _) = time_engine(eng.as_ref(), &s, &core, steps, tb);
+            if t == 1 {
+                base = g;
+            }
+            rows.push(Row {
+                label: format!("{t} threads"),
+                gstencils: g,
+                speedup: g / base,
+                extra: String::new(),
+            });
+            t *= 2;
+        }
+        if let Some(rt) = rt {
+            if let Ok((sched, _)) = hetero_scheduler(rt, bench, max_threads) {
+                let ratio = sched.partition.ratio(sched.partition.shares.len() - 1);
+                rows.push(Row {
+                    label: "hetero (tuned)".into(),
+                    gstencils: 0.0,
+                    speedup: 0.0,
+                    extra: format!("scheduling ratio GPU:CPU = {:.1}%", ratio * 100.0),
+                });
+            }
+        }
+        print_table(&format!("Fig.14 scaling: {bench}"), &rows);
+        out.push((bench.to_string(), rows));
+    }
+    out
+}
+
+/// §5.3 communication study: centralized vs per-step launch cost.
+pub fn run_comm() -> Vec<Row> {
+    let m = CommModel::default();
+    let mut rows = Vec::new();
+    for tb in [1usize, 2, 4, 8, 16, 32] {
+        // Halo bytes for the heat2d thermal grid: 2 sides x r*Tb x width x 8.
+        let bytes = 2 * tb * 392 * 8;
+        let (central, split) = m.centralized_vs_split(bytes, tb);
+        rows.push(Row {
+            label: format!("Tb={tb}"),
+            gstencils: 0.0,
+            speedup: split / central,
+            extra: format!(
+                "central {:.1}us vs per-step {:.1}us ({} B)",
+                central * 1e6,
+                split * 1e6,
+                bytes
+            ),
+        });
+    }
+    print_table("§5.3 centralized communication launch (modeled)", &rows);
+    rows
+}
+
+/// MXU study: trapezoid-folding artifact vs VPU step artifact + estimates.
+pub fn run_mxu(rt: &XlaService) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for bench in ["heat2d", "star2d9p", "box2d9p", "box2d25p"] {
+        let meta = rt.bench(bench)?.clone();
+        for variant in ["step", "mxu"] {
+            let name = format!("{bench}_{variant}");
+            let ameta = rt.meta(&name)?.clone();
+            let input = Field::random(&ameta.input_shape, 0xC0FFEE);
+            let d = timer::time_median(1, 3, || rt.run(&name, &input).unwrap());
+            let cells: usize = ameta.unit_core.iter().product();
+            let g = timer::gstencils_per_sec(cells, ameta.steps, d);
+            let est = crate::model::mxu_estimate(
+                meta.flops_per_cell,
+                meta.radius,
+                2 * meta.radius + 1,
+                meta.unit,
+                meta.global_core[1],
+            );
+            rows.push(Row {
+                label: name,
+                gstencils: g,
+                speedup: 0.0,
+                extra: if variant == "mxu" {
+                    format!("est. MXU util {:.3}, VMEM {:.1}%", est.mxu_utilization, est.vmem_fraction * 100.0)
+                } else {
+                    String::new()
+                },
+            });
+        }
+    }
+    let base = rows.iter().map(|r| r.gstencils).fold(f64::INFINITY, f64::min);
+    for r in &mut rows {
+        r.speedup = r.gstencils / base;
+    }
+    print_table("MXU trapezoid folding vs VPU step (CPU-PJRT timings)", &rows);
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaled_problem_covers_all() {
+        for s in spec::benchmarks() {
+            let (core, steps, tb) = scaled_problem(s.name, 0.1);
+            assert_eq!(core.len(), s.ndim);
+            assert_eq!(steps % tb, 0, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn time_engine_positive() {
+        let s = spec::get("heat1d").unwrap();
+        let eng = crate::engine::by_name("simd", 1).unwrap();
+        let (g, d) = time_engine(eng.as_ref(), &s, &[128], 4, 2);
+        assert!(g > 0.0 && d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn comm_rows_monotone() {
+        let rows = run_comm();
+        // centralized advantage grows with Tb
+        for w in rows.windows(2) {
+            assert!(w[1].speedup >= w[0].speedup);
+        }
+    }
+
+    #[test]
+    fn print_table_formats() {
+        let s = print_table(
+            "t",
+            &[Row { label: "x".into(), gstencils: 1.0, speedup: 2.0, extra: "e".into() }],
+        );
+        assert!(s.contains("GStencils/s"));
+        assert!(s.contains("2.00x"));
+    }
+}

@@ -1,0 +1,97 @@
+//! Communication accounting + the α+β latency-bandwidth model (paper §5.3).
+//!
+//! The coordinator records every halo message it would send on a real
+//! two-device deployment (here the copies are host memcpys, so the model
+//! supplies the deployment-cost view).  Centralized launch — one batched
+//! message per boundary per Tb-block instead of Tb per-step messages —
+//! is the paper's k(α + nβ) ≫ α + k·n·β argument, reproduced by
+//! [`CommModel::centralized_vs_split`] and the `comm` bench.
+
+/// Latency-bandwidth model: cost(k msgs, B bytes) = k*α + B*β seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct CommModel {
+    /// Per-message launch latency (s).  PCIe/NVLink-ish default: 10 µs.
+    pub alpha: f64,
+    /// Per-byte transfer time (s/B).  Default 16 GB/s => 6.25e-11.
+    pub beta: f64,
+}
+
+impl Default for CommModel {
+    fn default() -> Self {
+        CommModel { alpha: 10e-6, beta: 1.0 / 16e9 }
+    }
+}
+
+impl CommModel {
+    pub fn cost(&self, messages: usize, bytes: usize) -> f64 {
+        messages as f64 * self.alpha + bytes as f64 * self.beta
+    }
+
+    /// (centralized, split) cost of exchanging `bytes` once per Tb block
+    /// vs `tb` per-step messages of `bytes/tb` each.
+    pub fn centralized_vs_split(&self, bytes: usize, tb: usize) -> (f64, f64) {
+        let central = self.cost(1, bytes);
+        let split = self.cost(tb, bytes);
+        (central, split)
+    }
+}
+
+/// Ledger of halo traffic accumulated over a run.
+#[derive(Clone, Debug, Default)]
+pub struct CommLedger {
+    pub messages: usize,
+    pub bytes: usize,
+    /// Messages that WOULD have been sent without centralized launch.
+    pub split_messages: usize,
+}
+
+impl CommLedger {
+    /// Record one centralized halo exchange covering `tb` steps.
+    pub fn record_exchange(&mut self, bytes: usize, tb: usize) {
+        self.messages += 1;
+        self.bytes += bytes;
+        self.split_messages += tb;
+    }
+
+    /// Modeled seconds under `m`, centralized vs per-step launch.
+    pub fn modeled_cost(&self, m: &CommModel) -> (f64, f64) {
+        (
+            m.cost(self.messages, self.bytes),
+            m.cost(self.split_messages, self.bytes),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_dominates_small_messages() {
+        let m = CommModel::default();
+        let (central, split) = m.centralized_vs_split(1024, 8);
+        assert!(central < split);
+        // 8 messages pay 8 alphas
+        assert!((split - central - 7.0 * m.alpha).abs() < 1e-12);
+    }
+
+    #[test]
+    fn big_transfers_are_bandwidth_bound() {
+        let m = CommModel::default();
+        let c = m.cost(1, 1 << 30);
+        assert!(c > 0.05, "1 GiB at 16 GB/s is > 60 ms, got {c}");
+    }
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut l = CommLedger::default();
+        l.record_exchange(4096, 4);
+        l.record_exchange(4096, 4);
+        assert_eq!(l.messages, 2);
+        assert_eq!(l.split_messages, 8);
+        assert_eq!(l.bytes, 8192);
+        let m = CommModel::default();
+        let (c, s) = l.modeled_cost(&m);
+        assert!(c < s);
+    }
+}

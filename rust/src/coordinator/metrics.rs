@@ -1,0 +1,125 @@
+//! Run metrics: throughput (paper Eq. 5), per-worker utilization, pipeline
+//! bubbles, and communication totals.
+
+use std::time::Duration;
+
+use super::comm::{CommLedger, CommModel};
+
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub total_steps: usize,
+    pub blocks: usize,
+    pub core_cells: usize,
+    pub elapsed: Duration,
+    pub worker_names: Vec<String>,
+    /// Total busy time per worker across all blocks.
+    pub worker_busy: Vec<Duration>,
+    /// Sum over blocks of (slowest worker - this worker): idle time.
+    pub worker_idle: Vec<Duration>,
+    pub comm: CommLedger,
+    /// Scheduling share per worker (units fraction).
+    pub ratios: Vec<f64>,
+}
+
+impl RunMetrics {
+    /// Stencils per second (paper Eq. 5): Nx*Ny*Nz * T / time.
+    pub fn gstencils_per_sec(&self) -> f64 {
+        (self.core_cells as f64 * self.total_steps as f64) / self.elapsed.as_secs_f64() / 1e9
+    }
+
+    /// Fraction of worker-time lost to pipeline bubbles (0 = perfectly
+    /// balanced partition — the §5.2 auto-tuning target).
+    pub fn bubble_fraction(&self) -> f64 {
+        let busy: f64 = self.worker_busy.iter().map(|d| d.as_secs_f64()).sum();
+        let idle: f64 = self.worker_idle.iter().map(|d| d.as_secs_f64()).sum();
+        if busy + idle == 0.0 {
+            0.0
+        } else {
+            idle / (busy + idle)
+        }
+    }
+
+    /// Human-readable report block.
+    pub fn report(&self, model: &CommModel) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "steps={} blocks={} cells={} elapsed={:?} throughput={:.3} GStencils/s\n",
+            self.total_steps,
+            self.blocks,
+            self.core_cells,
+            self.elapsed,
+            self.gstencils_per_sec()
+        ));
+        for (i, name) in self.worker_names.iter().enumerate() {
+            s.push_str(&format!(
+                "  worker[{i}] {name}: share={:.1}% busy={:?} idle={:?}\n",
+                self.ratios.get(i).copied().unwrap_or(0.0) * 100.0,
+                self.worker_busy.get(i).copied().unwrap_or_default(),
+                self.worker_idle.get(i).copied().unwrap_or_default(),
+            ));
+        }
+        let (central, split) = self.comm.modeled_cost(model);
+        s.push_str(&format!(
+            "  comm: {} msgs, {} bytes (modeled {:.2}ms centralized vs {:.2}ms per-step)\n",
+            self.comm.messages,
+            self.comm.bytes,
+            central * 1e3,
+            split * 1e3
+        ));
+        s.push_str(&format!("  bubble fraction: {:.1}%\n", self.bubble_fraction() * 100.0));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_eq5() {
+        let m = RunMetrics {
+            total_steps: 100,
+            core_cells: 1_000_000,
+            elapsed: Duration::from_secs(1),
+            ..Default::default()
+        };
+        assert!((m.gstencils_per_sec() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bubble_fraction_balanced_is_zero() {
+        let m = RunMetrics {
+            worker_busy: vec![Duration::from_secs(1), Duration::from_secs(1)],
+            worker_idle: vec![Duration::ZERO, Duration::ZERO],
+            ..Default::default()
+        };
+        assert_eq!(m.bubble_fraction(), 0.0);
+    }
+
+    #[test]
+    fn bubble_fraction_imbalanced() {
+        let m = RunMetrics {
+            worker_busy: vec![Duration::from_secs(3), Duration::from_secs(1)],
+            worker_idle: vec![Duration::ZERO, Duration::from_secs(2)],
+            ..Default::default()
+        };
+        assert!((m.bubble_fraction() - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_contains_workers() {
+        let m = RunMetrics {
+            worker_names: vec!["native:simd".into()],
+            worker_busy: vec![Duration::from_millis(5)],
+            worker_idle: vec![Duration::ZERO],
+            ratios: vec![1.0],
+            elapsed: Duration::from_millis(10),
+            total_steps: 1,
+            core_cells: 100,
+            ..Default::default()
+        };
+        let r = m.report(&CommModel::default());
+        assert!(r.contains("native:simd"));
+        assert!(r.contains("bubble"));
+    }
+}

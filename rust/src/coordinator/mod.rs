@@ -1,0 +1,22 @@
+//! The concurrent scheduler on memory-level tetrominoes (paper §5).
+//!
+//! * [`partition`] — two-way/N-way unit-quantized partitioning +
+//!   bidirectional memory squeezing (§5.1);
+//! * [`tuner`] — profile-initialized auto-tuning balance (§5.2);
+//! * [`comm`] — α+β model + centralized-launch accounting (§5.3);
+//! * [`worker`] — native-CPU and PJRT-artifact workers;
+//! * [`pipeline`] — the block-synchronous heterogeneous driver (Fig. 11);
+//! * [`metrics`] — Eq.-5 throughput, bubbles, comm totals.
+
+pub mod comm;
+pub mod metrics;
+pub mod partition;
+pub mod pipeline;
+pub mod tuner;
+pub mod worker;
+
+pub use comm::{CommLedger, CommModel};
+pub use metrics::RunMetrics;
+pub use partition::Partition;
+pub use pipeline::Scheduler;
+pub use worker::{NativeWorker, Worker, XlaWorker};

@@ -1,0 +1,163 @@
+//! Two-way (N-way) partitioning on memory-level tetrominoes (paper §5.1).
+//!
+//! The global domain's leading dimension is quantized into *units* (the
+//! slab quantum fixed by the AOT artifacts — one memory-level tetromino).
+//! A partition assigns each worker a contiguous run of units.  Balanced
+//! partitioning weights the split by measured worker throughput; the
+//! memory squeezer then clamps every share to its worker's capacity and
+//! spills the remainder bidirectionally (paper: "once the GPU memory is
+//! fully occupied, the remaining part left on CPU is still
+//! well-addressed").
+
+/// Assignment of `unit`-row slabs to workers, in worker order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    /// Rows per unit (dim-0 quantum).
+    pub unit: usize,
+    /// Units owned by each worker (contiguous, in order).
+    pub shares: Vec<usize>,
+}
+
+impl Partition {
+    pub fn total_units(&self) -> usize {
+        self.shares.iter().sum()
+    }
+
+    /// Row spans [start, end) per worker (dim-0, core coordinates).
+    pub fn spans(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.shares.len());
+        let mut x = 0;
+        for &s in &self.shares {
+            out.push((x * self.unit, (x + s) * self.unit));
+            x += s;
+        }
+        out
+    }
+
+    /// GPU:CPU style scheduling ratio of worker `i` (paper Fig. 14).
+    pub fn ratio(&self, i: usize) -> f64 {
+        self.shares[i] as f64 / self.total_units() as f64
+    }
+
+    /// Split `units` across workers proportionally to `weights`
+    /// (typically 1/latency), honouring per-worker capacity in units.
+    /// Every worker with weight > 0 gets at least 0; leftovers spill to
+    /// the workers with remaining capacity, largest weight first.
+    pub fn balanced(unit: usize, units: usize, weights: &[f64], cap_units: &[usize]) -> Partition {
+        assert_eq!(weights.len(), cap_units.len());
+        assert!(!weights.is_empty());
+        let wsum: f64 = weights.iter().sum();
+        assert!(wsum > 0.0, "all weights zero");
+        let n = weights.len();
+        // Ideal real-valued shares, floored; then distribute the
+        // remainder by largest fractional part (Hamilton method).
+        let ideal: Vec<f64> = weights.iter().map(|w| units as f64 * w / wsum).collect();
+        let mut shares: Vec<usize> = ideal.iter().map(|x| x.floor() as usize).collect();
+        let mut assigned: usize = shares.iter().sum();
+        let mut frac: Vec<(usize, f64)> = ideal
+            .iter()
+            .enumerate()
+            .map(|(i, x)| (i, x - x.floor()))
+            .collect();
+        frac.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut fi = 0;
+        while assigned < units {
+            let i = frac[fi % n].0;
+            shares[i] += 1;
+            assigned += 1;
+            fi += 1;
+        }
+        // Memory squeeze: clamp to capacity, spill bidirectionally.
+        let mut spill: usize = 0;
+        for i in 0..n {
+            if shares[i] > cap_units[i] {
+                spill += shares[i] - cap_units[i];
+                shares[i] = cap_units[i];
+            }
+        }
+        if spill > 0 {
+            // order receivers by weight, highest throughput first
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| weights[b].partial_cmp(&weights[a]).unwrap());
+            for &i in &order {
+                let room = cap_units[i] - shares[i];
+                let take = room.min(spill);
+                shares[i] += take;
+                spill -= take;
+                if spill == 0 {
+                    break;
+                }
+            }
+        }
+        assert_eq!(spill, 0, "total capacity smaller than the domain");
+        Partition { unit, shares }
+    }
+}
+
+/// Units a worker with `capacity_bytes` can hold: each unit needs
+/// input + output + one scratch copy of the unit slab.
+pub fn capacity_units(capacity_bytes: usize, unit_rows: usize, rest_cells: usize) -> usize {
+    let per_unit = 3 * unit_rows * rest_cells * 8;
+    capacity_bytes / per_unit.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_are_contiguous_and_cover() {
+        let p = Partition { unit: 4, shares: vec![3, 1, 2] };
+        assert_eq!(p.spans(), vec![(0, 12), (12, 16), (16, 24)]);
+        assert_eq!(p.total_units(), 6);
+    }
+
+    #[test]
+    fn balanced_respects_weights() {
+        let p = Partition::balanced(64, 10, &[1.0, 4.0], &[100, 100]);
+        assert_eq!(p.total_units(), 10);
+        assert_eq!(p.shares, vec![2, 8]);
+    }
+
+    #[test]
+    fn balanced_equal_weights_splits_evenly() {
+        let p = Partition::balanced(1, 9, &[1.0, 1.0, 1.0], &[10, 10, 10]);
+        assert_eq!(p.total_units(), 9);
+        assert!(p.shares.iter().all(|&s| s == 3));
+    }
+
+    #[test]
+    fn squeezer_spills_over_capacity() {
+        // fast worker capped at 3 units: spill lands on the slow one
+        let p = Partition::balanced(64, 10, &[1.0, 9.0], &[100, 3]);
+        assert_eq!(p.shares, vec![7, 3]);
+        assert_eq!(p.total_units(), 10);
+    }
+
+    #[test]
+    fn squeezer_bidirectional() {
+        // both capped; spill routed wherever room remains
+        let p = Partition::balanced(1, 12, &[1.0, 1.0, 1.0], &[2, 100, 2]);
+        assert_eq!(p.total_units(), 12);
+        assert!(p.shares[0] <= 2 && p.shares[2] <= 2);
+        assert_eq!(p.shares[1], 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "total capacity")]
+    fn impossible_capacity_panics() {
+        Partition::balanced(1, 10, &[1.0, 1.0], &[2, 2]);
+    }
+
+    #[test]
+    fn ratio_matches_shares() {
+        let p = Partition { unit: 1, shares: vec![1, 3] };
+        assert!((p.ratio(1) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_units_math() {
+        // 3 copies x 64 rows x 256 cells x 8B = 393216 B per unit
+        assert_eq!(capacity_units(800_000, 64, 256), 2);
+    }
+}

@@ -1,0 +1,260 @@
+//! The concurrent heterogeneous pipeline driver (paper §5, Fig. 11).
+//!
+//! The leader holds the global extended field.  Per Tb-block it
+//! (1) snapshots each worker's slab + ghost ring (the halo exchange —
+//! batched once per block, the §5.3 centralized communication launch),
+//! (2) dispatches every worker concurrently on scoped threads,
+//! (3) writes the slabs back, accounting busy/idle time and comm volume.
+//!
+//! Boundary condition: Dirichlet — the ghost ring keeps its initial
+//! value, identical to the valid-mode contract the artifacts and engines
+//! share, so a heterogeneous run is bit-comparable to a single-worker
+//! reference evolution (tested below).
+
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::stencil::{Field, StencilSpec};
+
+use super::comm::{CommLedger, CommModel};
+use super::metrics::RunMetrics;
+use super::partition::Partition;
+use super::worker::Worker;
+
+pub struct Scheduler {
+    pub spec: StencilSpec,
+    /// Fused steps per block (every worker must support it).
+    pub tb: usize,
+    pub workers: Vec<Box<dyn Worker>>,
+    pub partition: Partition,
+    pub comm_model: CommModel,
+}
+
+impl Scheduler {
+    /// Evolve `core` by `total_steps` (a multiple of Tb) with constant
+    /// `boundary` ghost cells.  Returns the final core and run metrics.
+    pub fn run(
+        &self,
+        core: &Field,
+        total_steps: usize,
+        boundary: f64,
+    ) -> Result<(Field, RunMetrics)> {
+        anyhow::ensure!(self.tb >= 1, "tb must be >= 1");
+        anyhow::ensure!(
+            total_steps % self.tb == 0,
+            "total_steps {total_steps} not a multiple of Tb {}",
+            self.tb
+        );
+        anyhow::ensure!(
+            !self.workers.is_empty() && self.workers.len() == self.partition.shares.len(),
+            "workers/partition mismatch"
+        );
+        let spans = self.partition.spans();
+        anyhow::ensure!(
+            spans.last().unwrap().1 == core.shape()[0],
+            "partition covers {} rows, domain has {}",
+            spans.last().unwrap().1,
+            core.shape()[0]
+        );
+        let halo = self.spec.radius * self.tb;
+        let nd = core.ndim();
+        let mut global = core.pad(halo, boundary);
+        let ext_rest: Vec<usize> = global.shape()[1..].to_vec();
+        let rest_cells: usize = ext_rest.iter().product::<usize>().max(1);
+
+        let blocks = total_steps / self.tb;
+        let mut busy = vec![Duration::ZERO; self.workers.len()];
+        let mut idle = vec![Duration::ZERO; self.workers.len()];
+        let mut comm = CommLedger::default();
+        let t0 = Instant::now();
+
+        for _ in 0..blocks {
+            // (1) Halo snapshot: one extraction per worker per block —
+            // the centralized communication launch.  Internal-boundary
+            // bytes are what a two-device deployment would ship.
+            let inputs: Vec<Field> = spans
+                .iter()
+                .map(|&(s, e)| {
+                    let mut off = vec![s];
+                    off.extend(vec![0usize; nd - 1]);
+                    let mut shape = vec![(e - s) + 2 * halo];
+                    shape.extend(&ext_rest);
+                    global.extract(&off, &shape)
+                })
+                .collect();
+            for _ in 0..spans.len().saturating_sub(1) {
+                // two directions x halo rows x extended row cells
+                comm.record_exchange(2 * halo * rest_cells * 8, self.tb);
+            }
+
+            // (2) Concurrent dispatch.
+            let results: Vec<(Result<Field>, Duration)> =
+                dispatch(&self.workers, &self.spec, inputs, self.tb);
+
+            // (3) Writeback + accounting.
+            let slowest = results.iter().map(|(_, d)| *d).max().unwrap_or_default();
+            for (i, ((res, dt), &(s, _e))) in results.into_iter().zip(&spans).enumerate() {
+                let out = res.with_context(|| format!("worker {i} failed"))?;
+                let mut off = vec![s + halo];
+                off.extend(vec![halo; nd - 1]);
+                global.paste(&off, &out);
+                busy[i] += dt;
+                idle[i] += slowest - dt;
+            }
+        }
+
+        let metrics = RunMetrics {
+            total_steps,
+            blocks,
+            core_cells: core.len(),
+            elapsed: t0.elapsed(),
+            worker_names: self.workers.iter().map(|w| w.name()).collect(),
+            worker_busy: busy,
+            worker_idle: idle,
+            comm,
+            ratios: (0..self.workers.len()).map(|i| self.partition.ratio(i)).collect(),
+        };
+        Ok((global.unpad(halo), metrics))
+    }
+}
+
+/// Run every worker on its input concurrently; returns per-worker
+/// (result, busy time) in worker order.
+fn dispatch(
+    workers: &[Box<dyn Worker>],
+    spec: &StencilSpec,
+    inputs: Vec<Field>,
+    tb: usize,
+) -> Vec<(Result<Field>, Duration)> {
+    let mut out: Vec<Option<(Result<Field>, Duration)>> =
+        (0..workers.len()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for ((slot, worker), input) in out.iter_mut().zip(workers).zip(inputs) {
+            scope.spawn(move || {
+                let t0 = Instant::now();
+                let res = worker.run_slab(spec, &input, tb);
+                *slot = Some((res, t0.elapsed()));
+            });
+        }
+    });
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Single-worker reference evolution with the same Dirichlet semantics —
+/// used by tests and by the thermal case study's "Naive" row.
+pub fn reference_evolution(
+    core: &Field,
+    spec: &StencilSpec,
+    total_steps: usize,
+    tb: usize,
+    boundary: f64,
+) -> Field {
+    assert_eq!(total_steps % tb, 0);
+    let halo = spec.radius * tb;
+    let mut global = core.pad(halo, boundary);
+    for _ in 0..total_steps / tb {
+        let out = crate::stencil::reference::block(&global, spec, tb);
+        global.paste(&vec![halo; core.ndim()], &out);
+    }
+    global.unpad(halo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::NativeWorker;
+    use crate::stencil::spec;
+
+    fn native(name: &str) -> Box<dyn Worker> {
+        Box::new(NativeWorker::new(crate::engine::by_name(name, 1).unwrap(), 1 << 30))
+    }
+
+    #[test]
+    fn hetero_run_matches_reference_evolution() {
+        for bench in ["heat1d", "heat2d", "box2d25p", "heat3d"] {
+            let s = spec::get(bench).unwrap();
+            let mut shape = vec![24usize];
+            shape.extend(vec![10usize; s.ndim - 1]);
+            let core = Field::random(&shape, 17);
+            let tb = 2;
+            let sched = Scheduler {
+                spec: s.clone(),
+                tb,
+                workers: vec![native("simd"), native("autovec"), native("tetris-cpu")],
+                partition: Partition { unit: 4, shares: vec![2, 1, 3] },
+                comm_model: CommModel::default(),
+            };
+            let (got, metrics) = sched.run(&core, 8, 0.5).unwrap();
+            let want = reference_evolution(&core, &s, 8, tb, 0.5);
+            assert!(
+                got.allclose(&want, 1e-12, 1e-14),
+                "{bench}: maxdiff={}",
+                got.max_abs_diff(&want)
+            );
+            assert_eq!(metrics.blocks, 4);
+            assert_eq!(metrics.comm.messages, 2 * 4); // 2 boundaries x 4 blocks
+        }
+    }
+
+    #[test]
+    fn single_worker_covers_domain() {
+        let s = spec::get("heat2d").unwrap();
+        let core = Field::random(&[16, 8], 18);
+        let sched = Scheduler {
+            spec: s.clone(),
+            tb: 1,
+            workers: vec![native("naive")],
+            partition: Partition { unit: 16, shares: vec![1] },
+            comm_model: CommModel::default(),
+        };
+        let (got, m) = sched.run(&core, 3, 0.0).unwrap();
+        let want = reference_evolution(&core, &s, 3, 1, 0.0);
+        assert!(got.allclose(&want, 1e-12, 0.0));
+        assert_eq!(m.comm.messages, 0); // no internal boundary
+    }
+
+    #[test]
+    fn rejects_partition_mismatch() {
+        let s = spec::get("heat1d").unwrap();
+        let core = Field::random(&[20], 19);
+        let sched = Scheduler {
+            spec: s.clone(),
+            tb: 1,
+            workers: vec![native("naive")],
+            partition: Partition { unit: 4, shares: vec![3] }, // 12 != 20
+            comm_model: CommModel::default(),
+        };
+        assert!(sched.run(&core, 1, 0.0).is_err());
+    }
+
+    #[test]
+    fn rejects_non_multiple_steps() {
+        let s = spec::get("heat1d").unwrap();
+        let core = Field::random(&[8], 20);
+        let sched = Scheduler {
+            spec: s.clone(),
+            tb: 4,
+            workers: vec![native("naive")],
+            partition: Partition { unit: 8, shares: vec![1] },
+            comm_model: CommModel::default(),
+        };
+        assert!(sched.run(&core, 6, 0.0).is_err());
+    }
+
+    #[test]
+    fn boundary_value_is_respected() {
+        // An all-boundary-value field must stay constant.
+        let s = spec::get("heat2d").unwrap();
+        let core = Field::full(&[12, 12], 1.5);
+        let sched = Scheduler {
+            spec: s.clone(),
+            tb: 2,
+            workers: vec![native("simd"), native("simd")],
+            partition: Partition { unit: 6, shares: vec![1, 1] },
+            comm_model: CommModel::default(),
+        };
+        let (got, _) = sched.run(&core, 4, 1.5).unwrap();
+        assert!((got.min() - 1.5).abs() < 1e-12 && (got.max() - 1.5).abs() < 1e-12);
+    }
+}

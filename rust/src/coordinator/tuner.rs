@@ -1,0 +1,190 @@
+//! Auto-tuning computation scheduling (paper §5.2).
+//!
+//! "In the startup phase … the computation time taken by the first
+//! iteration … is recorded as part of a profile initialization.  This
+//! profile is employed as the input to the scheduler for performing a
+//! balanced partition."  Exactly that: [`profile_workers`] times one
+//! unit-slab block per worker, [`tune`] converts the profile into a
+//! capacity-respecting balanced partition, and [`retune`] refines it
+//! from measured per-block times (architecture-aware rebalance).
+
+use anyhow::Result;
+
+use crate::stencil::{Field, StencilSpec};
+
+use super::partition::{capacity_units, Partition};
+use super::worker::Worker;
+
+/// Seconds per unit-slab block for each worker (the startup profile).
+pub fn profile_workers(
+    workers: &[Box<dyn Worker>],
+    spec: &StencilSpec,
+    unit_core: &[usize],
+    tb: usize,
+    reps: usize,
+) -> Result<Vec<f64>> {
+    let halo = spec.radius * tb;
+    let shape: Vec<usize> = unit_core.iter().map(|n| n + 2 * halo).collect();
+    let input = Field::random(&shape, 0xBEEF);
+    let mut out = Vec::with_capacity(workers.len());
+    for w in workers {
+        // warmup (compile caches, page-in), then median of `reps`.
+        w.run_slab(spec, &input, tb)?;
+        let mut samples: Vec<f64> = (0..reps.max(1))
+            .map(|_| {
+                let t0 = std::time::Instant::now();
+                let _ = w.run_slab(spec, &input, tb);
+                t0.elapsed().as_secs_f64()
+            })
+            .collect();
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out.push(samples[samples.len() / 2].max(1e-12));
+    }
+    Ok(out)
+}
+
+/// Balanced partition from a profile: weight_i = 1 / t_i, clamped by each
+/// worker's memory capacity (the squeezer).
+pub fn tune(
+    unit: usize,
+    units: usize,
+    rest_cells: usize,
+    profile_secs: &[f64],
+    workers: &[Box<dyn Worker>],
+) -> Partition {
+    let weights: Vec<f64> = profile_secs.iter().map(|t| 1.0 / t.max(1e-12)).collect();
+    let caps: Vec<usize> = workers
+        .iter()
+        .map(|w| capacity_units(w.mem_capacity(), unit, rest_cells))
+        .collect();
+    Partition::balanced(unit, units, &weights, &caps)
+}
+
+/// One rebalance iteration from measured per-block busy times: the new
+/// weight is the worker's measured throughput share / t_i.
+pub fn retune(
+    partition: &Partition,
+    measured_secs: &[f64],
+    workers: &[Box<dyn Worker>],
+    rest_cells: usize,
+) -> Partition {
+    assert_eq!(partition.shares.len(), measured_secs.len());
+    let weights: Vec<f64> = partition
+        .shares
+        .iter()
+        .zip(measured_secs)
+        .map(|(&s, &t)| {
+            if s == 0 {
+                // never measured: keep a small exploration weight
+                0.25 / t.max(1e-12)
+            } else {
+                s as f64 / t.max(1e-12)
+            }
+        })
+        .collect();
+    let caps: Vec<usize> = workers
+        .iter()
+        .map(|w| capacity_units(w.mem_capacity(), partition.unit, rest_cells))
+        .collect();
+    Partition::balanced(partition.unit, partition.total_units(), &weights, &caps)
+}
+
+/// Convergence driver: retune until the expected per-block times differ by
+/// less than `tol` relatively, or `max_iters`.  Returns the partition and
+/// the number of iterations taken.
+pub fn converge(
+    mut partition: Partition,
+    per_unit_secs: &[f64],
+    workers: &[Box<dyn Worker>],
+    rest_cells: usize,
+    tol: f64,
+    max_iters: usize,
+) -> (Partition, usize) {
+    for it in 0..max_iters {
+        let times: Vec<f64> = partition
+            .shares
+            .iter()
+            .zip(per_unit_secs)
+            .map(|(&s, &t)| s as f64 * t)
+            .collect();
+        let tmax = times.iter().cloned().fold(0.0, f64::max);
+        let tmin = times
+            .iter()
+            .cloned()
+            .filter(|&t| t > 0.0)
+            .fold(f64::INFINITY, f64::min);
+        if tmax <= 0.0 || (tmax - tmin) / tmax <= tol {
+            return (partition, it);
+        }
+        let next = retune(&partition, &times, workers, rest_cells);
+        if next == partition {
+            return (partition, it);
+        }
+        partition = next;
+    }
+    (partition, max_iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::NativeWorker;
+    use crate::stencil::spec;
+
+    fn workers(caps: &[usize]) -> Vec<Box<dyn Worker>> {
+        caps.iter()
+            .map(|&c| {
+                Box::new(NativeWorker::new(crate::engine::by_name("simd", 1).unwrap(), c))
+                    as Box<dyn Worker>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn profile_returns_positive_times() {
+        let s = spec::get("heat2d").unwrap();
+        let ws = workers(&[1 << 30, 1 << 30]);
+        let p = profile_workers(&ws, &s, &[8, 8], 2, 3).unwrap();
+        assert_eq!(p.len(), 2);
+        assert!(p.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn tune_weights_by_inverse_time() {
+        let ws = workers(&[1 << 30, 1 << 30]);
+        // worker 1 is 3x faster
+        let p = tune(4, 8, 64, &[3e-3, 1e-3], &ws);
+        assert_eq!(p.total_units(), 8);
+        assert_eq!(p.shares, vec![2, 6]);
+    }
+
+    #[test]
+    fn tune_respects_capacity() {
+        // fast worker limited to ~2 units: 2 units x (3*4*64*8)B = 12 KiB
+        let ws = workers(&[1 << 30, 2 * 3 * 4 * 64 * 8]);
+        let p = tune(4, 8, 64, &[3e-3, 1e-3], &ws);
+        assert_eq!(p.shares, vec![6, 2]);
+    }
+
+    #[test]
+    fn converge_reaches_balance() {
+        let ws = workers(&[1 << 30, 1 << 30]);
+        let start = Partition { unit: 1, shares: vec![15, 1] };
+        // per-unit: worker1 4x faster
+        let (p, iters) = converge(start, &[4e-3, 1e-3], &ws, 64, 0.26, 10);
+        // balanced split is ~(3.2, 12.8): within tol of equal times
+        let t0 = p.shares[0] as f64 * 4e-3;
+        let t1 = p.shares[1] as f64 * 1e-3;
+        assert!((t0 - t1).abs() / t0.max(t1) <= 0.26, "{p:?} {t0} {t1} after {iters}");
+        assert_eq!(p.total_units(), 16);
+    }
+
+    #[test]
+    fn retune_keeps_total() {
+        let ws = workers(&[1 << 30, 1 << 30]);
+        let p = Partition { unit: 2, shares: vec![5, 5] };
+        let q = retune(&p, &[0.010, 0.002], &ws, 64);
+        assert_eq!(q.total_units(), 10);
+        assert!(q.shares[1] > q.shares[0]);
+    }
+}

@@ -1,0 +1,191 @@
+//! Heterogeneous workers: the compute backends the scheduler coordinates.
+//!
+//! Two worker species stand in for the paper's CPU and GPU (DESIGN.md
+//! §Hardware-Adaptation):
+//! * [`NativeWorker`] — any in-process CPU [`Engine`] (Tetris (CPU),
+//!   or a baseline engine for ablations);
+//! * [`XlaWorker`] — executes the AOT-compiled PJRT artifact, one
+//!   unit-slab per invocation (the accelerator stand-in; its artifacts
+//!   embed the Pallas temporal-block / MXU kernels).
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::runtime::{ArtifactMeta, XlaService};
+use crate::stencil::{Field, StencilSpec};
+
+/// A compute backend with the valid-mode slab contract: input slab
+/// carries a `radius*steps` ghost ring on every side.
+pub trait Worker: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Memory capacity in bytes (for the memory squeezer).
+    fn mem_capacity(&self) -> usize;
+
+    /// Advance a slab `steps` fused steps (valid mode).
+    fn run_slab(&self, spec: &StencilSpec, input: &Field, steps: usize) -> Result<Field>;
+
+    /// Steps the worker's backend fuses per block.
+    fn preferred_tb(&self) -> usize {
+        1
+    }
+}
+
+/// In-process CPU engine worker.
+pub struct NativeWorker {
+    pub engine: Box<dyn Engine>,
+    pub capacity: usize,
+}
+
+impl NativeWorker {
+    pub fn new(engine: Box<dyn Engine>, capacity: usize) -> Self {
+        NativeWorker { engine, capacity }
+    }
+}
+
+impl Worker for NativeWorker {
+    fn name(&self) -> String {
+        format!("native:{}", self.engine.name())
+    }
+
+    fn mem_capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn run_slab(&self, spec: &StencilSpec, input: &Field, steps: usize) -> Result<Field> {
+        Ok(self.engine.block(spec, input, steps))
+    }
+
+    fn preferred_tb(&self) -> usize {
+        self.engine.preferred_tb()
+    }
+}
+
+/// PJRT artifact worker: the slab is processed unit-by-unit with the
+/// fixed-shape executable (each unit is one memory-level tetromino).
+/// Jobs go through the [`XlaService`] device queue, which serializes
+/// execution exactly like a single accelerator stream.
+pub struct XlaWorker {
+    pub service: XlaService,
+    pub meta: ArtifactMeta,
+    pub capacity: usize,
+}
+
+impl XlaWorker {
+    pub fn new(service: XlaService, artifact: &str, capacity: usize) -> Result<Self> {
+        let meta = service.meta(artifact)?.clone();
+        Ok(XlaWorker { service, meta, capacity })
+    }
+
+    /// Unit rows along dim 0.
+    pub fn unit(&self) -> usize {
+        self.meta.unit_core[0]
+    }
+}
+
+impl Worker for XlaWorker {
+    fn name(&self) -> String {
+        format!("xla:{}", self.meta.name)
+    }
+
+    fn mem_capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn run_slab(&self, spec: &StencilSpec, input: &Field, steps: usize) -> Result<Field> {
+        let meta = &self.meta;
+        anyhow::ensure!(
+            steps == meta.steps,
+            "{}: artifact fuses {} steps, scheduler asked {steps}",
+            meta.name,
+            meta.steps
+        );
+        let halo = spec.radius * steps;
+        let nd = input.ndim();
+        let unit = self.unit();
+        let slab_core0 = input.shape()[0] - 2 * halo;
+        anyhow::ensure!(
+            slab_core0 % unit == 0,
+            "slab rows {slab_core0} not unit-aligned (unit {unit})"
+        );
+        let rest_core: Vec<usize> = meta.unit_core[1..].to_vec();
+        anyhow::ensure!(
+            input.shape()[1..]
+                .iter()
+                .zip(&rest_core)
+                .all(|(&a, &b)| a == b + 2 * halo),
+            "{}: slab rest shape {:?} incompatible with artifact {:?}",
+            meta.name,
+            &input.shape()[1..],
+            rest_core
+        );
+        let mut out_shape = vec![slab_core0];
+        out_shape.extend(&rest_core);
+        let mut out = Field::zeros(&out_shape);
+        for j in 0..slab_core0 / unit {
+            let mut off = vec![j * unit];
+            off.extend(vec![0usize; nd - 1]);
+            let unit_in = input.extract(&off, &meta.input_shape);
+            let unit_out = self.service.run(&meta.name, &unit_in)?;
+            out.paste(&off, &unit_out);
+        }
+        Ok(out)
+    }
+
+    fn preferred_tb(&self) -> usize {
+        self.meta.steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::{reference, spec};
+
+    #[test]
+    fn native_worker_runs_engine() {
+        let s = spec::get("heat2d").unwrap();
+        let w = NativeWorker::new(crate::engine::by_name("simd", 1).unwrap(), 1 << 30);
+        let u = Field::random(&[14, 14], 5);
+        let got = w.run_slab(&s, &u, 2).unwrap();
+        assert!(got.allclose(&reference::block(&u, &s, 2), 1e-13, 0.0));
+        assert_eq!(w.name(), "native:simd");
+    }
+
+    fn service() -> Option<XlaService> {
+        for dir in ["artifacts", "../artifacts"] {
+            if std::path::Path::new(dir).join("manifest.json").exists() {
+                let m = crate::runtime::Manifest::load(dir).unwrap();
+                return XlaService::spawn(m).ok();
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn xla_worker_unit_slabs() {
+        let Some(svc) = service() else { return };
+        let s = spec::get("heat2d").unwrap();
+        let w = XlaWorker::new(svc, "heat2d_block", 1 << 30).unwrap();
+        let halo = w.meta.halo;
+        // Two-unit slab: 128 core rows + halo, full rest width.
+        let shape = vec![128 + 2 * halo, 256 + 2 * halo];
+        let u = Field::random(&shape, 6);
+        let got = w.run_slab(&s, &u, w.meta.steps).unwrap();
+        let want = reference::block(&u, &s, w.meta.steps);
+        assert!(
+            got.allclose(&want, 1e-12, 1e-14),
+            "maxdiff={}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn xla_worker_rejects_wrong_steps() {
+        let Some(svc) = service() else { return };
+        let s = spec::get("heat2d").unwrap();
+        let w = XlaWorker::new(svc, "heat2d_block", 1 << 30).unwrap();
+        let u = Field::random(&[70, 262], 7);
+        assert!(w.run_slab(&s, &u, 999).is_err());
+    }
+}

@@ -1,0 +1,34 @@
+//! Naive engine — the paper's unoptimized baseline (Table 3 "Naive").
+//!
+//! Per-cell scalar tap loop, one full sweep (and one full HBM round-trip)
+//! per time step; no tiling, no vectorization-friendly structure.
+
+use crate::stencil::{reference, Field, StencilSpec};
+
+use super::Engine;
+
+pub struct NaiveEngine;
+
+impl Engine for NaiveEngine {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn block(&self, spec: &StencilSpec, input: &Field, steps: usize) -> Field {
+        reference::block(input, spec, steps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::spec;
+
+    #[test]
+    fn matches_reference_by_construction() {
+        let s = spec::get("heat2d").unwrap();
+        let u = Field::random(&[14, 14], 1);
+        let out = NaiveEngine.block(&s, &u, 2);
+        assert_eq!(out.shape(), &[10, 10]);
+    }
+}

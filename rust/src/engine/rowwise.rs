@@ -1,0 +1,277 @@
+//! Row-decomposed inner loops shared by the CPU engines.
+//!
+//! A valid-mode step over an N-d array decomposes into independent 1-d
+//! output rows (the innermost dimension); every tap contributes one
+//! *contiguous* source segment per row.  Two inner-loop strategies:
+//!
+//! * [`axpy_step`] — tap-outer: one axpy pass over the row per tap.
+//!   Simple, vectorizes, but writes the output row `points` times.
+//! * [`fused_step`] — the Vector-Skewed-Swizzling adaptation: cell-block
+//!   outer, taps inner, accumulating in a register block and writing the
+//!   row exactly once.  No gather, no cross-lane shuffle: every tap load
+//!   is a contiguous slice aligned to the accumulator slots (the paper's
+//!   "conflict-free vectorized pipeline" — see DESIGN.md).
+
+use crate::stencil::{Field, StencilSpec};
+
+use super::FlatTaps;
+
+/// y += c * x over contiguous slices (compiler-vectorized FMA chain).
+#[inline]
+pub fn axpy(dst: &mut [f64], c: f64, src: &[f64]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += c * s;
+    }
+}
+
+/// Iterate output rows of a valid step: calls `f(dst_row_start, src_base)`
+/// where `src_base` is the flat index in the extended array of the cell
+/// that tap-offset 0 reads for the row's first output.
+pub fn for_each_row(
+    ext_shape: &[usize],
+    core_shape: &[usize],
+    mut f: impl FnMut(usize, usize),
+) {
+    let nd = ext_shape.len();
+    if core_shape.iter().any(|&n| n == 0) {
+        return; // empty core: nothing to iterate
+    }
+    let mut ext_strides = vec![1usize; nd];
+    for i in (0..nd - 1).rev() {
+        ext_strides[i] = ext_strides[i + 1] * ext_shape[i + 1];
+    }
+    let mut core_strides = vec![1usize; nd];
+    for i in (0..nd - 1).rev() {
+        core_strides[i] = core_strides[i + 1] * core_shape[i + 1];
+    }
+    let outer: usize = core_shape[..nd - 1].iter().product::<usize>().max(1);
+    let mut idx = vec![0usize; nd.saturating_sub(1)];
+    for _ in 0..outer {
+        let mut src = 0usize;
+        let mut dst = 0usize;
+        for k in 0..nd - 1 {
+            src += idx[k] * ext_strides[k];
+            dst += idx[k] * core_strides[k];
+        }
+        f(dst, src);
+        for k in (0..nd - 1).rev() {
+            idx[k] += 1;
+            if idx[k] < core_shape[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+}
+
+/// One valid step, tap-outer axpy strategy.
+pub fn axpy_step(src: &Field, spec: &StencilSpec, taps: &FlatTaps) -> Field {
+    let r = spec.radius;
+    let core: Vec<usize> = src.shape().iter().map(|n| n - 2 * r).collect();
+    let w = *core.last().unwrap();
+    let mut out = Field::zeros(&core);
+    let sdata = src.data();
+    let odata = out.data_mut();
+    for_each_row(src.shape(), &core, |dst0, src0| {
+        let dst_row = &mut odata[dst0..dst0 + w];
+        for (off, c) in taps.offs.iter().zip(&taps.coeffs) {
+            let s0 = (src0 as isize + off) as usize;
+            axpy(dst_row, *c, &sdata[s0..s0 + w]);
+        }
+    });
+    out
+}
+
+const BLK: usize = 8;
+
+/// One valid step over a row: fused single-write-pass inner loop.
+#[inline]
+pub fn fused_row(dst_row: &mut [f64], sdata: &[f64], src0: usize, taps: &FlatTaps) {
+    let w = dst_row.len();
+    let mut x = 0usize;
+    // 8-wide register blocks: accumulate all taps, write once.
+    while x + BLK <= w {
+        let mut acc = [0.0f64; BLK];
+        for (off, c) in taps.offs.iter().zip(&taps.coeffs) {
+            let s0 = (src0 as isize + off) as usize + x;
+            let seg = &sdata[s0..s0 + BLK];
+            for j in 0..BLK {
+                acc[j] += c * seg[j];
+            }
+        }
+        dst_row[x..x + BLK].copy_from_slice(&acc);
+        x += BLK;
+    }
+    // scalar tail
+    while x < w {
+        let mut acc = 0.0;
+        for (off, c) in taps.offs.iter().zip(&taps.coeffs) {
+            let s0 = (src0 as isize + off) as usize + x;
+            acc += c * sdata[s0];
+        }
+        dst_row[x] = acc;
+        x += 1;
+    }
+}
+
+/// One valid step, fused strategy (single write pass per row).
+pub fn fused_step(src: &Field, spec: &StencilSpec, taps: &FlatTaps) -> Field {
+    let r = spec.radius;
+    let core: Vec<usize> = src.shape().iter().map(|n| n - 2 * r).collect();
+    let w = *core.last().unwrap();
+    let mut out = Field::zeros(&core);
+    let sdata = src.data();
+    let odata = out.data_mut();
+    for_each_row(src.shape(), &core, |dst0, src0| {
+        fused_row(&mut odata[dst0..dst0 + w], sdata, src0, taps);
+    });
+    out
+}
+
+/// One valid step restricted to dim-0 output range [lo, hi), writing into
+/// an existing core-shaped `dst` (other cells untouched).  Handles the 1-D
+/// case (where dim 0 *is* the row dimension) correctly.
+pub fn step_range_dim0(
+    src: &Field,
+    spec: &StencilSpec,
+    taps: &FlatTaps,
+    dst: &mut Field,
+    lo: usize,
+    hi: usize,
+    fused: bool,
+) {
+    let r = spec.radius;
+    let core: Vec<usize> = src.shape().iter().map(|n| n - 2 * r).collect();
+    debug_assert_eq!(dst.shape(), &core[..]);
+    debug_assert!(hi <= core[0]);
+    if lo >= hi {
+        return;
+    }
+    let sdata = src.data();
+    let nd = src.ndim();
+    if nd == 1 {
+        let odata = dst.data_mut();
+        let w = hi - lo;
+        if fused {
+            fused_row_off(&mut odata[lo..hi], sdata, lo, taps);
+        } else {
+            for (off, c) in taps.offs.iter().zip(&taps.coeffs) {
+                let s0 = (lo as isize + off) as usize;
+                axpy(&mut odata[lo..hi], *c, &sdata[s0..s0 + w]);
+            }
+        }
+        return;
+    }
+    let w = *core.last().unwrap();
+    let mut sub_ext = src.shape().to_vec();
+    sub_ext[0] = (hi - lo) + 2 * r;
+    let mut sub_core = core.clone();
+    sub_core[0] = hi - lo;
+    let ext_stride0: usize = src.shape()[1..].iter().product();
+    let core_stride0: usize = core[1..].iter().product();
+    let odata = dst.data_mut();
+    for_each_row(&sub_ext, &sub_core, |dst0, src0| {
+        let d = dst0 + lo * core_stride0;
+        let s = src0 + lo * ext_stride0;
+        if fused {
+            fused_row(&mut odata[d..d + w], sdata, s, taps);
+        } else {
+            for (off, c) in taps.offs.iter().zip(&taps.coeffs) {
+                let s0 = (s as isize + off) as usize;
+                axpy(&mut odata[d..d + w], *c, &sdata[s0..s0 + w]);
+            }
+        }
+    });
+}
+
+/// fused_row variant whose source base is a plain element offset (1-D).
+#[inline]
+fn fused_row_off(dst_row: &mut [f64], sdata: &[f64], src0: usize, taps: &FlatTaps) {
+    fused_row(dst_row, sdata, src0, taps);
+}
+
+/// One valid step of the dim-0 slab [x0, x1) of `src`, WITHOUT
+/// materializing the slab: returns a fresh field of shape
+/// ((x1-x0) - 2r, rest - 2r).  Equivalent to
+/// `fused_step(&src.extract(slab))` minus the extract copy — the
+/// level-0-copy elimination of the tessellation perf pass.
+pub fn fused_step_slab(
+    src: &Field,
+    spec: &StencilSpec,
+    taps: &FlatTaps,
+    x0: usize,
+    x1: usize,
+    fused: bool,
+) -> Field {
+    let r = spec.radius;
+    debug_assert!(x1 <= src.shape()[0] && x1 - x0 >= 2 * r);
+    let mut out_shape = vec![(x1 - x0) - 2 * r];
+    out_shape.extend(src.shape()[1..].iter().map(|n| n - 2 * r));
+    let mut out = Field::zeros(&out_shape);
+    if out_shape.iter().any(|&n| n == 0) {
+        return out;
+    }
+    let mut sub_ext = src.shape().to_vec();
+    sub_ext[0] = x1 - x0;
+    let ext_stride0: usize = src.shape()[1..].iter().product::<usize>().max(1);
+    let w = *out_shape.last().unwrap();
+    let sdata = src.data();
+    let odata = out.data_mut();
+    for_each_row(&sub_ext, &out_shape, |dst0, src0| {
+        let s = src0 + x0 * ext_stride0;
+        if fused {
+            fused_row(&mut odata[dst0..dst0 + w], sdata, s, taps);
+        } else {
+            for (off, c) in taps.offs.iter().zip(&taps.coeffs) {
+                let s0 = (s as isize + off) as usize;
+                axpy(&mut odata[dst0..dst0 + w], *c, &sdata[s0..s0 + w]);
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::{reference, spec};
+
+    #[test]
+    fn axpy_basic() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[10.0, 20.0, 30.0]);
+        assert_eq!(y, vec![21.0, 42.0, 63.0]);
+    }
+
+    #[test]
+    fn both_strategies_match_reference() {
+        for s in spec::benchmarks() {
+            let ext: Vec<usize> = (0..s.ndim).map(|_| 11 + 2 * s.radius).collect();
+            let u = Field::random(&ext, 3);
+            let taps = FlatTaps::build(&s, &ext);
+            let want = reference::step(&u, &s);
+            let a = axpy_step(&u, &s, &taps);
+            let f = fused_step(&u, &s, &taps);
+            assert!(a.allclose(&want, 1e-13, 1e-15), "axpy {}", s.name);
+            assert!(f.allclose(&want, 1e-13, 1e-15), "fused {}", s.name);
+        }
+    }
+
+    #[test]
+    fn fused_handles_tail() {
+        // width not a multiple of the register block
+        let s = spec::get("heat1d").unwrap();
+        let u = Field::random(&[13], 4);
+        let taps = FlatTaps::build(&s, &[13]);
+        let want = reference::step(&u, &s);
+        assert!(fused_step(&u, &s, &taps).allclose(&want, 1e-14, 0.0));
+    }
+
+    #[test]
+    fn for_each_row_counts() {
+        let mut rows = 0;
+        for_each_row(&[6, 8, 10], &[4, 6, 8], |_, _| rows += 1);
+        assert_eq!(rows, 4 * 6);
+    }
+}

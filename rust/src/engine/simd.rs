@@ -1,0 +1,54 @@
+//! SIMD engine — the Vector-Skewed-Swizzling adaptation (paper §3.1).
+//!
+//! Fused single-pass rows: an 8-slot register block accumulates every tap
+//! before one store, so (a) the output is written once per step instead of
+//! `points` times, and (b) every tap load is a contiguous slice whose
+//! elements line up with the accumulator slots — the "conflict-free
+//! pipeline" property that skewed tetrominoes buy on AVX2 (no cross-lane
+//! permutes; see DESIGN.md §Hardware-Adaptation).
+
+use crate::stencil::{Field, StencilSpec};
+
+use super::{rowwise, Engine, FlatTaps};
+
+pub struct SimdEngine;
+
+impl Engine for SimdEngine {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn block(&self, spec: &StencilSpec, input: &Field, steps: usize) -> Field {
+        let mut cur = input.clone();
+        for _ in 0..steps {
+            let taps = FlatTaps::build(spec, cur.shape());
+            cur = rowwise::fused_step(&cur, spec, &taps);
+        }
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::{reference, spec};
+
+    #[test]
+    fn matches_reference_all_benchmarks() {
+        for s in spec::benchmarks() {
+            let ext: Vec<usize> = (0..s.ndim).map(|_| 13 + 2 * s.radius * 2).collect();
+            let u = Field::random(&ext, 8);
+            let got = SimdEngine.block(&s, &u, 2);
+            let want = reference::block(&u, &s, 2);
+            assert!(got.allclose(&want, 1e-13, 1e-15), "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn single_step_odd_width() {
+        let s = spec::get("star1d5p").unwrap();
+        let u = Field::random(&[23], 9);
+        let got = SimdEngine.block(&s, &u, 1);
+        assert!(got.allclose(&reference::step(&u, &s), 1e-14, 0.0));
+    }
+}

@@ -1,0 +1,296 @@
+//! Tessellate Tiling — the paper's §4.1 Locality Enhancer, two phases,
+//! zero redundant computation.
+//!
+//! The extended input is cut into leading-dimension slabs (tiles).  Phase
+//! A computes each tile's *triangle tetromino*: `Tb` successive valid
+//! steps confined to the tile, each shrinking by `radius`, producing a
+//! shrinking pyramid of time levels (all levels retained — they are the
+//! triangle's slopes).  Phase B fills the *inverted triangles* between
+//! adjacent tiles: level `t` of the gap at boundary `b` spans
+//! `[b - r*t, b + r*t)` and is computed from level `t-1` of the gap plus
+//! `r`-wide flanks of the two neighbouring pyramids.  Both phases are
+//! embarrassingly parallel within themselves, which is exactly the
+//! concurrency claim of the paper ("all tetrominoes between
+//! synchronizations can execute concurrently without redundant
+//! computation").
+//!
+//! With `fused` inner rows and thread parallelism this is **Tetris
+//! (CPU)**; with tap-outer rows and one thread it is the bare
+//! "Tessellate Tiling" rung of the Fig-12 breakdown.
+
+use crate::stencil::{Field, StencilSpec};
+
+use super::{rowwise, Engine, FlatTaps};
+
+/// Inner-loop strategy for one valid step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Inner {
+    /// Tap-outer axpy rows (pre-swizzling rung of Fig 12).
+    Axpy,
+    /// Fused single-pass rows (Vector Skewed Swizzling adaptation).
+    Fused,
+}
+
+pub struct TessellateEngine {
+    pub inner: Inner,
+    pub threads: usize,
+    /// Tile width along dim 0; None = cache heuristic.
+    pub tile_w: Option<usize>,
+}
+
+impl TessellateEngine {
+    /// Bare tessellation: scalar-ish rows, single thread (Fig 12 rung 2).
+    pub fn scalar() -> Self {
+        TessellateEngine { inner: Inner::Axpy, threads: 1, tile_w: None }
+    }
+
+    /// Tetris (CPU): tessellation + fused rows + multicore.
+    pub fn tetris(threads: usize) -> Self {
+        TessellateEngine { inner: Inner::Fused, threads: threads.max(1), tile_w: None }
+    }
+
+    fn step_once(&self, spec: &StencilSpec, f: &Field) -> Field {
+        let taps = FlatTaps::build(spec, f.shape());
+        match self.inner {
+            Inner::Axpy => rowwise::axpy_step(f, spec, &taps),
+            Inner::Fused => rowwise::fused_step(f, spec, &taps),
+        }
+    }
+
+    /// Tile boundaries along dim 0 of the extended array.  The default
+    /// width targets an L2-sized pyramid: tile_w x rest_cells x 8 B x
+    /// (steps+1 levels) ~ 512 KiB, so phase A stays cache-resident and
+    /// the per-tile bookkeeping amortizes (perf pass: the old fixed
+    /// 256-element width made 1-D tessellation slower than naive).
+    fn boundaries(&self, ext0: usize, halo: usize, rest_cells: usize, steps: usize) -> Vec<usize> {
+        let min_w = (2 * halo).max(1);
+        let budget_bytes = 512 << 10;
+        let auto_w = budget_bytes / (rest_cells.max(1) * 8 * (steps + 1));
+        let want_w = self.tile_w.unwrap_or(auto_w).max(min_w);
+        let ntiles = (ext0 / want_w).max(1);
+        // Even split; every tile keeps width >= min_w because
+        // ntiles <= ext0 / min_w.
+        let ntiles = ntiles.min((ext0 / min_w).max(1));
+        let mut bs = Vec::with_capacity(ntiles + 1);
+        for i in 0..=ntiles {
+            bs.push(i * ext0 / ntiles);
+        }
+        bs
+    }
+}
+
+/// Phase-A pyramid for the tile [x0, x1): `levels[t]` (t >= 1) covers
+/// dim0 `[x0 + r*t, x1 - r*t)` and rest dims `[r*t, Nj - r*t)`.  Level 0
+/// is NOT materialized (perf pass: the tile copy doubled HBM traffic);
+/// level 1 is computed straight off the shared input with offset rows.
+struct Pyramid {
+    /// levels[t-1] = time level t, for t in 1..=steps.
+    levels: Vec<Field>,
+    x0: usize,
+}
+
+impl Pyramid {
+    fn level(&self, t: usize) -> &Field {
+        debug_assert!(t >= 1);
+        &self.levels[t - 1]
+    }
+}
+
+fn build_pyramid(
+    eng: &TessellateEngine,
+    spec: &StencilSpec,
+    input: &Field,
+    x0: usize,
+    x1: usize,
+    steps: usize,
+) -> Pyramid {
+    let taps = FlatTaps::build(spec, input.shape());
+    let fused = eng.inner == Inner::Fused;
+    let mut levels = vec![rowwise::fused_step_slab(input, spec, &taps, x0, x1, fused)];
+    for _ in 1..steps {
+        let next = eng.step_once(spec, levels.last().unwrap());
+        levels.push(next);
+    }
+    Pyramid { levels, x0 }
+}
+
+/// Phase-B inverted triangle at boundary `b` between pyramids `l`/`rp`.
+/// Returns the final-level field covering dim0 `[b - H, b + H)` (ext
+/// coordinates), rest dims equal to the core extent.
+#[allow(clippy::too_many_arguments)]
+fn build_inverted(
+    eng: &TessellateEngine,
+    spec: &StencilSpec,
+    input: &Field,
+    l: &Pyramid,
+    rp: &Pyramid,
+    b: usize,
+    steps: usize,
+    ext: &[usize],
+) -> Field {
+    let r = spec.radius;
+    let nd = ext.len();
+    let input_taps = FlatTaps::build(spec, input.shape());
+    let fused = eng.inner == Inner::Fused;
+    // Level 1 of the gap straight off the input (level 0 is virtual).
+    let mut inv: Field =
+        rowwise::fused_step_slab(input, spec, &input_taps, b - 2 * r, b + 2 * r, fused);
+    for t in 2..=steps {
+        // Source buffer at level t-1: dim0 [b - r*(t+1), b + r*(t+1)),
+        // rest dims [r*(t-1), Nj - r*(t-1)).
+        let rest: Vec<usize> = ext[1..].iter().map(|n| n - 2 * r * (t - 1)).collect();
+        let mut buf_shape = vec![2 * r * (t + 1)];
+        buf_shape.extend(&rest);
+        let mut buf = Field::zeros(&buf_shape);
+
+        // Left flank from l.level(t-1): dim0 [b - r*(t+1), b - r*(t-1)).
+        let lf = l.level(t - 1); // origin dim0 = l.x0 + r*(t-1)
+        let l_origin = l.x0 + r * (t - 1);
+        let mut off = vec![b - r * (t + 1) - l_origin];
+        off.extend(vec![0usize; nd - 1]);
+        let mut shp = vec![2 * r];
+        shp.extend(&rest);
+        buf.paste(&vec![0; nd], &lf.extract(&off, &shp));
+
+        // Middle from inv level t-1: dim0 [b - r*(t-1), b + r*(t-1)).
+        let mut o = vec![2 * r];
+        o.extend(vec![0usize; nd - 1]);
+        buf.paste(&o, &inv);
+
+        // Right flank from rp.level(t-1): dim0 [b + r*(t-1), b + r*(t+1)).
+        let rf = rp.level(t - 1); // origin dim0 = rp.x0 + r*(t-1) = b + r*(t-1)
+        let mut off_r = vec![0usize; nd];
+        off_r[0] = 0;
+        let mut shp_r = vec![2 * r];
+        shp_r.extend(&rest);
+        let mut dst_r = vec![2 * r * t];
+        dst_r.extend(vec![0usize; nd - 1]);
+        buf.paste(&dst_r, &rf.extract(&off_r, &shp_r));
+
+        inv = eng.step_once(spec, &buf);
+    }
+    inv
+}
+
+impl Engine for TessellateEngine {
+    fn name(&self) -> &'static str {
+        match (self.inner, self.threads) {
+            (Inner::Axpy, _) => "tessellate",
+            (Inner::Fused, _) => "tetris-cpu",
+        }
+    }
+
+    fn preferred_tb(&self) -> usize {
+        4
+    }
+
+    fn block(&self, spec: &StencilSpec, input: &Field, steps: usize) -> Field {
+        assert!(steps >= 1);
+        let r = spec.radius;
+        let halo = r * steps;
+        let ext = input.shape().to_vec();
+        let core: Vec<usize> = ext.iter().map(|n| n - 2 * halo).collect();
+        assert!(core.iter().all(|&n| n > 0), "input too small for Tb={steps}");
+        let rest_cells: usize = ext[1..].iter().product::<usize>().max(1);
+        let bs = self.boundaries(ext[0], halo, rest_cells, steps);
+        let ntiles = bs.len() - 1;
+
+        // ---- Phase A: triangle pyramids (parallel over tiles) ----------
+        let pyramids: Vec<Pyramid> = super::parallel_map(self.threads, ntiles, |k| {
+            build_pyramid(self, spec, input, bs[k], bs[k + 1], steps)
+        });
+
+        // ---- Phase B: inverted triangles (parallel over boundaries) ----
+        let inverted: Vec<Field> = super::parallel_map(self.threads, ntiles - 1, |k| {
+            build_inverted(self, spec, input, &pyramids[k], &pyramids[k + 1], bs[k + 1], steps, &ext)
+        });
+
+        // ---- Assemble the output core ----------------------------------
+        let mut out = Field::zeros(&core);
+        for p in &pyramids {
+            let top = p.level(steps); // dim0 [x0 + H, x1 - H)
+            if top.shape().iter().any(|&n| n == 0) {
+                continue;
+            }
+            let mut off = vec![p.x0]; // out dim0 = ext dim0 - H
+            off.extend(vec![0usize; ext.len() - 1]);
+            out.paste(&off, top);
+        }
+        for (k, f) in inverted.iter().enumerate() {
+            let b = bs[k + 1];
+            let mut off = vec![b - 2 * halo]; // [b - H, b + H) - H
+            off.extend(vec![0usize; ext.len() - 1]);
+            out.paste(&off, f);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::{reference, spec};
+
+    #[test]
+    fn matches_reference_all_benchmarks_all_steps() {
+        for s in spec::benchmarks() {
+            for steps in [1usize, 2, 4] {
+                let mut ext: Vec<usize> =
+                    (0..s.ndim).map(|_| 8 + 2 * s.radius * steps).collect();
+                ext[0] = 40 + 2 * s.radius * steps; // several tiles along dim0
+                let u = Field::random(&ext, 21);
+                for eng in [
+                    TessellateEngine { inner: Inner::Fused, threads: 1, tile_w: Some(2 * s.radius * steps) },
+                    TessellateEngine { inner: Inner::Axpy, threads: 1, tile_w: Some(3 * s.radius * steps) },
+                    TessellateEngine::tetris(3),
+                ] {
+                    let got = eng.block(&s, &u, steps);
+                    let want = reference::block(&u, &s, steps);
+                    assert!(
+                        got.allclose(&want, 1e-12, 1e-14),
+                        "{} steps={steps} inner={:?} thr={} maxdiff={}",
+                        s.name,
+                        eng.inner,
+                        eng.threads,
+                        got.max_abs_diff(&want)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_tile_degenerates_to_trapezoid() {
+        let s = spec::get("heat2d").unwrap();
+        let u = Field::random(&[20, 20], 22);
+        let eng = TessellateEngine { inner: Inner::Fused, threads: 1, tile_w: Some(1000) };
+        let got = eng.block(&s, &u, 3);
+        assert!(got.allclose(&reference::block(&u, &s, 3), 1e-13, 0.0));
+    }
+
+    #[test]
+    fn boundaries_respect_min_width() {
+        let eng = TessellateEngine::tetris(2);
+        let bs = eng.boundaries(100, 10, 1, 2);
+        for w in bs.windows(2) {
+            assert!(w[1] - w[0] >= 20, "{bs:?}");
+        }
+        assert_eq!(*bs.first().unwrap(), 0);
+        assert_eq!(*bs.last().unwrap(), 100);
+    }
+
+    #[test]
+    fn parallel_helper_preserves_order() {
+        let v = crate::engine::parallel_map(4, 13, |k| k * k);
+        assert_eq!(v, (0..13).map(|k| k * k).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn many_threads_few_tiles() {
+        let s = spec::get("heat1d").unwrap();
+        let u = Field::random(&[64], 23);
+        let eng = TessellateEngine { inner: Inner::Fused, threads: 16, tile_w: Some(8) };
+        let got = eng.block(&s, &u, 2);
+        assert!(got.allclose(&reference::block(&u, &s, 2), 1e-13, 0.0));
+    }
+}

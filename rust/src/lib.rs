@@ -1,0 +1,32 @@
+//! # Tetris — Stencil Dwarf on heterogeneous workers
+//!
+//! Reproduction of *"Gamify Stencil Dwarf on Cloud for Democratizing
+//! Scientific Computing"* (CS.DC 2023) as a three-layer rust + JAX +
+//! Pallas stack (AOT via PJRT).  See DESIGN.md for the architecture and
+//! the paper-to-module map.
+//!
+//! Layer map:
+//! * [`stencil`] — specs, fields, reference oracle (substrate).
+//! * [`engine`] — optimized CPU engines: tessellate tiling + skewed
+//!   swizzling (the paper's §3.1/§4.1), i.e. **Tetris (CPU)**.
+//! * [`baselines`] — Fig-13 comparator engines (DataReorg, Pluto,
+//!   Folding, Brick, AN5D).
+//! * [`runtime`] — PJRT client executing the AOT artifacts lowered from
+//!   the L1 Pallas kernels (**Tetris (GPU)** stand-in).
+//! * [`coordinator`] — the paper's §5 concurrent scheduler: two-way
+//!   partitioning, auto-tuned balance, batched halo exchange.
+//! * [`model`] — analytical cost models (α+β communication, roofline).
+//! * [`apps`] — thermal-diffusion case study (§6.5), accuracy study.
+//! * [`bench`] — harness that regenerates every paper table/figure.
+
+pub mod apps;
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod engine;
+pub mod model;
+pub mod runtime;
+pub mod stencil;
+pub mod util;
+
+pub use stencil::{Field, StencilSpec};

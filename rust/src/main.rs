@@ -1,0 +1,300 @@
+//! `tetris` — leader CLI for the Tetris stencil stack.
+//!
+//! Subcommands:
+//!   info                      platform + artifact inventory
+//!   validate                  golden-check every AOT artifact via PJRT
+//!   run      --bench B --engine E [--steps N] [--threads T]
+//!   hetero   --bench B [--steps N] [--threads T]
+//!   thermal  [--size N] [--steps N] [--viz DIR]
+//!   accuracy [--blocks K]
+//!   bench    breakdown|sota|scaling|comm|mxu [--scale F] [--threads T]
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use tetris::bench as harness;
+use tetris::coordinator::{CommModel, NativeWorker, Partition, Scheduler};
+use tetris::runtime::XlaService;
+use tetris::stencil::{spec, Field};
+
+/// Minimal `--key value` flag parser (the vendored crate set has no clap).
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn runtime_opt() -> Option<XlaService> {
+    XlaService::spawn_default().ok()
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "info" => cmd_info(),
+        "validate" => cmd_validate(),
+        "run" => cmd_run(&args),
+        "hetero" => cmd_hetero(&args),
+        "thermal" => cmd_thermal(&args),
+        "accuracy" => cmd_accuracy(&args),
+        "bench" => cmd_bench(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `tetris help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "tetris — Stencil Dwarf on heterogeneous workers\n\
+         \n\
+         USAGE: tetris <subcommand> [flags]\n\
+         \n\
+         info                          platform + artifact inventory\n\
+         validate                      golden-check every AOT artifact\n\
+         run    --bench B --engine E   single-engine run  [--steps N --threads T --scale F]\n\
+         hetero --bench B              auto-tuned CPU+XLA run [--steps N --threads T]\n\
+         thermal [--size N --steps N --viz DIR --threads T]   Table-3 case study\n\
+         accuracy [--blocks K]         Table-4 FP64-vs-FP32 study\n\
+         bench  breakdown|sota|scaling|comm|mxu [--scale F --threads T]\n\
+         \n\
+         engines: {}\n\
+         baselines: {}",
+        tetris::engine::ENGINE_NAMES.join(", "),
+        tetris::baselines::BASELINE_NAMES.join(", ")
+    );
+}
+
+fn cmd_info() -> Result<()> {
+    match XlaService::spawn_default() {
+        Ok(rt) => {
+            println!("artifact dir:  {:?}", rt.manifest().dir);
+            println!("artifacts ({}):", rt.manifest().artifacts.len());
+            for (name, a) in &rt.manifest().artifacts {
+                println!(
+                    "  {name:24} {:>12} -> {:>12}  steps={} dtype={}",
+                    format!("{:?}", a.input_shape),
+                    format!("{:?}", a.output_shape),
+                    a.steps,
+                    a.dtype
+                );
+            }
+        }
+        Err(e) => println!("no artifacts loaded ({e}); run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn cmd_validate() -> Result<()> {
+    let rt = XlaService::spawn_default().context("artifacts required: run `make artifacts`")?;
+    let names: Vec<String> = rt.artifact_names();
+    let mut failed = 0;
+    for name in names {
+        match rt.validate(&name) {
+            Ok((em, el2)) => {
+                let ok = em < 1e-6 && el2 < 1e-6;
+                if !ok {
+                    failed += 1;
+                }
+                println!(
+                    "  {name:24} mean_err={em:.2e} l2_err={el2:.2e} {}",
+                    if ok { "OK" } else { "FAIL" }
+                );
+            }
+            Err(e) => {
+                failed += 1;
+                println!("  {name:24} ERROR: {e}");
+            }
+        }
+    }
+    if failed > 0 {
+        bail!("{failed} artifacts failed golden validation");
+    }
+    println!("all artifacts validated against python goldens");
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let bench = args.str("bench", "heat2d");
+    let engine = args.str("engine", "tetris-cpu");
+    let threads = args.get("threads", 1usize);
+    let scale = args.get("scale", 0.5f64);
+    let s = spec::get(&bench).with_context(|| format!("unknown bench {bench}"))?;
+    let (core, mut steps, tb) = harness::scaled_problem(&bench, scale);
+    steps = args.get("steps", steps);
+    steps -= steps % tb;
+    let eng = tetris::engine::by_name(&engine, threads)
+        .or_else(|| tetris::baselines::by_name(&engine))
+        .with_context(|| format!("unknown engine {engine}"))?;
+    let (g, d) = harness::time_engine(eng.as_ref(), &s, &core, steps, tb);
+    println!(
+        "{bench} x {steps} steps on {engine} (threads={threads}): {:.4} GStencils/s ({})",
+        g,
+        tetris::util::timer::fmt_duration(d)
+    );
+    Ok(())
+}
+
+fn cmd_hetero(args: &Args) -> Result<()> {
+    let bench = args.str("bench", "heat2d");
+    let threads = args.get("threads", 1usize);
+    let rt = XlaService::spawn_default().context("hetero needs artifacts: run `make artifacts`")?;
+    let (sched, global) = harness::hetero_scheduler(&rt, &bench, threads)?;
+    let steps = {
+        let s = args.get("steps", sched.tb * 4);
+        s - s % sched.tb
+    };
+    let core = Field::random(&global, 1);
+    let (out, metrics) = sched.run(&core, steps, 0.0)?;
+    println!("{}", metrics.report(&sched.comm_model));
+    println!("final field mean={:.6} l2={:.3}", out.mean(), out.l2());
+    Ok(())
+}
+
+fn cmd_thermal(args: &Args) -> Result<()> {
+    let rt = runtime_opt();
+    let size = args.get("size", 384usize);
+    let tb = rt.as_ref().map(|r| r.manifest().thermal_tb).unwrap_or(8);
+    let steps = {
+        let s = args.get("steps", 40 * tb);
+        s - s % tb
+    };
+    let threads = args.get("threads", 1usize);
+    let (rows, fields) = tetris::apps::thermal::run_table3(rt.as_ref(), size, steps, tb, threads)?;
+    println!("== Table 3: thermal diffusion ({size}x{size}, {steps} steps) ==");
+    println!("{:<14} {:>10} {:>14} {:>9} {:>12}", "method", "time(s)", "GStencils/s", "speedup", "center(°C)");
+    for r in &rows {
+        println!(
+            "{:<14} {:>10.3} {:>14.4} {:>8.2}x {:>12.2}  (maxdiff vs naive {:.2e})",
+            r.method, r.seconds, r.gstencils, r.speedup, r.final_center, r.max_diff_vs_naive
+        );
+    }
+    if let Some(dir) = args.flags.get("viz") {
+        std::fs::create_dir_all(dir)?;
+        let init = tetris::apps::thermal::gaussian_plate(size);
+        tetris::apps::viz::save_heatmap(&init, 25.0, 100.0, format!("{dir}/before.ppm"))?;
+        if let Some((_, last)) = fields.last() {
+            tetris::apps::viz::save_heatmap(last, 25.0, 100.0, format!("{dir}/after.ppm"))?;
+        }
+        println!("wrote {dir}/before.ppm, {dir}/after.ppm");
+    }
+    Ok(())
+}
+
+fn cmd_accuracy(args: &Args) -> Result<()> {
+    let rt = runtime_opt();
+    let blocks = args.get("blocks", 25usize);
+    let n = rt
+        .as_ref()
+        .and_then(|r| r.manifest().thermal_core.first().copied())
+        .unwrap_or(96);
+    let rep = tetris::apps::accuracy::run_accuracy(rt.as_ref(), n, blocks)?;
+    println!(
+        "== Table 4: FP64 vs FP32 deviation after {} steps ({}, {}x{}) ==",
+        rep.steps,
+        if rep.used_artifacts { "PJRT artifacts" } else { "rust fallback" },
+        n,
+        n
+    );
+    println!("{:<18} {:>8} {:>10} {:>8}", "|error| bucket", "<0.1°C", "0.1-1.0°C", ">1.0°C");
+    println!(
+        "{:<18} {:>7.1}% {:>9.1}% {:>7.1}%",
+        "FP32 vs FP64", rep.fp32_buckets[0], rep.fp32_buckets[1], rep.fp32_buckets[2]
+    );
+    if let Some(dir) = args.flags.get("viz") {
+        std::fs::create_dir_all(dir)?;
+        tetris::apps::viz::save_heatmap(&rep.fp32, 25.0, 100.0, format!("{dir}/fp32.ppm"))?;
+        tetris::apps::viz::save_error_map(&rep.fp64, &rep.fp32, 0.1, format!("{dir}/error.ppm"))?;
+        println!("wrote {dir}/fp32.ppm, {dir}/error.ppm");
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("breakdown");
+    let scale = args.get("scale", 0.25f64);
+    let threads = args.get("threads", 2usize);
+    let rt = runtime_opt();
+    match which {
+        "breakdown" => {
+            harness::run_breakdown(rt.as_ref(), scale, threads);
+        }
+        "sota" => {
+            harness::run_sota(rt.as_ref(), scale, threads);
+        }
+        "scaling" => {
+            harness::run_scaling(rt.as_ref(), scale, threads.max(4));
+        }
+        "comm" => {
+            harness::run_comm();
+        }
+        "mxu" => {
+            let rt = rt.context("mxu bench needs artifacts")?;
+            harness::run_mxu(&rt)?;
+        }
+        other => bail!("unknown bench {other:?}"),
+    }
+    Ok(())
+}
+
+/// Smoke-usable single-worker scheduler for quick CLI experiments.
+#[allow(dead_code)]
+fn single_worker_sched(bench: &str, engine: &str, threads: usize) -> Result<Scheduler> {
+    let s = spec::get(bench).context("bench")?;
+    Ok(Scheduler {
+        spec: s,
+        tb: 2,
+        workers: vec![Box::new(NativeWorker::new(
+            tetris::engine::by_name(engine, threads).context("engine")?,
+            1 << 33,
+        ))],
+        partition: Partition { unit: 8, shares: vec![1] },
+        comm_model: CommModel::default(),
+    })
+}

@@ -1,0 +1,140 @@
+//! Analytical performance models: roofline + TPU kernel estimates.
+//!
+//! Rust mirror of `python/compile/kernels/vmem.py` (same constants, same
+//! arithmetic) so the scheduler and the benches can reason about the
+//! Pallas kernels' structure without Python.  `interpret=True` timings
+//! are CPU-numpy and not a TPU proxy — these estimates are the documented
+//! basis for the DESIGN.md real-TPU performance discussion.
+
+/// Per-core VMEM on contemporary TPU (v4/v5p), bytes.
+pub const VMEM_BYTES: usize = 16 * 1024 * 1024;
+/// MXU systolic edge.
+pub const MXU_EDGE: usize = 128;
+/// HBM bandwidth proxy (B/s) for roofline ratios.
+pub const HBM_BW: f64 = 1.2e12;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KernelEstimate {
+    pub vmem_bytes: usize,
+    pub vmem_fraction: f64,
+    pub flops_per_cell: usize,
+    pub hbm_bytes_per_cell: f64,
+    pub arithmetic_intensity: f64,
+    pub mxu_utilization: f64,
+}
+
+impl KernelEstimate {
+    pub fn fits(&self) -> bool {
+        self.vmem_fraction <= 1.0
+    }
+
+    /// Memory-bound roofline throughput in GStencils/s at `HBM_BW`.
+    pub fn roofline_gstencils(&self) -> f64 {
+        HBM_BW / self.hbm_bytes_per_cell / 1e9
+    }
+}
+
+/// Estimate for the Tb-fused temporal-block kernel (VPU path) — mirrors
+/// `vmem.temporal_estimate`.
+pub fn temporal_estimate(
+    flops_per_cell: usize,
+    radius: usize,
+    tiles: &[usize],
+    steps: usize,
+) -> KernelEstimate {
+    let itemsize = 8usize;
+    let halo = radius * steps;
+    let window: usize = tiles.iter().map(|t| t + 2 * halo).product();
+    let out: usize = tiles.iter().product();
+    let scratch: usize = tiles.iter().map(|t| t + 2 * radius * (steps - 1)).product();
+    let vmem = (window + 2 * scratch) * itemsize;
+    let flops = flops_per_cell * steps;
+    let hbm = itemsize as f64 * (window as f64 / out as f64 + 1.0);
+    KernelEstimate {
+        vmem_bytes: vmem,
+        vmem_fraction: vmem as f64 / VMEM_BYTES as f64,
+        flops_per_cell: flops,
+        hbm_bytes_per_cell: hbm,
+        arithmetic_intensity: flops as f64 / hbm,
+        mxu_utilization: 0.0,
+    }
+}
+
+/// Estimate for the trapezoid-folding banded-matmul kernel — mirrors
+/// `vmem.mxu_estimate`.
+pub fn mxu_estimate(
+    flops_per_cell: usize,
+    radius: usize,
+    dx_slabs: usize,
+    tile_m: usize,
+    ny: usize,
+) -> KernelEstimate {
+    let itemsize = 8usize;
+    let r = radius;
+    let issued = dx_slabs * tile_m * (ny + 2 * r) * ny * 2;
+    let useful = flops_per_cell * tile_m * ny;
+    let pad = (tile_m.div_ceil(MXU_EDGE) * MXU_EDGE) as f64 / tile_m as f64
+        * (ny.div_ceil(MXU_EDGE) * MXU_EDGE) as f64 / ny as f64;
+    let window = (tile_m + 2 * r) * (ny + 2 * r);
+    let bands = (2 * r + 1) * (ny + 2 * r) * ny;
+    let vmem = (window + bands + 2 * tile_m * ny) * itemsize;
+    let hbm = itemsize as f64 * (window as f64 / (tile_m * ny) as f64 + 1.0);
+    KernelEstimate {
+        vmem_bytes: vmem,
+        vmem_fraction: vmem as f64 / VMEM_BYTES as f64,
+        flops_per_cell,
+        hbm_bytes_per_cell: hbm,
+        arithmetic_intensity: issued as f64 / (tile_m * ny) as f64 / hbm,
+        mxu_utilization: (useful as f64 / issued as f64) / pad,
+    }
+}
+
+/// Host-side roofline: measured GStencils/s / memory-bound bound given a
+/// measured stream bandwidth (B/s).  The paper-efficiency figure the
+/// §Perf pass tracks.
+pub fn roofline_efficiency(
+    gstencils: f64,
+    bytes_per_cell_step: f64,
+    stream_bw: f64,
+) -> f64 {
+    let bound = stream_bw / bytes_per_cell_step / 1e9;
+    gstencils / bound
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn temporal_matches_python_example() {
+        // Same numbers as python/tests/test_vmem.py expectations.
+        let e1 = temporal_estimate(10, 1, &[64, 64], 1);
+        let e8 = temporal_estimate(10, 1, &[64, 64], 8);
+        assert_eq!(e8.flops_per_cell, 8 * e1.flops_per_cell);
+        assert!(e8.hbm_bytes_per_cell < 2.0 * e1.hbm_bytes_per_cell);
+        assert!(e8.arithmetic_intensity > 4.0 * e1.arithmetic_intensity);
+        assert!(e1.fits() && e8.fits());
+    }
+
+    #[test]
+    fn mxu_utilization_matches_python() {
+        // box2d25p: flops 50, r=2, 5 slabs, 128x128 tile.
+        let e = mxu_estimate(50, 2, 5, 128, 128);
+        let want = (50.0 * 128.0 * 128.0) / (5.0 * 128.0 * 132.0 * 128.0 * 2.0);
+        assert!((e.mxu_utilization - want).abs() < 1e-12);
+        assert!(e.mxu_utilization > 0.0 && e.mxu_utilization < 1.0);
+    }
+
+    #[test]
+    fn roofline_positive() {
+        let e = temporal_estimate(10, 1, &[64, 256], 4);
+        assert!(e.roofline_gstencils() > 0.0);
+    }
+
+    #[test]
+    fn efficiency_is_ratio() {
+        // 1 GStencil/s against a 16 B/cell, 16 GB/s machine => bound 1.0
+        let eff = roofline_efficiency(0.5, 16.0, 16e9);
+        assert!((eff - 0.5).abs() < 1e-12);
+    }
+}

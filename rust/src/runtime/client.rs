@@ -1,0 +1,243 @@
+//! PJRT execution wrapper: load HLO text artifacts, compile once, execute
+//! many times from the L3 hot path.
+//!
+//! Adapts the pattern of /opt/xla-example/load_hlo: text (not serialized
+//! proto) is the interchange format because jax >= 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids.
+//!
+//! All lowered functions return 1-tuples (aot.py lowers with
+//! `return_tuple=True`), except the stats graphs which return 3-tuples.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::stencil::Field;
+
+use super::manifest::{ArtifactMeta, Manifest};
+
+/// Banded coefficient stack for the trapezoid-folding (MXU) artifacts —
+/// rust twin of `python/compile/kernels/mxu_fold.band_matrices`:
+/// `bands[dx + r, j + r + dy, j] = c[(dx, dy)]`, shape (2r+1, ny+2r, ny).
+pub fn band_matrices(spec: &crate::stencil::StencilSpec, ny: usize) -> Field {
+    let r = spec.radius;
+    let mut f = Field::zeros(&[2 * r + 1, ny + 2 * r, ny]);
+    for (off, c) in &spec.coeffs {
+        let (dx, dy) = (off[0], off[1]);
+        for j in 0..ny {
+            let row = (j as i64 + r as i64 + dy) as usize;
+            f.set(&[(dx + r as i64) as usize, row, j], *c);
+        }
+    }
+    f
+}
+
+/// A compiled artifact ready for execution.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+    /// Pre-marshalled band-stack literal for MXU artifacts (the python
+    /// side can't bake it as a constant: the HLO *text* printer elides
+    /// large constants, so it travels as a runtime parameter instead).
+    bands: Option<xla::Literal>,
+}
+
+impl Executable {
+    /// Execute on an f64 field; returns the (single) f64 output field.
+    pub fn run(&self, input: &Field) -> Result<Field> {
+        anyhow::ensure!(
+            input.shape() == &self.meta.input_shape[..],
+            "{}: input shape {:?} != artifact {:?}",
+            self.meta.name,
+            input.shape(),
+            self.meta.input_shape
+        );
+        let dims: Vec<i64> = input.shape().iter().map(|&n| n as i64).collect();
+        let lit = xla::Literal::vec1(input.data()).reshape(&dims)?;
+        let result = match &self.bands {
+            Some(b) => self.exe.execute::<xla::Literal>(&[lit, b.clone()])?[0][0]
+                .to_literal_sync()?,
+            None => self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?,
+        };
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f64>()?;
+        Ok(Field::from_vec(&self.meta.output_shape, data))
+    }
+
+    /// Execute the f32 thermal variant (converting at the boundary).
+    pub fn run_f32(&self, input: &Field) -> Result<Field> {
+        let dims: Vec<i64> = input.shape().iter().map(|&n| n as i64).collect();
+        let f32_data: Vec<f32> = input.data().iter().map(|&x| x as f32).collect();
+        let lit = xla::Literal::vec1(&f32_data).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f32>()?;
+        Ok(Field::from_vec(
+            &self.meta.output_shape,
+            data.into_iter().map(|x| x as f64).collect(),
+        ))
+    }
+
+    /// Execute a stats graph: returns (mean, min, max).
+    pub fn run_stats(&self, input: &Field) -> Result<(f64, f64, f64)> {
+        let dims: Vec<i64> = input.shape().iter().map(|&n| n as i64).collect();
+        let (m, lo, hi) = if self.meta.dtype == "f32" {
+            let f32_data: Vec<f32> = input.data().iter().map(|&x| x as f32).collect();
+            let lit = xla::Literal::vec1(&f32_data).reshape(&dims)?;
+            let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            let (a, b, c) = result.to_tuple3()?;
+            (
+                a.get_first_element::<f32>()? as f64,
+                b.get_first_element::<f32>()? as f64,
+                c.get_first_element::<f32>()? as f64,
+            )
+        } else {
+            let lit = xla::Literal::vec1(input.data()).reshape(&dims)?;
+            let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            let (a, b, c) = result.to_tuple3()?;
+            (
+                a.get_first_element::<f64>()?,
+                b.get_first_element::<f64>()?,
+                c.get_first_element::<f64>()?,
+            )
+        };
+        Ok((m, lo, hi))
+    }
+}
+
+/// PJRT client + compiled-executable cache.
+///
+/// Compilation happens once per artifact (lazily); executions are the
+/// hot path.  The cache is behind a mutex so worker threads can share
+/// one runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// CPU-PJRT runtime over the default artifact directory.
+    pub fn new() -> Result<Runtime> {
+        Self::with_manifest(Manifest::load_default()?)
+    }
+
+    pub fn with_manifest(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self.manifest.artifact(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(&meta.file)
+            .with_context(|| format!("parsing {:?}", meta.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        // MXU artifacts take the band stack as a second parameter,
+        // regenerated here from the spec (see band_matrices).
+        let bands = if meta.variant == "mxu" {
+            let spec = crate::stencil::spec::get(&meta.bench)
+                .with_context(|| format!("{name}: unknown bench {}", meta.bench))?;
+            let ny = meta.unit_core[1];
+            let b = band_matrices(&spec, ny);
+            let dims: Vec<i64> = b.shape().iter().map(|&n| n as i64).collect();
+            Some(xla::Literal::vec1(b.data()).reshape(&dims)?)
+        } else {
+            None
+        };
+        let arc = std::sync::Arc::new(Executable { exe, meta, bands });
+        self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Validate one artifact against its golden stats; returns (mean_err,
+    /// l2_err) relative errors.
+    pub fn validate(&self, name: &str) -> Result<(f64, f64)> {
+        let exe = self.load(name)?;
+        let meta = &exe.meta;
+        let n: usize = meta.input_shape.iter().product();
+        let mut rng = crate::util::prng::SplitMix64::new(meta.golden_seed);
+        let input = if meta.dtype == "f32" {
+            // python generated f64 then cast to f32
+            Field::from_vec(
+                &meta.input_shape,
+                rng.fill_f32(n).into_iter().map(|x| x as f64).collect(),
+            )
+        } else {
+            Field::from_vec(&meta.input_shape, rng.fill(n))
+        };
+        let out = if meta.variant == "stats" {
+            let (mean, _, _) = exe.run_stats(&input)?;
+            // stats artifacts only check the mean
+            return Ok((rel_err(mean, meta.golden_mean), 0.0));
+        } else if meta.dtype == "f32" {
+            exe.run_f32(&input)?
+        } else {
+            exe.run(&input)?
+        };
+        Ok((
+            rel_err(out.mean(), meta.golden_mean),
+            rel_err(out.l2(), meta.golden_l2),
+        ))
+    }
+}
+
+fn rel_err(got: f64, want: f64) -> f64 {
+    (got - want).abs() / want.abs().max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        for dir in ["artifacts", "../artifacts"] {
+            if std::path::Path::new(dir).join("manifest.json").exists() {
+                return Some(Runtime::with_manifest(Manifest::load(dir).unwrap()).unwrap());
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn golden_validation_heat2d() {
+        let Some(rt) = runtime() else { return };
+        let (em, el2) = rt.validate("heat2d_step").unwrap();
+        assert!(em < 1e-12 && el2 < 1e-12, "mean_err={em} l2_err={el2}");
+    }
+
+    #[test]
+    fn executable_matches_rust_oracle() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.load("heat2d_block").unwrap();
+        let spec = crate::stencil::spec::get("heat2d").unwrap();
+        let input = Field::random(&exe.meta.input_shape, 99);
+        let got = exe.run(&input).unwrap();
+        let want = crate::stencil::reference::block(&input, &spec, exe.meta.steps);
+        assert!(
+            got.allclose(&want, 1e-12, 1e-14),
+            "maxdiff={}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.load("heat2d_step").unwrap();
+        assert!(exe.run(&Field::zeros(&[4, 4])).is_err());
+    }
+}

@@ -1,0 +1,234 @@
+//! AOT artifact manifest — the contract between `python/compile/aot.py`
+//! and the rust runtime.
+//!
+//! `artifacts/manifest.json` records, per artifact: HLO file, shapes,
+//! fused step count, halo width, golden statistics (computed from the
+//! SplitMix64 stream both languages implement), and the kernel estimates.
+//! Seeds are *recomputed* here from `fnv1a(name)` rather than parsed from
+//! JSON, because JSON numbers are f64 and would round 64-bit seeds.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::prng::fnv1a;
+
+/// One AOT-lowered executable description.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub bench: String,
+    pub variant: String,
+    pub dtype: String,
+    pub steps: usize,
+    pub radius: usize,
+    pub halo: usize,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub unit_core: Vec<usize>,
+    pub global_core: Vec<usize>,
+    pub tb: usize,
+    pub flops_per_call: f64,
+    pub golden_seed: u64,
+    pub golden_mean: f64,
+    pub golden_l2: f64,
+}
+
+/// One benchmark configuration (paper Table 1, scaled).
+#[derive(Clone, Debug)]
+pub struct BenchMeta {
+    pub name: String,
+    pub global_core: Vec<usize>,
+    pub unit: usize,
+    pub tb: usize,
+    pub radius: usize,
+    pub points: usize,
+    pub ndim: usize,
+    pub kind: String,
+    pub flops_per_cell: usize,
+    /// Sorted taps, mirroring spec.py order.
+    pub offsets: Vec<Vec<i64>>,
+    pub coeffs: Vec<f64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub benches: BTreeMap<String, BenchMeta>,
+    pub thermal_core: Vec<usize>,
+    pub thermal_tb: usize,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Default location: `$TETRIS_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Manifest> {
+        let dir = std::env::var("TETRIS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        if v.at(&["version"]).as_usize() != Some(1) {
+            bail!("unsupported manifest version");
+        }
+        let mut artifacts = BTreeMap::new();
+        for e in v.at(&["artifacts"]).as_arr().context("artifacts[]")? {
+            let name = e.at(&["name"]).as_str().context("name")?.to_string();
+            let meta = ArtifactMeta {
+                file: dir.join(e.at(&["file"]).as_str().context("file")?),
+                bench: e.at(&["bench"]).as_str().unwrap_or("").into(),
+                variant: e.at(&["variant"]).as_str().unwrap_or("").into(),
+                dtype: e.at(&["dtype"]).as_str().unwrap_or("f64").into(),
+                steps: e.at(&["steps"]).as_usize().unwrap_or(1),
+                radius: e.at(&["radius"]).as_usize().unwrap_or(0),
+                halo: e.at(&["halo"]).as_usize().unwrap_or(0),
+                input_shape: e.at(&["input_shape"]).usize_vec().context("input_shape")?,
+                output_shape: e.at(&["output_shape"]).usize_vec().context("output_shape")?,
+                unit_core: e.at(&["unit_core"]).usize_vec().unwrap_or_default(),
+                global_core: e.at(&["global_core"]).usize_vec().unwrap_or_default(),
+                tb: e.at(&["tb"]).as_usize().unwrap_or(1),
+                flops_per_call: e.at(&["flops_per_call"]).as_f64().unwrap_or(0.0),
+                golden_seed: fnv1a(&name),
+                golden_mean: e.at(&["golden", "out_mean"]).as_f64().unwrap_or(f64::NAN),
+                golden_l2: e.at(&["golden", "out_l2"]).as_f64().unwrap_or(f64::NAN),
+                name: name.clone(),
+            };
+            artifacts.insert(name, meta);
+        }
+        let mut benches = BTreeMap::new();
+        if let Some(obj) = v.at(&["benches"]).as_obj() {
+            for (name, b) in obj {
+                benches.insert(
+                    name.clone(),
+                    BenchMeta {
+                        name: name.clone(),
+                        global_core: b.at(&["global_core"]).usize_vec().context("global_core")?,
+                        unit: b.at(&["unit"]).as_usize().context("unit")?,
+                        tb: b.at(&["tb"]).as_usize().context("tb")?,
+                        radius: b.at(&["radius"]).as_usize().context("radius")?,
+                        points: b.at(&["points"]).as_usize().unwrap_or(0),
+                        ndim: b.at(&["ndim"]).as_usize().unwrap_or(0),
+                        kind: b.at(&["kind"]).as_str().unwrap_or("").into(),
+                        flops_per_cell: b.at(&["flops_per_cell"]).as_usize().unwrap_or(0),
+                        offsets: b
+                            .at(&["offsets"])
+                            .as_arr()
+                            .map(|a| {
+                                a.iter()
+                                    .filter_map(|o| {
+                                        o.as_arr().map(|xs| {
+                                            xs.iter()
+                                                .filter_map(|x| x.as_f64().map(|f| f as i64))
+                                                .collect()
+                                        })
+                                    })
+                                    .collect()
+                            })
+                            .unwrap_or_default(),
+                        coeffs: b.at(&["coeffs"]).f64_vec().unwrap_or_default(),
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            dir,
+            artifacts,
+            benches,
+            thermal_core: v.at(&["thermal", "core"]).usize_vec().unwrap_or_default(),
+            thermal_tb: v.at(&["thermal", "tb"]).as_usize().unwrap_or(8),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn bench(&self, name: &str) -> Result<&BenchMeta> {
+        self.benches
+            .get(name)
+            .with_context(|| format!("bench {name:?} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "thermal": {"core": [384, 384], "tb": 8, "mu": 0.23},
+      "benches": {
+        "heat2d": {"global_core": [256, 256], "unit": 64, "tb": 4,
+                    "radius": 1, "points": 5, "ndim": 2, "kind": "star",
+                    "flops_per_cell": 10,
+                    "offsets": [[-1,0],[0,-1],[0,0],[0,1],[1,0]],
+                    "coeffs": [0.23, 0.23, 0.08, 0.23, 0.23]}
+      },
+      "artifacts": [
+        {"name": "heat2d_step", "file": "heat2d_step.hlo.txt",
+         "bench": "heat2d", "variant": "step", "dtype": "f64",
+         "steps": 1, "radius": 1, "halo": 1,
+         "input_shape": [66, 258], "output_shape": [64, 256],
+         "unit_core": [64, 256], "global_core": [256, 256], "tb": 4,
+         "flops_per_call": 163840,
+         "golden": {"seed": 1, "out_mean": 0.5, "out_l2": 64.2,
+                     "out_first": 0.1, "out_shape": [64, 256]}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let a = m.artifact("heat2d_step").unwrap();
+        assert_eq!(a.input_shape, vec![66, 258]);
+        assert_eq!(a.golden_mean, 0.5);
+        // seed recomputed from fnv1a, not the json "seed": 1
+        assert_eq!(a.golden_seed, fnv1a("heat2d_step"));
+        let b = m.bench("heat2d").unwrap();
+        assert_eq!(b.unit, 64);
+        assert_eq!(b.offsets.len(), 5);
+        assert_eq!(m.thermal_core, vec![384, 384]);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Integration hook: if `make artifacts` has run, parse the real one.
+        for dir in ["artifacts", "../artifacts"] {
+            if std::path::Path::new(dir).join("manifest.json").exists() {
+                let m = Manifest::load(dir).unwrap();
+                assert!(m.artifacts.len() >= 20);
+                assert_eq!(m.benches.len(), 8);
+                for a in m.artifacts.values() {
+                    assert!(a.file.exists(), "{:?}", a.file);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: manifest-driven loading and execution of the AOT
+//! artifacts produced by `python/compile/aot.py`.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+
+pub mod client;
+pub mod manifest;
+pub mod service;
+
+pub use client::{Executable, Runtime};
+pub use manifest::{ArtifactMeta, BenchMeta, Manifest};
+pub use service::XlaService;

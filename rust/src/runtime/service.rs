@@ -1,0 +1,184 @@
+//! XLA service thread: a single device queue in front of the PJRT client.
+//!
+//! The `xla` crate's handles (raw PJRT pointers behind `Rc`) are neither
+//! `Send` nor `Sync`, so the runtime lives on one dedicated thread — the
+//! accelerator's command queue, which is also the honest model of a real
+//! single-GPU deployment (one stream, jobs serialized).  Workers submit
+//! jobs over an mpsc channel and block on the reply.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::stencil::Field;
+
+use super::client::Runtime;
+use super::manifest::{ArtifactMeta, BenchMeta, Manifest};
+
+enum Job {
+    /// Execute `artifact` on `input`; reply with the output field.
+    Run { artifact: String, input: Field, reply: mpsc::Sender<Result<Field>> },
+    /// Golden-validate `artifact`; reply with (mean_err, l2_err).
+    Validate { artifact: String, reply: mpsc::Sender<Result<(f64, f64)>> },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the XLA service thread.
+#[derive(Clone)]
+pub struct XlaService {
+    tx: mpsc::Sender<Job>,
+    manifest: Arc<Manifest>,
+    // Keep the join handle so the thread is reaped on drop of the last
+    // handle; Mutex<Option<..>> because JoinHandle is not Clone.
+    join: Arc<Mutex<Option<std::thread::JoinHandle<()>>>>,
+}
+
+impl XlaService {
+    /// Spawn the service over the default artifact directory.
+    pub fn spawn_default() -> Result<XlaService> {
+        Self::spawn(Manifest::load_default()?)
+    }
+
+    /// Spawn the service thread; compiles artifacts lazily inside.
+    pub fn spawn(manifest: Manifest) -> Result<XlaService> {
+        let shared = Arc::new(manifest.clone());
+        let (tx, rx) = mpsc::channel::<Job>();
+        // Probe: fail fast if the PJRT client cannot start at all.  The
+        // real Runtime is constructed inside the thread (not Send).
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("xla-service".into())
+            .spawn(move || {
+                let rt = match Runtime::with_manifest(manifest) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Run { artifact, input, reply } => {
+                            let res = rt.load(&artifact).and_then(|exe| {
+                                if exe.meta.dtype == "f32" {
+                                    exe.run_f32(&input)
+                                } else {
+                                    exe.run(&input)
+                                }
+                            });
+                            let _ = reply.send(res);
+                        }
+                        Job::Validate { artifact, reply } => {
+                            let _ = reply.send(rt.validate(&artifact));
+                        }
+                        Job::Shutdown => break,
+                    }
+                }
+            })
+            .context("spawning xla-service thread")?;
+        ready_rx
+            .recv()
+            .context("xla-service thread died during startup")??;
+        Ok(XlaService { tx, manifest: shared, join: Arc::new(Mutex::new(Some(join))) })
+    }
+
+    /// Artifact metadata (available without touching the service thread).
+    pub fn meta(&self, artifact: &str) -> Result<&ArtifactMeta> {
+        self.manifest.artifact(artifact)
+    }
+
+    /// Benchmark metadata from the manifest.
+    pub fn bench(&self, name: &str) -> Result<&BenchMeta> {
+        self.manifest.bench(name)
+    }
+
+    /// The full manifest (plain data, shareable).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.keys().cloned().collect()
+    }
+
+    /// Execute an artifact (blocks until the device queue serves us).
+    pub fn run(&self, artifact: &str, input: &Field) -> Result<Field> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Job::Run { artifact: artifact.into(), input: input.clone(), reply })
+            .map_err(|_| anyhow::anyhow!("xla-service thread is gone"))?;
+        rx.recv().context("xla-service dropped the reply")?
+    }
+
+    /// Golden-validate an artifact.
+    pub fn validate(&self, artifact: &str) -> Result<(f64, f64)> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Job::Validate { artifact: artifact.into(), reply })
+            .map_err(|_| anyhow::anyhow!("xla-service thread is gone"))?;
+        rx.recv().context("xla-service dropped the reply")?
+    }
+}
+
+impl Drop for XlaService {
+    fn drop(&mut self) {
+        // Last handle shuts the thread down.
+        if Arc::strong_count(&self.join) == 1 {
+            let _ = self.tx.send(Job::Shutdown);
+            if let Some(j) = self.join.lock().unwrap().take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service() -> Option<XlaService> {
+        for dir in ["artifacts", "../artifacts"] {
+            if std::path::Path::new(dir).join("manifest.json").exists() {
+                return XlaService::spawn(Manifest::load(dir).unwrap()).ok();
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn service_runs_artifact() {
+        let Some(svc) = service() else { return };
+        let meta = svc.meta("heat2d_step").unwrap().clone();
+        let input = Field::random(&meta.input_shape, 3);
+        let out = svc.run("heat2d_step", &input).unwrap();
+        assert_eq!(out.shape(), &meta.output_shape[..]);
+    }
+
+    #[test]
+    fn service_is_shareable_across_threads() {
+        let Some(svc) = service() else { return };
+        let meta = svc.meta("heat1d_step").unwrap().clone();
+        std::thread::scope(|s| {
+            for seed in 0..3u64 {
+                let svc = svc.clone();
+                let shape = meta.input_shape.clone();
+                s.spawn(move || {
+                    let input = Field::random(&shape, seed);
+                    let out = svc.run("heat1d_step", &input).unwrap();
+                    assert!(out.len() > 0);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(svc) = service() else { return };
+        assert!(svc.run("nope", &Field::zeros(&[1])).is_err());
+        assert!(svc.meta("nope").is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! Boundary conditions for global evolutions.
+//!
+//! The valid-mode engines are boundary-agnostic (they only consume the
+//! ghost ring they are given); this module is the substrate that *fills*
+//! the ring each block, so applications can pick the physics they need:
+//!
+//! * [`Boundary::Dirichlet`] — fixed value (the thermal plate's ambient);
+//! * [`Boundary::Neumann`] — zero-flux: ghosts mirror the edge cells
+//!   (insulated plate);
+//! * [`Boundary::Periodic`] — torus wrap (matches `ref.evolve_periodic`
+//!   and the thermal artifacts).
+
+use super::field::Field;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Boundary {
+    Dirichlet(f64),
+    Neumann,
+    Periodic,
+}
+
+impl Boundary {
+    /// Fill the `halo`-wide ghost ring of `ext` (whose core occupies the
+    /// centred region) according to the condition.  Corners are filled
+    /// too (axis-by-axis passes make corners consistent for Neumann and
+    /// Periodic).
+    pub fn fill(&self, ext: &mut Field, halo: usize) {
+        if halo == 0 {
+            return;
+        }
+        match self {
+            Boundary::Dirichlet(v) => fill_dirichlet(ext, halo, *v),
+            Boundary::Neumann => fill_by_map(ext, halo, |x, lo, hi| x.clamp(lo, hi)),
+            Boundary::Periodic => fill_by_map(ext, halo, |x, lo, hi| {
+                let n = (hi - lo + 1) as i64;
+                lo + (((x - lo) % n + n) % n)
+            }),
+        }
+    }
+
+    /// Convenience: pad `core` by `halo` and fill the ring.
+    pub fn pad(&self, core: &Field, halo: usize) -> Field {
+        let mut ext = core.pad(halo, 0.0);
+        self.fill(&mut ext, halo);
+        ext
+    }
+}
+
+fn fill_dirichlet(ext: &mut Field, halo: usize, v: f64) {
+    let shape = ext.shape().to_vec();
+    let nd = shape.len();
+    let mut idx = vec![0usize; nd];
+    let n = ext.len();
+    let data = ext.data_mut();
+    for i in 0..n {
+        let in_core = idx
+            .iter()
+            .zip(&shape)
+            .all(|(&x, &s)| x >= halo && x < s - halo);
+        if !in_core {
+            data[i] = v;
+        }
+        for k in (0..nd).rev() {
+            idx[k] += 1;
+            if idx[k] < shape[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+}
+
+/// Fill ghosts by mapping each out-of-core coordinate to an in-core one
+/// (clamp => Neumann mirror-of-edge, modulo => periodic).
+fn fill_by_map(ext: &mut Field, halo: usize, map: impl Fn(i64, i64, i64) -> i64) {
+    let shape = ext.shape().to_vec();
+    let nd = shape.len();
+    let mut idx = vec![0usize; nd];
+    let n = ext.len();
+    for _ in 0..n {
+        let in_core = idx
+            .iter()
+            .zip(&shape)
+            .all(|(&x, &s)| x >= halo && x < s - halo);
+        if !in_core {
+            let src: Vec<usize> = idx
+                .iter()
+                .zip(&shape)
+                .map(|(&x, &s)| map(x as i64, halo as i64, (s - halo - 1) as i64) as usize)
+                .collect();
+            let v = ext.get(&src);
+            ext.set(&idx.clone(), v);
+        }
+        for k in (0..nd).rev() {
+            idx[k] += 1;
+            if idx[k] < shape[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::{reference, spec};
+
+    #[test]
+    fn dirichlet_fills_ring_only() {
+        let core = Field::random(&[4, 4], 1);
+        let ext = Boundary::Dirichlet(9.0).pad(&core, 2);
+        assert_eq!(ext.get(&[0, 0]), 9.0);
+        assert_eq!(ext.get(&[7, 7]), 9.0);
+        assert_eq!(ext.get(&[2, 2]), core.get(&[0, 0]));
+        assert_eq!(ext.unpad(2), core);
+    }
+
+    #[test]
+    fn neumann_mirrors_edges() {
+        let core = Field::random(&[3, 3], 2);
+        let ext = Boundary::Neumann.pad(&core, 1);
+        assert_eq!(ext.get(&[0, 1]), core.get(&[0, 0]));
+        assert_eq!(ext.get(&[4, 3]), core.get(&[2, 2]));
+        // corner clamps both axes
+        assert_eq!(ext.get(&[0, 0]), core.get(&[0, 0]));
+    }
+
+    #[test]
+    fn periodic_wraps() {
+        let core = Field::random(&[4], 3);
+        let ext = Boundary::Periodic.pad(&core, 2);
+        assert_eq!(ext.get(&[0]), core.get(&[2]));
+        assert_eq!(ext.get(&[1]), core.get(&[3]));
+        assert_eq!(ext.get(&[6]), core.get(&[0]));
+        assert_eq!(ext.get(&[7]), core.get(&[1]));
+    }
+
+    #[test]
+    fn periodic_step_matches_roll_oracle() {
+        // valid step on a periodically padded field == one periodic step.
+        let s = spec::get("heat2d").unwrap();
+        let core = Field::random(&[6, 6], 4);
+        let ext = Boundary::Periodic.pad(&core, s.radius);
+        let got = reference::step(&ext, &s);
+        let want = reference::evolve_periodic(&core, &s, 1);
+        assert!(got.allclose(&want, 1e-13, 0.0));
+    }
+
+    #[test]
+    fn neumann_conserves_uniform_field() {
+        let s = spec::get("box2d9p").unwrap();
+        let core = Field::full(&[5, 5], 3.0);
+        let ext = Boundary::Neumann.pad(&core, s.radius);
+        let out = reference::step(&ext, &s);
+        assert!((out.min() - 3.0).abs() < 1e-12 && (out.max() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_halo_noop() {
+        let core = Field::random(&[3, 3], 5);
+        let mut ext = core.clone();
+        Boundary::Periodic.fill(&mut ext, 0);
+        assert_eq!(ext, core);
+    }
+}

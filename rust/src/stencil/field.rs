@@ -1,0 +1,327 @@
+//! Dense row-major FP64 field with shape/stride bookkeeping.
+//!
+//! The single data container shared by every engine, the coordinator and
+//! the PJRT runtime.  Kept deliberately simple: contiguous `Vec<f64>`,
+//! row-major strides, copy-based sub-region extract/paste (the halo
+//! traffic the coordinator batches is exactly these copies).
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Field {
+    shape: Vec<usize>,
+    strides: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Field {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Field{:?}", self.shape)
+    }
+}
+
+fn strides_for(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * shape[i + 1];
+    }
+    s
+}
+
+impl Field {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self::full(shape, 0.0)
+    }
+
+    pub fn full(shape: &[usize], v: f64) -> Self {
+        let n = shape.iter().product();
+        Field { shape: shape.to_vec(), strides: strides_for(shape), data: vec![v; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f64>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Field { shape: shape.to_vec(), strides: strides_for(shape), data }
+    }
+
+    /// Deterministic pseudorandom field (SplitMix64), for tests/benches.
+    pub fn random(shape: &[usize], seed: u64) -> Self {
+        let n = shape.iter().product();
+        Field {
+            shape: shape.to_vec(),
+            strides: strides_for(shape),
+            data: crate::util::prng::SplitMix64::new(seed).fill(n),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn strides(&self) -> &[usize] {
+        &self.strides
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    #[inline]
+    pub fn flat(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        idx.iter().zip(&self.strides).map(|(i, s)| i * s).sum()
+    }
+
+    #[inline]
+    pub fn get(&self, idx: &[usize]) -> f64 {
+        self.data[self.flat(idx)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: f64) {
+        let f = self.flat(idx);
+        self.data[f] = v;
+    }
+
+    /// Copy out the sub-region at `offset` with `shape`.
+    pub fn extract(&self, offset: &[usize], shape: &[usize]) -> Field {
+        assert_eq!(offset.len(), self.ndim());
+        assert_eq!(shape.len(), self.ndim());
+        for d in 0..self.ndim() {
+            assert!(
+                offset[d] + shape[d] <= self.shape[d],
+                "extract oob: dim {d} {}+{} > {}",
+                offset[d],
+                shape[d],
+                self.shape[d]
+            );
+        }
+        let mut out = Field::zeros(shape);
+        copy_region(
+            &self.data,
+            &self.shape,
+            offset,
+            &mut out.data,
+            shape,
+            &vec![0; shape.len()],
+            shape,
+        );
+        out
+    }
+
+    /// Paste `src` into this field at `offset`.
+    pub fn paste(&mut self, offset: &[usize], src: &Field) {
+        assert_eq!(offset.len(), self.ndim());
+        assert_eq!(src.ndim(), self.ndim());
+        for d in 0..self.ndim() {
+            assert!(
+                offset[d] + src.shape[d] <= self.shape[d],
+                "paste oob: dim {d}"
+            );
+        }
+        let shape = self.shape.clone();
+        copy_region(
+            &src.data,
+            &src.shape,
+            &vec![0; src.ndim()],
+            &mut self.data,
+            &shape,
+            offset,
+            &src.shape.clone(),
+        );
+    }
+
+    /// New field padded by `halo` cells of `value` on every side.
+    pub fn pad(&self, halo: usize, value: f64) -> Field {
+        let shape: Vec<usize> = self.shape.iter().map(|n| n + 2 * halo).collect();
+        let mut out = Field::full(&shape, value);
+        out.paste(&vec![halo; self.ndim()], self);
+        out
+    }
+
+    /// Strip `halo` cells from every side.
+    pub fn unpad(&self, halo: usize) -> Field {
+        let shape: Vec<usize> = self.shape.iter().map(|n| n - 2 * halo).collect();
+        self.extract(&vec![halo; self.ndim()], &shape)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.data.iter().sum::<f64>() / self.data.len() as f64
+    }
+
+    pub fn l2(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.data.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.data.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Max |a - b| over all cells (shapes must match).
+    pub fn max_abs_diff(&self, other: &Field) -> f64 {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// assert_allclose with rtol/atol semantics (numpy-style).
+    pub fn allclose(&self, other: &Field, rtol: f64, atol: f64) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+/// Generic strided nd copy: src[src_off .. src_off+count] -> dst[dst_off ..].
+fn copy_region(
+    src: &[f64],
+    src_shape: &[usize],
+    src_off: &[usize],
+    dst: &mut [f64],
+    dst_shape: &[usize],
+    dst_off: &[usize],
+    count: &[usize],
+) {
+    let nd = src_shape.len();
+    if nd == 0 {
+        dst[0] = src[0];
+        return;
+    }
+    if count.iter().any(|&c| c == 0) {
+        return; // empty region: nothing to copy
+    }
+    let src_strides = strides_for(src_shape);
+    let dst_strides = strides_for(dst_shape);
+    // Iterate all but the innermost dimension; memcpy rows.
+    let row = count[nd - 1];
+    let outer: usize = count[..nd - 1].iter().product();
+    let mut idx = vec![0usize; nd - 1];
+    for _ in 0..outer.max(1) {
+        let mut s = src_off[nd - 1];
+        let mut d = dst_off[nd - 1];
+        for k in 0..nd - 1 {
+            s += (src_off[k] + idx[k]) * src_strides[k];
+            d += (dst_off[k] + idx[k]) * dst_strides[k];
+        }
+        dst[d..d + row].copy_from_slice(&src[s..s + row]);
+        // odometer increment
+        for k in (0..nd - 1).rev() {
+            idx[k] += 1;
+            if idx[k] < count[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        let f = Field::zeros(&[2, 3, 4]);
+        assert_eq!(f.strides(), &[12, 4, 1]);
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut f = Field::zeros(&[3, 4]);
+        f.set(&[1, 2], 7.5);
+        assert_eq!(f.get(&[1, 2]), 7.5);
+        assert_eq!(f.data()[1 * 4 + 2], 7.5);
+    }
+
+    #[test]
+    fn extract_paste_roundtrip() {
+        let f = Field::random(&[6, 7], 1);
+        let sub = f.extract(&[2, 3], &[3, 2]);
+        assert_eq!(sub.get(&[0, 0]), f.get(&[2, 3]));
+        assert_eq!(sub.get(&[2, 1]), f.get(&[4, 4]));
+        let mut g = Field::zeros(&[6, 7]);
+        g.paste(&[2, 3], &sub);
+        assert_eq!(g.get(&[4, 4]), f.get(&[4, 4]));
+        assert_eq!(g.get(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn pad_unpad_roundtrip() {
+        let f = Field::random(&[4, 5], 2);
+        let p = f.pad(2, 9.0);
+        assert_eq!(p.shape(), &[8, 9]);
+        assert_eq!(p.get(&[0, 0]), 9.0);
+        assert_eq!(p.get(&[2, 2]), f.get(&[0, 0]));
+        assert_eq!(p.unpad(2), f);
+    }
+
+    #[test]
+    fn pad_3d() {
+        let f = Field::random(&[3, 4, 5], 3);
+        let p = f.pad(1, 0.0);
+        assert_eq!(p.shape(), &[5, 6, 7]);
+        assert_eq!(p.unpad(1), f);
+    }
+
+    #[test]
+    fn allclose_tolerance() {
+        let a = Field::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Field::from_vec(&[2], vec![1.0 + 1e-13, 2.0]);
+        assert!(a.allclose(&b, 1e-12, 0.0));
+        assert!(!a.allclose(&b, 1e-15, 0.0));
+    }
+
+    #[test]
+    fn stats() {
+        let f = Field::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(f.mean(), 2.5);
+        assert_eq!(f.min(), 1.0);
+        assert_eq!(f.max(), 4.0);
+        assert!((f.l2() - 30f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "extract oob")]
+    fn extract_oob_panics() {
+        Field::zeros(&[3, 3]).extract(&[2, 2], &[2, 2]);
+    }
+
+    #[test]
+    fn random_matches_python_stream() {
+        // SplitMix64(seed).fill row-major — same draws as prng.py.
+        let f = Field::random(&[2, 2], 42);
+        let mut rng = crate::util::prng::SplitMix64::new(42);
+        for i in 0..4 {
+            assert_eq!(f.data()[i], rng.next_f64());
+        }
+    }
+}

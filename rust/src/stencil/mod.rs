@@ -1,0 +1,10 @@
+//! Stencil substrate: specifications, fields, and the reference oracle.
+
+pub mod boundary;
+pub mod field;
+pub mod reference;
+pub mod spec;
+
+pub use boundary::Boundary;
+pub use field::Field;
+pub use spec::{Kind, StencilSpec};

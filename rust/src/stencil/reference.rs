@@ -1,0 +1,177 @@
+//! Naive reference sweeps — the rust-side correctness oracle.
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly (same tap order, same
+//! arithmetic); every optimized engine and every PJRT artifact is tested
+//! against these functions.
+
+use super::field::Field;
+use super::spec::StencilSpec;
+
+/// One valid-mode update: shape (n+2r, ..) -> (n, ..).
+pub fn step(u: &Field, spec: &StencilSpec) -> Field {
+    let r = spec.radius;
+    assert_eq!(u.ndim(), spec.ndim, "{}: rank mismatch", spec.name);
+    let core: Vec<usize> = u.shape().iter().map(|n| n.checked_sub(2 * r).expect("too small")).collect();
+    assert!(core.iter().all(|&n| n > 0), "{}: input too small", spec.name);
+    let mut out = Field::zeros(&core);
+    let (offs, cs) = spec.taps();
+    // Precompute flat offsets into u for the tap at each core cell.
+    let ustr = u.strides().to_vec();
+    let flat_offs: Vec<usize> = offs
+        .iter()
+        .map(|off| {
+            off.iter()
+                .zip(&ustr)
+                .map(|(&o, &s)| ((o + r as i64) as usize) * s)
+                .sum()
+        })
+        .collect();
+    let core_shape = core.clone();
+    let mut idx = vec![0usize; core_shape.len()];
+    let n = out.len();
+    let udata = u.data();
+    let odata = out.data_mut();
+    for i in 0..n {
+        // base = flat index of idx in u coordinates (without +r shift; the
+        // shift is folded into flat_offs).
+        let base: usize = idx.iter().zip(&ustr).map(|(&i, &s)| i * s).sum();
+        let mut acc = 0.0;
+        for (fo, c) in flat_offs.iter().zip(&cs) {
+            acc += c * udata[base + fo];
+        }
+        odata[i] = acc;
+        for k in (0..core_shape.len()).rev() {
+            idx[k] += 1;
+            if idx[k] < core_shape[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+    out
+}
+
+/// `steps` fused valid-mode updates: (n + 2*r*steps, ..) -> (n, ..).
+pub fn block(u: &Field, spec: &StencilSpec, steps: usize) -> Field {
+    let mut cur = u.clone();
+    for _ in 0..steps {
+        cur = step(&cur, spec);
+    }
+    cur
+}
+
+/// Shape-preserving periodic evolution (thermal case study oracle).
+pub fn evolve_periodic(u: &Field, spec: &StencilSpec, steps: usize) -> Field {
+    let shape = u.shape().to_vec();
+    let mut cur = u.clone();
+    let (offs, cs) = spec.taps();
+    for _ in 0..steps {
+        let mut out = Field::zeros(&shape);
+        let mut idx = vec![0usize; shape.len()];
+        for i in 0..out.len() {
+            let mut acc = 0.0;
+            for (off, c) in offs.iter().zip(&cs) {
+                let src: Vec<usize> = idx
+                    .iter()
+                    .zip(off.iter())
+                    .zip(&shape)
+                    .map(|((&i, &o), &n)| {
+                        (((i as i64 + o) % n as i64 + n as i64) % n as i64) as usize
+                    })
+                    .collect();
+                acc += c * cur.get(&src);
+            }
+            out.data_mut()[i] = acc;
+            for k in (0..shape.len()).rev() {
+                idx[k] += 1;
+                if idx[k] < shape[k] {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+        cur = out;
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::spec;
+
+    #[test]
+    fn step_shrinks_by_radius() {
+        for s in spec::benchmarks() {
+            let shape: Vec<usize> = (0..s.ndim).map(|_| 8 + 2 * s.radius).collect();
+            let u = Field::random(&shape, 1);
+            let out = step(&u, &s);
+            assert_eq!(out.shape(), &vec![8; s.ndim][..], "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn heat1d_hand_computed() {
+        let s = spec::get("heat1d").unwrap();
+        let (_, cs) = s.taps();
+        // coeffs sorted by offset: [-1], [0], [1]
+        let u = Field::from_vec(&[5], vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let out = step(&u, &s);
+        for i in 0..3 {
+            let expect = cs[0] * u.data()[i] + cs[1] * u.data()[i + 1] + cs[2] * u.data()[i + 2];
+            assert!((out.data()[i] - expect).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn block_equals_iterated_step() {
+        let s = spec::get("box2d9p").unwrap();
+        let u = Field::random(&[12, 12], 2);
+        let b = block(&u, &s, 3);
+        let mut it = u.clone();
+        for _ in 0..3 {
+            it = step(&it, &s);
+        }
+        assert!(b.allclose(&it, 1e-14, 0.0));
+    }
+
+    #[test]
+    fn uniform_field_is_fixed_point() {
+        // Normalized coefficients: constant field stays constant.
+        for s in spec::benchmarks() {
+            let shape: Vec<usize> = (0..s.ndim).map(|_| 6 + 2 * s.radius).collect();
+            let u = Field::full(&shape, 2.5);
+            let out = step(&u, &s);
+            assert!((out.min() - 2.5).abs() < 1e-12, "{}", s.name);
+            assert!((out.max() - 2.5).abs() < 1e-12, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn periodic_preserves_mean() {
+        let s = spec::get("heat2d").unwrap();
+        let u = Field::random(&[10, 10], 3);
+        let out = evolve_periodic(&u, &s, 4);
+        assert!((out.mean() - u.mean()).abs() < 1e-13);
+        assert_eq!(out.shape(), u.shape());
+    }
+
+    #[test]
+    fn linearity() {
+        let s = spec::get("box2d25p").unwrap();
+        let u = Field::random(&[14, 14], 4);
+        let v = Field::random(&[14, 14], 5);
+        let mut w = u.clone();
+        for (a, b) in w.data_mut().iter_mut().zip(v.data()) {
+            *a = 2.0 * *a + 3.0 * b;
+        }
+        let lhs = step(&w, &s);
+        let su = step(&u, &s);
+        let sv = step(&v, &s);
+        let mut rhs = su.clone();
+        for (a, (x, y)) in rhs.data_mut().iter_mut().zip(su.data().iter().zip(sv.data())) {
+            *a = 2.0 * x + 3.0 * y;
+        }
+        assert!(lhs.allclose(&rhs, 1e-12, 1e-14));
+    }
+}

@@ -1,0 +1,200 @@
+//! Stencil specifications — rust mirror of `python/compile/kernels/spec.py`.
+//!
+//! The eight Table-1 benchmarks are regenerated here with the *same*
+//! normalization arithmetic as the python side; a cross-language test in
+//! `rust/tests/manifest.rs` diffs these coefficients against the AOT
+//! manifest to guarantee both stacks compute the same dwarf.
+
+use std::collections::BTreeMap;
+
+/// Star (axis-aligned arms) or box (dense hypercube) footprint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Star,
+    Box,
+}
+
+/// One stencil dwarf: offsets -> FP64 coefficients.
+#[derive(Clone, Debug)]
+pub struct StencilSpec {
+    pub name: &'static str,
+    pub ndim: usize,
+    pub kind: Kind,
+    pub radius: usize,
+    /// Sorted offset -> coefficient map (BTreeMap keeps python's sorted()
+    /// iteration order: lexicographic on the offset tuple).
+    pub coeffs: BTreeMap<Vec<i64>, f64>,
+}
+
+impl StencilSpec {
+    pub fn points(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    /// One multiply + one add per tap.
+    pub fn flops_per_cell(&self) -> usize {
+        2 * self.points()
+    }
+
+    /// Ghost-ring width consumed by `steps` fused valid-mode steps.
+    pub fn halo(&self, steps: usize) -> usize {
+        self.radius * steps
+    }
+
+    /// (offsets, coeffs) in deterministic sorted order.
+    pub fn taps(&self) -> (Vec<Vec<i64>>, Vec<f64>) {
+        let offs: Vec<Vec<i64>> = self.coeffs.keys().cloned().collect();
+        let cs: Vec<f64> = self.coeffs.values().copied().collect();
+        (offs, cs)
+    }
+}
+
+/// Star coefficients: `center` at origin, `arm / dist` per axis tap,
+/// normalized to sum 1 — identical arithmetic to spec.py `_star`.
+pub fn star(ndim: usize, radius: usize, center: f64, arm: f64) -> BTreeMap<Vec<i64>, f64> {
+    let mut coeffs = BTreeMap::new();
+    coeffs.insert(vec![0i64; ndim], center);
+    for d in 0..ndim {
+        for r in 1..=radius as i64 {
+            for sign in [-1i64, 1] {
+                let mut off = vec![0i64; ndim];
+                off[d] = sign * r;
+                coeffs.insert(off, arm / r as f64);
+            }
+        }
+    }
+    normalize(coeffs)
+}
+
+/// Box coefficients: separable triangular profile, normalized to 1 —
+/// identical arithmetic to spec.py `_box`.
+pub fn boxc(ndim: usize, radius: usize) -> BTreeMap<Vec<i64>, f64> {
+    let r = radius as i64;
+    let axis: Vec<i64> = (-r..=r).collect();
+    let w1: Vec<f64> = axis.iter().map(|&o| (r + 1) as f64 - o.abs() as f64).collect();
+    let mut coeffs = BTreeMap::new();
+    fn rec(
+        axis: &[i64],
+        w1: &[f64],
+        ndim: usize,
+        prefix: &mut Vec<i64>,
+        weight: f64,
+        out: &mut BTreeMap<Vec<i64>, f64>,
+    ) {
+        if prefix.len() == ndim {
+            out.insert(prefix.clone(), weight);
+            return;
+        }
+        for (i, &o) in axis.iter().enumerate() {
+            prefix.push(o);
+            rec(axis, w1, ndim, prefix, weight * w1[i], out);
+            prefix.pop();
+        }
+    }
+    rec(&axis, &w1, ndim, &mut Vec::new(), 1.0, &mut coeffs);
+    normalize(coeffs)
+}
+
+/// Paper Eq. 3 heat-equation coefficients with CFL number mu.
+pub fn heat2d_coeffs(mu: f64) -> BTreeMap<Vec<i64>, f64> {
+    let mut m = BTreeMap::new();
+    m.insert(vec![0, 0], 1.0 - 4.0 * mu);
+    m.insert(vec![-1, 0], mu);
+    m.insert(vec![1, 0], mu);
+    m.insert(vec![0, -1], mu);
+    m.insert(vec![0, 1], mu);
+    m
+}
+
+fn normalize(mut m: BTreeMap<Vec<i64>, f64>) -> BTreeMap<Vec<i64>, f64> {
+    let total: f64 = m.values().sum();
+    for v in m.values_mut() {
+        *v /= total;
+    }
+    m
+}
+
+/// CFL number of the paper's thermal-diffusion case study (§6.5).
+pub const THERMAL_MU: f64 = 0.23;
+
+/// The eight Table-1 benchmarks, same parameters as spec.py.
+pub fn benchmarks() -> Vec<StencilSpec> {
+    vec![
+        StencilSpec { name: "heat1d", ndim: 1, kind: Kind::Star, radius: 1, coeffs: star(1, 1, 0.5, 0.25) },
+        StencilSpec { name: "star1d5p", ndim: 1, kind: Kind::Star, radius: 2, coeffs: star(1, 2, 0.4, 0.2) },
+        StencilSpec { name: "heat2d", ndim: 2, kind: Kind::Star, radius: 1, coeffs: heat2d_coeffs(THERMAL_MU) },
+        StencilSpec { name: "star2d9p", ndim: 2, kind: Kind::Star, radius: 2, coeffs: star(2, 2, 0.3, 0.1) },
+        StencilSpec { name: "box2d9p", ndim: 2, kind: Kind::Box, radius: 1, coeffs: boxc(2, 1) },
+        StencilSpec { name: "box2d25p", ndim: 2, kind: Kind::Box, radius: 2, coeffs: boxc(2, 2) },
+        StencilSpec { name: "heat3d", ndim: 3, kind: Kind::Star, radius: 1, coeffs: star(3, 1, 0.4, 0.1) },
+        StencilSpec { name: "box3d27p", ndim: 3, kind: Kind::Box, radius: 1, coeffs: boxc(3, 1) },
+    ]
+}
+
+/// Look up a benchmark by name.
+pub fn get(name: &str) -> Option<StencilSpec> {
+    benchmarks().into_iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn points_match_table1() {
+        let expected = [
+            ("heat1d", 3),
+            ("star1d5p", 5),
+            ("heat2d", 5),
+            ("star2d9p", 9),
+            ("box2d9p", 9),
+            ("box2d25p", 25),
+            ("heat3d", 7),
+            ("box3d27p", 27),
+        ];
+        for (name, pts) in expected {
+            assert_eq!(get(name).unwrap().points(), pts, "{name}");
+        }
+    }
+
+    #[test]
+    fn coeffs_normalized() {
+        for s in benchmarks() {
+            let sum: f64 = s.coeffs.values().sum();
+            assert!((sum - 1.0).abs() < 1e-12, "{} sum={sum}", s.name);
+        }
+    }
+
+    #[test]
+    fn offsets_within_radius_and_symmetric() {
+        for s in benchmarks() {
+            for off in s.coeffs.keys() {
+                assert_eq!(off.len(), s.ndim);
+                assert!(off.iter().all(|o| o.unsigned_abs() as usize <= s.radius));
+                let neg: Vec<i64> = off.iter().map(|o| -o).collect();
+                assert!(s.coeffs.contains_key(&neg), "{} {off:?}", s.name);
+                if s.kind == Kind::Star {
+                    assert!(off.iter().filter(|&&o| o != 0).count() <= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn heat2d_matches_eq3() {
+        let s = get("heat2d").unwrap();
+        assert!((s.coeffs[&vec![0, 0]] - (1.0 - 4.0 * THERMAL_MU)).abs() < 1e-15);
+        assert!((s.coeffs[&vec![1, 0]] - THERMAL_MU).abs() < 1e-15);
+    }
+
+    #[test]
+    fn halo_scaling() {
+        let s = get("star2d9p").unwrap();
+        assert_eq!(s.halo(4), 8);
+    }
+
+    #[test]
+    fn unknown_name() {
+        assert!(get("nope").is_none());
+    }
+}

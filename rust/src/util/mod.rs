@@ -1,0 +1,5 @@
+//! Shared utilities: PRNG (python-lockstep), minimal JSON, timing.
+
+pub mod json;
+pub mod prng;
+pub mod timer;

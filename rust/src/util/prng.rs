@@ -1,0 +1,89 @@
+//! SplitMix64 PRNG + FNV-1a hashing — bit-identical twins of
+//! `python/compile/prng.py` and `aot._seed_for`.
+//!
+//! The AOT manifest's golden vectors are generated from these streams on
+//! the Python side; integration tests regenerate the exact same inputs
+//! here, so the artifact numerics are validated end-to-end with no Python
+//! on the runtime path.
+
+/// Sebastiano Vigna's splitmix64.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next raw 64-bit draw.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1): top 53 bits / 2^53 (same convention as python).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Row-major buffer of `n` f64 draws.
+    pub fn fill(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.next_f64()).collect()
+    }
+
+    /// f32 variant (draws f64 then truncates, matching numpy astype).
+    pub fn fill_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.next_f64() as f32).collect()
+    }
+}
+
+/// FNV-1a 64-bit — mirrors `aot._seed_for`, keyed on artifact names.
+pub fn fnv1a(name: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Lockstep vectors shared with python/tests/test_prng.py.
+    #[test]
+    fn seed42_vectors() {
+        let mut rng = SplitMix64::new(42);
+        assert_eq!(rng.next_u64(), 0xBDD7_3226_2FEB_6E95);
+        assert_eq!(rng.next_u64(), 0x28EF_E333_B266_F103);
+        assert_eq!(rng.next_u64(), 0x4752_6757_130F_9F52);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = SplitMix64::new(7);
+        let xs: Vec<f64> = (0..1000).map(|_| rng.next_f64()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((0.4..0.6).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn fill_deterministic() {
+        assert_eq!(SplitMix64::new(123).fill(20), SplitMix64::new(123).fill(20));
+    }
+
+    #[test]
+    fn fnv1a_vectors() {
+        // Same vectors asserted in python/tests/test_aot.py.
+        assert_eq!(fnv1a(""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a("a"), 0xAF63_DC4C_8601_EC8C);
+        assert_ne!(fnv1a("heat2d_step"), fnv1a("heat2d_block"));
+    }
+}

@@ -1,0 +1,72 @@
+//! Timing helpers for the bench harness and the auto-tuner.
+
+use std::time::{Duration, Instant};
+
+/// Time one closure invocation.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Median-of-runs timing: `warmup` discarded runs then `runs` measured.
+pub fn time_median<T>(warmup: usize, runs: usize, mut f: impl FnMut() -> T) -> Duration {
+    for _ in 0..warmup {
+        let _ = f();
+    }
+    let mut samples: Vec<Duration> = (0..runs.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            let _ = f();
+            t0.elapsed()
+        })
+        .collect();
+    samples.sort();
+    samples[samples.len() / 2]
+}
+
+/// GStencils/s (paper Eq. 5): cells x steps / seconds / 1e9.
+pub fn gstencils_per_sec(cells: usize, steps: usize, d: Duration) -> f64 {
+    (cells as f64 * steps as f64) / d.as_secs_f64() / 1e9
+}
+
+/// Pretty-print a duration as e.g. "1.234ms".
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gstencils_math() {
+        let g = gstencils_per_sec(1_000_000, 10, Duration::from_secs(1));
+        assert!((g - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_is_ordered() {
+        let mut i = 0;
+        let d = time_median(1, 3, || {
+            i += 1;
+            std::thread::sleep(Duration::from_micros(10));
+        });
+        assert!(d >= Duration::from_micros(5));
+        assert_eq!(i, 4);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with('s'));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_micros(50)).ends_with("us"));
+    }
+}

@@ -1,0 +1,221 @@
+//! Property-based tests on coordinator and engine invariants.
+//!
+//! The vendored crate set has no `proptest`, so cases are generated from
+//! the in-tree SplitMix64 (deterministic, seeds printed on failure) — the
+//! same "many random cases + invariant assertions" methodology.
+
+use tetris::coordinator::partition::{capacity_units, Partition};
+use tetris::coordinator::{tuner, CommLedger, CommModel, NativeWorker, Scheduler, Worker};
+use tetris::stencil::{reference, spec, Field};
+use tetris::util::prng::SplitMix64;
+
+const CASES: usize = 60;
+
+fn rng_for(case: usize) -> SplitMix64 {
+    SplitMix64::new(0x7e57 + case as u64)
+}
+
+fn pick(rng: &mut SplitMix64, lo: usize, hi: usize) -> usize {
+    lo + (rng.next_u64() as usize) % (hi - lo + 1)
+}
+
+/// Partition invariant: spans are contiguous, ordered, cover the domain
+/// exactly once, and respect capacities.
+#[test]
+fn prop_partition_covers_domain_exactly() {
+    for case in 0..CASES {
+        let mut rng = rng_for(case);
+        let nworkers = pick(&mut rng, 1, 5);
+        let unit = pick(&mut rng, 1, 16);
+        let units = pick(&mut rng, nworkers, 64);
+        let weights: Vec<f64> = (0..nworkers).map(|_| 0.05 + rng.next_f64()).collect();
+        let caps: Vec<usize> = (0..nworkers).map(|_| pick(&mut rng, units, 2 * units)).collect();
+        let p = Partition::balanced(unit, units, &weights, &caps);
+        assert_eq!(p.total_units(), units, "case {case}");
+        let spans = p.spans();
+        assert_eq!(spans[0].0, 0);
+        assert_eq!(spans.last().unwrap().1, units * unit);
+        for w in spans.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "case {case}: gap/overlap");
+        }
+        for (i, &s) in p.shares.iter().enumerate() {
+            assert!(s <= caps[i], "case {case}: capacity violated");
+        }
+        let ratios: f64 = (0..nworkers).map(|i| p.ratio(i)).sum();
+        assert!((ratios - 1.0).abs() < 1e-12);
+    }
+}
+
+/// Squeezer invariant: whatever the capacities (if feasible), nothing is
+/// lost and nothing exceeds its cap.
+#[test]
+fn prop_memory_squeezer_feasible_never_loses_units() {
+    for case in 0..CASES {
+        let mut rng = rng_for(1000 + case);
+        let n = pick(&mut rng, 2, 4);
+        let units = pick(&mut rng, 4, 40);
+        // Feasible: total capacity >= units.
+        let mut caps: Vec<usize> = (0..n).map(|_| pick(&mut rng, 1, units)).collect();
+        while caps.iter().sum::<usize>() < units {
+            let i = pick(&mut rng, 0, n - 1);
+            caps[i] += 1;
+        }
+        let weights: Vec<f64> = (0..n).map(|_| 0.01 + rng.next_f64() * 10.0).collect();
+        let p = Partition::balanced(1, units, &weights, &caps);
+        assert_eq!(p.total_units(), units, "case {case}");
+        for (s, c) in p.shares.iter().zip(&caps) {
+            assert!(s <= c, "case {case}");
+        }
+    }
+}
+
+/// Halo width invariant: a scheduler run equals the reference evolution
+/// for random shapes / partitions / Tb (i.e. halo = radius*Tb is
+/// sufficient AND the writeback covers every cell exactly once).
+#[test]
+fn prop_scheduler_equals_reference() {
+    for case in 0..12 {
+        let mut rng = rng_for(2000 + case);
+        let benches = ["heat1d", "star1d5p", "heat2d", "box2d9p", "heat3d"];
+        let s = spec::get(benches[case % benches.len()]).unwrap();
+        let tb = pick(&mut rng, 1, 3);
+        let unit = pick(&mut rng, 2, 5);
+        let nworkers = pick(&mut rng, 1, 3);
+        let shares: Vec<usize> = (0..nworkers).map(|_| pick(&mut rng, 1, 4)).collect();
+        let units: usize = shares.iter().sum();
+        let mut shape = vec![units * unit];
+        for _ in 1..s.ndim {
+            shape.push(pick(&mut rng, 4, 9));
+        }
+        let core = Field::random(&shape, rng.next_u64());
+        let engines = ["naive", "autovec", "simd", "tiled", "tetris-cpu"];
+        let workers: Vec<Box<dyn Worker>> = (0..nworkers)
+            .map(|i| {
+                Box::new(NativeWorker::new(
+                    tetris::engine::by_name(engines[(case + i) % engines.len()], 2).unwrap(),
+                    1 << 30,
+                )) as Box<dyn Worker>
+            })
+            .collect();
+        let sched = Scheduler {
+            spec: s.clone(),
+            tb,
+            workers,
+            partition: Partition { unit, shares },
+            comm_model: CommModel::default(),
+        };
+        let steps = tb * pick(&mut rng, 1, 3);
+        let boundary = rng.next_f64();
+        let (got, metrics) = sched.run(&core, steps, boundary).unwrap();
+        let want =
+            tetris::coordinator::pipeline::reference_evolution(&core, &s, steps, tb, boundary);
+        assert!(
+            got.allclose(&want, 1e-11, 1e-13),
+            "case {case} ({}, tb={tb}): maxdiff={}",
+            s.name,
+            got.max_abs_diff(&want)
+        );
+        assert_eq!(metrics.blocks, steps / tb);
+    }
+}
+
+/// Comm batching invariant: ledger bytes are conserved, and centralized
+/// cost <= split cost for every alpha >= 0.
+#[test]
+fn prop_comm_batching_conserves_bytes() {
+    for case in 0..CASES {
+        let mut rng = rng_for(3000 + case);
+        let mut ledger = CommLedger::default();
+        let mut total = 0usize;
+        for _ in 0..pick(&mut rng, 1, 20) {
+            let bytes = pick(&mut rng, 8, 1 << 20);
+            let tb = pick(&mut rng, 1, 16);
+            ledger.record_exchange(bytes, tb);
+            total += bytes;
+        }
+        assert_eq!(ledger.bytes, total);
+        let model = CommModel { alpha: rng.next_f64() * 1e-4, beta: rng.next_f64() * 1e-9 };
+        let (central, split) = ledger.modeled_cost(&model);
+        assert!(central <= split + 1e-15, "case {case}");
+    }
+}
+
+/// Tuner invariant: tuned partitions respect capacity and weight order
+/// (faster worker never gets fewer units than a strictly slower one,
+/// capacity permitting).
+#[test]
+fn prop_tuner_orders_by_speed() {
+    for case in 0..CASES {
+        let mut rng = rng_for(4000 + case);
+        let n = pick(&mut rng, 2, 4);
+        let units = pick(&mut rng, 2 * n, 60);
+        let profile: Vec<f64> = (0..n).map(|_| 1e-4 + rng.next_f64() * 1e-2).collect();
+        let workers: Vec<Box<dyn Worker>> = (0..n)
+            .map(|_| {
+                Box::new(NativeWorker::new(
+                    tetris::engine::by_name("simd", 1).unwrap(),
+                    1 << 40,
+                )) as Box<dyn Worker>
+            })
+            .collect();
+        let p = tuner::tune(1, units, 64, &profile, &workers);
+        assert_eq!(p.total_units(), units);
+        for i in 0..n {
+            for j in 0..n {
+                if profile[i] < profile[j] * 0.99 {
+                    assert!(
+                        p.shares[i] + 1 >= p.shares[j],
+                        "case {case}: faster worker {i} got {} vs {}",
+                        p.shares[i],
+                        p.shares[j]
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Engine linearity + fixed-point invariants on random engines/benchmarks.
+#[test]
+fn prop_engines_preserve_constant_fields() {
+    for case in 0..24 {
+        let mut rng = rng_for(5000 + case);
+        let all = spec::benchmarks();
+        let s = &all[case % all.len()];
+        let names = ["autovec", "simd", "tiled", "tessellate", "tetris-cpu"];
+        let eng = tetris::engine::by_name(names[case % names.len()], 2).unwrap();
+        let steps = pick(&mut rng, 1, 3);
+        let v = rng.next_f64() * 10.0;
+        let ext: Vec<usize> = (0..s.ndim).map(|_| 8 + 2 * s.radius * steps).collect();
+        let out = eng.block(s, &Field::full(&ext, v), steps);
+        // normalized coefficients: constant in -> same constant out
+        assert!((out.min() - v).abs() < 1e-10 && (out.max() - v).abs() < 1e-10,
+            "case {case}: {} on {}", names[case % names.len()], s.name);
+    }
+}
+
+/// capacity_units monotonicity.
+#[test]
+fn prop_capacity_units_monotone() {
+    for case in 0..CASES {
+        let mut rng = rng_for(6000 + case);
+        let unit = pick(&mut rng, 1, 128);
+        let rest = pick(&mut rng, 1, 4096);
+        let a = pick(&mut rng, 0, 1 << 24);
+        let b = a + pick(&mut rng, 0, 1 << 24);
+        assert!(capacity_units(a, unit, rest) <= capacity_units(b, unit, rest));
+    }
+}
+
+/// PRNG fill agrees with reference::block determinism: same seed, same
+/// result — across engines.
+#[test]
+fn prop_engines_deterministic() {
+    let s = spec::get("box2d25p").unwrap();
+    let u = Field::random(&[20, 20], 777);
+    let a = reference::block(&u, &s, 2);
+    for _ in 0..3 {
+        let b = reference::block(&Field::random(&[20, 20], 777), &s, 2);
+        assert_eq!(a, b);
+    }
+}
