@@ -7,7 +7,7 @@
 use tetris::apps::accuracy;
 use tetris::runtime::XlaService;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tetris::util::error::Result<()> {
     let svc = XlaService::spawn_default().ok();
     let blocks: usize = std::env::var("TETRIS_ACC_BLOCKS")
         .ok()

@@ -13,9 +13,9 @@ use tetris::coordinator::{
 use tetris::runtime::XlaService;
 use tetris::stencil::{spec, Field};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tetris::util::error::Result<()> {
     let svc = XlaService::spawn_default()
-        .map_err(|e| anyhow::anyhow!("this example needs artifacts (`make artifacts`): {e}"))?;
+        .map_err(|e| tetris::err!("this example needs artifacts (`make artifacts`): {e}"))?;
     let bench = "heat2d";
     let meta = svc.bench(bench)?.clone();
     let s = spec::get(bench).unwrap();
@@ -100,7 +100,7 @@ fn workers_clone(
     svc: &XlaService,
     bench: &str,
     device_cap: usize,
-) -> anyhow::Result<Vec<Box<dyn Worker>>> {
+) -> tetris::util::error::Result<Vec<Box<dyn Worker>>> {
     Ok(vec![
         Box::new(NativeWorker::new(tetris::engine::by_name("tetris-cpu", 2).unwrap(), 1 << 33)),
         Box::new(XlaWorker::new(svc.clone(), &format!("{bench}_block"), device_cap)?),

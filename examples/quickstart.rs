@@ -11,7 +11,7 @@ use tetris::engine;
 use tetris::runtime::XlaService;
 use tetris::stencil::{reference, spec, Field};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tetris::util::error::Result<()> {
     // 1. Pick a stencil dwarf from the paper's Table-1 suite.
     let heat2d = spec::get("heat2d").expect("built-in benchmark");
     println!("dwarf: {} ({} points, radius {})", heat2d.name, heat2d.points(), heat2d.radius);

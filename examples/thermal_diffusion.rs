@@ -18,7 +18,7 @@ fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tetris::util::error::Result<()> {
     let svc = XlaService::spawn_default().ok();
     if svc.is_none() {
         println!("NOTE: no AOT artifacts (run `make artifacts`); CPU rows only.\n");
@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     // All methods must agree with the naive run to FP64 tolerance —
     // "while preserving the original accuracy".
     for r in &rows[1..] {
-        anyhow::ensure!(
+        tetris::ensure!(
             r.max_diff_vs_naive < 1e-9,
             "{} diverged from naive by {}",
             r.method,

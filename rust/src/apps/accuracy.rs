@@ -5,7 +5,7 @@
 //! absent) and buckets per-cell deviations against the FP64 run, exactly
 //! the paper's error histogram (<0.1 °C, 0.1–1.0 °C, >1.0 °C).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::runtime::XlaService;
 use crate::stencil::{spec, Field, StencilSpec};
@@ -32,47 +32,11 @@ pub fn deviation_buckets(reference: &Field, other: &Field) -> [f64; 3] {
     ]
 }
 
-/// Pure-rust FP32 periodic evolution (fallback oracle): every arithmetic
-/// step is rounded to f32, mirroring an all-f32 pipeline.
+/// Pure-rust FP32 periodic evolution (fallback oracle): true f32
+/// arithmetic throughout.  Shared with the runtime's f32 artifact path —
+/// see [`crate::stencil::reference::evolve_periodic_f32`].
 pub fn evolve_periodic_f32(u: &Field, s: &StencilSpec, steps: usize) -> Field {
-    let shape = u.shape().to_vec();
-    let mut cur: Vec<f32> = u.data().iter().map(|&x| x as f32).collect();
-    let (offs, cs) = s.taps();
-    let cs32: Vec<f32> = cs.iter().map(|&c| c as f32).collect();
-    let strides: Vec<i64> = {
-        let mut st = vec![1i64; shape.len()];
-        for i in (0..shape.len() - 1).rev() {
-            st[i] = st[i + 1] * shape[i + 1] as i64;
-        }
-        st
-    };
-    for _ in 0..steps {
-        let mut out = vec![0.0f32; cur.len()];
-        let mut idx = vec![0usize; shape.len()];
-        for (i, o) in out.iter_mut().enumerate() {
-            let mut acc = 0.0f32;
-            for (off, c) in offs.iter().zip(&cs32) {
-                let mut flat = 0i64;
-                for d in 0..shape.len() {
-                    let n = shape[d] as i64;
-                    let x = ((idx[d] as i64 + off[d]) % n + n) % n;
-                    flat += x * strides[d];
-                }
-                acc += c * cur[flat as usize];
-            }
-            *o = acc;
-            let _ = i;
-            for k in (0..shape.len()).rev() {
-                idx[k] += 1;
-                if idx[k] < shape[k] {
-                    break;
-                }
-                idx[k] = 0;
-            }
-        }
-        cur = out;
-    }
-    Field::from_vec(&shape, cur.into_iter().map(|x| x as f64).collect())
+    crate::stencil::reference::evolve_periodic_f32(u, s, steps)
 }
 
 /// Result of the accuracy study.
@@ -93,7 +57,7 @@ pub fn run_accuracy(rt: Option<&XlaService>, n: usize, blocks: usize) -> Result<
     if let Some(svc) = rt {
         let meta64 = svc.meta("thermal_f64")?.clone();
         let shape = &meta64.input_shape;
-        anyhow::ensure!(
+        crate::ensure!(
             shape == &init.shape().to_vec(),
             "thermal artifacts are {shape:?}; pass n={}",
             shape[0]

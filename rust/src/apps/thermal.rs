@@ -9,7 +9,7 @@
 //!   Tetris (GPU) — one XLA worker (AOT temporal-block artifact)
 //!   Tetris       — auto-tuned heterogeneous mix of both
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::coordinator::{
     partition::capacity_units, tuner, CommModel, NativeWorker, Partition, Scheduler, Worker,
@@ -66,17 +66,17 @@ fn scheduler_for(
         "naive" => vec![mk_native("naive")],
         "tetris-cpu" => vec![mk_native("tetris-cpu")],
         "tetris-gpu" => {
-            let svc = rt.ok_or_else(|| anyhow::anyhow!("tetris-gpu needs artifacts"))?;
+            let svc = rt.ok_or_else(|| crate::err!("tetris-gpu needs artifacts"))?;
             vec![Box::new(XlaWorker::new(svc.clone(), "thermal_block", 1 << 33)?)]
         }
         "tetris" => {
-            let svc = rt.ok_or_else(|| anyhow::anyhow!("tetris needs artifacts"))?;
+            let svc = rt.ok_or_else(|| crate::err!("tetris needs artifacts"))?;
             vec![
                 mk_native("tetris-cpu"),
                 Box::new(XlaWorker::new(svc.clone(), "thermal_block", 1 << 33)?),
             ]
         }
-        _ => anyhow::bail!("unknown method {method}"),
+        _ => crate::bail!("unknown method {method}"),
     };
     let partition = if workers.len() == 1 {
         Partition { unit, shares: vec![units] }

@@ -7,7 +7,7 @@
 use std::io::Write;
 use std::path::Path;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::stencil::Field;
 
@@ -48,7 +48,7 @@ fn write_ppm(path: &Path, w: usize, h: usize, rgb: &[u8]) -> Result<()> {
 
 /// Render a 2D field with the heat ramp over [lo, hi].
 pub fn save_heatmap(field: &Field, lo: f64, hi: f64, path: impl AsRef<Path>) -> Result<()> {
-    anyhow::ensure!(field.ndim() == 2, "heatmap needs a 2D field");
+    crate::ensure!(field.ndim() == 2, "heatmap needs a 2D field");
     let (h, w) = (field.shape()[0], field.shape()[1]);
     let span = (hi - lo).max(1e-300);
     let mut rgb = Vec::with_capacity(3 * w * h);
@@ -60,7 +60,7 @@ pub fn save_heatmap(field: &Field, lo: f64, hi: f64, path: impl AsRef<Path>) -> 
 
 /// Render the signed difference a-b (paper Fig. 16(d)).
 pub fn save_error_map(a: &Field, b: &Field, scale: f64, path: impl AsRef<Path>) -> Result<()> {
-    anyhow::ensure!(a.shape() == b.shape() && a.ndim() == 2, "shape mismatch");
+    crate::ensure!(a.shape() == b.shape() && a.ndim() == 2, "shape mismatch");
     let (h, w) = (a.shape()[0], a.shape()[1]);
     let mut rgb = Vec::with_capacity(3 * w * h);
     for (&x, &y) in a.data().iter().zip(b.data()) {

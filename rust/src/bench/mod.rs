@@ -5,9 +5,11 @@
 //! Problem sizes are scaled from paper Table 1 (see DESIGN.md §4) and
 //! configurable through [`BenchScale`].
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
-use anyhow::Result;
+use crate::util::error::Result;
+use crate::util::json::Json;
 
 use crate::coordinator::{
     partition::capacity_units, tuner, CommModel, NativeWorker, Partition, Scheduler, Worker,
@@ -120,7 +122,11 @@ pub fn hetero_scheduler(
     };
     let prof = tuner::profile_workers(&workers, &s, &unit_core, meta.tb, 2)?;
     let halo = s.radius * meta.tb;
-    let rest_cells: usize = meta.global_core[1..].iter().map(|n| n + 2 * halo).product::<usize>().max(1);
+    let rest_cells: usize = meta.global_core[1..]
+        .iter()
+        .map(|n| n + 2 * halo)
+        .product::<usize>()
+        .max(1);
     let caps: Vec<usize> = workers
         .iter()
         .map(|w| capacity_units(w.mem_capacity(), meta.unit, rest_cells))
@@ -144,10 +150,12 @@ pub fn hetero_scheduler(
 // Paper exhibits
 // ---------------------------------------------------------------------
 
-/// Fig. 12: performance breakdown on Star-1D5P, Box-2D25P, Box-3D27P.
+/// Fig. 12: performance breakdown, extended with the heat benchmarks and
+/// the work-stealing wavefront rung (tetris-wave vs tetris-cpu is the
+/// scheduler ablation the runtime work tracks).
 pub fn run_breakdown(rt: Option<&XlaService>, scale: f64, threads: usize) -> Vec<(String, Vec<Row>)> {
     let mut out = Vec::new();
-    for bench in ["star1d5p", "box2d25p", "box3d27p"] {
+    for bench in ["star1d5p", "heat2d", "box2d25p", "heat3d", "box3d27p"] {
         let s = spec::get(bench).unwrap();
         let (core, steps, tb) = scaled_problem(bench, scale);
         let mut rows = Vec::new();
@@ -161,6 +169,7 @@ pub fn run_breakdown(rt: Option<&XlaService>, scale: f64, threads: usize) -> Vec
                 tile_w: None,
             })),
             ("+multicore (Tetris CPU)", crate::engine::by_name("tetris-cpu", threads).unwrap()),
+            ("+wavefront DAG (tetris-wave)", crate::engine::by_name("tetris-wave", threads).unwrap()),
         ];
         for (label, eng) in rungs {
             let (g, _) = time_engine(eng.as_ref(), &s, &core, steps, tb);
@@ -362,6 +371,31 @@ pub fn run_mxu(rt: &XlaService) -> Result<Vec<Row>> {
     Ok(rows)
 }
 
+/// Single-line JSON summary of a bench run — the CI artifact format
+/// written by `tetris bench <which> --json FILE` / scripts/bench_smoke.sh.
+pub fn summary_json(which: &str, scale: f64, threads: usize, sections: &[(String, Vec<Row>)]) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str(which.to_string()));
+    top.insert("scale".to_string(), Json::Num(scale));
+    top.insert("threads".to_string(), Json::Num(threads as f64));
+    let mut secs = BTreeMap::new();
+    for (name, rows) in sections {
+        let arr: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("label".to_string(), Json::Str(r.label.clone()));
+                m.insert("gstencils_per_sec".to_string(), Json::Num(r.gstencils));
+                m.insert("speedup".to_string(), Json::Num(r.speedup));
+                Json::Obj(m)
+            })
+            .collect();
+        secs.insert(name.clone(), Json::Arr(arr));
+    }
+    top.insert("sections".to_string(), Json::Obj(secs));
+    Json::Obj(top)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -400,5 +434,23 @@ mod tests {
         );
         assert!(s.contains("GStencils/s"));
         assert!(s.contains("2.00x"));
+    }
+
+    #[test]
+    fn summary_json_is_single_line_and_parses() {
+        let sections = vec![(
+            "heat2d".to_string(),
+            vec![Row { label: "naive".into(), gstencils: 0.25, speedup: 1.0, extra: String::new() }],
+        )];
+        let j = summary_json("breakdown", 0.1, 2, &sections);
+        let text = j.to_string();
+        assert!(!text.contains('\n'));
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.at(&["bench"]).as_str(), Some("breakdown"));
+        assert_eq!(back.at(&["sections", "heat2d"]).as_arr().unwrap().len(), 1);
+        assert_eq!(
+            back.at(&["sections", "heat2d"]).as_arr().unwrap()[0].at(&["label"]).as_str(),
+            Some("naive")
+        );
     }
 }

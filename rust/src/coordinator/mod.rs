@@ -4,7 +4,10 @@
 //!   bidirectional memory squeezing (§5.1);
 //! * [`tuner`] — profile-initialized auto-tuning balance (§5.2);
 //! * [`comm`] — α+β model + centralized-launch accounting (§5.3);
-//! * [`worker`] — native-CPU and PJRT-artifact workers;
+//! * [`worker`] — native-CPU and artifact workers;
+//! * [`pool`] — work-stealing deque pool primitives used by both the
+//!   engines and the pipeline (steal_map + dependency-DAG execution;
+//!   each call runs its own scoped pool);
 //! * [`pipeline`] — the block-synchronous heterogeneous driver (Fig. 11);
 //! * [`metrics`] — Eq.-5 throughput, bubbles, comm totals.
 
@@ -12,6 +15,7 @@ pub mod comm;
 pub mod metrics;
 pub mod partition;
 pub mod pipeline;
+pub mod pool;
 pub mod tuner;
 pub mod worker;
 

@@ -150,6 +150,50 @@ mod tests {
     }
 
     #[test]
+    fn zero_capacity_worker_gets_nothing() {
+        // A worker with no memory must end with share 0, regardless of
+        // its weight; the whole domain spills to the others.
+        let p = Partition::balanced(4, 10, &[9.0, 1.0], &[0, 100]);
+        assert_eq!(p.shares, vec![0, 10]);
+        assert_eq!(p.total_units(), 10);
+        assert_eq!(p.ratio(0), 0.0);
+        // spans stay contiguous even with an empty leading share
+        assert_eq!(p.spans(), vec![(0, 0), (0, 40)]);
+    }
+
+    #[test]
+    fn single_unit_grid_goes_to_heaviest() {
+        let p = Partition::balanced(64, 1, &[0.2, 0.7, 0.1], &[10, 10, 10]);
+        assert_eq!(p.total_units(), 1);
+        assert_eq!(p.shares, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn squeeze_underflow_spills_everything() {
+        // The fast worker's floored ideal share (9) far exceeds its
+        // capacity (2): the squeezer must not underflow, and the slow
+        // worker absorbs the rest.
+        let p = Partition::balanced(1, 10, &[99.0, 1.0], &[2, 100]);
+        assert_eq!(p.shares, vec![2, 8]);
+        assert_eq!(p.total_units(), 10);
+    }
+
+    #[test]
+    fn exact_capacity_fit_is_feasible() {
+        // Total capacity == units: every worker is filled to its cap.
+        let p = Partition::balanced(2, 7, &[1.0, 1.0, 1.0], &[3, 2, 2]);
+        assert_eq!(p.total_units(), 7);
+        assert_eq!(p.shares, vec![3, 2, 2]);
+    }
+
+    #[test]
+    fn capacity_units_zero_bytes() {
+        assert_eq!(capacity_units(0, 64, 256), 0);
+        // sub-unit capacity also rounds down to zero
+        assert_eq!(capacity_units(3 * 64 * 256 * 8 - 1, 64, 256), 0);
+    }
+
+    #[test]
     fn ratio_matches_shares() {
         let p = Partition { unit: 1, shares: vec![1, 3] };
         assert!((p.ratio(1) - 0.75).abs() < 1e-12);

@@ -3,7 +3,7 @@
 //! The leader holds the global extended field.  Per Tb-block it
 //! (1) snapshots each worker's slab + ghost ring (the halo exchange —
 //! batched once per block, the §5.3 centralized communication launch),
-//! (2) dispatches every worker concurrently on scoped threads,
+//! (2) dispatches every worker concurrently on the work-stealing pool,
 //! (3) writes the slabs back, accounting busy/idle time and comm volume.
 //!
 //! Boundary condition: Dirichlet — the ghost ring keeps its initial
@@ -13,7 +13,7 @@
 
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::stencil::{Field, StencilSpec};
 
@@ -40,18 +40,18 @@ impl Scheduler {
         total_steps: usize,
         boundary: f64,
     ) -> Result<(Field, RunMetrics)> {
-        anyhow::ensure!(self.tb >= 1, "tb must be >= 1");
-        anyhow::ensure!(
+        crate::ensure!(self.tb >= 1, "tb must be >= 1");
+        crate::ensure!(
             total_steps % self.tb == 0,
             "total_steps {total_steps} not a multiple of Tb {}",
             self.tb
         );
-        anyhow::ensure!(
+        crate::ensure!(
             !self.workers.is_empty() && self.workers.len() == self.partition.shares.len(),
             "workers/partition mismatch"
         );
         let spans = self.partition.spans();
-        anyhow::ensure!(
+        crate::ensure!(
             spans.last().unwrap().1 == core.shape()[0],
             "partition covers {} rows, domain has {}",
             spans.last().unwrap().1,
@@ -88,9 +88,9 @@ impl Scheduler {
                 comm.record_exchange(2 * halo * rest_cells * 8, self.tb);
             }
 
-            // (2) Concurrent dispatch.
+            // (2) Concurrent dispatch on the shared work-stealing pool.
             let results: Vec<(Result<Field>, Duration)> =
-                dispatch(&self.workers, &self.spec, inputs, self.tb);
+                dispatch(&self.workers, &self.spec, &inputs, self.tb);
 
             // (3) Writeback + accounting.
             let slowest = results.iter().map(|(_, d)| *d).max().unwrap_or_default();
@@ -119,26 +119,16 @@ impl Scheduler {
     }
 }
 
-/// Run every worker on its input concurrently; returns per-worker
-/// (result, busy time) in worker order.
-fn dispatch(
-    workers: &[Box<dyn Worker>],
-    spec: &StencilSpec,
-    inputs: Vec<Field>,
-    tb: usize,
-) -> Vec<(Result<Field>, Duration)> {
-    let mut out: Vec<Option<(Result<Field>, Duration)>> =
-        (0..workers.len()).map(|_| None).collect();
-    std::thread::scope(|scope| {
-        for ((slot, worker), input) in out.iter_mut().zip(workers).zip(inputs) {
-            scope.spawn(move || {
-                let t0 = Instant::now();
-                let res = worker.run_slab(spec, &input, tb);
-                *slot = Some((res, t0.elapsed()));
-            });
-        }
-    });
-    out.into_iter().map(|x| x.unwrap()).collect()
+/// Run every worker on its input concurrently on a pool scope; returns
+/// per-worker (result, busy time) in worker order.  One task per worker
+/// — pools are ephemeral per call, so engine-internal tile pools nested
+/// inside a worker stay independent of this dispatch scope.
+fn dispatch(workers: &[Box<dyn Worker>], spec: &StencilSpec, inputs: &[Field], tb: usize) -> Vec<(Result<Field>, Duration)> {
+    super::pool::steal_map(workers.len(), workers.len(), |i| {
+        let t0 = Instant::now();
+        let res = workers[i].run_slab(spec, &inputs[i], tb);
+        (res, t0.elapsed())
+    })
 }
 
 /// Single-worker reference evolution with the same Dirichlet semantics —

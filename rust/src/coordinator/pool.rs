@@ -1,0 +1,336 @@
+//! Work-stealing task pool shared by the engines and the coordinator.
+//!
+//! Std-only (mutex deques rather than chase-lev): each worker owns a
+//! deque — LIFO pop from its own tail for locality, FIFO steal from
+//! other queues' heads when empty — and a global injector seeds
+//! initially-ready work.  [`run_dag`] adds per-task dependency tracking:
+//! successors are released the instant their last predecessor finishes,
+//! with no global phase barrier (the temporal-wavefront enabler).
+//! [`steal_map`] is the order-preserving dynamic parallel map built on
+//! top — the replacement for the old even-chunk fork-join
+//! `parallel_map`, which serialized on the slowest chunk whenever tile
+//! costs are irregular (boundary tiles, squeezed partitions, mixed
+//! worker speeds).
+//!
+//! Pools are ephemeral and scoped: threads live for one `run_dag` call
+//! and may borrow the caller's stack, so engines can schedule tasks over
+//! fields they only hold by reference.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// A unit of work scheduled on the pool.
+pub type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+struct Shared<'a> {
+    /// One deque per worker: own tail = LIFO, thief head = FIFO.
+    queues: Vec<Mutex<VecDeque<usize>>>,
+    /// Seed queue for initially-ready tasks.
+    injector: Mutex<VecDeque<usize>>,
+    /// Task bodies, taken exactly once.
+    slots: Vec<Mutex<Option<Task<'a>>>>,
+    /// Unmet-dependency count per task.
+    pending: Vec<AtomicUsize>,
+    /// Reverse edges: tasks to release on completion.
+    succs: Vec<Vec<usize>>,
+    /// Tasks not yet finished (0 = shutdown).
+    remaining: AtomicUsize,
+    /// A task panicked: stop scheduling, re-raise on the caller.
+    poisoned: AtomicBool,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    idle: Mutex<()>,
+    wake: Condvar,
+}
+
+impl<'a> Shared<'a> {
+    fn pop(&self, w: usize) -> Option<usize> {
+        if let Some(t) = self.queues[w].lock().unwrap().pop_back() {
+            return Some(t);
+        }
+        if let Some(t) = self.injector.lock().unwrap().pop_front() {
+            return Some(t);
+        }
+        let n = self.queues.len();
+        for d in 1..n {
+            if let Some(t) = self.queues[(w + d) % n].lock().unwrap().pop_front() {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    fn has_work(&self) -> bool {
+        if !self.injector.lock().unwrap().is_empty() {
+            return true;
+        }
+        self.queues.iter().any(|q| !q.lock().unwrap().is_empty())
+    }
+
+    fn run_task(&self, w: usize, t: usize) {
+        let task = self.slots[t].lock().unwrap().take().expect("task scheduled twice");
+        if let Err(p) = catch_unwind(AssertUnwindSafe(task)) {
+            // Abort the whole graph; run_dag re-raises on the caller.
+            *self.panic.lock().unwrap() = Some(p);
+            self.poisoned.store(true, Ordering::Release);
+            self.wake.notify_all();
+            return;
+        }
+        for &s in &self.succs[t] {
+            if self.pending[s].fetch_sub(1, Ordering::AcqRel) == 1 {
+                self.queues[w].lock().unwrap().push_back(s);
+                self.wake.notify_all();
+            }
+        }
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.wake.notify_all();
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire) || self.remaining.load(Ordering::Acquire) == 0
+    }
+
+    fn worker(&self, w: usize) {
+        loop {
+            if self.done() {
+                return;
+            }
+            if let Some(t) = self.pop(w) {
+                self.run_task(w, t);
+                continue;
+            }
+            let guard = self.idle.lock().unwrap();
+            if self.done() || self.has_work() {
+                continue;
+            }
+            // Bounded park: a push can race past the checks above, so
+            // never sleep unboundedly on a missed notification.
+            let _ = self.wake.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+        }
+    }
+}
+
+/// Execute a dependency graph of tasks on up to `threads` workers.
+///
+/// `deps[i]` lists the predecessor indices of task `i`; a task becomes
+/// runnable when all its predecessors have finished.  The caller's thread
+/// is worker 0, so `threads == 1` runs everything inline (deterministic
+/// topological order).  Panics in any task are re-raised here after the
+/// pool drains.
+pub fn run_dag<'a>(threads: usize, tasks: Vec<Task<'a>>, deps: &[Vec<usize>]) {
+    let n = tasks.len();
+    assert_eq!(deps.len(), n, "deps/tasks length mismatch");
+    if n == 0 {
+        return;
+    }
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut pending_init: Vec<usize> = vec![0; n];
+    for (i, ds) in deps.iter().enumerate() {
+        for &d in ds {
+            assert!(d < n && d != i, "bad dependency {d} -> {i}");
+            succs[d].push(i);
+            pending_init[i] += 1;
+        }
+    }
+    // Cheap Kahn pass up-front: a cycle would deadlock the pool.
+    {
+        let mut p = pending_init.clone();
+        let mut q: VecDeque<usize> = (0..n).filter(|&i| p[i] == 0).collect();
+        let mut seen = 0usize;
+        while let Some(i) = q.pop_front() {
+            seen += 1;
+            for &s in &succs[i] {
+                p[s] -= 1;
+                if p[s] == 0 {
+                    q.push_back(s);
+                }
+            }
+        }
+        assert_eq!(seen, n, "dependency cycle in task graph");
+    }
+    if threads <= 1 || n == 1 {
+        let mut slots: Vec<Option<Task<'a>>> = tasks.into_iter().map(Some).collect();
+        let mut ready: VecDeque<usize> = (0..n).filter(|&i| pending_init[i] == 0).collect();
+        while let Some(i) = ready.pop_front() {
+            (slots[i].take().expect("task ran twice"))();
+            for &s in &succs[i] {
+                pending_init[s] -= 1;
+                if pending_init[s] == 0 {
+                    ready.push_back(s);
+                }
+            }
+        }
+        return;
+    }
+    let nworkers = threads.min(n);
+    let shared = Shared {
+        queues: (0..nworkers).map(|_| Mutex::new(VecDeque::new())).collect(),
+        injector: Mutex::new((0..n).filter(|&i| pending_init[i] == 0).collect()),
+        slots: tasks.into_iter().map(|t| Mutex::new(Some(t))).collect(),
+        pending: pending_init.iter().map(|&p| AtomicUsize::new(p)).collect(),
+        succs,
+        remaining: AtomicUsize::new(n),
+        poisoned: AtomicBool::new(false),
+        panic: Mutex::new(None),
+        idle: Mutex::new(()),
+        wake: Condvar::new(),
+    };
+    let sh = &shared;
+    std::thread::scope(|scope| {
+        for w in 1..nworkers {
+            scope.spawn(move || sh.worker(w));
+        }
+        sh.worker(0);
+    });
+    if let Some(p) = shared.panic.into_inner().unwrap() {
+        resume_unwind(p);
+    }
+}
+
+/// Dynamic (self-scheduling) parallel map over `0..n`, order-preserving.
+///
+/// Unlike an even-chunk fork-join split, workers pull one index at a
+/// time and steal from each other, so wall-clock tracks total work
+/// rather than the slowest chunk.
+pub fn steal_map<T: Send>(threads: usize, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads <= 1 || n == 1 {
+        return (0..n).map(f).collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    {
+        let fr = &f;
+        let sr = &slots;
+        let tasks: Vec<Task<'_>> = (0..n)
+            .map(|i| {
+                Box::new(move || {
+                    let v = fr(i);
+                    *sr[i].lock().unwrap() = Some(v);
+                }) as Task<'_>
+            })
+            .collect();
+        run_dag(threads, tasks, &vec![Vec::new(); n]);
+    }
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("steal_map task skipped"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn steal_map_preserves_order() {
+        for threads in [1usize, 2, 4, 16] {
+            let v = steal_map(threads, 23, |i| i * i);
+            assert_eq!(v, (0..23).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn steal_map_empty_and_single() {
+        assert!(steal_map(4, 0, |i| i).is_empty());
+        assert_eq!(steal_map(4, 1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn steal_map_irregular_costs() {
+        // One task is 100x the others: dynamic scheduling must still
+        // return every result in order (the perf property is benched,
+        // not tested).
+        let v = steal_map(4, 12, |i| {
+            let reps: u64 = if i == 0 { 200_000 } else { 2_000 };
+            let acc: u64 = (0..reps).fold(0, |a, k| a.wrapping_add(k));
+            (i, acc)
+        });
+        for (i, (slot, acc)) in v.iter().enumerate() {
+            let reps: u64 = if i == 0 { 200_000 } else { 2_000 };
+            assert_eq!(*slot, i);
+            assert_eq!(*acc, reps * (reps - 1) / 2);
+        }
+    }
+
+    #[test]
+    fn run_dag_respects_dependencies() {
+        // Diamond: 0 -> {1, 2} -> 3, plus a chain 4 -> 5.
+        for threads in [1usize, 2, 8] {
+            let order = Mutex::new(Vec::new());
+            let mark = |i: usize| {
+                let order = &order;
+                move || order.lock().unwrap().push(i)
+            };
+            let tasks: Vec<Task<'_>> = vec![
+                Box::new(mark(0)),
+                Box::new(mark(1)),
+                Box::new(mark(2)),
+                Box::new(mark(3)),
+                Box::new(mark(4)),
+                Box::new(mark(5)),
+            ];
+            let deps = vec![vec![], vec![0], vec![0], vec![1, 2], vec![], vec![4]];
+            run_dag(threads, tasks, &deps);
+            let order = order.into_inner().unwrap();
+            assert_eq!(order.len(), 6);
+            let pos = |i: usize| order.iter().position(|&x| x == i).unwrap();
+            assert!(pos(0) < pos(1) && pos(0) < pos(2), "{order:?}");
+            assert!(pos(1) < pos(3) && pos(2) < pos(3), "{order:?}");
+            assert!(pos(4) < pos(5), "{order:?}");
+        }
+    }
+
+    #[test]
+    fn run_dag_wide_wavefront() {
+        // Two-layer wavefront like the tessellation DAG: B_k depends on
+        // A_k and A_{k+1}.  Every task must run exactly once.
+        let n = 17;
+        let ran = (0..2 * n - 1).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>();
+        let mut tasks: Vec<Task<'_>> = Vec::new();
+        let mut deps: Vec<Vec<usize>> = Vec::new();
+        for i in 0..2 * n - 1 {
+            let r = &ran;
+            tasks.push(Box::new(move || {
+                r[i].fetch_add(1, Ordering::Relaxed);
+            }));
+            deps.push(if i < n { vec![] } else { vec![i - n, i - n + 1] });
+        }
+        run_dag(4, tasks, &deps);
+        assert!(ran.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn run_dag_panic_propagates() {
+        for threads in [1usize, 4] {
+            let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                steal_map(threads, 8, |i| {
+                    if i == 3 {
+                        panic!("injected pool fault");
+                    }
+                    i
+                })
+            }));
+            let err = r.expect_err("panic must propagate");
+            let msg = err
+                .downcast_ref::<&str>()
+                .copied()
+                .map(String::from)
+                .or_else(|| err.downcast_ref::<String>().cloned())
+                .unwrap_or_default();
+            assert!(msg.contains("injected pool fault"), "threads={threads}: {msg}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "dependency cycle")]
+    fn run_dag_rejects_cycles() {
+        let tasks: Vec<Task<'_>> = vec![Box::new(|| {}), Box::new(|| {})];
+        run_dag(2, tasks, &[vec![1], vec![0]]);
+    }
+}

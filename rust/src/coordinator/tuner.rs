@@ -8,7 +8,7 @@
 //! capacity-respecting balanced partition, and [`retune`] refines it
 //! from measured per-block times (architecture-aware rebalance).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::stencil::{Field, StencilSpec};
 
@@ -186,5 +186,56 @@ mod tests {
         let q = retune(&p, &[0.010, 0.002], &ws, 64);
         assert_eq!(q.total_units(), 10);
         assert!(q.shares[1] > q.shares[0]);
+    }
+
+    #[test]
+    fn tune_zero_capacity_worker_is_skipped() {
+        // Worker 1 reports a memory capacity below one unit: the tuner
+        // must hand its whole ideal share to worker 0 (fast profile or
+        // not), never a negative / wrapped share.
+        let ws = workers(&[1 << 30, 16]);
+        let p = tune(4, 8, 64, &[5e-3, 1e-3], &ws);
+        assert_eq!(p.shares, vec![8, 0]);
+        assert_eq!(p.total_units(), 8);
+    }
+
+    #[test]
+    fn tune_single_unit_grid() {
+        let ws = workers(&[1 << 30, 1 << 30]);
+        // One unit total: it lands on the faster worker, and retuning a
+        // single-unit partition stays feasible.
+        let p = tune(16, 1, 64, &[4e-3, 1e-3], &ws);
+        assert_eq!(p.total_units(), 1);
+        assert_eq!(p.shares, vec![0, 1]);
+        let q = retune(&p, &[1e-9, 2e-3], &ws, 64);
+        assert_eq!(q.total_units(), 1);
+    }
+
+    #[test]
+    fn retune_zero_share_worker_keeps_exploration_weight() {
+        // A squeezed-out worker (share 0) must keep a nonzero weight so
+        // a later rebalance can bring it back when the loaded worker
+        // turns out to be slow.
+        let ws = workers(&[1 << 30, 1 << 30]);
+        let p = Partition { unit: 1, shares: vec![0, 12] };
+        let q = retune(&p, &[1e-3, 1e-1], &ws, 64);
+        assert_eq!(q.total_units(), 12);
+        assert!(q.shares[0] > 0, "{q:?}");
+    }
+
+    #[test]
+    fn converge_single_worker_trivial() {
+        let ws = workers(&[1 << 30]);
+        let start = Partition { unit: 2, shares: vec![6] };
+        let (p, iters) = converge(start.clone(), &[1e-3], &ws, 64, 0.1, 5);
+        assert_eq!(p, start);
+        assert_eq!(iters, 0);
+    }
+
+    #[test]
+    fn profile_workers_empty_list() {
+        let s = spec::get("heat1d").unwrap();
+        let ws: Vec<Box<dyn Worker>> = Vec::new();
+        assert!(profile_workers(&ws, &s, &[8], 1, 1).unwrap().is_empty());
     }
 }

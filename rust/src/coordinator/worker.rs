@@ -8,7 +8,7 @@
 //!   unit-slab per invocation (the accelerator stand-in; its artifacts
 //!   embed the Pallas temporal-block / MXU kernels).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::engine::Engine;
 use crate::runtime::{ArtifactMeta, XlaService};
@@ -94,7 +94,7 @@ impl Worker for XlaWorker {
 
     fn run_slab(&self, spec: &StencilSpec, input: &Field, steps: usize) -> Result<Field> {
         let meta = &self.meta;
-        anyhow::ensure!(
+        crate::ensure!(
             steps == meta.steps,
             "{}: artifact fuses {} steps, scheduler asked {steps}",
             meta.name,
@@ -104,12 +104,12 @@ impl Worker for XlaWorker {
         let nd = input.ndim();
         let unit = self.unit();
         let slab_core0 = input.shape()[0] - 2 * halo;
-        anyhow::ensure!(
+        crate::ensure!(
             slab_core0 % unit == 0,
             "slab rows {slab_core0} not unit-aligned (unit {unit})"
         );
         let rest_core: Vec<usize> = meta.unit_core[1..].to_vec();
-        anyhow::ensure!(
+        crate::ensure!(
             input.shape()[1..]
                 .iter()
                 .zip(&rest_core)

@@ -13,6 +13,8 @@
 //!   tiled       — spatial cache tiling on top of `simd` rows
 //!   tessellate  — two-phase non-redundant temporal tessellation (§4.1)
 //!                 with optional thread parallelism: Tetris (CPU)
+//!   wavefront   — the same diamond decomposition scheduled as a
+//!                 dependency DAG on the work-stealing pool: tetris-wave
 
 pub mod autovec;
 pub mod naive;
@@ -20,6 +22,7 @@ pub mod rowwise;
 pub mod simd;
 pub mod tessellate;
 pub mod tiled;
+pub mod wavefront;
 
 use crate::stencil::{Field, StencilSpec};
 
@@ -70,33 +73,14 @@ impl FlatTaps {
     }
 }
 
-/// Map `k in 0..n` over up to `threads` scoped worker threads, preserving
-/// order.  The shared fork-join primitive for the two tessellation phases
-/// and every tile-parallel baseline.
-pub fn parallel_map<T: Send>(
-    threads: usize,
-    n: usize,
-    f: impl Fn(usize) -> T + Sync,
-) -> Vec<T> {
-    if n == 0 {
-        return Vec::new();
-    }
-    if threads <= 1 || n == 1 {
-        return (0..n).map(f).collect();
-    }
-    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (t, slot_chunk) in out.chunks_mut(chunk).enumerate() {
-            let f = &f;
-            scope.spawn(move || {
-                for (i, slot) in slot_chunk.iter_mut().enumerate() {
-                    *slot = Some(f(t * chunk + i));
-                }
-            });
-        }
-    });
-    out.into_iter().map(|x| x.unwrap()).collect()
+/// Map `k in 0..n` over up to `threads` workers, preserving order.  The
+/// shared parallel primitive for the tessellation phases and every
+/// tile-parallel baseline.  Backed by the work-stealing deque pool
+/// ([`crate::coordinator::pool::steal_map`]): workers self-schedule one
+/// index at a time, so irregular tile costs no longer serialize on the
+/// slowest even chunk.
+pub fn parallel_map<T: Send>(threads: usize, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    crate::coordinator::pool::steal_map(threads, n, f)
 }
 
 /// Registry of all CPU engines by CLI name.
@@ -108,13 +92,13 @@ pub fn by_name(name: &str, threads: usize) -> Option<Box<dyn Engine>> {
         "tiled" => Some(Box::new(tiled::TiledEngine::default())),
         "tessellate" => Some(Box::new(tessellate::TessellateEngine::scalar())),
         "tetris-cpu" => Some(Box::new(tessellate::TessellateEngine::tetris(threads))),
+        "tetris-wave" => Some(Box::new(wavefront::WavefrontEngine::new(threads))),
         _ => None,
     }
 }
 
 /// All engine names, for CLI help and sweep benches.
-pub const ENGINE_NAMES: &[&str] =
-    &["naive", "autovec", "simd", "tiled", "tessellate", "tetris-cpu"];
+pub const ENGINE_NAMES: &[&str] = &["naive", "autovec", "simd", "tiled", "tessellate", "tetris-cpu", "tetris-wave"];
 
 #[cfg(test)]
 mod tests {

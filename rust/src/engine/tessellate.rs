@@ -16,7 +16,11 @@
 //!
 //! With `fused` inner rows and thread parallelism this is **Tetris
 //! (CPU)**; with tap-outer rows and one thread it is the bare
-//! "Tessellate Tiling" rung of the Fig-12 breakdown.
+//! "Tessellate Tiling" rung of the Fig-12 breakdown.  The geometry
+//! helpers ([`build_pyramid`], [`build_inverted`], [`tile_boundaries`],
+//! [`assemble`]) are shared with the dependency-driven
+//! [`wavefront`](super::wavefront) engine, which runs the same diamond
+//! decomposition without the phase barrier.
 
 use crate::stencil::{Field, StencilSpec};
 
@@ -31,73 +35,67 @@ pub enum Inner {
     Fused,
 }
 
-pub struct TessellateEngine {
-    pub inner: Inner,
-    pub threads: usize,
-    /// Tile width along dim 0; None = cache heuristic.
-    pub tile_w: Option<usize>,
+/// One full valid step with the chosen inner strategy.
+pub(crate) fn step_once(inner: Inner, spec: &StencilSpec, f: &Field) -> Field {
+    let taps = FlatTaps::build(spec, f.shape());
+    match inner {
+        Inner::Axpy => rowwise::axpy_step(f, spec, &taps),
+        Inner::Fused => rowwise::fused_step(f, spec, &taps),
+    }
 }
 
-impl TessellateEngine {
-    /// Bare tessellation: scalar-ish rows, single thread (Fig 12 rung 2).
-    pub fn scalar() -> Self {
-        TessellateEngine { inner: Inner::Axpy, threads: 1, tile_w: None }
+/// Tile boundaries along dim 0 of the extended array.  The default width
+/// targets an L2-sized pyramid: tile_w x rest_cells x 8 B x (steps+1
+/// levels) ~ 512 KiB, so phase A stays cache-resident and the per-tile
+/// bookkeeping amortizes (perf pass: the old fixed 256-element width made
+/// 1-D tessellation slower than naive).  `min_tiles` lets dependency-
+/// driven schedulers oversubscribe the pool with smaller tiles so
+/// stealing has slack; it only adjusts the heuristic — an explicit
+/// `tile_w` override wins — and every tile keeps width >= 2*halo.
+pub(crate) fn tile_boundaries(
+    tile_w: Option<usize>,
+    ext0: usize,
+    halo: usize,
+    rest_cells: usize,
+    steps: usize,
+    min_tiles: usize,
+) -> Vec<usize> {
+    let min_w = (2 * halo).max(1);
+    let budget_bytes = 512 << 10;
+    let auto_w = budget_bytes / (rest_cells.max(1) * 8 * (steps + 1));
+    let want_w = tile_w.unwrap_or(auto_w).max(min_w);
+    let mut ntiles = (ext0 / want_w).max(1);
+    if tile_w.is_none() {
+        ntiles = ntiles.max(min_tiles);
     }
-
-    /// Tetris (CPU): tessellation + fused rows + multicore.
-    pub fn tetris(threads: usize) -> Self {
-        TessellateEngine { inner: Inner::Fused, threads: threads.max(1), tile_w: None }
+    // Every tile keeps width >= min_w because ntiles <= ext0 / min_w.
+    let ntiles = ntiles.min((ext0 / min_w).max(1));
+    let mut bs = Vec::with_capacity(ntiles + 1);
+    for i in 0..=ntiles {
+        bs.push(i * ext0 / ntiles);
     }
-
-    fn step_once(&self, spec: &StencilSpec, f: &Field) -> Field {
-        let taps = FlatTaps::build(spec, f.shape());
-        match self.inner {
-            Inner::Axpy => rowwise::axpy_step(f, spec, &taps),
-            Inner::Fused => rowwise::fused_step(f, spec, &taps),
-        }
-    }
-
-    /// Tile boundaries along dim 0 of the extended array.  The default
-    /// width targets an L2-sized pyramid: tile_w x rest_cells x 8 B x
-    /// (steps+1 levels) ~ 512 KiB, so phase A stays cache-resident and
-    /// the per-tile bookkeeping amortizes (perf pass: the old fixed
-    /// 256-element width made 1-D tessellation slower than naive).
-    fn boundaries(&self, ext0: usize, halo: usize, rest_cells: usize, steps: usize) -> Vec<usize> {
-        let min_w = (2 * halo).max(1);
-        let budget_bytes = 512 << 10;
-        let auto_w = budget_bytes / (rest_cells.max(1) * 8 * (steps + 1));
-        let want_w = self.tile_w.unwrap_or(auto_w).max(min_w);
-        let ntiles = (ext0 / want_w).max(1);
-        // Even split; every tile keeps width >= min_w because
-        // ntiles <= ext0 / min_w.
-        let ntiles = ntiles.min((ext0 / min_w).max(1));
-        let mut bs = Vec::with_capacity(ntiles + 1);
-        for i in 0..=ntiles {
-            bs.push(i * ext0 / ntiles);
-        }
-        bs
-    }
+    bs
 }
 
 /// Phase-A pyramid for the tile [x0, x1): `levels[t]` (t >= 1) covers
 /// dim0 `[x0 + r*t, x1 - r*t)` and rest dims `[r*t, Nj - r*t)`.  Level 0
 /// is NOT materialized (perf pass: the tile copy doubled HBM traffic);
 /// level 1 is computed straight off the shared input with offset rows.
-struct Pyramid {
+pub(crate) struct Pyramid {
     /// levels[t-1] = time level t, for t in 1..=steps.
-    levels: Vec<Field>,
-    x0: usize,
+    pub(crate) levels: Vec<Field>,
+    pub(crate) x0: usize,
 }
 
 impl Pyramid {
-    fn level(&self, t: usize) -> &Field {
+    pub(crate) fn level(&self, t: usize) -> &Field {
         debug_assert!(t >= 1);
         &self.levels[t - 1]
     }
 }
 
-fn build_pyramid(
-    eng: &TessellateEngine,
+pub(crate) fn build_pyramid(
+    inner: Inner,
     spec: &StencilSpec,
     input: &Field,
     x0: usize,
@@ -105,10 +103,10 @@ fn build_pyramid(
     steps: usize,
 ) -> Pyramid {
     let taps = FlatTaps::build(spec, input.shape());
-    let fused = eng.inner == Inner::Fused;
+    let fused = inner == Inner::Fused;
     let mut levels = vec![rowwise::fused_step_slab(input, spec, &taps, x0, x1, fused)];
     for _ in 1..steps {
-        let next = eng.step_once(spec, levels.last().unwrap());
+        let next = step_once(inner, spec, levels.last().unwrap());
         levels.push(next);
     }
     Pyramid { levels, x0 }
@@ -118,8 +116,8 @@ fn build_pyramid(
 /// Returns the final-level field covering dim0 `[b - H, b + H)` (ext
 /// coordinates), rest dims equal to the core extent.
 #[allow(clippy::too_many_arguments)]
-fn build_inverted(
-    eng: &TessellateEngine,
+pub(crate) fn build_inverted(
+    inner: Inner,
     spec: &StencilSpec,
     input: &Field,
     l: &Pyramid,
@@ -131,10 +129,9 @@ fn build_inverted(
     let r = spec.radius;
     let nd = ext.len();
     let input_taps = FlatTaps::build(spec, input.shape());
-    let fused = eng.inner == Inner::Fused;
+    let fused = inner == Inner::Fused;
     // Level 1 of the gap straight off the input (level 0 is virtual).
-    let mut inv: Field =
-        rowwise::fused_step_slab(input, spec, &input_taps, b - 2 * r, b + 2 * r, fused);
+    let mut inv: Field = rowwise::fused_step_slab(input, spec, &input_taps, b - 2 * r, b + 2 * r, fused);
     for t in 2..=steps {
         // Source buffer at level t-1: dim0 [b - r*(t+1), b + r*(t+1)),
         // rest dims [r*(t-1), Nj - r*(t-1)).
@@ -167,9 +164,54 @@ fn build_inverted(
         dst_r.extend(vec![0usize; nd - 1]);
         buf.paste(&dst_r, &rf.extract(&off_r, &shp_r));
 
-        inv = eng.step_once(spec, &buf);
+        inv = step_once(inner, spec, &buf);
     }
     inv
+}
+
+/// Assemble the output core from pyramid tops and gap triangles.
+pub(crate) fn assemble(ext: &[usize], halo: usize, steps: usize, bs: &[usize], pyramids: &[Pyramid], inverted: &[Field]) -> Field {
+    let core: Vec<usize> = ext.iter().map(|n| n - 2 * halo).collect();
+    let mut out = Field::zeros(&core);
+    for p in pyramids {
+        let top = p.level(steps); // dim0 [x0 + H, x1 - H)
+        if top.shape().iter().any(|&n| n == 0) {
+            continue;
+        }
+        let mut off = vec![p.x0]; // out dim0 = ext dim0 - H
+        off.extend(vec![0usize; ext.len() - 1]);
+        out.paste(&off, top);
+    }
+    for (k, f) in inverted.iter().enumerate() {
+        let b = bs[k + 1];
+        let mut off = vec![b - 2 * halo]; // [b - H, b + H) - H
+        off.extend(vec![0usize; ext.len() - 1]);
+        out.paste(&off, f);
+    }
+    out
+}
+
+pub struct TessellateEngine {
+    pub inner: Inner,
+    pub threads: usize,
+    /// Tile width along dim 0; None = cache heuristic.
+    pub tile_w: Option<usize>,
+}
+
+impl TessellateEngine {
+    /// Bare tessellation: scalar-ish rows, single thread (Fig 12 rung 2).
+    pub fn scalar() -> Self {
+        TessellateEngine { inner: Inner::Axpy, threads: 1, tile_w: None }
+    }
+
+    /// Tetris (CPU): tessellation + fused rows + multicore.
+    pub fn tetris(threads: usize) -> Self {
+        TessellateEngine { inner: Inner::Fused, threads: threads.max(1), tile_w: None }
+    }
+
+    fn boundaries(&self, ext0: usize, halo: usize, rest_cells: usize, steps: usize) -> Vec<usize> {
+        tile_boundaries(self.tile_w, ext0, halo, rest_cells, steps, 1)
+    }
 }
 
 impl Engine for TessellateEngine {
@@ -195,34 +237,17 @@ impl Engine for TessellateEngine {
         let bs = self.boundaries(ext[0], halo, rest_cells, steps);
         let ntiles = bs.len() - 1;
 
-        // ---- Phase A: triangle pyramids (parallel over tiles) ----------
-        let pyramids: Vec<Pyramid> = super::parallel_map(self.threads, ntiles, |k| {
-            build_pyramid(self, spec, input, bs[k], bs[k + 1], steps)
-        });
+        // ---- Phase A: triangle pyramids (work-stealing over tiles) -----
+        let pyramids: Vec<Pyramid> =
+            super::parallel_map(self.threads, ntiles, |k| build_pyramid(self.inner, spec, input, bs[k], bs[k + 1], steps));
 
-        // ---- Phase B: inverted triangles (parallel over boundaries) ----
+        // ---- Phase B: inverted triangles (work-stealing, boundaries) ---
         let inverted: Vec<Field> = super::parallel_map(self.threads, ntiles - 1, |k| {
-            build_inverted(self, spec, input, &pyramids[k], &pyramids[k + 1], bs[k + 1], steps, &ext)
+            build_inverted(self.inner, spec, input, &pyramids[k], &pyramids[k + 1], bs[k + 1], steps, &ext)
         });
 
         // ---- Assemble the output core ----------------------------------
-        let mut out = Field::zeros(&core);
-        for p in &pyramids {
-            let top = p.level(steps); // dim0 [x0 + H, x1 - H)
-            if top.shape().iter().any(|&n| n == 0) {
-                continue;
-            }
-            let mut off = vec![p.x0]; // out dim0 = ext dim0 - H
-            off.extend(vec![0usize; ext.len() - 1]);
-            out.paste(&off, top);
-        }
-        for (k, f) in inverted.iter().enumerate() {
-            let b = bs[k + 1];
-            let mut off = vec![b - 2 * halo]; // [b - H, b + H) - H
-            off.extend(vec![0usize; ext.len() - 1]);
-            out.paste(&off, f);
-        }
-        out
+        assemble(&ext, halo, steps, &bs, &pyramids, &inverted)
     }
 }
 
@@ -235,8 +260,7 @@ mod tests {
     fn matches_reference_all_benchmarks_all_steps() {
         for s in spec::benchmarks() {
             for steps in [1usize, 2, 4] {
-                let mut ext: Vec<usize> =
-                    (0..s.ndim).map(|_| 8 + 2 * s.radius * steps).collect();
+                let mut ext: Vec<usize> = (0..s.ndim).map(|_| 8 + 2 * s.radius * steps).collect();
                 ext[0] = 40 + 2 * s.radius * steps; // several tiles along dim0
                 let u = Field::random(&ext, 21);
                 for eng in [
@@ -277,6 +301,16 @@ mod tests {
         }
         assert_eq!(*bs.first().unwrap(), 0);
         assert_eq!(*bs.last().unwrap(), 100);
+    }
+
+    #[test]
+    fn min_tiles_oversubscribes_but_respects_min_width() {
+        // min_tiles asks for 8 tiles; min width 20 caps it at 5.
+        let bs = tile_boundaries(None, 100, 10, 1, 2, 8);
+        assert_eq!(bs.len() - 1, 5);
+        for w in bs.windows(2) {
+            assert!(w[1] - w[0] >= 20, "{bs:?}");
+        }
     }
 
     #[test]

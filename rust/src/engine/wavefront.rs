@@ -1,0 +1,160 @@
+//! Temporal-wavefront engine — **tetris-wave**.
+//!
+//! Same non-redundant diamond decomposition of the Tb time-block as
+//! [`tessellate`](super::tessellate) (triangle pyramids + inverted gap
+//! triangles = the trapezoid split of §4.1), but scheduled as a
+//! dependency DAG on the work-stealing pool instead of two fork-join
+//! phases: the gap tile at boundary `b` is released the moment its two
+//! neighbouring pyramids finish, so phase B overlaps phase A along the
+//! wavefront and no thread waits at a global barrier.  Tiles are
+//! oversubscribed (≥ 2x threads when the domain allows) so irregular
+//! tile costs — boundary tiles, cache effects, noisy cores — are
+//! absorbed by stealing rather than serialized on the slowest chunk.
+//!
+//! Geometry (and therefore numerics) are byte-identical to tessellation:
+//! only the schedule differs.
+
+use std::sync::OnceLock;
+
+use crate::coordinator::pool;
+use crate::stencil::{Field, StencilSpec};
+
+use super::tessellate::{assemble, build_inverted, build_pyramid, tile_boundaries, Inner, Pyramid};
+use super::Engine;
+
+pub struct WavefrontEngine {
+    pub threads: usize,
+    /// Tile width override along dim 0; None = cache heuristic.
+    pub tile_w: Option<usize>,
+}
+
+impl WavefrontEngine {
+    pub fn new(threads: usize) -> Self {
+        WavefrontEngine { threads: threads.max(1), tile_w: None }
+    }
+}
+
+impl Engine for WavefrontEngine {
+    fn name(&self) -> &'static str {
+        "tetris-wave"
+    }
+
+    fn preferred_tb(&self) -> usize {
+        4
+    }
+
+    fn block(&self, spec: &StencilSpec, input: &Field, steps: usize) -> Field {
+        assert!(steps >= 1);
+        let halo = spec.radius * steps;
+        let ext = input.shape().to_vec();
+        let core: Vec<usize> = ext.iter().map(|n| n - 2 * halo).collect();
+        assert!(core.iter().all(|&n| n > 0), "input too small for Tb={steps}");
+        let rest_cells: usize = ext[1..].iter().product::<usize>().max(1);
+        // Oversubscribe tiles vs threads so the deque pool has slack to
+        // steal when individual tiles run long.
+        let min_tiles = if self.threads > 1 { 2 * self.threads } else { 1 };
+        let bs = tile_boundaries(self.tile_w, ext[0], halo, rest_cells, steps, min_tiles);
+        let ntiles = bs.len() - 1;
+        let inner = Inner::Fused;
+
+        // Task graph: A_k = pyramid of tile k (no deps); B_k = inverted
+        // triangle at boundary k+1, released by {A_k, A_{k+1}}.
+        let pyramid_cells: Vec<OnceLock<Pyramid>> = (0..ntiles).map(|_| OnceLock::new()).collect();
+        let gap_cells: Vec<OnceLock<Field>> = (0..ntiles - 1).map(|_| OnceLock::new()).collect();
+        {
+            let mut tasks: Vec<pool::Task<'_>> = Vec::with_capacity(2 * ntiles - 1);
+            let mut deps: Vec<Vec<usize>> = Vec::with_capacity(2 * ntiles - 1);
+            for k in 0..ntiles {
+                let (cells, bsr) = (&pyramid_cells, &bs);
+                tasks.push(Box::new(move || {
+                    let p = build_pyramid(inner, spec, input, bsr[k], bsr[k + 1], steps);
+                    let _ = cells[k].set(p);
+                }));
+                deps.push(Vec::new());
+            }
+            for k in 0..ntiles - 1 {
+                let (pyrs, gaps, bsr, extr) = (&pyramid_cells, &gap_cells, &bs, &ext);
+                tasks.push(Box::new(move || {
+                    let l = pyrs[k].get().expect("left pyramid ready");
+                    let r = pyrs[k + 1].get().expect("right pyramid ready");
+                    let f = build_inverted(inner, spec, input, l, r, bsr[k + 1], steps, extr);
+                    let _ = gaps[k].set(f);
+                }));
+                deps.push(vec![k, k + 1]);
+            }
+            pool::run_dag(self.threads, tasks, &deps);
+        }
+
+        let pyramids: Vec<Pyramid> = pyramid_cells.into_iter().map(|c| c.into_inner().expect("pyramid computed")).collect();
+        let inverted: Vec<Field> = gap_cells.into_iter().map(|c| c.into_inner().expect("gap computed")).collect();
+        assemble(&ext, halo, steps, &bs, &pyramids, &inverted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::tessellate::TessellateEngine;
+    use crate::stencil::{reference, spec};
+
+    #[test]
+    fn matches_reference_all_benchmarks_all_steps() {
+        for s in spec::benchmarks() {
+            for steps in [1usize, 2, 4] {
+                let mut ext: Vec<usize> = (0..s.ndim).map(|_| 8 + 2 * s.radius * steps).collect();
+                ext[0] = 40 + 2 * s.radius * steps; // several tiles along dim0
+                let u = Field::random(&ext, 33);
+                for threads in [1usize, 3, 8] {
+                    let eng = WavefrontEngine { threads, tile_w: Some(2 * s.radius * steps) };
+                    let got = eng.block(&s, &u, steps);
+                    let want = reference::block(&u, &s, steps);
+                    assert!(
+                        got.allclose(&want, 1e-12, 1e-14),
+                        "{} steps={steps} threads={threads} maxdiff={}",
+                        s.name,
+                        got.max_abs_diff(&want)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_with_tessellate_bitwise() {
+        // Same per-cell arithmetic whatever the tiling: floats must match.
+        let s = spec::get("box2d25p").unwrap();
+        let u = Field::random(&[52, 28], 34);
+        let tile_w = Some(12);
+        let a = TessellateEngine { inner: Inner::Fused, threads: 2, tile_w }.block(&s, &u, 2);
+        let b = WavefrontEngine { threads: 4, tile_w }.block(&s, &u, 2);
+        assert!(a.allclose(&b, 0.0, 0.0), "maxdiff={}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn single_tile_degenerates_to_trapezoid() {
+        let s = spec::get("heat2d").unwrap();
+        let u = Field::random(&[20, 20], 35);
+        let eng = WavefrontEngine { threads: 2, tile_w: Some(1000) };
+        let got = eng.block(&s, &u, 3);
+        assert!(got.allclose(&reference::block(&u, &s, 3), 1e-13, 0.0));
+    }
+
+    #[test]
+    fn many_threads_few_tiles() {
+        let s = spec::get("heat1d").unwrap();
+        let u = Field::random(&[64], 36);
+        let eng = WavefrontEngine { threads: 16, tile_w: Some(8) };
+        let got = eng.block(&s, &u, 2);
+        assert!(got.allclose(&reference::block(&u, &s, 2), 1e-13, 0.0));
+    }
+
+    #[test]
+    fn oversubscription_defaults_sane() {
+        // Default heuristic with many threads on a small domain must not
+        // create tiles below the 2*halo minimum.
+        let s = spec::get("heat2d").unwrap();
+        let u = Field::random(&[30, 30], 37);
+        let got = WavefrontEngine::new(12).block(&s, &u, 3);
+        assert!(got.allclose(&reference::block(&u, &s, 3), 1e-13, 0.0));
+    }
+}

@@ -8,16 +8,28 @@
 //! Layer map:
 //! * [`stencil`] — specs, fields, reference oracle (substrate).
 //! * [`engine`] — optimized CPU engines: tessellate tiling + skewed
-//!   swizzling (the paper's §3.1/§4.1), i.e. **Tetris (CPU)**.
+//!   swizzling (the paper's §3.1/§4.1), i.e. **Tetris (CPU)**, plus the
+//!   dependency-DAG temporal wavefront (**tetris-wave**).
 //! * [`baselines`] — Fig-13 comparator engines (DataReorg, Pluto,
 //!   Folding, Brick, AN5D).
-//! * [`runtime`] — PJRT client executing the AOT artifacts lowered from
-//!   the L1 Pallas kernels (**Tetris (GPU)** stand-in).
+//! * [`runtime`] — manifest-driven artifact runtime (**Tetris (GPU)**
+//!   stand-in; interpreter backend in this offline build).
 //! * [`coordinator`] — the paper's §5 concurrent scheduler: two-way
-//!   partitioning, auto-tuned balance, batched halo exchange.
+//!   partitioning, auto-tuned balance, batched halo exchange, and the
+//!   work-stealing pool primitives.
 //! * [`model`] — analytical cost models (α+β communication, roofline).
 //! * [`apps`] — thermal-diffusion case study (§6.5), accuracy study.
 //! * [`bench`] — harness that regenerates every paper table/figure.
+
+// Stencil index arithmetic reads better with explicit loops and wide
+// argument lists; keep clippy focused on correctness lints.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::manual_memcpy,
+    clippy::uninlined_format_args
+)]
 
 pub mod apps;
 pub mod baselines;

@@ -8,10 +8,14 @@
 //!   thermal  [--size N] [--steps N] [--viz DIR]
 //!   accuracy [--blocks K]
 //!   bench    breakdown|sota|scaling|comm|mxu [--scale F] [--threads T]
+//!            [--json FILE]    single-line JSON summary for CI artifacts
+
+#![allow(clippy::uninlined_format_args)]
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Context, Result};
+use tetris::bail;
+use tetris::util::error::{Context, Result};
 
 use tetris::bench as harness;
 use tetris::coordinator::{CommModel, NativeWorker, Partition, Scheduler};
@@ -98,7 +102,7 @@ fn print_help() {
          hetero --bench B              auto-tuned CPU+XLA run [--steps N --threads T]\n\
          thermal [--size N --steps N --viz DIR --threads T]   Table-3 case study\n\
          accuracy [--blocks K]         Table-4 FP64-vs-FP32 study\n\
-         bench  breakdown|sota|scaling|comm|mxu [--scale F --threads T]\n\
+         bench  breakdown|sota|scaling|comm|mxu [--scale F --threads T --json FILE]\n\
          \n\
          engines: {}\n\
          baselines: {}",
@@ -259,26 +263,27 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .map(String::as_str)
         .unwrap_or("breakdown");
     let scale = args.get("scale", 0.25f64);
-    let threads = args.get("threads", 2usize);
+    // scaling sweeps up to at least 4 threads; record what actually ran.
+    let threads = match which {
+        "scaling" => args.get("threads", 2usize).max(4),
+        _ => args.get("threads", 2usize),
+    };
     let rt = runtime_opt();
-    match which {
-        "breakdown" => {
-            harness::run_breakdown(rt.as_ref(), scale, threads);
-        }
-        "sota" => {
-            harness::run_sota(rt.as_ref(), scale, threads);
-        }
-        "scaling" => {
-            harness::run_scaling(rt.as_ref(), scale, threads.max(4));
-        }
-        "comm" => {
-            harness::run_comm();
-        }
+    let sections: Vec<(String, Vec<harness::Row>)> = match which {
+        "breakdown" => harness::run_breakdown(rt.as_ref(), scale, threads),
+        "sota" => harness::run_sota(rt.as_ref(), scale, threads),
+        "scaling" => harness::run_scaling(rt.as_ref(), scale, threads),
+        "comm" => vec![("comm".to_string(), harness::run_comm())],
         "mxu" => {
             let rt = rt.context("mxu bench needs artifacts")?;
-            harness::run_mxu(&rt)?;
+            vec![("mxu".to_string(), harness::run_mxu(&rt)?)]
         }
         other => bail!("unknown bench {other:?}"),
+    };
+    if let Some(path) = args.flags.get("json") {
+        let summary = harness::summary_json(which, scale, threads, &sections);
+        std::fs::write(path, format!("{summary}\n"))?;
+        println!("wrote {path}");
     }
     Ok(())
 }

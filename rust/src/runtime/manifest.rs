@@ -10,7 +10,8 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 use crate::util::json::Json;
 use crate::util::prng::fnv1a;
@@ -80,7 +81,7 @@ impl Manifest {
     }
 
     pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
-        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let v = Json::parse(text).context("manifest")?;
         if v.at(&["version"]).as_usize() != Some(1) {
             bail!("unsupported manifest version");
         }

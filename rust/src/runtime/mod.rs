@@ -1,8 +1,10 @@
-//! PJRT runtime: manifest-driven loading and execution of the AOT
+//! Artifact runtime: manifest-driven loading and execution of the AOT
 //! artifacts produced by `python/compile/aot.py`.
 //!
-//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! The execution backend is the in-tree interpreter (see
+//! [`client`] — the PJRT `xla` crate is not vendored in this offline
+//! build); the manifest contract and the device-queue service are
+//! identical either way.
 
 pub mod client;
 pub mod manifest;

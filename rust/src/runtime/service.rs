@@ -1,15 +1,15 @@
-//! XLA service thread: a single device queue in front of the PJRT client.
+//! XLA service thread: a single device queue in front of the runtime.
 //!
-//! The `xla` crate's handles (raw PJRT pointers behind `Rc`) are neither
-//! `Send` nor `Sync`, so the runtime lives on one dedicated thread — the
-//! accelerator's command queue, which is also the honest model of a real
-//! single-GPU deployment (one stream, jobs serialized).  Workers submit
-//! jobs over an mpsc channel and block on the reply.
+//! The runtime lives on one dedicated thread — the accelerator's command
+//! queue, which is the honest model of a real single-GPU deployment (one
+//! stream, jobs serialized; a real PJRT client's handles are also not
+//! `Send`/`Sync`, so the channel architecture survives the backend swap).
+//! Workers submit jobs over an mpsc channel and block on the reply.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::stencil::Field;
 
@@ -110,7 +110,7 @@ impl XlaService {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Job::Run { artifact: artifact.into(), input: input.clone(), reply })
-            .map_err(|_| anyhow::anyhow!("xla-service thread is gone"))?;
+            .map_err(|_| crate::err!("xla-service thread is gone"))?;
         rx.recv().context("xla-service dropped the reply")?
     }
 
@@ -119,7 +119,7 @@ impl XlaService {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Job::Validate { artifact: artifact.into(), reply })
-            .map_err(|_| anyhow::anyhow!("xla-service thread is gone"))?;
+            .map_err(|_| crate::err!("xla-service thread is gone"))?;
         rx.recv().context("xla-service dropped the reply")?
     }
 }

@@ -60,6 +60,92 @@ pub fn block(u: &Field, spec: &StencilSpec, steps: usize) -> Field {
     cur
 }
 
+/// One valid-mode update computed in true FP32 arithmetic (taps cast to
+/// f32, f32 accumulate), stored back in the f64 container — the oracle
+/// for an all-FP32 pipeline (paper Table 4).
+pub fn step_f32(u: &Field, spec: &StencilSpec) -> Field {
+    let r = spec.radius;
+    assert_eq!(u.ndim(), spec.ndim, "{}: rank mismatch", spec.name);
+    let core: Vec<usize> = u.shape().iter().map(|n| n.checked_sub(2 * r).expect("too small")).collect();
+    assert!(core.iter().all(|&n| n > 0), "{}: input too small", spec.name);
+    let mut out = Field::zeros(&core);
+    let (offs, cs) = spec.taps();
+    let cs32: Vec<f32> = cs.iter().map(|&c| c as f32).collect();
+    let ustr = u.strides().to_vec();
+    let flat_offs: Vec<usize> = offs
+        .iter()
+        .map(|off| {
+            off.iter()
+                .zip(&ustr)
+                .map(|(&o, &s)| ((o + r as i64) as usize) * s)
+                .sum()
+        })
+        .collect();
+    let core_shape = core.clone();
+    let mut idx = vec![0usize; core_shape.len()];
+    let n = out.len();
+    let udata = u.data();
+    let odata = out.data_mut();
+    for i in 0..n {
+        let base: usize = idx.iter().zip(&ustr).map(|(&i, &s)| i * s).sum();
+        let mut acc = 0.0f32;
+        for (fo, c) in flat_offs.iter().zip(&cs32) {
+            acc += c * (udata[base + fo] as f32);
+        }
+        odata[i] = acc as f64;
+        for k in (0..core_shape.len()).rev() {
+            idx[k] += 1;
+            if idx[k] < core_shape[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+    out
+}
+
+/// Shape-preserving periodic evolution in true FP32 arithmetic: every
+/// load, multiply and add is f32, mirroring an all-f32 pipeline.
+pub fn evolve_periodic_f32(u: &Field, spec: &StencilSpec, steps: usize) -> Field {
+    let shape = u.shape().to_vec();
+    let mut cur: Vec<f32> = u.data().iter().map(|&x| x as f32).collect();
+    let (offs, cs) = spec.taps();
+    let cs32: Vec<f32> = cs.iter().map(|&c| c as f32).collect();
+    let strides: Vec<i64> = {
+        let mut st = vec![1i64; shape.len()];
+        for i in (0..shape.len().saturating_sub(1)).rev() {
+            st[i] = st[i + 1] * shape[i + 1] as i64;
+        }
+        st
+    };
+    for _ in 0..steps {
+        let mut out = vec![0.0f32; cur.len()];
+        let mut idx = vec![0usize; shape.len()];
+        for o in out.iter_mut() {
+            let mut acc = 0.0f32;
+            for (off, c) in offs.iter().zip(&cs32) {
+                let mut flat = 0i64;
+                for d in 0..shape.len() {
+                    let n = shape[d] as i64;
+                    let x = ((idx[d] as i64 + off[d]) % n + n) % n;
+                    flat += x * strides[d];
+                }
+                acc += c * cur[flat as usize];
+            }
+            *o = acc;
+            for k in (0..shape.len()).rev() {
+                idx[k] += 1;
+                if idx[k] < shape[k] {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+        cur = out;
+    }
+    Field::from_vec(&shape, cur.into_iter().map(|x| x as f64).collect())
+}
+
 /// Shape-preserving periodic evolution (thermal case study oracle).
 pub fn evolve_periodic(u: &Field, spec: &StencilSpec, steps: usize) -> Field {
     let shape = u.shape().to_vec();
@@ -145,6 +231,28 @@ mod tests {
             assert!((out.min() - 2.5).abs() < 1e-12, "{}", s.name);
             assert!((out.max() - 2.5).abs() < 1e-12, "{}", s.name);
         }
+    }
+
+    #[test]
+    fn f32_step_tracks_f64_within_single_precision() {
+        let s = spec::get("heat2d").unwrap();
+        let u = Field::random(&[12, 12], 6);
+        let a = step(&u, &s);
+        let b = step_f32(&u, &s);
+        let d = a.max_abs_diff(&b);
+        assert!(d > 0.0, "f32 arithmetic must differ from f64");
+        assert!(d < 1e-5, "but only at single precision: {d}");
+    }
+
+    #[test]
+    fn f32_periodic_drifts_but_stays_bounded() {
+        let s = spec::get("heat2d").unwrap();
+        let u = Field::random(&[8, 8], 7);
+        let a = evolve_periodic(&u, &s, 20);
+        let b = evolve_periodic_f32(&u, &s, 20);
+        assert_eq!(b.shape(), u.shape());
+        let d = a.max_abs_diff(&b);
+        assert!(d > 0.0 && d < 1e-3, "drift {d}");
     }
 
     #[test]

@@ -1,0 +1,163 @@
+//! Crate-wide error handling with zero external crates.
+//!
+//! The vendored crate set has no `anyhow`, so this module provides the
+//! exact subset the stack uses: a string-backed [`TetrisError`], the
+//! [`Result`] alias, the [`Context`] extension trait (works on both
+//! `Result` and `Option`, like anyhow's), and the `bail!` / `ensure!` /
+//! `err!` macros.  Context is accumulated by prefixing messages, which is
+//! all the CLI and tests ever inspect.
+
+use std::fmt;
+
+/// Crate-wide error: a human-readable message, grown by `context`.
+#[derive(Debug, Clone)]
+pub struct TetrisError {
+    msg: String,
+}
+
+impl TetrisError {
+    /// Build an error from any displayable message.
+    pub fn msg(msg: impl Into<String>) -> TetrisError {
+        TetrisError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for TetrisError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for TetrisError {}
+
+impl From<std::io::Error> for TetrisError {
+    fn from(e: std::io::Error) -> Self {
+        TetrisError::msg(e.to_string())
+    }
+}
+
+impl From<std::fmt::Error> for TetrisError {
+    fn from(e: std::fmt::Error) -> Self {
+        TetrisError::msg(e.to_string())
+    }
+}
+
+impl From<crate::util::json::ParseError> for TetrisError {
+    fn from(e: crate::util::json::ParseError) -> Self {
+        TetrisError::msg(e.to_string())
+    }
+}
+
+/// Crate-wide result type (error defaults to [`TetrisError`]).
+pub type Result<T, E = TetrisError> = std::result::Result<T, E>;
+
+/// Attach context to errors (`Result`) or missing values (`Option`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| TetrisError::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| TetrisError::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| TetrisError::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| TetrisError::msg(f().to_string()))
+    }
+}
+
+/// Build a [`TetrisError`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($t:tt)*) => {
+        $crate::util::error::TetrisError::msg(format!($($t)*))
+    };
+}
+
+/// Return early with a formatted [`TetrisError`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::err!($($t)*))
+    };
+}
+
+/// Return early with a formatted [`TetrisError`] unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail_test()
+    }
+
+    fn bail_test() -> Result<()> {
+        crate::bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 42");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: i32) -> Result<i32> {
+            crate::ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(-1).unwrap_err().to_string().contains("-1"));
+    }
+
+    #[test]
+    fn context_on_result_prefixes() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("while writing").unwrap_err();
+        assert!(e.to_string().starts_with("while writing: "));
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        let v = Some(7u32);
+        assert_eq!(v.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn open() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/path")?)
+        }
+        assert!(open().is_err());
+    }
+
+    #[test]
+    fn alternate_format_is_stable() {
+        // callers print errors with `{e:#}`; Display ignores the flag.
+        let e = crate::err!("injected fault");
+        assert!(format!("{e:#}").contains("injected fault"));
+    }
+}

@@ -1,5 +1,7 @@
-//! Shared utilities: PRNG (python-lockstep), minimal JSON, timing.
+//! Shared utilities: error type, PRNG (python-lockstep), minimal JSON,
+//! timing.
 
+pub mod error;
 pub mod json;
 pub mod prng;
 pub mod timer;

@@ -176,8 +176,8 @@ fn worker_failure_propagates() {
             _: &tetris::stencil::StencilSpec,
             _: &Field,
             _: usize,
-        ) -> anyhow::Result<Field> {
-            anyhow::bail!("injected fault")
+        ) -> tetris::util::error::Result<Field> {
+            tetris::bail!("injected fault")
         }
     }
     let s = spec::get("heat2d").unwrap();

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Smoke bench: run the Fig-12 breakdown at a tiny scale and emit a
+# single-line JSON summary (BENCH_smoke.json) so CI can archive the
+# bench trajectory on every commit.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+SCALE="${TETRIS_SMOKE_SCALE:-0.1}"
+THREADS="${TETRIS_SMOKE_THREADS:-2}"
+OUT="${TETRIS_SMOKE_OUT:-BENCH_smoke.json}"
+BIN=rust/target/release/tetris
+
+# Always (re)build: with a warm target dir this is incremental and fast,
+# and it protects against running a stale cache-restored binary.
+cargo build --release --manifest-path rust/Cargo.toml
+
+"$BIN" bench breakdown --scale "$SCALE" --threads "$THREADS" --json "$OUT"
+
+echo "--- $OUT ---"
+cat "$OUT"
