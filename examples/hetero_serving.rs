@@ -1,8 +1,10 @@
 //! Heterogeneous scheduling demo (paper §5, Fig. 11 + Fig. 14 ratios):
 //! drive a stream of stencil evolution jobs through the concurrent
-//! scheduler, showing profile-initialized partitioning, the auto-tuner
-//! converging, memory squeezing under a constrained "device", and the
-//! centralized-communication accounting.
+//! scheduler, showing profile-initialized partitioning, the in-run §5.2
+//! auto-tuner (`adapt_every`), memory squeezing under a constrained
+//! "device", boundary-condition diversity (each job picks its physics:
+//! ambient Dirichlet plate, insulated Neumann plate, Periodic torus),
+//! and the centralized-communication accounting.
 //!
 //! Run: `make artifacts && cargo run --release --example hetero_serving`
 
@@ -11,7 +13,7 @@ use tetris::coordinator::{
     XlaWorker,
 };
 use tetris::runtime::XlaService;
-use tetris::stencil::{spec, Field};
+use tetris::stencil::{spec, Boundary, Field};
 
 fn main() -> tetris::util::error::Result<()> {
     let svc = XlaService::spawn_default()
@@ -25,10 +27,7 @@ fn main() -> tetris::util::error::Result<()> {
     // Two heterogeneous workers; the "device" (XLA) capacity is squeezed
     // to force bidirectional spill (paper §5.1).
     let device_cap = 5 * 3 * meta.unit * rest_cells * 8; // ~5 units
-    let workers: Vec<Box<dyn Worker>> = vec![
-        Box::new(NativeWorker::new(tetris::engine::by_name("tetris-cpu", 2).unwrap(), 1 << 33)),
-        Box::new(XlaWorker::new(svc.clone(), &format!("{bench}_block"), device_cap)?),
-    ];
+    let workers = make_workers(&svc, bench, device_cap)?;
 
     // §5.2 profile initialization.
     let unit_core: Vec<usize> = std::iter::once(meta.unit)
@@ -52,24 +51,36 @@ fn main() -> tetris::util::error::Result<()> {
         partition.ratio(1) * 100.0
     );
 
-    // Serve a stream of jobs, retuning between jobs (§5.2 rebalance).
+    // Serve a stream of jobs with per-job physics; the scheduler retunes
+    // itself mid-run (adapt_every) and the converged partition carries
+    // over to the next job — the serving-loop version of §5.2.
     let comm_model = CommModel::default();
-    for job in 0..4 {
+    let jobs: [(&str, Boundary); 4] = [
+        ("ambient plate", Boundary::Dirichlet(25.0)),
+        ("cold-wall plate", Boundary::Dirichlet(0.0)),
+        ("insulated plate", Boundary::Neumann),
+        ("torus", Boundary::Periodic),
+    ];
+    for (job, (label, boundary)) in jobs.into_iter().enumerate() {
         let sched = Scheduler {
             spec: s.clone(),
             tb: meta.tb,
-            workers: if job == 0 { workers_clone(&svc, bench, device_cap)? } else { workers_clone(&svc, bench, device_cap)? },
+            workers: make_workers(&svc, bench, device_cap)?,
             partition: partition.clone(),
             comm_model,
+            boundary,
+            adapt_every: 2,
         };
         let core = Field::random(&meta.global_core, 100 + job as u64);
         let steps = meta.tb * 4;
-        let (out, metrics) = sched.run(&core, steps, 0.0)?;
+        let (out, metrics) = sched.run(&core, steps)?;
         println!(
-            "\njob {job}: {} steps, {:.4} GStencils/s, bubble {:.1}%, out mean {:.6}",
+            "\njob {job} ({label}, boundary={boundary}): {} steps, {:.4} GStencils/s, \
+             bubble {:.1}%, retunes {}, out mean {:.6}",
             steps,
             metrics.gstencils_per_sec(),
             metrics.bubble_fraction() * 100.0,
+            metrics.retunes,
             out.mean()
         );
         let (central, split) = metrics.comm.modeled_cost(&comm_model);
@@ -80,15 +91,14 @@ fn main() -> tetris::util::error::Result<()> {
             central * 1e3,
             split * 1e3
         );
-        // Retune from measured busy times.
-        let measured: Vec<f64> = metrics.worker_busy.iter().map(|d| d.as_secs_f64()).collect();
-        let next = tuner::retune(&partition, &measured, &sched.workers, rest_cells);
-        if next != partition {
+        // Carry the converged shares into the next job's partition.
+        let next_shares = metrics.final_shares.clone();
+        if next_shares != partition.shares {
             println!(
-                "  retuned partition: native {} -> {}, xla {} -> {}",
-                partition.shares[0], next.shares[0], partition.shares[1], next.shares[1]
+                "  carrying retuned partition: native {} -> {}, xla {} -> {}",
+                partition.shares[0], next_shares[0], partition.shares[1], next_shares[1]
             );
-            partition = next;
+            partition = Partition { unit: meta.unit, shares: next_shares };
         } else {
             println!("  partition stable (converged)");
         }
@@ -96,7 +106,7 @@ fn main() -> tetris::util::error::Result<()> {
     Ok(())
 }
 
-fn workers_clone(
+fn make_workers(
     svc: &XlaService,
     bench: &str,
     device_cap: usize,

@@ -16,7 +16,7 @@ use crate::coordinator::{
     XlaWorker,
 };
 use crate::runtime::XlaService;
-use crate::stencil::{spec, Field};
+use crate::stencil::{spec, Boundary, Field};
 
 /// Ambient plate temperature (°C) at the boundary and far field.
 pub const AMBIENT: f64 = 25.0;
@@ -97,6 +97,8 @@ fn scheduler_for(
         workers,
         partition,
         comm_model: CommModel::default(),
+        boundary: Boundary::Dirichlet(AMBIENT),
+        adapt_every: 0,
     })
 }
 
@@ -122,7 +124,7 @@ pub fn run_table3(
     for m in methods {
         let sched = scheduler_for(m, rt, &s, n, tb, threads)?;
         let t0 = std::time::Instant::now();
-        let (out, metrics) = sched.run(&init, steps, AMBIENT)?;
+        let (out, metrics) = sched.run(&init, steps)?;
         let secs = t0.elapsed().as_secs_f64();
         if m == "naive" {
             naive_secs = secs;
@@ -145,6 +147,38 @@ pub fn run_table3(
     Ok((rows, fields))
 }
 
+/// Insulated-plate scenario: the same Gaussian plate behind Neumann
+/// zero-flux walls.  No heat escapes, so the total (mean) temperature is
+/// a run invariant while the peak diffuses flat — the boundary-diversity
+/// counterpart to Table 3's ambient-wall (Dirichlet) study.  Runs
+/// heterogeneously on two native workers; `adapt_every` forwards to the
+/// §5.2 rebalancer.
+pub fn run_insulated(
+    n: usize,
+    steps: usize,
+    tb: usize,
+    threads: usize,
+    adapt_every: usize,
+) -> Result<(Field, crate::coordinator::RunMetrics)> {
+    crate::ensure!(n >= 16 && n % 8 == 0, "plate size {n} must be a multiple of 8 (>= 16)");
+    crate::ensure!(steps % tb == 0, "steps {steps} not a multiple of tb {tb}");
+    let s = spec::get("heat2d").unwrap();
+    let init = gaussian_plate(n);
+    let sched = Scheduler {
+        spec: s,
+        tb,
+        workers: vec![
+            Box::new(NativeWorker::new(crate::engine::by_name("tetris-cpu", threads).unwrap(), 1 << 33)),
+            Box::new(NativeWorker::new(crate::engine::by_name("simd", 1).unwrap(), 1 << 33)),
+        ],
+        partition: Partition { unit: n / 8, shares: vec![4, 4] },
+        comm_model: CommModel::default(),
+        boundary: Boundary::Neumann,
+        adapt_every,
+    };
+    sched.run(&init, steps)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,7 +195,13 @@ mod tests {
     fn diffusion_cools_the_center() {
         let s = spec::get("heat2d").unwrap();
         let init = gaussian_plate(33);
-        let out = crate::coordinator::pipeline::reference_evolution(&init, &s, 40, 4, AMBIENT);
+        let out = crate::coordinator::pipeline::reference_evolution(
+            &init,
+            &s,
+            40,
+            4,
+            Boundary::Dirichlet(AMBIENT),
+        );
         assert!(out.get(&[16, 16]) < init.get(&[16, 16]) - 5.0);
         // heat flows out through the ambient boundary: mean decreases
         assert!(out.mean() < init.mean());
@@ -176,5 +216,38 @@ mod tests {
         assert!(rows[1].max_diff_vs_naive < 1e-10, "{}", rows[1].max_diff_vs_naive);
         assert_eq!(fields.len(), 2);
         assert!(rows[0].speedup == 1.0 || rows[0].speedup > 0.0);
+    }
+
+    #[test]
+    fn insulated_plate_conserves_heat() {
+        let n = 64;
+        let init = gaussian_plate(n);
+        let (out, metrics) = run_insulated(n, 16, 4, 1, 0).unwrap();
+        // zero-flux walls: total heat is invariant, peak diffuses down,
+        // nothing dips below ambient
+        assert!(
+            (out.mean() - init.mean()).abs() < 1e-8,
+            "mean drift {}",
+            out.mean() - init.mean()
+        );
+        assert!(out.get(&[n / 2, n / 2]) < init.get(&[n / 2, n / 2]));
+        assert!(out.min() >= AMBIENT - 1e-9 && out.max() <= PEAK + 1e-9);
+        assert!(metrics.comm.messages > 0);
+        // and the heterogeneous run equals the single-worker evolution
+        let s = spec::get("heat2d").unwrap();
+        let want = crate::coordinator::pipeline::reference_evolution(
+            &init,
+            &s,
+            16,
+            4,
+            Boundary::Neumann,
+        );
+        assert!(out.allclose(&want, 1e-12, 1e-14), "maxdiff={}", out.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn insulated_rejects_bad_sizes() {
+        assert!(run_insulated(63, 8, 4, 1, 0).is_err());
+        assert!(run_insulated(64, 7, 4, 1, 0).is_err());
     }
 }

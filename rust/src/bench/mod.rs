@@ -17,7 +17,7 @@ use crate::coordinator::{
 };
 use crate::engine::Engine;
 use crate::runtime::XlaService;
-use crate::stencil::{spec, Field, StencilSpec};
+use crate::stencil::{spec, Boundary, Field, StencilSpec};
 use crate::util::timer;
 
 /// Scaled problem sizes per benchmark: (core shape, total steps, Tb).
@@ -94,7 +94,7 @@ pub fn time_scheduler(
     core: &Field,
     total_steps: usize,
 ) -> Result<(f64, crate::coordinator::RunMetrics)> {
-    let (_, metrics) = sched.run(core, total_steps, 0.0)?;
+    let (_, metrics) = sched.run(core, total_steps)?;
     Ok((metrics.gstencils_per_sec(), metrics))
 }
 
@@ -141,6 +141,8 @@ pub fn hetero_scheduler(
             workers,
             partition,
             comm_model: CommModel::default(),
+            boundary: Boundary::Dirichlet(0.0),
+            adapt_every: 0,
         },
         meta.global_core.clone(),
     ))
@@ -308,6 +310,86 @@ pub fn run_scaling(rt: Option<&XlaService>, scale: f64, max_threads: usize) -> V
     out
 }
 
+/// Boundary & adaptivity study: ghost-fill throughput plus end-to-end
+/// scheduler rungs under each boundary condition and the §5.2 adaptive
+/// loop.  CI smoke archives this as `BENCH_boundary.json`, so the
+/// periodic and adaptive paths have a tracked trajectory.
+pub fn run_boundary(scale: f64, threads: usize) -> Vec<(String, Vec<Row>)> {
+    let mut out = Vec::new();
+
+    // O(surface) ghost-fill micro-bench: cells-of-ring per second must
+    // stay ~flat as the domain grows (an O(volume) fill collapses here).
+    let halo = 4usize;
+    let mut rows = Vec::new();
+    for n in [128usize, 256, 512] {
+        let core = Field::random(&[n, n], 0x9B);
+        let mut ext = core.pad(halo, 0.0);
+        let d = timer::time_median(1, 5, || Boundary::Periodic.fill(&mut ext, halo));
+        let surface = ext.len() - core.len();
+        rows.push(Row {
+            label: format!("ghostfill {n}x{n}"),
+            gstencils: surface as f64 / d.as_secs_f64() / 1e9,
+            speedup: 0.0,
+            extra: format!("{surface} ghost cells in {}", timer::fmt_duration(d)),
+        });
+    }
+    print_table("ghost-fill (periodic, halo 4): Gcells/s over the ring", &rows);
+    out.push(("ghostfill".to_string(), rows));
+
+    // End-to-end scheduler rungs: heat2d on two native workers, one per
+    // boundary condition, plus the adaptive-retune configuration.
+    let bench = "heat2d";
+    let s = spec::get(bench).unwrap();
+    let (core_shape, steps, tb) = scaled_problem(bench, scale);
+    let rows0 = core_shape[0];
+    let core = Field::random(&core_shape, 0xB0B);
+    let mk = |boundary: Boundary, adapt_every: usize| Scheduler {
+        spec: s.clone(),
+        tb,
+        workers: vec![native("tetris-cpu", threads), native("simd", 1)],
+        partition: Partition::balanced(1, rows0, &[1.0, 1.0], &[rows0, rows0]),
+        comm_model: CommModel::default(),
+        boundary,
+        adapt_every,
+    };
+    let mut rows = Vec::new();
+    let mut base = 0.0;
+    for (label, boundary, adapt) in [
+        ("dirichlet", Boundary::Dirichlet(0.0), 0usize),
+        ("neumann", Boundary::Neumann, 0),
+        ("periodic", Boundary::Periodic, 0),
+        ("periodic+adapt2", Boundary::Periodic, 2),
+    ] {
+        match mk(boundary, adapt).run(&core, steps) {
+            Ok((_, m)) => {
+                let g = m.gstencils_per_sec();
+                if base == 0.0 {
+                    base = g;
+                }
+                rows.push(Row {
+                    label: label.into(),
+                    gstencils: g,
+                    speedup: g / base.max(1e-12),
+                    extra: format!(
+                        "bubble {:.1}%, retunes {}",
+                        m.bubble_fraction() * 100.0,
+                        m.retunes
+                    ),
+                });
+            }
+            Err(e) => rows.push(Row {
+                label: label.into(),
+                gstencils: 0.0,
+                speedup: 0.0,
+                extra: format!("ERROR: {e}"),
+            }),
+        }
+    }
+    print_table("boundary-aware scheduler: heat2d, 2 native workers", &rows);
+    out.push((bench.to_string(), rows));
+    out
+}
+
 /// §5.3 communication study: centralized vs per-step launch cost.
 pub fn run_comm() -> Vec<Row> {
     let m = CommModel::default();
@@ -415,6 +497,45 @@ mod tests {
         let eng = crate::engine::by_name("simd", 1).unwrap();
         let (g, d) = time_engine(eng.as_ref(), &s, &[128], 4, 2);
         assert!(g > 0.0 && d.as_nanos() > 0);
+    }
+
+    /// Regression guard for the face-wise rewrite: growing the domain
+    /// 64x in volume grows the ghost ring only ~8x, so the fill time
+    /// ratio must stay far below the volume ratio.  The old per-cell
+    /// full-domain scan (with a `Vec` allocation per ghost cell) sat at
+    /// ~the volume ratio and trips this bound.
+    #[test]
+    fn ghost_fill_scales_with_surface_not_volume() {
+        let halo = 2usize;
+        let time_fill = |n: usize| {
+            let mut ext = Field::random(&[n + 2 * halo, n + 2 * halo], 5);
+            timer::time_median(1, 5, || {
+                for _ in 0..8 {
+                    Boundary::Periodic.fill(&mut ext, halo);
+                }
+            })
+        };
+        let small = time_fill(64).as_secs_f64().max(1e-9);
+        let big = time_fill(512).as_secs_f64().max(1e-9);
+        assert!(
+            big / small < 32.0,
+            "ghost fill not O(surface): {small}s -> {big}s ({}x)",
+            big / small
+        );
+    }
+
+    #[test]
+    fn boundary_section_has_all_rungs() {
+        let sections = run_boundary(0.05, 1);
+        assert_eq!(sections.len(), 2);
+        let (name, rows) = &sections[1];
+        assert_eq!(name, "heat2d");
+        let labels: Vec<&str> = rows.iter().map(|r| r.label.as_str()).collect();
+        assert_eq!(labels, vec!["dirichlet", "neumann", "periodic", "periodic+adapt2"]);
+        assert!(rows.iter().all(|r| r.gstencils > 0.0), "{rows:?}");
+        // and it serializes into the CI artifact format
+        let j = summary_json("boundary", 0.05, 1, &sections);
+        assert!(j.to_string().contains("periodic+adapt2"));
     }
 
     #[test]

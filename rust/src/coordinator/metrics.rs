@@ -17,8 +17,15 @@ pub struct RunMetrics {
     /// Sum over blocks of (slowest worker - this worker): idle time.
     pub worker_idle: Vec<Duration>,
     pub comm: CommLedger,
-    /// Scheduling share per worker (units fraction).
+    /// Scheduling share per worker (units fraction) at the END of the
+    /// run — under `adapt_every` this is the converged partition.
     pub ratios: Vec<f64>,
+    /// Exact per-worker unit shares at the end of the run (the converged
+    /// partition under `adapt_every`; callers can reuse it as the next
+    /// run's starting partition without a lossy ratio round-trip).
+    pub final_shares: Vec<usize>,
+    /// §5.2 mid-run rebalances that actually moved slabs (0 = static).
+    pub retunes: usize,
 }
 
 impl RunMetrics {
@@ -66,7 +73,11 @@ impl RunMetrics {
             central * 1e3,
             split * 1e3
         ));
-        s.push_str(&format!("  bubble fraction: {:.1}%\n", self.bubble_fraction() * 100.0));
+        s.push_str(&format!(
+            "  bubble fraction: {:.1}% (retunes: {})\n",
+            self.bubble_fraction() * 100.0,
+            self.retunes
+        ));
         s
     }
 }

@@ -8,7 +8,9 @@
 //! * [`pool`] — work-stealing deque pool primitives used by both the
 //!   engines and the pipeline (steal_map + dependency-DAG execution;
 //!   each call runs its own scoped pool);
-//! * [`pipeline`] — the block-synchronous heterogeneous driver (Fig. 11);
+//! * [`pipeline`] — the block-synchronous heterogeneous driver (Fig. 11),
+//!   boundary-aware (Dirichlet/Neumann/Periodic ghost refill per block)
+//!   with optional in-run §5.2 adaptive re-partitioning;
 //! * [`metrics`] — Eq.-5 throughput, bubbles, comm totals.
 
 pub mod comm;

@@ -1,25 +1,30 @@
 //! The concurrent heterogeneous pipeline driver (paper §5, Fig. 11).
 //!
 //! The leader holds the global extended field.  Per Tb-block it
+//! (0) refreshes the global ghost ring from the boundary condition
+//! (Dirichlet ghosts are static, but Neumann mirrors and Periodic wraps
+//! depend on the evolving core, so the ring is refilled every block),
 //! (1) snapshots each worker's slab + ghost ring (the halo exchange —
 //! batched once per block, the §5.3 centralized communication launch),
 //! (2) dispatches every worker concurrently on the work-stealing pool,
-//! (3) writes the slabs back, accounting busy/idle time and comm volume.
+//! (3) writes the slabs back, accounting busy/idle time and comm volume,
+//! (4) optionally re-partitions the domain from measured busy times
+//! every `adapt_every` blocks — the §5.2 architecture-aware rebalance.
 //!
-//! Boundary condition: Dirichlet — the ghost ring keeps its initial
-//! value, identical to the valid-mode contract the artifacts and engines
-//! share, so a heterogeneous run is bit-comparable to a single-worker
-//! reference evolution (tested below).
+//! Workers stay boundary-agnostic: their valid-mode slab contract only
+//! consumes the ghost ring the leader hands them, so any worker species
+//! (native engine or AOT artifact) serves any boundary condition.
 
 use std::time::{Duration, Instant};
 
 use crate::util::error::{Context, Result};
 
-use crate::stencil::{Field, StencilSpec};
+use crate::stencil::{Boundary, Field, StencilSpec};
 
 use super::comm::{CommLedger, CommModel};
 use super::metrics::RunMetrics;
-use super::partition::Partition;
+use super::partition::{capacity_units, Partition};
+use super::tuner;
 use super::worker::Worker;
 
 pub struct Scheduler {
@@ -29,17 +34,17 @@ pub struct Scheduler {
     pub workers: Vec<Box<dyn Worker>>,
     pub partition: Partition,
     pub comm_model: CommModel,
+    /// Ghost-ring physics of the global domain.
+    pub boundary: Boundary,
+    /// Re-partition from measured per-block busy times every this many
+    /// blocks (0 = static partition).
+    pub adapt_every: usize,
 }
 
 impl Scheduler {
-    /// Evolve `core` by `total_steps` (a multiple of Tb) with constant
-    /// `boundary` ghost cells.  Returns the final core and run metrics.
-    pub fn run(
-        &self,
-        core: &Field,
-        total_steps: usize,
-        boundary: f64,
-    ) -> Result<(Field, RunMetrics)> {
+    /// Evolve `core` by `total_steps` (a multiple of Tb) under
+    /// `self.boundary`.  Returns the final core and run metrics.
+    pub fn run(&self, core: &Field, total_steps: usize) -> Result<(Field, RunMetrics)> {
         crate::ensure!(self.tb >= 1, "tb must be >= 1");
         crate::ensure!(
             total_steps % self.tb == 0,
@@ -50,7 +55,8 @@ impl Scheduler {
             !self.workers.is_empty() && self.workers.len() == self.partition.shares.len(),
             "workers/partition mismatch"
         );
-        let spans = self.partition.spans();
+        let mut partition = self.partition.clone();
+        let mut spans = partition.spans();
         crate::ensure!(
             spans.last().unwrap().1 == core.shape()[0],
             "partition covers {} rows, domain has {}",
@@ -59,20 +65,36 @@ impl Scheduler {
         );
         let halo = self.spec.radius * self.tb;
         let nd = core.ndim();
-        let mut global = core.pad(halo, boundary);
+        let mut global = core.pad(halo, self.boundary.pad_value());
         let ext_rest: Vec<usize> = global.shape()[1..].to_vec();
-        let rest_cells: usize = ext_rest.iter().product::<usize>().max(1);
+        let ext_rest_cells: usize = ext_rest.iter().product::<usize>().max(1);
+        // What one internal-boundary halo message actually ships on a
+        // real two-device deployment: core-row cells.  The padding of the
+        // non-split dims is each device's own ghost ring, filled locally
+        // from the boundary condition, never sent over the link.
+        let core_rest_cells: usize = core.shape()[1..].iter().product::<usize>().max(1);
 
         let blocks = total_steps / self.tb;
-        let mut busy = vec![Duration::ZERO; self.workers.len()];
-        let mut idle = vec![Duration::ZERO; self.workers.len()];
+        let nw = self.workers.len();
+        let mut busy = vec![Duration::ZERO; nw];
+        let mut idle = vec![Duration::ZERO; nw];
         let mut comm = CommLedger::default();
+        let mut retunes = 0usize;
+        let mut window_busy = vec![0f64; nw];
+        let mut window_blocks = 0usize;
         let t0 = Instant::now();
 
-        for _ in 0..blocks {
+        for b in 0..blocks {
+            // (0) Ghost refresh from the current core state.
+            self.boundary.fill(&mut global, halo);
+
             // (1) Halo snapshot: one extraction per worker per block —
             // the centralized communication launch.  Internal-boundary
-            // bytes are what a two-device deployment would ship.
+            // bytes are what a real deployment would ship; under
+            // Periodic the workers form a ring (worker 0 <-> worker
+            // W-1 exchange the wrap halo too), so W workers have W
+            // inter-device links instead of W-1.  A single worker's
+            // wrap-around is a local copy, not a message.
             let inputs: Vec<Field> = spans
                 .iter()
                 .map(|&(s, e)| {
@@ -83,14 +105,22 @@ impl Scheduler {
                     global.extract(&off, &shape)
                 })
                 .collect();
-            for _ in 0..spans.len().saturating_sub(1) {
-                // two directions x halo rows x extended row cells
-                comm.record_exchange(2 * halo * rest_cells * 8, self.tb);
+            // Only boundaries between *non-empty* spans are real links: a
+            // zero-share worker holds no rows, so its neighbours abut
+            // directly (and a lone active worker's wrap is a local copy).
+            let active_spans = spans.iter().filter(|&&(s, e)| e > s).count();
+            let internal_links = match self.boundary {
+                Boundary::Periodic if active_spans > 1 => active_spans,
+                _ => active_spans.saturating_sub(1),
+            };
+            for _ in 0..internal_links {
+                // two directions x halo rows x core-row cells
+                comm.record_exchange(2 * halo * core_rest_cells * 8, self.tb);
             }
 
             // (2) Concurrent dispatch on the shared work-stealing pool.
             let results: Vec<(Result<Field>, Duration)> =
-                dispatch(&self.workers, &self.spec, &inputs, self.tb);
+                dispatch(&self.workers, &self.spec, &inputs, self.tb, halo);
 
             // (3) Writeback + accounting.
             let slowest = results.iter().map(|(_, d)| *d).max().unwrap_or_default();
@@ -101,6 +131,44 @@ impl Scheduler {
                 global.paste(&off, &out);
                 busy[i] += dt;
                 idle[i] += slowest - dt;
+                window_busy[i] += dt.as_secs_f64();
+            }
+
+            // (4) §5.2 architecture-aware rebalance: slab redistribution
+            // through Partition::spans, fed by the measured busy times.
+            window_blocks += 1;
+            if self.adapt_every > 0 && window_blocks >= self.adapt_every && b + 1 < blocks {
+                let per_block: Vec<f64> =
+                    window_busy.iter().map(|t| t / window_blocks as f64).collect();
+                let tmax = per_block.iter().cloned().fold(0.0, f64::max);
+                // The squeezer can only rebalance if the declared worker
+                // capacities cover the domain; a hand-built static
+                // partition is allowed to ignore capacities, so skip the
+                // retune (rather than panic mid-run) when they don't.
+                let caps_cover = self
+                    .workers
+                    .iter()
+                    .map(|w| capacity_units(w.mem_capacity(), partition.unit, ext_rest_cells))
+                    .sum::<usize>()
+                    >= partition.total_units();
+                if tmax > 0.0 && caps_cover {
+                    // A zero-share worker measured ~nothing; feed it the
+                    // slowest time so its exploration weight stays modest.
+                    let measured: Vec<f64> = partition
+                        .shares
+                        .iter()
+                        .zip(&per_block)
+                        .map(|(&s, &t)| if s == 0 || t <= 0.0 { tmax } else { t })
+                        .collect();
+                    let next = tuner::retune(&partition, &measured, &self.workers, ext_rest_cells);
+                    if next != partition {
+                        partition = next;
+                        spans = partition.spans();
+                        retunes += 1;
+                    }
+                }
+                window_busy.fill(0.0);
+                window_blocks = 0;
             }
         }
 
@@ -113,7 +181,9 @@ impl Scheduler {
             worker_busy: busy,
             worker_idle: idle,
             comm,
-            ratios: (0..self.workers.len()).map(|i| self.partition.ratio(i)).collect(),
+            ratios: (0..nw).map(|i| partition.ratio(i)).collect(),
+            final_shares: partition.shares.clone(),
+            retunes,
         };
         Ok((global.unpad(halo), metrics))
     }
@@ -122,28 +192,41 @@ impl Scheduler {
 /// Run every worker on its input concurrently on a pool scope; returns
 /// per-worker (result, busy time) in worker order.  One task per worker
 /// — pools are ephemeral per call, so engine-internal tile pools nested
-/// inside a worker stay independent of this dispatch scope.
-fn dispatch(workers: &[Box<dyn Worker>], spec: &StencilSpec, inputs: &[Field], tb: usize) -> Vec<(Result<Field>, Duration)> {
+/// inside a worker stay independent of this dispatch scope.  A worker
+/// whose slab has zero core rows (share squeezed/retuned to 0) is skipped
+/// and yields an empty result.
+fn dispatch(
+    workers: &[Box<dyn Worker>],
+    spec: &StencilSpec,
+    inputs: &[Field],
+    tb: usize,
+    halo: usize,
+) -> Vec<(Result<Field>, Duration)> {
     super::pool::steal_map(workers.len(), workers.len(), |i| {
+        if inputs[i].shape()[0] == 2 * halo {
+            let shape: Vec<usize> = inputs[i].shape().iter().map(|&n| n - 2 * halo).collect();
+            return (Ok(Field::zeros(&shape)), Duration::ZERO);
+        }
         let t0 = Instant::now();
         let res = workers[i].run_slab(spec, &inputs[i], tb);
         (res, t0.elapsed())
     })
 }
 
-/// Single-worker reference evolution with the same Dirichlet semantics —
-/// used by tests and by the thermal case study's "Naive" row.
+/// Single-worker reference evolution with the same leader-side boundary
+/// semantics — used by tests and by the thermal case study's "Naive" row.
 pub fn reference_evolution(
     core: &Field,
     spec: &StencilSpec,
     total_steps: usize,
     tb: usize,
-    boundary: f64,
+    boundary: Boundary,
 ) -> Field {
     assert_eq!(total_steps % tb, 0);
     let halo = spec.radius * tb;
-    let mut global = core.pad(halo, boundary);
+    let mut global = core.pad(halo, boundary.pad_value());
     for _ in 0..total_steps / tb {
+        boundary.fill(&mut global, halo);
         let out = crate::stencil::reference::block(&global, spec, tb);
         global.paste(&vec![halo; core.ndim()], &out);
     }
@@ -154,10 +237,29 @@ pub fn reference_evolution(
 mod tests {
     use super::*;
     use crate::coordinator::worker::NativeWorker;
-    use crate::stencil::spec;
+    use crate::stencil::{reference, spec};
 
     fn native(name: &str) -> Box<dyn Worker> {
         Box::new(NativeWorker::new(crate::engine::by_name(name, 1).unwrap(), 1 << 30))
+    }
+
+    fn sched(
+        s: &StencilSpec,
+        tb: usize,
+        workers: Vec<Box<dyn Worker>>,
+        unit: usize,
+        shares: Vec<usize>,
+        boundary: Boundary,
+    ) -> Scheduler {
+        Scheduler {
+            spec: s.clone(),
+            tb,
+            workers,
+            partition: Partition { unit, shares },
+            comm_model: CommModel::default(),
+            boundary,
+            adapt_every: 0,
+        }
     }
 
     #[test]
@@ -168,15 +270,16 @@ mod tests {
             shape.extend(vec![10usize; s.ndim - 1]);
             let core = Field::random(&shape, 17);
             let tb = 2;
-            let sched = Scheduler {
-                spec: s.clone(),
+            let sched = sched(
+                &s,
                 tb,
-                workers: vec![native("simd"), native("autovec"), native("tetris-cpu")],
-                partition: Partition { unit: 4, shares: vec![2, 1, 3] },
-                comm_model: CommModel::default(),
-            };
-            let (got, metrics) = sched.run(&core, 8, 0.5).unwrap();
-            let want = reference_evolution(&core, &s, 8, tb, 0.5);
+                vec![native("simd"), native("autovec"), native("tetris-cpu")],
+                4,
+                vec![2, 1, 3],
+                Boundary::Dirichlet(0.5),
+            );
+            let (got, metrics) = sched.run(&core, 8).unwrap();
+            let want = reference_evolution(&core, &s, 8, tb, Boundary::Dirichlet(0.5));
             assert!(
                 got.allclose(&want, 1e-12, 1e-14),
                 "{bench}: maxdiff={}",
@@ -184,6 +287,15 @@ mod tests {
             );
             assert_eq!(metrics.blocks, 4);
             assert_eq!(metrics.comm.messages, 2 * 4); // 2 boundaries x 4 blocks
+            // Each batched exchange ships core-row cells only — the
+            // non-split-dim padding is locally-filled ghosts, not traffic.
+            let halo = s.radius * tb;
+            let core_rest: usize = shape[1..].iter().product::<usize>().max(1);
+            assert_eq!(
+                metrics.comm.bytes,
+                metrics.comm.messages * 2 * halo * core_rest * 8,
+                "{bench}"
+            );
         }
     }
 
@@ -191,15 +303,9 @@ mod tests {
     fn single_worker_covers_domain() {
         let s = spec::get("heat2d").unwrap();
         let core = Field::random(&[16, 8], 18);
-        let sched = Scheduler {
-            spec: s.clone(),
-            tb: 1,
-            workers: vec![native("naive")],
-            partition: Partition { unit: 16, shares: vec![1] },
-            comm_model: CommModel::default(),
-        };
-        let (got, m) = sched.run(&core, 3, 0.0).unwrap();
-        let want = reference_evolution(&core, &s, 3, 1, 0.0);
+        let sched = sched(&s, 1, vec![native("naive")], 16, vec![1], Boundary::Dirichlet(0.0));
+        let (got, m) = sched.run(&core, 3).unwrap();
+        let want = reference_evolution(&core, &s, 3, 1, Boundary::Dirichlet(0.0));
         assert!(got.allclose(&want, 1e-12, 0.0));
         assert_eq!(m.comm.messages, 0); // no internal boundary
     }
@@ -208,28 +314,17 @@ mod tests {
     fn rejects_partition_mismatch() {
         let s = spec::get("heat1d").unwrap();
         let core = Field::random(&[20], 19);
-        let sched = Scheduler {
-            spec: s.clone(),
-            tb: 1,
-            workers: vec![native("naive")],
-            partition: Partition { unit: 4, shares: vec![3] }, // 12 != 20
-            comm_model: CommModel::default(),
-        };
-        assert!(sched.run(&core, 1, 0.0).is_err());
+        // 12 != 20 rows
+        let sched = sched(&s, 1, vec![native("naive")], 4, vec![3], Boundary::Dirichlet(0.0));
+        assert!(sched.run(&core, 1).is_err());
     }
 
     #[test]
     fn rejects_non_multiple_steps() {
         let s = spec::get("heat1d").unwrap();
         let core = Field::random(&[8], 20);
-        let sched = Scheduler {
-            spec: s.clone(),
-            tb: 4,
-            workers: vec![native("naive")],
-            partition: Partition { unit: 8, shares: vec![1] },
-            comm_model: CommModel::default(),
-        };
-        assert!(sched.run(&core, 6, 0.0).is_err());
+        let sched = sched(&s, 4, vec![native("naive")], 8, vec![1], Boundary::Dirichlet(0.0));
+        assert!(sched.run(&core, 6).is_err());
     }
 
     #[test]
@@ -237,14 +332,245 @@ mod tests {
         // An all-boundary-value field must stay constant.
         let s = spec::get("heat2d").unwrap();
         let core = Field::full(&[12, 12], 1.5);
-        let sched = Scheduler {
-            spec: s.clone(),
-            tb: 2,
-            workers: vec![native("simd"), native("simd")],
-            partition: Partition { unit: 6, shares: vec![1, 1] },
-            comm_model: CommModel::default(),
-        };
-        let (got, _) = sched.run(&core, 4, 1.5).unwrap();
+        let sched = sched(
+            &s,
+            2,
+            vec![native("simd"), native("simd")],
+            6,
+            vec![1, 1],
+            Boundary::Dirichlet(1.5),
+        );
+        let (got, _) = sched.run(&core, 4).unwrap();
         assert!((got.min() - 1.5).abs() < 1e-12 && (got.max() - 1.5).abs() < 1e-12);
+    }
+
+    /// Acceptance: a 3-worker heterogeneous Periodic run matches the
+    /// shape-preserving periodic oracle to 1e-12 relative tolerance.
+    #[test]
+    fn hetero_periodic_matches_torus_oracle() {
+        for bench in ["heat1d", "heat2d", "heat3d"] {
+            let s = spec::get(bench).unwrap();
+            let mut shape = vec![24usize];
+            shape.extend(vec![8usize; s.ndim - 1]);
+            let core = Field::random(&shape, 23);
+            let tb = 2;
+            let sched = sched(
+                &s,
+                tb,
+                vec![native("simd"), native("autovec"), native("tetris-cpu")],
+                4,
+                vec![2, 1, 3],
+                Boundary::Periodic,
+            );
+            let steps = 6;
+            let (got, metrics) = sched.run(&core, steps).unwrap();
+            let want = reference::evolve_periodic(&core, &s, steps);
+            assert!(
+                got.allclose(&want, 1e-12, 1e-14),
+                "{bench}: maxdiff={}",
+                got.max_abs_diff(&want)
+            );
+            // torus conserves the mean
+            assert!((got.mean() - core.mean()).abs() < 1e-11, "{bench}");
+            // ring topology: W links per block, not W-1
+            assert_eq!(metrics.comm.messages, 3 * steps / tb, "{bench}");
+        }
+    }
+
+    /// Heterogeneous Neumann runs match the single-worker (leader-side)
+    /// Neumann evolution across dimensions and mixed worker sets.
+    #[test]
+    fn hetero_neumann_matches_single_worker_evolution() {
+        for bench in ["heat1d", "heat2d", "heat3d"] {
+            let s = spec::get(bench).unwrap();
+            let mut shape = vec![24usize];
+            shape.extend(vec![8usize; s.ndim - 1]);
+            let core = Field::random(&shape, 29);
+            let tb = 2;
+            let sched = sched(
+                &s,
+                tb,
+                vec![native("tetris-cpu"), native("naive"), native("simd")],
+                4,
+                vec![3, 2, 1],
+                Boundary::Neumann,
+            );
+            let (got, _) = sched.run(&core, 6).unwrap();
+            let want = reference_evolution(&core, &s, 6, tb, Boundary::Neumann);
+            assert!(
+                got.allclose(&want, 1e-12, 1e-14),
+                "{bench}: maxdiff={}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    /// Insulated walls conserve total heat: the Neumann reflection keeps
+    /// the deep halo an even extension, so the mean is a run invariant
+    /// even with fused Tb-blocks.
+    #[test]
+    fn neumann_run_conserves_mean() {
+        let s = spec::get("heat2d").unwrap();
+        let core = Field::random(&[16, 12], 31);
+        let sched =
+            sched(&s, 2, vec![native("simd"), native("autovec")], 4, vec![2, 2], Boundary::Neumann);
+        let (got, _) = sched.run(&core, 8).unwrap();
+        assert!((got.mean() - core.mean()).abs() < 1e-12, "drift {}", got.mean() - core.mean());
+    }
+
+    /// A worker whose share is 0 (squeezed out or retuned away) is
+    /// skipped, not crashed into a zero-row engine call.
+    #[test]
+    fn zero_share_worker_is_skipped() {
+        let s = spec::get("heat2d").unwrap();
+        let core = Field::random(&[16, 8], 37);
+        let sched = sched(
+            &s,
+            2,
+            vec![native("simd"), native("autovec")],
+            4,
+            vec![0, 4],
+            Boundary::Periodic,
+        );
+        let (got, metrics) = sched.run(&core, 4).unwrap();
+        let want = reference::evolve_periodic(&core, &s, 4);
+        assert!(got.allclose(&want, 1e-12, 1e-14), "maxdiff={}", got.max_abs_diff(&want));
+        assert_eq!(metrics.worker_busy[0], Duration::ZERO);
+        // one active worker = no inter-device links, even on the torus
+        assert_eq!(metrics.comm.messages, 0);
+    }
+
+    /// Delays each slab by a fixed per-core-row cost on top of a real
+    /// engine — a deterministic stand-in for a skewed heterogeneous set.
+    struct DelayWorker {
+        inner: Box<dyn Worker>,
+        per_row: Duration,
+    }
+
+    impl Worker for DelayWorker {
+        fn name(&self) -> String {
+            format!("delay:{}", self.inner.name())
+        }
+        fn mem_capacity(&self) -> usize {
+            self.inner.mem_capacity()
+        }
+        fn run_slab(&self, spec: &StencilSpec, input: &Field, steps: usize) -> Result<Field> {
+            let rows = input.shape()[0] - 2 * spec.radius * steps;
+            std::thread::sleep(self.per_row * rows as u32);
+            self.inner.run_slab(spec, input, steps)
+        }
+    }
+
+    fn delayed(eng: &str, per_row_us: u64) -> Box<dyn Worker> {
+        Box::new(DelayWorker { inner: native(eng), per_row: Duration::from_micros(per_row_us) })
+    }
+
+    /// Acceptance: on a skewed worker set, the adaptive run (a) computes
+    /// the same field as the static run, and (b) strictly reduces the
+    /// max worker idle-time share vs the static partition.
+    #[test]
+    fn adaptive_retune_reduces_idle_and_preserves_field() {
+        let s = spec::get("heat1d").unwrap();
+        let core = Field::random(&[16], 41);
+        let steps = 8;
+        // worker 0 is 4x slower per row; a fair split strands worker 1.
+        let make = || {
+            sched(
+                &s,
+                1,
+                vec![delayed("simd", 2000), delayed("simd", 500)],
+                2,
+                vec![4, 4],
+                Boundary::Dirichlet(0.25),
+            )
+        };
+        let static_sched = make();
+        let mut adaptive_sched = make();
+        adaptive_sched.adapt_every = 1;
+
+        let (want, static_m) = static_sched.run(&core, steps).unwrap();
+        let (got, adaptive_m) = adaptive_sched.run(&core, steps).unwrap();
+
+        // (a) slab redistribution is numerically invisible
+        assert!(got.allclose(&want, 1e-12, 1e-14), "maxdiff={}", got.max_abs_diff(&want));
+        let oracle = reference_evolution(&core, &s, steps, 1, Boundary::Dirichlet(0.25));
+        assert!(got.allclose(&oracle, 1e-12, 1e-14));
+
+        // (b) the retuner moved rows to the fast worker and cut bubbles
+        assert!(adaptive_m.retunes >= 1, "no retune happened");
+        assert_eq!(static_m.retunes, 0);
+        assert!(
+            adaptive_m.ratios[1] > static_m.ratios[1],
+            "fast worker share did not grow: {:?} vs {:?}",
+            adaptive_m.ratios,
+            static_m.ratios
+        );
+        let max_idle_share = |m: &RunMetrics| {
+            m.worker_idle
+                .iter()
+                .zip(&m.worker_busy)
+                .map(|(i, b)| {
+                    let (i, b) = (i.as_secs_f64(), b.as_secs_f64());
+                    if i + b == 0.0 {
+                        0.0
+                    } else {
+                        i / (i + b)
+                    }
+                })
+                .fold(0.0, f64::max)
+        };
+        let (si, ai) = (max_idle_share(&static_m), max_idle_share(&adaptive_m));
+        assert!(ai < si, "adaptive idle share {ai:.3} not below static {si:.3}");
+    }
+
+    /// A static partition may ignore declared capacities; turning on
+    /// `adapt_every` for the same configuration must skip the retune
+    /// (not panic in the squeezer) and still complete correctly.
+    #[test]
+    fn adapt_skips_retune_when_capacities_cannot_cover() {
+        let s = spec::get("heat1d").unwrap();
+        let core = Field::random(&[16], 47);
+        // 16-byte "memories": capacity_units = 0 for both workers.
+        let tiny = |eng: &str| -> Box<dyn Worker> {
+            Box::new(NativeWorker::new(crate::engine::by_name(eng, 1).unwrap(), 16))
+        };
+        let mut sc = sched(
+            &s,
+            1,
+            vec![tiny("simd"), tiny("naive")],
+            2,
+            vec![4, 4],
+            Boundary::Dirichlet(0.0),
+        );
+        sc.adapt_every = 1;
+        let (got, m) = sc.run(&core, 4).unwrap();
+        let want = reference_evolution(&core, &s, 4, 1, Boundary::Dirichlet(0.0));
+        assert!(got.allclose(&want, 1e-12, 1e-14));
+        assert_eq!(m.retunes, 0);
+    }
+
+    /// Retuning mid-run keeps the partition covering the domain exactly —
+    /// the run must keep matching the oracle while shares move.
+    #[test]
+    fn adaptive_run_stays_correct_under_periodic() {
+        let s = spec::get("heat2d").unwrap();
+        let core = Field::random(&[16, 8], 43);
+        let mut sc = sched(
+            &s,
+            1,
+            vec![delayed("simd", 800), delayed("simd", 200)],
+            2,
+            vec![4, 4],
+            Boundary::Periodic,
+        );
+        sc.adapt_every = 2;
+        let steps = 6;
+        let (got, m) = sc.run(&core, steps).unwrap();
+        let want = reference::evolve_periodic(&core, &s, steps);
+        assert!(got.allclose(&want, 1e-12, 1e-14), "maxdiff={}", got.max_abs_diff(&want));
+        let total: f64 = m.ratios.iter().sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        // the converged partition still covers the domain exactly
+        assert_eq!(m.final_shares.iter().sum::<usize>(), 8);
     }
 }

@@ -8,7 +8,7 @@
 //! capacity-respecting balanced partition, and [`retune`] refines it
 //! from measured per-block times (architecture-aware rebalance).
 
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
 
 use crate::stencil::{Field, StencilSpec};
 
@@ -28,15 +28,19 @@ pub fn profile_workers(
     let input = Field::random(&shape, 0xBEEF);
     let mut out = Vec::with_capacity(workers.len());
     for w in workers {
-        // warmup (compile caches, page-in), then median of `reps`.
-        w.run_slab(spec, &input, tb)?;
-        let mut samples: Vec<f64> = (0..reps.max(1))
-            .map(|_| {
-                let t0 = std::time::Instant::now();
-                let _ = w.run_slab(spec, &input, tb);
-                t0.elapsed().as_secs_f64()
-            })
-            .collect();
+        // warmup (compile caches, page-in), then median of `reps`.  Every
+        // timed call propagates its Result: a failing worker must surface
+        // as an error, not as a near-zero profile that would hand it the
+        // whole partition.
+        w.run_slab(spec, &input, tb)
+            .with_context(|| format!("profiling {} (warmup)", w.name()))?;
+        let mut samples: Vec<f64> = Vec::with_capacity(reps.max(1));
+        for _ in 0..reps.max(1) {
+            let t0 = std::time::Instant::now();
+            w.run_slab(spec, &input, tb)
+                .with_context(|| format!("profiling {}", w.name()))?;
+            samples.push(t0.elapsed().as_secs_f64());
+        }
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
         out.push(samples[samples.len() / 2].max(1e-12));
     }
@@ -230,6 +234,71 @@ mod tests {
         let (p, iters) = converge(start.clone(), &[1e-3], &ws, 64, 0.1, 5);
         assert_eq!(p, start);
         assert_eq!(iters, 0);
+    }
+
+    /// Fails only on calls after the warmup: exactly the case the old
+    /// `let _ = w.run_slab(...)` swallowed, turning a broken worker into
+    /// a near-zero (i.e. "infinitely fast") profile.
+    struct FailsAfterWarmup {
+        calls: std::sync::atomic::AtomicUsize,
+    }
+
+    impl Worker for FailsAfterWarmup {
+        fn name(&self) -> String {
+            "fails-after-warmup".into()
+        }
+        fn mem_capacity(&self) -> usize {
+            1 << 30
+        }
+        fn run_slab(
+            &self,
+            spec: &crate::stencil::StencilSpec,
+            input: &Field,
+            steps: usize,
+        ) -> Result<Field> {
+            if self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst) >= 1 {
+                crate::bail!("device lost");
+            }
+            Ok(crate::stencil::reference::block(input, spec, steps))
+        }
+    }
+
+    #[test]
+    fn profile_propagates_timed_call_failure() {
+        let s = spec::get("heat2d").unwrap();
+        let ws: Vec<Box<dyn Worker>> = vec![
+            Box::new(NativeWorker::new(crate::engine::by_name("simd", 1).unwrap(), 1 << 30)),
+            Box::new(FailsAfterWarmup { calls: std::sync::atomic::AtomicUsize::new(0) }),
+        ];
+        let err = profile_workers(&ws, &s, &[8, 8], 2, 3).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("device lost"), "{msg}");
+        assert!(msg.contains("fails-after-warmup"), "{msg}");
+    }
+
+    #[test]
+    fn profile_propagates_warmup_failure() {
+        struct AlwaysFails;
+        impl Worker for AlwaysFails {
+            fn name(&self) -> String {
+                "always-fails".into()
+            }
+            fn mem_capacity(&self) -> usize {
+                1 << 30
+            }
+            fn run_slab(
+                &self,
+                _: &crate::stencil::StencilSpec,
+                _: &Field,
+                _: usize,
+            ) -> Result<Field> {
+                crate::bail!("no backend")
+            }
+        }
+        let s = spec::get("heat1d").unwrap();
+        let ws: Vec<Box<dyn Worker>> = vec![Box::new(AlwaysFails)];
+        let err = profile_workers(&ws, &s, &[8], 1, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("warmup"), "{err:#}");
     }
 
     #[test]

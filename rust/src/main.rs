@@ -4,10 +4,11 @@
 //!   info                      platform + artifact inventory
 //!   validate                  golden-check every AOT artifact via PJRT
 //!   run      --bench B --engine E [--steps N] [--threads T]
-//!   hetero   --bench B [--steps N] [--threads T]
-//!   thermal  [--size N] [--steps N] [--viz DIR]
+//!            [--boundary C] [--adapt K] [--workers W]  scheduler mode
+//!   hetero   --bench B [--steps N] [--threads T] [--boundary C] [--adapt K]
+//!   thermal  [--size N] [--steps N] [--viz DIR] [--insulated]
 //!   accuracy [--blocks K]
-//!   bench    breakdown|sota|scaling|comm|mxu [--scale F] [--threads T]
+//!   bench    breakdown|sota|scaling|comm|mxu|boundary [--scale F] [--threads T]
 //!            [--json FILE]    single-line JSON summary for CI artifacts
 
 #![allow(clippy::uninlined_format_args)]
@@ -18,9 +19,9 @@ use tetris::bail;
 use tetris::util::error::{Context, Result};
 
 use tetris::bench as harness;
-use tetris::coordinator::{CommModel, NativeWorker, Partition, Scheduler};
+use tetris::coordinator::{CommModel, NativeWorker, Partition, Scheduler, Worker};
 use tetris::runtime::XlaService;
-use tetris::stencil::{spec, Field};
+use tetris::stencil::{spec, Boundary, Field};
 
 /// Minimal `--key value` flag parser (the vendored crate set has no clap).
 struct Args {
@@ -99,11 +100,17 @@ fn print_help() {
          info                          platform + artifact inventory\n\
          validate                      golden-check every AOT artifact\n\
          run    --bench B --engine E   single-engine run  [--steps N --threads T --scale F]\n\
-         hetero --bench B              auto-tuned CPU+XLA run [--steps N --threads T]\n\
+                [--boundary C --adapt K --workers W]   scheduler run on W native workers\n\
+         hetero --bench B              auto-tuned CPU+XLA run [--steps N --threads T\n\
+                                       --boundary C --adapt K]\n\
          thermal [--size N --steps N --viz DIR --threads T]   Table-3 case study\n\
+                [--insulated]          Neumann zero-flux plate (conserves total heat)\n\
          accuracy [--blocks K]         Table-4 FP64-vs-FP32 study\n\
-         bench  breakdown|sota|scaling|comm|mxu [--scale F --threads T --json FILE]\n\
+         bench  breakdown|sota|scaling|comm|mxu|boundary [--scale F --threads T --json FILE]\n\
          \n\
+         boundaries (C): dirichlet[:V] (fixed-value ghosts), neumann (zero-flux),\n\
+                         periodic (torus wrap); --adapt K retunes the partition\n\
+                         from measured busy times every K blocks (0 = static)\n\
          engines: {}\n\
          baselines: {}",
         tetris::engine::ENGINE_NAMES.join(", "),
@@ -160,6 +167,15 @@ fn cmd_validate() -> Result<()> {
     Ok(())
 }
 
+/// Parse the shared `--boundary C` / `--adapt K` flags.
+fn boundary_flags(args: &Args) -> Result<(Boundary, usize)> {
+    let b: Boundary = args
+        .str("boundary", "dirichlet:0")
+        .parse()
+        .context("--boundary")?;
+    Ok((b, args.get("adapt", 0usize)))
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let bench = args.str("bench", "heat2d");
     let engine = args.str("engine", "tetris-cpu");
@@ -169,6 +185,42 @@ fn cmd_run(args: &Args) -> Result<()> {
     let (core, mut steps, tb) = harness::scaled_problem(&bench, scale);
     steps = args.get("steps", steps);
     steps -= steps % tb;
+    let scheduler_mode = ["boundary", "adapt", "workers"]
+        .iter()
+        .any(|k| args.flags.contains_key(*k));
+    if scheduler_mode {
+        // Boundary-aware scheduler run: W native workers of the chosen
+        // engine, row-granular partition, optional adaptive retune.
+        let (boundary, adapt) = boundary_flags(args)?;
+        let nworkers = args.get("workers", 2usize).max(1);
+        let workers: Vec<Box<dyn Worker>> = (0..nworkers)
+            .map(|_| -> Result<Box<dyn Worker>> {
+                Ok(Box::new(NativeWorker::new(
+                    tetris::engine::by_name(&engine, threads)
+                        .with_context(|| format!("unknown engine {engine}"))?,
+                    1 << 33,
+                )))
+            })
+            .collect::<Result<_>>()?;
+        let rows = core[0];
+        let sched = Scheduler {
+            spec: s,
+            tb,
+            workers,
+            partition: Partition::balanced(1, rows, &vec![1.0; nworkers], &vec![rows; nworkers]),
+            comm_model: CommModel::default(),
+            boundary,
+            adapt_every: adapt,
+        };
+        let field = Field::random(&core, 0xA11CE);
+        let (out, metrics) = sched.run(&field, steps)?;
+        println!(
+            "{bench} x {steps} steps on {nworkers}x{engine} (threads={threads}, boundary={boundary}, adapt={adapt})"
+        );
+        println!("{}", metrics.report(&sched.comm_model));
+        println!("final field mean={:.6} l2={:.3}", out.mean(), out.l2());
+        return Ok(());
+    }
     let eng = tetris::engine::by_name(&engine, threads)
         .or_else(|| tetris::baselines::by_name(&engine))
         .with_context(|| format!("unknown engine {engine}"))?;
@@ -185,13 +237,16 @@ fn cmd_hetero(args: &Args) -> Result<()> {
     let bench = args.str("bench", "heat2d");
     let threads = args.get("threads", 1usize);
     let rt = XlaService::spawn_default().context("hetero needs artifacts: run `make artifacts`")?;
-    let (sched, global) = harness::hetero_scheduler(&rt, &bench, threads)?;
+    let (mut sched, global) = harness::hetero_scheduler(&rt, &bench, threads)?;
+    let (boundary, adapt) = boundary_flags(args)?;
+    sched.boundary = boundary;
+    sched.adapt_every = adapt;
     let steps = {
         let s = args.get("steps", sched.tb * 4);
         s - s % sched.tb
     };
     let core = Field::random(&global, 1);
-    let (out, metrics) = sched.run(&core, steps, 0.0)?;
+    let (out, metrics) = sched.run(&core, steps)?;
     println!("{}", metrics.report(&sched.comm_model));
     println!("final field mean={:.6} l2={:.3}", out.mean(), out.l2());
     Ok(())
@@ -206,6 +261,28 @@ fn cmd_thermal(args: &Args) -> Result<()> {
         s - s % tb
     };
     let threads = args.get("threads", 1usize);
+    if args.flags.contains_key("insulated") {
+        // Neumann zero-flux plate: no heat escapes, mean is invariant.
+        let adapt = args.get("adapt", 0usize);
+        let init = tetris::apps::thermal::gaussian_plate(size);
+        let (out, metrics) = tetris::apps::thermal::run_insulated(size, steps, tb, threads, adapt)?;
+        println!("== insulated plate ({size}x{size}, {steps} steps, Neumann walls) ==");
+        println!("{}", metrics.report(&CommModel::default()));
+        println!(
+            "mean {:.6} -> {:.6} (drift {:.2e}, conserved), center {:.2} -> {:.2} °C",
+            init.mean(),
+            out.mean(),
+            (out.mean() - init.mean()).abs(),
+            init.get(&[size / 2, size / 2]),
+            out.get(&[size / 2, size / 2])
+        );
+        if let Some(dir) = args.flags.get("viz") {
+            std::fs::create_dir_all(dir)?;
+            tetris::apps::viz::save_heatmap(&out, 25.0, 100.0, format!("{dir}/insulated.ppm"))?;
+            println!("wrote {dir}/insulated.ppm");
+        }
+        return Ok(());
+    }
     let (rows, fields) = tetris::apps::thermal::run_table3(rt.as_ref(), size, steps, tb, threads)?;
     println!("== Table 3: thermal diffusion ({size}x{size}, {steps} steps) ==");
     println!("{:<14} {:>10} {:>14} {:>9} {:>12}", "method", "time(s)", "GStencils/s", "speedup", "center(°C)");
@@ -273,6 +350,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "breakdown" => harness::run_breakdown(rt.as_ref(), scale, threads),
         "sota" => harness::run_sota(rt.as_ref(), scale, threads),
         "scaling" => harness::run_scaling(rt.as_ref(), scale, threads),
+        "boundary" => harness::run_boundary(scale, threads),
         "comm" => vec![("comm".to_string(), harness::run_comm())],
         "mxu" => {
             let rt = rt.context("mxu bench needs artifacts")?;
@@ -301,5 +379,7 @@ fn single_worker_sched(bench: &str, engine: &str, threads: usize) -> Result<Sche
         ))],
         partition: Partition { unit: 8, shares: vec![1] },
         comm_model: CommModel::default(),
+        boundary: Boundary::Dirichlet(0.0),
+        adapt_every: 0,
     })
 }

@@ -5,10 +5,19 @@
 //! the ring each block, so applications can pick the physics they need:
 //!
 //! * [`Boundary::Dirichlet`] — fixed value (the thermal plate's ambient);
-//! * [`Boundary::Neumann`] — zero-flux: ghosts mirror the edge cells
-//!   (insulated plate);
+//! * [`Boundary::Neumann`] — zero-flux: ghosts reflect the core about
+//!   the wall face (insulated plate).  Reflection — not edge
+//!   replication — is what keeps a *deep* halo (`radius*Tb`) exactly
+//!   equivalent to refilling a 1-step halo every step: the even
+//!   extension is invariant under the symmetric stencil, so fused
+//!   Tb-blocks conserve total heat to machine precision;
 //! * [`Boundary::Periodic`] — torus wrap (matches `ref.evolve_periodic`
 //!   and the thermal artifacts).
+//!
+//! Fills are face-wise strided copies touching only the O(surface) ghost
+//! ring — never a full-domain scan — so the coordinator can refresh the
+//! ring every Tb-block (Neumann mirrors and Periodic wraps depend on the
+//! evolving core) without it showing up in the block time.
 
 use super::field::Field;
 
@@ -30,9 +39,9 @@ impl Boundary {
         }
         match self {
             Boundary::Dirichlet(v) => fill_dirichlet(ext, halo, *v),
-            Boundary::Neumann => fill_by_map(ext, halo, |x, lo, hi| x.clamp(lo, hi)),
-            Boundary::Periodic => fill_by_map(ext, halo, |x, lo, hi| {
-                let n = (hi - lo + 1) as i64;
+            Boundary::Neumann => fill_by_row_map(ext, halo, reflect),
+            Boundary::Periodic => fill_by_row_map(ext, halo, |x, lo, hi| {
+                let n = hi - lo + 1;
                 lo + (((x - lo) % n + n) % n)
             }),
         }
@@ -44,59 +53,105 @@ impl Boundary {
         self.fill(&mut ext, halo);
         ext
     }
-}
 
-fn fill_dirichlet(ext: &mut Field, halo: usize, v: f64) {
-    let shape = ext.shape().to_vec();
-    let nd = shape.len();
-    let mut idx = vec![0usize; nd];
-    let n = ext.len();
-    let data = ext.data_mut();
-    for i in 0..n {
-        let in_core = idx
-            .iter()
-            .zip(&shape)
-            .all(|(&x, &s)| x >= halo && x < s - halo);
-        if !in_core {
-            data[i] = v;
-        }
-        for k in (0..nd).rev() {
-            idx[k] += 1;
-            if idx[k] < shape[k] {
-                break;
-            }
-            idx[k] = 0;
+    /// The value used when first padding a core field (ghosts are then
+    /// kept fresh by per-block [`Boundary::fill`] calls).
+    pub fn pad_value(&self) -> f64 {
+        match self {
+            Boundary::Dirichlet(v) => *v,
+            _ => 0.0,
         }
     }
 }
 
-/// Fill ghosts by mapping each out-of-core coordinate to an in-core one
-/// (clamp => Neumann mirror-of-edge, modulo => periodic).
-fn fill_by_map(ext: &mut Field, halo: usize, map: impl Fn(i64, i64, i64) -> i64) {
+impl std::fmt::Display for Boundary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Boundary::Dirichlet(v) => write!(f, "dirichlet:{v}"),
+            Boundary::Neumann => write!(f, "neumann"),
+            Boundary::Periodic => write!(f, "periodic"),
+        }
+    }
+}
+
+/// CLI syntax: `dirichlet[:V]` | `neumann` | `periodic`.
+impl std::str::FromStr for Boundary {
+    type Err = crate::util::error::TetrisError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "neumann" => Ok(Boundary::Neumann),
+            "periodic" => Ok(Boundary::Periodic),
+            "dirichlet" => Ok(Boundary::Dirichlet(0.0)),
+            other => match other.strip_prefix("dirichlet:") {
+                Some(v) => v
+                    .parse::<f64>()
+                    .map(Boundary::Dirichlet)
+                    .map_err(|e| crate::err!("bad dirichlet value {v:?}: {e}")),
+                None => Err(crate::err!(
+                    "unknown boundary {other:?} (expected dirichlet[:V], neumann or periodic)"
+                )),
+            },
+        }
+    }
+}
+
+/// Even reflection about the wall faces, folded until in-core: ghost at
+/// depth k mirrors core row k-1 (`lo-1 -> lo`, `lo-2 -> lo+1`, ...).
+/// The reflection group has period 2n, so arbitrary halo depths fold
+/// correctly even when `halo > n`.
+fn reflect(x: i64, lo: i64, hi: i64) -> i64 {
+    let n = hi - lo + 1;
+    let mut t = (x - lo).rem_euclid(2 * n);
+    if t >= n {
+        t = 2 * n - 1 - t;
+    }
+    lo + t
+}
+
+/// Dirichlet: overwrite the two `halo`-thick face slabs of every dim with
+/// `v`.  Each slab spans the full extent of the other dims, so the union
+/// is exactly the non-core set; corners get written once per incident
+/// axis, which is idempotent.
+fn fill_dirichlet(ext: &mut Field, halo: usize, v: f64) {
+    let shape = ext.shape().to_vec();
+    for d in 0..shape.len() {
+        debug_assert!(shape[d] >= 2 * halo, "extended dim {d} smaller than ghost ring");
+        let mut count = shape.clone();
+        count[d] = halo;
+        let mut off = vec![0usize; shape.len()];
+        ext.fill_region(&off, &count, v);
+        off[d] = shape[d] - halo;
+        ext.fill_region(&off, &count, v);
+    }
+}
+
+/// Fill ghosts by mapping each ghost *row* of each dim to the in-core row
+/// `map` selects (reflection => Neumann, modulo => periodic), one
+/// in-place strided hyperslab copy per ghost row (no allocation).
+/// Passes run axis by axis over the full extent of the other dims: a
+/// corner cell is rewritten by every incident axis, and because each
+/// pass sources rows whose earlier axes were already mapped into the
+/// core, the final corner value equals the all-axes-mapped core cell —
+/// identical to a per-cell simultaneous map, in O(surface * halo) work
+/// instead of O(volume).
+fn fill_by_row_map(ext: &mut Field, halo: usize, map: impl Fn(i64, i64, i64) -> i64) {
     let shape = ext.shape().to_vec();
     let nd = shape.len();
-    let mut idx = vec![0usize; nd];
-    let n = ext.len();
-    for _ in 0..n {
-        let in_core = idx
-            .iter()
-            .zip(&shape)
-            .all(|(&x, &s)| x >= halo && x < s - halo);
-        if !in_core {
-            let src: Vec<usize> = idx
-                .iter()
-                .zip(&shape)
-                .map(|(&x, &s)| map(x as i64, halo as i64, (s - halo - 1) as i64) as usize)
-                .collect();
-            let v = ext.get(&src);
-            ext.set(&idx.clone(), v);
-        }
-        for k in (0..nd).rev() {
-            idx[k] += 1;
-            if idx[k] < shape[k] {
-                break;
-            }
-            idx[k] = 0;
+    for d in 0..nd {
+        assert!(shape[d] > 2 * halo, "dim {d}: core must be non-empty to source ghosts");
+        let lo = halo as i64;
+        let hi = (shape[d] - halo - 1) as i64;
+        let mut count = shape.clone();
+        count[d] = 1;
+        for g in (0..halo).chain(shape[d] - halo..shape[d]) {
+            let src_row = map(g as i64, lo, hi) as usize;
+            debug_assert!((lo..=hi).contains(&(src_row as i64)));
+            let mut src_off = vec![0usize; nd];
+            src_off[d] = src_row;
+            let mut dst_off = vec![0usize; nd];
+            dst_off[d] = g;
+            ext.copy_region_within(&src_off, &dst_off, &count);
         }
     }
 }
@@ -105,6 +160,38 @@ fn fill_by_map(ext: &mut Field, halo: usize, map: impl Fn(i64, i64, i64) -> i64)
 mod tests {
     use super::*;
     use crate::stencil::{reference, spec};
+
+    /// The pre-rewrite per-cell oracle: scan the whole volume, map every
+    /// out-of-core coordinate simultaneously.  Kept as the equivalence
+    /// reference for the face-wise fills.
+    fn fill_by_scan(ext: &mut Field, halo: usize, map: impl Fn(i64, i64, i64) -> i64) {
+        let shape = ext.shape().to_vec();
+        let nd = shape.len();
+        let mut idx = vec![0usize; nd];
+        let n = ext.len();
+        for _ in 0..n {
+            let in_core = idx
+                .iter()
+                .zip(&shape)
+                .all(|(&x, &s)| x >= halo && x < s - halo);
+            if !in_core {
+                let src: Vec<usize> = idx
+                    .iter()
+                    .zip(&shape)
+                    .map(|(&x, &s)| map(x as i64, halo as i64, (s - halo - 1) as i64) as usize)
+                    .collect();
+                let v = ext.get(&src);
+                ext.set(&idx.clone(), v);
+            }
+            for k in (0..nd).rev() {
+                idx[k] += 1;
+                if idx[k] < shape[k] {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+    }
 
     #[test]
     fn dirichlet_fills_ring_only() {
@@ -117,12 +204,44 @@ mod tests {
     }
 
     #[test]
+    fn dirichlet_covers_every_ghost_cell() {
+        // Face-slab union must be exactly the non-core set, all dims.
+        for shape in [vec![5usize], vec![5, 6], vec![3, 4, 5]] {
+            let core = Field::random(&shape, 11);
+            let halo = 2;
+            let ext = Boundary::Dirichlet(-3.5).pad(&core, halo);
+            let eshape = ext.shape().to_vec();
+            let mut idx = vec![0usize; eshape.len()];
+            for _ in 0..ext.len() {
+                let in_core = idx
+                    .iter()
+                    .zip(&eshape)
+                    .all(|(&x, &s)| x >= halo && x < s - halo);
+                let got = ext.get(&idx);
+                if in_core {
+                    let cidx: Vec<usize> = idx.iter().map(|&x| x - halo).collect();
+                    assert_eq!(got, core.get(&cidx));
+                } else {
+                    assert_eq!(got, -3.5, "ghost {idx:?} missed");
+                }
+                for k in (0..eshape.len()).rev() {
+                    idx[k] += 1;
+                    if idx[k] < eshape[k] {
+                        break;
+                    }
+                    idx[k] = 0;
+                }
+            }
+        }
+    }
+
+    #[test]
     fn neumann_mirrors_edges() {
         let core = Field::random(&[3, 3], 2);
         let ext = Boundary::Neumann.pad(&core, 1);
         assert_eq!(ext.get(&[0, 1]), core.get(&[0, 0]));
         assert_eq!(ext.get(&[4, 3]), core.get(&[2, 2]));
-        // corner clamps both axes
+        // corner reflects both axes
         assert_eq!(ext.get(&[0, 0]), core.get(&[0, 0]));
     }
 
@@ -134,6 +253,79 @@ mod tests {
         assert_eq!(ext.get(&[1]), core.get(&[3]));
         assert_eq!(ext.get(&[6]), core.get(&[0]));
         assert_eq!(ext.get(&[7]), core.get(&[1]));
+    }
+
+    #[test]
+    fn facewise_fill_matches_percell_scan_oracle() {
+        // The O(surface) axis-by-axis fill must agree cell-for-cell with
+        // the per-cell simultaneous map, corners included, for both maps,
+        // across ranks and halos (halo 3 > core 2 exercises multi-fold).
+        for shape in [vec![7usize], vec![5, 4], vec![2, 3], vec![4, 3, 5]] {
+            for halo in [1usize, 2, 3] {
+                let core = Field::random(&shape, 0xC0DE + halo as u64);
+                let wrap = |x: i64, lo: i64, hi: i64| {
+                    let n = hi - lo + 1;
+                    lo + (((x - lo) % n + n) % n)
+                };
+                for b in [Boundary::Neumann, Boundary::Periodic] {
+                    let got = b.pad(&core, halo);
+                    let mut want = core.pad(halo, 0.0);
+                    match b {
+                        Boundary::Neumann => fill_by_scan(&mut want, halo, reflect),
+                        Boundary::Periodic => fill_by_scan(&mut want, halo, wrap),
+                        _ => unreachable!(),
+                    }
+                    assert_eq!(got, want, "{b} shape {shape:?} halo {halo}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reflect_folds_about_the_wall_face() {
+        // depth-1 ghost mirrors the edge row, depth-2 the next row in...
+        assert_eq!(reflect(1, 2, 5), 2);
+        assert_eq!(reflect(0, 2, 5), 3);
+        assert_eq!(reflect(6, 2, 5), 5);
+        assert_eq!(reflect(7, 2, 5), 4);
+        // ...and deep halos fold with period 2n (n=2: 2,3,3,2,2,3,...)
+        assert_eq!(reflect(1, 2, 3), 2);
+        assert_eq!(reflect(0, 2, 3), 3);
+        assert_eq!(reflect(-1, 2, 3), 3);
+        assert_eq!(reflect(-2, 2, 3), 2);
+        // single-row core: everything maps to the row
+        assert_eq!(reflect(0, 1, 1), 1);
+        assert_eq!(reflect(2, 1, 1), 1);
+    }
+
+    /// The load-bearing property behind fused Tb-blocks: one deep-halo
+    /// reflection fill + tb valid steps == tb (1-step fill + step)s.
+    /// Edge replication (clamp) does NOT have this property — it leaks
+    /// flux from depth >= 2 — which is why Neumann reflects.
+    #[test]
+    fn neumann_deep_halo_block_equals_per_step() {
+        for bench in ["heat2d", "star1d5p", "box2d25p"] {
+            let s = spec::get(bench).unwrap();
+            let shape: Vec<usize> = vec![8; s.ndim];
+            let core = Field::random(&shape, 0xFACE);
+            let tb = 3;
+            // fused: one fill at halo = r*tb, then tb valid steps
+            let ext = Boundary::Neumann.pad(&core, s.radius * tb);
+            let fused = reference::block(&ext, &s, tb);
+            // per-step: refill a 1-step halo before every step
+            let mut cur = core.clone();
+            for _ in 0..tb {
+                let e = Boundary::Neumann.pad(&cur, s.radius);
+                cur = reference::step(&e, &s);
+            }
+            assert!(
+                fused.allclose(&cur, 1e-13, 0.0),
+                "{bench}: maxdiff={}",
+                fused.max_abs_diff(&cur)
+            );
+            // and zero-flux really means zero flux: the mean is conserved
+            assert!((fused.mean() - core.mean()).abs() < 1e-13, "{bench}");
+        }
     }
 
     #[test]
@@ -162,5 +354,28 @@ mod tests {
         let mut ext = core.clone();
         Boundary::Periodic.fill(&mut ext, 0);
         assert_eq!(ext, core);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for (txt, want) in [
+            ("neumann", Boundary::Neumann),
+            ("periodic", Boundary::Periodic),
+            ("dirichlet", Boundary::Dirichlet(0.0)),
+            ("dirichlet:25.5", Boundary::Dirichlet(25.5)),
+            ("dirichlet:-1e3", Boundary::Dirichlet(-1000.0)),
+        ] {
+            assert_eq!(txt.parse::<Boundary>().unwrap(), want);
+        }
+        assert_eq!("dirichlet:25.5", Boundary::Dirichlet(25.5).to_string());
+        assert!("torus".parse::<Boundary>().is_err());
+        assert!("dirichlet:hot".parse::<Boundary>().is_err());
+    }
+
+    #[test]
+    fn pad_value_matches_variant() {
+        assert_eq!(Boundary::Dirichlet(7.5).pad_value(), 7.5);
+        assert_eq!(Boundary::Neumann.pad_value(), 0.0);
+        assert_eq!(Boundary::Periodic.pad_value(), 0.0);
     }
 }

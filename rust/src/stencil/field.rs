@@ -150,6 +150,106 @@ impl Field {
         );
     }
 
+    /// Fill the sub-region at `offset` with extent `count` with `v`,
+    /// row-by-row (no allocation) — the strided write primitive behind
+    /// the O(surface) Dirichlet ghost fill.
+    pub fn fill_region(&mut self, offset: &[usize], count: &[usize], v: f64) {
+        assert_eq!(offset.len(), self.ndim());
+        assert_eq!(count.len(), self.ndim());
+        for d in 0..self.ndim() {
+            assert!(
+                offset[d] + count[d] <= self.shape[d],
+                "fill_region oob: dim {d} {}+{} > {}",
+                offset[d],
+                count[d],
+                self.shape[d]
+            );
+        }
+        if count.iter().any(|&c| c == 0) {
+            return;
+        }
+        let nd = self.ndim();
+        if nd == 0 {
+            self.data[0] = v;
+            return;
+        }
+        let row = count[nd - 1];
+        let outer: usize = count[..nd - 1].iter().product();
+        let mut idx = vec![0usize; nd - 1];
+        for _ in 0..outer.max(1) {
+            let mut base = offset[nd - 1];
+            for k in 0..nd - 1 {
+                base += (offset[k] + idx[k]) * self.strides[k];
+            }
+            self.data[base..base + row].fill(v);
+            for k in (0..nd - 1).rev() {
+                idx[k] += 1;
+                if idx[k] < count[k] {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+    }
+
+    /// Copy the sub-region at `src_off` (extent `count`) onto `dst_off`
+    /// within the same field, row-by-row via `slice::copy_within` — the
+    /// allocation-free in-place strided copy behind the mapped ghost
+    /// fills.  Overlap is only safe along the innermost dim (each row
+    /// copy is a memmove); regions that overlap across an outer dim
+    /// would read rows already overwritten, so that is rejected.
+    pub fn copy_region_within(&mut self, src_off: &[usize], dst_off: &[usize], count: &[usize]) {
+        assert_eq!(src_off.len(), self.ndim());
+        assert_eq!(dst_off.len(), self.ndim());
+        assert_eq!(count.len(), self.ndim());
+        for d in 0..self.ndim() {
+            assert!(
+                src_off[d] + count[d] <= self.shape[d] && dst_off[d] + count[d] <= self.shape[d],
+                "copy_region_within oob: dim {d}"
+            );
+        }
+        if count.iter().any(|&c| c == 0) {
+            return;
+        }
+        let nd = self.ndim();
+        if nd == 0 {
+            return;
+        }
+        // Rows alias only when every outer coordinate matches and the
+        // inner ranges intersect: safe iff outer offsets are identical
+        // (pure per-row memmove), some outer dim is disjoint, or the
+        // inner ranges are disjoint.
+        let outer_equal = src_off[..nd - 1] == dst_off[..nd - 1];
+        let outer_disjoint = (0..nd - 1).any(|d| {
+            src_off[d] + count[d] <= dst_off[d] || dst_off[d] + count[d] <= src_off[d]
+        });
+        let inner_disjoint = src_off[nd - 1] + count[nd - 1] <= dst_off[nd - 1]
+            || dst_off[nd - 1] + count[nd - 1] <= src_off[nd - 1];
+        assert!(
+            outer_equal || outer_disjoint || inner_disjoint,
+            "copy_region_within: regions overlap across an outer dimension"
+        );
+        let row = count[nd - 1];
+        let outer: usize = count[..nd - 1].iter().product();
+        let mut idx = vec![0usize; nd - 1];
+        for _ in 0..outer.max(1) {
+            let mut s = src_off[nd - 1];
+            let mut d = dst_off[nd - 1];
+            for k in 0..nd - 1 {
+                s += (src_off[k] + idx[k]) * self.strides[k];
+                d += (dst_off[k] + idx[k]) * self.strides[k];
+            }
+            self.data.copy_within(s..s + row, d);
+            for k in (0..nd - 1).rev() {
+                idx[k] += 1;
+                if idx[k] < count[k] {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+    }
+
     /// New field padded by `halo` cells of `value` on every side.
     pub fn pad(&self, halo: usize, value: f64) -> Field {
         let shape: Vec<usize> = self.shape.iter().map(|n| n + 2 * halo).collect();
@@ -290,6 +390,81 @@ mod tests {
         let p = f.pad(1, 0.0);
         assert_eq!(p.shape(), &[5, 6, 7]);
         assert_eq!(p.unpad(1), f);
+    }
+
+    #[test]
+    fn fill_region_rows_and_corners() {
+        let mut f = Field::zeros(&[4, 5]);
+        f.fill_region(&[1, 2], &[2, 3], 7.0);
+        assert_eq!(f.get(&[1, 2]), 7.0);
+        assert_eq!(f.get(&[2, 4]), 7.0);
+        assert_eq!(f.get(&[0, 2]), 0.0);
+        assert_eq!(f.get(&[1, 1]), 0.0);
+        assert_eq!(f.get(&[3, 2]), 0.0);
+        // empty extent is a no-op
+        f.fill_region(&[0, 0], &[0, 5], 9.0);
+        assert_eq!(f.get(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn fill_region_1d_and_3d() {
+        let mut a = Field::zeros(&[6]);
+        a.fill_region(&[4], &[2], 1.5);
+        assert_eq!(a.data()[3], 0.0);
+        assert_eq!(a.data()[4], 1.5);
+        assert_eq!(a.data()[5], 1.5);
+        let mut b = Field::zeros(&[3, 3, 3]);
+        b.fill_region(&[1, 0, 1], &[1, 3, 2], 2.0);
+        assert_eq!(b.get(&[1, 2, 2]), 2.0);
+        assert_eq!(b.get(&[1, 1, 0]), 0.0);
+        assert_eq!(b.get(&[0, 0, 1]), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "fill_region oob")]
+    fn fill_region_oob_panics() {
+        Field::zeros(&[3, 3]).fill_region(&[2, 0], &[2, 1], 1.0);
+    }
+
+    #[test]
+    fn copy_region_within_matches_extract_paste() {
+        let orig = Field::random(&[5, 6], 8);
+        let mut a = orig.clone();
+        a.copy_region_within(&[1, 2], &[3, 0], &[2, 3]);
+        let mut b = orig.clone();
+        let sub = orig.extract(&[1, 2], &[2, 3]);
+        b.paste(&[3, 0], &sub);
+        assert_eq!(a, b);
+        // 1-D and degenerate column counts
+        let mut c = Field::from_vec(&[5], vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        c.copy_region_within(&[0], &[3], &[2]);
+        assert_eq!(c.data(), &[1.0, 2.0, 3.0, 1.0, 2.0]);
+        let mut d = orig.clone();
+        d.copy_region_within(&[0, 1], &[0, 4], &[5, 1]);
+        for i in 0..5 {
+            assert_eq!(d.get(&[i, 4]), orig.get(&[i, 1]));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "copy_region_within oob")]
+    fn copy_region_within_oob_panics() {
+        Field::zeros(&[4, 3]).copy_region_within(&[0, 0], &[3, 0], &[2, 2]);
+    }
+
+    #[test]
+    fn copy_region_within_inner_overlap_is_memmove() {
+        // same rows, overlapping column ranges: per-row memmove semantics
+        let mut f = Field::from_vec(&[2, 4], vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        f.copy_region_within(&[0, 0], &[0, 1], &[2, 3]);
+        assert_eq!(f.data(), &[1., 1., 2., 3., 5., 5., 6., 7.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap across an outer dimension")]
+    fn copy_region_within_outer_overlap_panics() {
+        // shifting rows 0-2 down by one would read overwritten rows
+        Field::zeros(&[4, 3]).copy_region_within(&[0, 0], &[1, 0], &[3, 3]);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 
 use tetris::coordinator::{CommModel, NativeWorker, Partition, Scheduler, Worker, XlaWorker};
 use tetris::runtime::{Manifest, XlaService};
-use tetris::stencil::{reference, spec, Field};
+use tetris::stencil::{reference, spec, Boundary, Field};
 
 fn service() -> Option<XlaService> {
     for dir in ["artifacts", "../artifacts"] {
@@ -79,11 +79,19 @@ fn hetero_cpu_plus_xla_matches_reference() {
             workers,
             partition,
             comm_model: CommModel::default(),
+            boundary: Boundary::Dirichlet(0.25),
+            adapt_every: 0,
         };
         let core = Field::random(&meta.global_core, 31337);
         let steps = meta.tb * 2;
-        let (got, metrics) = sched.run(&core, steps, 0.25).unwrap();
-        let want = tetris::coordinator::pipeline::reference_evolution(&core, &s, steps, meta.tb, 0.25);
+        let (got, metrics) = sched.run(&core, steps).unwrap();
+        let want = tetris::coordinator::pipeline::reference_evolution(
+            &core,
+            &s,
+            steps,
+            meta.tb,
+            Boundary::Dirichlet(0.25),
+        );
         assert!(
             got.allclose(&want, 1e-11, 1e-13),
             "{bench}: maxdiff={}",
@@ -152,11 +160,51 @@ fn memory_squeeze_preserves_correctness() {
         workers,
         partition: p,
         comm_model: CommModel::default(),
+        boundary: Boundary::Dirichlet(0.0),
+        adapt_every: 0,
     };
     let core = Field::random(&meta.global_core, 999);
-    let (got, _) = sched.run(&core, meta.tb, 0.0).unwrap();
-    let want = tetris::coordinator::pipeline::reference_evolution(&core, &s, meta.tb, meta.tb, 0.0);
+    let (got, _) = sched.run(&core, meta.tb).unwrap();
+    let want = tetris::coordinator::pipeline::reference_evolution(
+        &core,
+        &s,
+        meta.tb,
+        meta.tb,
+        Boundary::Dirichlet(0.0),
+    );
     assert!(got.allclose(&want, 1e-11, 1e-13));
+}
+
+/// Boundary-agnostic worker contract: the XLA artifact worker serves a
+/// Periodic (torus) run without modification — the leader's ghost refill
+/// supplies the wrap, and the result matches the periodic oracle.
+#[test]
+fn hetero_cpu_plus_xla_periodic_matches_torus_oracle() {
+    let Some(svc) = service() else { return };
+    let bench = "heat2d";
+    let s = spec::get(bench).unwrap();
+    let meta = svc.bench(bench).unwrap().clone();
+    let workers: Vec<Box<dyn Worker>> = vec![
+        Box::new(NativeWorker::new(tetris::engine::by_name("tetris-cpu", 2).unwrap(), 1 << 33)),
+        Box::new(XlaWorker::new(svc.clone(), &format!("{bench}_block"), 1 << 33).unwrap()),
+    ];
+    let units = meta.global_core[0] / meta.unit;
+    let sched = Scheduler {
+        spec: s.clone(),
+        tb: meta.tb,
+        workers,
+        partition: Partition { unit: meta.unit, shares: vec![units / 2, units - units / 2] },
+        comm_model: CommModel::default(),
+        boundary: Boundary::Periodic,
+        adapt_every: 0,
+    };
+    let core = Field::random(&meta.global_core, 271828);
+    let steps = meta.tb * 2;
+    let (got, metrics) = sched.run(&core, steps).unwrap();
+    let want = reference::evolve_periodic(&core, &s, steps);
+    assert!(got.allclose(&want, 1e-11, 1e-13), "maxdiff={}", got.max_abs_diff(&want));
+    // ring topology: 2 workers -> 2 links per block
+    assert_eq!(metrics.comm.messages, 2 * (steps / meta.tb));
 }
 
 /// A worker failure surfaces as an error, not a hang or a corrupt field.
@@ -190,9 +238,11 @@ fn worker_failure_propagates() {
         ],
         partition: Partition { unit: 8, shares: vec![1, 1] },
         comm_model: CommModel::default(),
+        boundary: Boundary::Dirichlet(0.0),
+        adapt_every: 0,
     };
     let core = Field::random(&[16, 16], 5);
-    let err = sched.run(&core, 1, 0.0).unwrap_err();
+    let err = sched.run(&core, 1).unwrap_err();
     assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
     let _ = svc; // keep service alive through the test
 }

@@ -6,7 +6,7 @@
 
 use tetris::coordinator::partition::{capacity_units, Partition};
 use tetris::coordinator::{tuner, CommLedger, CommModel, NativeWorker, Scheduler, Worker};
-use tetris::stencil::{reference, spec, Field};
+use tetris::stencil::{reference, spec, Boundary, Field};
 use tetris::util::prng::SplitMix64;
 
 const CASES: usize = 60;
@@ -97,25 +97,42 @@ fn prop_scheduler_equals_reference() {
                 )) as Box<dyn Worker>
             })
             .collect();
+        // Rotate through all three boundary conditions across cases.
+        let boundary = match case % 3 {
+            0 => Boundary::Dirichlet(rng.next_f64()),
+            1 => Boundary::Neumann,
+            _ => Boundary::Periodic,
+        };
         let sched = Scheduler {
             spec: s.clone(),
             tb,
             workers,
             partition: Partition { unit, shares },
             comm_model: CommModel::default(),
+            boundary,
+            adapt_every: 0,
         };
         let steps = tb * pick(&mut rng, 1, 3);
-        let boundary = rng.next_f64();
-        let (got, metrics) = sched.run(&core, steps, boundary).unwrap();
+        let (got, metrics) = sched.run(&core, steps).unwrap();
         let want =
             tetris::coordinator::pipeline::reference_evolution(&core, &s, steps, tb, boundary);
         assert!(
             got.allclose(&want, 1e-11, 1e-13),
-            "case {case} ({}, tb={tb}): maxdiff={}",
+            "case {case} ({}, tb={tb}, {boundary}): maxdiff={}",
             s.name,
             got.max_abs_diff(&want)
         );
         assert_eq!(metrics.blocks, steps / tb);
+        if boundary == Boundary::Periodic {
+            // the periodic scheduler path must also match the torus oracle
+            let torus = reference::evolve_periodic(&core, &s, steps);
+            assert!(
+                got.allclose(&torus, 1e-11, 1e-13),
+                "case {case} ({}): periodic oracle maxdiff={}",
+                s.name,
+                got.max_abs_diff(&torus)
+            );
+        }
     }
 }
 

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# Smoke bench: run the Fig-12 breakdown at a tiny scale and emit a
-# single-line JSON summary (BENCH_smoke.json) so CI can archive the
-# bench trajectory on every commit.
+# Smoke bench: run the Fig-12 breakdown plus the boundary/adaptive
+# scheduler study at a tiny scale and emit single-line JSON summaries
+# (BENCH_smoke.json, BENCH_boundary.json) so CI can archive the bench
+# trajectory — including the periodic and adaptive paths — every commit.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -9,6 +10,7 @@ cd "$(dirname "$0")/.."
 SCALE="${TETRIS_SMOKE_SCALE:-0.1}"
 THREADS="${TETRIS_SMOKE_THREADS:-2}"
 OUT="${TETRIS_SMOKE_OUT:-BENCH_smoke.json}"
+BOUNDARY_OUT="${TETRIS_SMOKE_BOUNDARY_OUT:-BENCH_boundary.json}"
 BIN=rust/target/release/tetris
 
 # Always (re)build: with a warm target dir this is incremental and fast,
@@ -17,5 +19,11 @@ cargo build --release --manifest-path rust/Cargo.toml
 
 "$BIN" bench breakdown --scale "$SCALE" --threads "$THREADS" --json "$OUT"
 
-echo "--- $OUT ---"
-cat "$OUT"
+# One periodic + one adaptive rung (plus dirichlet/neumann baselines and
+# the O(surface) ghost-fill micro-bench).
+"$BIN" bench boundary --scale "$SCALE" --threads "$THREADS" --json "$BOUNDARY_OUT"
+
+for f in "$OUT" "$BOUNDARY_OUT"; do
+  echo "--- $f ---"
+  cat "$f"
+done
