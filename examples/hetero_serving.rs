@@ -1,118 +1,89 @@
-//! Heterogeneous scheduling demo (paper §5, Fig. 11 + Fig. 14 ratios):
-//! drive a stream of stencil evolution jobs through the concurrent
-//! scheduler, showing profile-initialized partitioning, the in-run §5.2
-//! auto-tuner (`adapt_every`), memory squeezing under a constrained
-//! "device", boundary-condition diversity (each job picks its physics:
-//! ambient Dirichlet plate, insulated Neumann plate, Periodic torus),
-//! and the centralized-communication accounting.
+//! Heterogeneous *serving* demo (paper §5 behind a service): boot the
+//! real `tetris serve` server in-process, then act as a client — submit
+//! a pipelined stream of boundary-diverse jobs over TCP, read the
+//! in-order replies, inspect `STATS` (queue depths, per-session cached
+//! partition shares, latency percentiles), and shut the server down
+//! cleanly (admission stops, the dispatchers drain, the listener
+//! closes).
 //!
-//! Run: `make artifacts && cargo run --release --example hetero_serving`
+//! The server's default worker factory uses the AOT artifact worker
+//! when compatible artifacts exist and **falls back to two native
+//! workers with a warning otherwise**, so this example runs fine in an
+//! artifact-less container:
+//!
+//! Run: `cargo run --release --example hetero_serving`
 
-use tetris::coordinator::{
-    partition::capacity_units, tuner, CommModel, NativeWorker, Partition, Scheduler, Worker,
-    XlaWorker,
-};
-use tetris::runtime::XlaService;
-use tetris::stencil::{spec, Boundary, Field};
+use tetris::serve::{default_worker_factory, Client, JobSpec, Priority, ServeConfig, Server};
+use tetris::stencil::Boundary;
 
 fn main() -> tetris::util::error::Result<()> {
-    let svc = XlaService::spawn_default()
-        .map_err(|e| tetris::err!("this example needs artifacts (`make artifacts`): {e}"))?;
-    let bench = "heat2d";
-    let meta = svc.bench(bench)?.clone();
-    let s = spec::get(bench).unwrap();
-    let halo = s.radius * meta.tb;
-    let rest_cells: usize = meta.global_core[1..].iter().map(|n| n + 2 * halo).product();
+    // A small default scale keeps the demo snappy; jobs could also pick
+    // their own shapes per request.
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatchers: 2,
+        scale: 0.1,
+        ..Default::default()
+    };
+    let handle = Server::start(cfg, default_worker_factory(2))?;
+    println!("tetris serve: listening on {}", handle.addr);
 
-    // Two heterogeneous workers; the "device" (XLA) capacity is squeezed
-    // to force bidirectional spill (paper §5.1).
-    let device_cap = 5 * 3 * meta.unit * rest_cells * 8; // ~5 units
-    let workers = make_workers(&svc, bench, device_cap)?;
-
-    // §5.2 profile initialization.
-    let unit_core: Vec<usize> = std::iter::once(meta.unit)
-        .chain(meta.global_core[1..].iter().copied())
-        .collect();
-    let prof = tuner::profile_workers(&workers, &s, &unit_core, meta.tb, 3)?;
-    println!("startup profile (s/unit-block): native={:.4} xla={:.4}", prof[0], prof[1]);
-
-    let units = meta.global_core[0] / meta.unit;
-    let caps: Vec<usize> = workers
-        .iter()
-        .map(|w| capacity_units(w.mem_capacity(), meta.unit, rest_cells))
-        .collect();
-    println!("capacity (units): native={} xla={} (device squeezed)", caps[0], caps[1]);
-    let weights: Vec<f64> = prof.iter().map(|t| 1.0 / t).collect();
-    let mut partition = Partition::balanced(meta.unit, units, &weights, &caps);
-    println!(
-        "initial partition: native={} xla={} units (xla ratio {:.1}%)",
-        partition.shares[0],
-        partition.shares[1],
-        partition.ratio(1) * 100.0
-    );
-
-    // Serve a stream of jobs with per-job physics; the scheduler retunes
-    // itself mid-run (adapt_every) and the converged partition carries
-    // over to the next job — the serving-loop version of §5.2.
-    let comm_model = CommModel::default();
-    let jobs: [(&str, Boundary); 4] = [
-        ("ambient plate", Boundary::Dirichlet(25.0)),
-        ("cold-wall plate", Boundary::Dirichlet(0.0)),
-        ("insulated plate", Boundary::Neumann),
-        ("torus", Boundary::Periodic),
+    let mut client = Client::connect(handle.addr)?;
+    let jobs: [(&str, Boundary, Priority); 4] = [
+        ("ambient-plate", Boundary::Dirichlet(25.0), Priority::Interactive),
+        ("cold-wall-plate", Boundary::Dirichlet(0.0), Priority::Normal),
+        ("insulated-plate", Boundary::Neumann, Priority::Normal),
+        ("torus", Boundary::Periodic, Priority::Batch),
     ];
-    for (job, (label, boundary)) in jobs.into_iter().enumerate() {
-        let sched = Scheduler {
-            spec: s.clone(),
-            tb: meta.tb,
-            workers: make_workers(&svc, bench, device_cap)?,
-            partition: partition.clone(),
-            comm_model,
+
+    // Pipeline the whole stream, then read the in-order replies: equal
+    // back-to-back specs coalesce into one multi-field dispatch.
+    for (i, (label, boundary, priority)) in jobs.into_iter().enumerate() {
+        client.send_spec(&JobSpec {
+            id: label.to_string(),
+            bench: "heat2d".into(),
             boundary,
-            adapt_every: 2,
-        };
-        let core = Field::random(&meta.global_core, 100 + job as u64);
-        let steps = meta.tb * 4;
-        let (out, metrics) = sched.run(&core, steps)?;
-        println!(
-            "\njob {job} ({label}, boundary={boundary}): {} steps, {:.4} GStencils/s, \
-             bubble {:.1}%, retunes {}, out mean {:.6}",
-            steps,
-            metrics.gstencils_per_sec(),
-            metrics.bubble_fraction() * 100.0,
-            metrics.retunes,
-            out.mean()
-        );
-        let (central, split) = metrics.comm.modeled_cost(&comm_model);
-        println!(
-            "  comm: {} batched msgs ({} bytes); modeled {:.2}ms centralized vs {:.2}ms per-step",
-            metrics.comm.messages,
-            metrics.comm.bytes,
-            central * 1e3,
-            split * 1e3
-        );
-        // Carry the converged shares into the next job's partition.
-        let next_shares = metrics.final_shares.clone();
-        if next_shares != partition.shares {
+            steps: 8,
+            priority,
+            seed: 100 + i as u64,
+            ..Default::default()
+        })?;
+    }
+    for _ in 0..jobs.len() {
+        let r = client.recv_result()?;
+        if r.ok {
             println!(
-                "  carrying retuned partition: native {} -> {}, xla {} -> {}",
-                partition.shares[0], next_shares[0], partition.shares[1], next_shares[1]
+                "job {:16} ok: {} x{} steps, mean {:.6}, batch {}, queue {:.2}ms, \
+                 exec {:.2}ms, session shares {:?}",
+                r.id, r.boundary, r.steps, r.mean, r.batch_size, r.queue_ms, r.exec_ms, r.shares
             );
-            partition = Partition { unit: meta.unit, shares: next_shares };
         } else {
-            println!("  partition stable (converged)");
+            println!("job {:16} FAILED: {}", r.id, r.error.as_deref().unwrap_or("unknown"));
         }
     }
-    Ok(())
-}
 
-fn make_workers(
-    svc: &XlaService,
-    bench: &str,
-    device_cap: usize,
-) -> tetris::util::error::Result<Vec<Box<dyn Worker>>> {
-    Ok(vec![
-        Box::new(NativeWorker::new(tetris::engine::by_name("tetris-cpu", 2).unwrap(), 1 << 33)),
-        Box::new(XlaWorker::new(svc.clone(), &format!("{bench}_block"), device_cap)?),
-    ])
+    let stats = client.stats()?;
+    println!(
+        "stats: {} submitted, {} completed, {} batches, p99 {} ms",
+        stats.at(&["stats", "submitted"]),
+        stats.at(&["stats", "completed"]),
+        stats.at(&["stats", "batches"]),
+        stats.at(&["stats", "latency", "p99_ms"])
+    );
+    if let Some(sessions) = stats.at(&["sessions"]).as_obj() {
+        for (key, s) in sessions {
+            println!(
+                "session {key}: shares {}, jobs {}, cache hits {}, invalidations {}",
+                s.at(&["shares"]),
+                s.at(&["jobs"]),
+                s.at(&["cache_hits"]),
+                s.at(&["invalidations"])
+            );
+        }
+    }
+
+    println!("shutdown ack: {}", client.shutdown()?);
+    handle.join(); // admission stopped, queue drained, listener closed
+    println!("server drained and stopped");
+    Ok(())
 }

@@ -390,6 +390,126 @@ pub fn run_boundary(scale: f64, threads: usize) -> Vec<(String, Vec<Row>)> {
     out
 }
 
+/// Serving-layer throughput study: jobs/sec at varying batch widths.
+///
+/// The first section runs the same 8-job mix through one partition-
+/// caching [`crate::serve::Session`] at batch widths 1/4/8 — identical
+/// physics and inputs, so the gap is purely the per-block pool-spawn,
+/// snapshot and retune amortization of the multi-field dispatch.  The
+/// second section drives a real loopback `tetris serve` over TCP with a
+/// mixed-boundary job stream and reports end-to-end jobs/sec + p99.
+/// `gstencils_per_sec` carries **jobs/sec** in this bench's rows (the
+/// JSON field name is shared across benches; `extra` spells the unit).
+pub fn run_serve(scale: f64, threads: usize) -> Vec<(String, Vec<Row>)> {
+    use crate::serve::Session;
+    let mut out = Vec::new();
+
+    let bench = "heat2d";
+    let (shape, _, tb) = scaled_problem(bench, scale);
+    let steps = tb * 2;
+    let jobs = 8usize;
+    let inputs: Vec<Field> =
+        (0..jobs).map(|i| Field::random(&shape, 0x5E47E + i as u64)).collect();
+    let mk_workers = || vec![native("tetris-cpu", threads), native("simd", 1)];
+    let mut rows = Vec::new();
+    let mut base_jps = 0.0;
+    for &batch in &[1usize, 4, 8] {
+        match Session::new(bench, shape.clone(), tb, mk_workers(), 2, 0.25) {
+            Ok(mut sess) => {
+                let t0 = std::time::Instant::now();
+                let mut ok = true;
+                for chunk in inputs.chunks(batch) {
+                    ok &= sess.run_batch(Boundary::Periodic, chunk, steps).is_ok();
+                }
+                let wall = t0.elapsed();
+                let jps = jobs as f64 / wall.as_secs_f64().max(1e-12);
+                if batch == 1 {
+                    base_jps = jps;
+                }
+                rows.push(Row {
+                    label: format!("batch={batch}"),
+                    gstencils: jps,
+                    speedup: jps / base_jps.max(1e-12),
+                    extra: format!(
+                        "jobs/sec; {jobs} jobs ({bench} {shape:?} x{steps}) in {}{}",
+                        timer::fmt_duration(wall),
+                        if ok { "" } else { " [ERRORS]" }
+                    ),
+                });
+            }
+            Err(e) => rows.push(Row {
+                label: format!("batch={batch}"),
+                gstencils: 0.0,
+                speedup: 0.0,
+                extra: format!("ERROR: {e}"),
+            }),
+        }
+    }
+    print_table("serve: session batching (jobs/sec, same 8-job mix)", &rows);
+    out.push(("session-batching".to_string(), rows));
+
+    // End-to-end loopback drive: mixed-boundary stream through the real
+    // TCP server (admission, batching and sessions all in the path).
+    let mut rows = Vec::new();
+    match serve_loopback_drive(scale, threads) {
+        Ok(row) => rows.push(row),
+        Err(e) => rows.push(Row {
+            label: "tcp-loopback".into(),
+            gstencils: 0.0,
+            speedup: 0.0,
+            extra: format!("ERROR: {e}"),
+        }),
+    }
+    print_table("serve: TCP loopback (jobs/sec end-to-end)", &rows);
+    out.push(("tcp-loopback".to_string(), rows));
+    out
+}
+
+fn serve_loopback_drive(scale: f64, threads: usize) -> Result<Row> {
+    use crate::serve::{Client, JobSpec, Priority, ServeConfig, Server};
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatchers: 2,
+        threads,
+        scale,
+        ..Default::default()
+    };
+    let handle = Server::start(cfg, crate::serve::default_worker_factory(threads))?;
+    let mut client = Client::connect(handle.addr)?;
+    let boundaries = ["dirichlet:25", "neumann", "periodic"];
+    let jobs = 12usize;
+    let t0 = std::time::Instant::now();
+    for i in 0..jobs {
+        client.send_spec(&JobSpec {
+            id: format!("bench-{i}"),
+            bench: "heat2d".into(),
+            boundary: boundaries[i % boundaries.len()].parse().unwrap(),
+            steps: 4,
+            seed: 7_000 + i as u64,
+            priority: Priority::Normal,
+            ..Default::default()
+        })?;
+    }
+    let mut ok = 0usize;
+    for _ in 0..jobs {
+        if client.recv_result()?.ok {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let stats = client.stats()?;
+    let p99 = stats.at(&["stats", "latency", "p99_ms"]).as_f64().unwrap_or(0.0);
+    client.shutdown()?;
+    handle.join();
+    crate::ensure!(ok == jobs, "loopback drive lost {} results", jobs - ok);
+    Ok(Row {
+        label: "tcp-loopback".into(),
+        gstencils: jobs as f64 / wall.as_secs_f64().max(1e-12),
+        speedup: 1.0,
+        extra: format!("jobs/sec; {jobs} mixed-boundary jobs, p99 {p99:.3} ms"),
+    })
+}
+
 /// §5.3 communication study: centralized vs per-step launch cost.
 pub fn run_comm() -> Vec<Row> {
     let m = CommModel::default();
@@ -469,6 +589,9 @@ pub fn summary_json(which: &str, scale: f64, threads: usize, sections: &[(String
                 m.insert("label".to_string(), Json::Str(r.label.clone()));
                 m.insert("gstencils_per_sec".to_string(), Json::Num(r.gstencils));
                 m.insert("speedup".to_string(), Json::Num(r.speedup));
+                if !r.extra.is_empty() {
+                    m.insert("extra".to_string(), Json::Str(r.extra.clone()));
+                }
                 Json::Obj(m)
             })
             .collect();
@@ -536,6 +659,44 @@ mod tests {
         // and it serializes into the CI artifact format
         let j = summary_json("boundary", 0.05, 1, &sections);
         assert!(j.to_string().contains("periodic+adapt2"));
+    }
+
+    /// Serving acceptance: on the same 8-job mix, the batched (>= 4)
+    /// session throughput beats unbatched — the multi-field dispatch
+    /// amortizes per-block pool spawns and bookkeeping.  Timing-based,
+    /// so take the best of a few attempts before judging.
+    #[test]
+    fn serve_bench_batched_beats_unbatched() {
+        let mut best_ratio = 0.0f64;
+        for _ in 0..3 {
+            let sections = run_serve(0.03, 1);
+            let rows = &sections[0].1;
+            assert_eq!(rows[0].label, "batch=1");
+            assert_eq!(rows[1].label, "batch=4");
+            assert!(rows.iter().all(|r| r.gstencils > 0.0), "{rows:?}");
+            best_ratio = best_ratio.max(rows[1].gstencils / rows[0].gstencils);
+            if best_ratio > 1.0 {
+                break;
+            }
+        }
+        assert!(
+            best_ratio > 1.0,
+            "batch=4 never beat batch=1 (best ratio {best_ratio:.3})"
+        );
+    }
+
+    #[test]
+    fn serve_summary_json_records_batching() {
+        let sections = run_serve(0.03, 1);
+        let j = summary_json("serve", 0.03, 1, &sections);
+        let text = j.to_string();
+        assert!(!text.contains('\n'));
+        let back = Json::parse(&text).unwrap();
+        let batching = back.at(&["sections", "session-batching"]).as_arr().unwrap();
+        assert_eq!(batching[0].at(&["label"]).as_str(), Some("batch=1"));
+        assert!(batching[0].at(&["extra"]).as_str().unwrap().contains("jobs/sec"));
+        let loopback = back.at(&["sections", "tcp-loopback"]).as_arr().unwrap();
+        assert!(loopback[0].at(&["extra"]).as_str().unwrap().contains("p99"));
     }
 
     #[test]

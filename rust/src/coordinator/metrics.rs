@@ -9,6 +9,10 @@ use super::comm::{CommLedger, CommModel};
 pub struct RunMetrics {
     pub total_steps: usize,
     pub blocks: usize,
+    /// Fields evolved together in one run (1 for a plain run; the batch
+    /// width for `Scheduler::run_batch`).
+    pub fields: usize,
+    /// Core cells advanced per step, summed over the batch.
     pub core_cells: usize,
     pub elapsed: Duration,
     pub worker_names: Vec<String>,
@@ -50,9 +54,10 @@ impl RunMetrics {
     pub fn report(&self, model: &CommModel) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "steps={} blocks={} cells={} elapsed={:?} throughput={:.3} GStencils/s\n",
+            "steps={} blocks={} fields={} cells={} elapsed={:?} throughput={:.3} GStencils/s\n",
             self.total_steps,
             self.blocks,
+            self.fields.max(1),
             self.core_cells,
             self.elapsed,
             self.gstencils_per_sec()

@@ -45,6 +45,25 @@ impl Scheduler {
     /// Evolve `core` by `total_steps` (a multiple of Tb) under
     /// `self.boundary`.  Returns the final core and run metrics.
     pub fn run(&self, core: &Field, total_steps: usize) -> Result<(Field, RunMetrics)> {
+        let (mut outs, metrics) = self.run_batch(std::slice::from_ref(core), total_steps)?;
+        Ok((outs.pop().unwrap(), metrics))
+    }
+
+    /// Evolve a batch of same-shape fields together under one partition.
+    /// Per Tb-block every worker advances its slab of *every* field in a
+    /// single pool dispatch, so the per-block pool spawn, the halo
+    /// snapshots, and the (migration-gated) retune decision amortize
+    /// across the batch — the multi-field engine behind `serve`'s job
+    /// batcher.  Slab decomposition is numerically invisible, so each
+    /// returned field is bit-identical to running it alone.  Returns the
+    /// final fields in input order plus combined metrics (`core_cells`
+    /// and comm totals sum over the batch; `fields` records the width).
+    pub fn run_batch(&self, cores: &[Field], total_steps: usize) -> Result<(Vec<Field>, RunMetrics)> {
+        crate::ensure!(!cores.is_empty(), "empty batch");
+        crate::ensure!(
+            cores.iter().all(|c| c.shape() == cores[0].shape()),
+            "batch fields must share one shape"
+        );
         crate::ensure!(self.tb >= 1, "tb must be >= 1");
         crate::ensure!(
             total_steps % self.tb == 0,
@@ -55,24 +74,27 @@ impl Scheduler {
             !self.workers.is_empty() && self.workers.len() == self.partition.shares.len(),
             "workers/partition mismatch"
         );
+        let core0 = &cores[0];
+        let nf = cores.len();
         let mut partition = self.partition.clone();
         let mut spans = partition.spans();
         crate::ensure!(
-            spans.last().unwrap().1 == core.shape()[0],
+            spans.last().unwrap().1 == core0.shape()[0],
             "partition covers {} rows, domain has {}",
             spans.last().unwrap().1,
-            core.shape()[0]
+            core0.shape()[0]
         );
         let halo = self.spec.radius * self.tb;
-        let nd = core.ndim();
-        let mut global = core.pad(halo, self.boundary.pad_value());
-        let ext_rest: Vec<usize> = global.shape()[1..].to_vec();
+        let nd = core0.ndim();
+        let mut globals: Vec<Field> =
+            cores.iter().map(|c| c.pad(halo, self.boundary.pad_value())).collect();
+        let ext_rest: Vec<usize> = globals[0].shape()[1..].to_vec();
         let ext_rest_cells: usize = ext_rest.iter().product::<usize>().max(1);
         // What one internal-boundary halo message actually ships on a
         // real two-device deployment: core-row cells.  The padding of the
         // non-split dims is each device's own ghost ring, filled locally
         // from the boundary condition, never sent over the link.
-        let core_rest_cells: usize = core.shape()[1..].iter().product::<usize>().max(1);
+        let core_rest_cells: usize = core0.shape()[1..].iter().product::<usize>().max(1);
 
         let blocks = total_steps / self.tb;
         let nw = self.workers.len();
@@ -85,24 +107,31 @@ impl Scheduler {
         let t0 = Instant::now();
 
         for b in 0..blocks {
-            // (0) Ghost refresh from the current core state.
-            self.boundary.fill(&mut global, halo);
+            // (0) Ghost refresh from each field's current core state.
+            for g in globals.iter_mut() {
+                self.boundary.fill(g, halo);
+            }
 
-            // (1) Halo snapshot: one extraction per worker per block —
-            // the centralized communication launch.  Internal-boundary
-            // bytes are what a real deployment would ship; under
+            // (1) Halo snapshot: one extraction per worker per field per
+            // block — the centralized communication launch.  Internal-
+            // boundary bytes are what a real deployment would ship; under
             // Periodic the workers form a ring (worker 0 <-> worker
             // W-1 exchange the wrap halo too), so W workers have W
             // inter-device links instead of W-1.  A single worker's
             // wrap-around is a local copy, not a message.
-            let inputs: Vec<Field> = spans
+            let inputs: Vec<Vec<Field>> = globals
                 .iter()
-                .map(|&(s, e)| {
-                    let mut off = vec![s];
-                    off.extend(vec![0usize; nd - 1]);
-                    let mut shape = vec![(e - s) + 2 * halo];
-                    shape.extend(&ext_rest);
-                    global.extract(&off, &shape)
+                .map(|g| {
+                    spans
+                        .iter()
+                        .map(|&(s, e)| {
+                            let mut off = vec![s];
+                            off.extend(vec![0usize; nd - 1]);
+                            let mut shape = vec![(e - s) + 2 * halo];
+                            shape.extend(&ext_rest);
+                            g.extract(&off, &shape)
+                        })
+                        .collect()
                 })
                 .collect();
             // Only boundaries between *non-empty* spans are real links: a
@@ -113,29 +142,42 @@ impl Scheduler {
                 Boundary::Periodic if active_spans > 1 => active_spans,
                 _ => active_spans.saturating_sub(1),
             };
-            for _ in 0..internal_links {
+            for _ in 0..internal_links * nf {
                 // two directions x halo rows x core-row cells
                 comm.record_exchange(2 * halo * core_rest_cells * 8, self.tb);
             }
 
-            // (2) Concurrent dispatch on the shared work-stealing pool.
-            let results: Vec<(Result<Field>, Duration)> =
-                dispatch(&self.workers, &self.spec, &inputs, self.tb, halo);
+            // (2) One concurrent dispatch over all (field, worker) slabs.
+            let results = dispatch(&self.workers, &self.spec, &inputs, self.tb, halo);
 
-            // (3) Writeback + accounting.
-            let slowest = results.iter().map(|(_, d)| *d).max().unwrap_or_default();
-            for (i, ((res, dt), &(s, _e))) in results.into_iter().zip(&spans).enumerate() {
-                let out = res.with_context(|| format!("worker {i} failed"))?;
-                let mut off = vec![s + halo];
-                off.extend(vec![halo; nd - 1]);
-                global.paste(&off, &out);
-                busy[i] += dt;
-                idle[i] += slowest - dt;
-                window_busy[i] += dt.as_secs_f64();
+            // (3) Writeback + accounting.  A worker's block busy time is
+            // the sum over its fields; bubbles are judged against the
+            // slowest worker, exactly as in the single-field run.
+            let mut block_busy = vec![Duration::ZERO; nw];
+            for per_field in &results {
+                for (w, (_, dt)) in per_field.iter().enumerate() {
+                    block_busy[w] += *dt;
+                }
+            }
+            let slowest = block_busy.iter().copied().max().unwrap_or_default();
+            for (f, per_field) in results.into_iter().enumerate() {
+                for (i, ((res, _), &(s, _e))) in per_field.into_iter().zip(&spans).enumerate() {
+                    let out = res.with_context(|| format!("worker {i} failed (field {f})"))?;
+                    let mut off = vec![s + halo];
+                    off.extend(vec![halo; nd - 1]);
+                    globals[f].paste(&off, &out);
+                }
+            }
+            for i in 0..nw {
+                busy[i] += block_busy[i];
+                idle[i] += slowest - block_busy[i];
+                window_busy[i] += block_busy[i].as_secs_f64();
             }
 
             // (4) §5.2 architecture-aware rebalance: slab redistribution
-            // through Partition::spans, fed by the measured busy times.
+            // through Partition::spans, fed by the measured busy times
+            // and gated by the slab-migration cost model (hysteresis:
+            // a marginal imbalance is not worth shipping slabs for).
             window_blocks += 1;
             if self.adapt_every > 0 && window_blocks >= self.adapt_every && b + 1 < blocks {
                 let per_block: Vec<f64> =
@@ -160,8 +202,15 @@ impl Scheduler {
                         .zip(&per_block)
                         .map(|(&s, &t)| if s == 0 || t <= 0.0 { tmax } else { t })
                         .collect();
-                    let next = tuner::retune(&partition, &measured, &self.workers, ext_rest_cells);
-                    if next != partition {
+                    if let Some(next) = tuner::retune_gated(
+                        &partition,
+                        &measured,
+                        &self.workers,
+                        ext_rest_cells,
+                        &self.comm_model,
+                        core_rest_cells,
+                        blocks - (b + 1),
+                    ) {
                         partition = next;
                         spans = partition.spans();
                         retunes += 1;
@@ -175,7 +224,8 @@ impl Scheduler {
         let metrics = RunMetrics {
             total_steps,
             blocks,
-            core_cells: core.len(),
+            fields: nf,
+            core_cells: core0.len() * nf,
             elapsed: t0.elapsed(),
             worker_names: self.workers.iter().map(|w| w.name()).collect(),
             worker_busy: busy,
@@ -185,32 +235,44 @@ impl Scheduler {
             final_shares: partition.shares.clone(),
             retunes,
         };
-        Ok((global.unpad(halo), metrics))
+        Ok((globals.into_iter().map(|g| g.unpad(halo)).collect(), metrics))
     }
 }
 
-/// Run every worker on its input concurrently on a pool scope; returns
-/// per-worker (result, busy time) in worker order.  One task per worker
-/// — pools are ephemeral per call, so engine-internal tile pools nested
-/// inside a worker stay independent of this dispatch scope.  A worker
-/// whose slab has zero core rows (share squeezed/retuned to 0) is skipped
-/// and yields an empty result.
+/// Run every (field, worker) slab concurrently on one pool scope; returns
+/// per-field, per-worker (result, busy time) in order.  `inputs` is
+/// indexed `[field][worker]`.  Pools are ephemeral per call, so
+/// engine-internal tile pools nested inside a worker stay independent of
+/// this dispatch scope.  A worker whose slab has zero core rows (share
+/// squeezed/retuned to 0) is skipped and yields an empty result.  Thread
+/// count grows with the batch but never oversubscribes the host.
 fn dispatch(
     workers: &[Box<dyn Worker>],
     spec: &StencilSpec,
-    inputs: &[Field],
+    inputs: &[Vec<Field>],
     tb: usize,
     halo: usize,
-) -> Vec<(Result<Field>, Duration)> {
-    super::pool::steal_map(workers.len(), workers.len(), |i| {
-        if inputs[i].shape()[0] == 2 * halo {
-            let shape: Vec<usize> = inputs[i].shape().iter().map(|&n| n - 2 * halo).collect();
+) -> Vec<Vec<(Result<Field>, Duration)>> {
+    let nw = workers.len();
+    let nf = inputs.len();
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = (nw * nf).min(nw.max(host));
+    let mut flat = super::pool::steal_map(threads, nw * nf, |i| {
+        let (f, w) = (i / nw, i % nw);
+        let input = &inputs[f][w];
+        if input.shape()[0] == 2 * halo {
+            let shape: Vec<usize> = input.shape().iter().map(|&n| n - 2 * halo).collect();
             return (Ok(Field::zeros(&shape)), Duration::ZERO);
         }
         let t0 = Instant::now();
-        let res = workers[i].run_slab(spec, &inputs[i], tb);
+        let res = workers[w].run_slab(spec, input, tb);
         (res, t0.elapsed())
-    })
+    });
+    let mut out = Vec::with_capacity(nf);
+    for _ in 0..nf {
+        out.push(flat.drain(..nw).collect());
+    }
+    out
 }
 
 /// Single-worker reference evolution with the same leader-side boundary
@@ -521,6 +583,55 @@ mod tests {
         };
         let (si, ai) = (max_idle_share(&static_m), max_idle_share(&adaptive_m));
         assert!(ai < si, "adaptive idle share {ai:.3} not below static {si:.3}");
+    }
+
+    /// The batched run computes, for every field, exactly the bits the
+    /// single-field run computes — slab decomposition and batching are
+    /// numerically invisible — while amortizing dispatch per block.
+    #[test]
+    fn batch_run_matches_individual_runs_bitwise() {
+        let s = spec::get("heat2d").unwrap();
+        let sched = sched(
+            &s,
+            2,
+            vec![native("simd"), native("autovec")],
+            4,
+            vec![1, 2],
+            Boundary::Periodic,
+        );
+        let fields: Vec<Field> = (0..3).map(|i| Field::random(&[12, 8], 50 + i)).collect();
+        let (outs, m) = sched.run_batch(&fields, 4).unwrap();
+        assert_eq!(m.fields, 3);
+        assert_eq!(m.core_cells, 3 * 12 * 8);
+        for (f, out) in fields.iter().zip(&outs) {
+            let (want, _) = sched.run(f, 4).unwrap();
+            assert_eq!(out.data(), want.data(), "batched result must be bit-identical");
+        }
+        // comm scales with the batch: 2 active workers on the torus = 2
+        // links, x3 fields x2 blocks
+        assert_eq!(m.comm.messages, 2 * 3 * 2);
+    }
+
+    #[test]
+    fn batch_rejects_empty_and_mixed_shapes() {
+        let s = spec::get("heat1d").unwrap();
+        let sc = sched(&s, 1, vec![native("naive")], 8, vec![1], Boundary::Dirichlet(0.0));
+        assert!(sc.run_batch(&[], 1).is_err());
+        let a = Field::random(&[8], 1);
+        let b = Field::random(&[16], 2);
+        assert!(sc.run_batch(&[a, b], 1).is_err());
+    }
+
+    /// A single-field run through the batch path keeps the historical
+    /// metrics contract (fields=1, per-field cells).
+    #[test]
+    fn single_field_batch_metrics_unchanged() {
+        let s = spec::get("heat1d").unwrap();
+        let core = Field::random(&[16], 3);
+        let sc = sched(&s, 1, vec![native("simd")], 16, vec![1], Boundary::Dirichlet(0.0));
+        let (_, m) = sc.run(&core, 2).unwrap();
+        assert_eq!(m.fields, 1);
+        assert_eq!(m.core_cells, 16);
     }
 
     /// A static partition may ignore declared capacities; turning on

@@ -12,6 +12,7 @@ use crate::util::error::{Context, Result};
 
 use crate::stencil::{Field, StencilSpec};
 
+use super::comm::CommModel;
 use super::partition::{capacity_units, Partition};
 use super::worker::Worker;
 
@@ -91,6 +92,84 @@ pub fn retune(
         .map(|w| capacity_units(w.mem_capacity(), partition.unit, rest_cells))
         .collect();
     Partition::balanced(partition.unit, partition.total_units(), &weights, &caps)
+}
+
+/// Deployment cost of migrating from partition `from` to `to`: every
+/// moved unit ships its slab rows once, and every worker whose share
+/// changed participates in (at least) one transfer — the k·(α+nβ) term
+/// the ROADMAP's slab-migration item asks for.  `rest_cells` is the
+/// core-row cell count of the non-split dims (what a halo/slab message
+/// actually carries; locally-filled ghost padding is never shipped).
+pub fn migration_cost(model: &CommModel, from: &Partition, to: &Partition, rest_cells: usize) -> f64 {
+    let moved_units: usize =
+        from.shares.iter().zip(&to.shares).map(|(&a, &b)| a.abs_diff(b)).sum::<usize>() / 2;
+    let links = from.shares.iter().zip(&to.shares).filter(|(a, b)| a != b).count();
+    model.cost(links, moved_units * from.unit * rest_cells * 8)
+}
+
+/// Hysteresis-gated rebalance: compute the [`retune`] candidate, then
+/// only adopt it when the projected idle-time saving over the remaining
+/// blocks exceeds the migration cost of actually moving the slabs.
+/// A marginal imbalance (noise-scale busy-time skew) therefore no longer
+/// thrashes shares back and forth; a genuine skew still repartitions.
+///
+/// `cap_rest_cells` feeds the capacity squeezer (extended-dim cells, as
+/// a worker must hold the ghost ring too); `move_rest_cells` feeds the
+/// migration-cost estimate (core cells, what a transfer ships).
+pub fn retune_gated(
+    partition: &Partition,
+    measured_secs: &[f64],
+    workers: &[Box<dyn Worker>],
+    cap_rest_cells: usize,
+    model: &CommModel,
+    move_rest_cells: usize,
+    remaining_blocks: usize,
+) -> Option<Partition> {
+    let cand = retune(partition, measured_secs, workers, cap_rest_cells);
+    if cand == *partition || remaining_blocks == 0 {
+        return None;
+    }
+    // Projected per-block time under the candidate shares, from measured
+    // per-unit times.  A zero-share worker was never measured; assume it
+    // is comparable to the best active worker rather than charging it a
+    // whole block per unit — a pessimistic prior would let the gate
+    // permanently strand a squeezed-out worker, while an optimistic one
+    // costs at most one cheap exploration migration before the next
+    // window measures the truth.
+    let best_active = partition
+        .shares
+        .iter()
+        .zip(measured_secs)
+        .filter(|(&s, _)| s > 0)
+        .map(|(&s, &t)| t / s as f64)
+        .fold(f64::INFINITY, f64::min);
+    let per_unit: Vec<f64> = partition
+        .shares
+        .iter()
+        .zip(measured_secs)
+        .map(|(&s, &t)| {
+            if s > 0 {
+                t / s as f64
+            } else if best_active.is_finite() {
+                best_active
+            } else {
+                t
+            }
+        })
+        .collect();
+    let cur = measured_secs.iter().cloned().fold(0.0, f64::max);
+    let proj = cand
+        .shares
+        .iter()
+        .zip(&per_unit)
+        .map(|(&s, &u)| s as f64 * u)
+        .fold(0.0, f64::max);
+    let gain = (cur - proj) * remaining_blocks as f64;
+    if gain > migration_cost(model, partition, &cand, move_rest_cells) {
+        Some(cand)
+    } else {
+        None
+    }
 }
 
 /// Convergence driver: retune until the expected per-block times differ by
@@ -225,6 +304,70 @@ mod tests {
         let q = retune(&p, &[1e-3, 1e-1], &ws, 64);
         assert_eq!(q.total_units(), 12);
         assert!(q.shares[0] > 0, "{q:?}");
+    }
+
+    #[test]
+    fn migration_cost_counts_moved_units_and_links() {
+        let m = CommModel::default();
+        let from = Partition { unit: 2, shares: vec![6, 2] };
+        let to = Partition { unit: 2, shares: vec![4, 4] };
+        // 2 moved units x 2 rows x 64 cells x 8 B = 2048 B across 2 links
+        let c = migration_cost(&m, &from, &to, 64);
+        assert!((c - (2.0 * m.alpha + 2048.0 * m.beta)).abs() < 1e-15, "{c}");
+        // no movement, no cost
+        assert_eq!(migration_cost(&m, &from, &from, 64), 0.0);
+    }
+
+    /// ROADMAP hysteresis acceptance: a noise-scale imbalance produces a
+    /// retune candidate, but the gate rejects it because the projected
+    /// gain over the remaining blocks is far below one launch latency.
+    #[test]
+    fn retune_gated_skips_marginal_imbalance() {
+        let ws = workers(&[1 << 30, 1 << 30]);
+        let m = CommModel::default();
+        let p = Partition { unit: 1, shares: vec![8, 8] };
+        let measured = [1.2e-6, 0.8e-6]; // µs-scale blocks: gain ≪ α
+        assert_ne!(retune(&p, &measured, &ws, 64), p, "imbalance must produce a candidate");
+        assert!(retune_gated(&p, &measured, &ws, 64, &m, 64, 4).is_none());
+    }
+
+    /// Alternating measurement noise must never move slabs: the gated
+    /// retune holds the partition perfectly still where the ungated one
+    /// would flip shares every window.
+    #[test]
+    fn retune_gated_does_not_thrash_on_noise() {
+        let ws = workers(&[1 << 30, 1 << 30]);
+        let m = CommModel::default();
+        let mut p = Partition { unit: 1, shares: vec![8, 8] };
+        for i in 0..10 {
+            let measured =
+                if i % 2 == 0 { [1.2e-6, 0.8e-6] } else { [0.8e-6, 1.2e-6] };
+            if let Some(next) = retune_gated(&p, &measured, &ws, 64, &m, 64, 8) {
+                p = next;
+            }
+        }
+        assert_eq!(p.shares, vec![8, 8], "noise-scale imbalance thrashed the shares");
+    }
+
+    #[test]
+    fn retune_gated_fires_on_genuine_skew() {
+        let ws = workers(&[1 << 30, 1 << 30]);
+        let m = CommModel::default();
+        let p = Partition { unit: 1, shares: vec![8, 8] };
+        // 4x skew at ms scale: projected gain (tens of ms) ≫ migration cost
+        let q = retune_gated(&p, &[40e-3, 10e-3], &ws, 64, &m, 64, 4)
+            .expect("genuine skew must repartition");
+        assert!(q.shares[1] > q.shares[0], "{q:?}");
+        assert_eq!(q.total_units(), 16);
+    }
+
+    #[test]
+    fn retune_gated_never_fires_on_last_block() {
+        let ws = workers(&[1 << 30, 1 << 30]);
+        let m = CommModel::default();
+        let p = Partition { unit: 1, shares: vec![8, 8] };
+        // migrating with no blocks left to amortize it is pure cost
+        assert!(retune_gated(&p, &[40e-3, 10e-3], &ws, 64, &m, 64, 0).is_none());
     }
 
     #[test]

@@ -17,6 +17,10 @@
 //! * [`coordinator`] — the paper's §5 concurrent scheduler: two-way
 //!   partitioning, auto-tuned balance, batched halo exchange, and the
 //!   work-stealing pool primitives.
+//! * [`serve`] — the long-lived serving layer on top of the scheduler:
+//!   admission queue (priority classes + backpressure), job batching,
+//!   partition-caching sessions, and the TCP line protocol
+//!   (`tetris serve` / `tetris submit`).
 //! * [`model`] — analytical cost models (α+β communication, roofline).
 //! * [`apps`] — thermal-diffusion case study (§6.5), accuracy study.
 //! * [`bench`] — harness that regenerates every paper table/figure.
@@ -38,6 +42,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod stencil;
 pub mod util;
 

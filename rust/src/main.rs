@@ -6,10 +6,15 @@
 //!   run      --bench B --engine E [--steps N] [--threads T]
 //!            [--boundary C] [--adapt K] [--workers W]  scheduler mode
 //!   hetero   --bench B [--steps N] [--threads T] [--boundary C] [--adapt K]
+//!   serve    [--addr A] [--workers W] [--queue N] [--batch B] [--threads T]
+//!            [--adapt K] [--drift F] [--scale F] [--addr-file FILE]
+//!   submit   [--addr A] --bench B [--boundary C[,C...]] [--steps N]
+//!            [--jobs K] [--priority P] [--shape NxM] [--seed S]
+//!            [--json FILE] | --stats | --shutdown
 //!   thermal  [--size N] [--steps N] [--viz DIR] [--insulated]
 //!   accuracy [--blocks K]
-//!   bench    breakdown|sota|scaling|comm|mxu|boundary [--scale F] [--threads T]
-//!            [--json FILE]    single-line JSON summary for CI artifacts
+//!   bench    breakdown|sota|scaling|comm|mxu|boundary|serve [--scale F]
+//!            [--threads T] [--json FILE]   single-line JSON for CI
 
 #![allow(clippy::uninlined_format_args)]
 
@@ -80,6 +85,8 @@ fn main() -> Result<()> {
         "validate" => cmd_validate(),
         "run" => cmd_run(&args),
         "hetero" => cmd_hetero(&args),
+        "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
         "thermal" => cmd_thermal(&args),
         "accuracy" => cmd_accuracy(&args),
         "bench" => cmd_bench(&args),
@@ -103,10 +110,19 @@ fn print_help() {
                 [--boundary C --adapt K --workers W]   scheduler run on W native workers\n\
          hetero --bench B              auto-tuned CPU+XLA run [--steps N --threads T\n\
                                        --boundary C --adapt K]\n\
+         serve  [--addr A]             long-lived job server (queue, batching,\n\
+                                       partition-caching sessions)  [--workers W\n\
+                                       --queue N --batch B --threads T --adapt K\n\
+                                       --drift F --scale F --addr-file FILE]\n\
+         submit [--addr A]             send jobs over the line protocol [--bench B\n\
+                                       --boundary C[,C...] --steps N --jobs K\n\
+                                       --priority P --shape NxM --seed S --json FILE]\n\
+                                       or --stats / --shutdown\n\
          thermal [--size N --steps N --viz DIR --threads T]   Table-3 case study\n\
                 [--insulated]          Neumann zero-flux plate (conserves total heat)\n\
          accuracy [--blocks K]         Table-4 FP64-vs-FP32 study\n\
-         bench  breakdown|sota|scaling|comm|mxu|boundary [--scale F --threads T --json FILE]\n\
+         bench  breakdown|sota|scaling|comm|mxu|boundary|serve\n\
+                                       [--scale F --threads T --json FILE]\n\
          \n\
          boundaries (C): dirichlet[:V] (fixed-value ghosts), neumann (zero-flux),\n\
                          periodic (torus wrap); --adapt K retunes the partition\n\
@@ -252,6 +268,137 @@ fn cmd_hetero(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `tetris serve`: boot the long-lived job server and block until a
+/// `SHUTDOWN` line (or handle signal) drains it.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use tetris::serve::{default_worker_factory, ServeConfig, Server};
+    let threads = args.get("threads", 2usize);
+    let cfg = ServeConfig {
+        addr: args.str("addr", "127.0.0.1:7466"),
+        dispatchers: args.get("workers", 2usize).max(1),
+        queue_jobs: args.get("queue", 64usize),
+        queue_bytes: args.get("queue-bytes", 1usize << 30),
+        max_batch: args.get("batch", 8usize).max(1),
+        threads,
+        adapt_every: args.get("adapt", 2usize),
+        drift_threshold: args.get("drift", 0.25f64),
+        scale: args.get("scale", 0.25f64),
+    };
+    let handle = Server::start(cfg.clone(), default_worker_factory(threads))?;
+    if let Some(path) = args.flags.get("addr-file") {
+        std::fs::write(path, format!("{}\n", handle.addr))?;
+    }
+    println!(
+        "tetris serve: listening on {} (dispatchers={}, queue={} jobs, batch<={})",
+        handle.addr, cfg.dispatchers, cfg.queue_jobs, cfg.max_batch
+    );
+    println!("protocol: one JSON job per line; STATS; SHUTDOWN (see README \"Serving\")");
+    handle.join();
+    println!("tetris serve: drained and stopped");
+    Ok(())
+}
+
+/// `tetris submit`: drive a pipelined job stream (or STATS/SHUTDOWN) at
+/// a running server and summarize client-side throughput.
+fn cmd_submit(args: &Args) -> Result<()> {
+    use tetris::serve::{Client, JobSpec};
+    let addr = args.str("addr", "127.0.0.1:7466");
+    let mut client = Client::connect(addr.as_str())?;
+    if args.flags.contains_key("stats") {
+        println!("{}", client.stats()?);
+        return Ok(());
+    }
+    if args.flags.contains_key("shutdown") {
+        println!("{}", client.shutdown()?);
+        return Ok(());
+    }
+    let bench = args.str("bench", "heat2d");
+    let steps = args.get("steps", 8usize);
+    let jobs = args.get("jobs", 4usize).max(1);
+    let seed0 = args.get("seed", 1u64);
+    let priority = args.str("priority", "normal").parse().context("--priority")?;
+    let boundaries: Vec<Boundary> = args
+        .str("boundary", "dirichlet:0")
+        .split(',')
+        .map(|b| b.parse().context("--boundary"))
+        .collect::<Result<_>>()?;
+    let shape: Option<Vec<usize>> = match args.flags.get("shape") {
+        Some(s) => Some(
+            s.split('x')
+                .map(|n| n.parse().context("--shape"))
+                .collect::<Result<_>>()?,
+        ),
+        None => None,
+    };
+    let t0 = std::time::Instant::now();
+    for i in 0..jobs {
+        client.send_spec(&JobSpec {
+            id: format!("cli-{i}"),
+            bench: bench.clone(),
+            boundary: boundaries[i % boundaries.len()],
+            steps,
+            priority,
+            shape: shape.clone(),
+            seed: seed0 + i as u64,
+            field: None,
+            return_field: false,
+        })?;
+    }
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(jobs);
+    let mut ok = 0usize;
+    for _ in 0..jobs {
+        let r = client.recv_result()?;
+        if r.ok {
+            ok += 1;
+            latencies_ms.push(r.queue_ms + r.exec_ms);
+            println!(
+                "  {} ok: {} {} x{} mean={:.6} batch={} queue={:.2}ms exec={:.2}ms shares={:?}",
+                r.id, r.bench, r.boundary, r.steps, r.mean, r.batch_size, r.queue_ms, r.exec_ms,
+                r.shares
+            );
+        } else {
+            println!(
+                "  {} REJECTED: {}{}",
+                r.id,
+                r.error.as_deref().unwrap_or("unknown"),
+                r.retry_after_ms.map(|ms| format!(" (retry after {ms}ms)")).unwrap_or_default()
+            );
+        }
+    }
+    let wall = t0.elapsed();
+    let jps = ok as f64 / wall.as_secs_f64().max(1e-12);
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| -> f64 {
+        if latencies_ms.is_empty() {
+            0.0
+        } else {
+            let idx = ((p * latencies_ms.len() as f64).ceil() as usize).max(1) - 1;
+            latencies_ms[idx.min(latencies_ms.len() - 1)]
+        }
+    };
+    println!(
+        "{ok}/{jobs} jobs ok in {:?}: {jps:.2} jobs/sec, p50 {:.2}ms, p99 {:.2}ms",
+        wall,
+        pct(0.50),
+        pct(0.99)
+    );
+    if let Some(path) = args.flags.get("json") {
+        use std::collections::BTreeMap;
+        use tetris::util::json::Json;
+        let mut m = BTreeMap::new();
+        m.insert("bench".to_string(), Json::Str(bench));
+        m.insert("jobs".to_string(), Json::Num(jobs as f64));
+        m.insert("ok".to_string(), Json::Num(ok as f64));
+        m.insert("wall_ms".to_string(), Json::Num(wall.as_secs_f64() * 1e3));
+        m.insert("jobs_per_sec".to_string(), Json::Num(jps));
+        m.insert("p50_ms".to_string(), Json::Num(pct(0.50)));
+        m.insert("p99_ms".to_string(), Json::Num(pct(0.99)));
+        std::fs::write(path, format!("{}\n", Json::Obj(m)))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_thermal(args: &Args) -> Result<()> {
     let rt = runtime_opt();
     let size = args.get("size", 384usize);
@@ -351,6 +498,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "sota" => harness::run_sota(rt.as_ref(), scale, threads),
         "scaling" => harness::run_scaling(rt.as_ref(), scale, threads),
         "boundary" => harness::run_boundary(scale, threads),
+        "serve" => harness::run_serve(scale, threads),
         "comm" => vec![("comm".to_string(), harness::run_comm())],
         "mxu" => {
             let rt = rt.context("mxu bench needs artifacts")?;

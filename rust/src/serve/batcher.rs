@@ -1,0 +1,382 @@
+//! The dispatcher side of the serving layer: pop (possibly coalesced)
+//! batches off the [`AdmissionQueue`], resolve the session for their
+//! shared spec, run them as **one multi-field dispatch** through
+//! [`crate::coordinator::Scheduler::run_batch`], and reply per job.
+//!
+//! Batching amortizes the per-block pool spawn, the ghost-ring
+//! bookkeeping and the retune decision across every coalesced job, and
+//! the session amortizes worker profiling and partition convergence
+//! across the whole job stream — the two levers behind the `serve`
+//! bench rung's batched-vs-unbatched gap.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::error::{Context, Result};
+
+use crate::coordinator::Worker;
+use crate::stencil::Field;
+
+use super::job::{JobResult, JobSpec};
+use super::queue::{AdmissionQueue, QueuedJob};
+use super::session::Session;
+use super::stats::ServeStats;
+
+/// Builds the worker set for a new session: `(bench, shape, tb)`.
+pub type WorkerFactory =
+    Arc<dyn Fn(&str, &[usize], usize) -> Result<Vec<Box<dyn Worker>>> + Send + Sync>;
+
+/// Per-session public counters for `STATS` (kept outside the session
+/// mutex so a long-running batch never blocks a stats probe).
+#[derive(Clone, Debug, Default)]
+pub struct SessionMeta {
+    pub shares: Vec<usize>,
+    pub jobs: u64,
+    pub cache_hits: u64,
+    pub invalidations: u64,
+}
+
+/// Execution policy shared by every dispatcher thread.
+pub struct ExecConfig {
+    /// Default problem scale: session shapes come from
+    /// [`crate::bench::scaled_problem`] unless the job overrides them.
+    pub scale: f64,
+    /// Engine threads for factory-built native workers.
+    pub threads: usize,
+    /// In-run §5.2 retune cadence for session schedulers.
+    pub adapt_every: usize,
+    /// Session partition-cache invalidation threshold (L1 share drift
+    /// over total units).
+    pub drift_threshold: f64,
+}
+
+pub struct Executor {
+    pub queue: Arc<AdmissionQueue>,
+    pub stats: Arc<Mutex<ServeStats>>,
+    cfg: ExecConfig,
+    factory: WorkerFactory,
+    sessions: Mutex<HashMap<String, Arc<Mutex<Session>>>>,
+    meta: Mutex<HashMap<String, SessionMeta>>,
+}
+
+impl Executor {
+    pub fn new(
+        queue: Arc<AdmissionQueue>,
+        stats: Arc<Mutex<ServeStats>>,
+        cfg: ExecConfig,
+        factory: WorkerFactory,
+    ) -> Executor {
+        Executor {
+            queue,
+            stats,
+            cfg,
+            factory,
+            sessions: Mutex::new(HashMap::new()),
+            meta: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Dispatcher thread body: drain batches until the queue closes and
+    /// empties.  Every popped job receives exactly one reply line.
+    pub fn dispatch_loop(&self, max_batch: usize) {
+        while let Some(batch) = self.queue.pop_batch(max_batch) {
+            self.run_jobs(batch);
+        }
+    }
+
+    /// Session key + default shape for a spec.
+    fn plan(&self, spec: &JobSpec) -> Result<(String, Vec<usize>, usize)> {
+        crate::stencil::spec::get(&spec.bench)
+            .with_context(|| format!("unknown bench {:?}", spec.bench))?;
+        let (default_shape, _, tb) = crate::bench::scaled_problem(&spec.bench, self.cfg.scale);
+        let shape = spec.shape.clone().unwrap_or(default_shape);
+        let key = format!("{}/{}/{:?}", spec.bench, spec.boundary.kind(), shape);
+        Ok((key, shape, tb))
+    }
+
+    fn session_for(&self, spec: &JobSpec) -> Result<(String, Arc<Mutex<Session>>)> {
+        let (key, shape, tb) = self.plan(spec)?;
+        if let Some(s) = self.sessions.lock().unwrap().get(&key) {
+            return Ok((key, s.clone()));
+        }
+        // Build workers + profile OUTSIDE the map lock: session creation
+        // takes real timed slab runs, and other dispatchers must keep
+        // resolving existing sessions meanwhile.  A racing creator for
+        // the same key wastes one profile; first insert wins.
+        let workers = (self.factory)(&spec.bench, &shape, tb)?;
+        let session = Arc::new(Mutex::new(Session::new(
+            &spec.bench,
+            shape,
+            tb,
+            workers,
+            self.cfg.adapt_every,
+            self.cfg.drift_threshold,
+        )?));
+        let mut sessions = self.sessions.lock().unwrap();
+        let entry = sessions.entry(key.clone()).or_insert(session);
+        Ok((key, entry.clone()))
+    }
+
+    /// Snapshot of per-session counters (for `STATS`).
+    pub fn session_meta(&self) -> Vec<(String, SessionMeta)> {
+        let meta = self.meta.lock().unwrap();
+        let mut out: Vec<(String, SessionMeta)> =
+            meta.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Run one coalesced batch end-to-end and reply to every job.
+    /// Errors never escape: they become structured per-job replies.
+    pub fn run_jobs(&self, batch: Vec<QueuedJob>) {
+        let released: usize = batch.iter().map(|j| j.cost_bytes).sum();
+        let outcome = self.try_run(&batch);
+        match outcome {
+            Ok(results) => {
+                let mut stats = self.stats.lock().unwrap();
+                stats.completed += batch.len() as u64;
+                stats.batches += 1;
+                if batch.len() > 1 {
+                    stats.batched_jobs += batch.len() as u64;
+                }
+                for (job, result) in batch.iter().zip(results) {
+                    stats.record_latency(job.admitted_at.elapsed());
+                    let _ = job.reply.send(result.to_json().to_string());
+                }
+            }
+            Err(e) => {
+                self.stats.lock().unwrap().errors += batch.len() as u64;
+                for job in &batch {
+                    let reply = JobResult::failure(&job.spec.id, format!("{e}"));
+                    let _ = job.reply.send(reply.to_json().to_string());
+                }
+            }
+        }
+        self.queue.release(released);
+    }
+
+    fn try_run(&self, batch: &[QueuedJob]) -> Result<Vec<JobResult>> {
+        let spec0 = &batch[0].spec;
+        let (key, session) = self.session_for(spec0)?;
+        let mut sess = session.lock().unwrap();
+        let steps = sess.align_steps(spec0.steps);
+        let inputs: Vec<Field> = batch.iter().map(|j| j.input.clone()).collect();
+        let t0 = Instant::now();
+        let (outs, _metrics) = sess.run_batch(spec0.boundary, &inputs, steps)?;
+        let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let shares = sess.shares();
+        {
+            let mut meta = self.meta.lock().unwrap();
+            let m = meta.entry(key).or_default();
+            m.shares = shares.clone();
+            m.jobs = sess.jobs_run;
+            m.cache_hits = sess.cache_hits;
+            m.invalidations = sess.invalidations;
+        }
+        drop(sess);
+        Ok(batch
+            .iter()
+            .zip(outs)
+            .map(|(job, out)| JobResult {
+                id: job.spec.id.clone(),
+                ok: true,
+                error: None,
+                retry_after_ms: None,
+                bench: job.spec.bench.clone(),
+                boundary: job.spec.boundary.to_string(),
+                priority: job.spec.priority.to_string(),
+                steps,
+                shape: out.shape().to_vec(),
+                mean: out.mean(),
+                l2: out.l2(),
+                field: if job.spec.return_field { Some(out.into_vec()) } else { None },
+                admit_seq: job.admit_seq,
+                start_seq: job.start_seq,
+                batch_size: batch.len(),
+                queue_ms: (t0 - job.admitted_at).as_secs_f64() * 1e3,
+                exec_ms,
+                shares: shares.clone(),
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativeWorker;
+    use crate::serve::job::Priority;
+    use crate::stencil::Boundary;
+    use std::sync::mpsc;
+
+    fn native_factory() -> WorkerFactory {
+        Arc::new(|_bench, _shape, _tb| {
+            Ok(vec![
+                Box::new(NativeWorker::new(crate::engine::by_name("simd", 1).unwrap(), 1 << 30))
+                    as Box<dyn Worker>,
+                Box::new(NativeWorker::new(crate::engine::by_name("simd", 1).unwrap(), 1 << 30)),
+            ])
+        })
+    }
+
+    fn executor() -> Executor {
+        Executor::new(
+            Arc::new(AdmissionQueue::new(64, 1 << 30)),
+            Arc::new(Mutex::new(ServeStats::new())),
+            ExecConfig { scale: 0.05, threads: 1, adapt_every: 0, drift_threshold: 0.25 },
+            native_factory(),
+        )
+    }
+
+    fn queued(spec: JobSpec, seq: u64) -> (QueuedJob, mpsc::Receiver<String>) {
+        let input = spec
+            .materialize(&crate::bench::scaled_problem(&spec.bench, 0.05).0)
+            .unwrap();
+        let (tx, rx) = mpsc::channel();
+        (
+            QueuedJob {
+                cost_bytes: 3 * input.len() * 8,
+                spec,
+                input,
+                admit_seq: seq,
+                start_seq: seq, // the real queue assigns this at pop
+                admitted_at: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn batch_replies_to_every_job_in_order() {
+        let exec = executor();
+        let specs: Vec<JobSpec> = (0..3)
+            .map(|i| JobSpec {
+                id: format!("j{i}"),
+                bench: "heat1d".into(),
+                shape: Some(vec![24]),
+                steps: 8,
+                seed: 90 + i,
+                priority: Priority::Normal,
+                ..Default::default()
+            })
+            .collect();
+        let (jobs, rxs): (Vec<_>, Vec<_>) =
+            specs.into_iter().enumerate().map(|(i, s)| queued(s, i as u64)).unzip();
+        exec.run_jobs(jobs);
+        for (i, rx) in rxs.iter().enumerate() {
+            let r = JobResult::parse_line(&rx.recv().unwrap()).unwrap();
+            assert!(r.ok, "{r:?}");
+            assert_eq!(r.id, format!("j{i}"));
+            assert_eq!(r.batch_size, 3);
+            assert_eq!(r.start_seq, i as u64);
+            assert_eq!(r.steps, 8);
+        }
+        let stats = exec.stats.lock().unwrap();
+        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.batched_jobs, 3);
+        assert_eq!(stats.latency_count(), 3);
+    }
+
+    #[test]
+    fn bad_bench_becomes_structured_error_reply() {
+        let exec = executor();
+        let (mut job, rx) = queued(
+            JobSpec {
+                id: "bad".into(),
+                bench: "heat1d".into(),
+                shape: Some(vec![24]),
+                ..Default::default()
+            },
+            0,
+        );
+        job.spec.bench = "not-a-bench".into();
+        exec.run_jobs(vec![job]);
+        let r = JobResult::parse_line(&rx.recv().unwrap()).unwrap();
+        assert!(!r.ok);
+        assert!(r.error.unwrap().contains("not-a-bench"));
+        assert_eq!(exec.stats.lock().unwrap().errors, 1);
+    }
+
+    #[test]
+    fn sessions_are_shared_per_key_and_counted() {
+        let exec = executor();
+        for seed in 0..2 {
+            let (job, rx) = queued(
+                JobSpec {
+                    id: format!("s{seed}"),
+                    bench: "heat1d".into(),
+                    shape: Some(vec![24]),
+                    seed,
+                    ..Default::default()
+                },
+                seed,
+            );
+            exec.run_jobs(vec![job]);
+            assert!(JobResult::parse_line(&rx.recv().unwrap()).unwrap().ok);
+        }
+        let meta = exec.session_meta();
+        assert_eq!(meta.len(), 1, "same (bench, kind, shape) must share one session");
+        assert_eq!(meta[0].1.jobs, 2);
+        assert!(meta[0].0.contains("heat1d/dirichlet"));
+        // same bench, different boundary kind: a second session
+        let (job, rx) = queued(
+            JobSpec {
+                id: "p".into(),
+                bench: "heat1d".into(),
+                shape: Some(vec![24]),
+                boundary: Boundary::Periodic,
+                ..Default::default()
+            },
+            2,
+        );
+        exec.run_jobs(vec![job]);
+        assert!(JobResult::parse_line(&rx.recv().unwrap()).unwrap().ok);
+        assert_eq!(exec.session_meta().len(), 2);
+    }
+
+    #[test]
+    fn return_field_round_trips_bits() {
+        let exec = executor();
+        let (job, rx) = queued(
+            JobSpec {
+                id: "f".into(),
+                bench: "heat1d".into(),
+                shape: Some(vec![24]),
+                steps: 4,
+                seed: 7,
+                return_field: true,
+                ..Default::default()
+            },
+            0,
+        );
+        let input = job.input.clone();
+        exec.run_jobs(vec![job]);
+        let r = JobResult::parse_line(&rx.recv().unwrap()).unwrap();
+        let got = r.field.expect("field requested");
+        // Direct scheduler run with the same engine and Tb: slab
+        // decomposition is bit-invariant for the row-sweep engines, so
+        // whatever partition the session profiled, the bits must match.
+        let s = crate::stencil::spec::get("heat1d").unwrap();
+        let tb = crate::bench::scaled_problem("heat1d", 0.05).2;
+        let sched = crate::coordinator::Scheduler {
+            spec: s,
+            tb,
+            workers: vec![Box::new(NativeWorker::new(
+                crate::engine::by_name("simd", 1).unwrap(),
+                1 << 30,
+            ))],
+            partition: crate::coordinator::Partition { unit: 24, shares: vec![1] },
+            comm_model: crate::coordinator::CommModel::default(),
+            boundary: Boundary::Dirichlet(0.0),
+            adapt_every: 0,
+        };
+        let (want, _) = sched.run(&input, r.steps).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(want.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Minimal blocking client for the serving line protocol — used by
+//! `tetris submit`, the examples and the end-to-end tests.
+//!
+//! Requests may be pipelined: [`Client::send_spec`] any number of jobs,
+//! then [`Client::recv_result`] the same number of replies; the server
+//! guarantees reply order matches request order per connection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+use super::job::{JobResult, JobSpec};
+
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs + std::fmt::Debug>(addr: A) -> Result<Client> {
+        let stream =
+            TcpStream::connect(&addr).with_context(|| format!("connecting {addr:?}"))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { reader, writer: stream })
+    }
+
+    pub fn send_line(&mut self, line: &str) -> Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        Ok(())
+    }
+
+    pub fn recv_line(&mut self) -> Result<String> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        crate::ensure!(n > 0, "server closed the connection");
+        Ok(line)
+    }
+
+    /// Queue one job (pipelined; pair with [`Client::recv_result`]).
+    pub fn send_spec(&mut self, spec: &JobSpec) -> Result<()> {
+        self.send_line(&spec.to_json().to_string())
+    }
+
+    pub fn recv_result(&mut self) -> Result<JobResult> {
+        let line = self.recv_line()?;
+        JobResult::parse_line(&line)
+    }
+
+    /// Submit one job and wait for its reply.
+    pub fn submit(&mut self, spec: &JobSpec) -> Result<JobResult> {
+        self.send_spec(spec)?;
+        self.recv_result()
+    }
+
+    /// Fetch the server's `STATS` line.
+    pub fn stats(&mut self) -> Result<Json> {
+        self.send_line("STATS")?;
+        let line = self.recv_line()?;
+        Json::parse(line.trim()).context("stats parse")
+    }
+
+    /// Ask the server to drain and exit; returns the ack.
+    pub fn shutdown(&mut self) -> Result<Json> {
+        self.send_line("SHUTDOWN")?;
+        let line = self.recv_line()?;
+        Json::parse(line.trim()).context("shutdown ack parse")
+    }
+}

@@ -1,0 +1,425 @@
+//! Wire types of the serving line protocol: [`JobSpec`] (one JSON object
+//! per request line) and [`JobResult`] (one JSON object per reply line),
+//! with serde-free codecs over [`crate::util::json::Json`].
+//!
+//! Decoding is *tolerant*: unknown keys are ignored (a newer client may
+//! send fields an older server does not know), and every known field has
+//! a default, so the minimal job is just `{"bench":"heat2d"}`.  Encoding
+//! is deterministic (object keys sort lexicographically through the
+//! `BTreeMap` printer), which keeps the golden-file tests byte-stable.
+//! Field payloads round-trip bit-exactly: the printer emits the shortest
+//! decimal that re-parses to the same f64.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+use crate::stencil::{spec, Boundary, Field};
+
+/// Scheduling priority class; lower class index drains first, FIFO
+/// within a class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    Interactive,
+    Normal,
+    Batch,
+}
+
+/// Number of priority classes (queue lanes).
+pub const PRIORITY_CLASSES: usize = 3;
+
+impl Priority {
+    /// Queue-lane index: 0 drains first.
+    pub fn class(&self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Normal => 1,
+            Priority::Batch => 2,
+        }
+    }
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Priority::Interactive => "interactive",
+            Priority::Normal => "normal",
+            Priority::Batch => "batch",
+        })
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = crate::util::error::TetrisError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "interactive" | "0" => Ok(Priority::Interactive),
+            "normal" | "1" => Ok(Priority::Normal),
+            "batch" | "2" => Ok(Priority::Batch),
+            other => Err(crate::err!(
+                "unknown priority {other:?} (expected interactive, normal or batch)"
+            )),
+        }
+    }
+}
+
+/// One evolution job: which dwarf, which physics, how far.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Client-chosen tag, echoed verbatim in the result.
+    pub id: String,
+    pub bench: String,
+    pub boundary: Boundary,
+    /// Requested steps; the server aligns up to the session's Tb.
+    pub steps: usize,
+    pub priority: Priority,
+    /// Core shape; `None` uses the server's default for the bench.
+    pub shape: Option<Vec<usize>>,
+    /// Input is `Field::random(shape, seed)` unless `field` is given.
+    pub seed: u64,
+    /// Inline input values (row-major; requires `shape`).
+    pub field: Option<Vec<f64>>,
+    /// Return the full final field in the result (costly on big grids).
+    pub return_field: bool,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            id: String::new(),
+            bench: "heat2d".into(),
+            boundary: Boundary::Dirichlet(0.0),
+            steps: 4,
+            priority: Priority::Normal,
+            shape: None,
+            seed: 1,
+            field: None,
+            return_field: false,
+        }
+    }
+}
+
+impl JobSpec {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("id".into(), Json::Str(self.id.clone()));
+        m.insert("bench".into(), Json::Str(self.bench.clone()));
+        m.insert("boundary".into(), Json::Str(self.boundary.to_string()));
+        m.insert("steps".into(), Json::Num(self.steps as f64));
+        m.insert("priority".into(), Json::Str(self.priority.to_string()));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("return_field".into(), Json::Bool(self.return_field));
+        if let Some(shape) = &self.shape {
+            m.insert("shape".into(), usize_arr(shape));
+        }
+        if let Some(field) = &self.field {
+            m.insert("field".into(), f64_arr(field));
+        }
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<JobSpec> {
+        v.as_obj().context("job must be a JSON object")?;
+        let d = JobSpec::default();
+        let boundary: Boundary = match v.get("boundary") {
+            Some(b) => b.as_str().context("boundary must be a string")?.parse()?,
+            None => d.boundary,
+        };
+        let priority: Priority = match v.get("priority") {
+            Some(p) => p.as_str().context("priority must be a string")?.parse()?,
+            None => d.priority,
+        };
+        Ok(JobSpec {
+            id: v.at(&["id"]).as_str().unwrap_or("").to_string(),
+            bench: v.at(&["bench"]).as_str().unwrap_or(&d.bench).to_string(),
+            boundary,
+            steps: v.at(&["steps"]).as_usize().unwrap_or(d.steps),
+            priority,
+            shape: v.get("shape").and_then(|s| s.usize_vec()),
+            seed: v.at(&["seed"]).as_u64().unwrap_or(d.seed),
+            field: v.get("field").and_then(|f| f.f64_vec()),
+            return_field: matches!(v.get("return_field"), Some(Json::Bool(true))),
+        })
+    }
+
+    pub fn parse_line(line: &str) -> Result<JobSpec> {
+        let v = Json::parse(line.trim()).context("job parse")?;
+        JobSpec::from_json(&v)
+    }
+
+    /// Coalescing key: jobs with equal keys run as one multi-field
+    /// dispatch (inputs differ per job; physics and geometry must not).
+    pub fn batch_key(&self) -> String {
+        format!("{}|{}|{}|{:?}", self.bench, self.boundary, self.steps, self.shape)
+    }
+
+    /// Resolve the input field: validate the bench/shape and build the
+    /// initial core (inline values, else the seeded PRNG field).
+    pub fn materialize(&self, default_shape: &[usize]) -> Result<Field> {
+        let s = spec::get(&self.bench)
+            .with_context(|| format!("unknown bench {:?}", self.bench))?;
+        let shape: Vec<usize> = match &self.shape {
+            Some(sh) => sh.clone(),
+            None => default_shape.to_vec(),
+        };
+        crate::ensure!(
+            shape.len() == s.ndim && shape.iter().all(|&n| n >= 1),
+            "bench {} wants {} dims >= 1, got shape {shape:?}",
+            self.bench,
+            s.ndim
+        );
+        let cells = shape
+            .iter()
+            .try_fold(1usize, |a, &n| a.checked_mul(n))
+            .with_context(|| format!("shape {shape:?} overflows the cell count"))?;
+        match &self.field {
+            Some(values) => {
+                crate::ensure!(
+                    values.len() == cells,
+                    "inline field has {} values, shape {shape:?} wants {cells}",
+                    values.len()
+                );
+                Ok(Field::from_vec(&shape, values.clone()))
+            }
+            None => Ok(Field::random(&shape, self.seed)),
+        }
+    }
+}
+
+/// One reply line.  `ok:false` replies (parse errors, admission rejects,
+/// run failures) carry `error` and possibly `retry_after_ms`; `ok:true`
+/// replies carry the run summary and, on request, the final field.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct JobResult {
+    pub id: String,
+    pub ok: bool,
+    pub error: Option<String>,
+    /// Backpressure hint on admission rejects (0 = do not retry).
+    pub retry_after_ms: Option<u64>,
+    pub bench: String,
+    pub boundary: String,
+    pub priority: String,
+    /// Steps actually executed (the request aligned up to Tb).
+    pub steps: usize,
+    pub shape: Vec<usize>,
+    pub mean: f64,
+    pub l2: f64,
+    pub field: Option<Vec<f64>>,
+    /// Global admission order (per server).
+    pub admit_seq: u64,
+    /// Global queue-pop order, assigned under the queue lock — FIFO
+    /// within a priority class for any dispatcher count (execution of
+    /// already-popped batches may still overlap across dispatchers).
+    pub start_seq: u64,
+    /// Jobs coalesced into the same multi-field dispatch.
+    pub batch_size: usize,
+    pub queue_ms: f64,
+    pub exec_ms: f64,
+    /// The session's cached partition shares after this run.
+    pub shares: Vec<usize>,
+}
+
+impl JobResult {
+    /// Structured failure reply (connection stays open).
+    pub fn failure(id: &str, error: impl Into<String>) -> JobResult {
+        JobResult { id: id.into(), ok: false, error: Some(error.into()), ..Default::default() }
+    }
+
+    /// Admission reject with a backpressure hint.
+    pub fn reject(id: &str, error: impl Into<String>, retry_after_ms: u64) -> JobResult {
+        JobResult { retry_after_ms: Some(retry_after_ms), ..JobResult::failure(id, error) }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("id".into(), Json::Str(self.id.clone()));
+        m.insert("ok".into(), Json::Bool(self.ok));
+        if let Some(e) = &self.error {
+            m.insert("error".into(), Json::Str(e.clone()));
+        }
+        if let Some(ms) = self.retry_after_ms {
+            m.insert("retry_after_ms".into(), Json::Num(ms as f64));
+        }
+        if !self.ok {
+            return Json::Obj(m);
+        }
+        m.insert("bench".into(), Json::Str(self.bench.clone()));
+        m.insert("boundary".into(), Json::Str(self.boundary.clone()));
+        m.insert("priority".into(), Json::Str(self.priority.clone()));
+        m.insert("steps".into(), Json::Num(self.steps as f64));
+        m.insert("shape".into(), usize_arr(&self.shape));
+        m.insert("mean".into(), Json::Num(self.mean));
+        m.insert("l2".into(), Json::Num(self.l2));
+        if let Some(field) = &self.field {
+            m.insert("field".into(), f64_arr(field));
+        }
+        m.insert("admit_seq".into(), Json::Num(self.admit_seq as f64));
+        m.insert("start_seq".into(), Json::Num(self.start_seq as f64));
+        m.insert("batch_size".into(), Json::Num(self.batch_size as f64));
+        m.insert("queue_ms".into(), Json::Num(self.queue_ms));
+        m.insert("exec_ms".into(), Json::Num(self.exec_ms));
+        m.insert("shares".into(), usize_arr(&self.shares));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<JobResult> {
+        v.as_obj().context("result must be a JSON object")?;
+        Ok(JobResult {
+            id: v.at(&["id"]).as_str().unwrap_or("").to_string(),
+            ok: matches!(v.get("ok"), Some(Json::Bool(true))),
+            error: v.get("error").and_then(|e| e.as_str()).map(String::from),
+            retry_after_ms: v.get("retry_after_ms").and_then(|r| r.as_u64()),
+            bench: v.at(&["bench"]).as_str().unwrap_or("").to_string(),
+            boundary: v.at(&["boundary"]).as_str().unwrap_or("").to_string(),
+            priority: v.at(&["priority"]).as_str().unwrap_or("").to_string(),
+            steps: v.at(&["steps"]).as_usize().unwrap_or(0),
+            shape: v.get("shape").and_then(|s| s.usize_vec()).unwrap_or_default(),
+            mean: v.at(&["mean"]).as_f64().unwrap_or(0.0),
+            l2: v.at(&["l2"]).as_f64().unwrap_or(0.0),
+            field: v.get("field").and_then(|f| f.f64_vec()),
+            admit_seq: v.at(&["admit_seq"]).as_u64().unwrap_or(0),
+            start_seq: v.at(&["start_seq"]).as_u64().unwrap_or(0),
+            batch_size: v.at(&["batch_size"]).as_usize().unwrap_or(0),
+            queue_ms: v.at(&["queue_ms"]).as_f64().unwrap_or(0.0),
+            exec_ms: v.at(&["exec_ms"]).as_f64().unwrap_or(0.0),
+            shares: v.get("shares").and_then(|s| s.usize_vec()).unwrap_or_default(),
+        })
+    }
+
+    pub fn parse_line(line: &str) -> Result<JobResult> {
+        let v = Json::parse(line.trim()).context("result parse")?;
+        JobResult::from_json(&v)
+    }
+}
+
+fn usize_arr(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn f64_arr(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jobspec_roundtrips() {
+        let spec = JobSpec {
+            id: "j-7".into(),
+            bench: "heat3d".into(),
+            boundary: Boundary::Dirichlet(25.0),
+            steps: 8,
+            priority: Priority::Interactive,
+            shape: Some(vec![16, 8, 8]),
+            seed: 42,
+            field: None,
+            return_field: true,
+        };
+        let line = spec.to_json().to_string();
+        assert!(!line.contains('\n'));
+        assert_eq!(JobSpec::parse_line(&line).unwrap(), spec);
+    }
+
+    #[test]
+    fn jobspec_defaults_and_unknown_fields() {
+        // minimal job + a field from the future: both tolerated
+        let spec =
+            JobSpec::parse_line(r#"{"bench":"heat1d","x-tenant":"acme","quota":{"cpus":4}}"#)
+                .unwrap();
+        assert_eq!(spec.bench, "heat1d");
+        assert_eq!(spec.boundary, Boundary::Dirichlet(0.0));
+        assert_eq!(spec.priority, Priority::Normal);
+        assert!(spec.shape.is_none() && spec.field.is_none() && !spec.return_field);
+    }
+
+    #[test]
+    fn jobspec_rejects_bad_boundary_and_non_object() {
+        assert!(JobSpec::parse_line(r#"{"boundary":"moebius"}"#).is_err());
+        assert!(JobSpec::parse_line("[1,2,3]").is_err());
+        assert!(JobSpec::parse_line("{oops").is_err());
+    }
+
+    #[test]
+    fn jobresult_roundtrips_field_bits() {
+        let values = vec![0.1 + 0.2, 1.0 / 3.0, 6.02e23, 2.5e-17, 0.0, 42.0];
+        let r = JobResult {
+            id: "j".into(),
+            ok: true,
+            bench: "heat2d".into(),
+            boundary: "periodic".into(),
+            priority: "normal".into(),
+            steps: 4,
+            shape: vec![2, 3],
+            mean: values.iter().sum::<f64>() / 6.0,
+            l2: 1.25,
+            field: Some(values.clone()),
+            admit_seq: 3,
+            start_seq: 1,
+            batch_size: 4,
+            queue_ms: 0.75,
+            exec_ms: 12.5,
+            shares: vec![5, 11],
+            ..Default::default()
+        };
+        let back = JobResult::parse_line(&r.to_json().to_string()).unwrap();
+        assert_eq!(back, r);
+        let got = back.field.unwrap();
+        for (a, b) in got.iter().zip(&values) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn failure_reply_is_minimal() {
+        let r = JobResult::reject("j9", "queue full (64 jobs)", 125);
+        let line = r.to_json().to_string();
+        assert!(!line.contains("shares") && !line.contains("mean"), "{line}");
+        let back = JobResult::parse_line(&line).unwrap();
+        assert!(!back.ok);
+        assert_eq!(back.retry_after_ms, Some(125));
+        assert_eq!(back.error.as_deref(), Some("queue full (64 jobs)"));
+        assert_eq!(back.id, "j9");
+    }
+
+    #[test]
+    fn batch_key_separates_physics_not_inputs() {
+        let a = JobSpec { seed: 1, id: "a".into(), ..Default::default() };
+        let b = JobSpec { seed: 9, id: "b".into(), return_field: true, ..Default::default() };
+        assert_eq!(a.batch_key(), b.batch_key());
+        let c = JobSpec { boundary: Boundary::Neumann, ..Default::default() };
+        assert_ne!(a.batch_key(), c.batch_key());
+        let d = JobSpec { boundary: Boundary::Dirichlet(25.0), ..Default::default() };
+        assert_ne!(a.batch_key(), d.batch_key(), "wall value changes the physics");
+    }
+
+    #[test]
+    fn materialize_validates_and_builds() {
+        let spec = JobSpec { bench: "heat2d".into(), ..Default::default() };
+        let f = spec.materialize(&[12, 8]).unwrap();
+        assert_eq!(f.shape(), &[12, 8]);
+        // same seed, same bits
+        assert_eq!(f.data(), spec.materialize(&[12, 8]).unwrap().data());
+
+        let inline = JobSpec {
+            shape: Some(vec![2, 2]),
+            field: Some(vec![1.0, 2.0, 3.0, 4.0]),
+            ..Default::default()
+        };
+        assert_eq!(inline.materialize(&[12, 8]).unwrap().data(), &[1.0, 2.0, 3.0, 4.0]);
+
+        let bad_dim = JobSpec { shape: Some(vec![8]), ..Default::default() };
+        assert!(bad_dim.materialize(&[12, 8]).is_err());
+        let bad_len = JobSpec {
+            shape: Some(vec![2, 2]),
+            field: Some(vec![1.0]),
+            ..Default::default()
+        };
+        assert!(bad_len.materialize(&[12, 8]).is_err());
+        let bad_bench = JobSpec { bench: "nope".into(), ..Default::default() };
+        assert!(bad_bench.materialize(&[12, 8]).is_err());
+    }
+}

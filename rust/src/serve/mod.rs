@@ -1,0 +1,36 @@
+//! `tetris serve` — the long-lived stencil-serving subsystem (ROADMAP's
+//! "Serving layer"): the paper's §5 concurrent scheduler behind a
+//! stable submission API, so users drive jobs at a service instead of a
+//! supercomputer.
+//!
+//! * [`job`] — [`JobSpec`]/[`JobResult`] line-protocol wire types with
+//!   tolerant, serde-free JSON codecs;
+//! * [`queue`] — bounded MPMC admission queue: priority classes, FIFO
+//!   within a class, job-count + in-flight-byte backpressure
+//!   (reject-with-retry-after, never block the socket);
+//! * [`session`] — per-`(bench, boundary-kind, shape)` scheduler
+//!   sessions that keep workers alive and cache the converged partition
+//!   across jobs, invalidating on retune drift;
+//! * [`batcher`] — coalesces queued jobs with identical spec/boundary
+//!   into one multi-field dispatch ([`crate::coordinator::Scheduler::run_batch`]),
+//!   amortizing pool spawns, ghost bookkeeping and retunes;
+//! * [`server`] — `std::net` TCP line protocol (JSON job in, JSON
+//!   result out, `STATS`, graceful `SHUTDOWN`);
+//! * [`client`] — blocking pipelined client (`tetris submit`);
+//! * [`stats`] — counters + log₂ latency histogram behind `STATS`.
+
+pub mod batcher;
+pub mod client;
+pub mod job;
+pub mod queue;
+pub mod server;
+pub mod session;
+pub mod stats;
+
+pub use batcher::{ExecConfig, Executor, SessionMeta, WorkerFactory};
+pub use client::Client;
+pub use job::{JobResult, JobSpec, Priority};
+pub use queue::{Admission, AdmissionQueue, QueuedJob};
+pub use server::{default_worker_factory, ServeConfig, Server, ServerHandle};
+pub use session::Session;
+pub use stats::ServeStats;

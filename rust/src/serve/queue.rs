@@ -1,0 +1,383 @@
+//! Bounded multi-producer/multi-consumer admission queue with priority
+//! classes and backpressure (the serving layer's §5.1-style memory
+//! admission).
+//!
+//! Admission is bounded two ways: a job-count cap (`--queue N`) and an
+//! in-flight-byte cap modeled like [`crate::coordinator::partition::capacity_units`]
+//! — every admitted job accounts input + output + one scratch copy of
+//! its core until its reply is sent.  A push that would exceed either
+//! bound is rejected with a `retry_after_ms` hint instead of blocking
+//! the connection thread (reject-with-retry-after backpressure).
+//!
+//! Consumers ([`AdmissionQueue::pop_batch`]) drain the lowest-numbered
+//! non-empty class first and FIFO within a class; a pop also coalesces
+//! the *head run* of jobs sharing one [`JobSpec::batch_key`] so the
+//! dispatcher can run them as a single multi-field dispatch.  Only the
+//! contiguous head run is taken — reaching deeper into the queue would
+//! reorder jobs within the class and break the FIFO guarantee.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::stencil::Field;
+
+use super::job::{JobSpec, PRIORITY_CLASSES};
+
+/// An admitted job waiting for (or undergoing) dispatch.
+pub struct QueuedJob {
+    pub spec: JobSpec,
+    pub input: Field,
+    pub admit_seq: u64,
+    /// Queue-pop order, assigned under the queue lock at
+    /// [`AdmissionQueue::pop_batch`] — therefore FIFO within a priority
+    /// class no matter how many dispatcher threads race on the pops.
+    pub start_seq: u64,
+    pub admitted_at: Instant,
+    /// Bytes held against the queue's in-flight bound until release.
+    pub cost_bytes: usize,
+    /// Serialized reply line sink (one line per job).
+    pub reply: Sender<String>,
+}
+
+/// Outcome of [`AdmissionQueue::push`].
+#[derive(Debug)]
+pub enum Admission {
+    Admitted(u64),
+    Rejected { reason: String, retry_after_ms: u64 },
+}
+
+struct Inner {
+    classes: Vec<VecDeque<QueuedJob>>,
+    queued: usize,
+    inflight_bytes: usize,
+    next_seq: u64,
+    next_start: u64,
+    closed: bool,
+}
+
+pub struct AdmissionQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    pub max_jobs: usize,
+    pub max_bytes: usize,
+}
+
+impl AdmissionQueue {
+    pub fn new(max_jobs: usize, max_bytes: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            inner: Mutex::new(Inner {
+                classes: (0..PRIORITY_CLASSES).map(|_| VecDeque::new()).collect(),
+                queued: 0,
+                inflight_bytes: 0,
+                next_seq: 0,
+                next_start: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            max_jobs: max_jobs.max(1),
+            max_bytes: max_bytes.max(1),
+        }
+    }
+
+    /// Admit or reject a job.  The byte cost (input + output + scratch)
+    /// stays accounted until [`AdmissionQueue::release`].
+    pub fn push(&self, spec: JobSpec, input: Field, reply: Sender<String>) -> Admission {
+        let cost_bytes = 3 * input.len() * 8;
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Admission::Rejected {
+                reason: "server is shutting down".into(),
+                retry_after_ms: 0,
+            };
+        }
+        // A job whose footprint alone exceeds the queue's byte budget
+        // can never be admitted: hint 0 ("do not retry") instead of
+        // sending the client into a permanent retry loop.
+        if cost_bytes > self.max_bytes {
+            return Admission::Rejected {
+                reason: format!(
+                    "memory admission: job needs {cost_bytes} bytes, queue capacity {}",
+                    self.max_bytes
+                ),
+                retry_after_ms: 0,
+            };
+        }
+        // Backpressure hint: roughly one queue-drain's worth of patience,
+        // growing with depth so clients spread their retries.
+        let retry_after_ms = (25 * (g.queued as u64 + 1)).min(5_000);
+        if g.queued >= self.max_jobs {
+            return Admission::Rejected {
+                reason: format!("queue full ({} jobs)", self.max_jobs),
+                retry_after_ms,
+            };
+        }
+        if g.inflight_bytes + cost_bytes > self.max_bytes {
+            return Admission::Rejected {
+                reason: format!(
+                    "memory admission: {} in-flight + {} job bytes exceeds {}",
+                    g.inflight_bytes, cost_bytes, self.max_bytes
+                ),
+                retry_after_ms,
+            };
+        }
+        let seq = g.next_seq;
+        g.next_seq += 1;
+        g.queued += 1;
+        g.inflight_bytes += cost_bytes;
+        let class = spec.priority.class();
+        g.classes[class].push_back(QueuedJob {
+            spec,
+            input,
+            admit_seq: seq,
+            start_seq: 0, // assigned at pop
+            admitted_at: Instant::now(),
+            cost_bytes,
+            reply,
+        });
+        self.cv.notify_one();
+        Admission::Admitted(seq)
+    }
+
+    /// Block until a job is available (or the queue is closed *and*
+    /// drained — `None`).  Returns the head job of the best class plus
+    /// up to `max_batch - 1` immediate successors sharing its batch key.
+    pub fn pop_batch(&self, max_batch: usize) -> Option<Vec<QueuedJob>> {
+        let mut g = self.inner.lock().unwrap();
+        let class = loop {
+            match (0..PRIORITY_CLASSES).find(|&c| !g.classes[c].is_empty()) {
+                Some(c) => break c,
+                None if g.closed => return None,
+                None => g = self.cv.wait(g).unwrap(),
+            }
+        };
+        let head = g.classes[class].pop_front().unwrap();
+        let key = head.spec.batch_key();
+        let mut batch = vec![head];
+        while batch.len() < max_batch.max(1) {
+            match g.classes[class].front() {
+                Some(next) if next.spec.batch_key() == key => {
+                    batch.push(g.classes[class].pop_front().unwrap());
+                }
+                _ => break,
+            }
+        }
+        g.queued -= batch.len();
+        for job in &mut batch {
+            job.start_seq = g.next_start;
+            g.next_start += 1;
+        }
+        Some(batch)
+    }
+
+    /// Return a finished batch's bytes to the admission budget.
+    pub fn release(&self, cost_bytes: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.inflight_bytes = g.inflight_bytes.saturating_sub(cost_bytes);
+    }
+
+    /// Stop admitting; consumers drain what is queued, then get `None`.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Queued jobs per priority class (admitted, not yet popped).
+    pub fn depths(&self) -> Vec<usize> {
+        let g = self.inner.lock().unwrap();
+        g.classes.iter().map(|q| q.len()).collect()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.inner.lock().unwrap().queued
+    }
+
+    pub fn inflight_bytes(&self) -> usize {
+        self.inner.lock().unwrap().inflight_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::job::Priority;
+    use std::sync::mpsc;
+
+    fn job(id: &str, priority: Priority) -> (JobSpec, Field) {
+        let spec = JobSpec {
+            id: id.into(),
+            bench: "heat1d".into(),
+            priority,
+            shape: Some(vec![8]),
+            ..Default::default()
+        };
+        let input = spec.materialize(&[8]).unwrap();
+        (spec, input)
+    }
+
+    fn push(q: &AdmissionQueue, id: &str, p: Priority) -> Admission {
+        let (spec, input) = job(id, p);
+        // tests here never reply, so the receiver can drop immediately
+        let (tx, _rx) = mpsc::channel();
+        q.push(spec, input, tx)
+    }
+
+    #[test]
+    fn classes_drain_by_priority_then_fifo() {
+        let q = AdmissionQueue::new(16, 1 << 20);
+        push(&q, "b1", Priority::Batch);
+        push(&q, "n1", Priority::Normal);
+        push(&q, "i1", Priority::Interactive);
+        push(&q, "i2", Priority::Interactive);
+        assert_eq!(q.depths(), vec![2, 1, 1]);
+        // interactive drains first, FIFO within the class
+        let batch = q.pop_batch(8).unwrap();
+        assert_eq!(
+            batch.iter().map(|j| j.spec.id.as_str()).collect::<Vec<_>>(),
+            vec!["i1", "i2"],
+            "same batch key: both interactive jobs coalesce"
+        );
+        assert_eq!(q.pop_batch(8).unwrap()[0].spec.id, "n1");
+        assert_eq!(q.pop_batch(8).unwrap()[0].spec.id, "b1");
+        assert_eq!(q.queued(), 0);
+    }
+
+    #[test]
+    fn batching_takes_only_the_matching_head_run() {
+        let q = AdmissionQueue::new(16, 1 << 20);
+        push(&q, "a1", Priority::Normal);
+        push(&q, "a2", Priority::Normal);
+        let (mut spec, input) = job("x", Priority::Normal);
+        spec.boundary = crate::stencil::Boundary::Periodic; // different key
+        let (tx, _rx) = mpsc::channel();
+        q.push(spec, input, tx);
+        push(&q, "a3", Priority::Normal);
+        // a3 matches a1/a2's key but sits behind x: taking it would
+        // reorder the class, so the batch stops at the run boundary.
+        let batch = q.pop_batch(8).unwrap();
+        assert_eq!(
+            batch.iter().map(|j| j.spec.id.as_str()).collect::<Vec<_>>(),
+            vec!["a1", "a2"]
+        );
+        assert_eq!(q.pop_batch(8).unwrap()[0].spec.id, "x");
+        assert_eq!(q.pop_batch(8).unwrap()[0].spec.id, "a3");
+    }
+
+    #[test]
+    fn max_batch_bounds_the_coalesced_run() {
+        let q = AdmissionQueue::new(16, 1 << 20);
+        for i in 0..5 {
+            push(&q, &format!("j{i}"), Priority::Normal);
+        }
+        assert_eq!(q.pop_batch(2).unwrap().len(), 2);
+        assert_eq!(q.pop_batch(2).unwrap().len(), 2);
+        assert_eq!(q.pop_batch(2).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn job_cap_rejects_with_retry_hint() {
+        let q = AdmissionQueue::new(2, 1 << 20);
+        push(&q, "a", Priority::Normal);
+        push(&q, "b", Priority::Normal);
+        match push(&q, "c", Priority::Normal) {
+            Admission::Rejected { reason, retry_after_ms } => {
+                assert!(reason.contains("queue full"), "{reason}");
+                assert!(retry_after_ms > 0);
+            }
+            other => panic!("expected reject, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn byte_admission_rejects_and_release_readmits() {
+        // one 8-cell job costs 3*8*8 = 192 bytes
+        let q = AdmissionQueue::new(16, 200);
+        assert!(matches!(push(&q, "a", Priority::Normal), Admission::Admitted(_)));
+        match push(&q, "b", Priority::Normal) {
+            Admission::Rejected { reason, retry_after_ms } => {
+                assert!(reason.contains("memory admission"), "{reason}");
+                assert!(retry_after_ms > 0);
+            }
+            other => panic!("expected memory reject, got {other:?}"),
+        }
+        // popping does NOT free the budget — the job is still in flight
+        let batch = q.pop_batch(1).unwrap();
+        assert!(matches!(push(&q, "c", Priority::Normal), Admission::Rejected { .. }));
+        q.release(batch[0].cost_bytes);
+        assert!(matches!(push(&q, "d", Priority::Normal), Admission::Admitted(_)));
+    }
+
+    #[test]
+    fn job_that_can_never_fit_gets_do_not_retry_hint() {
+        // an 8-cell job costs 192 bytes; a 100-byte queue can never take it
+        let q = AdmissionQueue::new(16, 100);
+        match push(&q, "whale", Priority::Normal) {
+            Admission::Rejected { reason, retry_after_ms } => {
+                assert!(reason.contains("memory admission"), "{reason}");
+                assert_eq!(retry_after_ms, 0, "retrying a never-fitting job is futile");
+            }
+            other => panic!("expected reject, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn start_seq_follows_pop_order_within_class() {
+        let q = AdmissionQueue::new(16, 1 << 20);
+        push(&q, "n1", Priority::Normal);
+        push(&q, "i1", Priority::Interactive);
+        push(&q, "i2", Priority::Interactive);
+        // interactive batch pops first: start_seqs 0, 1 in admit order
+        let batch = q.pop_batch(8).unwrap();
+        assert_eq!(
+            batch.iter().map(|j| (j.spec.id.as_str(), j.start_seq)).collect::<Vec<_>>(),
+            vec![("i1", 0), ("i2", 1)]
+        );
+        assert_eq!(q.pop_batch(8).unwrap()[0].start_seq, 2);
+    }
+
+    #[test]
+    fn close_drains_then_returns_none_and_rejects_pushes() {
+        let q = AdmissionQueue::new(16, 1 << 20);
+        push(&q, "a", Priority::Normal);
+        q.close();
+        match push(&q, "late", Priority::Normal) {
+            Admission::Rejected { reason, retry_after_ms } => {
+                assert!(reason.contains("shutting down"), "{reason}");
+                assert_eq!(retry_after_ms, 0);
+            }
+            other => panic!("expected shutdown reject, got {other:?}"),
+        }
+        assert_eq!(q.pop_batch(4).unwrap()[0].spec.id, "a");
+        assert!(q.pop_batch(4).is_none(), "drained + closed must end the consumer");
+    }
+
+    #[test]
+    fn pop_blocks_until_push_arrives() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(4, 1 << 20));
+        let q2 = q.clone();
+        let popper = std::thread::spawn(move || q2.pop_batch(1).map(|b| b[0].spec.id.clone()));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        push(&q, "late-arrival", Priority::Batch);
+        assert_eq!(popper.join().unwrap().as_deref(), Some("late-arrival"));
+    }
+
+    #[test]
+    fn admit_seq_is_monotonic_across_classes() {
+        let q = AdmissionQueue::new(16, 1 << 20);
+        let seqs: Vec<u64> = [Priority::Batch, Priority::Interactive, Priority::Normal]
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| match push(&q, &format!("s{i}"), p) {
+                Admission::Admitted(s) => s,
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        assert_eq!(seqs, vec![0, 1, 2]);
+    }
+}

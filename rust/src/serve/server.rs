@@ -1,0 +1,397 @@
+//! Zero-dependency TCP front end: one JSON job per line in, one JSON
+//! reply per line out, **in request order per connection** (requests may
+//! be pipelined; replies never reorder).  Two bare-word commands ride
+//! the same framing:
+//!
+//! * `STATS` — one JSON line: queue depths, per-session shares and
+//!   cache counters, latency percentiles;
+//! * `SHUTDOWN` — acks, stops admission, lets the dispatchers drain
+//!   every queued job, then closes the listener.
+//!
+//! A malformed or invalid line yields a structured `{"ok":false,...}`
+//! reply and the connection stays open — a typo must never cost a
+//! client its pipelined jobs.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+use crate::coordinator::{NativeWorker, Worker, XlaWorker};
+use crate::runtime::XlaService;
+
+use super::batcher::{ExecConfig, Executor, WorkerFactory};
+use super::job::{JobResult, JobSpec};
+use super::queue::{Admission, AdmissionQueue};
+use super::stats::ServeStats;
+
+/// Server policy — every knob has a CLI flag on `tetris serve`.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks a free port (see [`ServerHandle::addr`]).
+    pub addr: String,
+    /// Dispatcher threads (`--workers`): concurrent batches in flight.
+    pub dispatchers: usize,
+    /// Admission cap in queued jobs (`--queue`).
+    pub queue_jobs: usize,
+    /// Admission cap on in-flight bytes.
+    pub queue_bytes: usize,
+    /// Max jobs coalesced into one multi-field dispatch (`--batch`).
+    pub max_batch: usize,
+    /// Engine threads for factory-built native workers.
+    pub threads: usize,
+    /// In-run retune cadence for session schedulers (`--adapt`).
+    pub adapt_every: usize,
+    /// Session partition-cache invalidation threshold (`--drift`).
+    pub drift_threshold: f64,
+    /// Default problem scale for benches without an explicit shape.
+    pub scale: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7466".into(),
+            dispatchers: 2,
+            queue_jobs: 64,
+            queue_bytes: 1 << 30,
+            max_batch: 8,
+            threads: 2,
+            adapt_every: 2,
+            drift_threshold: 0.25,
+            scale: 0.25,
+        }
+    }
+}
+
+/// Default worker mix for a new session: the AOT artifact worker rides
+/// along when the artifacts exist *and* fit the session's geometry
+/// (fused steps == session Tb, matching non-split dims, unit-aligned
+/// rows); otherwise two native workers serve alone.  The artifact-less
+/// CI container therefore serves fine — with a one-line warning instead
+/// of a refusal.
+pub fn default_worker_factory(threads: usize) -> WorkerFactory {
+    Arc::new(move |bench, shape, tb| {
+        let native = |eng: &str, t: usize| -> Result<Box<dyn Worker>> {
+            Ok(Box::new(NativeWorker::new(
+                crate::engine::by_name(eng, t)
+                    .with_context(|| format!("unknown engine {eng}"))?,
+                1 << 33,
+            )))
+        };
+        match XlaService::spawn_default() {
+            Ok(svc) => {
+                if let Some(xla) = compatible_artifact(&svc, bench, shape, tb) {
+                    return Ok(vec![native("tetris-cpu", threads)?, xla]);
+                }
+                Ok(vec![native("tetris-cpu", threads)?, native("simd", 1)?])
+            }
+            Err(e) => {
+                eprintln!(
+                    "tetris serve: artifacts unavailable ({e}); \
+                     falling back to two native workers"
+                );
+                Ok(vec![native("tetris-cpu", threads)?, native("simd", 1)?])
+            }
+        }
+    })
+}
+
+fn compatible_artifact(
+    svc: &XlaService,
+    bench: &str,
+    shape: &[usize],
+    tb: usize,
+) -> Option<Box<dyn Worker>> {
+    let worker = XlaWorker::new(svc.clone(), &format!("{bench}_block"), 1 << 33).ok()?;
+    let meta = worker.meta.clone();
+    let fits = meta.steps == tb
+        && shape.len() == meta.unit_core.len()
+        && shape[0] % worker.unit() == 0
+        && shape[1..] == meta.unit_core[1..];
+    fits.then(|| Box::new(worker) as Box<dyn Worker>)
+}
+
+/// Replies enqueued to per-connection writers but not yet written to
+/// their sockets.  `ServerHandle::join` waits (bounded) for this to hit
+/// zero so drained-job replies are flushed before the process exits.
+type Pending = Arc<(Mutex<u64>, Condvar)>;
+
+/// A running server: listener + dispatcher threads.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    queue: Arc<AdmissionQueue>,
+    shutdown: Arc<AtomicBool>,
+    pending: Pending,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Initiate the same sequence as a `SHUTDOWN` line: stop admission,
+    /// drain, close the listener.
+    pub fn shutdown(&self) {
+        trigger_shutdown(&self.shutdown, &self.queue, self.addr);
+    }
+
+    /// Wait for the drain to finish and every server thread to exit,
+    /// then give the per-connection writers a bounded window to flush
+    /// every already-produced reply to its socket (a stalled client
+    /// can delay exit by at most ~5s, never block it).
+    pub fn join(mut self) {
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        let (lock, cv) = &*self.pending;
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            n = cv.wait_timeout(n, deadline - now).unwrap().0;
+        }
+    }
+}
+
+fn trigger_shutdown(shutdown: &AtomicBool, queue: &AdmissionQueue, addr: SocketAddr) {
+    shutdown.store(true, Ordering::SeqCst);
+    queue.close();
+    // Wake the accept loop so it observes the flag.
+    let _ = TcpStream::connect(addr);
+}
+
+/// Shared connection context.
+struct Ctx {
+    queue: Arc<AdmissionQueue>,
+    exec: Arc<Executor>,
+    stats: Arc<Mutex<ServeStats>>,
+    shutdown: Arc<AtomicBool>,
+    pending: Pending,
+    addr: SocketAddr,
+    scale: f64,
+}
+
+pub struct Server;
+
+impl Server {
+    /// Bind, spawn the dispatchers and the accept loop, return a handle.
+    pub fn start(cfg: ServeConfig, factory: WorkerFactory) -> Result<ServerHandle> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let queue = Arc::new(AdmissionQueue::new(cfg.queue_jobs, cfg.queue_bytes));
+        let stats = Arc::new(Mutex::new(ServeStats::new()));
+        let exec = Arc::new(Executor::new(
+            queue.clone(),
+            stats.clone(),
+            ExecConfig {
+                scale: cfg.scale,
+                threads: cfg.threads,
+                adapt_every: cfg.adapt_every,
+                drift_threshold: cfg.drift_threshold,
+            },
+            factory,
+        ));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut threads = Vec::new();
+        for d in 0..cfg.dispatchers.max(1) {
+            let exec = exec.clone();
+            let max_batch = cfg.max_batch;
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("tetris-dispatch-{d}"))
+                    .spawn(move || exec.dispatch_loop(max_batch))?,
+            );
+        }
+        let pending: Pending = Arc::new((Mutex::new(0), Condvar::new()));
+        let ctx = Arc::new(Ctx {
+            queue: queue.clone(),
+            exec,
+            stats,
+            shutdown: shutdown.clone(),
+            pending: pending.clone(),
+            addr,
+            scale: cfg.scale,
+        });
+        threads.push(
+            std::thread::Builder::new()
+                .name("tetris-accept".into())
+                .spawn(move || accept_loop(listener, ctx))?,
+        );
+        Ok(ServerHandle { addr, queue, shutdown, pending, threads })
+    }
+}
+
+fn accept_loop(listener: TcpListener, ctx: Arc<Ctx>) {
+    for stream in listener.incoming() {
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            break; // the wake-up connection (or a late client) lands here
+        }
+        match stream {
+            Ok(stream) => {
+                let ctx = ctx.clone();
+                let _ = std::thread::Builder::new()
+                    .name("tetris-conn".into())
+                    .spawn(move || {
+                        let _ = handle_conn(stream, &ctx);
+                    });
+            }
+            Err(_) => continue,
+        }
+    }
+}
+
+/// Per-connection protocol loop: a reader thread (this function) admits
+/// work line by line; a writer thread emits one reply line per request
+/// line, strictly in request order, so clients may pipeline freely.
+fn handle_conn(stream: TcpStream, ctx: &Ctx) -> Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let (order_tx, order_rx) = mpsc::channel::<mpsc::Receiver<String>>();
+    let mut out = stream;
+    let pending = ctx.pending.clone();
+    let writer = std::thread::Builder::new().name("tetris-conn-write".into()).spawn(
+        move || {
+            let mut dead = false;
+            for rx in order_rx {
+                let line = rx.recv().unwrap_or_else(|_| {
+                    JobResult::failure("", "internal: reply channel dropped")
+                        .to_json()
+                        .to_string()
+                });
+                // A gone client stops the writes but not the drain: the
+                // pending counter must still reach zero.
+                if !dead && writeln!(out, "{line}").is_err() {
+                    dead = true;
+                }
+                let (lock, cv) = &*pending;
+                *lock.lock().unwrap() -= 1;
+                cv.notify_all();
+            }
+        },
+    )?;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (tx, rx) = mpsc::channel::<String>();
+        *ctx.pending.0.lock().unwrap() += 1;
+        let _ = order_tx.send(rx);
+        match line {
+            "STATS" => {
+                let _ = tx.send(stats_line(ctx).to_string());
+            }
+            "SHUTDOWN" => {
+                let mut ack = BTreeMap::new();
+                ack.insert("ok".to_string(), Json::Bool(true));
+                ack.insert("shutdown".to_string(), Json::Bool(true));
+                let _ = tx.send(Json::Obj(ack).to_string());
+                trigger_shutdown(&ctx.shutdown, &ctx.queue, ctx.addr);
+            }
+            job_line => handle_job_line(job_line, ctx, tx),
+        }
+    }
+    drop(order_tx);
+    let _ = writer.join();
+    Ok(())
+}
+
+fn handle_job_line(line: &str, ctx: &Ctx, tx: mpsc::Sender<String>) {
+    let spec = match JobSpec::parse_line(line) {
+        Ok(spec) => spec,
+        Err(e) => {
+            ctx.stats.lock().unwrap().errors += 1;
+            let _ = tx.send(JobResult::failure("", format!("{e}")).to_json().to_string());
+            return;
+        }
+    };
+    let default_shape = match crate::stencil::spec::get(&spec.bench) {
+        Some(_) => crate::bench::scaled_problem(&spec.bench, ctx.scale).0,
+        None => {
+            ctx.stats.lock().unwrap().errors += 1;
+            let reply = JobResult::failure(&spec.id, format!("unknown bench {:?}", spec.bench));
+            let _ = tx.send(reply.to_json().to_string());
+            return;
+        }
+    };
+    // Footprint check on the *declared* shape BEFORE any allocation: a
+    // hostile `{"shape":[100000,100000]}` must be bounced by admission
+    // arithmetic, never by an OOM abort.  Overflowing the byte count is
+    // an automatic reject.
+    let shape = spec.shape.as_deref().unwrap_or(&default_shape);
+    let declared_bytes = shape
+        .iter()
+        .try_fold(1usize, |a, &n| a.checked_mul(n.max(1)))
+        .and_then(|cells| cells.checked_mul(3 * 8));
+    match declared_bytes {
+        Some(b) if b <= ctx.queue.max_bytes => {}
+        _ => {
+            ctx.stats.lock().unwrap().rejected += 1;
+            let reply = JobResult::reject(
+                &spec.id,
+                format!(
+                    "memory admission: shape {shape:?} needs more than the queue's {} bytes",
+                    ctx.queue.max_bytes
+                ),
+                0,
+            );
+            let _ = tx.send(reply.to_json().to_string());
+            return;
+        }
+    }
+    let input = match spec.materialize(&default_shape) {
+        Ok(input) => input,
+        Err(e) => {
+            ctx.stats.lock().unwrap().errors += 1;
+            let _ = tx.send(JobResult::failure(&spec.id, format!("{e}")).to_json().to_string());
+            return;
+        }
+    };
+    let id = spec.id.clone();
+    match ctx.queue.push(spec, input, tx.clone()) {
+        Admission::Admitted(_) => {
+            ctx.stats.lock().unwrap().submitted += 1;
+        }
+        Admission::Rejected { reason, retry_after_ms } => {
+            ctx.stats.lock().unwrap().rejected += 1;
+            let reply = JobResult::reject(&id, reason, retry_after_ms);
+            let _ = tx.send(reply.to_json().to_string());
+        }
+    }
+}
+
+fn stats_line(ctx: &Ctx) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("ok".to_string(), Json::Bool(true));
+    let mut q = BTreeMap::new();
+    q.insert(
+        "depths".to_string(),
+        Json::Arr(ctx.queue.depths().into_iter().map(|d| Json::Num(d as f64)).collect()),
+    );
+    q.insert("inflight_bytes".to_string(), Json::Num(ctx.queue.inflight_bytes() as f64));
+    q.insert("closed".to_string(), Json::Bool(ctx.queue.is_closed()));
+    m.insert("queue".to_string(), Json::Obj(q));
+    let mut sessions = BTreeMap::new();
+    for (key, meta) in ctx.exec.session_meta() {
+        let mut s = BTreeMap::new();
+        s.insert(
+            "shares".to_string(),
+            Json::Arr(meta.shares.iter().map(|&x| Json::Num(x as f64)).collect()),
+        );
+        s.insert("jobs".to_string(), Json::Num(meta.jobs as f64));
+        s.insert("cache_hits".to_string(), Json::Num(meta.cache_hits as f64));
+        s.insert("invalidations".to_string(), Json::Num(meta.invalidations as f64));
+        sessions.insert(key, Json::Obj(s));
+    }
+    m.insert("sessions".to_string(), Json::Obj(sessions));
+    m.insert("stats".to_string(), ctx.stats.lock().unwrap().to_json());
+    Json::Obj(m)
+}

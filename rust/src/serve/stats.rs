@@ -1,0 +1,135 @@
+//! Serving counters + a log₂-bucketed latency histogram (`STATS` line).
+//!
+//! Latencies land in power-of-two microsecond buckets (bucket *i* holds
+//! `[2^i, 2^{i+1})` µs), so percentiles are exact to a factor of two
+//! over nine decades with a fixed 40-slot table — no allocation, no
+//! sorting, O(1) record on the completion path.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+const BUCKETS: usize = 40;
+
+/// Counters + end-to-end (admission -> reply) latency histogram.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    /// Malformed / invalid request lines answered with structured errors.
+    pub errors: u64,
+    /// Multi-field dispatches executed (a batch of 1 still counts).
+    pub batches: u64,
+    /// Jobs that rode a batch of width >= 2.
+    pub batched_jobs: u64,
+    buckets: [u64; BUCKETS],
+    count: u64,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats::default()
+    }
+
+    pub fn record_latency(&mut self, d: Duration) {
+        let us = (d.as_micros() as u64).max(1);
+        let b = (us.ilog2() as usize).min(BUCKETS - 1);
+        self.buckets[b] += 1;
+        self.count += 1;
+    }
+
+    /// Upper bound (ms) of the bucket holding the p-quantile (`0<p<=1`);
+    /// 0 when nothing has been recorded.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return (1u64 << (i + 1)) as f64 / 1_000.0;
+            }
+        }
+        (1u64 << BUCKETS) as f64 / 1_000.0
+    }
+
+    pub fn latency_count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("submitted".into(), Json::Num(self.submitted as f64));
+        m.insert("completed".into(), Json::Num(self.completed as f64));
+        m.insert("rejected".into(), Json::Num(self.rejected as f64));
+        m.insert("errors".into(), Json::Num(self.errors as f64));
+        m.insert("batches".into(), Json::Num(self.batches as f64));
+        m.insert("batched_jobs".into(), Json::Num(self.batched_jobs as f64));
+        let mut lat = BTreeMap::new();
+        lat.insert("count".into(), Json::Num(self.count as f64));
+        lat.insert("p50_ms".into(), Json::Num(self.percentile_ms(0.50)));
+        lat.insert("p90_ms".into(), Json::Num(self.percentile_ms(0.90)));
+        lat.insert("p99_ms".into(), Json::Num(self.percentile_ms(0.99)));
+        m.insert("latency".into(), Json::Obj(lat));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let s = ServeStats::new();
+        assert_eq!(s.percentile_ms(0.5), 0.0);
+        assert_eq!(s.latency_count(), 0);
+    }
+
+    #[test]
+    fn percentiles_bracket_uniform_latencies() {
+        let mut s = ServeStats::new();
+        for _ in 0..100 {
+            s.record_latency(Duration::from_micros(1_500)); // bucket [1024, 2048)
+        }
+        let p50 = s.percentile_ms(0.50);
+        assert!((1.5..=2.048).contains(&p50), "{p50}");
+        assert_eq!(s.percentile_ms(0.99), p50, "single-bucket distribution");
+    }
+
+    #[test]
+    fn tail_is_separated_from_the_body() {
+        let mut s = ServeStats::new();
+        for _ in 0..99 {
+            s.record_latency(Duration::from_micros(100));
+        }
+        s.record_latency(Duration::from_millis(80));
+        assert!(s.percentile_ms(0.50) < 1.0);
+        assert!(s.percentile_ms(0.995) > 50.0);
+    }
+
+    #[test]
+    fn extreme_latencies_clamp_into_range() {
+        let mut s = ServeStats::new();
+        s.record_latency(Duration::ZERO);
+        s.record_latency(Duration::from_secs(1 << 30));
+        assert_eq!(s.latency_count(), 2);
+        assert!(s.percentile_ms(1.0) > 0.0);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut s = ServeStats::new();
+        s.submitted = 5;
+        s.completed = 4;
+        s.record_latency(Duration::from_millis(3));
+        let j = s.to_json();
+        assert_eq!(j.at(&["submitted"]).as_usize(), Some(5));
+        assert_eq!(j.at(&["latency", "count"]).as_usize(), Some(1));
+        assert!(j.at(&["latency", "p99_ms"]).as_f64().unwrap() > 0.0);
+    }
+}

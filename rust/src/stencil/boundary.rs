@@ -62,6 +62,17 @@ impl Boundary {
             _ => 0.0,
         }
     }
+
+    /// The condition's family, ignoring parameters — Dirichlet runs cost
+    /// the same whatever the wall value, so serving sessions key their
+    /// cached partition on the kind, not the exact condition.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Boundary::Dirichlet(_) => "dirichlet",
+            Boundary::Neumann => "neumann",
+            Boundary::Periodic => "periodic",
+        }
+    }
 }
 
 impl std::fmt::Display for Boundary {

@@ -1,0 +1,331 @@
+//! End-to-end tests of the `tetris serve` subsystem over real TCP:
+//! the acceptance bit-compare (server results == direct scheduler runs),
+//! protocol robustness (golden files, unknown fields, malformed lines),
+//! admission backpressure, multi-client concurrency with FIFO-within-
+//! class ordering, and graceful drain on `SHUTDOWN`.
+
+use std::sync::Arc;
+
+use tetris::coordinator::{CommModel, NativeWorker, Partition, Scheduler, Worker};
+use tetris::serve::{
+    Client, JobResult, JobSpec, Priority, ServeConfig, Server, ServerHandle, WorkerFactory,
+};
+use tetris::stencil::{Boundary, Field};
+
+/// Two plain `simd` workers everywhere: the fused row kernel computes
+/// every cell from its window in fixed tap order, so results are
+/// bit-invariant under any slab decomposition — which lets the tests
+/// bit-compare against a direct single-worker scheduler run no matter
+/// what partition the session profiled or retuned to.
+fn simd_factory() -> WorkerFactory {
+    Arc::new(|_bench, _shape, _tb| {
+        let mk = || -> Box<dyn Worker> {
+            Box::new(NativeWorker::new(tetris::engine::by_name("simd", 1).unwrap(), 1 << 33))
+        };
+        Ok(vec![mk(), mk()])
+    })
+}
+
+fn start_server(cfg: ServeConfig) -> ServerHandle {
+    Server::start(cfg, simd_factory()).expect("server start")
+}
+
+fn direct_run(bench: &str, boundary: Boundary, shape: &[usize], steps: usize, seed: u64) -> Field {
+    let s = tetris::stencil::spec::get(bench).unwrap();
+    let tb = tetris::bench::scaled_problem(bench, 0.05).2;
+    let sched = Scheduler {
+        spec: s,
+        tb,
+        workers: vec![Box::new(NativeWorker::new(
+            tetris::engine::by_name("simd", 1).unwrap(),
+            1 << 33,
+        ))],
+        partition: Partition { unit: shape[0], shares: vec![1] },
+        comm_model: CommModel::default(),
+        boundary,
+        adapt_every: 0,
+    };
+    let core = Field::random(shape, seed);
+    let (out, _) = sched.run(&core, steps).unwrap();
+    out
+}
+
+/// Acceptance: boot the server in-process, submit boundary-diverse jobs
+/// over TCP with `return_field`, and bit-compare every returned field
+/// against the corresponding direct `Scheduler` run.
+#[test]
+fn e2e_tcp_results_bit_match_direct_scheduler_runs() {
+    let handle = start_server(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatchers: 2,
+        scale: 0.05,
+        ..Default::default()
+    });
+    let mut client = Client::connect(handle.addr).unwrap();
+    let cases: [(Boundary, u64); 3] = [
+        (Boundary::Dirichlet(25.0), 201),
+        (Boundary::Neumann, 202),
+        (Boundary::Periodic, 203),
+    ];
+    let shape = vec![24usize, 16];
+    for (i, (boundary, seed)) in cases.iter().enumerate() {
+        client
+            .send_spec(&JobSpec {
+                id: format!("e2e-{i}"),
+                bench: "heat2d".into(),
+                boundary: *boundary,
+                steps: 8,
+                shape: Some(shape.clone()),
+                seed: *seed,
+                return_field: true,
+                ..Default::default()
+            })
+            .unwrap();
+    }
+    for (i, (boundary, seed)) in cases.iter().enumerate() {
+        let r = client.recv_result().unwrap();
+        assert!(r.ok, "{r:?}");
+        assert_eq!(r.id, format!("e2e-{i}"));
+        assert_eq!(r.steps, 8, "heat2d Tb=4 keeps 8 steps as-is");
+        let got = r.field.expect("return_field requested");
+        let want = direct_run("heat2d", *boundary, &shape, r.steps, *seed);
+        assert_eq!(got.len(), want.len());
+        for (j, (a, b)) in got.iter().zip(want.data()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{boundary}: cell {j} differs: {a} vs {b}"
+            );
+        }
+        assert_eq!(r.mean.to_bits(), want.mean().to_bits(), "{boundary}");
+    }
+    client.shutdown().unwrap();
+    handle.join();
+}
+
+/// Golden wire format: parse the checked-in request line (which carries
+/// unknown future fields), confirm every known field, and round-trip it.
+#[test]
+fn golden_jobspec_round_trips_with_unknown_fields() {
+    let line = include_str!("golden/jobspec.json");
+    let spec = JobSpec::parse_line(line).unwrap();
+    assert_eq!(spec.id, "golden-42");
+    assert_eq!(spec.bench, "heat2d");
+    assert_eq!(spec.boundary, Boundary::Neumann);
+    assert_eq!(spec.priority, Priority::Interactive);
+    assert_eq!(spec.steps, 8);
+    assert_eq!(spec.shape.as_deref(), Some(&[24usize, 16][..]));
+    assert_eq!(spec.seed, 7);
+    assert!(spec.return_field);
+    // round trip through our own serializer
+    let again = JobSpec::parse_line(&spec.to_json().to_string()).unwrap();
+    assert_eq!(again, spec);
+}
+
+#[test]
+fn golden_jobresult_round_trips_field_bits() {
+    let line = include_str!("golden/jobresult.json");
+    let r = JobResult::parse_line(line).unwrap();
+    assert!(r.ok);
+    assert_eq!(r.id, "golden-42");
+    assert_eq!(r.boundary, "dirichlet:25");
+    assert_eq!(r.batch_size, 4);
+    assert_eq!(r.admit_seq, 11);
+    assert_eq!(r.start_seq, 9);
+    assert_eq!(r.shares, vec![13, 11]);
+    let field = r.field.clone().unwrap();
+    assert_eq!(field.len(), 6);
+    assert_eq!(field[0].to_bits(), (0.30000000000000004f64).to_bits());
+    assert_eq!(field[1].to_bits(), (1.0f64 / 3.0).to_bits());
+    assert_eq!(field[2], 6.02e23);
+    // round trip through our own serializer preserves every bit
+    let again = JobResult::parse_line(&r.to_json().to_string()).unwrap();
+    assert_eq!(again, r);
+}
+
+/// A malformed line gets a structured error reply and the connection
+/// stays open for the next (valid) request; same for an unknown bench.
+#[test]
+fn malformed_lines_answer_structured_errors_and_keep_connection() {
+    let handle = start_server(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatchers: 1,
+        scale: 0.05,
+        ..Default::default()
+    });
+    let mut client = Client::connect(handle.addr).unwrap();
+
+    client.send_line("{this is not json").unwrap();
+    let r = client.recv_result().unwrap();
+    assert!(!r.ok);
+    assert!(r.error.unwrap().contains("parse"), "parse failure must be named");
+
+    client.send_line(r#"{"bench":"warpdrive9000"}"#).unwrap();
+    let r = client.recv_result().unwrap();
+    assert!(!r.ok);
+    assert!(r.error.unwrap().contains("warpdrive9000"));
+
+    client.send_line(r#"{"bench":"heat2d","shape":[5],"steps":4}"#).unwrap();
+    let r = client.recv_result().unwrap();
+    assert!(!r.ok, "1-d shape for a 2-d bench must be rejected");
+
+    // the connection survived all three: a real job still works
+    let r = client
+        .submit(&JobSpec {
+            id: "after-errors".into(),
+            bench: "heat1d".into(),
+            shape: Some(vec![24]),
+            steps: 8,
+            ..Default::default()
+        })
+        .unwrap();
+    assert!(r.ok, "{r:?}");
+    assert_eq!(r.id, "after-errors");
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.at(&["stats", "errors"]).as_usize(), Some(3));
+    assert_eq!(stats.at(&["stats", "completed"]).as_usize(), Some(1));
+    client.shutdown().unwrap();
+    handle.join();
+}
+
+/// Memory admission failure surfaces as a structured reject, not a
+/// hang, a dropped line, or (for hostile shapes) an OOM: the footprint
+/// check runs on the declared shape before any allocation, and a job
+/// that can never fit gets `retry_after_ms: 0` ("do not retry").
+#[test]
+fn memory_admission_rejects_before_allocating() {
+    let handle = start_server(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatchers: 1,
+        queue_bytes: 1, // nothing fits
+        scale: 0.05,
+        ..Default::default()
+    });
+    let mut client = Client::connect(handle.addr).unwrap();
+    let r = client
+        .submit(&JobSpec {
+            id: "too-big".into(),
+            bench: "heat1d".into(),
+            shape: Some(vec![24]),
+            ..Default::default()
+        })
+        .unwrap();
+    assert!(!r.ok);
+    assert!(r.error.unwrap().contains("memory admission"));
+    assert_eq!(r.retry_after_ms, Some(0), "a never-fitting job must not be retried");
+    // A shape whose byte count overflows usize is bounced the same way
+    // — admission arithmetic, not an allocation attempt.
+    client
+        .send_line(r#"{"bench":"heat1d","id":"hostile","shape":[18446744073709551615]}"#)
+        .unwrap();
+    let r = client.recv_result().unwrap();
+    assert!(!r.ok);
+    assert!(r.error.unwrap().contains("memory admission"), "{:?}", r.id);
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.at(&["stats", "rejected"]).as_usize(), Some(2));
+    client.shutdown().unwrap();
+    handle.join();
+}
+
+/// Concurrency smoke (satellite): 4 client threads x 8 jobs with mixed
+/// priorities against one single-dispatcher server — every job answers
+/// (no lost results), and dispatch order is FIFO within each priority
+/// class; then a clean `SHUTDOWN` drains pipelined jobs before the
+/// listener closes.
+#[test]
+fn concurrent_clients_keep_fifo_within_class_and_drain_on_shutdown() {
+    // start_seq is assigned at queue pop (under the queue lock), so the
+    // FIFO-within-class check would hold for any dispatcher count; one
+    // dispatcher just keeps the rest of the scenario deterministic.
+    let handle = start_server(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatchers: 1,
+        scale: 0.05,
+        ..Default::default()
+    });
+    let addr = handle.addr;
+    let priorities = [Priority::Interactive, Priority::Normal, Priority::Batch];
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            for j in 0..8u64 {
+                client
+                    .send_spec(&JobSpec {
+                        id: format!("c{t}-{j}"),
+                        bench: "heat1d".into(),
+                        shape: Some(vec![24]),
+                        steps: 8,
+                        seed: 1_000 + t * 8 + j,
+                        priority: priorities[(t as usize + j as usize) % 3],
+                        ..Default::default()
+                    })
+                    .unwrap();
+            }
+            (0..8).map(|_| client.recv_result().unwrap()).collect::<Vec<_>>()
+        }));
+    }
+    let mut all: Vec<JobResult> = Vec::new();
+    for j in joins {
+        all.extend(j.join().unwrap());
+    }
+    assert_eq!(all.len(), 32, "no lost results");
+    assert!(all.iter().all(|r| r.ok), "{all:?}");
+    let mut ids: Vec<&str> = all.iter().map(|r| r.id.as_str()).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 32, "every job answered exactly once");
+    for class in ["interactive", "normal", "batch"] {
+        let mut in_class: Vec<&JobResult> =
+            all.iter().filter(|r| r.priority == class).collect();
+        assert!(!in_class.is_empty());
+        in_class.sort_by_key(|r| r.admit_seq);
+        for w in in_class.windows(2) {
+            assert!(
+                w[0].start_seq < w[1].start_seq,
+                "{class}: admit order {} -> {} dispatched {} -> {}",
+                w[0].admit_seq,
+                w[1].admit_seq,
+                w[0].start_seq,
+                w[1].start_seq
+            );
+        }
+    }
+
+    // Clean shutdown with work still pipelined on one connection: the
+    // jobs were admitted before the SHUTDOWN line (in-order processing),
+    // so the pool drains them all before the server exits.
+    let mut client = Client::connect(addr).unwrap();
+    for j in 0..5u64 {
+        client
+            .send_spec(&JobSpec {
+                id: format!("drain-{j}"),
+                bench: "heat1d".into(),
+                shape: Some(vec![24]),
+                steps: 8,
+                seed: 9_000 + j,
+                ..Default::default()
+            })
+            .unwrap();
+    }
+    client.send_line("SHUTDOWN").unwrap();
+    for j in 0..5u64 {
+        let r = client.recv_result().unwrap();
+        assert!(r.ok, "pipelined job {j} must drain before shutdown: {r:?}");
+        assert_eq!(r.id, format!("drain-{j}"));
+    }
+    let ack = tetris::util::json::Json::parse(client.recv_line().unwrap().trim()).unwrap();
+    assert_eq!(ack.at(&["shutdown"]), &tetris::util::json::Json::Bool(true));
+    handle.join(); // dispatchers drained, listener closed
+
+    // The listener is gone: a fresh connection must fail (or die on the
+    // first read if the OS raced the accept backlog).
+    match Client::connect(addr) {
+        Err(_) => {}
+        Ok(mut late) => {
+            late.send_line("STATS").unwrap_or(());
+            assert!(late.recv_line().is_err(), "server must be gone after join()");
+        }
+    }
+}

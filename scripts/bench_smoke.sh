@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
-# Smoke bench: run the Fig-12 breakdown plus the boundary/adaptive
-# scheduler study at a tiny scale and emit single-line JSON summaries
-# (BENCH_smoke.json, BENCH_boundary.json) so CI can archive the bench
-# trajectory — including the periodic and adaptive paths — every commit.
+# Smoke bench: run the Fig-12 breakdown, the boundary/adaptive scheduler
+# study and the serving-layer study at a tiny scale and emit single-line
+# JSON summaries (BENCH_smoke.json, BENCH_boundary.json, BENCH_serve.json)
+# so CI can archive the bench trajectory every commit.  Then boot a real
+# `tetris serve` on a loopback port, drive 20 mixed-boundary jobs through
+# `tetris submit`, and archive the client-side jobs/sec + p99 as
+# BENCH_serve_live.json.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -11,6 +14,8 @@ SCALE="${TETRIS_SMOKE_SCALE:-0.1}"
 THREADS="${TETRIS_SMOKE_THREADS:-2}"
 OUT="${TETRIS_SMOKE_OUT:-BENCH_smoke.json}"
 BOUNDARY_OUT="${TETRIS_SMOKE_BOUNDARY_OUT:-BENCH_boundary.json}"
+SERVE_OUT="${TETRIS_SMOKE_SERVE_OUT:-BENCH_serve.json}"
+SERVE_LIVE_OUT="${TETRIS_SMOKE_SERVE_LIVE_OUT:-BENCH_serve_live.json}"
 BIN=rust/target/release/tetris
 
 # Always (re)build: with a warm target dir this is incremental and fast,
@@ -23,7 +28,35 @@ cargo build --release --manifest-path rust/Cargo.toml
 # the O(surface) ghost-fill micro-bench).
 "$BIN" bench boundary --scale "$SCALE" --threads "$THREADS" --json "$BOUNDARY_OUT"
 
-for f in "$OUT" "$BOUNDARY_OUT"; do
+# Serving-layer study: session batching (jobs/sec at batch widths 1/4/8
+# on the same job mix — batched must beat unbatched) + a TCP loopback
+# drive with p99, all in-process.
+"$BIN" bench serve --scale "$SCALE" --threads "$THREADS" --json "$SERVE_OUT"
+
+# Live loopback drive through the real server binary: boot `tetris
+# serve` on an ephemeral port, push 20 mixed-boundary jobs via `tetris
+# submit`, archive client-side jobs/sec + p99, then drain cleanly.
+ADDR_FILE="$(mktemp)"
+"$BIN" serve --addr 127.0.0.1:0 --workers 2 --queue 64 \
+  --scale "$SCALE" --threads "$THREADS" --addr-file "$ADDR_FILE" &
+SERVE_PID=$!
+trap 'kill "$SERVE_PID" 2>/dev/null || true' EXIT
+for _ in $(seq 1 100); do
+  [ -s "$ADDR_FILE" ] && break
+  sleep 0.1
+done
+ADDR="$(cat "$ADDR_FILE")"
+[ -n "$ADDR" ] || { echo "tetris serve never published its address" >&2; exit 1; }
+"$BIN" submit --addr "$ADDR" --bench heat2d \
+  --boundary dirichlet:25,neumann,periodic --steps 8 --jobs 20 \
+  --json "$SERVE_LIVE_OUT"
+"$BIN" submit --addr "$ADDR" --stats
+"$BIN" submit --addr "$ADDR" --shutdown
+wait "$SERVE_PID"
+trap - EXIT
+rm -f "$ADDR_FILE"
+
+for f in "$OUT" "$BOUNDARY_OUT" "$SERVE_OUT" "$SERVE_LIVE_OUT"; do
   echo "--- $f ---"
   cat "$f"
 done
