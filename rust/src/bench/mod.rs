@@ -8,7 +8,7 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 use crate::coordinator::{
@@ -102,17 +102,24 @@ fn native(eng: &str, threads: usize) -> Box<dyn Worker> {
     Box::new(NativeWorker::new(crate::engine::by_name(eng, threads).unwrap(), 1 << 33))
 }
 
-/// Build the auto-tuned heterogeneous scheduler for a bench, mixing
-/// tetris-cpu with the XLA block artifact when available.
+/// Build the auto-tuned heterogeneous scheduler for a bench, mixing a
+/// CPU engine (any name from either registry — `tetris-cpu` unless a
+/// plan resolved otherwise) with the XLA block artifact when available.
 pub fn hetero_scheduler(
     rt: &XlaService,
     bench: &str,
     threads: usize,
+    cpu_engine: &str,
 ) -> Result<(Scheduler, Vec<usize>)> {
     let meta = rt.bench(bench)?.clone();
     let s = spec::get(bench).unwrap();
+    let cpu: Box<dyn Worker> = Box::new(NativeWorker::new(
+        crate::plan::resolve_engine(cpu_engine, threads)
+            .with_context(|| format!("unknown engine {cpu_engine}"))?,
+        1 << 33,
+    ));
     let workers: Vec<Box<dyn Worker>> = vec![
-        native("tetris-cpu", threads),
+        cpu,
         Box::new(XlaWorker::new(rt.clone(), &format!("{bench}_block"), 1 << 33)?),
     ];
     let unit_core: Vec<usize> = {
@@ -243,7 +250,7 @@ pub fn run_sota(rt: Option<&XlaService>, scale: f64, threads: usize) -> Vec<(Str
                     extra: "xla block artifact".into(),
                 });
             }
-            if let Ok((sched, global)) = hetero_scheduler(rt, name, threads) {
+            if let Ok((sched, global)) = hetero_scheduler(rt, name, threads, "tetris-cpu") {
                 let core_f = Field::random(&global, 0xF00D);
                 let total = sched.tb * 2;
                 if let Ok((g, m)) = time_scheduler(&sched, &core_f, total) {
@@ -294,7 +301,7 @@ pub fn run_scaling(rt: Option<&XlaService>, scale: f64, max_threads: usize) -> V
             t *= 2;
         }
         if let Some(rt) = rt {
-            if let Ok((sched, _)) = hetero_scheduler(rt, bench, max_threads) {
+            if let Ok((sched, _)) = hetero_scheduler(rt, bench, max_threads, "tetris-cpu") {
                 let ratio = sched.partition.ratio(sched.partition.shares.len() - 1);
                 rows.push(Row {
                     label: "hetero (tuned)".into(),
@@ -510,6 +517,96 @@ fn serve_loopback_drive(scale: f64, threads: usize) -> Result<Row> {
     })
 }
 
+/// Planned-execution study: what `--engine auto` resolves to vs fixed
+/// engines on heat2d/heat3d.  Fixed rungs run first (speedups are
+/// relative to fixed `tetris-cpu`); the `auto` rung resolves through a
+/// plan store — `store_path` when given (so a pre-run `tetris tune`
+/// shows up as a warm start/cache hit), else a throwaway in the temp
+/// dir — and then times the winning configuration on the full-scale
+/// problem.  CI archives this as `BENCH_plan.json`, tracking the
+/// advantage (or cost) of planned execution over time.
+pub fn run_plan(scale: f64, threads: usize, store_path: Option<&str>) -> Vec<(String, Vec<Row>)> {
+    use crate::plan::{resolve_auto, Fingerprint, PlanStore, SearchConfig};
+    let store = match store_path {
+        Some(p) => PlanStore::open(p),
+        None => {
+            let tmp = std::env::temp_dir()
+                .join(format!("tetris-bench-plans-{}.jsonl", std::process::id()));
+            let _ = std::fs::remove_file(&tmp);
+            PlanStore::open(tmp)
+        }
+    };
+    let fp = Fingerprint::detect(100);
+    let mut out = Vec::new();
+    for bench in ["heat2d", "heat3d"] {
+        let s = spec::get(bench).unwrap();
+        let (core, steps, tb) = scaled_problem(bench, scale);
+        let mut rows = Vec::new();
+        let mut base = 0.0;
+        for eng_name in ["tetris-cpu", "simd"] {
+            let t = if eng_name == "tetris-cpu" { threads } else { 1 };
+            let eng = crate::engine::by_name(eng_name, t).unwrap();
+            let (g, _) = time_engine(eng.as_ref(), &s, &core, steps, tb);
+            if base == 0.0 {
+                base = g;
+            }
+            rows.push(Row {
+                label: eng_name.into(),
+                gstencils: g,
+                speedup: g / base.max(1e-12),
+                extra: format!("fixed Tb={tb}"),
+            });
+        }
+        let cfg = SearchConfig { budget_ms: 400, seed: 1, ..Default::default() };
+        let auto_row = match resolve_auto(&store, &fp, bench, "dirichlet", &core, steps, &cfg) {
+            Ok(res) => {
+                let p = &res.plan;
+                match p.candidate().build() {
+                    Some(eng) => {
+                        let tbp = p.tb.max(1);
+                        let stepsp = steps.max(1).div_ceil(tbp) * tbp;
+                        let (g, _) = time_engine(eng.as_ref(), &s, &core, stepsp, tbp);
+                        Row {
+                            label: "auto".into(),
+                            gstencils: g,
+                            speedup: g / base.max(1e-12),
+                            extra: format!(
+                                "plan: {} threads={} Tb={} ({})",
+                                p.engine,
+                                p.threads,
+                                p.tb,
+                                if res.cached {
+                                    "cached"
+                                } else if res.warmed {
+                                    "warm-start"
+                                } else {
+                                    "tuned"
+                                }
+                            ),
+                        }
+                    }
+                    None => Row {
+                        label: "auto".into(),
+                        gstencils: 0.0,
+                        speedup: 0.0,
+                        extra: format!("ERROR: plan names unknown engine {:?}", p.engine),
+                    },
+                }
+            }
+            Err(e) => Row {
+                label: "auto".into(),
+                gstencils: 0.0,
+                speedup: 0.0,
+                extra: format!("ERROR: {e}"),
+            },
+        };
+        rows.push(auto_row);
+        print_table(&format!("plan: auto vs fixed engines ({bench})"), &rows);
+        out.push((bench.to_string(), rows));
+    }
+    out
+}
+
 /// §5.3 communication study: centralized vs per-step launch cost.
 pub fn run_comm() -> Vec<Row> {
     let m = CommModel::default();
@@ -697,6 +794,34 @@ mod tests {
         assert!(batching[0].at(&["extra"]).as_str().unwrap().contains("jobs/sec"));
         let loopback = back.at(&["sections", "tcp-loopback"]).as_arr().unwrap();
         assert!(loopback[0].at(&["extra"]).as_str().unwrap().contains("p99"));
+    }
+
+    /// The plan section must produce a real `auto` rung (plan resolved,
+    /// engine timed) next to the fixed rows, and serialize for CI; a
+    /// second pass over the same store must report a cache hit.
+    #[test]
+    fn plan_section_resolves_auto_and_hits_cache_on_rerun() {
+        let path = std::env::temp_dir()
+            .join(format!("tetris-bench-plan-test-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let p = path.to_string_lossy().into_owned();
+        let sections = run_plan(0.03, 1, Some(&p));
+        assert_eq!(sections.len(), 2);
+        for (name, rows) in &sections {
+            assert_eq!(rows.len(), 3, "{name}: {rows:?}");
+            let auto = rows.iter().find(|r| r.label == "auto").unwrap();
+            assert!(auto.gstencils > 0.0, "{name}: {auto:?}");
+            assert!(auto.extra.contains("plan:"), "{name}: {auto:?}");
+        }
+        let j = summary_json("plan", 0.03, 1, &sections);
+        assert!(j.to_string().contains("auto"));
+        // same store, second run: both benches resolve from cache
+        let again = run_plan(0.03, 1, Some(&p));
+        for (name, rows) in &again {
+            let auto = rows.iter().find(|r| r.label == "auto").unwrap();
+            assert!(auto.extra.contains("cached"), "{name}: {auto:?}");
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

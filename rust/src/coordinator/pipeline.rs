@@ -42,6 +42,31 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// Build a scheduler for a `rows`-row domain from a tuned execution
+    /// plan's Tb: one slab per worker, even row-granular split (the
+    /// §5.2 profile/retune machinery refines it at run time), default
+    /// comm model.  The shared constructor behind `tetris run`'s
+    /// scheduler mode and the plan-resolved `--engine auto` path.
+    pub fn from_plan(
+        spec: StencilSpec,
+        tb: usize,
+        workers: Vec<Box<dyn Worker>>,
+        rows: usize,
+        boundary: Boundary,
+        adapt_every: usize,
+    ) -> Scheduler {
+        let n = workers.len().max(1);
+        Scheduler {
+            spec,
+            tb: tb.max(1),
+            workers,
+            partition: Partition::balanced(1, rows, &vec![1.0; n], &vec![rows; n]),
+            comm_model: CommModel::default(),
+            boundary,
+            adapt_every,
+        }
+    }
+
     /// Evolve `core` by `total_steps` (a multiple of Tb) under
     /// `self.boundary`.  Returns the final core and run metrics.
     pub fn run(&self, core: &Field, total_steps: usize) -> Result<(Field, RunMetrics)> {
@@ -359,6 +384,25 @@ mod tests {
                 "{bench}"
             );
         }
+    }
+
+    #[test]
+    fn from_plan_builds_even_partition_and_runs() {
+        let s = spec::get("heat2d").unwrap();
+        let sc = Scheduler::from_plan(
+            s.clone(),
+            2,
+            vec![native("simd"), native("autovec")],
+            16,
+            Boundary::Periodic,
+            0,
+        );
+        assert_eq!(sc.partition.total_units(), 16);
+        assert_eq!(sc.partition.shares, vec![8, 8]);
+        let core = Field::random(&[16, 8], 91);
+        let (got, _) = sc.run(&core, 4).unwrap();
+        let want = reference::evolve_periodic(&core, &s, 4);
+        assert!(got.allclose(&want, 1e-12, 1e-14), "maxdiff={}", got.max_abs_diff(&want));
     }
 
     #[test]

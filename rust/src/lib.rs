@@ -19,8 +19,12 @@
 //!   work-stealing pool primitives.
 //! * [`serve`] — the long-lived serving layer on top of the scheduler:
 //!   admission queue (priority classes + backpressure), job batching,
-//!   partition-caching sessions, and the TCP line protocol
-//!   (`tetris serve` / `tetris submit`).
+//!   partition-caching sessions with TTL/LRU eviction, and the TCP line
+//!   protocol (`tetris serve` / `tetris submit`).
+//! * [`plan`] — the autotuning Pattern Mapper (§4): hardware
+//!   fingerprinting, cost-pruned timed search over (engine, threads,
+//!   Tb, tile), and the persistent plan store behind `--engine auto`
+//!   and `tetris tune`.
 //! * [`model`] — analytical cost models (α+β communication, roofline).
 //! * [`apps`] — thermal-diffusion case study (§6.5), accuracy study.
 //! * [`bench`] — harness that regenerates every paper table/figure.
@@ -41,6 +45,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod engine;
 pub mod model;
+pub mod plan;
 pub mod runtime;
 pub mod serve;
 pub mod stencil;

@@ -3,17 +3,22 @@
 //! Subcommands:
 //!   info                      platform + artifact inventory
 //!   validate                  golden-check every AOT artifact via PJRT
-//!   run      --bench B --engine E [--steps N] [--threads T]
+//!   run      --bench B --engine E|auto [--steps N] [--threads T]
 //!            [--boundary C] [--adapt K] [--workers W]  scheduler mode
-//!   hetero   --bench B [--steps N] [--threads T] [--boundary C] [--adapt K]
+//!            [--plan-store FILE] [--budget-ms MS] [--seed S]  for auto
+//!   hetero   --bench B [--engine E|auto] [--steps N] [--threads T]
+//!            [--boundary C] [--adapt K]
+//!   tune     --bench B [--boundary C] [--shape NxM] [--steps N]
+//!            [--budget-ms MS] [--seed S] [--plan-store FILE] [--force]
 //!   serve    [--addr A] [--workers W] [--queue N] [--batch B] [--threads T]
 //!            [--adapt K] [--drift F] [--scale F] [--addr-file FILE]
+//!            [--session-ttl SECS] [--max-sessions N] [--plan-store FILE|none]
 //!   submit   [--addr A] --bench B [--boundary C[,C...]] [--steps N]
 //!            [--jobs K] [--priority P] [--shape NxM] [--seed S]
 //!            [--json FILE] | --stats | --shutdown
 //!   thermal  [--size N] [--steps N] [--viz DIR] [--insulated]
 //!   accuracy [--blocks K]
-//!   bench    breakdown|sota|scaling|comm|mxu|boundary|serve [--scale F]
+//!   bench    breakdown|sota|scaling|comm|mxu|boundary|serve|plan [--scale F]
 //!            [--threads T] [--json FILE]   single-line JSON for CI
 
 #![allow(clippy::uninlined_format_args)]
@@ -85,6 +90,7 @@ fn main() -> Result<()> {
         "validate" => cmd_validate(),
         "run" => cmd_run(&args),
         "hetero" => cmd_hetero(&args),
+        "tune" => cmd_tune(&args),
         "serve" => cmd_serve(&args),
         "submit" => cmd_submit(&args),
         "thermal" => cmd_thermal(&args),
@@ -108,12 +114,20 @@ fn print_help() {
          validate                      golden-check every AOT artifact\n\
          run    --bench B --engine E   single-engine run  [--steps N --threads T --scale F]\n\
                 [--boundary C --adapt K --workers W]   scheduler run on W native workers\n\
-         hetero --bench B              auto-tuned CPU+XLA run [--steps N --threads T\n\
-                                       --boundary C --adapt K]\n\
+                --engine auto          resolve engine/threads/Tb through the plan\n\
+                                       store [--plan-store FILE --budget-ms MS --seed S]\n\
+         hetero --bench B              auto-tuned CPU+XLA run [--engine E|auto\n\
+                                       --steps N --threads T --boundary C --adapt K]\n\
+         tune   --bench B              search (engine, threads, Tb, tile) for this\n\
+                                       machine and persist the plan [--boundary C\n\
+                                       --shape NxM --steps N --budget-ms MS --seed S\n\
+                                       --plan-store FILE --force]\n\
          serve  [--addr A]             long-lived job server (queue, batching,\n\
                                        partition-caching sessions)  [--workers W\n\
                                        --queue N --batch B --threads T --adapt K\n\
-                                       --drift F --scale F --addr-file FILE]\n\
+                                       --drift F --scale F --addr-file FILE\n\
+                                       --session-ttl SECS --max-sessions N\n\
+                                       --plan-store FILE|none]\n\
          submit [--addr A]             send jobs over the line protocol [--bench B\n\
                                        --boundary C[,C...] --steps N --jobs K\n\
                                        --priority P --shape NxM --seed S --json FILE]\n\
@@ -121,14 +135,16 @@ fn print_help() {
          thermal [--size N --steps N --viz DIR --threads T]   Table-3 case study\n\
                 [--insulated]          Neumann zero-flux plate (conserves total heat)\n\
          accuracy [--blocks K]         Table-4 FP64-vs-FP32 study\n\
-         bench  breakdown|sota|scaling|comm|mxu|boundary|serve\n\
+         bench  breakdown|sota|scaling|comm|mxu|boundary|serve|plan\n\
                                        [--scale F --threads T --json FILE]\n\
          \n\
          boundaries (C): dirichlet[:V] (fixed-value ghosts), neumann (zero-flux),\n\
                          periodic (torus wrap); --adapt K retunes the partition\n\
                          from measured busy times every K blocks (0 = static)\n\
-         engines: {}\n\
-         baselines: {}",
+         engines (--engine E, every run/serve surface accepts both sets):\n\
+           optimized: {}\n\
+           baselines: {}\n\
+           auto:      resolve through the plan store (tune-on-miss; see `tetris tune`)",
         tetris::engine::ENGINE_NAMES.join(", "),
         tetris::baselines::BASELINE_NAMES.join(", ")
     );
@@ -192,42 +208,90 @@ fn boundary_flags(args: &Args) -> Result<(Boundary, usize)> {
     Ok((b, args.get("adapt", 0usize)))
 }
 
+/// The plan store a command should use: `--plan-store FILE` or the
+/// user default (`$TETRIS_PLAN_STORE`, else `~/.tetris/plans.jsonl`).
+fn plan_store_from(args: &Args) -> tetris::plan::PlanStore {
+    use tetris::plan::PlanStore;
+    match args.flags.get("plan-store") {
+        Some(p) => PlanStore::open(p),
+        None => PlanStore::open(PlanStore::default_path()),
+    }
+}
+
+/// Resolve `--engine auto` for a bench/boundary/shape through the plan
+/// store (exact hit → warm start → budgeted search), logging how.
+fn resolve_auto_flag(
+    args: &Args,
+    bench: &str,
+    boundary: &Boundary,
+    shape: &[usize],
+    steps_hint: usize,
+) -> Result<tetris::plan::Resolution> {
+    use tetris::plan::{resolve_auto, Fingerprint, SearchConfig};
+    let store = plan_store_from(args);
+    let fp = Fingerprint::detect(args.get("calib-ms", 120u64));
+    let cfg = SearchConfig {
+        budget_ms: args.get("budget-ms", 500u64),
+        seed: args.get("seed", 0x7E7215u64),
+        ..Default::default()
+    };
+    let res = resolve_auto(&store, &fp, bench, boundary.kind(), shape, steps_hint, &cfg)?;
+    let p = &res.plan;
+    println!(
+        "plan: {} ({} threads={} Tb={}{}) [{} @ {:?}]",
+        if res.cached { "cached" } else if res.warmed { "warm-start" } else { "tuned" },
+        p.engine,
+        p.threads,
+        p.tb,
+        p.tile_w.map(|w| format!(" tile_w={w}")).unwrap_or_default(),
+        fp.id(),
+        store.path
+    );
+    Ok(res)
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let bench = args.str("bench", "heat2d");
-    let engine = args.str("engine", "tetris-cpu");
-    let threads = args.get("threads", 1usize);
+    let mut engine = args.str("engine", "tetris-cpu");
+    let mut threads = args.get("threads", 1usize);
     let scale = args.get("scale", 0.5f64);
     let s = spec::get(&bench).with_context(|| format!("unknown bench {bench}"))?;
-    let (core, mut steps, tb) = harness::scaled_problem(&bench, scale);
+    let (core, mut steps, mut tb) = harness::scaled_problem(&bench, scale);
     steps = args.get("steps", steps);
+    let (boundary, adapt) = boundary_flags(args)?;
+    let mut tile_w = None;
+    if engine == "auto" {
+        let res = resolve_auto_flag(args, &bench, &boundary, &core, steps)?;
+        engine = res.plan.engine.clone();
+        tb = res.plan.tb.max(1);
+        tile_w = res.plan.tile_w;
+        if !args.flags.contains_key("threads") {
+            threads = res.plan.threads;
+        }
+    }
     steps -= steps % tb;
+    if steps == 0 {
+        steps = tb;
+    }
+    let build_engine = || {
+        tetris::plan::Candidate { engine: engine.clone(), threads, tb, tile_w }
+            .build()
+            .with_context(|| format!("unknown engine {engine}"))
+    };
     let scheduler_mode = ["boundary", "adapt", "workers"]
         .iter()
         .any(|k| args.flags.contains_key(*k));
     if scheduler_mode {
         // Boundary-aware scheduler run: W native workers of the chosen
-        // engine, row-granular partition, optional adaptive retune.
-        let (boundary, adapt) = boundary_flags(args)?;
+        // engine (either registry), row-granular partition, optional
+        // adaptive retune.
         let nworkers = args.get("workers", 2usize).max(1);
         let workers: Vec<Box<dyn Worker>> = (0..nworkers)
             .map(|_| -> Result<Box<dyn Worker>> {
-                Ok(Box::new(NativeWorker::new(
-                    tetris::engine::by_name(&engine, threads)
-                        .with_context(|| format!("unknown engine {engine}"))?,
-                    1 << 33,
-                )))
+                Ok(Box::new(NativeWorker::new(build_engine()?, 1 << 33)))
             })
             .collect::<Result<_>>()?;
-        let rows = core[0];
-        let sched = Scheduler {
-            spec: s,
-            tb,
-            workers,
-            partition: Partition::balanced(1, rows, &vec![1.0; nworkers], &vec![rows; nworkers]),
-            comm_model: CommModel::default(),
-            boundary,
-            adapt_every: adapt,
-        };
+        let sched = Scheduler::from_plan(s, tb, workers, core[0], boundary, adapt);
         let field = Field::random(&core, 0xA11CE);
         let (out, metrics) = sched.run(&field, steps)?;
         println!(
@@ -237,12 +301,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!("final field mean={:.6} l2={:.3}", out.mean(), out.l2());
         return Ok(());
     }
-    let eng = tetris::engine::by_name(&engine, threads)
-        .or_else(|| tetris::baselines::by_name(&engine))
-        .with_context(|| format!("unknown engine {engine}"))?;
+    let eng = build_engine()?;
     let (g, d) = harness::time_engine(eng.as_ref(), &s, &core, steps, tb);
     println!(
-        "{bench} x {steps} steps on {engine} (threads={threads}): {:.4} GStencils/s ({})",
+        "{bench} x {steps} steps on {engine} (threads={threads}, Tb={tb}): {:.4} GStencils/s ({})",
         g,
         tetris::util::timer::fmt_duration(d)
     );
@@ -251,10 +313,21 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_hetero(args: &Args) -> Result<()> {
     let bench = args.str("bench", "heat2d");
-    let threads = args.get("threads", 1usize);
+    let mut engine = args.str("engine", "tetris-cpu");
+    let mut threads = args.get("threads", 1usize);
     let rt = XlaService::spawn_default().context("hetero needs artifacts: run `make artifacts`")?;
-    let (mut sched, global) = harness::hetero_scheduler(&rt, &bench, threads)?;
     let (boundary, adapt) = boundary_flags(args)?;
+    if engine == "auto" {
+        // The artifact fixes Tb and the slab quantum; the plan picks the
+        // CPU-side engine and thread count.
+        let meta = rt.bench(&bench)?.clone();
+        let res = resolve_auto_flag(args, &bench, &boundary, &meta.global_core, meta.tb * 4)?;
+        engine = res.plan.engine.clone();
+        if !args.flags.contains_key("threads") {
+            threads = res.plan.threads;
+        }
+    }
+    let (mut sched, global) = harness::hetero_scheduler(&rt, &bench, threads, &engine)?;
     sched.boundary = boundary;
     sched.adapt_every = adapt;
     let steps = {
@@ -268,11 +341,74 @@ fn cmd_hetero(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `tetris tune`: run (or refresh) the Pattern Mapper search for a
+/// `(bench, boundary, shape)` and persist the winning plan.
+fn cmd_tune(args: &Args) -> Result<()> {
+    use tetris::plan::{resolve_auto, search, Fingerprint, SearchConfig};
+    let bench = args.str("bench", "heat2d");
+    let scale = args.get("scale", 0.5f64);
+    spec::get(&bench).with_context(|| format!("unknown bench {bench}"))?;
+    let (default_shape, default_steps, _) = harness::scaled_problem(&bench, scale);
+    let shape: Vec<usize> = match args.flags.get("shape") {
+        Some(s) => s
+            .split('x')
+            .map(|n| n.parse().context("--shape"))
+            .collect::<Result<_>>()?,
+        None => default_shape,
+    };
+    let steps = args.get("steps", default_steps);
+    let boundary: Boundary = args
+        .str("boundary", "dirichlet:0")
+        .parse()
+        .context("--boundary")?;
+    let store = plan_store_from(args);
+    let fp = Fingerprint::detect(args.get("calib-ms", 150u64));
+    println!(
+        "fingerprint: {} ({} cores, {}B cache line, calib {:.3} GStencils/s)",
+        fp.id(),
+        fp.cores,
+        fp.cache_line,
+        fp.calib_gsps
+    );
+    let cfg = SearchConfig {
+        budget_ms: args.get("budget-ms", 2_000u64),
+        seed: args.get("seed", 0x7E7215u64),
+        ..Default::default()
+    };
+    let (plan, how) = if args.flags.contains_key("force") {
+        // --force re-searches even over a fresh cache hit.
+        let p = search(&bench, boundary.kind(), &shape, steps, &fp, &cfg)?;
+        store.append(&p)?;
+        (p, "tuned (forced)".to_string())
+    } else {
+        let res = resolve_auto(&store, &fp, &bench, boundary.kind(), &shape, steps, &cfg)?;
+        let how = if res.cached {
+            "cached (use --force to re-search)"
+        } else if res.warmed {
+            "warm-start"
+        } else {
+            "tuned"
+        };
+        (res.plan, how.to_string())
+    };
+    println!("plan [{how}]: {}", plan.to_json());
+    let kept = store.compact()?;
+    println!("store: {:?} ({kept} plans after compaction)", store.path);
+    Ok(())
+}
+
 /// `tetris serve`: boot the long-lived job server and block until a
 /// `SHUTDOWN` line (or handle signal) drains it.
 fn cmd_serve(args: &Args) -> Result<()> {
     use tetris::serve::{default_worker_factory, ServeConfig, Server};
     let threads = args.get("threads", 2usize);
+    // Planning defaults ON for the real server (that's the point of a
+    // persistent store); `--plan-store none` opts out.
+    let plan_store = match args.str("plan-store", "").as_str() {
+        "none" => None,
+        "" => Some(tetris::plan::PlanStore::default_path().to_string_lossy().into_owned()),
+        p => Some(p.to_string()),
+    };
     let cfg = ServeConfig {
         addr: args.str("addr", "127.0.0.1:7466"),
         dispatchers: args.get("workers", 2usize).max(1),
@@ -283,6 +419,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         adapt_every: args.get("adapt", 2usize),
         drift_threshold: args.get("drift", 0.25f64),
         scale: args.get("scale", 0.25f64),
+        session_ttl: std::time::Duration::from_secs_f64(
+            args.get("session-ttl", 900.0f64).max(0.0),
+        ),
+        max_sessions: args.get("max-sessions", 64usize),
+        plan_store,
+        fingerprint: None,
     };
     let handle = Server::start(cfg.clone(), default_worker_factory(threads))?;
     if let Some(path) = args.flags.get("addr-file") {
@@ -499,6 +641,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "scaling" => harness::run_scaling(rt.as_ref(), scale, threads),
         "boundary" => harness::run_boundary(scale, threads),
         "serve" => harness::run_serve(scale, threads),
+        "plan" => harness::run_plan(scale, threads, args.flags.get("plan-store").map(String::as_str)),
         "comm" => vec![("comm".to_string(), harness::run_comm())],
         "mxu" => {
             let rt = rt.context("mxu bench needs artifacts")?;

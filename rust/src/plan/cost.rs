@@ -1,0 +1,158 @@
+//! Analytic pruning model for the plan search.
+//!
+//! Timing every `(engine, threads, Tb, tile)` combination would blow any
+//! tuning budget, so the search first ranks the space with a coarse
+//! closed-form estimate built from the machine's micro-calibration and
+//! the same α+β accounting the coordinator uses ([`CommModel`]):
+//!
+//! * compute: `cells × steps × tap-penalty` over the calibrated
+//!   GStencils/s, scaled by a per-engine throughput prior and an
+//!   Amdahl-style parallel efficiency;
+//! * temporal fusion: the extended/core volume ratio charges deeper Tb
+//!   for its ghost redundancy;
+//! * per-block overhead: one α-scale launch per dispatched block plus
+//!   the O(surface) ghost-ring refresh at β — the term that makes small
+//!   grids favour deep Tb and huge grids shallow Tb.
+//!
+//! The estimates only need to *rank* candidates well enough that the
+//! timed trials see the right shortlist; the trials have the final word.
+
+use crate::coordinator::CommModel;
+use crate::stencil::StencilSpec;
+
+use super::fingerprint::Fingerprint;
+use super::search::Candidate;
+
+/// Single-thread throughput prior relative to the calibrated `simd`
+/// engine, and whether the engine scales with the thread knob.
+pub fn engine_prior(name: &str) -> (f64, bool) {
+    match name {
+        "naive" => (0.12, false),
+        "autovec" => (0.55, false),
+        "simd" => (1.0, false),
+        "tiled" => (0.95, false),
+        "tessellate" => (0.5, false),
+        "tetris-cpu" => (1.05, true),
+        "tetris-wave" => (1.0, true),
+        "datareorg" => (0.45, false),
+        "pluto" => (0.7, false),
+        "folding" => (0.8, false),
+        "brick" => (0.75, false),
+        "an5d" => (0.85, false),
+        _ => (0.4, false),
+    }
+}
+
+/// The pruning model: calibrated machine speed + α/β overheads.
+pub struct CostModel {
+    pub comm: CommModel,
+    /// Calibrated single-thread `simd` GStencils/s (heat2d, 5 taps).
+    pub calib_gsps: f64,
+}
+
+impl CostModel {
+    pub fn from_fingerprint(fp: &Fingerprint) -> CostModel {
+        CostModel { comm: CommModel::default(), calib_gsps: fp.calib_gsps.max(1e-3) }
+    }
+
+    /// Estimated wall seconds to advance `core` by `total_steps` under
+    /// candidate `c`.  Deterministic in its inputs (the search's
+    /// reproducibility leans on this).
+    pub fn estimate_secs(
+        &self,
+        spec: &StencilSpec,
+        core: &[usize],
+        total_steps: usize,
+        c: &Candidate,
+    ) -> f64 {
+        let cells: f64 = core.iter().product::<usize>() as f64;
+        let (factor, scales) = engine_prior(&c.engine);
+        let threads = if scales { c.threads.max(1) as f64 } else { 1.0 };
+        // Amdahl-ish efficiency: ~8% serial per extra thread.
+        let speedup = threads / (1.0 + 0.08 * (threads - 1.0));
+        // Calibration ran the 5-tap heat2d; wider footprints cost
+        // proportionally more per cell.
+        let tap_penalty = spec.points() as f64 / 5.0;
+        let base = cells * total_steps as f64 * tap_penalty
+            / (self.calib_gsps * 1e9 * factor * speedup);
+        // Fused-block ghost redundancy: extended/core volume ratio.
+        let halo = spec.radius * c.tb.max(1);
+        let ext_ratio: f64 =
+            core.iter().map(|&n| (n + 2 * halo) as f64 / n.max(1) as f64).product();
+        // Per-block launch (α per thread team) + ghost-ring refresh (β
+        // over the ring surface).
+        let blocks = (total_steps as f64 / c.tb.max(1) as f64).ceil().max(1.0);
+        let ext_cells: f64 = core.iter().map(|&n| (n + 2 * halo) as f64).product();
+        let ring = (ext_cells - cells).max(0.0);
+        base * ext_ratio + blocks * (self.comm.alpha * (1.0 + threads) + ring * 8.0 * self.comm.beta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::spec;
+
+    fn model() -> CostModel {
+        CostModel::from_fingerprint(&Fingerprint::synthetic(8, 64, 1.0))
+    }
+
+    fn cand(engine: &str, threads: usize, tb: usize) -> Candidate {
+        Candidate { engine: engine.into(), threads, tb, tile_w: None }
+    }
+
+    #[test]
+    fn estimates_are_positive_and_rank_engines() {
+        let m = model();
+        let s = spec::get("heat2d").unwrap();
+        let naive = m.estimate_secs(&s, &[256, 256], 16, &cand("naive", 1, 2));
+        let simd = m.estimate_secs(&s, &[256, 256], 16, &cand("simd", 1, 2));
+        assert!(naive > 0.0 && simd > 0.0);
+        assert!(naive > simd, "the prior must rank naive behind simd");
+    }
+
+    #[test]
+    fn threads_help_scaling_engines_only() {
+        let m = model();
+        let s = spec::get("heat2d").unwrap();
+        let t1 = m.estimate_secs(&s, &[512, 512], 16, &cand("tetris-cpu", 1, 4));
+        let t8 = m.estimate_secs(&s, &[512, 512], 16, &cand("tetris-cpu", 8, 4));
+        assert!(t8 < t1, "tetris-cpu must profit from threads: {t8} vs {t1}");
+        let s1 = m.estimate_secs(&s, &[512, 512], 16, &cand("simd", 1, 4));
+        let s8 = m.estimate_secs(&s, &[512, 512], 16, &cand("simd", 8, 4));
+        assert!(s8 >= s1, "thread-blind engines must not fake a speedup");
+    }
+
+    #[test]
+    fn deep_tb_wins_on_launch_bound_grids() {
+        // Small 1-D grid: per-block launches dominate, so Tb=8 must beat
+        // Tb=1 despite the ghost redundancy.
+        let m = model();
+        let s = spec::get("heat1d").unwrap();
+        let shallow = m.estimate_secs(&s, &[4096], 16, &cand("simd", 1, 1));
+        let deep = m.estimate_secs(&s, &[4096], 16, &cand("simd", 1, 8));
+        assert!(deep < shallow, "{deep} !< {shallow}");
+    }
+
+    #[test]
+    fn ghost_redundancy_punishes_deep_tb_on_wide_footprints() {
+        // box2d25p (radius 2), single thread: Tb=8 means a 16-cell halo
+        // on a 64-cell core (2.25x the compute volume) — the redundancy
+        // term must dwarf the per-block launch saving.
+        let m = model();
+        let s = spec::get("box2d25p").unwrap();
+        let shallow = m.estimate_secs(&s, &[64, 64], 16, &cand("tetris-cpu", 1, 2));
+        let deep = m.estimate_secs(&s, &[64, 64], 16, &cand("tetris-cpu", 1, 8));
+        assert!(deep > shallow, "{deep} !> {shallow}");
+    }
+
+    #[test]
+    fn estimate_is_deterministic() {
+        let m = model();
+        let s = spec::get("heat3d").unwrap();
+        let c = cand("tetris-wave", 4, 2);
+        let a = m.estimate_secs(&s, &[64, 64, 64], 8, &c);
+        let b = m.estimate_secs(&s, &[64, 64, 64], 8, &c);
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}

@@ -1,0 +1,192 @@
+//! Hardware fingerprinting: the identity half of a plan-store key.
+//!
+//! A plan tuned on one machine is noise on another, so every [`Plan`]
+//! records where it was tuned: logical core count, a cache-line probe,
+//! and a ~100 ms micro-calibration (single-thread `simd` GStencils/s on
+//! a small heat2d proxy grid).  Matching is deliberately coarse —
+//! exact cores plus a calibration throughput within ~3x — because the
+//! calibration jitters run to run and an over-precise fingerprint would
+//! orphan every stored plan.  The cache-line figure is recorded for
+//! diagnostics but not matched (hardware prefetchers make the probe the
+//! least stable of the three signals).
+//!
+//! [`Plan`]: super::Plan
+
+use std::time::{Duration, Instant};
+
+use crate::engine::Engine;
+use crate::stencil::{spec, Field};
+
+/// What the machine looks like to the Pattern Mapper.
+#[derive(Clone, Debug)]
+pub struct Fingerprint {
+    /// Logical cores (`std::thread::available_parallelism`).
+    pub cores: usize,
+    /// Probed cache-line size in bytes (64 when the probe is inconclusive).
+    pub cache_line: usize,
+    /// Micro-calibration: single-thread `simd` heat2d GStencils/s.
+    pub calib_gsps: f64,
+}
+
+impl Fingerprint {
+    /// Probe the current machine.  `budget_ms` bounds the calibration
+    /// run (~half is spent calibrating, the probe costs a few ms).
+    pub fn detect(budget_ms: u64) -> Fingerprint {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Fingerprint {
+            cores,
+            cache_line: cache_line_probe(),
+            calib_gsps: calibrate(budget_ms),
+        }
+    }
+
+    /// A fingerprint with given figures — tests and cost-model-only use.
+    pub fn synthetic(cores: usize, cache_line: usize, calib_gsps: f64) -> Fingerprint {
+        Fingerprint { cores: cores.max(1), cache_line, calib_gsps }
+    }
+
+    /// Stable identity string recorded in plans:
+    /// `c<cores>/l<cache_line>/g<bucket>` where the bucket is the
+    /// calibration throughput in half-octaves (`round(2*log2(gsps))`).
+    pub fn id(&self) -> String {
+        format!("c{}/l{}/g{}", self.cores, self.cache_line, gsps_bucket(self.calib_gsps))
+    }
+
+    /// Whether a stored plan's fingerprint describes this machine:
+    /// same core count and a calibration bucket within ±3 half-octaves
+    /// (~2.8x throughput) — wide enough to absorb calibration jitter on
+    /// a loaded machine, narrow enough that a laptop never adopts a
+    /// 96-core server's plan.
+    pub fn matches(&self, id: &str) -> bool {
+        match parse_id(id) {
+            Some((cores, _line, g)) => {
+                cores == self.cores && (g - gsps_bucket(self.calib_gsps)).abs() <= 3
+            }
+            None => false,
+        }
+    }
+}
+
+/// Calibration throughput in half-octave buckets.
+fn gsps_bucket(gsps: f64) -> i64 {
+    (2.0 * gsps.max(1e-6).log2()).round() as i64
+}
+
+fn parse_id(id: &str) -> Option<(usize, usize, i64)> {
+    let mut it = id.split('/');
+    let cores = it.next()?.strip_prefix('c')?.parse().ok()?;
+    let line = it.next()?.strip_prefix('l')?.parse().ok()?;
+    let g = it.next()?.strip_prefix('g')?.parse().ok()?;
+    if it.next().is_some() {
+        return None;
+    }
+    Some((cores, line, g))
+}
+
+/// Single-thread `simd` heat2d throughput on a 64x64 proxy — the
+/// machine-speed scalar every cost-model estimate hangs off.
+fn calibrate(budget_ms: u64) -> f64 {
+    let s = spec::get("heat2d").expect("heat2d spec");
+    let eng = crate::engine::by_name("simd", 1).expect("simd engine");
+    const N: usize = 64;
+    let tb = 2;
+    let halo = s.radius * tb;
+    let mut cur = Field::random(&[N + 2 * halo, N + 2 * halo], 0xF17);
+    let deadline = Instant::now() + Duration::from_millis(budget_ms.max(10) / 2);
+    let t0 = Instant::now();
+    let mut steps = 0usize;
+    loop {
+        let out = eng.block(&s, &cur, tb);
+        cur = out.pad(halo, 0.0);
+        steps += tb;
+        if steps >= 2 * tb && Instant::now() >= deadline {
+            break;
+        }
+    }
+    std::hint::black_box(&cur);
+    (N * N * steps) as f64 / t0.elapsed().as_secs_f64().max(1e-9) / 1e9
+}
+
+/// Strided-touch cache-line probe over a buffer well past L2: per-touch
+/// cost roughly doubles with the stride while several touches share a
+/// line, then flattens once every touch lands on a fresh line.  The
+/// first stride whose successor stops near-doubling is the line size.
+/// Median of 3 passes per stride; 64 on an inconclusive (non-flattening)
+/// curve.
+fn cache_line_probe() -> usize {
+    let mut buf = vec![1u8; 1 << 22];
+    let strides = [16usize, 32, 64, 128, 256];
+    let _ = probe_pass(&mut buf, 64); // warm the buffer in
+    let mut per_touch = Vec::with_capacity(strides.len());
+    for &s in &strides {
+        let mut samples = [
+            probe_pass(&mut buf, s),
+            probe_pass(&mut buf, s),
+            probe_pass(&mut buf, s),
+        ];
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        per_touch.push(samples[1]);
+    }
+    for i in 0..strides.len() - 1 {
+        if per_touch[i + 1] < per_touch[i] * 1.5 {
+            return strides[i];
+        }
+    }
+    64
+}
+
+fn probe_pass(buf: &mut [u8], stride: usize) -> f64 {
+    let t0 = Instant::now();
+    let mut i = 0usize;
+    while i < buf.len() {
+        buf[i] = buf[i].wrapping_add(1);
+        i += stride;
+    }
+    std::hint::black_box(&*buf);
+    t0.elapsed().as_secs_f64() / (buf.len() / stride) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_round_trips_through_matches() {
+        let fp = Fingerprint::synthetic(8, 64, 1.0);
+        assert_eq!(fp.id(), "c8/l64/g0");
+        assert!(fp.matches(&fp.id()));
+        // negative buckets (slow machines) survive the id grammar
+        let slow = Fingerprint::synthetic(2, 64, 0.1);
+        assert!(slow.id().contains("/g-"), "{}", slow.id());
+        assert!(slow.matches(&slow.id()));
+    }
+
+    #[test]
+    fn matches_tolerates_calibration_jitter_but_not_machines() {
+        let fp = Fingerprint::synthetic(8, 64, 1.0);
+        // within ~2x: same machine on a noisy day
+        assert!(fp.matches(&Fingerprint::synthetic(8, 128, 1.8).id()));
+        // different core count: a different machine, full stop
+        assert!(!fp.matches(&Fingerprint::synthetic(16, 64, 1.0).id()));
+        // same cores but ~20x the throughput: not this machine either
+        assert!(!fp.matches(&Fingerprint::synthetic(8, 64, 20.0).id()));
+        // garbage ids never match
+        assert!(!fp.matches(""));
+        assert!(!fp.matches("c8"));
+        assert!(!fp.matches("c8/l64/gx"));
+        assert!(!fp.matches("c8/l64/g0/extra"));
+    }
+
+    #[test]
+    fn detect_produces_plausible_figures() {
+        let fp = Fingerprint::detect(40);
+        assert!(fp.cores >= 1);
+        assert!(fp.calib_gsps > 0.0, "calibration must measure something: {fp:?}");
+        assert!(
+            [16, 32, 64, 128, 256].contains(&fp.cache_line),
+            "probe out of range: {}",
+            fp.cache_line
+        );
+        assert!(fp.matches(&fp.id()));
+    }
+}

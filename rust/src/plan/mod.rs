@@ -1,0 +1,321 @@
+//! `tetris plan` — the autotuning **Pattern Mapper** (paper §4: the
+//! polymorphic tiling tetrominoes bridge "different hardware
+//! architectures and various application contexts with a perfect
+//! spatial and temporal tessellation *automatically*").
+//!
+//! The rest of the stack exposes every knob — engine, thread count,
+//! tile width, fused block depth Tb — and the paper's thesis is that a
+//! cloud user should never have to turn any of them.  This subsystem
+//! closes that gap:
+//!
+//! * [`fingerprint`] — identifies the machine (logical cores, a
+//!   cache-line probe, a ~100 ms micro-calibration of stencil
+//!   throughput) so plans are keyed to hardware, not hope;
+//! * [`cost`] — an α+β-style analytic model that prunes the
+//!   configuration space before anything is timed;
+//! * [`search`] — the cost-pruned timed search over `(engine, threads,
+//!   Tb, tile)` on shrunken proxy grids, emitting a versioned [`Plan`];
+//! * [`store`] — the persistent JSON-lines plan store
+//!   (`~/.tetris/plans.jsonl` by default): tuning cost is paid once per
+//!   `(machine, bench, boundary, shape-bucket)`, not per job.
+//!
+//! Consumers: `tetris tune` runs/refreshes the search, `--engine auto`
+//! on `run`/`hetero` resolves through the store ([`resolve_auto`]), and
+//! `serve` sessions adopt the stored plan at creation and write back
+//! improved plans observed from live runs.
+
+pub mod cost;
+pub mod fingerprint;
+pub mod search;
+pub mod store;
+
+pub use cost::CostModel;
+pub use fingerprint::Fingerprint;
+pub use search::{search, search_with, Candidate, SearchConfig};
+pub use store::PlanStore;
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+use crate::engine::Engine;
+
+/// Plan record format version (bumped on incompatible field changes;
+/// newer readers keep accepting older records).
+pub const PLAN_VERSION: u64 = 1;
+
+/// Resolve an engine name against **both** registries — the optimized
+/// engines and the Fig-13 baselines.  Every CLI surface and the plan
+/// search accept the union.
+pub fn resolve_engine(name: &str, threads: usize) -> Option<Box<dyn Engine>> {
+    crate::engine::by_name(name, threads.max(1)).or_else(|| crate::baselines::by_name(name))
+}
+
+/// Power-of-two shape bucket: each dim rounds to the nearest 2^k.  Plans
+/// are keyed on the bucket, not the exact shape, so a 500x500 job reuses
+/// the 512x512 plan — stencil throughput is a smooth function of size,
+/// and per-exact-shape keys would turn the store into a cache that never
+/// hits.
+pub fn shape_bucket(shape: &[usize]) -> Vec<usize> {
+    shape
+        .iter()
+        .map(|&n| {
+            let l = (n.max(1) as f64).log2().round().max(0.0) as u32;
+            1usize << l.min(62)
+        })
+        .collect()
+}
+
+/// One tuned execution configuration for a `(fingerprint, bench,
+/// boundary kind, shape bucket)` key — what `--engine auto` resolves to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    pub version: u64,
+    /// [`Fingerprint::id`] of the machine the plan was tuned on.
+    pub fingerprint: String,
+    pub bench: String,
+    /// Boundary family (`dirichlet`/`neumann`/`periodic`) — wall values
+    /// don't change the cost profile, so plans key on the kind.
+    pub boundary: String,
+    /// [`shape_bucket`] of the tuned shape.
+    pub bucket: Vec<usize>,
+    /// Winning engine (engine or baseline registry name).
+    pub engine: String,
+    pub threads: usize,
+    /// Fused steps per block.
+    pub tb: usize,
+    /// Tile-width override for the tessellation family (None = heuristic).
+    pub tile_w: Option<usize>,
+    /// Throughput observed when the plan was selected (GStencils/s on
+    /// the proxy grid for tuned plans, on the real run for observed ones).
+    pub gsps: f64,
+    /// Provenance: `tuned` (search), `warm-start` (nearest-bucket
+    /// adoption), `observed` (written back by a live serve session).
+    pub source: String,
+    /// Search seed (trial ordering / tie-break reproducibility).
+    pub seed: u64,
+}
+
+impl Plan {
+    /// Store key: plans are unique per machine/bench/boundary/bucket,
+    /// latest record wins.
+    pub fn key(&self) -> String {
+        format!("{}|{}|{}|{:?}", self.fingerprint, self.bench, self.boundary, self.bucket)
+    }
+
+    /// The plan as a search candidate (to instantiate its engine).
+    pub fn candidate(&self) -> Candidate {
+        Candidate {
+            engine: self.engine.clone(),
+            threads: self.threads.max(1),
+            tb: self.tb.max(1),
+            tile_w: self.tile_w,
+        }
+    }
+
+    /// Deterministic single-line JSON (keys sort lexicographically via
+    /// the `BTreeMap` printer) — the golden-file tests are byte-stable.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("v".into(), Json::Num(self.version as f64));
+        m.insert("fp".into(), Json::Str(self.fingerprint.clone()));
+        m.insert("bench".into(), Json::Str(self.bench.clone()));
+        m.insert("boundary".into(), Json::Str(self.boundary.clone()));
+        m.insert(
+            "bucket".into(),
+            Json::Arr(self.bucket.iter().map(|&x| Json::Num(x as f64)).collect()),
+        );
+        m.insert("engine".into(), Json::Str(self.engine.clone()));
+        m.insert("threads".into(), Json::Num(self.threads as f64));
+        m.insert("tb".into(), Json::Num(self.tb as f64));
+        if let Some(w) = self.tile_w {
+            m.insert("tile_w".into(), Json::Num(w as f64));
+        }
+        m.insert("gsps".into(), Json::Num(self.gsps));
+        m.insert("source".into(), Json::Str(self.source.clone()));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        Json::Obj(m)
+    }
+
+    /// Tolerant decode: unknown keys are ignored (a newer tetris may
+    /// write fields this build does not know), every non-identifying
+    /// field has a default.
+    pub fn from_json(v: &Json) -> Result<Plan> {
+        v.as_obj().context("plan must be a JSON object")?;
+        Ok(Plan {
+            version: v.at(&["v"]).as_u64().unwrap_or(1),
+            fingerprint: v.at(&["fp"]).as_str().unwrap_or("").to_string(),
+            bench: v.at(&["bench"]).as_str().context("plan missing bench")?.to_string(),
+            boundary: v.at(&["boundary"]).as_str().unwrap_or("dirichlet").to_string(),
+            bucket: v.get("bucket").and_then(|b| b.usize_vec()).context("plan missing bucket")?,
+            engine: v.at(&["engine"]).as_str().context("plan missing engine")?.to_string(),
+            threads: v.at(&["threads"]).as_usize().unwrap_or(1).max(1),
+            tb: v.at(&["tb"]).as_usize().unwrap_or(1).max(1),
+            tile_w: v.get("tile_w").and_then(|t| t.as_usize()),
+            gsps: v.at(&["gsps"]).as_f64().unwrap_or(0.0),
+            source: v.at(&["source"]).as_str().unwrap_or("tuned").to_string(),
+            seed: v.at(&["seed"]).as_u64().unwrap_or(0),
+        })
+    }
+
+    pub fn parse_line(line: &str) -> Result<Plan> {
+        let v = Json::parse(line.trim()).context("plan parse")?;
+        Plan::from_json(&v)
+    }
+}
+
+/// How [`resolve_auto`] arrived at its plan.
+#[derive(Clone, Debug)]
+pub struct Resolution {
+    pub plan: Plan,
+    /// Exact store hit — no search ran.
+    pub cached: bool,
+    /// Nearest-bucket warm start — adopted a neighbour, no search ran.
+    pub warmed: bool,
+}
+
+/// The `--engine auto` resolution ladder:
+///
+/// 1. exact `(fingerprint, bench, boundary, bucket)` store hit — use it,
+///    search nothing (a `plan: cached` run);
+/// 2. nearest-bucket warm start — a plan for the same machine, bench and
+///    boundary at a different size transfers (throughput is smooth in
+///    shape); persist it under the exact key so step 1 hits next time;
+/// 3. cold — run the budgeted calibrated search and persist the winner.
+pub fn resolve_auto(
+    store: &PlanStore,
+    fp: &Fingerprint,
+    bench: &str,
+    boundary_kind: &str,
+    shape: &[usize],
+    steps_hint: usize,
+    cfg: &SearchConfig,
+) -> Result<Resolution> {
+    if let Some(plan) = store.lookup(fp, bench, boundary_kind, shape) {
+        return Ok(Resolution { plan, cached: true, warmed: false });
+    }
+    if let Some(mut plan) = store.lookup_near(fp, bench, boundary_kind, shape) {
+        plan.bucket = shape_bucket(shape);
+        plan.fingerprint = fp.id();
+        plan.source = "warm-start".into();
+        store.append(&plan)?;
+        return Ok(Resolution { plan, cached: false, warmed: true });
+    }
+    let plan = search(bench, boundary_kind, shape, steps_hint, fp, cfg)?;
+    store.append(&plan)?;
+    Ok(Resolution { plan, cached: false, warmed: false })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_bucket_rounds_to_nearest_pow2() {
+        assert_eq!(shape_bucket(&[512, 512]), vec![512, 512]);
+        assert_eq!(shape_bucket(&[500, 24]), vec![512, 32]);
+        assert_eq!(shape_bucket(&[1]), vec![1]);
+        assert_eq!(shape_bucket(&[96]), vec![128]);
+        assert_eq!(shape_bucket(&[2, 5, 6]), vec![2, 4, 8]);
+    }
+
+    #[test]
+    fn plan_round_trips_and_tolerates_unknown_fields() {
+        let p = Plan {
+            version: PLAN_VERSION,
+            fingerprint: "c8/l64/g2".into(),
+            bench: "heat2d".into(),
+            boundary: "periodic".into(),
+            bucket: vec![512, 512],
+            engine: "tetris-cpu".into(),
+            threads: 8,
+            tb: 4,
+            tile_w: Some(64),
+            gsps: 1.25,
+            source: "tuned".into(),
+            seed: 42,
+        };
+        let line = p.to_json().to_string();
+        assert!(!line.contains('\n'));
+        assert_eq!(Plan::parse_line(&line).unwrap(), p);
+        // a record from the future parses, extra keys ignored
+        let future = line.replacen('{', "{\"zeta\":true,", 1);
+        assert_eq!(Plan::parse_line(&future).unwrap(), p);
+        // tile_w is omitted when None and comes back as None
+        let q = Plan { tile_w: None, ..p.clone() };
+        let qline = q.to_json().to_string();
+        assert!(!qline.contains("tile_w"));
+        assert_eq!(Plan::parse_line(&qline).unwrap(), q);
+    }
+
+    #[test]
+    fn plan_rejects_records_missing_identity() {
+        assert!(Plan::parse_line(r#"{"engine":"simd","bucket":[8]}"#).is_err());
+        assert!(Plan::parse_line(r#"{"bench":"heat2d","bucket":[8]}"#).is_err());
+        assert!(Plan::parse_line(r#"{"bench":"heat2d","engine":"simd"}"#).is_err());
+        assert!(Plan::parse_line("[1,2]").is_err());
+        assert!(Plan::parse_line("{nope").is_err());
+    }
+
+    #[test]
+    fn resolve_engine_accepts_both_registries_and_auto_is_not_an_engine() {
+        assert!(resolve_engine("tetris-cpu", 2).is_some());
+        assert!(resolve_engine("an5d", 1).is_some(), "baselines must resolve too");
+        assert!(resolve_engine("auto", 1).is_none(), "auto is a resolution mode, not an engine");
+        assert!(resolve_engine("bogus", 1).is_none());
+    }
+
+    fn temp_store(tag: &str) -> PlanStore {
+        let path = std::env::temp_dir()
+            .join(format!("tetris-test-{tag}-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        PlanStore::open(path)
+    }
+
+    /// Acceptance: first resolution on an empty store calibrates and
+    /// persists; the second hits the stored plan without re-searching;
+    /// a different bucket warm-starts from the neighbour and then also
+    /// becomes an exact hit.
+    #[test]
+    fn resolve_auto_persists_then_hits_cache_then_warm_starts() {
+        let store = temp_store("resolve-auto");
+        let fp = Fingerprint::synthetic(2, 64, 0.5);
+        let cfg = SearchConfig { budget_ms: 120, seed: 7, shortlist: 3, max_proxy_cells: 1024 };
+        let a = resolve_auto(&store, &fp, "heat1d", "dirichlet", &[64], 8, &cfg).unwrap();
+        assert!(!a.cached && !a.warmed);
+        assert_eq!(a.plan.bucket, vec![64]);
+        assert!(a.plan.candidate().build().is_some(), "plan engine must resolve");
+
+        let b = resolve_auto(&store, &fp, "heat1d", "dirichlet", &[64], 8, &cfg).unwrap();
+        assert!(b.cached, "second resolution must hit the store, not re-search");
+        assert_eq!(a.plan, b.plan);
+
+        // bucket(200) = 256 != 64: nearest-bucket warm start
+        let c = resolve_auto(&store, &fp, "heat1d", "dirichlet", &[200], 8, &cfg).unwrap();
+        assert!(c.warmed && !c.cached);
+        assert_eq!(c.plan.engine, a.plan.engine);
+        assert_eq!(c.plan.bucket, vec![256]);
+        assert_eq!(c.plan.source, "warm-start");
+        let d = resolve_auto(&store, &fp, "heat1d", "dirichlet", &[200], 8, &cfg).unwrap();
+        assert!(d.cached, "warm-started plan must be an exact hit afterwards");
+
+        let _ = std::fs::remove_file(&store.path);
+    }
+
+    /// A foreign fingerprint must not be served this machine's plans —
+    /// and must not poison them either.
+    #[test]
+    fn resolve_auto_ignores_foreign_fingerprints() {
+        let store = temp_store("resolve-foreign");
+        let ours = Fingerprint::synthetic(2, 64, 0.5);
+        let cfg = SearchConfig { budget_ms: 120, seed: 7, shortlist: 2, max_proxy_cells: 1024 };
+        let a = resolve_auto(&store, &ours, "heat1d", "dirichlet", &[64], 8, &cfg).unwrap();
+        assert!(!a.cached);
+        // same key shape, wildly different machine: no hit, fresh search
+        let theirs = Fingerprint::synthetic(96, 128, 500.0);
+        let b = resolve_auto(&store, &theirs, "heat1d", "dirichlet", &[64], 8, &cfg).unwrap();
+        assert!(!b.cached && !b.warmed, "foreign plans must be ignored, not misapplied");
+        let _ = std::fs::remove_file(&store.path);
+    }
+}

@@ -1,0 +1,277 @@
+//! The persistent plan store: append-only JSON lines, one [`Plan`] per
+//! line, `~/.tetris/plans.jsonl` by default (`--plan-store` overrides,
+//! `TETRIS_PLAN_STORE` for scripts).
+//!
+//! Design points:
+//!
+//! * **append-only writes** — tuning results land with one `O_APPEND`
+//!   line, so concurrent tuners and serve dispatchers never clobber
+//!   each other; on read, the *latest* record for a key wins;
+//! * **tolerant reads** — unknown fields are ignored and corrupt lines
+//!   are skipped with a warning (a half-written line from a crashed
+//!   process must not poison every stored plan);
+//! * **atomic compaction** — [`PlanStore::compact`] dedupes to the
+//!   latest record per key and replaces the file via tmp + `rename`,
+//!   so a reader never observes a torn store;
+//! * **nearest-bucket warm start** — [`PlanStore::lookup_near`] serves
+//!   the closest shape bucket for the same machine/bench/boundary when
+//!   no exact key exists.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write;
+use std::path::PathBuf;
+
+use crate::util::error::{Context, Result};
+
+use super::fingerprint::Fingerprint;
+use super::{shape_bucket, Plan};
+
+pub struct PlanStore {
+    pub path: PathBuf,
+}
+
+impl PlanStore {
+    /// A store at `path` (nothing is touched until a read or write).
+    pub fn open(path: impl Into<PathBuf>) -> PlanStore {
+        PlanStore { path: path.into() }
+    }
+
+    /// `$TETRIS_PLAN_STORE`, else `~/.tetris/plans.jsonl` (falling back
+    /// to the working directory when `HOME` is unset).
+    pub fn default_path() -> PathBuf {
+        if let Some(p) = std::env::var_os("TETRIS_PLAN_STORE") {
+            return PathBuf::from(p);
+        }
+        let home = std::env::var_os("HOME")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."));
+        home.join(".tetris").join("plans.jsonl")
+    }
+
+    /// Every parseable plan, in file order (missing file = empty store).
+    /// Corrupt lines are skipped with a warning; unknown fields inside
+    /// valid lines are ignored by the codec.
+    pub fn load(&self) -> Vec<Plan> {
+        let Ok(text) = fs::read_to_string(&self.path) else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            match Plan::parse_line(line) {
+                Ok(p) => out.push(p),
+                Err(e) => eprintln!(
+                    "tetris plan store: skipping corrupt line {} of {:?}: {e}",
+                    i + 1,
+                    self.path
+                ),
+            }
+        }
+        out
+    }
+
+    /// Latest plan for the exact `(fingerprint, bench, boundary kind,
+    /// shape bucket)` key.  Plans recorded by a non-matching fingerprint
+    /// (another machine) are ignored, never misapplied.
+    pub fn lookup(
+        &self,
+        fp: &Fingerprint,
+        bench: &str,
+        boundary_kind: &str,
+        shape: &[usize],
+    ) -> Option<Plan> {
+        let bucket = shape_bucket(shape);
+        self.load().into_iter().rev().find(|p| {
+            p.bench == bench
+                && p.boundary == boundary_kind
+                && p.bucket == bucket
+                && fp.matches(&p.fingerprint)
+        })
+    }
+
+    /// Warm start: the plan for the same machine/bench/boundary whose
+    /// bucket is nearest in summed |log2| distance (later records win
+    /// ties).  `None` when nothing for the triple is stored at all.
+    pub fn lookup_near(
+        &self,
+        fp: &Fingerprint,
+        bench: &str,
+        boundary_kind: &str,
+        shape: &[usize],
+    ) -> Option<Plan> {
+        let bucket = shape_bucket(shape);
+        let mut best: Option<(f64, Plan)> = None;
+        for p in self.load() {
+            if p.bench != bench
+                || p.boundary != boundary_kind
+                || p.bucket.len() != bucket.len()
+                || !fp.matches(&p.fingerprint)
+            {
+                continue;
+            }
+            let d: f64 = p
+                .bucket
+                .iter()
+                .zip(&bucket)
+                .map(|(&a, &b)| ((a.max(1) as f64).log2() - (b.max(1) as f64).log2()).abs())
+                .sum();
+            let take = match &best {
+                None => true,
+                Some((bd, _)) => d <= *bd,
+            };
+            if take {
+                best = Some((d, p));
+            }
+        }
+        best.map(|(_, p)| p)
+    }
+
+    /// Append one plan record (creates the store and its directory on
+    /// first use).
+    pub fn append(&self, plan: &Plan) -> Result<()> {
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir)
+                    .with_context(|| format!("creating plan-store dir {dir:?}"))?;
+            }
+        }
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("opening plan store {:?}", self.path))?;
+        writeln!(f, "{}", plan.to_json())?;
+        Ok(())
+    }
+
+    /// Dedupe to the latest record per key and atomically rewrite the
+    /// store (tmp file + `rename`, same directory).  Returns the number
+    /// of surviving plans.
+    pub fn compact(&self) -> Result<usize> {
+        let mut latest: BTreeMap<String, Plan> = BTreeMap::new();
+        for p in self.load() {
+            latest.insert(p.key(), p);
+        }
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir)
+                    .with_context(|| format!("creating plan-store dir {dir:?}"))?;
+            }
+        }
+        let tmp = self.path.with_extension("jsonl.tmp");
+        {
+            let mut f = fs::File::create(&tmp)
+                .with_context(|| format!("creating {tmp:?}"))?;
+            for p in latest.values() {
+                writeln!(f, "{}", p.to_json())?;
+            }
+            f.sync_all().ok();
+        }
+        fs::rename(&tmp, &self.path)
+            .with_context(|| format!("replacing {:?}", self.path))?;
+        Ok(latest.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::PLAN_VERSION;
+
+    fn plan(fp: &str, bench: &str, boundary: &str, bucket: Vec<usize>, engine: &str) -> Plan {
+        Plan {
+            version: PLAN_VERSION,
+            fingerprint: fp.into(),
+            bench: bench.into(),
+            boundary: boundary.into(),
+            bucket,
+            engine: engine.into(),
+            threads: 1,
+            tb: 2,
+            tile_w: None,
+            gsps: 1.0,
+            source: "tuned".into(),
+            seed: 0,
+        }
+    }
+
+    fn temp(tag: &str) -> PlanStore {
+        let path = std::env::temp_dir()
+            .join(format!("tetris-store-{tag}-{}.jsonl", std::process::id()));
+        let _ = fs::remove_file(&path);
+        PlanStore::open(path)
+    }
+
+    #[test]
+    fn missing_store_is_empty_not_an_error() {
+        let s = temp("missing");
+        assert!(s.load().is_empty());
+        let fp = Fingerprint::synthetic(4, 64, 1.0);
+        assert!(s.lookup(&fp, "heat2d", "dirichlet", &[64, 64]).is_none());
+        assert!(s.lookup_near(&fp, "heat2d", "dirichlet", &[64, 64]).is_none());
+    }
+
+    #[test]
+    fn append_lookup_latest_wins_and_compact_is_idempotent() {
+        let s = temp("latest");
+        let fp = Fingerprint::synthetic(4, 64, 1.0);
+        s.append(&plan(&fp.id(), "heat2d", "periodic", vec![64, 64], "simd")).unwrap();
+        s.append(&plan(&fp.id(), "heat2d", "periodic", vec![64, 64], "tetris-cpu")).unwrap();
+        s.append(&plan(&fp.id(), "heat2d", "periodic", vec![128, 128], "tiled")).unwrap();
+        assert_eq!(s.load().len(), 3);
+        assert_eq!(
+            s.lookup(&fp, "heat2d", "periodic", &[60, 60]).unwrap().engine,
+            "tetris-cpu",
+            "the later record for a key must win"
+        );
+        assert_eq!(s.compact().unwrap(), 2, "duplicate key collapses");
+        assert_eq!(s.load().len(), 2);
+        assert_eq!(s.lookup(&fp, "heat2d", "periodic", &[60, 60]).unwrap().engine, "tetris-cpu");
+        assert_eq!(s.compact().unwrap(), 2, "compacting a compact store changes nothing");
+        let _ = fs::remove_file(&s.path);
+    }
+
+    #[test]
+    fn corrupt_lines_are_skipped_and_the_rest_recovered() {
+        let s = temp("corrupt");
+        s.append(&plan("c4/l64/g0", "heat1d", "dirichlet", vec![64], "simd")).unwrap();
+        {
+            let mut f = fs::OpenOptions::new().append(true).open(&s.path).unwrap();
+            writeln!(f, "{{\"bench\": \"heat1d\", \"bucket\": [64,").unwrap(); // torn write
+            writeln!(f, "not json at all").unwrap();
+        }
+        s.append(&plan("c4/l64/g0", "heat1d", "dirichlet", vec![128], "tiled")).unwrap();
+        let plans = s.load();
+        assert_eq!(plans.len(), 2, "both valid records recovered around the corruption");
+        assert_eq!(s.compact().unwrap(), 2);
+        assert_eq!(s.load().len(), 2, "compaction heals the store");
+        let _ = fs::remove_file(&s.path);
+    }
+
+    #[test]
+    fn lookup_filters_by_fingerprint_and_near_finds_closest_bucket() {
+        let s = temp("near");
+        let ours = Fingerprint::synthetic(4, 64, 1.0);
+        let foreign = Fingerprint::synthetic(96, 128, 300.0);
+        s.append(&plan(&foreign.id(), "heat2d", "dirichlet", vec![64, 64], "naive")).unwrap();
+        s.append(&plan(&ours.id(), "heat2d", "dirichlet", vec![256, 256], "tetris-cpu")).unwrap();
+        s.append(&plan(&ours.id(), "heat2d", "dirichlet", vec![1024, 1024], "tiled")).unwrap();
+        // exact bucket exists only under the foreign fingerprint: ignored
+        assert!(s.lookup(&ours, "heat2d", "dirichlet", &[64, 64]).is_none());
+        // near lookup picks our 256-bucket plan (distance 4), never the
+        // foreign exact match
+        let near = s.lookup_near(&ours, "heat2d", "dirichlet", &[64, 64]).unwrap();
+        assert_eq!(near.engine, "tetris-cpu");
+        // and from above, the 1024 plan is closer to 2048-sized shapes
+        let near = s.lookup_near(&ours, "heat2d", "dirichlet", &[2000, 2000]).unwrap();
+        assert_eq!(near.engine, "tiled");
+        // other boundary kind / bench: nothing
+        assert!(s.lookup_near(&ours, "heat2d", "periodic", &[256, 256]).is_none());
+        assert!(s.lookup_near(&ours, "heat3d", "dirichlet", &[256, 256]).is_none());
+        let _ = fs::remove_file(&s.path);
+    }
+}

@@ -8,14 +8,31 @@
 //! the session amortizes worker profiling and partition convergence
 //! across the whole job stream — the two levers behind the `serve`
 //! bench rung's batched-vs-unbatched gap.
+//!
+//! Two plan-store hooks close the autotuning loop (`--plan-store`):
+//! a **new session consults the store** so a fresh server starts from
+//! the best known `(engine, Tb, tile)` instead of defaults, and batches
+//! **write back observed plans**.  Stored `tuned` gsps figures come
+//! from proxy grids (a different basis than full-scale serving), so the
+//! write-back trigger compares live-vs-live: an *unplanned* session
+//! records its configuration on first observation (future `auto`
+//! resolutions reuse it), while a *planned* session's first batch only
+//! establishes the live baseline and later batches write back when they
+//! beat it by >20% — serve traffic keeps the store honest without ever
+//! running a search inline.
+//!
+//! Cold sessions are evicted by TTL and LRU cap ([`Executor::evict_cold`],
+//! swept after every dispatched batch): an evicted session releases its
+//! workers and cached partition, and `STATS` counts the evictions.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::util::error::{Context, Result};
 
 use crate::coordinator::Worker;
+use crate::plan::{Fingerprint, Plan, PlanStore};
 use crate::stencil::Field;
 
 use super::job::{JobResult, JobSpec};
@@ -23,9 +40,12 @@ use super::queue::{AdmissionQueue, QueuedJob};
 use super::session::Session;
 use super::stats::ServeStats;
 
-/// Builds the worker set for a new session: `(bench, shape, tb)`.
-pub type WorkerFactory =
-    Arc<dyn Fn(&str, &[usize], usize) -> Result<Vec<Box<dyn Worker>>> + Send + Sync>;
+/// Builds the worker set for a new session: `(bench, shape, tb, plan)`.
+/// A stored plan, when present, names the engine/thread mix the session
+/// should start from.
+pub type WorkerFactory = Arc<
+    dyn Fn(&str, &[usize], usize, Option<&Plan>) -> Result<Vec<Box<dyn Worker>>> + Send + Sync,
+>;
 
 /// Per-session public counters for `STATS` (kept outside the session
 /// mutex so a long-running batch never blocks a stats probe).
@@ -35,6 +55,27 @@ pub struct SessionMeta {
     pub jobs: u64,
     pub cache_hits: u64,
     pub invalidations: u64,
+    /// Worker identities ("+"-joined), set at session creation.
+    pub engine: String,
+    /// Fused steps per block the session runs.
+    pub tb: usize,
+    /// Whether creation adopted a stored plan (vs defaults).
+    pub planned: bool,
+    /// Thread count the session's lead worker runs (plan's figure when
+    /// planned, the server default otherwise) — what a write-back must
+    /// record, NOT the raw server flag.
+    pub threads: usize,
+    /// Tile-width override the session runs (from the plan).
+    pub tile_w: Option<usize>,
+    /// Best *live* GStencils/s observed for this key (0 until the first
+    /// batch; stored-plan gsps is proxy-grid basis and never compared).
+    pub best_gsps: f64,
+}
+
+/// A live session plus its LRU timestamp.
+struct SessionEntry {
+    session: Arc<Mutex<Session>>,
+    last_used: Instant,
 }
 
 /// Execution policy shared by every dispatcher thread.
@@ -49,6 +90,31 @@ pub struct ExecConfig {
     /// Session partition-cache invalidation threshold (L1 share drift
     /// over total units).
     pub drift_threshold: f64,
+    /// Plan store consulted at session creation and written back from
+    /// live runs (`None` = planning disabled).
+    pub plan_store: Option<Arc<PlanStore>>,
+    /// Machine fingerprint for store keys (`None` = detect lazily on
+    /// first use; tests inject one to keep keys predictable).
+    pub fingerprint: Option<Fingerprint>,
+    /// Evict sessions idle longer than this (`ZERO` = never).
+    pub session_ttl: Duration,
+    /// LRU cap on live sessions (`0` = unbounded).
+    pub max_sessions: usize,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig {
+            scale: 0.25,
+            threads: 2,
+            adapt_every: 2,
+            drift_threshold: 0.25,
+            plan_store: None,
+            fingerprint: None,
+            session_ttl: Duration::ZERO,
+            max_sessions: 0,
+        }
+    }
 }
 
 pub struct Executor {
@@ -56,8 +122,9 @@ pub struct Executor {
     pub stats: Arc<Mutex<ServeStats>>,
     cfg: ExecConfig,
     factory: WorkerFactory,
-    sessions: Mutex<HashMap<String, Arc<Mutex<Session>>>>,
+    sessions: Mutex<HashMap<String, SessionEntry>>,
     meta: Mutex<HashMap<String, SessionMeta>>,
+    fp: Mutex<Option<Fingerprint>>,
 }
 
 impl Executor {
@@ -74,19 +141,21 @@ impl Executor {
             factory,
             sessions: Mutex::new(HashMap::new()),
             meta: Mutex::new(HashMap::new()),
+            fp: Mutex::new(None),
         }
     }
 
     /// Dispatcher thread body: drain batches until the queue closes and
-    /// empties.  Every popped job receives exactly one reply line.
+    /// empties.  Every popped job receives exactly one reply line; cold
+    /// sessions are swept after each batch.
     pub fn dispatch_loop(&self, max_batch: usize) {
         while let Some(batch) = self.queue.pop_batch(max_batch) {
             self.run_jobs(batch);
         }
     }
 
-    /// Session key + default shape for a spec.
-    fn plan(&self, spec: &JobSpec) -> Result<(String, Vec<usize>, usize)> {
+    /// Session key + default shape + default Tb for a spec.
+    fn session_key(&self, spec: &JobSpec) -> Result<(String, Vec<usize>, usize)> {
         crate::stencil::spec::get(&spec.bench)
             .with_context(|| format!("unknown bench {:?}", spec.bench))?;
         let (default_shape, _, tb) = crate::bench::scaled_problem(&spec.bench, self.cfg.scale);
@@ -95,27 +164,60 @@ impl Executor {
         Ok((key, shape, tb))
     }
 
-    fn session_for(&self, spec: &JobSpec) -> Result<(String, Arc<Mutex<Session>>)> {
-        let (key, shape, tb) = self.plan(spec)?;
-        if let Some(s) = self.sessions.lock().unwrap().get(&key) {
-            return Ok((key, s.clone()));
+    /// The machine fingerprint for plan keys (configured, else detected
+    /// once on first use).
+    fn fingerprint(&self) -> Fingerprint {
+        let mut g = self.fp.lock().unwrap();
+        if g.is_none() {
+            *g = Some(
+                self.cfg.fingerprint.clone().unwrap_or_else(|| Fingerprint::detect(100)),
+            );
         }
+        g.clone().unwrap()
+    }
+
+    fn session_for(&self, spec: &JobSpec) -> Result<(String, Vec<usize>, Arc<Mutex<Session>>)> {
+        let (key, shape, default_tb) = self.session_key(spec)?;
+        if let Some(e) = self.sessions.lock().unwrap().get_mut(&key) {
+            e.last_used = Instant::now();
+            return Ok((key, shape, e.session.clone()));
+        }
+        // A stored plan decides the session's engine mix and Tb; without
+        // one the factory falls back to its defaults.
+        let plan = self.cfg.plan_store.as_ref().and_then(|store| {
+            store.lookup(&self.fingerprint(), &spec.bench, spec.boundary.kind(), &shape)
+        });
+        let tb = plan.as_ref().map(|p| p.tb.max(1)).unwrap_or(default_tb);
         // Build workers + profile OUTSIDE the map lock: session creation
         // takes real timed slab runs, and other dispatchers must keep
         // resolving existing sessions meanwhile.  A racing creator for
         // the same key wastes one profile; first insert wins.
-        let workers = (self.factory)(&spec.bench, &shape, tb)?;
-        let session = Arc::new(Mutex::new(Session::new(
+        let workers = (self.factory)(&spec.bench, &shape, tb, plan.as_ref())?;
+        let built = Session::new(
             &spec.bench,
-            shape,
+            shape.clone(),
             tb,
             workers,
             self.cfg.adapt_every,
             self.cfg.drift_threshold,
-        )?));
+        )?;
+        {
+            let mut meta = self.meta.lock().unwrap();
+            let m = meta.entry(key.clone()).or_default();
+            m.engine = built.worker_names().join("+");
+            m.tb = tb;
+            m.planned = plan.is_some();
+            m.threads =
+                plan.as_ref().map(|p| p.threads.max(1)).unwrap_or(self.cfg.threads.max(1));
+            m.tile_w = plan.as_ref().and_then(|p| p.tile_w);
+            m.best_gsps = 0.0;
+        }
+        let session = Arc::new(Mutex::new(built));
         let mut sessions = self.sessions.lock().unwrap();
-        let entry = sessions.entry(key.clone()).or_insert(session);
-        Ok((key, entry.clone()))
+        let entry = sessions
+            .entry(key.clone())
+            .or_insert_with(|| SessionEntry { session, last_used: Instant::now() });
+        Ok((key, shape, entry.session.clone()))
     }
 
     /// Snapshot of per-session counters (for `STATS`).
@@ -125,6 +227,54 @@ impl Executor {
             meta.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
         out.sort_by(|a, b| a.0.cmp(&b.0));
         out
+    }
+
+    /// Live sessions (post-eviction).
+    pub fn session_count(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    /// TTL + LRU sweep: drop sessions idle past `session_ttl`, then trim
+    /// past `max_sessions` oldest-first.  Dropping an entry releases the
+    /// session's workers and cached partition (a batch already running
+    /// on it finishes through its own `Arc`).  Returns evicted count.
+    pub fn evict_cold(&self) -> usize {
+        let mut evicted: Vec<String> = Vec::new();
+        {
+            let mut sessions = self.sessions.lock().unwrap();
+            if self.cfg.session_ttl > Duration::ZERO {
+                let now = Instant::now();
+                let cold: Vec<String> = sessions
+                    .iter()
+                    .filter(|(_, e)| now.duration_since(e.last_used) > self.cfg.session_ttl)
+                    .map(|(k, _)| k.clone())
+                    .collect();
+                for k in cold {
+                    sessions.remove(&k);
+                    evicted.push(k);
+                }
+            }
+            if self.cfg.max_sessions > 0 && sessions.len() > self.cfg.max_sessions {
+                let mut by_age: Vec<(String, Instant)> =
+                    sessions.iter().map(|(k, e)| (k.clone(), e.last_used)).collect();
+                by_age.sort_by_key(|(_, t)| *t);
+                let excess = sessions.len() - self.cfg.max_sessions;
+                for (k, _) in by_age.into_iter().take(excess) {
+                    sessions.remove(&k);
+                    evicted.push(k);
+                }
+            }
+        }
+        if !evicted.is_empty() {
+            // Evicted keys drop their STATS row too: cumulative history
+            // for a cold key is exactly what the sweep exists to shed.
+            let mut meta = self.meta.lock().unwrap();
+            for k in &evicted {
+                meta.remove(k);
+            }
+            self.stats.lock().unwrap().evictions += evicted.len() as u64;
+        }
+        evicted.len()
     }
 
     /// Run one coalesced batch end-to-end and reply to every job.
@@ -154,27 +304,52 @@ impl Executor {
             }
         }
         self.queue.release(released);
+        self.evict_cold();
     }
 
     fn try_run(&self, batch: &[QueuedJob]) -> Result<Vec<JobResult>> {
         let spec0 = &batch[0].spec;
-        let (key, session) = self.session_for(spec0)?;
+        let (key, shape, session) = self.session_for(spec0)?;
         let mut sess = session.lock().unwrap();
         let steps = sess.align_steps(spec0.steps);
+        let tb = sess.tb();
         let inputs: Vec<Field> = batch.iter().map(|j| j.input.clone()).collect();
         let t0 = Instant::now();
-        let (outs, _metrics) = sess.run_batch(spec0.boundary, &inputs, steps)?;
+        let (outs, metrics) = sess.run_batch(spec0.boundary, &inputs, steps)?;
         let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
         let shares = sess.shares();
-        {
+        let gsps = metrics.gstencils_per_sec();
+        let write_back = {
             let mut meta = self.meta.lock().unwrap();
-            let m = meta.entry(key).or_default();
-            m.shares = shares.clone();
-            m.jobs = sess.jobs_run;
-            m.cache_hits = sess.cache_hits;
-            m.invalidations = sess.invalidations;
-        }
+            match meta.get_mut(&key) {
+                Some(m) => {
+                    m.shares = shares.clone();
+                    m.jobs = sess.jobs_run;
+                    m.cache_hits = sess.cache_hits;
+                    m.invalidations = sess.invalidations;
+                    let first = m.best_gsps == 0.0;
+                    let improved =
+                        gsps.is_finite() && gsps > 0.0 && gsps > m.best_gsps * 1.2;
+                    if improved {
+                        m.best_gsps = gsps;
+                    }
+                    // A planned session's first batch only establishes
+                    // the live baseline (the stored gsps is proxy-grid
+                    // basis, not comparable); unplanned sessions record
+                    // their configuration immediately.
+                    let write =
+                        self.cfg.plan_store.is_some() && improved && !(m.planned && first);
+                    write.then(|| (m.engine.clone(), m.threads, m.tile_w))
+                }
+                // Evicted mid-batch by another dispatcher: the row is
+                // gone on purpose — don't resurrect a ghost entry.
+                None => None,
+            }
+        };
         drop(sess);
+        if let Some((engine_label, threads, tile_w)) = write_back {
+            self.write_back_observed(spec0, &shape, &engine_label, threads, tb, tile_w, gsps);
+        }
         Ok(batch
             .iter()
             .zip(outs)
@@ -200,6 +375,52 @@ impl Executor {
             })
             .collect())
     }
+
+    /// Record what a live session measured as an `observed` plan,
+    /// carrying the configuration the session *actually ran* (plan
+    /// threads/tile when planned, factory defaults otherwise) — but
+    /// only when the lead worker's engine is a name the store can
+    /// resolve again (artifact workers are machine-local, not plans).
+    fn write_back_observed(
+        &self,
+        spec: &JobSpec,
+        shape: &[usize],
+        engine_label: &str,
+        threads: usize,
+        tb: usize,
+        tile_w: Option<usize>,
+        gsps: f64,
+    ) {
+        let Some(store) = &self.cfg.plan_store else { return };
+        let Some(bare) = engine_label
+            .split('+')
+            .next()
+            .and_then(|n| n.strip_prefix("native:"))
+        else {
+            return;
+        };
+        if crate::plan::resolve_engine(bare, 1).is_none() {
+            return;
+        }
+        let fp = self.fingerprint();
+        let plan = Plan {
+            version: crate::plan::PLAN_VERSION,
+            fingerprint: fp.id(),
+            bench: spec.bench.clone(),
+            boundary: spec.boundary.kind().to_string(),
+            bucket: crate::plan::shape_bucket(shape),
+            engine: bare.to_string(),
+            threads: threads.max(1),
+            tb,
+            tile_w,
+            gsps,
+            source: "observed".to_string(),
+            seed: 0,
+        };
+        if let Err(e) = store.append(&plan) {
+            eprintln!("tetris serve: plan write-back failed: {e}");
+        }
+    }
 }
 
 #[cfg(test)]
@@ -211,7 +432,7 @@ mod tests {
     use std::sync::mpsc;
 
     fn native_factory() -> WorkerFactory {
-        Arc::new(|_bench, _shape, _tb| {
+        Arc::new(|_bench, _shape, _tb, _plan| {
             Ok(vec![
                 Box::new(NativeWorker::new(crate::engine::by_name("simd", 1).unwrap(), 1 << 30))
                     as Box<dyn Worker>,
@@ -221,10 +442,20 @@ mod tests {
     }
 
     fn executor() -> Executor {
+        executor_with(ExecConfig {
+            scale: 0.05,
+            threads: 1,
+            adapt_every: 0,
+            drift_threshold: 0.25,
+            ..Default::default()
+        })
+    }
+
+    fn executor_with(cfg: ExecConfig) -> Executor {
         Executor::new(
             Arc::new(AdmissionQueue::new(64, 1 << 30)),
             Arc::new(Mutex::new(ServeStats::new())),
-            ExecConfig { scale: 0.05, threads: 1, adapt_every: 0, drift_threshold: 0.25 },
+            cfg,
             native_factory(),
         )
     }
@@ -248,22 +479,26 @@ mod tests {
         )
     }
 
-    #[test]
-    fn batch_replies_to_every_job_in_order() {
-        let exec = executor();
-        let specs: Vec<JobSpec> = (0..3)
-            .map(|i| JobSpec {
-                id: format!("j{i}"),
+    fn heat1d_job(id: &str, seed: u64, seq: u64) -> (QueuedJob, mpsc::Receiver<String>) {
+        queued(
+            JobSpec {
+                id: id.into(),
                 bench: "heat1d".into(),
                 shape: Some(vec![24]),
                 steps: 8,
-                seed: 90 + i,
+                seed,
                 priority: Priority::Normal,
                 ..Default::default()
-            })
-            .collect();
+            },
+            seq,
+        )
+    }
+
+    #[test]
+    fn batch_replies_to_every_job_in_order() {
+        let exec = executor();
         let (jobs, rxs): (Vec<_>, Vec<_>) =
-            specs.into_iter().enumerate().map(|(i, s)| queued(s, i as u64)).unzip();
+            (0..3).map(|i| heat1d_job(&format!("j{i}"), 90 + i, i)).unzip();
         exec.run_jobs(jobs);
         for (i, rx) in rxs.iter().enumerate() {
             let r = JobResult::parse_line(&rx.recv().unwrap()).unwrap();
@@ -283,15 +518,7 @@ mod tests {
     #[test]
     fn bad_bench_becomes_structured_error_reply() {
         let exec = executor();
-        let (mut job, rx) = queued(
-            JobSpec {
-                id: "bad".into(),
-                bench: "heat1d".into(),
-                shape: Some(vec![24]),
-                ..Default::default()
-            },
-            0,
-        );
+        let (mut job, rx) = heat1d_job("bad", 1, 0);
         job.spec.bench = "not-a-bench".into();
         exec.run_jobs(vec![job]);
         let r = JobResult::parse_line(&rx.recv().unwrap()).unwrap();
@@ -304,16 +531,7 @@ mod tests {
     fn sessions_are_shared_per_key_and_counted() {
         let exec = executor();
         for seed in 0..2 {
-            let (job, rx) = queued(
-                JobSpec {
-                    id: format!("s{seed}"),
-                    bench: "heat1d".into(),
-                    shape: Some(vec![24]),
-                    seed,
-                    ..Default::default()
-                },
-                seed,
-            );
+            let (job, rx) = heat1d_job(&format!("s{seed}"), seed, seed);
             exec.run_jobs(vec![job]);
             assert!(JobResult::parse_line(&rx.recv().unwrap()).unwrap().ok);
         }
@@ -321,37 +539,24 @@ mod tests {
         assert_eq!(meta.len(), 1, "same (bench, kind, shape) must share one session");
         assert_eq!(meta[0].1.jobs, 2);
         assert!(meta[0].0.contains("heat1d/dirichlet"));
+        assert!(meta[0].1.engine.contains("simd"));
+        assert!(meta[0].1.tb >= 1);
+        assert!(!meta[0].1.planned, "no plan store configured");
         // same bench, different boundary kind: a second session
-        let (job, rx) = queued(
-            JobSpec {
-                id: "p".into(),
-                bench: "heat1d".into(),
-                shape: Some(vec![24]),
-                boundary: Boundary::Periodic,
-                ..Default::default()
-            },
-            2,
-        );
+        let (mut job, rx) = heat1d_job("p", 3, 2);
+        job.spec.boundary = Boundary::Periodic;
         exec.run_jobs(vec![job]);
         assert!(JobResult::parse_line(&rx.recv().unwrap()).unwrap().ok);
         assert_eq!(exec.session_meta().len(), 2);
+        assert_eq!(exec.session_count(), 2);
     }
 
     #[test]
     fn return_field_round_trips_bits() {
         let exec = executor();
-        let (job, rx) = queued(
-            JobSpec {
-                id: "f".into(),
-                bench: "heat1d".into(),
-                shape: Some(vec![24]),
-                steps: 4,
-                seed: 7,
-                return_field: true,
-                ..Default::default()
-            },
-            0,
-        );
+        let (mut job, rx) = heat1d_job("f", 7, 0);
+        job.spec.steps = 4;
+        job.spec.return_field = true;
         let input = job.input.clone();
         exec.run_jobs(vec![job]);
         let r = JobResult::parse_line(&rx.recv().unwrap()).unwrap();
@@ -378,5 +583,119 @@ mod tests {
         for (a, b) in got.iter().zip(want.data()) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn ttl_sweep_evicts_cold_sessions_and_counts() {
+        let exec = executor_with(ExecConfig {
+            scale: 0.05,
+            threads: 1,
+            adapt_every: 0,
+            session_ttl: Duration::from_millis(150),
+            ..Default::default()
+        });
+        let (job, rx) = heat1d_job("warm", 1, 0);
+        exec.run_jobs(vec![job]);
+        assert!(JobResult::parse_line(&rx.recv().unwrap()).unwrap().ok);
+        assert_eq!(exec.session_count(), 1);
+        std::thread::sleep(Duration::from_millis(400));
+        assert_eq!(exec.evict_cold(), 1, "idle session past the TTL must go");
+        assert_eq!(exec.session_count(), 0);
+        assert_eq!(exec.session_meta().len(), 0, "STATS row released with the session");
+        assert_eq!(exec.stats.lock().unwrap().evictions, 1);
+        // the key simply recreates on the next job
+        let (job, rx) = heat1d_job("back", 2, 1);
+        exec.run_jobs(vec![job]);
+        assert!(JobResult::parse_line(&rx.recv().unwrap()).unwrap().ok);
+        assert_eq!(exec.session_count(), 1);
+        assert_eq!(exec.session_meta()[0].1.jobs, 1, "fresh session, fresh counters");
+    }
+
+    #[test]
+    fn lru_cap_trims_oldest_session_after_dispatch() {
+        let exec = executor_with(ExecConfig {
+            scale: 0.05,
+            threads: 1,
+            adapt_every: 0,
+            max_sessions: 1,
+            ..Default::default()
+        });
+        let (job, rx) = heat1d_job("a", 1, 0);
+        exec.run_jobs(vec![job]);
+        assert!(JobResult::parse_line(&rx.recv().unwrap()).unwrap().ok);
+        let (mut job, rx) = heat1d_job("b", 2, 1);
+        job.spec.boundary = Boundary::Periodic; // second key
+        exec.run_jobs(vec![job]);
+        assert!(JobResult::parse_line(&rx.recv().unwrap()).unwrap().ok);
+        // run_jobs sweeps after the batch: only the newest key survives
+        assert_eq!(exec.session_count(), 1);
+        assert!(exec.stats.lock().unwrap().evictions >= 1);
+        assert!(exec.session_meta()[0].0.contains("periodic"), "LRU keeps the fresh key");
+    }
+
+    /// The observed record must carry the configuration the session
+    /// actually ran — plan threads and tile override, not the raw
+    /// server flags — and artifact-led sessions must never write plans.
+    #[test]
+    fn write_back_records_actual_session_config() {
+        let path = std::env::temp_dir()
+            .join(format!("tetris-writeback-cfg-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let store = Arc::new(PlanStore::open(&path));
+        let exec = executor_with(ExecConfig {
+            threads: 1, // server flag differs from the session's 4 below
+            plan_store: Some(store.clone()),
+            fingerprint: Some(Fingerprint::synthetic(2, 64, 1.0)),
+            ..Default::default()
+        });
+        let spec = JobSpec { bench: "heat2d".into(), ..Default::default() };
+        exec.write_back_observed(
+            &spec,
+            &[64, 64],
+            "native:tetris-cpu+native:tetris-cpu",
+            4,
+            4,
+            Some(64),
+            1.5,
+        );
+        let plans = store.load();
+        assert_eq!(plans.len(), 1);
+        let p = &plans[0];
+        assert_eq!(p.engine, "tetris-cpu");
+        assert_eq!(p.threads, 4, "must record the session's threads, not the server flag");
+        assert_eq!(p.tile_w, Some(64), "tile override must survive the write-back");
+        assert_eq!(p.tb, 4);
+        assert_eq!(p.source, "observed");
+        exec.write_back_observed(&spec, &[64, 64], "xla:heat2d_block+native:simd", 2, 4, None, 9.9);
+        assert_eq!(store.load().len(), 1, "artifact-led sessions are machine-local, not plans");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn unplanned_session_writes_back_an_observed_plan() {
+        let path = std::env::temp_dir()
+            .join(format!("tetris-writeback-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let store = Arc::new(PlanStore::open(&path));
+        let exec = executor_with(ExecConfig {
+            scale: 0.05,
+            threads: 1,
+            adapt_every: 0,
+            plan_store: Some(store.clone()),
+            fingerprint: Some(Fingerprint::synthetic(2, 64, 1.0)),
+            ..Default::default()
+        });
+        let (job, rx) = heat1d_job("w", 1, 0);
+        exec.run_jobs(vec![job]);
+        assert!(JobResult::parse_line(&rx.recv().unwrap()).unwrap().ok);
+        let plans = store.load();
+        assert!(
+            plans.iter().any(|p| p.source == "observed"
+                && p.bench == "heat1d"
+                && p.engine == "simd"
+                && p.gsps > 0.0),
+            "live run must record an observed plan: {plans:?}"
+        );
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -13,7 +13,10 @@
 //!   across jobs, invalidating on retune drift;
 //! * [`batcher`] — coalesces queued jobs with identical spec/boundary
 //!   into one multi-field dispatch ([`crate::coordinator::Scheduler::run_batch`]),
-//!   amortizing pool spawns, ghost bookkeeping and retunes;
+//!   amortizing pool spawns, ghost bookkeeping and retunes; consults
+//!   the [`crate::plan`] store at session creation (adopting the tuned
+//!   engine/Tb), writes back observed plans from live runs, and evicts
+//!   cold sessions by TTL/LRU;
 //! * [`server`] — `std::net` TCP line protocol (JSON job in, JSON
 //!   result out, `STATS`, graceful `SHUTDOWN`);
 //! * [`client`] — blocking pipelined client (`tetris submit`);

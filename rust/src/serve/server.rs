@@ -24,6 +24,7 @@ use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 use crate::coordinator::{NativeWorker, Worker, XlaWorker};
+use crate::plan::{Candidate, Fingerprint, Plan, PlanStore};
 use crate::runtime::XlaService;
 
 use super::batcher::{ExecConfig, Executor, WorkerFactory};
@@ -52,6 +53,17 @@ pub struct ServeConfig {
     pub drift_threshold: f64,
     /// Default problem scale for benches without an explicit shape.
     pub scale: f64,
+    /// Evict sessions idle longer than this (`--session-ttl`; ZERO =
+    /// keep forever).
+    pub session_ttl: Duration,
+    /// LRU cap on live sessions (`--max-sessions`; 0 = unbounded).
+    pub max_sessions: usize,
+    /// Plan-store path (`--plan-store`; None = planning disabled, the
+    /// default here so embedded/test servers stay hermetic — the CLI
+    /// defaults to the user store).
+    pub plan_store: Option<String>,
+    /// Machine fingerprint for plan keys (None = detect on first use).
+    pub fingerprint: Option<Fingerprint>,
 }
 
 impl Default for ServeConfig {
@@ -66,25 +78,53 @@ impl Default for ServeConfig {
             adapt_every: 2,
             drift_threshold: 0.25,
             scale: 0.25,
+            session_ttl: Duration::ZERO,
+            max_sessions: 0,
+            plan_store: None,
+            fingerprint: None,
         }
     }
 }
 
-/// Default worker mix for a new session: the AOT artifact worker rides
-/// along when the artifacts exist *and* fit the session's geometry
-/// (fused steps == session Tb, matching non-split dims, unit-aligned
-/// rows); otherwise two native workers serve alone.  The artifact-less
-/// CI container therefore serves fine — with a one-line warning instead
-/// of a refusal.
+/// Default worker mix for a new session.
+///
+/// With a stored [`Plan`] the session runs a homogeneous pair of the
+/// plan's engine (plan threads + a single-thread sibling): adopting the
+/// tuned choice while keeping results bit-identical to the fixed-engine
+/// path — the slab split across equal engines is numerically invisible.
+///
+/// Without a plan, the AOT artifact worker rides along when the
+/// artifacts exist *and* fit the session's geometry (fused steps ==
+/// session Tb, matching non-split dims, unit-aligned rows); otherwise
+/// two native workers serve alone.  The artifact-less CI container
+/// therefore serves fine — with a one-line warning instead of a
+/// refusal.
 pub fn default_worker_factory(threads: usize) -> WorkerFactory {
-    Arc::new(move |bench, shape, tb| {
+    Arc::new(move |bench, shape, tb, plan: Option<&Plan>| {
         let native = |eng: &str, t: usize| -> Result<Box<dyn Worker>> {
             Ok(Box::new(NativeWorker::new(
-                crate::engine::by_name(eng, t)
+                crate::plan::resolve_engine(eng, t)
                     .with_context(|| format!("unknown engine {eng}"))?,
                 1 << 33,
             )))
         };
+        if let Some(p) = plan {
+            // Candidate::build honors the whole tuned configuration —
+            // including the tile-width override resolve_engine alone
+            // would silently drop.
+            let lead = p.candidate().build();
+            let sibling = Candidate { threads: 1, ..p.candidate() }.build();
+            if let (Some(a), Some(b)) = (lead, sibling) {
+                return Ok(vec![
+                    Box::new(NativeWorker::new(a, 1 << 33)) as Box<dyn Worker>,
+                    Box::new(NativeWorker::new(b, 1 << 33)),
+                ]);
+            }
+            eprintln!(
+                "tetris serve: stored plan names unknown engine {:?}; using defaults",
+                p.engine
+            );
+        }
         match XlaService::spawn_default() {
             Ok(svc) => {
                 if let Some(xla) = compatible_artifact(&svc, bench, shape, tb) {
@@ -196,6 +236,10 @@ impl Server {
                 threads: cfg.threads,
                 adapt_every: cfg.adapt_every,
                 drift_threshold: cfg.drift_threshold,
+                plan_store: cfg.plan_store.as_ref().map(|p| Arc::new(PlanStore::open(p))),
+                fingerprint: cfg.fingerprint.clone(),
+                session_ttl: cfg.session_ttl,
+                max_sessions: cfg.max_sessions,
             },
             factory,
         ));
@@ -389,6 +433,9 @@ fn stats_line(ctx: &Ctx) -> Json {
         s.insert("jobs".to_string(), Json::Num(meta.jobs as f64));
         s.insert("cache_hits".to_string(), Json::Num(meta.cache_hits as f64));
         s.insert("invalidations".to_string(), Json::Num(meta.invalidations as f64));
+        s.insert("engine".to_string(), Json::Str(meta.engine.clone()));
+        s.insert("tb".to_string(), Json::Num(meta.tb as f64));
+        s.insert("planned".to_string(), Json::Bool(meta.planned));
         sessions.insert(key, Json::Obj(s));
     }
     m.insert("sessions".to_string(), Json::Obj(sessions));

@@ -15,6 +15,13 @@
 //!   cache is *invalidated* and replaced by the measured shares, which
 //!   beat re-profiling because they come from real blocks, not a
 //!   synthetic unit-slab probe.
+//!
+//! Sessions are disposable by design: the executor's TTL/LRU sweep
+//! drops cold `(bench, boundary-kind, shape)` keys, and dropping a
+//! session releases its workers *and* the cached partition.  Nothing is
+//! lost that a plan-store lookup (or one warm-up job) cannot rebuild —
+//! which is exactly why planned sessions also start from the stored
+//! plan's engine/Tb instead of defaults.
 
 use crate::util::error::{Context, Result};
 
@@ -87,6 +94,11 @@ impl Session {
 
     pub fn tb(&self) -> usize {
         self.sched.tb
+    }
+
+    /// Worker identities, in partition order (`STATS` + plan write-back).
+    pub fn worker_names(&self) -> Vec<String> {
+        self.sched.workers.iter().map(|w| w.name()).collect()
     }
 
     /// Round a requested step count up to a whole number of Tb-blocks.
@@ -164,6 +176,20 @@ mod tests {
         }
         assert_eq!(sess.jobs_run, 3);
         assert_eq!(sess.cache_hits + sess.invalidations, 3);
+    }
+
+    #[test]
+    fn worker_names_report_partition_order() {
+        let sess = Session::new(
+            "heat1d",
+            vec![16],
+            2,
+            vec![native("simd"), native("autovec")],
+            0,
+            0.25,
+        )
+        .unwrap();
+        assert_eq!(sess.worker_names(), vec!["native:simd", "native:autovec"]);
     }
 
     #[test]

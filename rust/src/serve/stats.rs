@@ -24,6 +24,8 @@ pub struct ServeStats {
     pub batches: u64,
     /// Jobs that rode a batch of width >= 2.
     pub batched_jobs: u64,
+    /// Sessions dropped by the TTL/LRU sweep.
+    pub evictions: u64,
     buckets: [u64; BUCKETS],
     count: u64,
 }
@@ -69,6 +71,7 @@ impl ServeStats {
         m.insert("errors".into(), Json::Num(self.errors as f64));
         m.insert("batches".into(), Json::Num(self.batches as f64));
         m.insert("batched_jobs".into(), Json::Num(self.batched_jobs as f64));
+        m.insert("evictions".into(), Json::Num(self.evictions as f64));
         let mut lat = BTreeMap::new();
         lat.insert("count".into(), Json::Num(self.count as f64));
         lat.insert("p50_ms".into(), Json::Num(self.percentile_ms(0.50)));

@@ -1,0 +1,121 @@
+//! Integration tests of the persistent plan store against the
+//! checked-in golden file (`tests/golden/plan.jsonl`): wire-format
+//! round-trip, unknown-field tolerance, corrupt-line recovery, and the
+//! fingerprint-mismatch guarantee (foreign plans are ignored, never
+//! misapplied).
+
+use tetris::plan::{Fingerprint, Plan, PlanStore, PLAN_VERSION};
+use tetris::util::json::Json;
+
+fn golden_path() -> String {
+    format!("{}/tests/golden/plan.jsonl", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// This machine, as the golden records describe it (`c8/l64/g2`).
+fn golden_fp() -> Fingerprint {
+    Fingerprint::synthetic(8, 64, 2.0)
+}
+
+#[test]
+fn golden_canonical_lines_round_trip_byte_identically() {
+    let text = std::fs::read_to_string(golden_path()).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 5, "golden file layout changed");
+    for &i in &[0usize, 1] {
+        let p = Plan::parse_line(lines[i]).unwrap();
+        assert_eq!(
+            p.to_json().to_string(),
+            lines[i],
+            "canonical line {} must re-serialize byte-identically",
+            i + 1
+        );
+    }
+    // line 1 carries the full record, tile override included
+    let p = Plan::parse_line(lines[0]).unwrap();
+    assert_eq!(p.version, PLAN_VERSION);
+    assert_eq!(p.engine, "tetris-cpu");
+    assert_eq!(p.tile_w, Some(64));
+    assert_eq!(p.bucket, vec![512, 512]);
+}
+
+#[test]
+fn golden_store_tolerates_unknown_fields_and_recovers_from_corruption() {
+    let store = PlanStore::open(golden_path());
+    let plans = store.load();
+    // 5 lines: 4 parse (line 4 is a torn write), unknown fields ignored
+    assert_eq!(plans.len(), 4, "{plans:?}");
+    let future = plans.iter().find(|p| p.bench == "box2d9p").expect("future record kept");
+    assert_eq!(future.engine, "tiled");
+    assert_eq!(future.version, 2, "newer versions load (forward-tolerant)");
+}
+
+#[test]
+fn lookup_serves_our_plans_and_ignores_foreign_fingerprints() {
+    let store = PlanStore::open(golden_path());
+    let ours = golden_fp();
+    // the key exists under BOTH fingerprints; ours must win, and the
+    // foreign naive plan must never be misapplied
+    let p = store.lookup(&ours, "heat2d", "periodic", &[500, 500]).unwrap();
+    assert_eq!(p.engine, "tetris-cpu");
+    // the foreign machine gets its own plan back
+    let theirs = Fingerprint::synthetic(256, 128, 1_048_576.0);
+    let p = store.lookup(&theirs, "heat2d", "periodic", &[512, 512]).unwrap();
+    assert_eq!(p.engine, "naive");
+    // a third machine gets nothing at all
+    let nobody = Fingerprint::synthetic(4, 64, 2.0);
+    assert!(store.lookup(&nobody, "heat2d", "periodic", &[512, 512]).is_none());
+    assert!(store.lookup_near(&nobody, "heat2d", "periodic", &[512, 512]).is_none());
+}
+
+#[test]
+fn nearest_bucket_warm_start_from_golden_records() {
+    let store = PlanStore::open(golden_path());
+    let ours = golden_fp();
+    // no exact 1024-bucket heat1d plan; the 262144-bucket one is the
+    // only same-machine candidate and must be offered as warm start
+    assert!(store.lookup(&ours, "heat1d", "dirichlet", &[1000]).is_none());
+    let near = store.lookup_near(&ours, "heat1d", "dirichlet", &[1000]).unwrap();
+    assert_eq!(near.engine, "simd");
+    assert_eq!(near.tb, 8);
+}
+
+/// End-to-end durability: append → latest-wins lookup → atomic
+/// compaction, on a scratch store (golden stays read-only).
+#[test]
+fn scratch_store_append_compact_cycle() {
+    let path = std::env::temp_dir()
+        .join(format!("tetris-plan-it-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let store = PlanStore::open(&path);
+    let fp = golden_fp();
+    let mk = |engine: &str, gsps: f64| Plan {
+        version: PLAN_VERSION,
+        fingerprint: fp.id(),
+        bench: "heat2d".into(),
+        boundary: "dirichlet".into(),
+        bucket: vec![128, 128],
+        engine: engine.into(),
+        threads: 2,
+        tb: 4,
+        tile_w: None,
+        gsps,
+        source: "tuned".into(),
+        seed: 9,
+    };
+    store.append(&mk("simd", 0.8)).unwrap();
+    store.append(&mk("tetris-cpu", 1.4)).unwrap();
+    assert_eq!(store.load().len(), 2);
+    assert_eq!(
+        store.lookup(&fp, "heat2d", "dirichlet", &[130, 130]).unwrap().engine,
+        "tetris-cpu"
+    );
+    assert_eq!(store.compact().unwrap(), 1, "one key, latest record survives");
+    let left = store.load();
+    assert_eq!(left.len(), 1);
+    assert_eq!(left[0].engine, "tetris-cpu");
+    // compacted lines are canonical bytes
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text, format!("{}\n", left[0].to_json()));
+    assert!(Json::parse(text.trim()).is_ok());
+    let _ = std::fs::remove_file(&path);
+}

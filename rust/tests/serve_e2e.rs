@@ -7,8 +7,10 @@
 use std::sync::Arc;
 
 use tetris::coordinator::{CommModel, NativeWorker, Partition, Scheduler, Worker};
+use tetris::plan::{shape_bucket, Fingerprint, Plan, PlanStore, PLAN_VERSION};
 use tetris::serve::{
-    Client, JobResult, JobSpec, Priority, ServeConfig, Server, ServerHandle, WorkerFactory,
+    default_worker_factory, Client, JobResult, JobSpec, Priority, ServeConfig, Server,
+    ServerHandle, WorkerFactory,
 };
 use tetris::stencil::{Boundary, Field};
 
@@ -18,7 +20,7 @@ use tetris::stencil::{Boundary, Field};
 /// bit-compare against a direct single-worker scheduler run no matter
 /// what partition the session profiled or retuned to.
 fn simd_factory() -> WorkerFactory {
-    Arc::new(|_bench, _shape, _tb| {
+    Arc::new(|_bench, _shape, _tb, _plan| {
         let mk = || -> Box<dyn Worker> {
             Box::new(NativeWorker::new(tetris::engine::by_name("simd", 1).unwrap(), 1 << 33))
         };
@@ -30,9 +32,15 @@ fn start_server(cfg: ServeConfig) -> ServerHandle {
     Server::start(cfg, simd_factory()).expect("server start")
 }
 
-fn direct_run(bench: &str, boundary: Boundary, shape: &[usize], steps: usize, seed: u64) -> Field {
+fn direct_run_tb(
+    bench: &str,
+    boundary: Boundary,
+    shape: &[usize],
+    steps: usize,
+    seed: u64,
+    tb: usize,
+) -> Field {
     let s = tetris::stencil::spec::get(bench).unwrap();
-    let tb = tetris::bench::scaled_problem(bench, 0.05).2;
     let sched = Scheduler {
         spec: s,
         tb,
@@ -48,6 +56,11 @@ fn direct_run(bench: &str, boundary: Boundary, shape: &[usize], steps: usize, se
     let core = Field::random(shape, seed);
     let (out, _) = sched.run(&core, steps).unwrap();
     out
+}
+
+fn direct_run(bench: &str, boundary: Boundary, shape: &[usize], steps: usize, seed: u64) -> Field {
+    let tb = tetris::bench::scaled_problem(bench, 0.05).2;
+    direct_run_tb(bench, boundary, shape, steps, seed, tb)
 }
 
 /// Acceptance: boot the server in-process, submit boundary-diverse jobs
@@ -101,6 +114,100 @@ fn e2e_tcp_results_bit_match_direct_scheduler_runs() {
     }
     client.shutdown().unwrap();
     handle.join();
+}
+
+/// Serve/plan acceptance: a session created for a key with a stored
+/// plan adopts the plan's engine and Tb (asserted via `STATS`), and the
+/// results are bit-identical to the fixed-engine path running the same
+/// configuration directly.
+#[test]
+fn e2e_session_adopts_stored_plan_and_matches_fixed_engine_bits() {
+    // Fingerprint detected ONCE and injected on both sides (store key
+    // and server config) so the lookup is exact by construction.
+    let fp = Fingerprint::detect(40);
+    let store_path = std::env::temp_dir()
+        .join(format!("tetris-e2e-plans-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&store_path);
+    let store = PlanStore::open(&store_path);
+    let shape = vec![24usize];
+    // heat1d's default session Tb at this scale is 8; the plan says 4 —
+    // observable both in STATS and in the step alignment of the reply.
+    let plan_tb = 4usize;
+    store
+        .append(&Plan {
+            version: PLAN_VERSION,
+            fingerprint: fp.id(),
+            bench: "heat1d".into(),
+            boundary: "dirichlet".into(),
+            bucket: shape_bucket(&shape),
+            engine: "simd".into(),
+            threads: 1,
+            tb: plan_tb,
+            // proxy-grid basis; never compared against live throughput
+            gsps: 2.0,
+            tile_w: None,
+            source: "tuned".into(),
+            seed: 0,
+        })
+        .unwrap();
+    assert_eq!(
+        tetris::bench::scaled_problem("heat1d", 0.05).2,
+        8,
+        "test premise: the default Tb must differ from the plan's"
+    );
+    let handle = Server::start(
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            dispatchers: 1,
+            scale: 0.05,
+            plan_store: Some(store_path.to_string_lossy().into_owned()),
+            fingerprint: Some(fp),
+            ..Default::default()
+        },
+        default_worker_factory(1),
+    )
+    .expect("server start");
+    let mut client = Client::connect(handle.addr).unwrap();
+    let r = client
+        .submit(&JobSpec {
+            id: "planned".into(),
+            bench: "heat1d".into(),
+            shape: Some(shape.clone()),
+            steps: 4,
+            seed: 4242,
+            return_field: true,
+            ..Default::default()
+        })
+        .unwrap();
+    assert!(r.ok, "{r:?}");
+    assert_eq!(r.steps, 4, "plan Tb=4 keeps 4 steps; the default Tb=8 would align to 8");
+
+    // STATS: the session runs the plan's engine and Tb
+    let stats = client.stats().unwrap();
+    let sessions = stats.at(&["sessions"]).as_obj().unwrap();
+    assert_eq!(sessions.len(), 1);
+    let (key, sess) = sessions.iter().next().unwrap();
+    assert!(key.contains("heat1d/dirichlet"), "{key}");
+    assert_eq!(sess.at(&["tb"]).as_usize(), Some(plan_tb));
+    assert_eq!(sess.at(&["planned"]), &tetris::util::json::Json::Bool(true));
+    let engine = sess.at(&["engine"]).as_str().unwrap();
+    assert!(engine.contains("native:simd"), "{engine}");
+    assert!(!engine.contains("tetris-cpu"), "defaults must not leak in: {engine}");
+
+    // bit-identical to the fixed-engine path at the same Tb
+    let got = r.field.expect("return_field requested");
+    let want = direct_run_tb("heat1d", Boundary::Dirichlet(0.0), &shape, 4, 4242, plan_tb);
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(want.data()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "cell {i}: {a} vs {b}");
+    }
+
+    client.shutdown().unwrap();
+    handle.join();
+    // A planned session's first batch only sets the live write-back
+    // baseline: the store must still hold exactly the seeded plan.
+    assert_eq!(store.load().len(), 1, "first batch must not write back over a fresh plan");
+    let _ = std::fs::remove_file(&store_path);
 }
 
 /// Golden wire format: parse the checked-in request line (which carries

@@ -16,6 +16,8 @@ OUT="${TETRIS_SMOKE_OUT:-BENCH_smoke.json}"
 BOUNDARY_OUT="${TETRIS_SMOKE_BOUNDARY_OUT:-BENCH_boundary.json}"
 SERVE_OUT="${TETRIS_SMOKE_SERVE_OUT:-BENCH_serve.json}"
 SERVE_LIVE_OUT="${TETRIS_SMOKE_SERVE_LIVE_OUT:-BENCH_serve_live.json}"
+PLAN_OUT="${TETRIS_SMOKE_PLAN_OUT:-BENCH_plan.json}"
+PLAN_STORE_OUT="${TETRIS_SMOKE_PLAN_STORE_OUT:-BENCH_plans.jsonl}"
 BIN=rust/target/release/tetris
 
 # Always (re)build: with a warm target dir this is incremental and fast,
@@ -33,12 +35,27 @@ cargo build --release --manifest-path rust/Cargo.toml
 # drive with p99, all in-process.
 "$BIN" bench serve --scale "$SCALE" --threads "$THREADS" --json "$SERVE_OUT"
 
+# Plan/autotune study: tune heat2d against a throwaway store (budgeted
+# search, seeded for reproducible trial ordering), then the auto-vs-
+# fixed-engine rows — heat2d warm-starts/hits the freshly tuned plan,
+# heat3d tunes cold and persists.  The store itself is archived next to
+# the JSON summaries so the chosen plans have a tracked trajectory.
+PLAN_STORE="$(mktemp)"
+"$BIN" tune --bench heat2d --budget-ms 500 --seed 1 --plan-store "$PLAN_STORE"
+"$BIN" bench plan --scale "$SCALE" --threads "$THREADS" \
+  --plan-store "$PLAN_STORE" --json "$PLAN_OUT"
+cp "$PLAN_STORE" "$PLAN_STORE_OUT"
+rm -f "$PLAN_STORE"
+
 # Live loopback drive through the real server binary: boot `tetris
 # serve` on an ephemeral port, push 20 mixed-boundary jobs via `tetris
 # submit`, archive client-side jobs/sec + p99, then drain cleanly.
 ADDR_FILE="$(mktemp)"
+# --plan-store none keeps the smoke drive hermetic: without it the
+# server would write observed smoke-scale plans into the user store.
 "$BIN" serve --addr 127.0.0.1:0 --workers 2 --queue 64 \
-  --scale "$SCALE" --threads "$THREADS" --addr-file "$ADDR_FILE" &
+  --scale "$SCALE" --threads "$THREADS" --addr-file "$ADDR_FILE" \
+  --plan-store none &
 SERVE_PID=$!
 trap 'kill "$SERVE_PID" 2>/dev/null || true' EXIT
 for _ in $(seq 1 100); do
@@ -56,7 +73,7 @@ wait "$SERVE_PID"
 trap - EXIT
 rm -f "$ADDR_FILE"
 
-for f in "$OUT" "$BOUNDARY_OUT" "$SERVE_OUT" "$SERVE_LIVE_OUT"; do
+for f in "$OUT" "$BOUNDARY_OUT" "$SERVE_OUT" "$SERVE_LIVE_OUT" "$PLAN_OUT" "$PLAN_STORE_OUT"; do
   echo "--- $f ---"
   cat "$f"
 done
