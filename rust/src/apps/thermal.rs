@@ -12,8 +12,8 @@
 use crate::util::error::Result;
 
 use crate::coordinator::{
-    partition::capacity_units, tuner, CommModel, NativeWorker, Partition, Scheduler, Worker,
-    XlaWorker,
+    partition::capacity_units, tuner, CommModel, NativeWorker, Overlap, Partition, Scheduler,
+    Worker, XlaWorker,
 };
 use crate::runtime::XlaService;
 use crate::stencil::{spec, Boundary, Field};
@@ -99,6 +99,7 @@ fn scheduler_for(
         comm_model: CommModel::default(),
         boundary: Boundary::Dirichlet(AMBIENT),
         adapt_every: 0,
+        overlap: Overlap::Auto,
     })
 }
 
@@ -175,6 +176,7 @@ pub fn run_insulated(
         comm_model: CommModel::default(),
         boundary: Boundary::Neumann,
         adapt_every,
+        overlap: Overlap::Auto,
     };
     sched.run(&init, steps)
 }

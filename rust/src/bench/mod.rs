@@ -12,8 +12,8 @@ use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 use crate::coordinator::{
-    partition::capacity_units, tuner, CommModel, NativeWorker, Partition, Scheduler, Worker,
-    XlaWorker,
+    partition::capacity_units, tuner, CommModel, NativeWorker, Overlap, Partition, Scheduler,
+    Worker, XlaWorker,
 };
 use crate::engine::Engine;
 use crate::runtime::XlaService;
@@ -150,6 +150,7 @@ pub fn hetero_scheduler(
             comm_model: CommModel::default(),
             boundary: Boundary::Dirichlet(0.0),
             adapt_every: 0,
+            overlap: Overlap::Auto,
         },
         meta.global_core.clone(),
     ))
@@ -358,6 +359,7 @@ pub fn run_boundary(scale: f64, threads: usize) -> Vec<(String, Vec<Row>)> {
         comm_model: CommModel::default(),
         boundary,
         adapt_every,
+        overlap: Overlap::Auto,
     };
     let mut rows = Vec::new();
     let mut base = 0.0;
@@ -421,7 +423,7 @@ pub fn run_serve(scale: f64, threads: usize) -> Vec<(String, Vec<Row>)> {
     let mut rows = Vec::new();
     let mut base_jps = 0.0;
     for &batch in &[1usize, 4, 8] {
-        match Session::new(bench, shape.clone(), tb, mk_workers(), 2, 0.25) {
+        match Session::new(bench, shape.clone(), tb, mk_workers(), 2, 0.25, Overlap::Auto) {
             Ok(mut sess) => {
                 let t0 = std::time::Instant::now();
                 let mut ok = true;
@@ -605,6 +607,85 @@ pub fn run_plan(scale: f64, threads: usize, store_path: Option<&str>) -> Vec<(St
         out.push((bench.to_string(), rows));
     }
     out
+}
+
+/// §5.3 overlap study: the pipelined (double-buffered) leader loop vs
+/// the serial one on an **imbalanced** 2-worker heat2d run (3:1 row
+/// split across unequal engines, so the fast worker idles through every
+/// serial leader phase).  Rows report throughput; `extra` carries the
+/// summed worker idle (`workers x elapsed − Σ busy`, the §5.3 target)
+/// and the leader-phase time the pipelined loop hid under compute.
+/// Both rows compute bit-identical fields (asserted in `cargo test`);
+/// CI archives this as `BENCH_overlap.json`.
+pub fn run_overlap(scale: f64, threads: usize) -> Vec<(String, Vec<Row>)> {
+    let (_, steps, _) = scaled_problem("heat2d", scale);
+    let core = overlap_bench_field(scale);
+    let mut rows = Vec::new();
+    let mut base = 0.0;
+    for (label, overlap) in [("overlap=off", Overlap::Off), ("overlap=on", Overlap::On)] {
+        match overlap_bench_sched(scale, threads, overlap).run(&core, steps) {
+            Ok((_, m)) => {
+                let g = m.gstencils_per_sec();
+                if base == 0.0 {
+                    base = g;
+                }
+                rows.push(Row {
+                    label: label.into(),
+                    gstencils: g,
+                    speedup: g / base.max(1e-12),
+                    extra: format!(
+                        "summed idle {:.3} ms; hidden {:.3} ms; overlapped msgs {}/{}",
+                        m.summed_idle_secs() * 1e3,
+                        m.overlap_hidden.as_secs_f64() * 1e3,
+                        m.comm.overlapped_messages,
+                        m.comm.messages,
+                    ),
+                });
+            }
+            Err(e) => rows.push(Row {
+                label: label.into(),
+                gstencils: 0.0,
+                speedup: 0.0,
+                extra: format!("ERROR: {e}"),
+            }),
+        }
+    }
+    print_table("§5.3 overlap: pipelined vs serial leader loop (heat2d, 3:1 split)", &rows);
+    vec![("overlap".to_string(), rows)]
+}
+
+/// The overlap study's single source of configuration: heat2d input and
+/// the imbalanced 2-worker scheduler (`run_overlap` rows and the
+/// `overlap_idle_ms` acceptance probe must measure the same setup).
+fn overlap_bench_field(scale: f64) -> Field {
+    let (core_shape, _, _) = scaled_problem("heat2d", scale);
+    Field::random(&core_shape, 0x0E21)
+}
+
+fn overlap_bench_sched(scale: f64, threads: usize, overlap: Overlap) -> Scheduler {
+    let s = spec::get("heat2d").unwrap();
+    let (core_shape, _, tb) = scaled_problem("heat2d", scale);
+    let rows0 = core_shape[0];
+    Scheduler {
+        spec: s,
+        tb,
+        workers: vec![native("tetris-cpu", threads), native("naive", 1)],
+        partition: Partition::balanced(1, rows0, &[3.0, 1.0], &[rows0, rows0]),
+        comm_model: CommModel::default(),
+        boundary: Boundary::Periodic,
+        adapt_every: 0,
+        overlap,
+    }
+}
+
+/// Summed worker idle (ms) for one overlap mode on the `run_overlap`
+/// configuration — the comparison the overlap bench acceptance test
+/// retries (timing-based, so callers take the best of a few attempts).
+pub fn overlap_idle_ms(scale: f64, threads: usize, overlap: Overlap) -> Result<f64> {
+    let (_, steps, _) = scaled_problem("heat2d", scale);
+    let core = overlap_bench_field(scale);
+    let (_, m) = overlap_bench_sched(scale, threads, overlap).run(&core, steps)?;
+    Ok(m.summed_idle_secs() * 1e3)
 }
 
 /// §5.3 communication study: centralized vs per-step launch cost.
@@ -822,6 +903,45 @@ mod tests {
             assert!(auto.extra.contains("cached"), "{name}: {auto:?}");
         }
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// §5.3 acceptance: on the imbalanced 2-worker run, the pipelined
+    /// leader loop reduces summed worker idle (workers x elapsed − Σ
+    /// busy) vs the serial loop — the fast worker no longer sits
+    /// through the leader's ghost/extract/paste phases.  Timing-based,
+    /// so take the best of a few attempts before judging.
+    #[test]
+    fn overlap_bench_reduces_summed_worker_idle() {
+        let mut best_ratio = f64::INFINITY;
+        // single-thread engines keep the comparison about the leader
+        // loop, not pool-vs-engine thread oversubscription on small CI
+        // runners
+        for _ in 0..5 {
+            let off = overlap_idle_ms(0.15, 1, Overlap::Off).unwrap();
+            let on = overlap_idle_ms(0.15, 1, Overlap::On).unwrap();
+            assert!(off > 0.0 && on > 0.0, "idle must be measurable: off={off} on={on}");
+            best_ratio = best_ratio.min(on / off);
+            if best_ratio < 1.0 {
+                break;
+            }
+        }
+        assert!(
+            best_ratio < 1.0,
+            "pipelined leader loop never reduced summed idle (best on/off ratio {best_ratio:.3})"
+        );
+    }
+
+    #[test]
+    fn overlap_section_reports_both_modes() {
+        let sections = run_overlap(0.05, 1);
+        assert_eq!(sections.len(), 1);
+        let rows = &sections[0].1;
+        assert_eq!(rows[0].label, "overlap=off");
+        assert_eq!(rows[1].label, "overlap=on");
+        assert!(rows.iter().all(|r| r.gstencils > 0.0), "{rows:?}");
+        assert!(rows[0].extra.contains("summed idle"), "{rows:?}");
+        let j = summary_json("overlap", 0.05, 1, &sections);
+        assert!(j.to_string().contains("overlap=on"));
     }
 
     #[test]

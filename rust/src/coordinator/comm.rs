@@ -43,6 +43,9 @@ pub struct CommLedger {
     pub bytes: usize,
     /// Messages that WOULD have been sent without centralized launch.
     pub split_messages: usize,
+    /// Messages whose halo extraction ran concurrently with in-flight
+    /// compute (§5.3 overlap) — always 0 under the serial leader loop.
+    pub overlapped_messages: usize,
 }
 
 impl CommLedger {
@@ -51,6 +54,11 @@ impl CommLedger {
         self.messages += 1;
         self.bytes += bytes;
         self.split_messages += tb;
+    }
+
+    /// Mark the `n` most recent exchanges as compute-overlapped.
+    pub fn record_overlapped(&mut self, n: usize) {
+        self.overlapped_messages = (self.overlapped_messages + n).min(self.messages);
     }
 
     /// Modeled seconds under `m`, centralized vs per-step launch.
@@ -93,5 +101,16 @@ mod tests {
         let m = CommModel::default();
         let (c, s) = l.modeled_cost(&m);
         assert!(c < s);
+    }
+
+    #[test]
+    fn overlapped_messages_never_exceed_total() {
+        let mut l = CommLedger::default();
+        l.record_exchange(64, 2);
+        l.record_overlapped(5);
+        assert_eq!(l.overlapped_messages, 1);
+        l.record_exchange(64, 2);
+        l.record_overlapped(1);
+        assert_eq!(l.overlapped_messages, 2);
     }
 }

@@ -30,12 +30,37 @@ pub struct RunMetrics {
     pub final_shares: Vec<usize>,
     /// §5.2 mid-run rebalances that actually moved slabs (0 = static).
     pub retunes: usize,
+    /// Whether the §5.3 pipelined (double-buffered) leader loop ran.
+    pub overlap: bool,
+    /// Leader-phase work (ghost/extract/paste) executed while at least
+    /// one worker slab was computing — the halo-exchange latency the
+    /// pipelined loop hid.  Zero under the serial leader loop.
+    pub overlap_hidden: Duration,
+    /// Cumulative leader-phase durations across all blocks (divide by
+    /// `blocks` for the per-block breakdown).  In the pipelined loop the
+    /// ghost refresh is folded into slab assembly and reported under
+    /// `leader_extract`.
+    pub leader_ghost: Duration,
+    pub leader_extract: Duration,
+    pub leader_paste: Duration,
 }
 
 impl RunMetrics {
     /// Stencils per second (paper Eq. 5): Nx*Ny*Nz * T / time.
     pub fn gstencils_per_sec(&self) -> f64 {
         (self.core_cells as f64 * self.total_steps as f64) / self.elapsed.as_secs_f64() / 1e9
+    }
+
+    /// Total worker-seconds NOT spent computing over the run's wall
+    /// clock: `workers * elapsed - Σ busy`.  Unlike [`worker_idle`]
+    /// (which only counts per-block bubbles against the slowest slab),
+    /// this includes the leader's serial ghost/extract/paste phases — the
+    /// quantity the §5.3 overlapped leader loop exists to shrink.
+    ///
+    /// [`worker_idle`]: RunMetrics::worker_idle
+    pub fn summed_idle_secs(&self) -> f64 {
+        let busy: f64 = self.worker_busy.iter().map(|d| d.as_secs_f64()).sum();
+        (self.worker_busy.len() as f64 * self.elapsed.as_secs_f64() - busy).max(0.0)
     }
 
     /// Fraction of worker-time lost to pipeline bubbles (0 = perfectly
@@ -82,6 +107,17 @@ impl RunMetrics {
             "  bubble fraction: {:.1}% (retunes: {})\n",
             self.bubble_fraction() * 100.0,
             self.retunes
+        ));
+        s.push_str(&format!(
+            "  leader: {} — ghost {:?} extract {:?} paste {:?} (hidden under compute: {:?}, \
+             overlapped msgs: {}/{})\n",
+            if self.overlap { "pipelined" } else { "serial" },
+            self.leader_ghost,
+            self.leader_extract,
+            self.leader_paste,
+            self.overlap_hidden,
+            self.comm.overlapped_messages,
+            self.comm.messages,
         ));
         s
     }
@@ -137,5 +173,19 @@ mod tests {
         let r = m.report(&CommModel::default());
         assert!(r.contains("native:simd"));
         assert!(r.contains("bubble"));
+        assert!(r.contains("leader: serial"));
+    }
+
+    #[test]
+    fn summed_idle_counts_leader_phases_too() {
+        // 2 workers over a 10s run with 4s+6s busy: 20 - 10 = 10s idle,
+        // regardless of how worker_idle attributed per-block bubbles.
+        let m = RunMetrics {
+            worker_busy: vec![Duration::from_secs(4), Duration::from_secs(6)],
+            worker_idle: vec![Duration::from_secs(2), Duration::ZERO],
+            elapsed: Duration::from_secs(10),
+            ..Default::default()
+        };
+        assert!((m.summed_idle_secs() - 10.0).abs() < 1e-12);
     }
 }

@@ -8,9 +8,11 @@
 //! * [`pool`] — work-stealing deque pool primitives used by both the
 //!   engines and the pipeline (steal_map + dependency-DAG execution;
 //!   each call runs its own scoped pool);
-//! * [`pipeline`] — the block-synchronous heterogeneous driver (Fig. 11),
-//!   boundary-aware (Dirichlet/Neumann/Periodic ghost refill per block)
-//!   with optional in-run §5.2 adaptive re-partitioning;
+//! * [`pipeline`] — the heterogeneous driver (Fig. 11), boundary-aware
+//!   (Dirichlet/Neumann/Periodic ghost refill per block) with optional
+//!   in-run §5.2 adaptive re-partitioning, runnable as either the
+//!   block-synchronous serial leader loop or the §5.3 pipelined loop
+//!   (double-buffered globals, halo prefetch overlapped with compute);
 //! * [`metrics`] — Eq.-5 throughput, bubbles, comm totals.
 
 pub mod comm;
@@ -24,5 +26,5 @@ pub mod worker;
 pub use comm::{CommLedger, CommModel};
 pub use metrics::RunMetrics;
 pub use partition::Partition;
-pub use pipeline::Scheduler;
+pub use pipeline::{Overlap, Scheduler};
 pub use worker::{NativeWorker, Worker, XlaWorker};

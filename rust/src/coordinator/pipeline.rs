@@ -1,20 +1,36 @@
 //! The concurrent heterogeneous pipeline driver (paper §5, Fig. 11).
 //!
-//! The leader holds the global extended field.  Per Tb-block it
-//! (0) refreshes the global ghost ring from the boundary condition
-//! (Dirichlet ghosts are static, but Neumann mirrors and Periodic wraps
-//! depend on the evolving core, so the ring is refilled every block),
-//! (1) snapshots each worker's slab + ghost ring (the halo exchange —
-//! batched once per block, the §5.3 centralized communication launch),
-//! (2) dispatches every worker concurrently on the work-stealing pool,
-//! (3) writes the slabs back, accounting busy/idle time and comm volume,
-//! (4) optionally re-partitions the domain from measured busy times
-//! every `adapt_every` blocks — the §5.2 architecture-aware rebalance.
+//! The leader holds the global extended field and drives one of two
+//! loops per Tb-block:
+//!
+//! * **serial leader loop** (`Overlap::Off`): (0) refresh the global
+//!   ghost ring from the boundary condition, (1) snapshot each worker's
+//!   slab + ghost ring (the halo exchange — batched once per block, the
+//!   §5.3 centralized communication launch), (2) dispatch every worker
+//!   concurrently on the work-stealing pool, (3) write the slabs back,
+//!   (4) optionally re-partition every `adapt_every` blocks (§5.2).
+//!   Workers idle through the leader's extract/paste phases.
+//!
+//! * **pipelined leader loop** (`Overlap::On`/`Auto`, §5.3): the padded
+//!   globals are double-buffered — the front buffer holds the state a
+//!   block reads, writebacks land in the back buffer — and the whole
+//!   window between repartition points runs as ONE dependency DAG on the
+//!   pool: block N+1's slab assembly (ghost mapping + halo extraction)
+//!   depends only on the *neighbouring* slabs' block-N writebacks, never
+//!   on a block barrier, so halo traffic for the next block is prefetched
+//!   while slower slabs still compute.  When `adapt_every` fires, the
+//!   window ends at the repartition point and the leader falls back to
+//!   the synchronous retune decision before pipelining the next window.
+//!   Slab assembly is bit-identical to ghost-fill + extract (copies of
+//!   the same f64 bits), so overlap on/off produce identical fields.
 //!
 //! Workers stay boundary-agnostic: their valid-mode slab contract only
 //! consumes the ghost ring the leader hands them, so any worker species
 //! (native engine or AOT artifact) serves any boundary condition.
 
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::util::error::{Context, Result};
@@ -24,8 +40,57 @@ use crate::stencil::{Boundary, Field, StencilSpec};
 use super::comm::{CommLedger, CommModel};
 use super::metrics::RunMetrics;
 use super::partition::{capacity_units, Partition};
+use super::pool::TaskGraph;
 use super::tuner;
 use super::worker::Worker;
+
+/// Leader-loop mode: overlap halo exchange with compute (§5.3)?
+///
+/// `Auto` enables the pipelined loop whenever it can help (more than
+/// one worker and more than one block); results are bit-identical
+/// either way, so the knob only moves wall-clock and idle time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Overlap {
+    On,
+    Off,
+    #[default]
+    Auto,
+}
+
+impl Overlap {
+    /// Whether the pipelined loop runs for this worker/block count.
+    pub fn enabled(&self, workers: usize, blocks: usize) -> bool {
+        match self {
+            Overlap::On => blocks > 0,
+            Overlap::Off => false,
+            Overlap::Auto => workers > 1 && blocks > 1,
+        }
+    }
+}
+
+impl std::fmt::Display for Overlap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Overlap::On => write!(f, "on"),
+            Overlap::Off => write!(f, "off"),
+            Overlap::Auto => write!(f, "auto"),
+        }
+    }
+}
+
+/// CLI syntax: `--overlap on|off|auto`.
+impl std::str::FromStr for Overlap {
+    type Err = crate::util::error::TetrisError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "on" => Ok(Overlap::On),
+            "off" => Ok(Overlap::Off),
+            "auto" => Ok(Overlap::Auto),
+            other => Err(crate::err!("unknown overlap mode {other:?} (expected on|off|auto)")),
+        }
+    }
+}
 
 pub struct Scheduler {
     pub spec: StencilSpec,
@@ -39,6 +104,8 @@ pub struct Scheduler {
     /// Re-partition from measured per-block busy times every this many
     /// blocks (0 = static partition).
     pub adapt_every: usize,
+    /// §5.3 leader-loop mode (see [`Overlap`]).
+    pub overlap: Overlap,
 }
 
 impl Scheduler {
@@ -64,6 +131,7 @@ impl Scheduler {
             comm_model: CommModel::default(),
             boundary,
             adapt_every,
+            overlap: Overlap::Auto,
         }
     }
 
@@ -80,9 +148,10 @@ impl Scheduler {
     /// snapshots, and the (migration-gated) retune decision amortize
     /// across the batch — the multi-field engine behind `serve`'s job
     /// batcher.  Slab decomposition is numerically invisible, so each
-    /// returned field is bit-identical to running it alone.  Returns the
-    /// final fields in input order plus combined metrics (`core_cells`
-    /// and comm totals sum over the batch; `fields` records the width).
+    /// returned field is bit-identical to running it alone (and overlap
+    /// on/off are bit-identical too).  Returns the final fields in input
+    /// order plus combined metrics (`core_cells` and comm totals sum
+    /// over the batch; `fields` records the width).
     pub fn run_batch(&self, cores: &[Field], total_steps: usize) -> Result<(Vec<Field>, RunMetrics)> {
         crate::ensure!(!cores.is_empty(), "empty batch");
         crate::ensure!(
@@ -99,16 +168,27 @@ impl Scheduler {
             !self.workers.is_empty() && self.workers.len() == self.partition.shares.len(),
             "workers/partition mismatch"
         );
+        let spans = self.partition.spans();
+        crate::ensure!(
+            spans.last().unwrap().1 == cores[0].shape()[0],
+            "partition covers {} rows, domain has {}",
+            spans.last().unwrap().1,
+            cores[0].shape()[0]
+        );
+        let blocks = total_steps / self.tb;
+        if self.overlap.enabled(self.workers.len(), blocks) {
+            self.run_batch_pipelined(cores, total_steps)
+        } else {
+            self.run_batch_serial(cores, total_steps)
+        }
+    }
+
+    /// The serial (block-synchronous) leader loop — see the module docs.
+    fn run_batch_serial(&self, cores: &[Field], total_steps: usize) -> Result<(Vec<Field>, RunMetrics)> {
         let core0 = &cores[0];
         let nf = cores.len();
         let mut partition = self.partition.clone();
         let mut spans = partition.spans();
-        crate::ensure!(
-            spans.last().unwrap().1 == core0.shape()[0],
-            "partition covers {} rows, domain has {}",
-            spans.last().unwrap().1,
-            core0.shape()[0]
-        );
         let halo = self.spec.radius * self.tb;
         let nd = core0.ndim();
         let mut globals: Vec<Field> =
@@ -129,13 +209,18 @@ impl Scheduler {
         let mut retunes = 0usize;
         let mut window_busy = vec![0f64; nw];
         let mut window_blocks = 0usize;
+        let mut leader_ghost = Duration::ZERO;
+        let mut leader_extract = Duration::ZERO;
+        let mut leader_paste = Duration::ZERO;
         let t0 = Instant::now();
 
         for b in 0..blocks {
             // (0) Ghost refresh from each field's current core state.
+            let tg = Instant::now();
             for g in globals.iter_mut() {
                 self.boundary.fill(g, halo);
             }
+            leader_ghost += tg.elapsed();
 
             // (1) Halo snapshot: one extraction per worker per field per
             // block — the centralized communication launch.  Internal-
@@ -144,6 +229,7 @@ impl Scheduler {
             // W-1 exchange the wrap halo too), so W workers have W
             // inter-device links instead of W-1.  A single worker's
             // wrap-around is a local copy, not a message.
+            let te = Instant::now();
             let inputs: Vec<Vec<Field>> = globals
                 .iter()
                 .map(|g| {
@@ -159,15 +245,12 @@ impl Scheduler {
                         .collect()
                 })
                 .collect();
+            leader_extract += te.elapsed();
             // Only boundaries between *non-empty* spans are real links: a
             // zero-share worker holds no rows, so its neighbours abut
             // directly (and a lone active worker's wrap is a local copy).
-            let active_spans = spans.iter().filter(|&&(s, e)| e > s).count();
-            let internal_links = match self.boundary {
-                Boundary::Periodic if active_spans > 1 => active_spans,
-                _ => active_spans.saturating_sub(1),
-            };
-            for _ in 0..internal_links * nf {
+            let links = internal_links(&spans, self.boundary);
+            for _ in 0..links * nf {
                 // two directions x halo rows x core-row cells
                 comm.record_exchange(2 * halo * core_rest_cells * 8, self.tb);
             }
@@ -185,6 +268,7 @@ impl Scheduler {
                 }
             }
             let slowest = block_busy.iter().copied().max().unwrap_or_default();
+            let tp = Instant::now();
             for (f, per_field) in results.into_iter().enumerate() {
                 for (i, ((res, _), &(s, _e))) in per_field.into_iter().zip(&spans).enumerate() {
                     let out = res.with_context(|| format!("worker {i} failed (field {f})"))?;
@@ -193,6 +277,7 @@ impl Scheduler {
                     globals[f].paste(&off, &out);
                 }
             }
+            leader_paste += tp.elapsed();
             for i in 0..nw {
                 busy[i] += block_busy[i];
                 idle[i] += slowest - block_busy[i];
@@ -207,39 +292,16 @@ impl Scheduler {
             if self.adapt_every > 0 && window_blocks >= self.adapt_every && b + 1 < blocks {
                 let per_block: Vec<f64> =
                     window_busy.iter().map(|t| t / window_blocks as f64).collect();
-                let tmax = per_block.iter().cloned().fold(0.0, f64::max);
-                // The squeezer can only rebalance if the declared worker
-                // capacities cover the domain; a hand-built static
-                // partition is allowed to ignore capacities, so skip the
-                // retune (rather than panic mid-run) when they don't.
-                let caps_cover = self
-                    .workers
-                    .iter()
-                    .map(|w| capacity_units(w.mem_capacity(), partition.unit, ext_rest_cells))
-                    .sum::<usize>()
-                    >= partition.total_units();
-                if tmax > 0.0 && caps_cover {
-                    // A zero-share worker measured ~nothing; feed it the
-                    // slowest time so its exploration weight stays modest.
-                    let measured: Vec<f64> = partition
-                        .shares
-                        .iter()
-                        .zip(&per_block)
-                        .map(|(&s, &t)| if s == 0 || t <= 0.0 { tmax } else { t })
-                        .collect();
-                    if let Some(next) = tuner::retune_gated(
-                        &partition,
-                        &measured,
-                        &self.workers,
-                        ext_rest_cells,
-                        &self.comm_model,
-                        core_rest_cells,
-                        blocks - (b + 1),
-                    ) {
-                        partition = next;
-                        spans = partition.spans();
-                        retunes += 1;
-                    }
+                if let Some(next) = self.retune_decision(
+                    &partition,
+                    &per_block,
+                    ext_rest_cells,
+                    core_rest_cells,
+                    blocks - (b + 1),
+                ) {
+                    partition = next;
+                    spans = partition.spans();
+                    retunes += 1;
                 }
                 window_busy.fill(0.0);
                 window_blocks = 0;
@@ -259,9 +321,477 @@ impl Scheduler {
             ratios: (0..nw).map(|i| partition.ratio(i)).collect(),
             final_shares: partition.shares.clone(),
             retunes,
+            overlap: false,
+            overlap_hidden: Duration::ZERO,
+            leader_ghost,
+            leader_extract,
+            leader_paste,
         };
         Ok((globals.into_iter().map(|g| g.unpad(halo)).collect(), metrics))
     }
+
+    /// The §5.3 pipelined leader loop — see the module docs.  Processes
+    /// blocks in windows of `adapt_every` (the whole run when static),
+    /// each window one dependency DAG on the pool: per `(block, field,
+    /// worker)` an assemble → compute → writeback chain, where block
+    /// N+1's assembly depends only on its *neighbouring* slabs' block-N
+    /// writebacks (double-buffered globals make the read and write sides
+    /// disjoint), so halo prefetch hides under the slower slabs' compute.
+    fn run_batch_pipelined(
+        &self,
+        cores: &[Field],
+        total_steps: usize,
+    ) -> Result<(Vec<Field>, RunMetrics)> {
+        let core0 = &cores[0];
+        let nf = cores.len();
+        let mut partition = self.partition.clone();
+        let mut spans = partition.spans();
+        let halo = self.spec.radius * self.tb;
+        let nd = core0.ndim();
+        let n_rows = core0.shape()[0];
+        let ext_rest_cells: usize =
+            core0.shape()[1..].iter().map(|n| n + 2 * halo).product::<usize>().max(1);
+        let core_rest_cells: usize = core0.shape()[1..].iter().product::<usize>().max(1);
+        let blocks = total_steps / self.tb;
+        let nw = self.workers.len();
+        let tb = self.tb;
+        let boundary = self.boundary;
+        let spec = &self.spec;
+        let workers = &self.workers;
+
+        // Double buffer: parity b%2 holds the state block b reads; its
+        // writebacks land in parity (b+1)%2.  Neither buffer's ghost
+        // ring is ever read (assembly maps ghosts from core rows), so no
+        // ring fill happens at all in this mode.
+        let front: Vec<Field> =
+            cores.iter().map(|c| c.pad(halo, self.boundary.pad_value())).collect();
+        let back: Vec<Field> = front.clone();
+        // RwLock so concurrent assembles of one field share read access
+        // (writebacks target the other parity, so within a block readers
+        // and writers never meet; across blocks the DAG orders them).
+        let buffers: [Vec<RwLock<Field>>; 2] = [
+            front.into_iter().map(RwLock::new).collect(),
+            back.into_iter().map(RwLock::new).collect(),
+        ];
+
+        let mut busy = vec![Duration::ZERO; nw];
+        let mut idle = vec![Duration::ZERO; nw];
+        let mut comm = CommLedger::default();
+        let mut retunes = 0usize;
+        let mut overlap_hidden = Duration::ZERO;
+        let mut leader_extract = Duration::ZERO;
+        let mut leader_paste = Duration::ZERO;
+        let t0 = Instant::now();
+
+        let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        // Same compute width as the serial dispatch, plus one slot so a
+        // copy task can run while every compute slot is busy.
+        let threads = (nw * nf + 1).min(nw.max(host) + 1).max(2);
+        // Static runs still window the DAG: task slots are O(window x
+        // fields x workers), so an uncapped 100k-block run would box
+        // 300k closures up front for prefetch depth nobody needs —
+        // one block of lookahead is the whole win.
+        const MAX_WINDOW: usize = 256;
+        let window = if self.adapt_every > 0 { self.adapt_every } else { MAX_WINDOW };
+
+        let mut b0 = 0usize;
+        while b0 < blocks {
+            let bw = window.min(blocks - b0);
+            let owners = symmetric_owners(&spans, halo, n_rows, boundary);
+            let nslots = bw * nf * nw;
+            let inputs: Vec<Mutex<Option<Field>>> = (0..nslots).map(|_| Mutex::new(None)).collect();
+            let outputs: Vec<Mutex<Option<Field>>> =
+                (0..nslots).map(|_| Mutex::new(None)).collect();
+            let busy_ns: Vec<AtomicU64> = (0..bw * nw).map(|_| AtomicU64::new(0)).collect();
+            let extract_ns = AtomicU64::new(0);
+            let paste_ns = AtomicU64::new(0);
+            let hidden_ns = AtomicU64::new(0);
+            let inflight = AtomicUsize::new(0);
+            let block_overlapped: Vec<AtomicBool> = (0..bw).map(|_| AtomicBool::new(false)).collect();
+            let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
+            // First failure flips this; the rest of the window's tasks
+            // degrade to no-ops so a doomed run drains fast instead of
+            // computing every remaining block before reporting.
+            let aborted = AtomicBool::new(false);
+
+            {
+                let bufs = &buffers;
+                let spans_r = &spans;
+                let owners_r = &owners;
+                let inputs_r = &inputs;
+                let outputs_r = &outputs;
+                let busy_r = &busy_ns;
+                let extract_r = &extract_ns;
+                let paste_r = &paste_ns;
+                let hidden_r = &hidden_ns;
+                let inflight_r = &inflight;
+                let overlapped_r = &block_overlapped;
+                let failures_r = &failures;
+                let aborted_r = &aborted;
+
+                let mut g = TaskGraph::new();
+                // Writeback task ids of the previous block, per (f, w).
+                let mut prev_paste: Vec<usize> = Vec::new();
+                for k in 0..bw {
+                    let b = b0 + k;
+                    let read_par = b % 2;
+                    let write_par = (b + 1) % 2;
+                    let mut this_paste = Vec::with_capacity(nf * nw);
+                    for f in 0..nf {
+                        for w in 0..nw {
+                            let idx = (k * nf + f) * nw + w;
+                            let (s, e) = spans_r[w];
+                            // Assemble: the §5.3 prefetch.  Depends only
+                            // on the neighbouring slabs' previous-block
+                            // writebacks, never the whole block barrier.
+                            let a_deps: Vec<usize> = if k == 0 {
+                                Vec::new()
+                            } else {
+                                owners_r[w].iter().map(|&o| prev_paste[f * nw + o]).collect()
+                            };
+                            let a_id = g.add(
+                                move || {
+                                    if aborted_r.load(Ordering::Relaxed) {
+                                        return;
+                                    }
+                                    let t = Instant::now();
+                                    let slab = {
+                                        let gbuf = bufs[read_par][f].read().unwrap();
+                                        assemble_slab(&gbuf, s, e, halo, boundary)
+                                    };
+                                    *inputs_r[idx].lock().unwrap() = Some(slab);
+                                    let dt = t.elapsed().as_nanos() as u64;
+                                    extract_r.fetch_add(dt, Ordering::Relaxed);
+                                    if inflight_r.load(Ordering::Relaxed) > 0 {
+                                        hidden_r.fetch_add(dt, Ordering::Relaxed);
+                                        overlapped_r[k].store(true, Ordering::Relaxed);
+                                    }
+                                },
+                                a_deps,
+                            );
+                            // Compute: same zero-share skip as dispatch().
+                            let c_id = g.add(
+                                move || {
+                                    // None = assembly skipped by an abort
+                                    let Some(input) = inputs_r[idx].lock().unwrap().take() else {
+                                        return;
+                                    };
+                                    if aborted_r.load(Ordering::Relaxed) {
+                                        return;
+                                    }
+                                    if let Some(out) = empty_slab_output(&input, halo) {
+                                        *outputs_r[idx].lock().unwrap() = Some(out);
+                                        return;
+                                    }
+                                    inflight_r.fetch_add(1, Ordering::Relaxed);
+                                    let t = Instant::now();
+                                    let res = workers[w].run_slab(spec, &input, tb);
+                                    let dt = t.elapsed();
+                                    inflight_r.fetch_sub(1, Ordering::Relaxed);
+                                    busy_r[k * nw + w]
+                                        .fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+                                    match res {
+                                        Ok(out) => {
+                                            *outputs_r[idx].lock().unwrap() = Some(out);
+                                        }
+                                        Err(err) => {
+                                            failures_r.lock().unwrap().push(format!(
+                                                "worker {w} failed (field {f}, block {b}): {err}"
+                                            ));
+                                            aborted_r.store(true, Ordering::Relaxed);
+                                        }
+                                    }
+                                },
+                                vec![a_id],
+                            );
+                            // Writeback into the back buffer.
+                            let p_id = g.add(
+                                move || {
+                                    let t = Instant::now();
+                                    let taken = outputs_r[idx].lock().unwrap().take();
+                                    if let Some(out) = taken {
+                                        let mut off = vec![s + halo];
+                                        off.extend(vec![halo; nd - 1]);
+                                        bufs[write_par][f].write().unwrap().paste(&off, &out);
+                                    }
+                                    let dt = t.elapsed().as_nanos() as u64;
+                                    paste_r.fetch_add(dt, Ordering::Relaxed);
+                                    if inflight_r.load(Ordering::Relaxed) > 0 {
+                                        hidden_r.fetch_add(dt, Ordering::Relaxed);
+                                        overlapped_r[k].store(true, Ordering::Relaxed);
+                                    }
+                                },
+                                vec![c_id],
+                            );
+                            this_paste.push(p_id);
+                        }
+                    }
+                    prev_paste = this_paste;
+                }
+                g.run(threads);
+            }
+
+            if let Some(msg) = failures.into_inner().unwrap().into_iter().next() {
+                crate::bail!("{msg}");
+            }
+
+            // Per-block accounting, identical quantities to the serial
+            // loop (busy from the timed compute tasks, idle against the
+            // slowest slab, comm counts from the span topology).
+            let links = internal_links(&spans, boundary);
+            for k in 0..bw {
+                let mut block_busy = vec![Duration::ZERO; nw];
+                for w in 0..nw {
+                    block_busy[w] =
+                        Duration::from_nanos(busy_ns[k * nw + w].load(Ordering::Relaxed));
+                }
+                let slowest = block_busy.iter().copied().max().unwrap_or_default();
+                for w in 0..nw {
+                    busy[w] += block_busy[w];
+                    idle[w] += slowest - block_busy[w];
+                }
+                for _ in 0..links * nf {
+                    comm.record_exchange(2 * halo * core_rest_cells * 8, tb);
+                }
+                if block_overlapped[k].load(Ordering::Relaxed) {
+                    comm.record_overlapped(links * nf);
+                }
+            }
+            leader_extract += Duration::from_nanos(extract_ns.load(Ordering::Relaxed));
+            leader_paste += Duration::from_nanos(paste_ns.load(Ordering::Relaxed));
+            overlap_hidden += Duration::from_nanos(hidden_ns.load(Ordering::Relaxed));
+
+            // §5.2 retune at the window boundary — the synchronous
+            // fallback the pipelined windows bracket.
+            if self.adapt_every > 0 && b0 + bw < blocks && bw >= self.adapt_every {
+                let per_block: Vec<f64> = (0..nw)
+                    .map(|w| {
+                        (0..bw)
+                            .map(|k| busy_ns[k * nw + w].load(Ordering::Relaxed) as f64 * 1e-9)
+                            .sum::<f64>()
+                            / bw as f64
+                    })
+                    .collect();
+                if let Some(next) = self.retune_decision(
+                    &partition,
+                    &per_block,
+                    ext_rest_cells,
+                    core_rest_cells,
+                    blocks - (b0 + bw),
+                ) {
+                    partition = next;
+                    spans = partition.spans();
+                    retunes += 1;
+                }
+            }
+            b0 += bw;
+        }
+
+        let final_par = blocks % 2;
+        let [par0, par1] = buffers;
+        let chosen = if final_par == 0 { par0 } else { par1 };
+        let outs: Vec<Field> = chosen
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().unpad(halo))
+            .collect();
+
+        let metrics = RunMetrics {
+            total_steps,
+            blocks,
+            fields: nf,
+            core_cells: core0.len() * nf,
+            elapsed: t0.elapsed(),
+            worker_names: self.workers.iter().map(|w| w.name()).collect(),
+            worker_busy: busy,
+            worker_idle: idle,
+            comm,
+            ratios: (0..nw).map(|i| partition.ratio(i)).collect(),
+            final_shares: partition.shares.clone(),
+            retunes,
+            overlap: true,
+            overlap_hidden,
+            leader_ghost: Duration::ZERO,
+            leader_extract,
+            leader_paste,
+        };
+        Ok((outs, metrics))
+    }
+
+    /// The shared §5.2 retune decision: feed measured window-mean busy
+    /// times to the migration-gated tuner, skipping (rather than
+    /// panicking mid-run) when the declared capacities cannot cover a
+    /// hand-built static partition.
+    fn retune_decision(
+        &self,
+        partition: &Partition,
+        per_block: &[f64],
+        ext_rest_cells: usize,
+        core_rest_cells: usize,
+        blocks_left: usize,
+    ) -> Option<Partition> {
+        let tmax = per_block.iter().cloned().fold(0.0, f64::max);
+        let caps_cover = self
+            .workers
+            .iter()
+            .map(|w| capacity_units(w.mem_capacity(), partition.unit, ext_rest_cells))
+            .sum::<usize>()
+            >= partition.total_units();
+        if tmax <= 0.0 || !caps_cover {
+            return None;
+        }
+        // A zero-share worker measured ~nothing; feed it the slowest
+        // time so its exploration weight stays modest.
+        let measured: Vec<f64> = partition
+            .shares
+            .iter()
+            .zip(per_block)
+            .map(|(&s, &t)| if s == 0 || t <= 0.0 { tmax } else { t })
+            .collect();
+        tuner::retune_gated(
+            partition,
+            &measured,
+            &self.workers,
+            ext_rest_cells,
+            &self.comm_model,
+            core_rest_cells,
+            blocks_left,
+        )
+    }
+}
+
+/// The zero-share slab contract, shared by both leader loops: a slab
+/// whose core was squeezed/retuned to 0 rows (input = bare ghost ring)
+/// is never handed to an engine — it yields an empty result of the
+/// unpadded shape.  Returns `None` for slabs that must actually compute.
+fn empty_slab_output(input: &Field, halo: usize) -> Option<Field> {
+    if input.shape()[0] != 2 * halo {
+        return None;
+    }
+    let shape: Vec<usize> = input.shape().iter().map(|&n| n - 2 * halo).collect();
+    Some(Field::zeros(&shape))
+}
+
+/// Inter-device links implied by the span topology under `boundary`.
+fn internal_links(spans: &[(usize, usize)], boundary: Boundary) -> usize {
+    let active_spans = spans.iter().filter(|&&(s, e)| e > s).count();
+    match boundary {
+        Boundary::Periodic if active_spans > 1 => active_spans,
+        _ => active_spans.saturating_sub(1),
+    }
+}
+
+/// Assemble worker slab input for core span `[s, e)` directly from the
+/// padded global's **core rows** (its ghost ring may be stale): every
+/// value is either a copy of a core cell (dim-0 rows via the boundary's
+/// row map, non-split-dim ghosts via the same axis passes as
+/// [`Boundary::fill`]) or the Dirichlet wall constant — bit-identical
+/// to `boundary.fill(global); global.extract(...)`, without reading any
+/// row outside `[s-halo, e+halo)` and the boundary-mapped edge rows.
+pub(crate) fn assemble_slab(
+    global: &Field,
+    s: usize,
+    e: usize,
+    halo: usize,
+    boundary: Boundary,
+) -> Field {
+    let nd = global.ndim();
+    let gshape = global.shape().to_vec();
+    let n_rows = gshape[0] - 2 * halo;
+    let rows = (e - s) + 2 * halo;
+    let mut shape = vec![rows];
+    shape.extend(&gshape[1..]);
+    let mut out = Field::zeros(&shape);
+    let rest_core_cnt: Vec<usize> = gshape[1..].iter().map(|n| n - 2 * halo).collect();
+    // Dim-0 rows: each slab row copies its source row's core columns
+    // (identity for core rows, reflect/wrap for edge ghosts); Dirichlet
+    // ghost rows hold the wall constant across the full width.
+    for i in 0..rows {
+        let pr = s + i;
+        match boundary.source_index(pr, halo, n_rows) {
+            Some(src) => {
+                let mut soff = vec![src];
+                soff.extend(vec![halo; nd - 1]);
+                let mut doff = vec![i];
+                doff.extend(vec![halo; nd - 1]);
+                let mut cnt = vec![1];
+                cnt.extend(&rest_core_cnt);
+                out.copy_region_from(global, &soff, &doff, &cnt);
+            }
+            None => {
+                let mut off = vec![i];
+                off.extend(vec![0; nd - 1]);
+                let mut cnt = vec![1];
+                cnt.extend(&gshape[1..]);
+                out.fill_region(&off, &cnt, boundary.pad_value());
+            }
+        }
+    }
+    // Non-split-dim ghost faces: the same axis-by-axis passes as the
+    // global ring fill, restricted to this slab's rows — each pass
+    // sources coordinates whose earlier axes were already mapped, so
+    // corners come out all-axes-mapped exactly like the full fill.
+    for d in 1..nd {
+        match boundary {
+            Boundary::Dirichlet(v) => {
+                let mut cnt = shape.clone();
+                cnt[d] = halo;
+                let mut off = vec![0; nd];
+                out.fill_region(&off, &cnt, v);
+                off[d] = shape[d] - halo;
+                out.fill_region(&off, &cnt, v);
+            }
+            _ => {
+                let core_d = gshape[d] - 2 * halo;
+                let mut cnt = shape.clone();
+                cnt[d] = 1;
+                for ghost in (0..halo).chain(shape[d] - halo..shape[d]) {
+                    let src = boundary
+                        .source_index(ghost, halo, core_d)
+                        .expect("non-Dirichlet ghosts always map");
+                    let mut soff = vec![0; nd];
+                    soff[d] = src;
+                    let mut doff = vec![0; nd];
+                    doff[d] = ghost;
+                    out.copy_region_within(&soff, &doff, &cnt);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// For each worker: which workers own the core rows its slab assembly
+/// reads (direct `[s-halo, e+halo)` neighbourhood plus boundary-mapped
+/// edge rows), symmetrized — if A reads rows B owns, B also waits on
+/// A's previous-block writeback, the anti-dependency that keeps the
+/// two-buffer scheme race-free by construction.
+pub(crate) fn symmetric_owners(
+    spans: &[(usize, usize)],
+    halo: usize,
+    n_rows: usize,
+    boundary: Boundary,
+) -> Vec<Vec<usize>> {
+    let nw = spans.len();
+    let owner_of = |r: usize| spans.iter().position(|&(a, b)| r >= a && r < b);
+    let mut owners: Vec<BTreeSet<usize>> = Vec::with_capacity(nw);
+    for &(s, e) in spans {
+        let mut need = BTreeSet::new();
+        for pr in s..e + 2 * halo {
+            if let Some(src) = boundary.source_index(pr, halo, n_rows) {
+                if let Some(o) = owner_of(src - halo) {
+                    need.insert(o);
+                }
+            }
+        }
+        owners.push(need);
+    }
+    for w in 0..nw {
+        let reads: Vec<usize> = owners[w].iter().copied().collect();
+        for o in reads {
+            owners[o].insert(w);
+        }
+    }
+    owners.into_iter().map(|set| set.into_iter().collect()).collect()
 }
 
 /// Run every (field, worker) slab concurrently on one pool scope; returns
@@ -285,9 +815,8 @@ fn dispatch(
     let mut flat = super::pool::steal_map(threads, nw * nf, |i| {
         let (f, w) = (i / nw, i % nw);
         let input = &inputs[f][w];
-        if input.shape()[0] == 2 * halo {
-            let shape: Vec<usize> = input.shape().iter().map(|&n| n - 2 * halo).collect();
-            return (Ok(Field::zeros(&shape)), Duration::ZERO);
+        if let Some(out) = empty_slab_output(input, halo) {
+            return (Ok(out), Duration::ZERO);
         }
         let t0 = Instant::now();
         let res = workers[w].run_slab(spec, input, tb);
@@ -346,6 +875,7 @@ mod tests {
             comm_model: CommModel::default(),
             boundary,
             adapt_every: 0,
+            overlap: Overlap::Off,
         }
     }
 
@@ -399,6 +929,7 @@ mod tests {
         );
         assert_eq!(sc.partition.total_units(), 16);
         assert_eq!(sc.partition.shares, vec![8, 8]);
+        assert_eq!(sc.overlap, Overlap::Auto);
         let core = Field::random(&[16, 8], 91);
         let (got, _) = sc.run(&core, 4).unwrap();
         let want = reference::evolve_periodic(&core, &s, 4);
@@ -727,5 +1258,277 @@ mod tests {
         assert!((total - 1.0).abs() < 1e-12);
         // the converged partition still covers the domain exactly
         assert_eq!(m.final_shares.iter().sum::<usize>(), 8);
+    }
+
+    // -----------------------------------------------------------------
+    // §5.3 overlap: the pipelined leader loop
+    // -----------------------------------------------------------------
+
+    /// The load-bearing equivalence behind the pipelined loop: slab
+    /// assembly from an unfilled global is bit-identical to a full ghost
+    /// ring fill + extract, for every boundary kind, rank, halo depth
+    /// and span layout (including spans smaller than the halo and spans
+    /// pinned to the domain edges).
+    #[test]
+    fn assemble_slab_matches_fill_plus_extract_bitwise() {
+        for shape in [vec![12usize], vec![9, 5], vec![6, 4, 5]] {
+            for halo in [1usize, 2, 3] {
+                let core = Field::random(&shape, 0xA55E + halo as u64);
+                for b in [Boundary::Dirichlet(-2.5), Boundary::Neumann, Boundary::Periodic] {
+                    // unfilled global: stale pad values in the ring
+                    let global = core.pad(halo, b.pad_value());
+                    let mut filled = global.clone();
+                    b.fill(&mut filled, halo);
+                    let rows = shape[0];
+                    let spans: Vec<(usize, usize)> = vec![
+                        (0, 1),
+                        (1, rows / 2),
+                        (rows / 2, rows / 2), // empty span
+                        (rows / 2, rows),
+                        (0, rows),
+                    ];
+                    for &(s, e) in &spans {
+                        let got = assemble_slab(&global, s, e, halo, b);
+                        let mut off = vec![s];
+                        off.extend(vec![0usize; shape.len() - 1]);
+                        let mut sl_shape = vec![(e - s) + 2 * halo];
+                        sl_shape.extend(&filled.shape()[1..]);
+                        let want = filled.extract(&off, &sl_shape);
+                        assert_eq!(
+                            got.data(),
+                            want.data(),
+                            "{b} shape {shape:?} halo {halo} span ({s},{e})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Owner sets cover the direct halo neighbourhood and the
+    /// boundary-mapped edge rows, and are symmetric by construction.
+    #[test]
+    fn symmetric_owners_cover_neighbours_and_wrap() {
+        let spans = vec![(0usize, 4usize), (4, 8), (8, 12), (12, 16)];
+        // halo 2: interior slabs need only their direct neighbours
+        let o = symmetric_owners(&spans, 2, 16, Boundary::Dirichlet(0.0));
+        assert_eq!(o[1], vec![0, 1, 2]);
+        assert_eq!(o[0], vec![0, 1]);
+        // periodic wrap links the two edge slabs
+        let o = symmetric_owners(&spans, 2, 16, Boundary::Periodic);
+        assert_eq!(o[0], vec![0, 1, 3]);
+        assert_eq!(o[3], vec![0, 2, 3]);
+        // symmetry even with a halo deeper than a slab
+        for b in [Boundary::Neumann, Boundary::Periodic, Boundary::Dirichlet(1.0)] {
+            let o = symmetric_owners(&spans, 6, 16, b);
+            for w in 0..spans.len() {
+                for &x in &o[w] {
+                    assert!(o[x].contains(&w), "{b}: {w} reads {x} but not vice versa");
+                }
+            }
+        }
+    }
+
+    /// Tentpole acceptance: overlap on vs off is bit-identical (exact
+    /// f64) across all three boundary kinds and mixed worker sets.
+    #[test]
+    fn overlap_on_bit_matches_off_for_all_boundaries() {
+        for bench in ["heat1d", "heat2d", "heat3d"] {
+            let s = spec::get(bench).unwrap();
+            let mut shape = vec![24usize];
+            shape.extend(vec![8usize; s.ndim - 1]);
+            let core = Field::random(&shape, 61);
+            for boundary in [Boundary::Dirichlet(0.75), Boundary::Neumann, Boundary::Periodic] {
+                let make = || {
+                    sched(
+                        &s,
+                        2,
+                        vec![native("simd"), native("autovec"), native("tetris-cpu")],
+                        4,
+                        vec![2, 1, 3],
+                        boundary,
+                    )
+                };
+                let (off, m_off) = make().run(&core, 8).unwrap();
+                let mut on_sched = make();
+                on_sched.overlap = Overlap::On;
+                let (on, m_on) = on_sched.run(&core, 8).unwrap();
+                assert_eq!(
+                    off.data(),
+                    on.data(),
+                    "{bench}/{boundary}: overlap must be bit-invisible"
+                );
+                assert!(!m_off.overlap && m_on.overlap);
+                // identical comm accounting either way
+                assert_eq!(m_off.comm.messages, m_on.comm.messages, "{bench}/{boundary}");
+                assert_eq!(m_off.comm.bytes, m_on.comm.bytes, "{bench}/{boundary}");
+                assert_eq!(m_off.comm.overlapped_messages, 0);
+                assert!(m_on.comm.overlapped_messages <= m_on.comm.messages);
+            }
+        }
+    }
+
+    /// Multi-field batches ride the same pipelined path bit-exactly.
+    #[test]
+    fn overlap_batch_bit_matches_off() {
+        let s = spec::get("heat2d").unwrap();
+        let fields: Vec<Field> = (0..3).map(|i| Field::random(&[16, 8], 80 + i)).collect();
+        for boundary in [Boundary::Dirichlet(0.0), Boundary::Neumann, Boundary::Periodic] {
+            let make = || {
+                sched(
+                    &s,
+                    2,
+                    vec![native("simd"), native("autovec")],
+                    4,
+                    vec![1, 3],
+                    boundary,
+                )
+            };
+            let (off, _) = make().run_batch(&fields, 8).unwrap();
+            let mut on_sched = make();
+            on_sched.overlap = Overlap::On;
+            let (on, m) = on_sched.run_batch(&fields, 8).unwrap();
+            assert_eq!(m.fields, 3);
+            for (a, b) in off.iter().zip(&on) {
+                assert_eq!(a.data(), b.data(), "{boundary}");
+            }
+        }
+    }
+
+    /// A mid-run retune (window boundary in the pipelined loop) keeps
+    /// the result bit-identical to the serial adaptive run and correct
+    /// against the oracle.
+    #[test]
+    fn overlap_with_midrun_retune_stays_bit_exact() {
+        let s = spec::get("heat1d").unwrap();
+        let core = Field::random(&[16], 67);
+        let steps = 8;
+        for boundary in [Boundary::Dirichlet(0.25), Boundary::Neumann, Boundary::Periodic] {
+            let make = || {
+                let mut sc = sched(
+                    &s,
+                    1,
+                    vec![delayed("simd", 1500), delayed("simd", 400)],
+                    2,
+                    vec![4, 4],
+                    boundary,
+                );
+                sc.adapt_every = 2;
+                sc
+            };
+            let (want, _) = make().run(&core, steps).unwrap();
+            let mut on_sched = make();
+            on_sched.overlap = Overlap::On;
+            let (got, m) = on_sched.run(&core, steps).unwrap();
+            // retune decisions are timing-fed but slab decomposition is
+            // bit-invisible, so the fields agree bit-for-bit regardless
+            // of which partitions each mode converged through.
+            assert_eq!(got.data(), want.data(), "{boundary}");
+            assert_eq!(m.final_shares.iter().sum::<usize>(), 8, "{boundary}");
+            let oracle = reference_evolution(&core, &s, steps, 1, boundary);
+            assert!(got.allclose(&oracle, 1e-12, 1e-14), "{boundary}");
+        }
+    }
+
+    /// Degenerate layouts: spans thinner than the halo, zero-share
+    /// workers, and the torus wrap all survive the pipelined loop.
+    #[test]
+    fn overlap_handles_tiny_spans_and_zero_shares() {
+        let s = spec::get("heat2d").unwrap();
+        let core = Field::random(&[12, 6], 71);
+        for boundary in [Boundary::Dirichlet(0.0), Boundary::Neumann, Boundary::Periodic] {
+            // tb=2, radius 1 => halo 2 > 1-row spans
+            let make = |shares: Vec<usize>| {
+                sched(
+                    &s,
+                    2,
+                    vec![native("simd"), native("autovec"), native("naive")],
+                    1,
+                    shares,
+                    boundary,
+                )
+            };
+            for shares in [vec![1usize, 1, 10], vec![0, 6, 6], vec![5, 0, 7]] {
+                let (want, _) = make(shares.clone()).run(&core, 8).unwrap();
+                let mut on = make(shares.clone());
+                on.overlap = Overlap::On;
+                let (got, _) = on.run(&core, 8).unwrap();
+                assert_eq!(got.data(), want.data(), "{boundary} shares {shares:?}");
+            }
+        }
+    }
+
+    /// Overlap accounting: the pipelined loop reports hidden leader time
+    /// and overlapped halo messages on a run where compute dominates.
+    #[test]
+    fn overlap_metrics_report_hidden_prefetch() {
+        let s = spec::get("heat1d").unwrap();
+        let core = Field::random(&[32], 73);
+        // 4x skew: worker 0 finishes each block ~15 ms before worker 1,
+        // so its writeback + next-block assembly are guaranteed to land
+        // while worker 1 still computes.
+        let mut sc = sched(
+            &s,
+            1,
+            vec![delayed("simd", 300), delayed("simd", 1200)],
+            4,
+            vec![4, 4],
+            Boundary::Periodic,
+        );
+        sc.overlap = Overlap::On;
+        let (_, m) = sc.run(&core, 6).unwrap();
+        assert!(m.overlap);
+        assert!(m.leader_extract > Duration::ZERO);
+        assert!(m.leader_paste > Duration::ZERO);
+        // with multi-ms sleeps in every slab, some assembly/writeback
+        // must land while a neighbour still computes
+        assert!(m.overlap_hidden > Duration::ZERO, "{m:?}");
+        assert!(m.comm.overlapped_messages > 0, "{m:?}");
+    }
+
+    /// A worker failure in the pipelined loop surfaces as an error (with
+    /// the worker named), not a hang or a corrupt field.
+    #[test]
+    fn overlap_propagates_worker_failure() {
+        struct FailingWorker;
+        impl Worker for FailingWorker {
+            fn name(&self) -> String {
+                "failing".into()
+            }
+            fn mem_capacity(&self) -> usize {
+                1 << 40
+            }
+            fn run_slab(&self, _: &StencilSpec, _: &Field, _: usize) -> Result<Field> {
+                crate::bail!("injected fault")
+            }
+        }
+        let s = spec::get("heat1d").unwrap();
+        let mut sc = sched(
+            &s,
+            1,
+            vec![native("simd"), Box::new(FailingWorker)],
+            8,
+            vec![1, 1],
+            Boundary::Dirichlet(0.0),
+        );
+        sc.overlap = Overlap::On;
+        let err = sc.run(&Field::random(&[16], 5), 2).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("worker 1 failed"), "{msg}");
+        assert!(msg.contains("injected fault"), "{msg}");
+    }
+
+    #[test]
+    fn overlap_mode_parses_and_gates() {
+        assert_eq!("on".parse::<Overlap>().unwrap(), Overlap::On);
+        assert_eq!("off".parse::<Overlap>().unwrap(), Overlap::Off);
+        assert_eq!("auto".parse::<Overlap>().unwrap(), Overlap::Auto);
+        assert!("sometimes".parse::<Overlap>().is_err());
+        assert_eq!(Overlap::Auto.to_string(), "auto");
+        assert!(Overlap::On.enabled(1, 1));
+        assert!(!Overlap::Off.enabled(8, 8));
+        assert!(Overlap::Auto.enabled(2, 2));
+        assert!(!Overlap::Auto.enabled(1, 8), "single worker gains nothing");
+        assert!(!Overlap::Auto.enabled(4, 1), "single block has no next block to prefetch");
     }
 }

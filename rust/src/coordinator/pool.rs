@@ -190,6 +190,44 @@ pub fn run_dag<'a>(threads: usize, tasks: Vec<Task<'a>>, deps: &[Vec<usize>]) {
     }
 }
 
+/// Incremental builder for a [`run_dag`] task graph — the pipelined
+/// leader uses it to wire the assemble → compute → writeback stages per
+/// `(block, field, worker)` slab, where each stage's dependencies are
+/// task ids returned by earlier [`TaskGraph::add`] calls.
+#[derive(Default)]
+pub struct TaskGraph<'a> {
+    tasks: Vec<Task<'a>>,
+    deps: Vec<Vec<usize>>,
+}
+
+impl<'a> TaskGraph<'a> {
+    pub fn new() -> TaskGraph<'a> {
+        TaskGraph::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Register a task that runs after every task in `deps`; returns its
+    /// id for later stages to depend on.
+    pub fn add(&mut self, task: impl FnOnce() + Send + 'a, deps: Vec<usize>) -> usize {
+        debug_assert!(deps.iter().all(|&d| d < self.tasks.len()), "dep on a future task");
+        self.tasks.push(Box::new(task));
+        self.deps.push(deps);
+        self.tasks.len() - 1
+    }
+
+    /// Execute the graph on up to `threads` workers (see [`run_dag`]).
+    pub fn run(self, threads: usize) {
+        run_dag(threads, self.tasks, &self.deps);
+    }
+}
+
 /// Dynamic (self-scheduling) parallel map over `0..n`, order-preserving.
 ///
 /// Unlike an even-chunk fork-join split, workers pull one index at a
@@ -324,6 +362,47 @@ mod tests {
                 .or_else(|| err.downcast_ref::<String>().cloned())
                 .unwrap_or_default();
             assert!(msg.contains("injected pool fault"), "threads={threads}: {msg}");
+        }
+    }
+
+    #[test]
+    fn task_graph_builds_staged_pipelines() {
+        // Three stages per item, cross-linked like the leader pipeline:
+        // stage C of item k depends on stage B of items k-1, k, k+1.
+        for threads in [1usize, 4] {
+            let n = 6;
+            let log = Mutex::new(Vec::new());
+            let mut g = TaskGraph::new();
+            let mut a_ids = Vec::new();
+            let mut b_ids = Vec::new();
+            for k in 0..n {
+                let log = &log;
+                a_ids.push(g.add(move || log.lock().unwrap().push(("a", k)), vec![]));
+            }
+            for k in 0..n {
+                let log = &log;
+                b_ids.push(g.add(move || log.lock().unwrap().push(("b", k)), vec![a_ids[k]]));
+            }
+            for k in 0..n {
+                let log = &log;
+                let deps: Vec<usize> = (k.saturating_sub(1)..(k + 2).min(n))
+                    .map(|j| b_ids[j])
+                    .collect();
+                g.add(move || log.lock().unwrap().push(("c", k)), deps);
+            }
+            assert_eq!(g.len(), 3 * n);
+            g.run(threads);
+            let log = log.into_inner().unwrap();
+            assert_eq!(log.len(), 3 * n);
+            let pos = |s: &str, k: usize| {
+                log.iter().position(|&(t, i)| t == s && i == k).unwrap()
+            };
+            for k in 0..n {
+                assert!(pos("a", k) < pos("b", k));
+                for j in k.saturating_sub(1)..(k + 2).min(n) {
+                    assert!(pos("b", j) < pos("c", k), "threads={threads} b{j} c{k}");
+                }
+            }
         }
     }
 

@@ -5,21 +5,23 @@
 //!   validate                  golden-check every AOT artifact via PJRT
 //!   run      --bench B --engine E|auto [--steps N] [--threads T]
 //!            [--boundary C] [--adapt K] [--workers W]  scheduler mode
+//!            [--overlap on|off|auto]  §5.3 pipelined leader loop
 //!            [--plan-store FILE] [--budget-ms MS] [--seed S]  for auto
 //!   hetero   --bench B [--engine E|auto] [--steps N] [--threads T]
-//!            [--boundary C] [--adapt K]
+//!            [--boundary C] [--adapt K] [--overlap M]
 //!   tune     --bench B [--boundary C] [--shape NxM] [--steps N]
 //!            [--budget-ms MS] [--seed S] [--plan-store FILE] [--force]
 //!   serve    [--addr A] [--workers W] [--queue N] [--batch B] [--threads T]
 //!            [--adapt K] [--drift F] [--scale F] [--addr-file FILE]
-//!            [--session-ttl SECS] [--max-sessions N] [--plan-store FILE|none]
+//!            [--session-ttl SECS] [--max-sessions N] [--overlap M]
+//!            [--plan-store FILE|none]
 //!   submit   [--addr A] --bench B [--boundary C[,C...]] [--steps N]
 //!            [--jobs K] [--priority P] [--shape NxM] [--seed S]
 //!            [--json FILE] | --stats | --shutdown
 //!   thermal  [--size N] [--steps N] [--viz DIR] [--insulated]
 //!   accuracy [--blocks K]
-//!   bench    breakdown|sota|scaling|comm|mxu|boundary|serve|plan [--scale F]
-//!            [--threads T] [--json FILE]   single-line JSON for CI
+//!   bench    breakdown|sota|scaling|comm|mxu|boundary|serve|plan|overlap
+//!            [--scale F] [--threads T] [--json FILE]   single-line JSON for CI
 
 #![allow(clippy::uninlined_format_args)]
 
@@ -29,7 +31,7 @@ use tetris::bail;
 use tetris::util::error::{Context, Result};
 
 use tetris::bench as harness;
-use tetris::coordinator::{CommModel, NativeWorker, Partition, Scheduler, Worker};
+use tetris::coordinator::{CommModel, NativeWorker, Overlap, Partition, Scheduler, Worker};
 use tetris::runtime::XlaService;
 use tetris::stencil::{spec, Boundary, Field};
 
@@ -114,10 +116,13 @@ fn print_help() {
          validate                      golden-check every AOT artifact\n\
          run    --bench B --engine E   single-engine run  [--steps N --threads T --scale F]\n\
                 [--boundary C --adapt K --workers W]   scheduler run on W native workers\n\
+                [--overlap on|off|auto]   §5.3 double-buffered leader loop: prefetch\n\
+                                       block N+1 halos while block N computes\n\
                 --engine auto          resolve engine/threads/Tb through the plan\n\
                                        store [--plan-store FILE --budget-ms MS --seed S]\n\
          hetero --bench B              auto-tuned CPU+XLA run [--engine E|auto\n\
-                                       --steps N --threads T --boundary C --adapt K]\n\
+                                       --steps N --threads T --boundary C --adapt K\n\
+                                       --overlap on|off|auto]\n\
          tune   --bench B              search (engine, threads, Tb, tile) for this\n\
                                        machine and persist the plan [--boundary C\n\
                                        --shape NxM --steps N --budget-ms MS --seed S\n\
@@ -127,7 +132,7 @@ fn print_help() {
                                        --queue N --batch B --threads T --adapt K\n\
                                        --drift F --scale F --addr-file FILE\n\
                                        --session-ttl SECS --max-sessions N\n\
-                                       --plan-store FILE|none]\n\
+                                       --overlap on|off|auto --plan-store FILE|none]\n\
          submit [--addr A]             send jobs over the line protocol [--bench B\n\
                                        --boundary C[,C...] --steps N --jobs K\n\
                                        --priority P --shape NxM --seed S --json FILE]\n\
@@ -135,7 +140,7 @@ fn print_help() {
          thermal [--size N --steps N --viz DIR --threads T]   Table-3 case study\n\
                 [--insulated]          Neumann zero-flux plate (conserves total heat)\n\
          accuracy [--blocks K]         Table-4 FP64-vs-FP32 study\n\
-         bench  breakdown|sota|scaling|comm|mxu|boundary|serve|plan\n\
+         bench  breakdown|sota|scaling|comm|mxu|boundary|serve|plan|overlap\n\
                                        [--scale F --threads T --json FILE]\n\
          \n\
          boundaries (C): dirichlet[:V] (fixed-value ghosts), neumann (zero-flux),\n\
@@ -199,6 +204,15 @@ fn cmd_validate() -> Result<()> {
     Ok(())
 }
 
+/// Parse the shared `--overlap on|off|auto` flag (auto by default);
+/// `explicit` reports whether the user passed it (a stored plan's
+/// searched preference only applies when they did not).
+fn overlap_flag(args: &Args) -> Result<(Overlap, bool)> {
+    let explicit = args.flags.contains_key("overlap");
+    let mode: Overlap = args.str("overlap", "auto").parse().context("--overlap")?;
+    Ok((mode, explicit))
+}
+
 /// Parse the shared `--boundary C` / `--adapt K` flags.
 fn boundary_flags(args: &Args) -> Result<(Boundary, usize)> {
     let b: Boundary = args
@@ -259,6 +273,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let (core, mut steps, mut tb) = harness::scaled_problem(&bench, scale);
     steps = args.get("steps", steps);
     let (boundary, adapt) = boundary_flags(args)?;
+    let (mut overlap, overlap_explicit) = overlap_flag(args)?;
     let mut tile_w = None;
     if engine == "auto" {
         let res = resolve_auto_flag(args, &bench, &boundary, &core, steps)?;
@@ -267,6 +282,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         tile_w = res.plan.tile_w;
         if !args.flags.contains_key("threads") {
             threads = res.plan.threads;
+        }
+        if !overlap_explicit {
+            if let Some(o) = res.plan.overlap {
+                overlap = if o { Overlap::On } else { Overlap::Off };
+            }
         }
     }
     steps -= steps % tb;
@@ -291,11 +311,12 @@ fn cmd_run(args: &Args) -> Result<()> {
                 Ok(Box::new(NativeWorker::new(build_engine()?, 1 << 33)))
             })
             .collect::<Result<_>>()?;
-        let sched = Scheduler::from_plan(s, tb, workers, core[0], boundary, adapt);
+        let mut sched = Scheduler::from_plan(s, tb, workers, core[0], boundary, adapt);
+        sched.overlap = overlap;
         let field = Field::random(&core, 0xA11CE);
         let (out, metrics) = sched.run(&field, steps)?;
         println!(
-            "{bench} x {steps} steps on {nworkers}x{engine} (threads={threads}, boundary={boundary}, adapt={adapt})"
+            "{bench} x {steps} steps on {nworkers}x{engine} (threads={threads}, boundary={boundary}, adapt={adapt}, overlap={overlap})"
         );
         println!("{}", metrics.report(&sched.comm_model));
         println!("final field mean={:.6} l2={:.3}", out.mean(), out.l2());
@@ -317,19 +338,26 @@ fn cmd_hetero(args: &Args) -> Result<()> {
     let mut threads = args.get("threads", 1usize);
     let rt = XlaService::spawn_default().context("hetero needs artifacts: run `make artifacts`")?;
     let (boundary, adapt) = boundary_flags(args)?;
+    let (mut overlap, overlap_explicit) = overlap_flag(args)?;
     if engine == "auto" {
         // The artifact fixes Tb and the slab quantum; the plan picks the
-        // CPU-side engine and thread count.
+        // CPU-side engine, thread count and leader-loop mode.
         let meta = rt.bench(&bench)?.clone();
         let res = resolve_auto_flag(args, &bench, &boundary, &meta.global_core, meta.tb * 4)?;
         engine = res.plan.engine.clone();
         if !args.flags.contains_key("threads") {
             threads = res.plan.threads;
         }
+        if !overlap_explicit {
+            if let Some(o) = res.plan.overlap {
+                overlap = if o { Overlap::On } else { Overlap::Off };
+            }
+        }
     }
     let (mut sched, global) = harness::hetero_scheduler(&rt, &bench, threads, &engine)?;
     sched.boundary = boundary;
     sched.adapt_every = adapt;
+    sched.overlap = overlap;
     let steps = {
         let s = args.get("steps", sched.tb * 4);
         s - s % sched.tb
@@ -402,6 +430,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use tetris::serve::{default_worker_factory, ServeConfig, Server};
     let threads = args.get("threads", 2usize);
+    let (overlap, overlap_explicit) = overlap_flag(args)?;
     // Planning defaults ON for the real server (that's the point of a
     // persistent store); `--plan-store none` opts out.
     let plan_store = match args.str("plan-store", "").as_str() {
@@ -425,6 +454,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_sessions: args.get("max-sessions", 64usize),
         plan_store,
         fingerprint: None,
+        overlap,
+        overlap_explicit,
     };
     let handle = Server::start(cfg.clone(), default_worker_factory(threads))?;
     if let Some(path) = args.flags.get("addr-file") {
@@ -642,6 +673,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "boundary" => harness::run_boundary(scale, threads),
         "serve" => harness::run_serve(scale, threads),
         "plan" => harness::run_plan(scale, threads, args.flags.get("plan-store").map(String::as_str)),
+        "overlap" => harness::run_overlap(scale, threads),
         "comm" => vec![("comm".to_string(), harness::run_comm())],
         "mxu" => {
             let rt = rt.context("mxu bench needs artifacts")?;
@@ -672,5 +704,6 @@ fn single_worker_sched(bench: &str, engine: &str, threads: usize) -> Result<Sche
         comm_model: CommModel::default(),
         boundary: Boundary::Dirichlet(0.0),
         adapt_every: 0,
+        overlap: Overlap::Auto,
     })
 }

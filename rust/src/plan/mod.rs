@@ -87,6 +87,11 @@ pub struct Plan {
     pub tb: usize,
     /// Tile-width override for the tessellation family (None = heuristic).
     pub tile_w: Option<usize>,
+    /// §5.3 leader-loop preference for scheduler-mode runs: `Some(true)`
+    /// = pipelined (overlap halo exchange with compute), `Some(false)` =
+    /// serial, `None` = let the scheduler's `auto` heuristic decide.
+    /// Searched by the tuner's overlap probe; bit-exact either way.
+    pub overlap: Option<bool>,
     /// Throughput observed when the plan was selected (GStencils/s on
     /// the proxy grid for tuned plans, on the real run for observed ones).
     pub gsps: f64,
@@ -132,6 +137,9 @@ impl Plan {
         if let Some(w) = self.tile_w {
             m.insert("tile_w".into(), Json::Num(w as f64));
         }
+        if let Some(o) = self.overlap {
+            m.insert("overlap".into(), Json::Bool(o));
+        }
         m.insert("gsps".into(), Json::Num(self.gsps));
         m.insert("source".into(), Json::Str(self.source.clone()));
         m.insert("seed".into(), Json::Num(self.seed as f64));
@@ -153,6 +161,7 @@ impl Plan {
             threads: v.at(&["threads"]).as_usize().unwrap_or(1).max(1),
             tb: v.at(&["tb"]).as_usize().unwrap_or(1).max(1),
             tile_w: v.get("tile_w").and_then(|t| t.as_usize()),
+            overlap: v.get("overlap").and_then(|o| o.as_bool()),
             gsps: v.at(&["gsps"]).as_f64().unwrap_or(0.0),
             source: v.at(&["source"]).as_str().unwrap_or("tuned").to_string(),
             seed: v.at(&["seed"]).as_u64().unwrap_or(0),
@@ -183,6 +192,9 @@ pub struct Resolution {
 ///    boundary at a different size transfers (throughput is smooth in
 ///    shape); persist it under the exact key so step 1 hits next time;
 /// 3. cold — run the budgeted calibrated search and persist the winner.
+///
+/// Both store probes share ONE loaded snapshot — the ladder reads the
+/// store file once per resolution, not once per probe.
 pub fn resolve_auto(
     store: &PlanStore,
     fp: &Fingerprint,
@@ -192,10 +204,11 @@ pub fn resolve_auto(
     steps_hint: usize,
     cfg: &SearchConfig,
 ) -> Result<Resolution> {
-    if let Some(plan) = store.lookup(fp, bench, boundary_kind, shape) {
+    let snapshot = store.load();
+    if let Some(plan) = PlanStore::lookup_in(&snapshot, fp, bench, boundary_kind, shape) {
         return Ok(Resolution { plan, cached: true, warmed: false });
     }
-    if let Some(mut plan) = store.lookup_near(fp, bench, boundary_kind, shape) {
+    if let Some(mut plan) = PlanStore::lookup_near_in(&snapshot, fp, bench, boundary_kind, shape) {
         plan.bucket = shape_bucket(shape);
         plan.fingerprint = fp.id();
         plan.source = "warm-start".into();
@@ -232,6 +245,7 @@ mod tests {
             threads: 8,
             tb: 4,
             tile_w: Some(64),
+            overlap: Some(true),
             gsps: 1.25,
             source: "tuned".into(),
             seed: 42,
@@ -247,6 +261,14 @@ mod tests {
         let qline = q.to_json().to_string();
         assert!(!qline.contains("tile_w"));
         assert_eq!(Plan::parse_line(&qline).unwrap(), q);
+        // overlap: omitted when None (pre-overlap records stay valid),
+        // round-trips both booleans
+        let r = Plan { overlap: None, ..p.clone() };
+        let rline = r.to_json().to_string();
+        assert!(!rline.contains("overlap"));
+        assert_eq!(Plan::parse_line(&rline).unwrap(), r);
+        let s = Plan { overlap: Some(false), ..p.clone() };
+        assert_eq!(Plan::parse_line(&s.to_json().to_string()).unwrap(), s);
     }
 
     #[test]

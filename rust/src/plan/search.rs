@@ -133,7 +133,11 @@ fn tiebreak(seed: u64, c: &Candidate) -> u64 {
     fnv1a(&format!("{seed}|{}|{}|{}|{:?}", c.engine, c.threads, c.tb, c.tile_w))
 }
 
-/// Run the search with real timed trials and emit the winning [`Plan`].
+/// Run the search with real timed trials and emit the winning [`Plan`],
+/// including the §5.3 overlap preference from a quick scheduler probe
+/// (two homogeneous workers of the winning engine on the proxy grid,
+/// pipelined vs serial leader loop — bit-exact either way, so the probe
+/// only decides wall-clock).
 pub fn search(
     bench: &str,
     boundary_kind: &str,
@@ -142,7 +146,10 @@ pub fn search(
     fp: &Fingerprint,
     cfg: &SearchConfig,
 ) -> Result<Plan> {
-    search_with(bench, boundary_kind, shape, steps_hint, fp, cfg, &mut timed_trial)
+    let mut plan = search_with(bench, boundary_kind, shape, steps_hint, fp, cfg, &mut timed_trial)?;
+    let proxy = proxy_shape(shape, cfg.max_proxy_cells.max(64));
+    plan.overlap = probe_overlap(bench, &plan, &proxy);
+    Ok(plan)
 }
 
 /// Search core with an injectable trial runner (`candidate, spec,
@@ -212,10 +219,47 @@ pub fn search_with(
         threads: c.threads,
         tb: c.tb,
         tile_w: c.tile_w,
+        overlap: None,
         gsps,
         source: "tuned".to_string(),
         seed: cfg.seed,
     })
+}
+
+/// Time the §5.3 pipelined vs serial leader loop for `plan`'s winning
+/// configuration on a 2-worker scheduler over the proxy grid and return
+/// the faster mode (`None` when the probe cannot run — e.g. the engine
+/// fails to build — leaving the scheduler's `auto` heuristic in charge).
+fn probe_overlap(bench: &str, plan: &Plan, proxy: &[usize]) -> Option<bool> {
+    use crate::coordinator::{NativeWorker, Overlap, Scheduler, Worker};
+    let s = spec::get(bench)?;
+    let tb = plan.tb.max(1);
+    // At least 2 blocks: a 1-block "pipeline" has no next block to
+    // prefetch, so timing it would systematically (and wrongly) favour
+    // the serial loop for large-Tb plans.
+    let steps = TRIAL_STEPS.div_ceil(tb).max(2) * tb;
+    let core = Field::random(proxy, 0x0E21A9);
+    let mut elapsed = [0f64; 2];
+    for (i, mode) in [Overlap::Off, Overlap::On].into_iter().enumerate() {
+        let mk = || -> Option<Box<dyn Worker>> {
+            let c = Candidate { threads: 1, ..plan.candidate() };
+            Some(Box::new(NativeWorker::new(c.build()?, 1 << 33)))
+        };
+        let workers: Vec<Box<dyn Worker>> = vec![mk()?, mk()?];
+        let mut sched = Scheduler::from_plan(
+            s.clone(),
+            tb,
+            workers,
+            proxy[0],
+            crate::stencil::Boundary::Dirichlet(0.0),
+            0,
+        );
+        sched.overlap = mode;
+        let t0 = Instant::now();
+        sched.run(&core, steps).ok()?;
+        elapsed[i] = t0.elapsed().as_secs_f64();
+    }
+    Some(elapsed[1] < elapsed[0])
 }
 
 /// Real proxy trial: one valid-mode block loop (extract/pad per block,
@@ -340,6 +384,7 @@ mod tests {
         assert!(p.candidate().build().is_some(), "{p:?}");
         assert_eq!(p.bench, "heat1d");
         assert_eq!(p.source, "tuned");
+        assert!(p.overlap.is_some(), "the real search must probe the overlap knob: {p:?}");
     }
 
     #[test]

@@ -11,21 +11,42 @@
 //!   are skipped with a warning (a half-written line from a crashed
 //!   process must not poison every stored plan);
 //! * **atomic compaction** — [`PlanStore::compact`] dedupes to the
-//!   latest record per key and replaces the file via tmp + `rename`,
-//!   so a reader never observes a torn store;
+//!   latest record per key and replaces the file via a
+//!   per-process-unique tmp + `rename`, so a reader never observes a
+//!   torn store.  Writers within one process (serve dispatchers, a
+//!   concurrent `tetris tune`) serialize on a per-path lock, so an
+//!   append can never land between compaction's load and rename and be
+//!   silently dropped; against *other* processes the compactor
+//!   re-merges any records appended since its load before renaming
+//!   (best-effort — the append-only format keeps even a lost record a
+//!   re-tunable cache miss, never corruption);
 //! * **nearest-bucket warm start** — [`PlanStore::lookup_near`] serves
 //!   the closest shape bucket for the same machine/bench/boundary when
-//!   no exact key exists.
+//!   no exact key exists.  [`PlanStore::lookup_in`] /
+//!   [`PlanStore::lookup_near_in`] run the same probes over one loaded
+//!   snapshot, so a resolution ladder reads the file once, not per probe.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::fs;
 use std::io::Write;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::util::error::{Context, Result};
 
 use super::fingerprint::Fingerprint;
 use super::{shape_bucket, Plan};
+
+/// In-process writer lock per store path: appends and compactions on
+/// the same path serialize, so a compaction never races a same-process
+/// append (the cross-process story is the re-merge in `compact`).
+fn path_lock(path: &Path) -> Arc<Mutex<()>> {
+    static LOCKS: OnceLock<Mutex<HashMap<PathBuf, Arc<Mutex<()>>>>> = OnceLock::new();
+    let map = LOCKS.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut g = map.lock().unwrap_or_else(|e| e.into_inner());
+    g.entry(path.to_path_buf()).or_default().clone()
+}
 
 pub struct PlanStore {
     pub path: PathBuf,
@@ -56,6 +77,10 @@ impl PlanStore {
         let Ok(text) = fs::read_to_string(&self.path) else {
             return Vec::new();
         };
+        Self::parse_lines(&text, &self.path)
+    }
+
+    fn parse_lines(text: &str, path: &Path) -> Vec<Plan> {
         let mut out = Vec::new();
         for (i, line) in text.lines().enumerate() {
             let line = line.trim();
@@ -65,9 +90,8 @@ impl PlanStore {
             match Plan::parse_line(line) {
                 Ok(p) => out.push(p),
                 Err(e) => eprintln!(
-                    "tetris plan store: skipping corrupt line {} of {:?}: {e}",
+                    "tetris plan store: skipping corrupt line {} of {path:?}: {e}",
                     i + 1,
-                    self.path
                 ),
             }
         }
@@ -84,13 +108,29 @@ impl PlanStore {
         boundary_kind: &str,
         shape: &[usize],
     ) -> Option<Plan> {
+        Self::lookup_in(&self.load(), fp, bench, boundary_kind, shape)
+    }
+
+    /// [`PlanStore::lookup`] over an already-loaded snapshot, so a
+    /// resolution ladder probing several ways reads the file once.
+    pub fn lookup_in(
+        plans: &[Plan],
+        fp: &Fingerprint,
+        bench: &str,
+        boundary_kind: &str,
+        shape: &[usize],
+    ) -> Option<Plan> {
         let bucket = shape_bucket(shape);
-        self.load().into_iter().rev().find(|p| {
-            p.bench == bench
-                && p.boundary == boundary_kind
-                && p.bucket == bucket
-                && fp.matches(&p.fingerprint)
-        })
+        plans
+            .iter()
+            .rev()
+            .find(|p| {
+                p.bench == bench
+                    && p.boundary == boundary_kind
+                    && p.bucket == bucket
+                    && fp.matches(&p.fingerprint)
+            })
+            .cloned()
     }
 
     /// Warm start: the plan for the same machine/bench/boundary whose
@@ -103,9 +143,20 @@ impl PlanStore {
         boundary_kind: &str,
         shape: &[usize],
     ) -> Option<Plan> {
+        Self::lookup_near_in(&self.load(), fp, bench, boundary_kind, shape)
+    }
+
+    /// [`PlanStore::lookup_near`] over an already-loaded snapshot.
+    pub fn lookup_near_in(
+        plans: &[Plan],
+        fp: &Fingerprint,
+        bench: &str,
+        boundary_kind: &str,
+        shape: &[usize],
+    ) -> Option<Plan> {
         let bucket = shape_bucket(shape);
-        let mut best: Option<(f64, Plan)> = None;
-        for p in self.load() {
+        let mut best: Option<(f64, &Plan)> = None;
+        for p in plans {
             if p.bench != bench
                 || p.boundary != boundary_kind
                 || p.bucket.len() != bucket.len()
@@ -127,12 +178,16 @@ impl PlanStore {
                 best = Some((d, p));
             }
         }
-        best.map(|(_, p)| p)
+        best.map(|(_, p)| p.clone())
     }
 
     /// Append one plan record (creates the store and its directory on
-    /// first use).
+    /// first use).  Serialized against same-process compactions via the
+    /// per-path lock, so a record can never land in the window between a
+    /// compaction's load and its rename.
     pub fn append(&self, plan: &Plan) -> Result<()> {
+        let lock = path_lock(&self.path);
+        let _guard = lock.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(dir) = self.path.parent() {
             if !dir.as_os_str().is_empty() {
                 fs::create_dir_all(dir)
@@ -149,11 +204,20 @@ impl PlanStore {
     }
 
     /// Dedupe to the latest record per key and atomically rewrite the
-    /// store (tmp file + `rename`, same directory).  Returns the number
-    /// of surviving plans.
+    /// store (per-process-unique tmp file + `rename`, same directory —
+    /// the tmp name *appends* a suffix, so custom `--plan-store` paths
+    /// with their own extensions are preserved, and two concurrent
+    /// compactions never interleave writes into one tmp).  Same-process
+    /// appends are excluded by the per-path lock; records appended by
+    /// *other* processes between the load and the rename are re-merged
+    /// before renaming (re-checked a few times, best-effort).  Returns
+    /// the number of surviving plans.
     pub fn compact(&self) -> Result<usize> {
+        let lock = path_lock(&self.path);
+        let _guard = lock.lock().unwrap_or_else(|e| e.into_inner());
+        let text = fs::read_to_string(&self.path).unwrap_or_default();
         let mut latest: BTreeMap<String, Plan> = BTreeMap::new();
-        for p in self.load() {
+        for p in Self::parse_lines(&text, &self.path) {
             latest.insert(p.key(), p);
         }
         if let Some(dir) = self.path.parent() {
@@ -162,17 +226,47 @@ impl PlanStore {
                     .with_context(|| format!("creating plan-store dir {dir:?}"))?;
             }
         }
-        let tmp = self.path.with_extension("jsonl.tmp");
-        {
-            let mut f = fs::File::create(&tmp)
-                .with_context(|| format!("creating {tmp:?}"))?;
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let tmp = PathBuf::from(format!(
+            "{}.compact.{}.{}.tmp",
+            self.path.display(),
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed),
+        ));
+        let write_tmp = |latest: &BTreeMap<String, Plan>| -> Result<()> {
+            let mut f =
+                fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
             for p in latest.values() {
                 writeln!(f, "{}", p.to_json())?;
             }
             f.sync_all().ok();
+            Ok(())
+        };
+        write_tmp(&latest)?;
+        // Cross-process re-merge: fold in anything appended after our
+        // load.  A shrink means another compactor already renamed — its
+        // result is as good as ours, so stop re-reading and let the
+        // last rename win.
+        let mut seen = text.len();
+        for _ in 0..4 {
+            let now = fs::read_to_string(&self.path).unwrap_or_default();
+            if now.len() <= seen {
+                break;
+            }
+            let Some(tail) = now.get(seen..) else { break };
+            let appended = Self::parse_lines(tail, &self.path);
+            if !appended.is_empty() {
+                for p in appended {
+                    latest.insert(p.key(), p);
+                }
+                write_tmp(&latest)?;
+            }
+            seen = now.len();
         }
-        fs::rename(&tmp, &self.path)
-            .with_context(|| format!("replacing {:?}", self.path))?;
+        if let Err(e) = fs::rename(&tmp, &self.path) {
+            let _ = fs::remove_file(&tmp);
+            return Err(e).with_context(|| format!("replacing {:?}", self.path));
+        }
         Ok(latest.len())
     }
 }
@@ -193,6 +287,7 @@ mod tests {
             threads: 1,
             tb: 2,
             tile_w: None,
+            overlap: None,
             gsps: 1.0,
             source: "tuned".into(),
             seed: 0,
@@ -250,6 +345,92 @@ mod tests {
         assert_eq!(s.compact().unwrap(), 2);
         assert_eq!(s.load().len(), 2, "compaction heals the store");
         let _ = fs::remove_file(&s.path);
+    }
+
+    /// Regression (compact-vs-append): a compaction running concurrently
+    /// with a stream of appends must not drop any appended record — the
+    /// old code loaded, rewrote a shared tmp and renamed over the store,
+    /// silently losing anything appended between load and rename.
+    #[test]
+    fn concurrent_appends_survive_compaction() {
+        let s = temp("compact-race");
+        let fp = Fingerprint::synthetic(4, 64, 1.0);
+        s.append(&plan(&fp.id(), "heat2d", "dirichlet", vec![8, 8], "simd")).unwrap();
+        let path = s.path.clone();
+        let fpid = fp.id();
+        let appender = std::thread::spawn(move || {
+            let store = PlanStore::open(&path);
+            for i in 0..40usize {
+                // distinct bucket per record = distinct key, so every
+                // append must survive every concurrent compaction
+                let b = 1usize << (i % 20);
+                store
+                    .append(&plan(&fpid, "heat2d", "dirichlet", vec![b, i + 1], "simd"))
+                    .unwrap();
+                if i % 8 == 0 {
+                    std::thread::yield_now();
+                }
+            }
+        });
+        let path = s.path.clone();
+        let compactor = std::thread::spawn(move || {
+            let store = PlanStore::open(&path);
+            for _ in 0..10 {
+                store.compact().unwrap();
+                std::thread::yield_now();
+            }
+        });
+        appender.join().unwrap();
+        compactor.join().unwrap();
+        assert_eq!(s.compact().unwrap(), 41, "no appended record may be dropped");
+        assert_eq!(s.load().len(), 41);
+        let _ = fs::remove_file(&s.path);
+    }
+
+    /// Regression: the compaction tmp name must *append* a suffix — the
+    /// old `with_extension("jsonl.tmp")` mangled custom `--plan-store`
+    /// paths carrying their own extension (`my.plans` -> `my.jsonl.tmp`),
+    /// so two stores named `a.plans`/`a.conf` would share one tmp.
+    #[test]
+    fn compact_preserves_custom_extension_paths() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("tetris-store-ext-{}.plans", std::process::id()));
+        let mangled = dir.join(format!("tetris-store-ext-{}.jsonl.tmp", std::process::id()));
+        let _ = fs::remove_file(&path);
+        let _ = fs::remove_file(&mangled);
+        let s = PlanStore::open(&path);
+        let fp = Fingerprint::synthetic(4, 64, 1.0);
+        s.append(&plan(&fp.id(), "heat1d", "dirichlet", vec![64], "simd")).unwrap();
+        assert_eq!(s.compact().unwrap(), 1);
+        assert!(path.exists(), "store must survive compaction at its own path");
+        assert!(!mangled.exists(), "with_extension-style tmp must not appear");
+        assert_eq!(s.load().len(), 1);
+        let _ = fs::remove_file(&path);
+    }
+
+    /// Snapshot probes (`lookup_in`/`lookup_near_in`) serve the same
+    /// answers as the file-backed probes from ONE load — the single-read
+    /// contract `resolve_auto` relies on.
+    #[test]
+    fn snapshot_probes_match_file_probes_without_rereading() {
+        let s = temp("snapshot");
+        let fp = Fingerprint::synthetic(4, 64, 1.0);
+        s.append(&plan(&fp.id(), "heat2d", "dirichlet", vec![64, 64], "simd")).unwrap();
+        s.append(&plan(&fp.id(), "heat2d", "dirichlet", vec![256, 256], "tiled")).unwrap();
+        let exact_file = s.lookup(&fp, "heat2d", "dirichlet", &[64, 64]);
+        let near_file = s.lookup_near(&fp, "heat2d", "dirichlet", &[100, 100]);
+        let snapshot = s.load();
+        // deleting the file proves the snapshot probes never re-read it
+        fs::remove_file(&s.path).unwrap();
+        assert_eq!(
+            PlanStore::lookup_in(&snapshot, &fp, "heat2d", "dirichlet", &[64, 64]),
+            exact_file
+        );
+        assert_eq!(
+            PlanStore::lookup_near_in(&snapshot, &fp, "heat2d", "dirichlet", &[100, 100]),
+            near_file
+        );
+        assert!(s.lookup(&fp, "heat2d", "dirichlet", &[64, 64]).is_none());
     }
 
     #[test]

@@ -31,7 +31,7 @@ use std::time::{Duration, Instant};
 
 use crate::util::error::{Context, Result};
 
-use crate::coordinator::Worker;
+use crate::coordinator::{Overlap, Worker};
 use crate::plan::{Fingerprint, Plan, PlanStore};
 use crate::stencil::Field;
 
@@ -61,6 +61,8 @@ pub struct SessionMeta {
     pub tb: usize,
     /// Whether creation adopted a stored plan (vs defaults).
     pub planned: bool,
+    /// §5.3 leader-loop mode the session runs ("on"/"off"/"auto").
+    pub overlap: String,
     /// Thread count the session's lead worker runs (plan's figure when
     /// planned, the server default otherwise) — what a write-back must
     /// record, NOT the raw server flag.
@@ -100,6 +102,13 @@ pub struct ExecConfig {
     pub session_ttl: Duration,
     /// LRU cap on live sessions (`0` = unbounded).
     pub max_sessions: usize,
+    /// §5.3 leader-loop mode for session schedulers (`--overlap`);
+    /// a stored plan's `overlap` field overrides it per session unless
+    /// the operator passed the flag explicitly.
+    pub overlap: Overlap,
+    /// Whether the operator passed `--overlap` explicitly — an explicit
+    /// flag beats stored plans, matching `run`/`hetero` semantics.
+    pub overlap_explicit: bool,
 }
 
 impl Default for ExecConfig {
@@ -113,6 +122,8 @@ impl Default for ExecConfig {
             fingerprint: None,
             session_ttl: Duration::ZERO,
             max_sessions: 0,
+            overlap: Overlap::Auto,
+            overlap_explicit: false,
         }
     }
 }
@@ -188,6 +199,19 @@ impl Executor {
             store.lookup(&self.fingerprint(), &spec.bench, spec.boundary.kind(), &shape)
         });
         let tb = plan.as_ref().map(|p| p.tb.max(1)).unwrap_or(default_tb);
+        // A plan that searched the overlap knob decides the session's
+        // leader-loop mode; otherwise (or when the operator forced a
+        // mode with an explicit --overlap) the server flag does.
+        let overlap = match plan.as_ref().and_then(|p| p.overlap) {
+            Some(o) if !self.cfg.overlap_explicit => {
+                if o {
+                    Overlap::On
+                } else {
+                    Overlap::Off
+                }
+            }
+            _ => self.cfg.overlap,
+        };
         // Build workers + profile OUTSIDE the map lock: session creation
         // takes real timed slab runs, and other dispatchers must keep
         // resolving existing sessions meanwhile.  A racing creator for
@@ -200,6 +224,7 @@ impl Executor {
             workers,
             self.cfg.adapt_every,
             self.cfg.drift_threshold,
+            overlap,
         )?;
         {
             let mut meta = self.meta.lock().unwrap();
@@ -207,6 +232,7 @@ impl Executor {
             m.engine = built.worker_names().join("+");
             m.tb = tb;
             m.planned = plan.is_some();
+            m.overlap = overlap.to_string();
             m.threads =
                 plan.as_ref().map(|p| p.threads.max(1)).unwrap_or(self.cfg.threads.max(1));
             m.tile_w = plan.as_ref().and_then(|p| p.tile_w);
@@ -319,6 +345,10 @@ impl Executor {
         let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
         let shares = sess.shares();
         let gsps = metrics.gstencils_per_sec();
+        if metrics.overlap {
+            self.stats.lock().unwrap().overlap_hidden_ms +=
+                metrics.overlap_hidden.as_secs_f64() * 1e3;
+        }
         let write_back = {
             let mut meta = self.meta.lock().unwrap();
             match meta.get_mut(&key) {
@@ -413,6 +443,9 @@ impl Executor {
             threads: threads.max(1),
             tb,
             tile_w,
+            // observed plans record throughput, not a leader-loop
+            // preference — the tuner's probe owns that knob
+            overlap: None,
             gsps,
             source: "observed".to_string(),
             seed: 0,
@@ -542,6 +575,7 @@ mod tests {
         assert!(meta[0].1.engine.contains("simd"));
         assert!(meta[0].1.tb >= 1);
         assert!(!meta[0].1.planned, "no plan store configured");
+        assert_eq!(meta[0].1.overlap, "auto", "server default leader-loop mode");
         // same bench, different boundary kind: a second session
         let (mut job, rx) = heat1d_job("p", 3, 2);
         job.spec.boundary = Boundary::Periodic;
@@ -577,6 +611,9 @@ mod tests {
             comm_model: crate::coordinator::CommModel::default(),
             boundary: Boundary::Dirichlet(0.0),
             adapt_every: 0,
+            // serial reference vs the session's auto mode: overlap must
+            // be bit-invisible end-to-end
+            overlap: Overlap::Off,
         };
         let (want, _) = sched.run(&input, r.steps).unwrap();
         assert_eq!(got.len(), want.len());
@@ -668,6 +705,54 @@ mod tests {
         assert_eq!(p.source, "observed");
         exec.write_back_observed(&spec, &[64, 64], "xla:heat2d_block+native:simd", 2, 4, None, 9.9);
         assert_eq!(store.load().len(), 1, "artifact-led sessions are machine-local, not plans");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// An explicit `--overlap` beats a stored plan's searched
+    /// preference (matching run/hetero); without the explicit flag the
+    /// plan's preference wins.
+    #[test]
+    fn explicit_overlap_flag_beats_stored_plan_preference() {
+        let path = std::env::temp_dir()
+            .join(format!("tetris-overlap-flag-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let store = Arc::new(PlanStore::open(&path));
+        let fp = Fingerprint::synthetic(2, 64, 1.0);
+        store
+            .append(&Plan {
+                version: crate::plan::PLAN_VERSION,
+                fingerprint: fp.id(),
+                bench: "heat1d".into(),
+                boundary: "dirichlet".into(),
+                bucket: crate::plan::shape_bucket(&[24]),
+                engine: "simd".into(),
+                threads: 1,
+                tb: 4,
+                tile_w: None,
+                overlap: Some(true),
+                gsps: 1.0,
+                source: "tuned".into(),
+                seed: 0,
+            })
+            .unwrap();
+        let run = |overlap: Overlap, explicit: bool| {
+            let exec = executor_with(ExecConfig {
+                scale: 0.05,
+                threads: 1,
+                adapt_every: 0,
+                plan_store: Some(store.clone()),
+                fingerprint: Some(fp.clone()),
+                overlap,
+                overlap_explicit: explicit,
+                ..Default::default()
+            });
+            let (job, rx) = heat1d_job("o", 1, 0);
+            exec.run_jobs(vec![job]);
+            assert!(JobResult::parse_line(&rx.recv().unwrap()).unwrap().ok);
+            exec.session_meta()[0].1.overlap.clone()
+        };
+        assert_eq!(run(Overlap::Auto, false), "on", "plan preference adopted by default");
+        assert_eq!(run(Overlap::Off, true), "off", "explicit operator flag must win");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -105,8 +105,16 @@ impl AdmissionQueue {
             };
         }
         // Backpressure hint: roughly one queue-drain's worth of patience,
-        // growing with depth so clients spread their retries.
-        let retry_after_ms = (25 * (g.queued as u64 + 1)).min(5_000);
+        // growing with queue depth AND with in-flight byte pressure.
+        // Depth alone is not enough: a byte-bound rejection with an
+        // empty queue (the budget held by long in-flight jobs) would
+        // hint the 25 ms floor and send clients into a hot retry loop
+        // even though nothing frees until a multi-second job replies.
+        // Byte pressure in eighths scales the hint up to +200 ms at a
+        // full budget.
+        let pressure_eighths = (g.inflight_bytes.saturating_mul(8) / self.max_bytes) as u64;
+        let retry_after_ms =
+            (25 * (g.queued as u64 + 1) + 25 * pressure_eighths).min(5_000);
         if g.queued >= self.max_jobs {
             return Admission::Rejected {
                 reason: format!("queue full ({} jobs)", self.max_jobs),
@@ -311,6 +319,37 @@ mod tests {
         assert!(matches!(push(&q, "c", Priority::Normal), Admission::Rejected { .. }));
         q.release(batch[0].cost_bytes);
         assert!(matches!(push(&q, "d", Priority::Normal), Admission::Admitted(_)));
+    }
+
+    /// Regression: a byte-bound rejection with an EMPTY queue (budget
+    /// held by in-flight jobs) must hint patience proportional to the
+    /// byte pressure, not the bare 25 ms depth floor that sent clients
+    /// into a hot retry loop.
+    #[test]
+    fn byte_bound_reject_with_empty_queue_scales_hint_by_pressure() {
+        // one 8-cell job costs 192 bytes against a 200-byte budget
+        let q = AdmissionQueue::new(16, 200);
+        assert!(matches!(push(&q, "a", Priority::Normal), Admission::Admitted(_)));
+        // pop it: the queue is now EMPTY but 96% of the bytes are still
+        // in flight until release()
+        let batch = q.pop_batch(1).unwrap();
+        assert_eq!(q.queued(), 0);
+        let hint_under_pressure = match push(&q, "b", Priority::Normal) {
+            Admission::Rejected { reason, retry_after_ms } => {
+                assert!(reason.contains("memory admission"), "{reason}");
+                retry_after_ms
+            }
+            other => panic!("expected byte-bound reject, got {other:?}"),
+        };
+        assert!(
+            hint_under_pressure >= 100,
+            "96% byte pressure must raise the hint well past the 25 ms depth floor, \
+             got {hint_under_pressure}"
+        );
+        // releasing the in-flight bytes readmits — the hint was about
+        // waiting for exactly this release
+        q.release(batch[0].cost_bytes);
+        assert!(matches!(push(&q, "c", Priority::Normal), Admission::Admitted(_)));
     }
 
     #[test]

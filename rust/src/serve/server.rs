@@ -23,7 +23,7 @@ use std::time::{Duration, Instant};
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
-use crate::coordinator::{NativeWorker, Worker, XlaWorker};
+use crate::coordinator::{NativeWorker, Overlap, Worker, XlaWorker};
 use crate::plan::{Candidate, Fingerprint, Plan, PlanStore};
 use crate::runtime::XlaService;
 
@@ -64,6 +64,12 @@ pub struct ServeConfig {
     pub plan_store: Option<String>,
     /// Machine fingerprint for plan keys (None = detect on first use).
     pub fingerprint: Option<Fingerprint>,
+    /// §5.3 leader-loop mode for session schedulers (`--overlap`);
+    /// per-session plans with a searched `overlap` field override it
+    /// unless the flag was passed explicitly.
+    pub overlap: Overlap,
+    /// Whether `--overlap` was passed explicitly (beats stored plans).
+    pub overlap_explicit: bool,
 }
 
 impl Default for ServeConfig {
@@ -82,6 +88,8 @@ impl Default for ServeConfig {
             max_sessions: 0,
             plan_store: None,
             fingerprint: None,
+            overlap: Overlap::Auto,
+            overlap_explicit: false,
         }
     }
 }
@@ -240,6 +248,8 @@ impl Server {
                 fingerprint: cfg.fingerprint.clone(),
                 session_ttl: cfg.session_ttl,
                 max_sessions: cfg.max_sessions,
+                overlap: cfg.overlap,
+                overlap_explicit: cfg.overlap_explicit,
             },
             factory,
         ));
@@ -436,6 +446,7 @@ fn stats_line(ctx: &Ctx) -> Json {
         s.insert("engine".to_string(), Json::Str(meta.engine.clone()));
         s.insert("tb".to_string(), Json::Num(meta.tb as f64));
         s.insert("planned".to_string(), Json::Bool(meta.planned));
+        s.insert("overlap".to_string(), Json::Str(meta.overlap.clone()));
         sessions.insert(key, Json::Obj(s));
     }
     m.insert("sessions".to_string(), Json::Obj(sessions));

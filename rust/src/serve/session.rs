@@ -26,7 +26,7 @@
 use crate::util::error::{Context, Result};
 
 use crate::coordinator::partition::capacity_units;
-use crate::coordinator::{tuner, CommModel, Partition, RunMetrics, Scheduler, Worker};
+use crate::coordinator::{tuner, CommModel, Overlap, Partition, RunMetrics, Scheduler, Worker};
 use crate::stencil::{spec, Boundary, Field};
 
 pub struct Session {
@@ -50,6 +50,7 @@ impl Session {
         workers: Vec<Box<dyn Worker>>,
         adapt_every: usize,
         drift_threshold: f64,
+        overlap: Overlap,
     ) -> Result<Session> {
         let s = spec::get(bench).with_context(|| format!("unknown bench {bench:?}"))?;
         crate::ensure!(!workers.is_empty(), "session needs at least one worker");
@@ -83,6 +84,7 @@ impl Session {
                 comm_model: CommModel::default(),
                 boundary: Boundary::Dirichlet(0.0),
                 adapt_every,
+                overlap,
             },
             profile_weights: weights,
             drift_threshold,
@@ -94,6 +96,11 @@ impl Session {
 
     pub fn tb(&self) -> usize {
         self.sched.tb
+    }
+
+    /// The §5.3 leader-loop mode the session's scheduler runs with.
+    pub fn overlap(&self) -> Overlap {
+        self.sched.overlap
     }
 
     /// Worker identities, in partition order (`STATS` + plan write-back).
@@ -158,6 +165,7 @@ mod tests {
             vec![native("simd"), native("autovec")],
             0,
             0.25,
+            Overlap::Auto,
         )
         .unwrap();
         for (i, boundary) in
@@ -187,15 +195,18 @@ mod tests {
             vec![native("simd"), native("autovec")],
             0,
             0.25,
+            Overlap::Off,
         )
         .unwrap();
+        assert_eq!(sess.overlap(), Overlap::Off);
         assert_eq!(sess.worker_names(), vec!["native:simd", "native:autovec"]);
     }
 
     #[test]
     fn align_steps_rounds_up_to_blocks() {
         let sess =
-            Session::new("heat1d", vec![16], 4, vec![native("naive")], 0, 0.25).unwrap();
+            Session::new("heat1d", vec![16], 4, vec![native("naive")], 0, 0.25, Overlap::Auto)
+                .unwrap();
         assert_eq!(sess.align_steps(0), 4);
         assert_eq!(sess.align_steps(1), 4);
         assert_eq!(sess.align_steps(4), 4);
@@ -245,6 +256,7 @@ mod tests {
             vec![slab_delayed(2000), slab_delayed(500)],
             1,
             10.0, // max possible drift is 2: never invalidate
+            Overlap::Off,
         )
         .unwrap();
         let before = sess.shares();
@@ -274,6 +286,7 @@ mod tests {
             vec![slab_delayed(2000), slab_delayed(500)],
             1,
             0.0,
+            Overlap::Off,
         )
         .unwrap();
         let before = sess.shares();
@@ -287,8 +300,9 @@ mod tests {
 
     #[test]
     fn rejects_bad_bench_and_shape() {
-        assert!(Session::new("nope", vec![8], 1, vec![native("naive")], 0, 0.25).is_err());
-        assert!(Session::new("heat2d", vec![8], 1, vec![native("naive")], 0, 0.25).is_err());
-        assert!(Session::new("heat2d", vec![8, 8], 1, Vec::new(), 0, 0.25).is_err());
+        let o = Overlap::Auto;
+        assert!(Session::new("nope", vec![8], 1, vec![native("naive")], 0, 0.25, o).is_err());
+        assert!(Session::new("heat2d", vec![8], 1, vec![native("naive")], 0, 0.25, o).is_err());
+        assert!(Session::new("heat2d", vec![8, 8], 1, Vec::new(), 0, 0.25, o).is_err());
     }
 }

@@ -26,6 +26,9 @@ pub struct ServeStats {
     pub batched_jobs: u64,
     /// Sessions dropped by the TTL/LRU sweep.
     pub evictions: u64,
+    /// Leader-phase milliseconds hidden under compute by the §5.3
+    /// pipelined scheduler loop, summed over every dispatched batch.
+    pub overlap_hidden_ms: f64,
     buckets: [u64; BUCKETS],
     count: u64,
 }
@@ -42,21 +45,29 @@ impl ServeStats {
         self.count += 1;
     }
 
-    /// Upper bound (ms) of the bucket holding the p-quantile (`0<p<=1`);
-    /// 0 when nothing has been recorded.
+    /// Geometric midpoint (ms) of the bucket holding the p-quantile
+    /// (`0<p<=1`); 0 when nothing has been recorded.
+    ///
+    /// Bucket `i` holds `[2^i, 2^{i+1})` µs; reporting its *upper*
+    /// bound (as this used to) biased every percentile up by ~2x — a
+    /// uniform 1024 µs workload read as p50 = 2.048 ms.  The geometric
+    /// midpoint `2^i · √2` is the unbiased point estimate for a
+    /// log-uniform bucket: the same workload now reads ~1.448 ms, and
+    /// any true latency is within a factor √2 of the report.
     pub fn percentile_ms(&self, p: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
         }
+        let midpoint_ms = |i: usize| (1u64 << i) as f64 * std::f64::consts::SQRT_2 / 1_000.0;
         let target = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
         let mut cum = 0u64;
         for (i, &n) in self.buckets.iter().enumerate() {
             cum += n;
             if cum >= target {
-                return (1u64 << (i + 1)) as f64 / 1_000.0;
+                return midpoint_ms(i);
             }
         }
-        (1u64 << BUCKETS) as f64 / 1_000.0
+        midpoint_ms(BUCKETS - 1)
     }
 
     pub fn latency_count(&self) -> u64 {
@@ -72,6 +83,7 @@ impl ServeStats {
         m.insert("batches".into(), Json::Num(self.batches as f64));
         m.insert("batched_jobs".into(), Json::Num(self.batched_jobs as f64));
         m.insert("evictions".into(), Json::Num(self.evictions as f64));
+        m.insert("overlap_hidden_ms".into(), Json::Num(self.overlap_hidden_ms));
         let mut lat = BTreeMap::new();
         lat.insert("count".into(), Json::Num(self.count as f64));
         lat.insert("p50_ms".into(), Json::Num(self.percentile_ms(0.50)));
@@ -99,9 +111,27 @@ mod tests {
         for _ in 0..100 {
             s.record_latency(Duration::from_micros(1_500)); // bucket [1024, 2048)
         }
+        // geometric midpoint of [1.024, 2.048) ms = 1.024·√2 ≈ 1.448 ms:
+        // inside the bucket, and within √2 of the true 1.5 ms
         let p50 = s.percentile_ms(0.50);
-        assert!((1.5..=2.048).contains(&p50), "{p50}");
+        assert!((1.024..2.048).contains(&p50), "{p50}");
+        assert!((p50 - 1.024 * std::f64::consts::SQRT_2).abs() < 1e-9, "{p50}");
         assert_eq!(s.percentile_ms(0.99), p50, "single-bucket distribution");
+    }
+
+    /// Regression: a uniform power-of-two workload must NOT report the
+    /// bucket's upper bound — 1024 µs used to read as p50 = 2.048 ms, a
+    /// guaranteed ~2x upward bias.
+    #[test]
+    fn uniform_pow2_workload_is_not_biased_to_the_bucket_ceiling() {
+        let mut s = ServeStats::new();
+        for _ in 0..64 {
+            s.record_latency(Duration::from_micros(1_024));
+        }
+        let p50 = s.percentile_ms(0.50);
+        assert!(p50 < 2.0, "upper-bound bias is back: {p50}");
+        assert!(p50 > 1.024, "midpoint must stay inside the bucket: {p50}");
+        assert!((p50 - 1.4482).abs() < 1e-3, "geometric midpoint expected: {p50}");
     }
 
     #[test]
@@ -134,5 +164,6 @@ mod tests {
         assert_eq!(j.at(&["submitted"]).as_usize(), Some(5));
         assert_eq!(j.at(&["latency", "count"]).as_usize(), Some(1));
         assert!(j.at(&["latency", "p99_ms"]).as_f64().unwrap() > 0.0);
+        assert_eq!(j.at(&["overlap_hidden_ms"]).as_f64(), Some(0.0));
     }
 }

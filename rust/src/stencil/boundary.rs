@@ -40,10 +40,7 @@ impl Boundary {
         match self {
             Boundary::Dirichlet(v) => fill_dirichlet(ext, halo, *v),
             Boundary::Neumann => fill_by_row_map(ext, halo, reflect),
-            Boundary::Periodic => fill_by_row_map(ext, halo, |x, lo, hi| {
-                let n = hi - lo + 1;
-                lo + (((x - lo) % n + n) % n)
-            }),
+            Boundary::Periodic => fill_by_row_map(ext, halo, wrap),
         }
     }
 
@@ -71,6 +68,28 @@ impl Boundary {
             Boundary::Dirichlet(_) => "dirichlet",
             Boundary::Neumann => "neumann",
             Boundary::Periodic => "periodic",
+        }
+    }
+
+    /// Map a padded index `x` along one dimension (core occupies
+    /// `[halo, halo + core_len)`) to the padded *core* index that
+    /// sources its value under this condition: identity for in-core
+    /// `x`, reflection for Neumann, wrap for Periodic, and `None` for
+    /// Dirichlet ghosts (they hold the wall constant, not a copy).
+    /// This is exactly the per-axis map [`Boundary::fill`] applies, so
+    /// the pipelined leader can assemble slab ghosts row-by-row
+    /// bit-identically to a full-ring fill + extract.
+    pub fn source_index(&self, x: usize, halo: usize, core_len: usize) -> Option<usize> {
+        let lo = halo as i64;
+        let hi = (halo + core_len - 1) as i64;
+        let xi = x as i64;
+        if xi >= lo && xi <= hi {
+            return Some(x);
+        }
+        match self {
+            Boundary::Dirichlet(_) => None,
+            Boundary::Neumann => Some(reflect(xi, lo, hi) as usize),
+            Boundary::Periodic => Some(wrap(xi, lo, hi) as usize),
         }
     }
 }
@@ -118,6 +137,12 @@ fn reflect(x: i64, lo: i64, hi: i64) -> i64 {
         t = 2 * n - 1 - t;
     }
     lo + t
+}
+
+/// Torus wrap into `[lo, hi]`.
+fn wrap(x: i64, lo: i64, hi: i64) -> i64 {
+    let n = hi - lo + 1;
+    lo + (x - lo).rem_euclid(n)
 }
 
 /// Dirichlet: overwrite the two `halo`-thick face slabs of every dim with
@@ -381,6 +406,29 @@ mod tests {
         assert_eq!("dirichlet:25.5", Boundary::Dirichlet(25.5).to_string());
         assert!("torus".parse::<Boundary>().is_err());
         assert!("dirichlet:hot".parse::<Boundary>().is_err());
+    }
+
+    /// `source_index` must agree with the fill maps cell-for-cell: a
+    /// ghost filled from the ring equals the core cell it names (and
+    /// Dirichlet ghosts name nothing).
+    #[test]
+    fn source_index_matches_fill_maps() {
+        let core_len = 5usize;
+        let halo = 3usize;
+        let core = Field::random(&[core_len], 77);
+        for b in [Boundary::Neumann, Boundary::Periodic] {
+            let ext = b.pad(&core, halo);
+            for x in 0..core_len + 2 * halo {
+                let src = b.source_index(x, halo, core_len).unwrap();
+                assert!((halo..halo + core_len).contains(&src), "{b} x={x} -> {src}");
+                assert_eq!(ext.get(&[x]), ext.get(&[src]), "{b} x={x}");
+            }
+        }
+        let b = Boundary::Dirichlet(2.5);
+        for x in 0..core_len + 2 * halo {
+            let want = ((halo..halo + core_len).contains(&x)).then_some(x);
+            assert_eq!(b.source_index(x, halo, core_len), want);
+        }
     }
 
     #[test]

@@ -150,6 +150,31 @@ impl Field {
         );
     }
 
+    /// Copy the sub-region of `src` at `src_off` (extent `count`) into
+    /// this field at `dst_off` — the allocation-free cross-field region
+    /// copy behind the pipelined leader's slab assembly (extract+paste
+    /// without the intermediate `Field`).
+    pub fn copy_region_from(
+        &mut self,
+        src: &Field,
+        src_off: &[usize],
+        dst_off: &[usize],
+        count: &[usize],
+    ) {
+        assert_eq!(src_off.len(), src.ndim());
+        assert_eq!(dst_off.len(), self.ndim());
+        assert_eq!(count.len(), self.ndim());
+        assert_eq!(src.ndim(), self.ndim());
+        for d in 0..self.ndim() {
+            assert!(
+                src_off[d] + count[d] <= src.shape[d] && dst_off[d] + count[d] <= self.shape[d],
+                "copy_region_from oob: dim {d}"
+            );
+        }
+        let dst_shape = self.shape.clone();
+        copy_region(&src.data, &src.shape, src_off, &mut self.data, &dst_shape, dst_off, count);
+    }
+
     /// Fill the sub-region at `offset` with extent `count` with `v`,
     /// row-by-row (no allocation) — the strided write primitive behind
     /// the O(surface) Dirichlet ghost fill.
@@ -424,6 +449,28 @@ mod tests {
     #[should_panic(expected = "fill_region oob")]
     fn fill_region_oob_panics() {
         Field::zeros(&[3, 3]).fill_region(&[2, 0], &[2, 1], 1.0);
+    }
+
+    #[test]
+    fn copy_region_from_matches_extract_paste() {
+        let src = Field::random(&[6, 7], 21);
+        let orig = Field::random(&[5, 6], 22);
+        let mut a = orig.clone();
+        a.copy_region_from(&src, &[1, 2], &[2, 0], &[3, 4]);
+        let mut b = orig.clone();
+        b.paste(&[2, 0], &src.extract(&[1, 2], &[3, 4]));
+        assert_eq!(a, b);
+        // empty extent is a no-op
+        let mut c = orig.clone();
+        c.copy_region_from(&src, &[0, 0], &[0, 0], &[0, 3]);
+        assert_eq!(c, orig);
+    }
+
+    #[test]
+    #[should_panic(expected = "copy_region_from oob")]
+    fn copy_region_from_oob_panics() {
+        let src = Field::zeros(&[3, 3]);
+        Field::zeros(&[3, 3]).copy_region_from(&src, &[2, 0], &[0, 0], &[2, 2]);
     }
 
     #[test]

@@ -94,6 +94,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -361,6 +368,14 @@ mod tests {
             v.at(&["a"]).as_arr().unwrap()[2].at(&["b"]).as_str(),
             Some("x\ny")
         );
+    }
+
+    #[test]
+    fn as_bool_only_accepts_booleans() {
+        assert_eq!(Json::parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(Json::parse("false").unwrap().as_bool(), Some(false));
+        assert_eq!(Json::parse("1").unwrap().as_bool(), None);
+        assert_eq!(Json::parse("\"true\"").unwrap().as_bool(), None);
     }
 
     #[test]

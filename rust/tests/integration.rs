@@ -4,7 +4,7 @@
 //! These tests require `make artifacts`; without the artifact directory
 //! they skip (printing a note) so `cargo test` stays green pre-build.
 
-use tetris::coordinator::{CommModel, NativeWorker, Partition, Scheduler, Worker, XlaWorker};
+use tetris::coordinator::{CommModel, NativeWorker, Overlap, Partition, Scheduler, Worker, XlaWorker};
 use tetris::runtime::{Manifest, XlaService};
 use tetris::stencil::{reference, spec, Boundary, Field};
 
@@ -81,6 +81,7 @@ fn hetero_cpu_plus_xla_matches_reference() {
             comm_model: CommModel::default(),
             boundary: Boundary::Dirichlet(0.25),
             adapt_every: 0,
+            overlap: Overlap::Auto,
         };
         let core = Field::random(&meta.global_core, 31337);
         let steps = meta.tb * 2;
@@ -162,6 +163,7 @@ fn memory_squeeze_preserves_correctness() {
         comm_model: CommModel::default(),
         boundary: Boundary::Dirichlet(0.0),
         adapt_every: 0,
+        overlap: Overlap::Auto,
     };
     let core = Field::random(&meta.global_core, 999);
     let (got, _) = sched.run(&core, meta.tb).unwrap();
@@ -197,6 +199,7 @@ fn hetero_cpu_plus_xla_periodic_matches_torus_oracle() {
         comm_model: CommModel::default(),
         boundary: Boundary::Periodic,
         adapt_every: 0,
+        overlap: Overlap::Auto,
     };
     let core = Field::random(&meta.global_core, 271828);
     let steps = meta.tb * 2;
@@ -240,6 +243,7 @@ fn worker_failure_propagates() {
         comm_model: CommModel::default(),
         boundary: Boundary::Dirichlet(0.0),
         adapt_every: 0,
+        overlap: Overlap::Auto,
     };
     let core = Field::random(&[16, 16], 5);
     let err = sched.run(&core, 1).unwrap_err();

@@ -30,12 +30,17 @@ fn golden_canonical_lines_round_trip_byte_identically() {
             i + 1
         );
     }
-    // line 1 carries the full record, tile override included
+    // line 1 carries the full record, tile override + searched overlap
+    // preference included
     let p = Plan::parse_line(lines[0]).unwrap();
     assert_eq!(p.version, PLAN_VERSION);
     assert_eq!(p.engine, "tetris-cpu");
     assert_eq!(p.tile_w, Some(64));
+    assert_eq!(p.overlap, Some(true));
     assert_eq!(p.bucket, vec![512, 512]);
+    // line 2 predates the overlap field: absent key reads as None
+    let p = Plan::parse_line(lines[1]).unwrap();
+    assert_eq!(p.overlap, None);
 }
 
 #[test]
@@ -98,6 +103,7 @@ fn scratch_store_append_compact_cycle() {
         threads: 2,
         tb: 4,
         tile_w: None,
+        overlap: None,
         gsps,
         source: "tuned".into(),
         seed: 9,

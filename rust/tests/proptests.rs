@@ -5,7 +5,7 @@
 //! same "many random cases + invariant assertions" methodology.
 
 use tetris::coordinator::partition::{capacity_units, Partition};
-use tetris::coordinator::{tuner, CommLedger, CommModel, NativeWorker, Scheduler, Worker};
+use tetris::coordinator::{tuner, CommLedger, CommModel, NativeWorker, Overlap, Scheduler, Worker};
 use tetris::stencil::{reference, spec, Boundary, Field};
 use tetris::util::prng::SplitMix64;
 
@@ -111,6 +111,9 @@ fn prop_scheduler_equals_reference() {
             comm_model: CommModel::default(),
             boundary,
             adapt_every: 0,
+            // rotate leader-loop modes across cases: serial, pipelined
+            // and auto must all match the oracles
+            overlap: [Overlap::Off, Overlap::On, Overlap::Auto][case % 3],
         };
         let steps = tb * pick(&mut rng, 1, 3);
         let (got, metrics) = sched.run(&core, steps).unwrap();

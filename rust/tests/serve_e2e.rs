@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use tetris::coordinator::{CommModel, NativeWorker, Partition, Scheduler, Worker};
+use tetris::coordinator::{CommModel, NativeWorker, Overlap, Partition, Scheduler, Worker};
 use tetris::plan::{shape_bucket, Fingerprint, Plan, PlanStore, PLAN_VERSION};
 use tetris::serve::{
     default_worker_factory, Client, JobResult, JobSpec, Priority, ServeConfig, Server,
@@ -52,6 +52,10 @@ fn direct_run_tb(
         comm_model: CommModel::default(),
         boundary,
         adapt_every: 0,
+        // serial single-worker reference: the server's sessions run
+        // overlap=auto, so these bit-compares also prove the pipelined
+        // loop is bit-invisible end-to-end
+        overlap: Overlap::Off,
     };
     let core = Field::random(shape, seed);
     let (out, _) = sched.run(&core, steps).unwrap();
@@ -146,6 +150,7 @@ fn e2e_session_adopts_stored_plan_and_matches_fixed_engine_bits() {
             // proxy-grid basis; never compared against live throughput
             gsps: 2.0,
             tile_w: None,
+            overlap: Some(true),
             source: "tuned".into(),
             seed: 0,
         })
@@ -190,6 +195,11 @@ fn e2e_session_adopts_stored_plan_and_matches_fixed_engine_bits() {
     assert!(key.contains("heat1d/dirichlet"), "{key}");
     assert_eq!(sess.at(&["tb"]).as_usize(), Some(plan_tb));
     assert_eq!(sess.at(&["planned"]), &tetris::util::json::Json::Bool(true));
+    assert_eq!(
+        sess.at(&["overlap"]).as_str(),
+        Some("on"),
+        "session must adopt the plan's searched overlap preference"
+    );
     let engine = sess.at(&["engine"]).as_str().unwrap();
     assert!(engine.contains("native:simd"), "{engine}");
     assert!(!engine.contains("tetris-cpu"), "defaults must not leak in: {engine}");

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Smoke bench: run the Fig-12 breakdown, the boundary/adaptive scheduler
-# study and the serving-layer study at a tiny scale and emit single-line
-# JSON summaries (BENCH_smoke.json, BENCH_boundary.json, BENCH_serve.json)
-# so CI can archive the bench trajectory every commit.  Then boot a real
+# study, the serving-layer study and the §5.3 overlap study at a tiny
+# scale and emit single-line JSON summaries (BENCH_smoke.json,
+# BENCH_boundary.json, BENCH_serve.json, BENCH_overlap.json) so CI can
+# archive the bench trajectory every commit.  Then boot a real
 # `tetris serve` on a loopback port, drive 20 mixed-boundary jobs through
 # `tetris submit`, and archive the client-side jobs/sec + p99 as
 # BENCH_serve_live.json.
@@ -16,6 +17,7 @@ OUT="${TETRIS_SMOKE_OUT:-BENCH_smoke.json}"
 BOUNDARY_OUT="${TETRIS_SMOKE_BOUNDARY_OUT:-BENCH_boundary.json}"
 SERVE_OUT="${TETRIS_SMOKE_SERVE_OUT:-BENCH_serve.json}"
 SERVE_LIVE_OUT="${TETRIS_SMOKE_SERVE_LIVE_OUT:-BENCH_serve_live.json}"
+OVERLAP_OUT="${TETRIS_SMOKE_OVERLAP_OUT:-BENCH_overlap.json}"
 PLAN_OUT="${TETRIS_SMOKE_PLAN_OUT:-BENCH_plan.json}"
 PLAN_STORE_OUT="${TETRIS_SMOKE_PLAN_STORE_OUT:-BENCH_plans.jsonl}"
 BIN=rust/target/release/tetris
@@ -34,6 +36,11 @@ cargo build --release --manifest-path rust/Cargo.toml
 # on the same job mix — batched must beat unbatched) + a TCP loopback
 # drive with p99, all in-process.
 "$BIN" bench serve --scale "$SCALE" --threads "$THREADS" --json "$SERVE_OUT"
+
+# §5.3 overlap study: the pipelined (double-buffered) leader loop vs the
+# serial one on an imbalanced 2-worker run — summed worker idle and the
+# leader time hidden under compute, tracked per commit.
+"$BIN" bench overlap --scale "$SCALE" --threads "$THREADS" --json "$OVERLAP_OUT"
 
 # Plan/autotune study: tune heat2d against a throwaway store (budgeted
 # search, seeded for reproducible trial ordering), then the auto-vs-
@@ -73,7 +80,7 @@ wait "$SERVE_PID"
 trap - EXIT
 rm -f "$ADDR_FILE"
 
-for f in "$OUT" "$BOUNDARY_OUT" "$SERVE_OUT" "$SERVE_LIVE_OUT" "$PLAN_OUT" "$PLAN_STORE_OUT"; do
+for f in "$OUT" "$BOUNDARY_OUT" "$SERVE_OUT" "$OVERLAP_OUT" "$SERVE_LIVE_OUT" "$PLAN_OUT" "$PLAN_STORE_OUT"; do
   echo "--- $f ---"
   cat "$f"
 done
