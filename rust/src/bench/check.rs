@@ -1,0 +1,333 @@
+//! Structural invariants over emitted `BENCH_*.json` artifacts —
+//! `tetris bench check FILE...` in CI fails the job when a bench is
+//! broken, instead of silently archiving nonsense.
+//!
+//! Checked invariants (each only where its shape is present, so one
+//! checker covers every artifact kind):
+//! * any percentile block is monotone: `p50_ms ≤ p90_ms ≤ p99_ms ≤
+//!   p999_ms`, and likewise for bare `p50/p99` keys — recursively,
+//!   anywhere in the document;
+//! * serve session batching: the best batched rung's jobs/sec is at
+//!   least the unbatched (`batch=1`) rung's;
+//! * §5.3 overlap: the pipelined loop's summed worker idle is at most
+//!   the serial loop's (parsed from the rows' `extra` strings);
+//! * load suites: every rung conserves jobs (`offered = completed +
+//!   rejected + errors + lost`), nothing is lost, and the deterministic
+//!   Suite A has zero rejects and zero errors.
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+/// Percentile key ladders checked for monotonicity wherever they appear.
+const LADDERS: [&[&str]; 2] = [
+    &["p50_ms", "p90_ms", "p99_ms", "p999_ms"],
+    &["p50", "p90", "p99", "p999"],
+];
+
+/// All violations in one parsed artifact; empty means it passed.
+/// `name` prefixes each message so multi-file output stays attributable.
+pub fn check_json(name: &str, j: &Json) -> Vec<String> {
+    let mut v = Vec::new();
+    walk_percentiles(name, "$", j, &mut v);
+    check_serve_batching(name, j, &mut v);
+    check_overlap_idle(name, j, &mut v);
+    check_suite(name, j, &mut v);
+    v
+}
+
+fn walk_percentiles(name: &str, path: &str, j: &Json, out: &mut Vec<String>) {
+    match j {
+        Json::Obj(m) => {
+            for ladder in LADDERS {
+                let present: Vec<(&str, f64)> = ladder
+                    .iter()
+                    .filter_map(|k| m.get(*k).and_then(|x| x.as_f64()).map(|v| (*k, v)))
+                    .collect();
+                for w in present.windows(2) {
+                    if w[0].1 > w[1].1 {
+                        out.push(format!(
+                            "{name}: {path}: percentiles not monotone: {}={} > {}={}",
+                            w[0].0, w[0].1, w[1].0, w[1].1
+                        ));
+                    }
+                }
+            }
+            for (k, child) in m {
+                walk_percentiles(name, &format!("{path}.{k}"), child, out);
+            }
+        }
+        Json::Arr(a) => {
+            for (i, child) in a.iter().enumerate() {
+                walk_percentiles(name, &format!("{path}[{i}]"), child, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn row_gstencils(rows: &[Json], label: &str) -> Option<f64> {
+    rows.iter()
+        .find(|r| r.at(&["label"]).as_str() == Some(label))
+        .and_then(|r| r.at(&["gstencils_per_sec"]).as_f64())
+}
+
+/// Serve bench: the best batched rung must not lose to batch=1 — the
+/// whole point of the multi-field dispatch.  Comparing the *best*
+/// batched width keeps the invariant about batching, not about which
+/// width wins on a noisy runner.
+fn check_serve_batching(name: &str, j: &Json, out: &mut Vec<String>) {
+    let Some(rows) = j.at(&["sections", "session-batching"]).as_arr() else { return };
+    let Some(base) = row_gstencils(rows, "batch=1") else { return };
+    let best_batched = rows
+        .iter()
+        .filter(|r| {
+            matches!(r.at(&["label"]).as_str(), Some(l) if l.starts_with("batch=") && l != "batch=1")
+        })
+        .filter_map(|r| r.at(&["gstencils_per_sec"]).as_f64())
+        .fold(f64::NEG_INFINITY, f64::max);
+    if best_batched.is_finite() && base > 0.0 && best_batched < base {
+        out.push(format!(
+            "{name}: session-batching: best batched rate {best_batched:.3} jobs/sec \
+             below unbatched {base:.3}"
+        ));
+    }
+}
+
+/// Pull `summed idle X ms` out of an overlap row's `extra` string.
+fn idle_ms_from_extra(extra: &str) -> Option<f64> {
+    let rest = extra.strip_prefix("summed idle ").or_else(|| {
+        extra.split("summed idle ").nth(1)
+    })?;
+    rest.split_whitespace().next()?.parse().ok()
+}
+
+fn check_overlap_idle(name: &str, j: &Json, out: &mut Vec<String>) {
+    let Some(rows) = j.at(&["sections", "overlap"]).as_arr() else { return };
+    let idle_of = |label: &str| -> Option<f64> {
+        rows.iter()
+            .find(|r| r.at(&["label"]).as_str() == Some(label))
+            .and_then(|r| r.at(&["extra"]).as_str())
+            .and_then(idle_ms_from_extra)
+    };
+    if let (Some(off), Some(on)) = (idle_of("overlap=off"), idle_of("overlap=on")) {
+        if on > off {
+            out.push(format!(
+                "{name}: overlap: pipelined summed idle {on:.3} ms exceeds serial {off:.3} ms"
+            ));
+        }
+    }
+}
+
+fn rung_count(rung: &Json, key: &str) -> f64 {
+    rung.at(&[key]).as_f64().unwrap_or(0.0)
+}
+
+fn check_suite(name: &str, j: &Json, out: &mut Vec<String>) {
+    let Some(suite) = j.get("suite") else { return };
+    let suite_name = suite.at(&["name"]).as_str().unwrap_or("").to_string();
+    let Some(rungs) = suite.at(&["rungs"]).as_arr() else {
+        out.push(format!("{name}: suite {suite_name:?} has no rungs array"));
+        return;
+    };
+    if rungs.is_empty() {
+        out.push(format!("{name}: suite {suite_name:?} has zero rungs"));
+    }
+    for (i, rung) in rungs.iter().enumerate() {
+        let label = rung.at(&["label"]).as_str().unwrap_or("?");
+        let (offered, completed) = (rung_count(rung, "offered"), rung_count(rung, "completed"));
+        let (rejected, errors) = (rung_count(rung, "rejected"), rung_count(rung, "errors"));
+        let lost = rung_count(rung, "lost");
+        if offered != completed + rejected + errors + lost {
+            out.push(format!(
+                "{name}: suite rung {i} ({label}): jobs not conserved: offered {offered} != \
+                 {completed} ok + {rejected} rejected + {errors} errors + {lost} lost"
+            ));
+        }
+        if lost > 0.0 {
+            out.push(format!("{name}: suite rung {i} ({label}): {lost} lost replies"));
+        }
+        if offered == 0.0 {
+            out.push(format!("{name}: suite rung {i} ({label}): offered nothing"));
+        }
+        if suite_name == "suiteA" {
+            if rejected > 0.0 {
+                out.push(format!(
+                    "{name}: suiteA rung {i} ({label}): {rejected} rejects in the \
+                     deterministic closed-loop baseline"
+                ));
+            }
+            if errors > 0.0 {
+                out.push(format!("{name}: suiteA rung {i} ({label}): {errors} errored jobs"));
+            }
+        }
+        // a latency count above zero must come with completions, and
+        // vice versa (only completions are recorded)
+        let lat_count = rung.at(&["latency_ms", "total", "count"]).as_f64().unwrap_or(0.0);
+        if lat_count != completed {
+            out.push(format!(
+                "{name}: suite rung {i} ({label}): {lat_count} total-latency samples for \
+                 {completed} completions"
+            ));
+        }
+    }
+}
+
+/// Driver for `tetris bench check FILE...`: parse each artifact, print
+/// per-file verdicts, error out if anything is violated.
+pub fn check_files(paths: &[String]) -> Result<()> {
+    crate::ensure!(!paths.is_empty(), "bench check needs at least one BENCH_*.json path");
+    let mut violations = Vec::new();
+    for path in paths {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let parsed = Json::parse(text.trim()).with_context(|| format!("parsing {path}"))?;
+        let v = check_json(path, &parsed);
+        if v.is_empty() {
+            println!("bench check: {path}: OK");
+        } else {
+            for msg in &v {
+                println!("bench check: VIOLATION: {msg}");
+            }
+            violations.extend(v);
+        }
+    }
+    crate::ensure!(
+        violations.is_empty(),
+        "{} bench invariant violation(s) across {} file(s)",
+        violations.len(),
+        paths.len()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn monotone_percentiles_pass_inverted_fail() {
+        let good = parse(r#"{"latency":{"p50_ms":1.0,"p90_ms":2.0,"p99_ms":3.0,"p999_ms":3.0}}"#);
+        assert!(check_json("g", &good).is_empty());
+        let bad = parse(r#"{"deep":[{"x":{"p50_ms":5.0,"p99_ms":1.0}}]}"#);
+        let v = check_json("b", &bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("not monotone") && v[0].contains("$.deep[0].x"), "{v:?}");
+    }
+
+    #[test]
+    fn bare_percentile_ladder_is_checked_too() {
+        let bad = parse(r#"{"p50":2.0,"p99":1.0}"#);
+        assert_eq!(check_json("b", &bad).len(), 1);
+    }
+
+    #[test]
+    fn batching_invariant() {
+        let good = parse(
+            r#"{"sections":{"session-batching":[
+                {"label":"batch=1","gstencils_per_sec":10.0},
+                {"label":"batch=4","gstencils_per_sec":9.0},
+                {"label":"batch=8","gstencils_per_sec":12.0}]}}"#,
+        );
+        assert!(check_json("g", &good).is_empty(), "best batched (12) beats base (10)");
+        let bad = parse(
+            r#"{"sections":{"session-batching":[
+                {"label":"batch=1","gstencils_per_sec":10.0},
+                {"label":"batch=4","gstencils_per_sec":8.0},
+                {"label":"batch=8","gstencils_per_sec":9.5}]}}"#,
+        );
+        let v = check_json("b", &bad);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("below unbatched"), "{v:?}");
+    }
+
+    #[test]
+    fn overlap_idle_invariant_parses_extra() {
+        assert_eq!(idle_ms_from_extra("summed idle 12.500 ms; hidden 3 ms"), Some(12.5));
+        let good = parse(
+            r#"{"sections":{"overlap":[
+                {"label":"overlap=off","gstencils_per_sec":1.0,"extra":"summed idle 20.000 ms; hidden 0.000 ms"},
+                {"label":"overlap=on","gstencils_per_sec":1.1,"extra":"summed idle 12.000 ms; hidden 6.000 ms"}]}}"#,
+        );
+        assert!(check_json("g", &good).is_empty());
+        let bad = parse(
+            r#"{"sections":{"overlap":[
+                {"label":"overlap=off","gstencils_per_sec":1.0,"extra":"summed idle 10.000 ms"},
+                {"label":"overlap=on","gstencils_per_sec":1.1,"extra":"summed idle 15.000 ms"}]}}"#,
+        );
+        let v = check_json("b", &bad);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("exceeds serial"), "{v:?}");
+    }
+
+    #[test]
+    fn suite_a_rejects_and_conservation() {
+        let good = parse(
+            r#"{"suite":{"name":"suiteA","rungs":[
+                {"label":"conns=4","offered":64,"completed":64,"rejected":0,"errors":0,"lost":0,
+                 "latency_ms":{"total":{"count":64}}}]}}"#,
+        );
+        assert!(check_json("g", &good).is_empty());
+        let bad = parse(
+            r#"{"suite":{"name":"suiteA","rungs":[
+                {"label":"conns=4","offered":64,"completed":60,"rejected":3,"errors":0,"lost":1,
+                 "latency_ms":{"total":{"count":60}}}]}}"#,
+        );
+        let v = check_json("b", &bad);
+        assert!(v.iter().any(|m| m.contains("rejects in the deterministic")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("lost replies")), "{v:?}");
+    }
+
+    #[test]
+    fn suite_b_allows_rejects_but_not_loss_or_leaks() {
+        let good = parse(
+            r#"{"suite":{"name":"suiteB","rungs":[
+                {"label":"rate=100","offered":50,"completed":40,"rejected":10,"errors":0,"lost":0,
+                 "latency_ms":{"total":{"count":40}}}]}}"#,
+        );
+        assert!(check_json("g", &good).is_empty());
+        let leak = parse(
+            r#"{"suite":{"name":"suiteB","rungs":[
+                {"label":"rate=100","offered":50,"completed":40,"rejected":8,"errors":0,"lost":0,
+                 "latency_ms":{"total":{"count":40}}}]}}"#,
+        );
+        let v = check_json("b", &leak);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("not conserved"), "{v:?}");
+    }
+
+    #[test]
+    fn latency_count_must_match_completions() {
+        let bad = parse(
+            r#"{"suite":{"name":"suiteB","rungs":[
+                {"label":"rate=10","offered":5,"completed":5,"rejected":0,"errors":0,"lost":0,
+                 "latency_ms":{"total":{"count":3}}}]}}"#,
+        );
+        let v = check_json("b", &bad);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("latency samples"), "{v:?}");
+    }
+
+    #[test]
+    fn non_serve_artifacts_pass_vacuously() {
+        let j = parse(r#"{"bench":"breakdown","sections":{"heat2d":[{"label":"naive","gstencils_per_sec":0.2}]}}"#);
+        assert!(check_json("g", &j).is_empty());
+    }
+
+    #[test]
+    fn check_files_flags_missing_and_bad_files() {
+        assert!(check_files(&[]).is_err());
+        assert!(check_files(&["/nonexistent/BENCH_x.json".into()]).is_err());
+        let dir = std::env::temp_dir();
+        let good = dir.join(format!("BENCH_check_good_{}.json", std::process::id()));
+        std::fs::write(&good, "{\"bench\":\"smoke\",\"sections\":{}}\n").unwrap();
+        assert!(check_files(&[good.to_string_lossy().into_owned()]).is_ok());
+        let bad = dir.join(format!("BENCH_check_bad_{}.json", std::process::id()));
+        std::fs::write(&bad, "{\"p50_ms\":9.0,\"p99_ms\":1.0}\n").unwrap();
+        assert!(check_files(&[bad.to_string_lossy().into_owned()]).is_err());
+        let _ = std::fs::remove_file(&good);
+        let _ = std::fs::remove_file(&bad);
+    }
+}

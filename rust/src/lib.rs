@@ -21,6 +21,11 @@
 //!   admission queue (priority classes + backpressure), job batching,
 //!   partition-caching sessions with TTL/LRU eviction, and the TCP line
 //!   protocol (`tetris serve` / `tetris submit`).
+//! * [`load`] — stochastic load harness on top of [`serve`]: spawns the
+//!   release server as its own process and drives deterministic
+//!   (Suite A) and Poisson/zipfian open-loop (Suite B) job streams at
+//!   it over TCP, reporting tail latencies, rejects and `/proc` use
+//!   (`tetris load`).
 //! * [`plan`] — the autotuning Pattern Mapper (§4): hardware
 //!   fingerprinting, cost-pruned timed search over (engine, threads,
 //!   Tb, tile), and the persistent plan store behind `--engine auto`
@@ -44,6 +49,7 @@ pub mod baselines;
 pub mod bench;
 pub mod coordinator;
 pub mod engine;
+pub mod load;
 pub mod model;
 pub mod plan;
 pub mod runtime;

@@ -1,0 +1,351 @@
+//! `tetris load` — stochastic load harness for the serving layer.
+//!
+//! The ROADMAP north star is "heavy traffic from millions of users";
+//! every serve bench before this measured a fixed-rate loopback mean.
+//! This module makes the serving claims falsifiable the way the WIND
+//! bench harness does it: drive the *release server binary* as a
+//! separate OS process over real TCP, and report tails, rejects and
+//! resource use — not means.
+//!
+//! Two suites:
+//! * **Suite A** (deterministic, closed loop): N connection threads,
+//!   each submitting a fixed, seeded job list synchronously.  With
+//!   `conns` ≤ the admission capacity this must produce **zero**
+//!   rejects and zero lost replies — the byte-stable baseline (modulo
+//!   timings) that `bench check` gates on.
+//! * **Suite B** (stochastic, open loop): one pipelined connection;
+//!   a seeded Poisson schedule paces sends regardless of server state,
+//!   a zipfian-weighted mix picks each job, and an optional rate sweep
+//!   multiplies the arrival rate rung by rung until sustained admission
+//!   rejects — the saturation walk that locates the service's knee.
+//!
+//! Submodules: [`workload`] (job kinds + seeded mixes), [`arrival`]
+//! (Poisson schedules), [`recorder`] (per-rung counts + the shared
+//! [`crate::serve::LatencyHistogram`] views), [`resources`]
+//! (`/proc/<pid>` RSS/CPU polling), [`report`] (the
+//! `BENCH_serve_suite*.json` codec).
+
+pub mod arrival;
+pub mod recorder;
+pub mod report;
+pub mod resources;
+pub mod workload;
+
+pub use arrival::Poisson;
+pub use recorder::Recorder;
+pub use report::{Rung, SuiteReport};
+pub use resources::{ProcMonitor, ProcSummary};
+pub use workload::{standard_catalog, zipf_weights, JobKind, JobMix};
+
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::serve::{Client, JobSpec};
+use crate::util::error::{Context, Result};
+use crate::util::prng::SplitMix64;
+
+/// Everything a load run needs; built by the CLI, consumed by the suite
+/// runners and the server spawner.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// Drive an already-running server instead of spawning one.
+    pub addr: Option<String>,
+    /// Server binary to spawn (default: the currently running binary).
+    pub bin: Option<String>,
+    /// `--scale` handed to the spawned server (problem-size default).
+    pub scale: f64,
+    /// `--threads` per dispatcher on the spawned server.
+    pub threads: usize,
+    /// Dispatcher count (`serve --workers`) on the spawned server.
+    pub dispatchers: usize,
+    /// Admission queue depth (`serve --queue`) on the spawned server.
+    pub queue_jobs: usize,
+    /// Master seed: pins job mixes, arrival schedules and input fields.
+    pub seed: u64,
+    /// Suite A: concurrent closed-loop connections.
+    pub conns: usize,
+    /// Suite A: jobs submitted per connection.
+    pub jobs_per_conn: usize,
+    /// Suite B: arrival rate (jobs/sec) of the first rung.
+    pub rate: f64,
+    /// Suite B: wall-clock horizon of each rung's schedule.
+    pub duration: Duration,
+    /// Suite B: zipf exponent of the job mix (0 = uniform).
+    pub zipf_s: f64,
+    /// Suite B: keep multiplying the rate until sustained rejects.
+    pub sweep: bool,
+    /// Rate multiplier between sweep rungs.
+    pub sweep_factor: f64,
+    /// Sweep safety cap on rung count.
+    pub max_rungs: usize,
+    /// Sweep stops once a rung's reject fraction reaches this.
+    pub stop_reject_frac: f64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            addr: None,
+            bin: None,
+            scale: 0.05,
+            threads: 1,
+            dispatchers: 2,
+            queue_jobs: 64,
+            seed: 0x10AD,
+            conns: 4,
+            jobs_per_conn: 16,
+            rate: 50.0,
+            duration: Duration::from_secs(5),
+            zipf_s: 1.1,
+            sweep: false,
+            sweep_factor: 2.0,
+            max_rungs: 6,
+            stop_reject_frac: 0.5,
+        }
+    }
+}
+
+/// A `tetris serve` child process the harness booted and owns.  Dropping
+/// it without [`SpawnedServer::shutdown`] kills the child, so a failing
+/// suite never leaks a listener.
+pub struct SpawnedServer {
+    child: std::process::Child,
+    pub addr: String,
+    done: bool,
+}
+
+impl SpawnedServer {
+    pub fn pid(&self) -> u32 {
+        self.child.id()
+    }
+
+    /// Graceful drain: `SHUTDOWN` over the protocol, then reap.
+    pub fn shutdown(&mut self) -> Result<()> {
+        let mut c = Client::connect(self.addr.as_str())?;
+        c.shutdown()?;
+        self.child.wait()?;
+        self.done = true;
+        Ok(())
+    }
+}
+
+impl Drop for SpawnedServer {
+    fn drop(&mut self) {
+        if !self.done {
+            let _ = self.child.kill();
+            let _ = self.child.wait();
+        }
+    }
+}
+
+/// Boot the release server as a separate OS process on an ephemeral
+/// loopback port (`--addr-file` handshake, `--plan-store none` so load
+/// runs never pollute the user's plan store) and wait for its address.
+pub fn spawn_server(cfg: &LoadConfig) -> Result<SpawnedServer> {
+    let bin = match &cfg.bin {
+        Some(b) => PathBuf::from(b),
+        None => std::env::current_exe().context("locating the tetris binary")?,
+    };
+    let addr_file = std::env::temp_dir().join(format!(
+        "tetris-load-addr-{}-{:x}.txt",
+        std::process::id(),
+        cfg.seed
+    ));
+    let _ = std::fs::remove_file(&addr_file);
+    let child = Command::new(&bin)
+        .arg("serve")
+        .args(["--addr", "127.0.0.1:0"])
+        .arg("--addr-file")
+        .arg(&addr_file)
+        .args(["--plan-store", "none"])
+        .args(["--workers", &cfg.dispatchers.to_string()])
+        .args(["--queue", &cfg.queue_jobs.to_string()])
+        .args(["--threads", &cfg.threads.to_string()])
+        .args(["--scale", &cfg.scale.to_string()])
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .with_context(|| format!("spawning {} serve", bin.display()))?;
+    let mut server = SpawnedServer { child, addr: String::new(), done: false };
+    for _ in 0..200 {
+        if let Ok(s) = std::fs::read_to_string(&addr_file) {
+            let s = s.trim();
+            if !s.is_empty() {
+                server.addr = s.to_string();
+                break;
+            }
+        }
+        if let Some(status) = server.child.try_wait()? {
+            crate::bail!("spawned server exited before publishing its address ({status})");
+        }
+        thread::sleep(Duration::from_millis(50));
+    }
+    let _ = std::fs::remove_file(&addr_file);
+    crate::ensure!(
+        !server.addr.is_empty(),
+        "spawned server never published its address (waited 10s)"
+    );
+    Ok(server)
+}
+
+/// Suite A: deterministic closed-loop baseline.  `conns` threads each
+/// submit their seeded `jobs_per_conn` list synchronously; with the
+/// connection count at or below the admission capacity this yields zero
+/// rejects, so any nonzero reject/lost count is a server bug, not load.
+pub fn run_suite_a(addr: &str, cfg: &LoadConfig) -> Result<SuiteReport> {
+    let mix = JobMix::standard_uniform();
+    let conns = cfg.conns.max(1);
+    let jobs = cfg.jobs_per_conn.max(1);
+    let t0 = Instant::now();
+    let per_conn: Vec<Result<Recorder>> = thread::scope(|s| {
+        let handles: Vec<_> = (0..conns)
+            .map(|c| {
+                let mix = &mix;
+                s.spawn(move || -> Result<Recorder> {
+                    let mut rng = SplitMix64::new(cfg.seed ^ (0xA150_0000 + c as u64));
+                    let mut client = Client::connect(addr)?;
+                    let mut rec = Recorder::new();
+                    for j in 0..jobs {
+                        let kind = mix.sample(&mut rng);
+                        let spec =
+                            mix.spec(kind, format!("a{c}-{j}"), cfg.seed + (c * jobs + j) as u64);
+                        let sent_at = Instant::now();
+                        rec.on_send();
+                        match client.submit(&spec) {
+                            Ok(reply) => rec.on_reply(&reply, sent_at.elapsed()),
+                            Err(_) => {
+                                rec.on_lost();
+                                break;
+                            }
+                        }
+                    }
+                    Ok(rec)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(crate::err!("suite A connection thread panicked")))
+            })
+            .collect()
+    });
+    let wall = t0.elapsed();
+    let mut rec = Recorder::new();
+    for r in per_conn {
+        rec.merge(&r?);
+    }
+    let rung = Rung { label: format!("conns={conns}"), offered_rate: 0.0, rec, wall };
+    Ok(SuiteReport { name: "suiteA".into(), seed: cfg.seed, rungs: vec![rung] })
+}
+
+/// One Suite B rung: a seeded Poisson schedule at `rate` jobs/sec over
+/// `cfg.duration`, sent open-loop down one pipelined connection.  The
+/// sender thread paces arrivals and hands each send timestamp to the
+/// receiver through a channel; the server's per-connection reply
+/// ordering pairs timestamps with replies with no job-id bookkeeping.
+fn run_rung_b(addr: &str, cfg: &LoadConfig, rate: f64, rung_idx: usize) -> Result<Rung> {
+    let mix = JobMix::standard_zipf(cfg.zipf_s);
+    let seed = cfg.seed.wrapping_add(0x9E37_79B9u64.wrapping_mul(rung_idx as u64 + 1));
+    let offsets = Poisson::new(rate, seed).schedule(cfg.duration);
+    crate::ensure!(
+        !offsets.is_empty(),
+        "rate {rate}/s over {:?} produced no arrivals; raise --rate or --duration",
+        cfg.duration
+    );
+    let mut rng = SplitMix64::new(seed ^ 0xB);
+    let specs: Vec<JobSpec> = (0..offsets.len())
+        .map(|i| {
+            let kind = mix.sample(&mut rng);
+            mix.spec(kind, format!("b{rung_idx}-{i}"), seed.wrapping_add(i as u64))
+        })
+        .collect();
+    let (mut send, mut recv) = Client::connect(addr)?.split();
+    let (tx, rx) = mpsc::channel::<Instant>();
+    let t0 = Instant::now();
+    let mut rec = Recorder::new();
+    thread::scope(|s| {
+        let (offsets, specs) = (&offsets, &specs);
+        s.spawn(move || {
+            let start = Instant::now();
+            for (off, spec) in offsets.iter().zip(specs) {
+                let now = start.elapsed();
+                if *off > now {
+                    thread::sleep(*off - now);
+                }
+                if send.send_spec(spec).is_err() {
+                    break;
+                }
+                if tx.send(Instant::now()).is_err() {
+                    break;
+                }
+            }
+            // tx drops here: the receiver's channel drains and closes
+        });
+        let mut dead = false;
+        for sent_at in rx {
+            rec.on_send();
+            if dead {
+                rec.on_lost();
+                continue;
+            }
+            match recv.recv_result() {
+                Ok(reply) => rec.on_reply(&reply, sent_at.elapsed()),
+                Err(_) => {
+                    rec.on_lost();
+                    dead = true;
+                }
+            }
+        }
+    });
+    let wall = t0.elapsed();
+    Ok(Rung { label: format!("rate={rate:.1}"), offered_rate: rate, rec, wall })
+}
+
+/// Suite B: the stochastic open-loop study.  Without `sweep`, one rung
+/// at `cfg.rate`; with it, rates multiply by `sweep_factor` rung after
+/// rung (each rung re-seeded, so the whole sweep is reproducible) until
+/// a rung's reject fraction reaches `stop_reject_frac` — sustained
+/// admission rejects, i.e. the saturation knee — or `max_rungs` caps it.
+pub fn run_suite_b(addr: &str, cfg: &LoadConfig) -> Result<SuiteReport> {
+    let mut rungs = Vec::new();
+    let mut rate = cfg.rate.max(0.1);
+    let total = if cfg.sweep { cfg.max_rungs.max(1) } else { 1 };
+    for i in 0..total {
+        let rung = run_rung_b(addr, cfg, rate, i)?;
+        let saturated = rung.reject_fraction() >= cfg.stop_reject_frac;
+        rungs.push(rung);
+        if saturated {
+            break;
+        }
+        rate *= cfg.sweep_factor.max(1.01);
+    }
+    Ok(SuiteReport { name: "suiteB".into(), seed: cfg.seed, rungs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let cfg = LoadConfig::default();
+        assert!(cfg.conns <= cfg.queue_jobs, "suite A must fit the admission queue");
+        assert!(cfg.sweep_factor > 1.0 && cfg.stop_reject_frac > 0.0);
+        assert!(cfg.rate > 0.0 && !cfg.duration.is_zero());
+    }
+
+    #[test]
+    fn spawn_fails_fast_on_a_bogus_binary() {
+        let cfg = LoadConfig {
+            bin: Some("/nonexistent/tetris-load-test".into()),
+            ..Default::default()
+        };
+        assert!(spawn_server(&cfg).is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Per-rung measurement: counts every job offered and files every reply
+//! into the same [`LatencyHistogram`] type the server reports from.
+//!
+//! Three latency views per job:
+//! * **queue** — the server-reported admission→dispatch wait (`queue_ms`);
+//! * **service** — the server-reported execution time (`exec_ms`);
+//! * **total** — the client-measured send→reply round trip, which is the
+//!   only one that includes socket and reply-ordering delay.
+//!
+//! Rejects are *not* latency samples — they are counted separately and
+//! their `retry_after_ms` hints collected verbatim, because the hint
+//! distribution is itself an output of the experiment (it is the
+//! backpressure signal a well-behaved client would obey).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::serve::{JobResult, LatencyHistogram};
+use crate::util::json::Json;
+
+#[derive(Debug, Default, Clone)]
+pub struct Recorder {
+    /// Jobs put on the wire.
+    pub offered: u64,
+    /// `ok:true` replies.
+    pub completed: u64,
+    /// Admission rejects (`ok:false` with a `retry_after_ms` hint).
+    pub rejected: u64,
+    /// Other failures (parse/run errors — `ok:false`, no hint).
+    pub errors: u64,
+    /// Offered jobs that never got any reply (connection died).
+    pub lost: u64,
+    pub queue: LatencyHistogram,
+    pub service: LatencyHistogram,
+    pub total: LatencyHistogram,
+    /// Observed backpressure hints, one per reject, in arrival order.
+    pub retry_hints_ms: Vec<u64>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    /// A job went on the wire.
+    pub fn on_send(&mut self) {
+        self.offered += 1;
+    }
+
+    /// Its (in-order) reply came back `round_trip` after the send.
+    pub fn on_reply(&mut self, r: &JobResult, round_trip: Duration) {
+        if r.ok {
+            self.completed += 1;
+            self.queue.record_ms(r.queue_ms);
+            self.service.record_ms(r.exec_ms);
+            self.total.record(round_trip);
+        } else if let Some(hint) = r.retry_after_ms {
+            self.rejected += 1;
+            self.retry_hints_ms.push(hint);
+        } else {
+            self.errors += 1;
+        }
+    }
+
+    /// An offered job whose reply will never arrive.
+    pub fn on_lost(&mut self) {
+        self.lost += 1;
+    }
+
+    /// Fold a per-connection recorder into the rung total.
+    pub fn merge(&mut self, other: &Recorder) {
+        self.offered += other.offered;
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.errors += other.errors;
+        self.lost += other.lost;
+        self.queue.merge(&other.queue);
+        self.service.merge(&other.service);
+        self.total.merge(&other.total);
+        self.retry_hints_ms.extend_from_slice(&other.retry_hints_ms);
+    }
+
+    /// Every offered job must be accounted for exactly once.
+    pub fn conserved(&self) -> bool {
+        self.offered == self.completed + self.rejected + self.errors + self.lost
+    }
+
+    /// Summary of the observed `retry_after_ms` hints: count, how many
+    /// were the hard `0` (= do not retry), min/p50/max/mean.
+    pub fn retry_hint_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        let mut sorted = self.retry_hints_ms.clone();
+        sorted.sort_unstable();
+        let n = sorted.len();
+        m.insert("count".into(), Json::Num(n as f64));
+        m.insert(
+            "zeros".into(),
+            Json::Num(sorted.iter().take_while(|&&h| h == 0).count() as f64),
+        );
+        m.insert("min_ms".into(), Json::Num(sorted.first().copied().unwrap_or(0) as f64));
+        m.insert("p50_ms".into(), Json::Num(if n == 0 { 0.0 } else { sorted[(n - 1) / 2] as f64 }));
+        m.insert("max_ms".into(), Json::Num(sorted.last().copied().unwrap_or(0) as f64));
+        let mean = if n == 0 { 0.0 } else { sorted.iter().sum::<u64>() as f64 / n as f64 };
+        m.insert("mean_ms".into(), Json::Num(mean));
+        Json::Obj(m)
+    }
+
+    /// The rung's latency block: one histogram JSON per view.
+    pub fn latency_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("queue".into(), self.queue.to_json());
+        m.insert("service".into(), self.service.to_json());
+        m.insert("total".into(), self.total.to_json());
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::JobResult;
+
+    fn ok_reply(queue_ms: f64, exec_ms: f64) -> JobResult {
+        JobResult { ok: true, queue_ms, exec_ms, ..Default::default() }
+    }
+
+    #[test]
+    fn replies_land_in_the_right_counters() {
+        let mut rec = Recorder::new();
+        for _ in 0..3 {
+            rec.on_send();
+        }
+        rec.on_reply(&ok_reply(1.0, 2.0), Duration::from_millis(4));
+        rec.on_reply(&JobResult::reject("j", "full", 125), Duration::from_millis(1));
+        rec.on_reply(&JobResult::failure("j", "bad bench"), Duration::from_millis(1));
+        assert_eq!((rec.offered, rec.completed, rec.rejected, rec.errors), (3, 1, 1, 1));
+        assert!(rec.conserved());
+        assert_eq!(rec.retry_hints_ms, vec![125]);
+        assert_eq!(rec.total.count(), 1, "only completions are latency samples");
+    }
+
+    #[test]
+    fn lost_jobs_balance_conservation() {
+        let mut rec = Recorder::new();
+        rec.on_send();
+        rec.on_send();
+        rec.on_reply(&ok_reply(0.5, 1.5), Duration::from_millis(2));
+        assert!(!rec.conserved(), "one reply outstanding");
+        rec.on_lost();
+        assert!(rec.conserved());
+        assert_eq!(rec.lost, 1);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_histograms() {
+        let mut a = Recorder::new();
+        let mut b = Recorder::new();
+        a.on_send();
+        a.on_reply(&ok_reply(1.0, 1.0), Duration::from_millis(2));
+        b.on_send();
+        b.on_reply(&JobResult::reject("j", "full", 50), Duration::from_millis(1));
+        a.merge(&b);
+        assert_eq!((a.offered, a.completed, a.rejected), (2, 1, 1));
+        assert_eq!(a.total.count(), 1);
+        assert_eq!(a.retry_hints_ms, vec![50]);
+        assert!(a.conserved());
+    }
+
+    #[test]
+    fn retry_hint_summary_counts_hard_zeros() {
+        let mut rec = Recorder::new();
+        for hint in [0u64, 50, 0, 200, 100] {
+            rec.on_send();
+            rec.on_reply(&JobResult::reject("j", "full", hint), Duration::from_millis(1));
+        }
+        let j = rec.retry_hint_json();
+        assert_eq!(j.at(&["count"]).as_usize(), Some(5));
+        assert_eq!(j.at(&["zeros"]).as_usize(), Some(2));
+        assert_eq!(j.at(&["min_ms"]).as_f64(), Some(0.0));
+        assert_eq!(j.at(&["max_ms"]).as_f64(), Some(200.0));
+        assert_eq!(j.at(&["p50_ms"]).as_f64(), Some(50.0));
+        assert_eq!(j.at(&["mean_ms"]).as_f64(), Some(70.0));
+    }
+
+    #[test]
+    fn latency_json_has_all_three_views_with_p999() {
+        let mut rec = Recorder::new();
+        rec.on_send();
+        rec.on_reply(&ok_reply(1.0, 3.0), Duration::from_millis(5));
+        let j = rec.latency_json();
+        for view in ["queue", "service", "total"] {
+            assert!(j.at(&[view, "p999_ms"]).as_f64().unwrap() > 0.0, "{view}");
+        }
+    }
+}

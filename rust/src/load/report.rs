@@ -1,0 +1,182 @@
+//! Suite report codec: one single-line JSON object per suite, shaped so
+//! the existing CI tooling (`bench::summary_json` consumers, `tetris
+//! bench check`) reads load reports and bench smokes with the same code.
+//!
+//! The top level *is* a `bench::summary_json` document — `bench`,
+//! `scale`, `threads`, `sections` with one `Row` per rung (goodput
+//! jobs/sec in `gstencils_per_sec`, as the serve bench already does) —
+//! plus two load-specific keys:
+//! * `suite` — the full per-rung detail: counts, conservation inputs,
+//!   offered/goodput rates, the three latency histograms (p50→p99.9)
+//!   and the retry-hint distribution;
+//! * `proc`  — RSS/CPU summary of the spawned server process, when the
+//!   harness had a pid to watch.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::bench::{summary_json, Row};
+use crate::util::json::Json;
+
+use super::recorder::Recorder;
+use super::resources::ProcSummary;
+
+/// One measured rung: a (rate, duration) cell of a suite.
+#[derive(Debug, Clone)]
+pub struct Rung {
+    pub label: String,
+    /// Configured arrival rate (jobs/sec); 0 for closed-loop rungs.
+    pub offered_rate: f64,
+    pub rec: Recorder,
+    pub wall: Duration,
+}
+
+impl Rung {
+    pub fn offered_per_sec(&self) -> f64 {
+        self.rec.offered as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn goodput_per_sec(&self) -> f64 {
+        self.rec.completed as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn reject_fraction(&self) -> f64 {
+        self.rec.rejected as f64 / (self.rec.offered as f64).max(1.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("label".into(), Json::Str(self.label.clone()));
+        m.insert("configured_rate_per_sec".into(), Json::Num(self.offered_rate));
+        m.insert("wall_ms".into(), Json::Num(self.wall.as_secs_f64() * 1e3));
+        m.insert("offered".into(), Json::Num(self.rec.offered as f64));
+        m.insert("completed".into(), Json::Num(self.rec.completed as f64));
+        m.insert("rejected".into(), Json::Num(self.rec.rejected as f64));
+        m.insert("errors".into(), Json::Num(self.rec.errors as f64));
+        m.insert("lost".into(), Json::Num(self.rec.lost as f64));
+        m.insert("offered_per_sec".into(), Json::Num(self.offered_per_sec()));
+        m.insert("goodput_per_sec".into(), Json::Num(self.goodput_per_sec()));
+        m.insert("reject_fraction".into(), Json::Num(self.reject_fraction()));
+        m.insert("latency_ms".into(), self.rec.latency_json());
+        m.insert("retry_after_ms".into(), self.rec.retry_hint_json());
+        Json::Obj(m)
+    }
+}
+
+/// A completed suite: its rungs in execution order.
+#[derive(Debug, Clone, Default)]
+pub struct SuiteReport {
+    /// `"suiteA"` or `"suiteB"` — `bench check` keys its reject
+    /// invariant off this name.
+    pub name: String,
+    pub seed: u64,
+    pub rungs: Vec<Rung>,
+}
+
+impl SuiteReport {
+    /// The whole-suite single-line JSON document (see module docs).
+    pub fn to_json(&self, scale: f64, threads: usize, proc: Option<&ProcSummary>) -> Json {
+        let rows: Vec<Row> = self
+            .rungs
+            .iter()
+            .map(|r| Row {
+                label: r.label.clone(),
+                gstencils: r.goodput_per_sec(),
+                speedup: r.goodput_per_sec()
+                    / self.rungs.first().map(|f| f.goodput_per_sec()).unwrap_or(0.0).max(1e-9),
+                extra: format!(
+                    "jobs/sec goodput; offered {:.1}/s, {} ok / {} rejected / {} lost, total p99.9 {:.3} ms",
+                    r.offered_per_sec(),
+                    r.rec.completed,
+                    r.rec.rejected,
+                    r.rec.lost,
+                    r.rec.total.percentile_ms(0.999),
+                ),
+            })
+            .collect();
+        let sections = vec![(self.name.clone(), rows)];
+        let mut j = summary_json(&format!("serve_{}", self.name), scale, threads, &sections);
+        let Json::Obj(top) = &mut j else { unreachable!("summary_json returns an object") };
+        let mut suite = BTreeMap::new();
+        suite.insert("name".to_string(), Json::Str(self.name.clone()));
+        suite.insert("seed".to_string(), Json::Num(self.seed as f64));
+        suite.insert(
+            "rungs".to_string(),
+            Json::Arr(self.rungs.iter().map(Rung::to_json).collect()),
+        );
+        top.insert("suite".to_string(), Json::Obj(suite));
+        if let Some(p) = proc {
+            top.insert("proc".to_string(), p.to_json());
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::JobResult;
+
+    fn rung(label: &str, completed: u64, rejected: u64) -> Rung {
+        let mut rec = Recorder::new();
+        for i in 0..completed + rejected {
+            rec.on_send();
+            if i < completed {
+                let ok = JobResult { ok: true, queue_ms: 0.5, exec_ms: 2.0, ..Default::default() };
+                rec.on_reply(&ok, Duration::from_millis(3));
+            } else {
+                rec.on_reply(&JobResult::reject("j", "full", 75), Duration::from_millis(1));
+            }
+        }
+        Rung {
+            label: label.into(),
+            offered_rate: 100.0,
+            rec,
+            wall: Duration::from_millis(500),
+        }
+    }
+
+    #[test]
+    fn rung_rates_and_fractions() {
+        let r = rung("rate=100", 8, 2);
+        assert!((r.offered_per_sec() - 20.0).abs() < 1e-6);
+        assert!((r.goodput_per_sec() - 16.0).abs() < 1e-6);
+        assert!((r.reject_fraction() - 0.2).abs() < 1e-9);
+        let j = r.to_json();
+        assert_eq!(j.at(&["offered"]).as_usize(), Some(10));
+        assert_eq!(j.at(&["retry_after_ms", "count"]).as_usize(), Some(2));
+        assert!(j.at(&["latency_ms", "total", "p999_ms"]).as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn suite_json_is_single_line_and_bench_compatible() {
+        let suite = SuiteReport {
+            name: "suiteB".into(),
+            seed: 42,
+            rungs: vec![rung("rate=100", 10, 0), rung("rate=200", 9, 6)],
+        };
+        let proc = ProcSummary { samples: 4, rss_max_bytes: 1 << 20, rss_mean_bytes: 1 << 19, cpu_secs: 0.5 };
+        let j = suite.to_json(0.1, 2, Some(&proc));
+        let text = j.to_string();
+        assert!(!text.contains('\n'));
+        let back = Json::parse(&text).unwrap();
+        // bench::summary_json shape preserved
+        assert_eq!(back.at(&["bench"]).as_str(), Some("serve_suiteB"));
+        let rows = back.at(&["sections", "suiteB"]).as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].at(&["label"]).as_str(), Some("rate=100"));
+        assert!(rows[0].at(&["extra"]).as_str().unwrap().contains("jobs/sec"));
+        // load-specific detail attached
+        assert_eq!(back.at(&["suite", "name"]).as_str(), Some("suiteB"));
+        assert_eq!(back.at(&["suite", "rungs"]).as_arr().unwrap().len(), 2);
+        assert_eq!(back.at(&["proc", "samples"]).as_usize(), Some(4));
+    }
+
+    #[test]
+    fn suite_json_without_proc_omits_the_block() {
+        let suite = SuiteReport { name: "suiteA".into(), seed: 1, rungs: vec![rung("conns=2", 4, 0)] };
+        let j = suite.to_json(0.1, 1, None);
+        assert!(j.get("proc").is_none());
+        assert_eq!(j.at(&["suite", "name"]).as_str(), Some("suiteA"));
+    }
+}

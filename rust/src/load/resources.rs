@@ -1,0 +1,178 @@
+//! Server-process resource sampling from `/proc/<pid>` (Linux): RSS
+//! from `status` and cumulative CPU ticks from `stat`, polled on a
+//! background thread while a suite runs.
+//!
+//! This is observational only — a sample failure (non-Linux host, or
+//! the process exiting mid-poll) degrades to "no samples", never to a
+//! harness error, so the load report stays usable everywhere and just
+//! omits the `proc` block where `/proc` is absent.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Linux kernels report utime/stime in USER_HZ ticks; 100 on every
+/// mainstream build (the value is an ABI constant, not a boot option).
+const TICKS_PER_SEC: f64 = 100.0;
+
+/// One poll of the server process.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ProcSample {
+    pub rss_bytes: u64,
+    /// Cumulative utime+stime ticks since process start.
+    pub cpu_ticks: u64,
+}
+
+/// Read one [`ProcSample`] for `pid`; `None` when `/proc` is missing or
+/// the process is gone.
+pub fn sample(pid: u32) -> Option<ProcSample> {
+    let status = std::fs::read_to_string(format!("/proc/{pid}/status")).ok()?;
+    let rss_kb: u64 = status
+        .lines()
+        .find(|l| l.starts_with("VmRSS:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()?;
+    let stat = std::fs::read_to_string(format!("/proc/{pid}/stat")).ok()?;
+    // Fields after the comm's closing paren (comm may contain spaces):
+    // state ppid ... with utime at relative index 11, stime at 12.
+    let rest = &stat[stat.rfind(')')? + 1..];
+    let fields: Vec<&str> = rest.split_whitespace().collect();
+    let utime: u64 = fields.get(11)?.parse().ok()?;
+    let stime: u64 = fields.get(12)?.parse().ok()?;
+    Some(ProcSample { rss_bytes: rss_kb * 1024, cpu_ticks: utime + stime })
+}
+
+/// Aggregate over a monitoring window.
+#[derive(Clone, Debug, Default)]
+pub struct ProcSummary {
+    pub samples: usize,
+    pub rss_max_bytes: u64,
+    pub rss_mean_bytes: u64,
+    /// CPU seconds burned between the first and last sample.
+    pub cpu_secs: f64,
+}
+
+impl ProcSummary {
+    pub fn from_samples(samples: &[ProcSample]) -> ProcSummary {
+        if samples.is_empty() {
+            return ProcSummary::default();
+        }
+        let rss_max = samples.iter().map(|s| s.rss_bytes).max().unwrap_or(0);
+        let rss_mean = samples.iter().map(|s| s.rss_bytes).sum::<u64>() / samples.len() as u64;
+        let ticks = samples.last().unwrap().cpu_ticks.saturating_sub(samples[0].cpu_ticks);
+        ProcSummary {
+            samples: samples.len(),
+            rss_max_bytes: rss_max,
+            rss_mean_bytes: rss_mean,
+            cpu_secs: ticks as f64 / TICKS_PER_SEC,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("samples".into(), Json::Num(self.samples as f64));
+        m.insert("rss_max_bytes".into(), Json::Num(self.rss_max_bytes as f64));
+        m.insert("rss_mean_bytes".into(), Json::Num(self.rss_mean_bytes as f64));
+        m.insert("cpu_secs".into(), Json::Num(self.cpu_secs));
+        Json::Obj(m)
+    }
+}
+
+/// Background poller: samples `pid` every `every` until stopped.
+pub struct ProcMonitor {
+    stop: Arc<AtomicBool>,
+    samples: Arc<Mutex<Vec<ProcSample>>>,
+    handle: thread::JoinHandle<()>,
+}
+
+impl ProcMonitor {
+    pub fn start(pid: u32, every: Duration) -> ProcMonitor {
+        let stop = Arc::new(AtomicBool::new(false));
+        let samples = Arc::new(Mutex::new(Vec::new()));
+        let (stop2, samples2) = (stop.clone(), samples.clone());
+        let handle = thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                if let Some(s) = sample(pid) {
+                    samples2.lock().unwrap().push(s);
+                }
+                // short ticks so stop() returns promptly even for long
+                // polling intervals
+                let mut slept = Duration::ZERO;
+                while slept < every && !stop2.load(Ordering::Relaxed) {
+                    let tick = Duration::from_millis(25).min(every - slept);
+                    thread::sleep(tick);
+                    slept += tick;
+                }
+            }
+        });
+        ProcMonitor { stop, samples, handle }
+    }
+
+    /// Stop polling and summarize what was seen.
+    pub fn stop(self) -> ProcSummary {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = self.handle.join();
+        let samples = self.samples.lock().unwrap();
+        ProcSummary::from_samples(&samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn self_sample_reads_proc() {
+        // On Linux (/proc present) our own process must be sampleable
+        // with a real RSS; elsewhere, None is the contract.
+        match sample(std::process::id()) {
+            Some(s) => assert!(s.rss_bytes > 0, "{s:?}"),
+            None => assert!(!cfg!(target_os = "linux"), "sample must work on linux"),
+        }
+    }
+
+    #[test]
+    fn dead_pid_yields_none() {
+        // PID 0 never has a /proc entry visible to us.
+        assert!(sample(0).is_none());
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let s = ProcSummary::from_samples(&[
+            ProcSample { rss_bytes: 1000, cpu_ticks: 100 },
+            ProcSample { rss_bytes: 3000, cpu_ticks: 150 },
+            ProcSample { rss_bytes: 2000, cpu_ticks: 400 },
+        ]);
+        assert_eq!(s.samples, 3);
+        assert_eq!(s.rss_max_bytes, 3000);
+        assert_eq!(s.rss_mean_bytes, 2000);
+        assert!((s.cpu_secs - 3.0).abs() < 1e-9);
+        let j = s.to_json();
+        assert_eq!(j.at(&["rss_max_bytes"]).as_f64(), Some(3000.0));
+    }
+
+    #[test]
+    fn empty_summary_is_zeroed() {
+        let s = ProcSummary::from_samples(&[]);
+        assert_eq!(s.samples, 0);
+        assert_eq!(s.to_json().at(&["cpu_secs"]).as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn monitor_collects_and_stops() {
+        let mon = ProcMonitor::start(std::process::id(), Duration::from_millis(10));
+        thread::sleep(Duration::from_millis(80));
+        let summary = mon.stop();
+        if cfg!(target_os = "linux") {
+            assert!(summary.samples >= 2, "{summary:?}");
+            assert!(summary.rss_max_bytes > 0);
+        }
+    }
+}

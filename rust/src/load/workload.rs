@@ -1,0 +1,239 @@
+//! Workload model for the load harness: a catalog of job kinds and a
+//! seeded, weighted sampler over them.
+//!
+//! A [`JobKind`] fixes everything the server's batch key cares about
+//! (bench, shape, boundary, steps) plus the priority class; a [`JobMix`]
+//! assigns sampling weights — uniform for the deterministic Suite A
+//! baselines, zipfian for the stochastic Suite B mixes, where a heavy
+//! head kind exercises session batching and a long tail of cold kinds
+//! exercises session churn.  All sampling runs on a caller-provided
+//! [`SplitMix64`], so a seed pins the entire job sequence.
+
+use crate::serve::{JobSpec, Priority};
+use crate::stencil::Boundary;
+use crate::util::prng::SplitMix64;
+
+/// One job template: the (bench, shape, boundary, steps) cell a sampled
+/// job lands in, plus its admission priority.
+#[derive(Clone, Debug)]
+pub struct JobKind {
+    pub bench: &'static str,
+    pub shape: Vec<usize>,
+    pub boundary: Boundary,
+    pub steps: usize,
+    pub priority: Priority,
+}
+
+impl JobKind {
+    /// Short label for reports: `heat2d[32x24]/periodic`.
+    pub fn label(&self) -> String {
+        let dims: Vec<String> = self.shape.iter().map(|n| n.to_string()).collect();
+        format!("{}[{}]/{}", self.bench, dims.join("x"), self.boundary)
+    }
+}
+
+/// A weighted set of job kinds with a seeded sampler.
+#[derive(Clone, Debug)]
+pub struct JobMix {
+    kinds: Vec<JobKind>,
+    /// Normalized cumulative weights, `cum[last] == 1.0`.
+    cum: Vec<f64>,
+}
+
+/// The standard catalog: six kinds across four benches, all three
+/// boundary conditions and all three priority classes, with shapes small
+/// enough that a single job is milliseconds — the harness measures the
+/// serving layer, not the kernels.
+pub fn standard_catalog() -> Vec<JobKind> {
+    vec![
+        JobKind {
+            bench: "heat2d",
+            shape: vec![32, 24],
+            boundary: Boundary::Dirichlet(0.0),
+            steps: 8,
+            priority: Priority::Normal,
+        },
+        JobKind {
+            bench: "heat2d",
+            shape: vec![32, 24],
+            boundary: Boundary::Periodic,
+            steps: 8,
+            priority: Priority::Normal,
+        },
+        JobKind {
+            bench: "heat2d",
+            shape: vec![24, 16],
+            boundary: Boundary::Dirichlet(25.0),
+            steps: 4,
+            priority: Priority::Interactive,
+        },
+        JobKind {
+            bench: "heat1d",
+            shape: vec![4096],
+            boundary: Boundary::Periodic,
+            steps: 16,
+            priority: Priority::Batch,
+        },
+        JobKind {
+            bench: "heat3d",
+            shape: vec![12, 12, 12],
+            boundary: Boundary::Neumann,
+            steps: 4,
+            priority: Priority::Normal,
+        },
+        JobKind {
+            bench: "box2d9p",
+            shape: vec![24, 24],
+            boundary: Boundary::Dirichlet(0.0),
+            steps: 8,
+            priority: Priority::Batch,
+        },
+    ]
+}
+
+/// Zipf weights over `n` ranks: `w_i ∝ 1/(i+1)^s`.  `s = 0` is uniform;
+/// larger `s` concentrates load on the head kinds.
+pub fn zipf_weights(n: usize, s: f64) -> Vec<f64> {
+    (0..n).map(|i| 1.0 / ((i + 1) as f64).powf(s)).collect()
+}
+
+impl JobMix {
+    pub fn new(kinds: Vec<JobKind>, weights: &[f64]) -> JobMix {
+        assert!(!kinds.is_empty() && kinds.len() == weights.len());
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weights must not all be zero");
+        let mut cum = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for w in weights {
+            acc += w / total;
+            cum.push(acc);
+        }
+        *cum.last_mut().unwrap() = 1.0;
+        JobMix { kinds, cum }
+    }
+
+    /// Uniform weights over the standard catalog (Suite A).
+    pub fn standard_uniform() -> JobMix {
+        let kinds = standard_catalog();
+        let n = kinds.len();
+        JobMix::new(kinds, &vec![1.0; n])
+    }
+
+    /// Zipfian weights over the standard catalog (Suite B).
+    pub fn standard_zipf(s: f64) -> JobMix {
+        let kinds = standard_catalog();
+        let w = zipf_weights(kinds.len(), s);
+        JobMix::new(kinds, &w)
+    }
+
+    pub fn len(&self) -> usize {
+        self.kinds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kinds.is_empty()
+    }
+
+    pub fn kind(&self, idx: usize) -> &JobKind {
+        &self.kinds[idx]
+    }
+
+    /// Draw one kind index (the weighted inverse-CDF draw).
+    pub fn sample(&self, rng: &mut SplitMix64) -> usize {
+        let u = rng.next_f64();
+        self.cum.iter().position(|&c| u < c).unwrap_or(self.kinds.len() - 1)
+    }
+
+    /// Instantiate kind `idx` as a wire job.
+    pub fn spec(&self, idx: usize, id: String, seed: u64) -> JobSpec {
+        let k = &self.kinds[idx];
+        JobSpec {
+            id,
+            bench: k.bench.into(),
+            boundary: k.boundary,
+            steps: k.steps,
+            priority: k.priority,
+            shape: Some(k.shape.clone()),
+            seed,
+            field: None,
+            return_field: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_kinds_are_valid_benches() {
+        for k in standard_catalog() {
+            let s = crate::stencil::spec::get(k.bench).expect(k.bench);
+            assert_eq!(s.ndim, k.shape.len(), "{}", k.label());
+            assert!(k.steps >= 1);
+        }
+    }
+
+    #[test]
+    fn zipf_weights_decay_and_uniform_at_zero() {
+        let w = zipf_weights(5, 1.1);
+        for pair in w.windows(2) {
+            assert!(pair[0] > pair[1], "{w:?}");
+        }
+        let u = zipf_weights(4, 0.0);
+        assert!(u.iter().all(|&x| x == 1.0));
+    }
+
+    /// Same seed ⇒ identical job sequence (ids, kinds, everything) —
+    /// the determinism contract Suite A is built on.
+    #[test]
+    fn same_seed_same_job_sequence() {
+        let mix = JobMix::standard_zipf(1.1);
+        let draw = |seed: u64| -> Vec<usize> {
+            let mut rng = SplitMix64::new(seed);
+            (0..200).map(|_| mix.sample(&mut rng)).collect()
+        };
+        assert_eq!(draw(42), draw(42));
+        assert_ne!(draw(42), draw(43), "different seeds must diverge");
+        // the specs built from a fixed sequence are byte-identical
+        let idx = draw(7);
+        let lines = |seq: &[usize]| -> Vec<String> {
+            seq.iter()
+                .enumerate()
+                .map(|(i, &k)| mix.spec(k, format!("j{i}"), 100 + i as u64).to_json().to_string())
+                .collect()
+        };
+        assert_eq!(lines(&idx), lines(&draw(7)));
+    }
+
+    /// With s > 0 the head kind must dominate: empirical frequency of
+    /// rank 0 exceeds rank last by a wide margin over 20k draws.
+    #[test]
+    fn zipf_sampler_tracks_the_weights() {
+        let mix = JobMix::standard_zipf(1.2);
+        let mut rng = SplitMix64::new(0x10AD);
+        let mut counts = vec![0usize; mix.len()];
+        let n = 20_000;
+        for _ in 0..n {
+            counts[mix.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[mix.len() - 1] * 3, "{counts:?}");
+        // empirical head frequency within 3 points of the analytic weight
+        let w = zipf_weights(mix.len(), 1.2);
+        let total: f64 = w.iter().sum();
+        let expect = w[0] / total;
+        let got = counts[0] as f64 / n as f64;
+        assert!((got - expect).abs() < 0.03, "head freq {got} vs {expect}");
+    }
+
+    #[test]
+    fn spec_carries_the_kind_through() {
+        let mix = JobMix::standard_uniform();
+        let spec = mix.spec(3, "x".into(), 9);
+        assert_eq!(spec.bench, "heat1d");
+        assert_eq!(spec.shape.as_deref(), Some(&[4096usize][..]));
+        assert_eq!(spec.priority, Priority::Batch);
+        assert_eq!(spec.seed, 9);
+        assert!(!spec.return_field);
+    }
+}

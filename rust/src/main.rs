@@ -18,10 +18,15 @@
 //!   submit   [--addr A] --bench B [--boundary C[,C...]] [--steps N]
 //!            [--jobs K] [--priority P] [--shape NxM] [--seed S]
 //!            [--json FILE] | --stats | --shutdown
+//!   load     [suiteA|suiteB|both] [--addr A | --bin PATH] [--seed S]
+//!            [--conns N --jobs K] [--rate R --duration SECS --zipf S]
+//!            [--sweep --sweep-factor F --max-rungs N --stop-reject-frac F]
+//!            [--json-a FILE] [--json-b FILE]   stochastic load harness
 //!   thermal  [--size N] [--steps N] [--viz DIR] [--insulated]
 //!   accuracy [--blocks K]
 //!   bench    breakdown|sota|scaling|comm|mxu|boundary|serve|plan|overlap
 //!            [--scale F] [--threads T] [--json FILE]   single-line JSON for CI
+//!   bench    check FILE...        assert structural invariants over BENCH_*.json
 
 #![allow(clippy::uninlined_format_args)]
 
@@ -95,6 +100,7 @@ fn main() -> Result<()> {
         "tune" => cmd_tune(&args),
         "serve" => cmd_serve(&args),
         "submit" => cmd_submit(&args),
+        "load" => cmd_load(&args),
         "thermal" => cmd_thermal(&args),
         "accuracy" => cmd_accuracy(&args),
         "bench" => cmd_bench(&args),
@@ -137,11 +143,21 @@ fn print_help() {
                                        --boundary C[,C...] --steps N --jobs K\n\
                                        --priority P --shape NxM --seed S --json FILE]\n\
                                        or --stats / --shutdown\n\
+         load   [suiteA|suiteB|both]   stochastic load harness: spawn the release\n\
+                                       server (or --addr A an existing one) and drive\n\
+                                       it over TCP.  Suite A: deterministic closed\n\
+                                       loop [--conns N --jobs K].  Suite B: seeded\n\
+                                       Poisson open loop [--rate R --duration SECS\n\
+                                       --zipf S], --sweep walks rates to saturation\n\
+                                       [--sweep-factor F --max-rungs N\n\
+                                       --stop-reject-frac F].  Reports land in\n\
+                                       --json-a/--json-b (BENCH_serve_suite*.json)\n\
          thermal [--size N --steps N --viz DIR --threads T]   Table-3 case study\n\
                 [--insulated]          Neumann zero-flux plate (conserves total heat)\n\
          accuracy [--blocks K]         Table-4 FP64-vs-FP32 study\n\
          bench  breakdown|sota|scaling|comm|mxu|boundary|serve|plan|overlap\n\
                                        [--scale F --threads T --json FILE]\n\
+         bench  check FILE...          fail on broken BENCH_*.json invariants\n\
          \n\
          boundaries (C): dirichlet[:V] (fixed-value ghosts), neumann (zero-flux),\n\
                          periodic (torus wrap); --adapt K retunes the partition\n\
@@ -550,10 +566,11 @@ fn cmd_submit(args: &Args) -> Result<()> {
         }
     };
     println!(
-        "{ok}/{jobs} jobs ok in {:?}: {jps:.2} jobs/sec, p50 {:.2}ms, p99 {:.2}ms",
+        "{ok}/{jobs} jobs ok in {:?}: {jps:.2} jobs/sec, p50 {:.2}ms, p99 {:.2}ms, p99.9 {:.2}ms",
         wall,
         pct(0.50),
-        pct(0.99)
+        pct(0.99),
+        pct(0.999)
     );
     if let Some(path) = args.flags.get("json") {
         use std::collections::BTreeMap;
@@ -566,8 +583,111 @@ fn cmd_submit(args: &Args) -> Result<()> {
         m.insert("jobs_per_sec".to_string(), Json::Num(jps));
         m.insert("p50_ms".to_string(), Json::Num(pct(0.50)));
         m.insert("p99_ms".to_string(), Json::Num(pct(0.99)));
+        m.insert("p999_ms".to_string(), Json::Num(pct(0.999)));
         std::fs::write(path, format!("{}\n", Json::Obj(m)))?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `tetris load`: spawn (or target) a release server and run the
+/// deterministic Suite A and/or stochastic Suite B load studies against
+/// it, archiving `BENCH_serve_suite*.json` reports.
+fn cmd_load(args: &Args) -> Result<()> {
+    use std::time::Duration;
+    use tetris::load::{self, LoadConfig, ProcMonitor};
+    let which = args.positional.first().map(String::as_str).unwrap_or("both");
+    let (run_a, run_b) = match which {
+        "suiteA" | "suitea" | "a" => (true, false),
+        "suiteB" | "suiteb" | "b" => (false, true),
+        "both" => (true, true),
+        other => bail!("unknown load suite {other:?} (expected suiteA, suiteB or both)"),
+    };
+    let cfg = LoadConfig {
+        addr: args.flags.get("addr").cloned(),
+        bin: args.flags.get("bin").cloned(),
+        scale: args.get("scale", 0.05f64),
+        threads: args.get("threads", 1usize).max(1),
+        dispatchers: args.get("workers", 2usize).max(1),
+        queue_jobs: args.get("queue", 64usize).max(1),
+        seed: args.get("seed", 0x10ADu64),
+        conns: args.get("conns", 4usize).max(1),
+        jobs_per_conn: args.get("jobs", 16usize).max(1),
+        rate: args.get("rate", 50.0f64),
+        duration: Duration::from_secs_f64(args.get("duration", 5.0f64).max(0.1)),
+        zipf_s: args.get("zipf", 1.1f64),
+        sweep: args.flags.contains_key("sweep"),
+        sweep_factor: args.get("sweep-factor", 2.0f64),
+        max_rungs: args.get("max-rungs", 6usize).max(1),
+        stop_reject_frac: args.get("stop-reject-frac", 0.5f64),
+    };
+    // Target: an already-running server via --addr (no /proc sampling —
+    // we may not own the pid), else spawn the release binary ourselves.
+    let (addr, mut spawned) = match &cfg.addr {
+        Some(a) => (a.clone(), None),
+        None => {
+            let s = load::spawn_server(&cfg)?;
+            println!("tetris load: spawned server pid {} on {}", s.pid(), s.addr);
+            (s.addr.clone(), Some(s))
+        }
+    };
+    let monitor =
+        spawned.as_ref().map(|s| ProcMonitor::start(s.pid(), Duration::from_millis(250)));
+    let mut reports = Vec::new();
+    if run_a {
+        println!(
+            "tetris load: suite A (closed loop, {} conns x {} jobs, seed {})",
+            cfg.conns, cfg.jobs_per_conn, cfg.seed
+        );
+        reports.push(("json-a", "BENCH_serve_suiteA.json", load::run_suite_a(&addr, &cfg)?));
+    }
+    if run_b {
+        println!(
+            "tetris load: suite B (open loop, rate {}/s x {:.1}s, zipf {}{}, seed {})",
+            cfg.rate,
+            cfg.duration.as_secs_f64(),
+            cfg.zipf_s,
+            if cfg.sweep { ", sweeping" } else { "" },
+            cfg.seed
+        );
+        reports.push(("json-b", "BENCH_serve_suiteB.json", load::run_suite_b(&addr, &cfg)?));
+    }
+    // Stop sampling before reporting so both suites share the run's
+    // whole-window /proc summary.
+    let proc = monitor.map(ProcMonitor::stop);
+    for (flag, default_path, suite) in &reports {
+        for rung in &suite.rungs {
+            println!(
+                "  {} {}: {:.1} jobs/sec goodput (offered {:.1}/s), {} ok / {} rejected / {} lost, \
+                 total p50 {:.2}ms p99 {:.2}ms p99.9 {:.2}ms",
+                suite.name,
+                rung.label,
+                rung.goodput_per_sec(),
+                rung.offered_per_sec(),
+                rung.rec.completed,
+                rung.rec.rejected,
+                rung.rec.lost,
+                rung.rec.total.percentile_ms(0.50),
+                rung.rec.total.percentile_ms(0.99),
+                rung.rec.total.percentile_ms(0.999),
+            );
+        }
+        let path = args.str(flag, default_path);
+        let j = suite.to_json(cfg.scale, cfg.threads, proc.as_ref());
+        std::fs::write(&path, format!("{j}\n"))?;
+        println!("wrote {path}");
+    }
+    if let Some(p) = &proc {
+        println!(
+            "  server /proc: rss max {:.1} MiB, cpu {:.2}s over {} samples",
+            p.rss_max_bytes as f64 / (1 << 20) as f64,
+            p.cpu_secs,
+            p.samples
+        );
+    }
+    if let Some(s) = spawned.as_mut() {
+        s.shutdown()?;
+        println!("tetris load: server drained and stopped");
     }
     Ok(())
 }
@@ -659,6 +779,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .first()
         .map(String::as_str)
         .unwrap_or("breakdown");
+    if which == "check" {
+        // invariant gate over already-emitted artifacts; no timing runs
+        return tetris::bench::check::check_files(&args.positional[1..]);
+    }
     let scale = args.get("scale", 0.25f64);
     // scaling sweeps up to at least 4 threads; record what actually ran.
     let threads = match which {

@@ -1,9 +1,15 @@
 //! Minimal blocking client for the serving line protocol — used by
-//! `tetris submit`, the examples and the end-to-end tests.
+//! `tetris submit`, `tetris load`, the examples and the end-to-end
+//! tests.
 //!
 //! Requests may be pipelined: [`Client::send_spec`] any number of jobs,
 //! then [`Client::recv_result`] the same number of replies; the server
 //! guarantees reply order matches request order per connection.
+//!
+//! For open-loop load generation the two directions must run on
+//! different threads (the sender paces arrivals while the receiver
+//! drains replies), so [`Client::split`] hands out an independent
+//! [`SendHalf`] and [`RecvHalf`] over the same connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
@@ -13,25 +19,30 @@ use crate::util::json::Json;
 
 use super::job::{JobResult, JobSpec};
 
-pub struct Client {
-    reader: BufReader<TcpStream>,
+/// Write side of a serve connection (safe to move to a sender thread).
+pub struct SendHalf {
     writer: TcpStream,
 }
 
-impl Client {
-    pub fn connect<A: ToSocketAddrs + std::fmt::Debug>(addr: A) -> Result<Client> {
-        let stream =
-            TcpStream::connect(&addr).with_context(|| format!("connecting {addr:?}"))?;
-        let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { reader, writer: stream })
-    }
+/// Read side of a serve connection (safe to move to a receiver thread).
+pub struct RecvHalf {
+    reader: BufReader<TcpStream>,
+}
 
+impl SendHalf {
     pub fn send_line(&mut self, line: &str) -> Result<()> {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         Ok(())
     }
 
+    /// Queue one job (pipelined; pair with [`RecvHalf::recv_result`]).
+    pub fn send_spec(&mut self, spec: &JobSpec) -> Result<()> {
+        self.send_line(&spec.to_json().to_string())
+    }
+}
+
+impl RecvHalf {
     pub fn recv_line(&mut self) -> Result<String> {
         let mut line = String::new();
         let n = self.reader.read_line(&mut line)?;
@@ -39,14 +50,49 @@ impl Client {
         Ok(line)
     }
 
-    /// Queue one job (pipelined; pair with [`Client::recv_result`]).
-    pub fn send_spec(&mut self, spec: &JobSpec) -> Result<()> {
-        self.send_line(&spec.to_json().to_string())
-    }
-
     pub fn recv_result(&mut self) -> Result<JobResult> {
         let line = self.recv_line()?;
         JobResult::parse_line(&line)
+    }
+}
+
+pub struct Client {
+    send: SendHalf,
+    recv: RecvHalf,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs + std::fmt::Debug>(addr: A) -> Result<Client> {
+        let stream =
+            TcpStream::connect(&addr).with_context(|| format!("connecting {addr:?}"))?;
+        // One small JSON line per job: Nagle would serialize the whole
+        // open-loop pipeline behind delayed ACKs, so turn it off.
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { send: SendHalf { writer: stream }, recv: RecvHalf { reader } })
+    }
+
+    /// Split into independently-owned halves so sending and receiving
+    /// can proceed concurrently on one pipelined connection.
+    pub fn split(self) -> (SendHalf, RecvHalf) {
+        (self.send, self.recv)
+    }
+
+    pub fn send_line(&mut self, line: &str) -> Result<()> {
+        self.send.send_line(line)
+    }
+
+    pub fn recv_line(&mut self) -> Result<String> {
+        self.recv.recv_line()
+    }
+
+    /// Queue one job (pipelined; pair with [`Client::recv_result`]).
+    pub fn send_spec(&mut self, spec: &JobSpec) -> Result<()> {
+        self.send.send_spec(spec)
+    }
+
+    pub fn recv_result(&mut self) -> Result<JobResult> {
+        self.recv.recv_result()
     }
 
     /// Submit one job and wait for its reply.

@@ -31,9 +31,9 @@ pub mod session;
 pub mod stats;
 
 pub use batcher::{ExecConfig, Executor, SessionMeta, WorkerFactory};
-pub use client::Client;
+pub use client::{Client, RecvHalf, SendHalf};
 pub use job::{JobResult, JobSpec, Priority};
 pub use queue::{Admission, AdmissionQueue, QueuedJob};
 pub use server::{default_worker_factory, ServeConfig, Server, ServerHandle};
 pub use session::Session;
-pub use stats::ServeStats;
+pub use stats::{LatencyHistogram, ServeStats};

@@ -4,6 +4,12 @@
 //! `[2^i, 2^{i+1})` µs), so percentiles are exact to a factor of two
 //! over nine decades with a fixed 40-slot table — no allocation, no
 //! sorting, O(1) record on the completion path.
+//!
+//! The histogram itself is the standalone [`LatencyHistogram`] so the
+//! load harness ([`crate::load`]) records client-side queue/service/total
+//! latencies through the *same* bucketing and percentile code the server
+//! reports from — a suite report and a `STATS` line can never disagree
+//! about what "p99.9" means.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -12,37 +18,50 @@ use crate::util::json::Json;
 
 const BUCKETS: usize = 40;
 
-/// Counters + end-to-end (admission -> reply) latency histogram.
-#[derive(Debug, Default)]
-pub struct ServeStats {
-    pub submitted: u64,
-    pub completed: u64,
-    pub rejected: u64,
-    /// Malformed / invalid request lines answered with structured errors.
-    pub errors: u64,
-    /// Multi-field dispatches executed (a batch of 1 still counts).
-    pub batches: u64,
-    /// Jobs that rode a batch of width >= 2.
-    pub batched_jobs: u64,
-    /// Sessions dropped by the TTL/LRU sweep.
-    pub evictions: u64,
-    /// Leader-phase milliseconds hidden under compute by the §5.3
-    /// pipelined scheduler loop, summed over every dispatched batch.
-    pub overlap_hidden_ms: f64,
+/// Log₂-bucketed latency histogram: O(1) record, allocation-free,
+/// percentiles exact to a factor of √2 (geometric-midpoint estimate).
+///
+/// Shared by the server's [`ServeStats`] and the load harness recorder;
+/// `merge` folds per-connection histograms into one report.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
     buckets: [u64; BUCKETS],
     count: u64,
 }
 
-impl ServeStats {
-    pub fn new() -> ServeStats {
-        ServeStats::default()
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: [0; BUCKETS], count: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
     }
 
-    pub fn record_latency(&mut self, d: Duration) {
+    pub fn record(&mut self, d: Duration) {
         let us = (d.as_micros() as u64).max(1);
         let b = (us.ilog2() as usize).min(BUCKETS - 1);
         self.buckets[b] += 1;
         self.count += 1;
+    }
+
+    /// Record a latency expressed in milliseconds (as wire reports are).
+    pub fn record_ms(&mut self, ms: f64) {
+        self.record(Duration::from_secs_f64((ms.max(0.0)) / 1e3));
+    }
+
+    /// Fold another histogram into this one (bucket-wise sum).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
     }
 
     /// Geometric midpoint (ms) of the bucket holding the p-quantile
@@ -70,8 +89,56 @@ impl ServeStats {
         midpoint_ms(BUCKETS - 1)
     }
 
+    /// The standard percentile block (`count`, p50/p90/p99/p99.9 ms) —
+    /// one shape everywhere, so `bench check` can assert monotonicity on
+    /// any report that embeds a histogram.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".into(), Json::Num(self.count as f64));
+        m.insert("p50_ms".into(), Json::Num(self.percentile_ms(0.50)));
+        m.insert("p90_ms".into(), Json::Num(self.percentile_ms(0.90)));
+        m.insert("p99_ms".into(), Json::Num(self.percentile_ms(0.99)));
+        m.insert("p999_ms".into(), Json::Num(self.percentile_ms(0.999)));
+        Json::Obj(m)
+    }
+}
+
+/// Counters + end-to-end (admission -> reply) latency histogram.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    /// Malformed / invalid request lines answered with structured errors.
+    pub errors: u64,
+    /// Multi-field dispatches executed (a batch of 1 still counts).
+    pub batches: u64,
+    /// Jobs that rode a batch of width >= 2.
+    pub batched_jobs: u64,
+    /// Sessions dropped by the TTL/LRU sweep.
+    pub evictions: u64,
+    /// Leader-phase milliseconds hidden under compute by the §5.3
+    /// pipelined scheduler loop, summed over every dispatched batch.
+    pub overlap_hidden_ms: f64,
+    hist: LatencyHistogram,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats::default()
+    }
+
+    pub fn record_latency(&mut self, d: Duration) {
+        self.hist.record(d);
+    }
+
+    /// See [`LatencyHistogram::percentile_ms`].
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        self.hist.percentile_ms(p)
+    }
+
     pub fn latency_count(&self) -> u64 {
-        self.count
+        self.hist.count()
     }
 
     pub fn to_json(&self) -> Json {
@@ -84,12 +151,7 @@ impl ServeStats {
         m.insert("batched_jobs".into(), Json::Num(self.batched_jobs as f64));
         m.insert("evictions".into(), Json::Num(self.evictions as f64));
         m.insert("overlap_hidden_ms".into(), Json::Num(self.overlap_hidden_ms));
-        let mut lat = BTreeMap::new();
-        lat.insert("count".into(), Json::Num(self.count as f64));
-        lat.insert("p50_ms".into(), Json::Num(self.percentile_ms(0.50)));
-        lat.insert("p90_ms".into(), Json::Num(self.percentile_ms(0.90)));
-        lat.insert("p99_ms".into(), Json::Num(self.percentile_ms(0.99)));
-        m.insert("latency".into(), Json::Obj(lat));
+        m.insert("latency".into(), self.hist.to_json());
         Json::Obj(m)
     }
 }
@@ -145,6 +207,67 @@ mod tests {
         assert!(s.percentile_ms(0.995) > 50.0);
     }
 
+    /// p99.9 bracketing: 2000 samples with the 3 slowest at 80 ms put
+    /// the p99.9 target (rank 1998) inside the slow bucket while p99
+    /// (rank 1980) stays in the fast body — the new tail percentile
+    /// separates what p99 averages away.
+    #[test]
+    fn p999_separates_a_3_in_2000_tail_that_p99_misses() {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..1997 {
+            h.record(Duration::from_micros(200));
+        }
+        for _ in 0..3 {
+            h.record(Duration::from_millis(80));
+        }
+        assert!(h.percentile_ms(0.99) < 1.0, "p99 stays in the body");
+        let p999 = h.percentile_ms(0.999);
+        assert!(p999 > 50.0, "p99.9 must land in the 80 ms tail bucket: {p999}");
+        assert!(h.percentile_ms(0.999) >= h.percentile_ms(0.99), "monotone");
+    }
+
+    #[test]
+    fn percentiles_are_monotone_p50_through_p999() {
+        let mut h = LatencyHistogram::new();
+        // spread over four decades
+        for us in [100u64, 1_000, 10_000, 100_000] {
+            for _ in 0..250 {
+                h.record(Duration::from_micros(us));
+            }
+        }
+        let ps = [0.50, 0.90, 0.99, 0.999];
+        let vals: Vec<f64> = ps.iter().map(|&p| h.percentile_ms(p)).collect();
+        for w in vals.windows(2) {
+            assert!(w[0] <= w[1], "{vals:?}");
+        }
+    }
+
+    #[test]
+    fn merge_is_bucketwise_sum() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for _ in 0..10 {
+            a.record(Duration::from_micros(100));
+            b.record(Duration::from_millis(50));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 20);
+        assert!(a.percentile_ms(0.25) < 1.0, "fast half survives the merge");
+        assert!(a.percentile_ms(0.99) > 30.0, "slow half survives the merge");
+    }
+
+    #[test]
+    fn record_ms_matches_record_duration() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(Duration::from_micros(1_500));
+        b.record_ms(1.5);
+        assert_eq!(a.percentile_ms(0.5), b.percentile_ms(0.5));
+        // negative/zero clamps into the first bucket instead of panicking
+        b.record_ms(-3.0);
+        assert_eq!(b.count(), 2);
+    }
+
     #[test]
     fn extreme_latencies_clamp_into_range() {
         let mut s = ServeStats::new();
@@ -164,6 +287,17 @@ mod tests {
         assert_eq!(j.at(&["submitted"]).as_usize(), Some(5));
         assert_eq!(j.at(&["latency", "count"]).as_usize(), Some(1));
         assert!(j.at(&["latency", "p99_ms"]).as_f64().unwrap() > 0.0);
+        assert!(j.at(&["latency", "p999_ms"]).as_f64().unwrap() > 0.0);
         assert_eq!(j.at(&["overlap_hidden_ms"]).as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn histogram_json_carries_the_full_percentile_ladder() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_millis(2));
+        let j = h.to_json();
+        for key in ["count", "p50_ms", "p90_ms", "p99_ms", "p999_ms"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
     }
 }

@@ -1,0 +1,169 @@
+//! End-to-end tests of the `tetris load` harness against an in-process
+//! `tetris serve` (real TCP, no child process): the deterministic
+//! Suite A baseline loses nothing and rejects nothing, the open-loop
+//! Suite B conserves every offered job even when driven past
+//! saturation, and every emitted report passes the `bench check`
+//! structural invariants.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tetris::bench::check::check_json;
+use tetris::coordinator::{NativeWorker, Worker};
+use tetris::load::{run_suite_a, run_suite_b, LoadConfig};
+use tetris::serve::{Client, ServeConfig, Server, ServerHandle, WorkerFactory};
+
+/// Two plain `simd` workers (same idiom as serve_e2e): deterministic,
+/// cheap, and bit-invariant under any partition.
+fn simd_factory() -> WorkerFactory {
+    Arc::new(|_bench, _shape, _tb, _plan| {
+        let mk = || -> Box<dyn Worker> {
+            Box::new(NativeWorker::new(tetris::engine::by_name("simd", 1).unwrap(), 1 << 33))
+        };
+        Ok(vec![mk(), mk()])
+    })
+}
+
+fn start_server(queue_jobs: usize, dispatchers: usize) -> ServerHandle {
+    Server::start(
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            dispatchers,
+            queue_jobs,
+            scale: 0.05,
+            plan_store: None,
+            ..Default::default()
+        },
+        simd_factory(),
+    )
+    .expect("server start")
+}
+
+fn shutdown(handle: ServerHandle) {
+    let mut c = Client::connect(handle.addr).unwrap();
+    c.shutdown().unwrap();
+    handle.join();
+}
+
+/// Suite A acceptance: a tiny closed-loop run loses zero results,
+/// rejects nothing, and its report satisfies every checker invariant.
+#[test]
+fn suite_a_loses_nothing_and_passes_check() {
+    let handle = start_server(64, 2);
+    let cfg = LoadConfig {
+        conns: 3,
+        jobs_per_conn: 4,
+        seed: 0xA11CE,
+        scale: 0.05,
+        ..Default::default()
+    };
+    let suite = run_suite_a(&handle.addr.to_string(), &cfg).expect("suite A");
+    assert_eq!(suite.name, "suiteA");
+    assert_eq!(suite.rungs.len(), 1);
+    let rung = &suite.rungs[0];
+    assert_eq!(rung.rec.offered, 12);
+    assert_eq!(rung.rec.completed, 12, "{:?}", rung.rec);
+    assert_eq!(rung.rec.rejected, 0);
+    assert_eq!(rung.rec.errors, 0);
+    assert_eq!(rung.rec.lost, 0);
+    assert!(rung.rec.conserved());
+    assert_eq!(rung.rec.total.count(), 12);
+    assert!(rung.rec.total.percentile_ms(0.999) >= rung.rec.total.percentile_ms(0.50));
+
+    let report = suite.to_json(cfg.scale, cfg.threads, None);
+    let text = report.to_string();
+    assert!(!text.contains('\n'), "single-line artifact");
+    let violations = check_json("suiteA", &report);
+    assert!(violations.is_empty(), "{violations:?}");
+    shutdown(handle);
+}
+
+/// Suite B under a comfortable rate: open loop, everything conserved,
+/// report check-clean.
+#[test]
+fn suite_b_conserves_jobs_at_moderate_rate() {
+    let handle = start_server(64, 2);
+    let cfg = LoadConfig {
+        rate: 40.0,
+        duration: Duration::from_millis(700),
+        zipf_s: 1.1,
+        seed: 7,
+        sweep: false,
+        ..Default::default()
+    };
+    let suite = run_suite_b(&handle.addr.to_string(), &cfg).expect("suite B");
+    assert_eq!(suite.name, "suiteB");
+    assert_eq!(suite.rungs.len(), 1);
+    let rung = &suite.rungs[0];
+    assert!(rung.rec.offered > 0, "schedule must produce arrivals");
+    assert_eq!(rung.rec.lost, 0, "{:?}", rung.rec);
+    assert!(rung.rec.conserved());
+    assert_eq!(rung.rec.total.count(), rung.rec.completed);
+
+    let report = suite.to_json(cfg.scale, cfg.threads, None);
+    let violations = check_json("suiteB", &report);
+    assert!(violations.is_empty(), "{violations:?}");
+    shutdown(handle);
+}
+
+/// Suite B past saturation: a tiny admission queue under a hot rate
+/// must produce rejects with retry hints — and still account for every
+/// single offered job (no losses, conservation exact).
+#[test]
+fn suite_b_past_saturation_rejects_but_conserves() {
+    let handle = start_server(2, 1);
+    let cfg = LoadConfig {
+        rate: 800.0,
+        duration: Duration::from_millis(500),
+        zipf_s: 1.1,
+        seed: 99,
+        sweep: false,
+        ..Default::default()
+    };
+    let suite = run_suite_b(&handle.addr.to_string(), &cfg).expect("suite B hot");
+    let rung = &suite.rungs[0];
+    assert!(rung.rec.offered > 50, "{:?}", rung.rec);
+    assert!(rung.rec.rejected > 0, "queue of 2 at 800/s must reject: {:?}", rung.rec);
+    assert_eq!(rung.rec.lost, 0, "{:?}", rung.rec);
+    assert!(rung.rec.conserved());
+    assert_eq!(rung.rec.retry_hints_ms.len() as u64, rung.rec.rejected);
+    // the server's hints are bounded (queue.rs caps at 5000ms)
+    assert!(rung.rec.retry_hints_ms.iter().all(|&h| h <= 5_000));
+
+    let report = suite.to_json(cfg.scale, cfg.threads, None);
+    let violations = check_json("suiteB-hot", &report);
+    assert!(violations.is_empty(), "{violations:?}");
+    shutdown(handle);
+}
+
+/// The rate sweep walks rungs upward and stops on sustained rejects
+/// (or the rung cap) — against a tiny queue it must reach saturation
+/// within the cap and stay check-clean throughout.
+#[test]
+fn rate_sweep_reaches_saturation_on_a_tiny_queue() {
+    let handle = start_server(2, 1);
+    let cfg = LoadConfig {
+        rate: 100.0,
+        duration: Duration::from_millis(400),
+        seed: 5,
+        sweep: true,
+        sweep_factor: 3.0,
+        max_rungs: 4,
+        stop_reject_frac: 0.2,
+        ..Default::default()
+    };
+    let suite = run_suite_b(&handle.addr.to_string(), &cfg).expect("sweep");
+    assert!(!suite.rungs.is_empty() && suite.rungs.len() <= 4);
+    for rung in &suite.rungs {
+        assert!(rung.rec.conserved(), "{:?}", rung.rec);
+        assert_eq!(rung.rec.lost, 0);
+    }
+    // offered rates must actually climb rung over rung
+    for pair in suite.rungs.windows(2) {
+        assert!(pair[1].offered_rate > pair[0].offered_rate);
+    }
+    let report = suite.to_json(cfg.scale, cfg.threads, None);
+    let violations = check_json("sweep", &report);
+    assert!(violations.is_empty(), "{violations:?}");
+    shutdown(handle);
+}

@@ -1,0 +1,52 @@
+#!/usr/bin/env bash
+# Load-harness driver for CI: build the release binary, then run a short
+# deterministic Suite A and a 30s stochastic Suite B rung through
+# `tetris load`, which spawns the release `tetris serve` as a *separate
+# OS process* and drives it over TCP (nothing in-process — this measures
+# the real socket path).  Emits single-line JSON reports
+# BENCH_serve_suiteA.json / BENCH_serve_suiteB.json with queue/service/
+# total latency percentiles up to p99.9, reject counts + retry_after_ms
+# hint stats, goodput vs offered load, and /proc RSS+CPU samples of the
+# server process — then gates both with `tetris bench check`.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+SCALE="${TETRIS_LOAD_SCALE:-0.05}"
+THREADS="${TETRIS_LOAD_THREADS:-1}"
+SEED="${TETRIS_LOAD_SEED:-4242}"
+CONNS="${TETRIS_LOAD_CONNS:-4}"
+JOBS="${TETRIS_LOAD_JOBS:-25}"
+RATE="${TETRIS_LOAD_RATE:-40}"
+DURATION="${TETRIS_LOAD_DURATION:-30}"
+ZIPF="${TETRIS_LOAD_ZIPF:-1.1}"
+A_OUT="${TETRIS_LOAD_A_OUT:-BENCH_serve_suiteA.json}"
+B_OUT="${TETRIS_LOAD_B_OUT:-BENCH_serve_suiteB.json}"
+BIN=rust/target/release/tetris
+
+# Always (re)build: incremental with a warm target dir, and it protects
+# against driving a stale cache-restored binary.
+cargo build --release --manifest-path rust/Cargo.toml
+
+# Suite A: deterministic closed-loop baseline (seeded job order, fixed
+# concurrency well under the admission queue — zero rejects expected,
+# and bench-check enforces that).
+"$BIN" load suiteA --scale "$SCALE" --threads "$THREADS" --seed "$SEED" \
+  --conns "$CONNS" --jobs "$JOBS" --json-a "$A_OUT"
+
+# Suite B: one 30s open-loop rung — seeded Poisson arrivals over the
+# zipfian job mix.  (Pass --sweep via TETRIS_LOAD_EXTRA to walk rates
+# to saturation locally; CI keeps the single calibrated rung.)
+# shellcheck disable=SC2086
+"$BIN" load suiteB --scale "$SCALE" --threads "$THREADS" --seed "$SEED" \
+  --rate "$RATE" --duration "$DURATION" --zipf "$ZIPF" \
+  --json-b "$B_OUT" ${TETRIS_LOAD_EXTRA:-}
+
+# Fail fast on structurally broken reports (the CI job re-runs this
+# gate as its own step, but local runs should see it too).
+"$BIN" bench check "$A_OUT" "$B_OUT"
+
+for f in "$A_OUT" "$B_OUT"; do
+  echo "--- $f ---"
+  cat "$f"
+done
