@@ -1,0 +1,518 @@
+//! The static region-aliasing race checker.
+//!
+//! Input: a task DAG (`deps[i]` lists predecessors of task `i`, which
+//! must be earlier ids — the same topological-id invariant
+//! [`TaskGraph::add`](crate::coordinator::pool::TaskGraph::add)
+//! enforces) where every task declares its reads and writes as
+//! `(buffer, row-interval set)` summaries.  The checker computes
+//! ancestor sets by bitset transitive closure in id order and reports:
+//!
+//! * **races** — pairs of tasks that both touch the same rows of the
+//!   same buffer, at least one writing, with *no* path between them in
+//!   the DAG.  One reported race is one missing dependency.
+//! * **over-synchronization** — direct edges whose removal would leave
+//!   every conflicting pair in the graph still ordered.  Such an edge
+//!   buys no safety, only lost overlap; it is a metric, not an error,
+//!   because a redundant edge can still be the honest way to express a
+//!   dependency scheme.
+//!
+//! Declarations may over-approximate (declare more rows than a task
+//! touches) but must never under-approximate; the debug-build dynamic
+//! mode in [`super::dynamic`] enforces that direction against the real
+//! `Field` copies.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::interval::IntervalSet;
+
+/// A shared storage location tasks may alias on.  `Global` carries the
+/// double-buffer parity explicitly: the two parities of one field are
+/// distinct buffers, which is exactly why the pipelined loop's
+/// same-block readers and writers do not conflict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BufferId {
+    /// Padded global of `field` at double-buffer `parity` (rows are
+    /// padded dim-0 coordinates).
+    Global { field: usize, parity: usize },
+    /// Per-(block, field, worker) assembled slab input slot.
+    SlabIn(usize),
+    /// Per-(block, field, worker) computed slab output slot.
+    SlabOut(usize),
+    /// The tetris-wave engine's shared read-only input block.
+    WaveInput,
+    /// Pyramid result cell of tile `k` (tetris-wave).
+    Pyramid(usize),
+    /// Inverted-gap result cell at boundary `k+1` (tetris-wave).
+    Gap(usize),
+}
+
+impl fmt::Display for BufferId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BufferId::Global { field, parity } => write!(f, "global[f{field} parity{parity}]"),
+            BufferId::SlabIn(i) => write!(f, "slab_in[{i}]"),
+            BufferId::SlabOut(i) => write!(f, "slab_out[{i}]"),
+            BufferId::WaveInput => write!(f, "wave_input"),
+            BufferId::Pyramid(k) => write!(f, "pyramid[{k}]"),
+            BufferId::Gap(k) => write!(f, "gap[{k}]"),
+        }
+    }
+}
+
+/// One declared access: a set of dim-0 rows of one buffer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Region {
+    pub buffer: BufferId,
+    pub rows: IntervalSet,
+}
+
+impl Region {
+    pub fn new(buffer: BufferId, rows: IntervalSet) -> Region {
+        Region { buffer, rows }
+    }
+}
+
+/// A task's declared read/write summary plus a human label for reports.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TaskAccess {
+    pub label: String,
+    pub reads: Vec<Region>,
+    pub writes: Vec<Region>,
+}
+
+impl TaskAccess {
+    pub fn new(label: impl Into<String>) -> TaskAccess {
+        TaskAccess { label: label.into(), reads: Vec::new(), writes: Vec::new() }
+    }
+
+    pub fn read(mut self, buffer: BufferId, rows: IntervalSet) -> TaskAccess {
+        self.reads.push(Region::new(buffer, rows));
+        self
+    }
+
+    pub fn write(mut self, buffer: BufferId, rows: IntervalSet) -> TaskAccess {
+        self.writes.push(Region::new(buffer, rows));
+        self
+    }
+}
+
+/// W/W or R/W — which sides of a conflicting pair wrote.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConflictKind {
+    WriteWrite,
+    ReadWrite,
+}
+
+impl fmt::Display for ConflictKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConflictKind::WriteWrite => write!(f, "W/W"),
+            ConflictKind::ReadWrite => write!(f, "R/W"),
+        }
+    }
+}
+
+/// A conflicting, unordered task pair — a race.  `a < b` by task id.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Conflict {
+    pub a: usize,
+    pub b: usize,
+    pub a_label: String,
+    pub b_label: String,
+    pub kind: ConflictKind,
+    pub buffer: BufferId,
+    /// An example overlapping row range (first overlap found).
+    pub rows: (usize, usize),
+}
+
+impl fmt::Display for Conflict {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "race: {} conflict on {} rows [{}, {}) between #{} {} and #{} {} (no ordering path)",
+            self.kind, self.buffer, self.rows.0, self.rows.1, self.a, self.a_label, self.b,
+            self.b_label
+        )
+    }
+}
+
+/// A direct edge that orders no conflict anywhere: removing it keeps
+/// every conflicting pair ordered.  Pure lost overlap.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Oversync {
+    pub from: usize,
+    pub to: usize,
+    pub from_label: String,
+    pub to_label: String,
+}
+
+impl fmt::Display for Oversync {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "over-sync: edge #{} {} -> #{} {} orders no conflict (removable)",
+            self.from, self.from_label, self.to, self.to_label
+        )
+    }
+}
+
+/// Checker verdict over one DAG.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub tasks: usize,
+    pub edges: usize,
+    /// Conflicting pairs that ARE ordered by some path (the good case).
+    pub ordered_conflicts: usize,
+    pub races: Vec<Conflict>,
+    /// Over-synchronizing edges (metric; empty when `edges` is 0 or the
+    /// caller asked for races only).
+    pub oversync: Vec<Oversync>,
+    /// Edges already implied by another path (metric).
+    pub redundant_edges: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.races.is_empty()
+    }
+
+    /// One-line summary for sweep output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} tasks, {} edges, {} ordered conflicts, {} races, {} over-sync edges, {} redundant edges",
+            self.tasks,
+            self.edges,
+            self.ordered_conflicts,
+            self.races.len(),
+            self.oversync.len(),
+            self.redundant_edges
+        )
+    }
+}
+
+/// Dense ancestor bitsets, one row of `words` u64 words per task.
+struct Closure {
+    words: usize,
+    bits: Vec<u64>,
+}
+
+impl Closure {
+    /// Ancestors-and-self closure.  Requires topological ids
+    /// (`deps[i]` ⊂ `0..i`); `skip` optionally removes one direct edge
+    /// `(from, to)` for the over-sync what-if.
+    fn build(deps: &[Vec<usize>], skip: Option<(usize, usize)>) -> Closure {
+        let n = deps.len();
+        let words = n.div_ceil(64);
+        let mut bits = vec![0u64; n * words];
+        for (i, ds) in deps.iter().enumerate() {
+            let (head, row) = bits.split_at_mut(i * words);
+            let row = &mut row[..words];
+            row[i / 64] |= 1 << (i % 64);
+            for &d in ds {
+                assert!(d < i, "checker requires topological task ids ({d} -> {i})");
+                if skip == Some((d, i)) {
+                    continue;
+                }
+                let drow = &head[d * words..(d + 1) * words];
+                for (w, &dw) in row.iter_mut().zip(drow) {
+                    *w |= dw;
+                }
+            }
+        }
+        Closure { words, bits }
+    }
+
+    /// Is `a` an ancestor of `b` (or equal)?
+    fn reaches(&self, a: usize, b: usize) -> bool {
+        self.bits[b * self.words + a / 64] >> (a % 64) & 1 == 1
+    }
+
+    fn ordered(&self, a: usize, b: usize) -> bool {
+        self.reaches(a, b) || self.reaches(b, a)
+    }
+}
+
+/// All conflicting pairs `(a, b, kind, buffer, rows)` with `a < b`,
+/// grouped by buffer.  A pair conflicting on several buffers is
+/// reported once per buffer.
+fn conflicting_pairs(
+    accesses: &[TaskAccess],
+) -> Vec<(usize, usize, ConflictKind, BufferId, (usize, usize))> {
+    // Flatten to per-buffer touch lists: (task, rows, wrote).
+    let mut by_buffer: BTreeMap<BufferId, Vec<(usize, &IntervalSet, bool)>> = BTreeMap::new();
+    for (t, acc) in accesses.iter().enumerate() {
+        for r in &acc.reads {
+            by_buffer.entry(r.buffer).or_default().push((t, &r.rows, false));
+        }
+        for r in &acc.writes {
+            by_buffer.entry(r.buffer).or_default().push((t, &r.rows, true));
+        }
+    }
+    let mut out = Vec::new();
+    for (buf, touches) in &by_buffer {
+        for (i, &(ta, rows_a, wa)) in touches.iter().enumerate() {
+            for &(tb, rows_b, wb) in &touches[i + 1..] {
+                if ta == tb || (!wa && !wb) {
+                    continue;
+                }
+                if let Some(overlap) = rows_a.first_overlap(rows_b) {
+                    let (lo, hi) = (ta.min(tb), ta.max(tb));
+                    let kind = if wa && wb {
+                        ConflictKind::WriteWrite
+                    } else {
+                        ConflictKind::ReadWrite
+                    };
+                    out.push((lo, hi, kind, *buf, overlap));
+                }
+            }
+        }
+    }
+    // A task reading AND writing the same rows of one buffer pairs up
+    // with a peer twice (R/W and W/W); keep the W/W (stronger) and drop
+    // duplicate pair/buffer entries.
+    out.sort_by_key(|&(a, b, k, buf, _)| (a, b, buf, k == ConflictKind::ReadWrite));
+    out.dedup_by_key(|&mut (a, b, _, buf, _)| (a, b, buf));
+    out
+}
+
+/// Race check only — the cheap subset wired into `run_batch` DAG
+/// construction behind `debug_assert!`.
+pub fn races(deps: &[Vec<usize>], accesses: &[TaskAccess]) -> Vec<Conflict> {
+    assert_eq!(deps.len(), accesses.len(), "deps/accesses length mismatch");
+    let closure = Closure::build(deps, None);
+    conflicting_pairs(accesses)
+        .into_iter()
+        .filter(|&(a, b, _, _, _)| !closure.ordered(a, b))
+        .map(|(a, b, kind, buffer, rows)| Conflict {
+            a,
+            b,
+            a_label: accesses[a].label.clone(),
+            b_label: accesses[b].label.clone(),
+            kind,
+            buffer,
+            rows,
+        })
+        .collect()
+}
+
+/// Full check: races plus the over-synchronization / redundancy edge
+/// metrics (each edge gets a what-if closure with that edge removed).
+pub fn check(deps: &[Vec<usize>], accesses: &[TaskAccess]) -> Report {
+    assert_eq!(deps.len(), accesses.len(), "deps/accesses length mismatch");
+    let closure = Closure::build(deps, None);
+    let pairs = conflicting_pairs(accesses);
+
+    let mut report = Report {
+        tasks: deps.len(),
+        edges: deps.iter().map(|d| d.len()).sum(),
+        ..Report::default()
+    };
+    for &(a, b, kind, buffer, rows) in &pairs {
+        if closure.ordered(a, b) {
+            report.ordered_conflicts += 1;
+        } else {
+            report.races.push(Conflict {
+                a,
+                b,
+                a_label: accesses[a].label.clone(),
+                b_label: accesses[b].label.clone(),
+                kind,
+                buffer,
+                rows,
+            });
+        }
+    }
+
+    // Edge metrics: an edge is redundant when the DAG minus that edge
+    // still orders its endpoints; it over-synchronizes when the DAG
+    // minus that edge still orders every conflicting pair.  Note an
+    // edge with no *direct* endpoint conflict can still be essential:
+    // the symmetrized anti-dependency edges of the pipelined loop order
+    // WAR pairs two hops apart, and correctly escape this metric.
+    for (to, ds) in deps.iter().enumerate() {
+        for &from in ds {
+            let without = Closure::build(deps, Some((from, to)));
+            if without.ordered(from, to) {
+                report.redundant_edges += 1;
+            }
+            if pairs.iter().all(|&(a, b, _, _, _)| without.ordered(a, b)) {
+                report.oversync.push(Oversync {
+                    from,
+                    to,
+                    from_label: accesses[from].label.clone(),
+                    to_label: accesses[to].label.clone(),
+                });
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn acc(label: &str) -> TaskAccess {
+        TaskAccess::new(label)
+    }
+
+    const G0: BufferId = BufferId::Global { field: 0, parity: 0 };
+    const G1: BufferId = BufferId::Global { field: 0, parity: 1 };
+
+    #[test]
+    fn ordered_conflicts_are_not_races() {
+        // writer -> reader chain on the same rows: clean.
+        let deps = vec![vec![], vec![0]];
+        let accesses = vec![
+            acc("write").write(G0, IntervalSet::single(0, 8)),
+            acc("read").read(G0, IntervalSet::single(2, 6)),
+        ];
+        let r = check(&deps, &accesses);
+        assert!(r.is_clean(), "{:?}", r.races);
+        assert_eq!(r.ordered_conflicts, 1);
+        assert_eq!(r.redundant_edges, 0);
+        assert!(r.oversync.is_empty(), "edge orders the conflict");
+    }
+
+    #[test]
+    fn unordered_overlap_is_a_race() {
+        let deps = vec![vec![], vec![]];
+        let accesses = vec![
+            acc("writer").write(G0, IntervalSet::single(0, 8)),
+            acc("reader").read(G0, IntervalSet::single(4, 12)),
+        ];
+        let got = races(&deps, &accesses);
+        assert_eq!(got.len(), 1);
+        assert_eq!((got[0].a, got[0].b), (0, 1));
+        assert_eq!(got[0].kind, ConflictKind::ReadWrite);
+        assert_eq!(got[0].buffer, G0);
+        assert_eq!(got[0].rows, (4, 8));
+        assert!(format!("{}", got[0]).contains("writer"));
+    }
+
+    #[test]
+    fn disjoint_rows_or_buffers_never_conflict() {
+        let deps = vec![vec![], vec![], vec![]];
+        let accesses = vec![
+            acc("a").write(G0, IntervalSet::single(0, 4)),
+            acc("b").write(G0, IntervalSet::single(4, 8)), // abutting, disjoint
+            acc("c").write(G1, IntervalSet::single(0, 8)), // other parity
+        ];
+        assert!(races(&deps, &accesses).is_empty());
+        // two pure readers never conflict either
+        let accesses = vec![
+            acc("a").read(G0, IntervalSet::single(0, 8)),
+            acc("b").read(G0, IntervalSet::single(0, 8)),
+            acc("c"),
+        ];
+        assert!(races(&deps, &accesses).is_empty());
+    }
+
+    #[test]
+    fn transitive_ordering_counts() {
+        // 0 -> 1 -> 2; 0 and 2 conflict but are ordered through 1.
+        let deps = vec![vec![], vec![0], vec![1]];
+        let accesses = vec![
+            acc("w").write(G0, IntervalSet::single(0, 8)),
+            acc("mid"),
+            acc("r").read(G0, IntervalSet::single(0, 8)),
+        ];
+        let r = check(&deps, &accesses);
+        assert!(r.is_clean());
+        assert_eq!(r.ordered_conflicts, 1);
+        // neither edge is individually removable: each breaks the only
+        // ordering path for the (0, 2) conflict.
+        assert!(r.oversync.is_empty());
+    }
+
+    #[test]
+    fn ww_reported_over_rw_for_same_pair() {
+        // task 1 both reads and writes what task 0 writes → one W/W.
+        let deps = vec![vec![], vec![]];
+        let accesses = vec![
+            acc("a").write(G0, IntervalSet::single(0, 4)),
+            acc("b").read(G0, IntervalSet::single(0, 4)).write(G0, IntervalSet::single(0, 4)),
+        ];
+        let got = races(&deps, &accesses);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].kind, ConflictKind::WriteWrite);
+    }
+
+    #[test]
+    fn oversync_and_redundancy_metrics() {
+        // 0 -> 1 -> 2 carries the only conflict (0 vs 2 through 1);
+        // 0 -> 3 orders nothing (task 3 touches nothing) and
+        // 0 -> 2 is redundant (implied by 0 -> 1 -> 2).
+        let deps = vec![vec![], vec![0], vec![1, 0], vec![0]];
+        let accesses = vec![
+            acc("w").write(G0, IntervalSet::single(0, 8)),
+            acc("mid"),
+            acc("r").read(G0, IntervalSet::single(0, 8)),
+            acc("idle"),
+        ];
+        let r = check(&deps, &accesses);
+        assert!(r.is_clean());
+        assert_eq!(r.redundant_edges, 1, "0->2 is implied");
+        let removable: Vec<(usize, usize)> =
+            r.oversync.iter().map(|o| (o.from, o.to)).collect();
+        assert!(removable.contains(&(0, 3)), "{removable:?}");
+        assert!(removable.contains(&(0, 2)), "redundant edges are removable");
+        assert!(!removable.contains(&(0, 1)), "load-bearing edge");
+        assert!(!removable.contains(&(1, 2)), "load-bearing edge");
+    }
+
+    #[test]
+    fn anti_dependency_style_edge_is_not_oversync() {
+        // The pipelined loop's symmetrization shape in miniature:
+        //   0 = read(G0 rows R)      (assemble, block b)
+        //   1 = noop                 (paste, block b — other parity)
+        //   2 = noop                 (assemble, block b+1)
+        //   3 = write(G0 rows R)     (paste, block b+1)
+        // Edges 0->1->2->3.  Edge 1->2 has no direct conflict but is
+        // the only path ordering the (0, 3) WAR pair.
+        let deps = vec![vec![], vec![0], vec![1], vec![2]];
+        let accesses = vec![
+            acc("assemble_b").read(G0, IntervalSet::single(2, 6)),
+            acc("paste_b"),
+            acc("assemble_b1"),
+            acc("paste_b1").write(G0, IntervalSet::single(0, 8)),
+        ];
+        let r = check(&deps, &accesses);
+        assert!(r.is_clean());
+        assert_eq!(r.ordered_conflicts, 1);
+        assert!(
+            !r.oversync.iter().any(|o| (o.from, o.to) == (1, 2)),
+            "anti-dependency carrier must not be flagged: {:?}",
+            r.oversync
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "topological")]
+    fn forward_deps_rejected() {
+        let deps = vec![vec![1], vec![]];
+        let accesses = vec![acc("a"), acc("b")];
+        let _ = races(&deps, &accesses);
+    }
+
+    #[test]
+    fn closure_spans_word_boundaries() {
+        // A 130-task chain exercises multi-word bitsets: ends conflict,
+        // ordered only through the whole chain.
+        let n = 130;
+        let mut deps = vec![Vec::new()];
+        for i in 1..n {
+            deps.push(vec![i - 1]);
+        }
+        let mut accesses: Vec<TaskAccess> = (0..n).map(|i| acc(&format!("t{i}"))).collect();
+        accesses[0] = acc("t0").write(G0, IntervalSet::single(0, 4));
+        accesses[n - 1] = acc("last").read(G0, IntervalSet::single(0, 4));
+        assert!(races(&deps, &accesses).is_empty());
+        // cut one middle link and the ends race
+        deps[64] = vec![];
+        let got = races(&deps, &accesses);
+        assert_eq!(got.len(), 1);
+        assert_eq!((got[0].a, got[0].b), (0, n - 1));
+    }
+}

@@ -1,0 +1,251 @@
+//! Debug-build dynamic cross-validation of the declared summaries.
+//!
+//! The static checker is only as honest as the declarations it is fed,
+//! so debug builds log the *actual* `Field` region traffic per task and
+//! assert the observed rows are a subset of the declared ones —
+//! summaries may over-approximate but can never silently drift below
+//! what the closures really touch.
+//!
+//! Mechanics: the leader tags its traced buffers (the double-buffered
+//! padded globals) with a non-zero trace id via [`Field::set_trace`];
+//! each pool task enters a [`TaskScope`] carrying the window's shared
+//! [`Collector`] plus its task id through thread-local state; the
+//! region primitives (`copy_region_from`, `copy_region_within`,
+//! `fill_region`, `paste`, `extract`) report their dim-0 row ranges on
+//! traced fields to whatever scope is active.  Scopes are per-run
+//! (`Arc`, not process-global), so concurrent pipelined runs in one
+//! test binary cannot crosstalk.  In release builds every entry point
+//! compiles to a no-op and `Field` carries no trace id at all.
+
+use std::sync::Arc;
+
+use super::checker::{BufferId, TaskAccess};
+
+#[cfg(debug_assertions)]
+use super::interval::IntervalSet;
+#[cfg(debug_assertions)]
+use std::cell::RefCell;
+#[cfg(debug_assertions)]
+use std::collections::BTreeMap;
+#[cfg(debug_assertions)]
+use std::sync::Mutex;
+
+/// Trace id for the padded global of `field` at double-buffer `parity`
+/// (0 stays "untraced").
+pub fn global_trace(field: usize, parity: usize) -> u64 {
+    1 + (field * 2 + parity) as u64
+}
+
+/// Inverse of [`global_trace`].
+#[cfg_attr(not(debug_assertions), allow(dead_code))]
+fn decode_trace(trace: u64) -> Option<BufferId> {
+    if trace == 0 {
+        return None;
+    }
+    let t = (trace - 1) as usize;
+    Some(BufferId::Global { field: t / 2, parity: t % 2 })
+}
+
+#[cfg(debug_assertions)]
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    task: usize,
+    trace: u64,
+    write: bool,
+    rows: (usize, usize),
+}
+
+/// Per-run sink for observed accesses.  Fieldless (and `validate`
+/// trivially `Ok`) in release builds.
+#[derive(Default)]
+pub struct Collector {
+    #[cfg(debug_assertions)]
+    events: Mutex<Vec<Event>>,
+}
+
+#[cfg(debug_assertions)]
+thread_local! {
+    static CURRENT: RefCell<Option<(Arc<Collector>, usize)>> = const { RefCell::new(None) };
+}
+
+impl Collector {
+    /// A fresh shared sink (tasks clone the `Arc` into their scopes).
+    pub fn shared() -> Arc<Collector> {
+        Arc::new(Collector::default())
+    }
+
+    /// Check observed ⊆ declared for every task/buffer/direction pair.
+    /// `accesses[t]` is task `t`'s declared summary; only buffers with
+    /// a trace mapping (the globals) are validated.
+    pub fn validate(&self, accesses: &[TaskAccess]) -> Result<(), String> {
+        #[cfg(debug_assertions)]
+        {
+            // Fold events into per-(task, buffer) observed row sets.
+            let mut observed: BTreeMap<(usize, BufferId, bool), IntervalSet> = BTreeMap::new();
+            for ev in self.events.lock().unwrap().iter() {
+                let Some(buf) = decode_trace(ev.trace) else { continue };
+                observed
+                    .entry((ev.task, buf, ev.write))
+                    .or_default()
+                    .insert(ev.rows.0, ev.rows.1);
+            }
+            for ((task, buf, write), rows) in &observed {
+                if *task >= accesses.len() {
+                    return Err(format!("observed access from unknown task #{task} on {buf}"));
+                }
+                let acc = &accesses[*task];
+                let declared = if *write { &acc.writes } else { &acc.reads };
+                let mut allowed = IntervalSet::empty();
+                for r in declared.iter().filter(|r| r.buffer == *buf) {
+                    for &(a, b) in r.rows.intervals() {
+                        allowed.insert(a, b);
+                    }
+                }
+                if !rows.subset_of(&allowed) {
+                    return Err(format!(
+                        "task #{task} {} observed {} rows {:?} of {buf} outside its declared {:?}",
+                        acc.label,
+                        if *write { "writing" } else { "reading" },
+                        rows.intervals(),
+                        allowed.intervals()
+                    ));
+                }
+            }
+        }
+        let _ = accesses;
+        Ok(())
+    }
+}
+
+/// RAII guard binding the current thread to `(collector, task)` for the
+/// duration of one task closure.
+pub struct TaskScope {
+    #[cfg(debug_assertions)]
+    prev: Option<(Arc<Collector>, usize)>,
+}
+
+impl TaskScope {
+    pub fn enter(collector: &Arc<Collector>, task: usize) -> TaskScope {
+        #[cfg(debug_assertions)]
+        {
+            let prev = CURRENT
+                .with(|c| c.borrow_mut().replace((Arc::clone(collector), task)));
+            TaskScope { prev }
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            let _ = (collector, task);
+            TaskScope {}
+        }
+    }
+}
+
+impl Drop for TaskScope {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        CURRENT.with(|c| *c.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Report one observed access on a traced field (called by the `Field`
+/// region primitives).  No-op unless a scope is active, the field is
+/// traced, and the row range is non-empty.
+#[cfg(debug_assertions)]
+pub(crate) fn record(trace: u64, write: bool, lo: usize, hi: usize) {
+    if trace == 0 || lo >= hi {
+        return;
+    }
+    CURRENT.with(|c| {
+        if let Some((collector, task)) = &*c.borrow() {
+            collector
+                .events
+                .lock()
+                .unwrap()
+                .push(Event { task: *task, trace, write, rows: (lo, hi) });
+        }
+    });
+}
+
+#[cfg(all(test, debug_assertions))]
+mod tests {
+    use super::*;
+    use crate::stencil::Field;
+
+    #[test]
+    fn trace_codec_roundtrips() {
+        assert_eq!(decode_trace(0), None);
+        for f in 0..3 {
+            for p in 0..2 {
+                assert_eq!(
+                    decode_trace(global_trace(f, p)),
+                    Some(BufferId::Global { field: f, parity: p })
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn observed_subset_passes_superset_fails() {
+        let buf = BufferId::Global { field: 0, parity: 0 };
+        let collector = Collector::shared();
+        {
+            let _scope = TaskScope::enter(&collector, 0);
+            record(global_trace(0, 0), false, 2, 5);
+            record(global_trace(0, 0), true, 8, 9);
+        }
+        let declared = vec![TaskAccess::new("t0")
+            .read(buf, IntervalSet::single(0, 6))
+            .write(buf, IntervalSet::single(8, 10))];
+        assert!(collector.validate(&declared).is_ok());
+        // under-declared read: observed [2,5) vs declared [0,3)
+        let narrow =
+            vec![TaskAccess::new("t0").read(buf, IntervalSet::single(0, 3)).write(
+                buf,
+                IntervalSet::single(8, 10),
+            )];
+        let err = collector.validate(&narrow).unwrap_err();
+        assert!(err.contains("reading"), "{err}");
+        assert!(err.contains("t0"), "{err}");
+    }
+
+    #[test]
+    fn recording_requires_scope_and_trace() {
+        let collector = Collector::shared();
+        // no scope: dropped on the floor
+        record(global_trace(0, 0), true, 0, 4);
+        {
+            let _scope = TaskScope::enter(&collector, 0);
+            record(0, true, 0, 4); // untraced field
+            record(global_trace(0, 0), true, 3, 3); // empty range
+        }
+        assert!(collector.events.lock().unwrap().is_empty());
+        // validation with nothing observed always passes
+        assert!(collector.validate(&[]).is_ok());
+    }
+
+    #[test]
+    fn field_primitives_report_while_scoped() {
+        let collector = Collector::shared();
+        let mut global = Field::zeros(&[10, 6]);
+        global.set_trace(global_trace(1, 0));
+        let src = Field::full(&[2, 4], 3.0);
+        {
+            let _scope = TaskScope::enter(&collector, 7);
+            global.paste(&[4, 1], &src); // write rows [4, 6)
+            let _slab = global.extract(&[2, 0], &[3, 6]); // read rows [2, 5)
+        }
+        // outside any scope: invisible
+        global.paste(&[0, 1], &src);
+        let buf = BufferId::Global { field: 1, parity: 0 };
+        let mut declared: Vec<TaskAccess> = (0..8).map(|i| TaskAccess::new(format!("t{i}"))).collect();
+        declared[7] = TaskAccess::new("t7")
+            .read(buf, IntervalSet::single(2, 5))
+            .write(buf, IntervalSet::single(4, 6));
+        assert!(collector.validate(&declared).is_ok(), "{:?}", collector.validate(&declared));
+        // tighten the write declaration and the paste is caught
+        declared[7] = TaskAccess::new("t7")
+            .read(buf, IntervalSet::single(2, 5))
+            .write(buf, IntervalSet::single(4, 5));
+        assert!(collector.validate(&declared).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! Normalized half-open row-interval sets — the row-granularity shape
+//! language of the access summaries.
+//!
+//! The partition splits dim 0 only, so every buffer access the checker
+//! reasons about is "these dim-0 rows of that buffer".  An
+//! [`IntervalSet`] keeps its intervals sorted, disjoint and
+//! non-adjacent, which makes overlap and subset queries a linear merge
+//! and keeps `Debug` output humane in race reports.
+
+/// A set of `usize` points stored as sorted, coalesced half-open
+/// `[start, end)` intervals.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct IntervalSet {
+    ivs: Vec<(usize, usize)>,
+}
+
+impl IntervalSet {
+    pub fn empty() -> IntervalSet {
+        IntervalSet::default()
+    }
+
+    /// The single interval `[start, end)`; empty when `start >= end`.
+    pub fn single(start: usize, end: usize) -> IntervalSet {
+        let mut s = IntervalSet::empty();
+        s.insert(start, end);
+        s
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ivs.is_empty()
+    }
+
+    /// Number of points covered.
+    pub fn len(&self) -> usize {
+        self.ivs.iter().map(|&(a, b)| b - a).sum()
+    }
+
+    pub fn intervals(&self) -> &[(usize, usize)] {
+        &self.ivs
+    }
+
+    /// Insert `[start, end)`, coalescing with abutting/overlapping
+    /// intervals so the representation stays canonical.
+    pub fn insert(&mut self, start: usize, end: usize) {
+        if start >= end {
+            return;
+        }
+        let (mut start, mut end) = (start, end);
+        // Keep intervals strictly before the new one; merge the rest.
+        let mut out = Vec::with_capacity(self.ivs.len() + 1);
+        let mut placed = false;
+        for &(a, b) in &self.ivs {
+            if b < start {
+                out.push((a, b));
+            } else if a > end {
+                if !placed {
+                    out.push((start, end));
+                    placed = true;
+                }
+                out.push((a, b));
+            } else {
+                start = start.min(a);
+                end = end.max(b);
+            }
+        }
+        if !placed {
+            out.push((start, end));
+        }
+        self.ivs = out;
+    }
+
+    /// Does any point belong to both sets?  Linear two-pointer merge.
+    pub fn intersects(&self, other: &IntervalSet) -> bool {
+        self.first_overlap(other).is_some()
+    }
+
+    /// The lowest overlapping interval, if any — used to name the
+    /// conflicting rows in a race report.
+    pub fn first_overlap(&self, other: &IntervalSet) -> Option<(usize, usize)> {
+        let (mut i, mut j) = (0, 0);
+        while i < self.ivs.len() && j < other.ivs.len() {
+            let (a0, a1) = self.ivs[i];
+            let (b0, b1) = other.ivs[j];
+            let lo = a0.max(b0);
+            let hi = a1.min(b1);
+            if lo < hi {
+                return Some((lo, hi));
+            }
+            if a1 <= b1 {
+                i += 1;
+            } else {
+                j += 1;
+            }
+        }
+        None
+    }
+
+    /// Is every point of `self` also in `other`?  (The dynamic-mode
+    /// validation direction: observed ⊆ declared.)
+    pub fn subset_of(&self, other: &IntervalSet) -> bool {
+        let mut j = 0;
+        'outer: for &(a, b) in &self.ivs {
+            while j < other.ivs.len() {
+                let (c, d) = other.ivs[j];
+                if a >= c && b <= d {
+                    continue 'outer;
+                }
+                if d <= a {
+                    j += 1;
+                } else {
+                    return false;
+                }
+            }
+            return false;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_coalesces_and_sorts() {
+        let mut s = IntervalSet::empty();
+        s.insert(5, 7);
+        s.insert(0, 2);
+        s.insert(9, 12);
+        assert_eq!(s.intervals(), &[(0, 2), (5, 7), (9, 12)]);
+        // abutting intervals merge
+        s.insert(2, 5);
+        assert_eq!(s.intervals(), &[(0, 7), (9, 12)]);
+        // spanning insert swallows everything
+        s.insert(1, 20);
+        assert_eq!(s.intervals(), &[(0, 20)]);
+        assert_eq!(s.len(), 20);
+    }
+
+    #[test]
+    fn empty_inserts_are_noops() {
+        let mut s = IntervalSet::single(3, 3);
+        assert!(s.is_empty());
+        s.insert(7, 7);
+        s.insert(9, 8);
+        assert!(s.is_empty());
+        assert!(!s.intersects(&IntervalSet::single(0, 100)));
+    }
+
+    #[test]
+    fn intersects_and_first_overlap() {
+        let mut a = IntervalSet::empty();
+        a.insert(0, 4);
+        a.insert(10, 14);
+        assert!(a.intersects(&IntervalSet::single(3, 5)));
+        assert!(!a.intersects(&IntervalSet::single(4, 10)));
+        assert_eq!(a.first_overlap(&IntervalSet::single(12, 20)), Some((12, 14)));
+        let mut b = IntervalSet::empty();
+        b.insert(2, 3);
+        b.insert(11, 12);
+        assert_eq!(a.first_overlap(&b), Some((2, 3)));
+    }
+
+    #[test]
+    fn subset_queries() {
+        let mut a = IntervalSet::empty();
+        a.insert(0, 4);
+        a.insert(10, 14);
+        assert!(IntervalSet::single(1, 3).subset_of(&a));
+        assert!(IntervalSet::single(10, 14).subset_of(&a));
+        assert!(!IntervalSet::single(3, 11).subset_of(&a));
+        assert!(IntervalSet::empty().subset_of(&a));
+        assert!(a.subset_of(&a));
+        let mut both = IntervalSet::empty();
+        both.insert(0, 2);
+        both.insert(12, 13);
+        assert!(both.subset_of(&a));
+        assert!(!a.subset_of(&both));
+    }
+}

@@ -1,0 +1,93 @@
+//! Static region-aliasing race analysis for the scheduled task DAGs
+//! (`tetris analyze`).
+//!
+//! The §5.3 pipelined leader loop is only race-free because its
+//! dependency edges exactly cover its buffer aliasing — a proof that
+//! used to live in reviewers' heads.  This module makes it a machine
+//! artifact: every task declares `(buffer, parity, row-interval)` read/
+//! write summaries ([`checker`]), the DAGs are modeled straight from
+//! the code that builds them ([`model`] — the pipelined leader now
+//! constructs its real `TaskGraph` *from* [`WindowPlan`], so the model
+//! cannot drift), and a bitset-transitive-closure checker reports
+//! unordered conflicts (races) plus over-synchronizing edges (lost
+//! overlap).  Debug builds additionally log real `Field` region traffic
+//! per task and assert observed ⊆ declared ([`dynamic`]).
+//!
+//! Everything here is pure, std-only and Miri-friendly; the CLI sweep
+//! (`tetris analyze --all`) covers boundary × workers × partition shape
+//! (zero shares included) × fields × window length × window parity.
+
+pub mod checker;
+pub mod dynamic;
+pub mod interval;
+pub mod model;
+
+pub use checker::{
+    check, races, BufferId, Conflict, ConflictKind, Oversync, Region, Report, TaskAccess,
+};
+pub use dynamic::{Collector, TaskScope};
+pub use interval::IntervalSet;
+pub use model::{wave_model, wave_model_auto, DagModel, TaskKind, TaskMeta, WindowPlan};
+
+use crate::coordinator::Partition;
+
+/// Partition layouts a sweep should try for `nw` workers over `rows`
+/// rows: the balanced split, a skewed split, and (when `nw > 1`)
+/// zero-share layouts with squeezed-out edge and interior workers —
+/// the shapes retunes actually produce.
+pub fn sweep_partitions(nw: usize, rows: usize) -> Vec<Partition> {
+    assert!(nw >= 1 && rows >= nw.max(2));
+    let mut shares_list: Vec<Vec<usize>> = Vec::new();
+    shares_list.push(vec![rows / nw; nw]);
+    // skew: worker i gets i+1 proportional units
+    let weights: usize = (1..=nw).sum();
+    let skew: Vec<usize> = (1..=nw).map(|i| i * rows / weights).collect();
+    shares_list.push(skew);
+    if nw > 1 {
+        let mut edge = vec![0usize; nw];
+        edge[nw - 1] = 0;
+        edge[0] = 0;
+        for s in edge.iter_mut().take(nw).skip(1) {
+            *s = rows / (nw - 1);
+        }
+        shares_list.push(edge);
+        let mut interior = vec![rows / nw.max(2); nw];
+        interior[nw / 2] = 0;
+        shares_list.push(interior);
+    }
+    // Fix up remainders so every layout covers exactly `rows`.
+    shares_list
+        .into_iter()
+        .map(|mut shares| {
+            let sum: usize = shares.iter().sum();
+            let grow = shares.iter().position(|&s| s > 0).unwrap_or(0);
+            shares[grow] += rows - sum.min(rows);
+            if sum > rows {
+                // over-allocated: shrink the largest share
+                let big = (0..shares.len()).max_by_key(|&i| shares[i]).unwrap();
+                shares[big] -= sum - rows;
+            }
+            Partition { unit: 1, shares }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_partitions_cover_rows_exactly() {
+        for nw in 1..=5 {
+            for rows in [8usize, 16, 24, 37] {
+                for p in sweep_partitions(nw, rows) {
+                    assert_eq!(p.shares.len(), nw);
+                    assert_eq!(p.shares.iter().sum::<usize>(), rows, "nw={nw} rows={rows}");
+                    assert_eq!(p.spans().last().unwrap().1, rows);
+                }
+            }
+        }
+        // zero-share layouts really appear for nw > 1
+        assert!(sweep_partitions(3, 12).iter().any(|p| p.shares.contains(&0)));
+    }
+}

@@ -1,0 +1,398 @@
+//! Access-summary models of the two task DAGs the repo schedules.
+//!
+//! [`WindowPlan`] is the load-bearing one: it enumerates every task of
+//! one pipelined-leader window (`coordinator/pipeline.rs`) — kind,
+//! (block, field, worker) coordinates, dependency ids, and declared
+//! read/write regions — and `run_batch_pipelined` builds its *real*
+//! `TaskGraph` by iterating this plan, so the analyzed DAG and the
+//! executed DAG are identical by construction rather than by parallel
+//! maintenance.  [`wave_model`] mirrors the tetris-wave engine's
+//! pyramid/gap DAG the same way.
+//!
+//! Conventions: `Global` row coordinates are padded dim-0 indices
+//! (`0..n_rows + 2*halo`), matching both `Boundary::source_index` and
+//! the writeback paste offsets.  Slot buffers (`SlabIn`/`SlabOut`,
+//! `Pyramid`/`Gap`) model the `Mutex<Option<_>>`/`OnceLock` cell itself
+//! as the single row `[0, 1)`: each put/take is a whole-cell access, so
+//! a chain's handoff conflicts stay visible even for zero-share slabs
+//! whose field content is empty.
+
+use crate::stencil::Boundary;
+
+use super::checker::{self, BufferId, Conflict, Report, TaskAccess};
+use super::interval::IntervalSet;
+
+/// A task DAG plus its declared access summaries — what the checker
+/// consumes and what negative tests mutate.
+#[derive(Clone, Debug, Default)]
+pub struct DagModel {
+    pub deps: Vec<Vec<usize>>,
+    pub accesses: Vec<TaskAccess>,
+}
+
+impl DagModel {
+    pub fn len(&self) -> usize {
+        self.deps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.deps.is_empty()
+    }
+
+    /// Full report: races + over-sync/redundancy edge metrics.
+    pub fn check(&self) -> Report {
+        checker::check(&self.deps, &self.accesses)
+    }
+
+    /// Races only (the cheap debug-assert path).
+    pub fn races(&self) -> Vec<Conflict> {
+        checker::races(&self.deps, &self.accesses)
+    }
+
+    /// Remove the direct edge `dep -> task` if present (negative-path
+    /// testing: a dropped dependency must surface as a reported race).
+    pub fn drop_dep(&mut self, task: usize, dep: usize) -> bool {
+        let ds = &mut self.deps[task];
+        match ds.iter().position(|&d| d == dep) {
+            Some(i) => {
+                ds.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+/// Pipeline task kinds, in per-chain id order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    Assemble,
+    Compute,
+    Writeback,
+}
+
+/// Where a plan task sits in the window.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskMeta {
+    pub kind: TaskKind,
+    /// Absolute block index (`b0 + k`) — parity source.
+    pub block: usize,
+    /// Block index within the window.
+    pub k: usize,
+    pub field: usize,
+    pub worker: usize,
+}
+
+/// The rows of `Global{field, parity}` one slab assembly reads: the
+/// boundary-mapped sources of every padded row in `[s, e + 2*halo)` —
+/// exactly the `copy_region_from` sources of `assemble_slab` (Dirichlet
+/// ghost rows map to no source; they are constant fills).
+pub(crate) fn assemble_reads(
+    span: (usize, usize),
+    halo: usize,
+    n_rows: usize,
+    boundary: Boundary,
+) -> IntervalSet {
+    let (s, e) = span;
+    let mut rows = IntervalSet::empty();
+    for pr in s..e + 2 * halo {
+        if let Some(src) = boundary.source_index(pr, halo, n_rows) {
+            rows.insert(src, src + 1);
+        }
+    }
+    rows
+}
+
+/// One pipelined-leader window as an analyzable plan.  Task ids are
+/// `3 * ((k * nf + f) * nw + w) + stage` with stage 0/1/2 = assemble/
+/// compute/writeback — the exact order `run_batch_pipelined` registers
+/// closures in.
+#[derive(Clone, Debug)]
+pub struct WindowPlan {
+    pub model: DagModel,
+    pub meta: Vec<TaskMeta>,
+    pub nf: usize,
+    pub nw: usize,
+    pub bw: usize,
+    pub b0: usize,
+}
+
+impl WindowPlan {
+    /// Mirror of the leader-loop task construction: per `(k, f, w)` an
+    /// assemble → compute → writeback chain; block `k > 0` assembles
+    /// wait on the symmetric-owner writebacks of block `k - 1`.
+    pub fn build(
+        spans: &[(usize, usize)],
+        halo: usize,
+        n_rows: usize,
+        boundary: Boundary,
+        nf: usize,
+        b0: usize,
+        bw: usize,
+    ) -> WindowPlan {
+        let nw = spans.len();
+        let owners = crate::coordinator::pipeline::symmetric_owners(spans, halo, n_rows, boundary);
+        let mut model = DagModel::default();
+        let mut meta = Vec::with_capacity(3 * bw * nf * nw);
+        let cell = || IntervalSet::single(0, 1);
+        let mut prev_paste: Vec<usize> = Vec::new();
+        for k in 0..bw {
+            let b = b0 + k;
+            let read_par = b % 2;
+            let write_par = (b + 1) % 2;
+            let mut this_paste = Vec::with_capacity(nf * nw);
+            for f in 0..nf {
+                for w in 0..nw {
+                    let idx = (k * nf + f) * nw + w;
+                    let (s, e) = spans[w];
+                    let a_deps: Vec<usize> = if k == 0 {
+                        Vec::new()
+                    } else {
+                        owners[w].iter().map(|&o| prev_paste[f * nw + o]).collect()
+                    };
+                    let a_id = model.deps.len();
+                    model.deps.push(a_deps);
+                    model.accesses.push(
+                        TaskAccess::new(format!("assemble[b{b} f{f} w{w}]"))
+                            .read(
+                                BufferId::Global { field: f, parity: read_par },
+                                assemble_reads((s, e), halo, n_rows, boundary),
+                            )
+                            .write(BufferId::SlabIn(idx), cell()),
+                    );
+                    meta.push(TaskMeta { kind: TaskKind::Assemble, block: b, k, field: f, worker: w });
+                    model.deps.push(vec![a_id]);
+                    model.accesses.push(
+                        TaskAccess::new(format!("compute[b{b} f{f} w{w}]"))
+                            .read(BufferId::SlabIn(idx), cell())
+                            .write(BufferId::SlabIn(idx), cell())
+                            .write(BufferId::SlabOut(idx), cell()),
+                    );
+                    meta.push(TaskMeta { kind: TaskKind::Compute, block: b, k, field: f, worker: w });
+                    let p_id = model.deps.len();
+                    model.deps.push(vec![a_id + 1]);
+                    model.accesses.push(
+                        TaskAccess::new(format!("writeback[b{b} f{f} w{w}]"))
+                            .read(BufferId::SlabOut(idx), cell())
+                            .write(BufferId::SlabOut(idx), cell())
+                            .write(
+                                BufferId::Global { field: f, parity: write_par },
+                                IntervalSet::single(s + halo, e + halo),
+                            ),
+                    );
+                    meta.push(TaskMeta {
+                        kind: TaskKind::Writeback,
+                        block: b,
+                        k,
+                        field: f,
+                        worker: w,
+                    });
+                    this_paste.push(p_id);
+                }
+            }
+            prev_paste = this_paste;
+        }
+        WindowPlan { model, meta, nf, nw, bw, b0 }
+    }
+
+    /// Task id of `(k, f, w, kind)` under the fixed registration order.
+    pub fn id(&self, k: usize, f: usize, w: usize, kind: TaskKind) -> usize {
+        let stage = match kind {
+            TaskKind::Assemble => 0,
+            TaskKind::Compute => 1,
+            TaskKind::Writeback => 2,
+        };
+        3 * ((k * self.nf + f) * self.nw + w) + stage
+    }
+}
+
+/// The tetris-wave engine's DAG: pyramid task `A_k` reads the shared
+/// input rows `[bs[k], bs[k+1])` and publishes its pyramid cell; gap
+/// task `B_k` reads input around boundary `bs[k+1]` (declared at the
+/// conservative `±2*halo` envelope of its level-1 base) plus both
+/// neighbouring pyramid cells, and publishes its gap cell.  Ids match
+/// the engine: pyramids `0..ntiles`, then gaps `ntiles..2*ntiles-1`.
+pub fn wave_model(bs: &[usize], halo: usize) -> DagModel {
+    let ntiles = bs.len() - 1;
+    let ext0 = bs[ntiles];
+    let mut model = DagModel::default();
+    let cell = || IntervalSet::single(0, 1);
+    for k in 0..ntiles {
+        model.deps.push(Vec::new());
+        model.accesses.push(
+            TaskAccess::new(format!("pyramid[{k}]"))
+                .read(BufferId::WaveInput, IntervalSet::single(bs[k], bs[k + 1]))
+                .write(BufferId::Pyramid(k), cell()),
+        );
+    }
+    for k in 0..ntiles.saturating_sub(1) {
+        let b = bs[k + 1];
+        model.deps.push(vec![k, k + 1]);
+        model.accesses.push(
+            TaskAccess::new(format!("gap[{k}]"))
+                .read(
+                    BufferId::WaveInput,
+                    IntervalSet::single(b.saturating_sub(2 * halo), (b + 2 * halo).min(ext0)),
+                )
+                .read(BufferId::Pyramid(k), cell())
+                .read(BufferId::Pyramid(k + 1), cell())
+                .write(BufferId::Gap(k), cell()),
+        );
+    }
+    model
+}
+
+/// [`wave_model`] over the tile layout the tetris-wave engine itself
+/// would pick for a padded extent of `ext0` dim-0 cells (`halo` =
+/// `radius * steps`) — the CLI entry point for analyzing realistic
+/// wavefront DAGs without re-deriving tile boundaries by hand.
+pub fn wave_model_auto(
+    ext0: usize,
+    halo: usize,
+    rest_cells: usize,
+    steps: usize,
+    threads: usize,
+) -> DagModel {
+    let min_tiles = if threads > 1 { 2 * threads } else { 1 };
+    let bs = crate::engine::tessellate::tile_boundaries(
+        None,
+        ext0,
+        halo,
+        rest_cells,
+        steps,
+        min_tiles,
+    );
+    wave_model(&bs, halo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assemble_reads_map_boundaries() {
+        // 8 core rows, halo 2 → padded 0..12.  Interior span (2, 6):
+        // reads padded [2, 10) identically.
+        let r = assemble_reads((2, 6), 2, 8, Boundary::Neumann);
+        assert_eq!(r.intervals(), &[(2, 10)]);
+        // Edge span (0, 4) under Dirichlet: ghost rows 0..2 are
+        // constant fills, so reads start at the first core row.
+        let r = assemble_reads((0, 4), 2, 8, Boundary::Dirichlet(0.0));
+        assert_eq!(r.intervals(), &[(2, 8)]);
+        // Same span under Periodic: ghosts wrap to the far edge rows
+        // 8..10, which coalesce with the core reads.
+        let r = assemble_reads((0, 4), 2, 8, Boundary::Periodic);
+        assert_eq!(r.intervals(), &[(2, 10)]);
+        // Neumann reflects back into the near rows.
+        let r = assemble_reads((0, 4), 2, 8, Boundary::Neumann);
+        assert_eq!(r.intervals(), &[(2, 8)]);
+        // Zero-share span still reads its neighbourhood.
+        let r = assemble_reads((4, 4), 2, 8, Boundary::Neumann);
+        assert_eq!(r.intervals(), &[(4, 8)]);
+    }
+
+    #[test]
+    fn window_plan_matches_hand_layout() {
+        let spans = vec![(0usize, 8usize), (8, 16)];
+        let p = WindowPlan::build(&spans, 2, 16, Boundary::Dirichlet(0.0), 1, 0, 2);
+        assert_eq!(p.model.len(), 2 * 1 * 2 * 3);
+        assert_eq!(p.model.len(), p.meta.len());
+        // k=0 assembles have no deps; k=1 assembles wait on both
+        // neighbours' writebacks (halo 2 crosses the single cut).
+        let a10 = p.id(1, 0, 0, TaskKind::Assemble);
+        assert_eq!(p.meta[a10].kind, TaskKind::Assemble);
+        assert_eq!(p.meta[a10].block, 1);
+        assert_eq!(
+            p.model.deps[a10],
+            vec![p.id(0, 0, 0, TaskKind::Writeback), p.id(0, 0, 1, TaskKind::Writeback)]
+        );
+        assert!(p.model.deps[p.id(0, 0, 1, TaskKind::Assemble)].is_empty());
+        // chain edges
+        let c = p.id(0, 0, 1, TaskKind::Compute);
+        assert_eq!(p.model.deps[c], vec![p.id(0, 0, 1, TaskKind::Assemble)]);
+        assert_eq!(p.model.deps[c + 1], vec![c]);
+        // and the whole plan is race-free with zero over-sync.
+        let r = p.model.check();
+        assert!(r.is_clean(), "{:?}", r.races);
+        assert!(r.oversync.is_empty(), "{:?}", r.oversync);
+        assert_eq!(r.redundant_edges, 0);
+    }
+
+    #[test]
+    fn window_plan_clean_for_odd_window_start() {
+        // b0 = 1 flips every parity; the scheme must hold either way.
+        let spans = vec![(0usize, 5usize), (5, 12), (12, 12), (12, 16)];
+        for b in [Boundary::Dirichlet(1.0), Boundary::Neumann, Boundary::Periodic] {
+            for b0 in [0usize, 1] {
+                for nf in [1usize, 2] {
+                    let p = WindowPlan::build(&spans, 3, 16, b, nf, b0, 3);
+                    let r = p.model.check();
+                    assert!(r.is_clean(), "{b} b0={b0} nf={nf}: {:?}", r.races);
+                    assert!(r.oversync.is_empty(), "{b} b0={b0} nf={nf}: {:?}", r.oversync);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wave_model_is_clean_and_tight() {
+        let bs = vec![0usize, 10, 20, 30, 40];
+        let m = wave_model(&bs, 2);
+        assert_eq!(m.len(), 4 + 3);
+        let r = m.check();
+        assert!(r.is_clean(), "{:?}", r.races);
+        assert!(r.oversync.is_empty(), "every gap edge orders a pyramid handoff");
+        assert_eq!(r.redundant_edges, 0);
+    }
+
+    #[test]
+    fn window_plan_detects_dropped_writeback_edge() {
+        // 2 workers, halo 2 across the single cut, 2 blocks: drop the
+        // writeback(b0, w0) -> assemble(b1, w1) dependency.  Exactly two
+        // conflicts lose their ordering:
+        //  * RAW on Global{f0, parity 1}: writeback(b0, w0) writes rows
+        //    [2, 10), assemble(b1, w1) reads [8, 18) — its halo reaches
+        //    into w0's slab;
+        //  * WAR on Global{f0, parity 0}: assemble(b0, w0) reads rows
+        //    [2, 12) that writeback(b1, w1) overwrites ([10, 18)) — the
+        //    symmetrization path that ordered them (a(0,w0) -> p(0,w0)
+        //    -> a(1,w1) -> p(1,w1)) ran through the dropped edge.
+        let spans = vec![(0usize, 8usize), (8, 16)];
+        let mut p = WindowPlan::build(&spans, 2, 16, Boundary::Dirichlet(0.0), 1, 0, 2);
+        let wb00 = p.id(0, 0, 0, TaskKind::Writeback);
+        let a11 = p.id(1, 0, 1, TaskKind::Assemble);
+        assert!(p.model.drop_dep(a11, wb00));
+        let races = p.model.races();
+        assert_eq!(races.len(), 2, "{races:?}");
+        // the RAW pair is (writeback b0 w0, assemble b1 w1) itself
+        assert!(
+            races.iter().any(|r| (r.a, r.b) == (wb00, a11)
+                && r.buffer == BufferId::Global { field: 0, parity: 1 }),
+            "missing the dropped-edge RAW race: {races:?}"
+        );
+        // the WAR pair is assemble(b0, w0) vs writeback(b1, w1)
+        let a00 = p.id(0, 0, 0, TaskKind::Assemble);
+        let wb11 = p.id(1, 0, 1, TaskKind::Writeback);
+        assert!(
+            races.iter().any(|r| (r.a, r.b) == (a00, wb11)
+                && r.buffer == BufferId::Global { field: 0, parity: 0 }),
+            "missing the symmetrization WAR race: {races:?}"
+        );
+        // restoring the edge restores cleanliness
+        p.model.deps[a11].push(wb00);
+        assert!(p.model.races().is_empty());
+    }
+
+    #[test]
+    fn wave_model_detects_dropped_pyramid_edge() {
+        let bs = vec![0usize, 10, 20, 30];
+        let mut m = wave_model(&bs, 2);
+        // gap[0] is task 3 with deps [0, 1]; dropping A_1 -> B_0 races
+        // on pyramid[1]'s cell.
+        assert!(m.drop_dep(3, 1));
+        let races = m.races();
+        assert_eq!(races.len(), 1, "{races:?}");
+        assert_eq!(races[0].buffer, BufferId::Pyramid(1));
+        assert_eq!((races[0].a, races[0].b), (1, 3));
+    }
+}

@@ -35,6 +35,8 @@ use std::time::{Duration, Instant};
 
 use crate::util::error::{Context, Result};
 
+use crate::analyze::dynamic::{global_trace, Collector, TaskScope};
+use crate::analyze::model::{TaskKind, WindowPlan};
 use crate::stencil::{Boundary, Field, StencilSpec};
 
 use super::comm::{CommLedger, CommModel};
@@ -363,9 +365,18 @@ impl Scheduler {
         // writebacks land in parity (b+1)%2.  Neither buffer's ghost
         // ring is ever read (assembly maps ghosts from core rows), so no
         // ring fill happens at all in this mode.
-        let front: Vec<Field> =
+        let mut front: Vec<Field> =
             cores.iter().map(|c| c.pad(halo, self.boundary.pad_value())).collect();
-        let back: Vec<Field> = front.clone();
+        let mut back: Vec<Field> = front.clone();
+        // Tag each parity buffer for the debug-build dynamic validator:
+        // region traffic on these fields is logged per task and checked
+        // against the window plan's declared summaries (release: no-op).
+        for (f, buf) in front.iter_mut().enumerate() {
+            buf.set_trace(global_trace(f, 0));
+        }
+        for (f, buf) in back.iter_mut().enumerate() {
+            buf.set_trace(global_trace(f, 1));
+        }
         // RwLock so concurrent assembles of one field share read access
         // (writebacks target the other parity, so within a block readers
         // and writers never meet; across blocks the DAG orders them).
@@ -397,7 +408,15 @@ impl Scheduler {
         let mut b0 = 0usize;
         while b0 < blocks {
             let bw = window.min(blocks - b0);
-            let owners = symmetric_owners(&spans, halo, n_rows, boundary);
+            // The window's DAG is *derived from* its analyzable plan:
+            // dependencies and access summaries come straight out of
+            // `WindowPlan::build` (which owns the symmetric-owner
+            // wiring), and the closures below are registered in plan
+            // order — so the graph the race checker certifies is the
+            // graph the pool executes, by construction.
+            let plan = WindowPlan::build(&spans, halo, n_rows, boundary, nf, b0, bw);
+            // Debug-build sink for the tasks' observed region traffic.
+            let collector = Collector::shared();
             let nslots = bw * nf * nw;
             let inputs: Vec<Mutex<Option<Field>>> = (0..nslots).map(|_| Mutex::new(None)).collect();
             let outputs: Vec<Mutex<Option<Field>>> =
@@ -417,7 +436,6 @@ impl Scheduler {
             {
                 let bufs = &buffers;
                 let spans_r = &spans;
-                let owners_r = &owners;
                 let inputs_r = &inputs;
                 let outputs_r = &outputs;
                 let busy_r = &busy_ns;
@@ -428,107 +446,125 @@ impl Scheduler {
                 let overlapped_r = &block_overlapped;
                 let failures_r = &failures;
                 let aborted_r = &aborted;
+                let collector_r = &collector;
 
+                // Memory-ordering notes for the atomics below:
+                //  * `aborted` is Release on store / Acquire on load —
+                //    the failing task pushes its message *then* raises
+                //    the flag, and any task that observes the flag must
+                //    also observe the message (and skip stale work).
+                //  * The metrics counters (extract/paste/hidden ns,
+                //    per-slab busy ns, `inflight`, `block_overlapped`)
+                //    stay Relaxed on purpose: they are monotone
+                //    accumulators that only need atomicity, and every
+                //    read happens after the pool joins — a full
+                //    happens-before point — so stronger orderings would
+                //    buy nothing.
                 let mut g = TaskGraph::new();
-                // Writeback task ids of the previous block, per (f, w).
-                let mut prev_paste: Vec<usize> = Vec::new();
-                for k in 0..bw {
-                    let b = b0 + k;
+                for (tid, m) in plan.meta.iter().enumerate() {
+                    let (k, b, f, w) = (m.k, m.block, m.field, m.worker);
                     let read_par = b % 2;
                     let write_par = (b + 1) % 2;
-                    let mut this_paste = Vec::with_capacity(nf * nw);
-                    for f in 0..nf {
-                        for w in 0..nw {
-                            let idx = (k * nf + f) * nw + w;
-                            let (s, e) = spans_r[w];
-                            // Assemble: the §5.3 prefetch.  Depends only
-                            // on the neighbouring slabs' previous-block
-                            // writebacks, never the whole block barrier.
-                            let a_deps: Vec<usize> = if k == 0 {
-                                Vec::new()
-                            } else {
-                                owners_r[w].iter().map(|&o| prev_paste[f * nw + o]).collect()
-                            };
-                            let a_id = g.add(
-                                move || {
-                                    if aborted_r.load(Ordering::Relaxed) {
-                                        return;
-                                    }
-                                    let t = Instant::now();
-                                    let slab = {
-                                        let gbuf = bufs[read_par][f].read().unwrap();
-                                        assemble_slab(&gbuf, s, e, halo, boundary)
-                                    };
-                                    *inputs_r[idx].lock().unwrap() = Some(slab);
-                                    let dt = t.elapsed().as_nanos() as u64;
-                                    extract_r.fetch_add(dt, Ordering::Relaxed);
-                                    if inflight_r.load(Ordering::Relaxed) > 0 {
-                                        hidden_r.fetch_add(dt, Ordering::Relaxed);
-                                        overlapped_r[k].store(true, Ordering::Relaxed);
-                                    }
-                                },
-                                a_deps,
-                            );
-                            // Compute: same zero-share skip as dispatch().
-                            let c_id = g.add(
-                                move || {
-                                    // None = assembly skipped by an abort
-                                    let Some(input) = inputs_r[idx].lock().unwrap().take() else {
-                                        return;
-                                    };
-                                    if aborted_r.load(Ordering::Relaxed) {
-                                        return;
-                                    }
-                                    if let Some(out) = empty_slab_output(&input, halo) {
+                    let idx = (k * nf + f) * nw + w;
+                    let (s, e) = spans_r[w];
+                    let deps = plan.model.deps[tid].clone();
+                    let access = plan.model.accesses[tid].clone();
+                    let id = match m.kind {
+                        // Assemble: the §5.3 prefetch.  Its plan deps are
+                        // only the neighbouring slabs' previous-block
+                        // writebacks, never a whole-block barrier.
+                        TaskKind::Assemble => g.add_with_access(
+                            move || {
+                                let _scope = TaskScope::enter(collector_r, tid);
+                                if aborted_r.load(Ordering::Acquire) {
+                                    return;
+                                }
+                                let t = Instant::now();
+                                let slab = {
+                                    let gbuf = bufs[read_par][f].read().unwrap();
+                                    assemble_slab(&gbuf, s, e, halo, boundary)
+                                };
+                                *inputs_r[idx].lock().unwrap() = Some(slab);
+                                let dt = t.elapsed().as_nanos() as u64;
+                                extract_r.fetch_add(dt, Ordering::Relaxed);
+                                if inflight_r.load(Ordering::Relaxed) > 0 {
+                                    hidden_r.fetch_add(dt, Ordering::Relaxed);
+                                    overlapped_r[k].store(true, Ordering::Relaxed);
+                                }
+                            },
+                            deps,
+                            access,
+                        ),
+                        // Compute: same zero-share skip as dispatch().
+                        TaskKind::Compute => g.add_with_access(
+                            move || {
+                                let _scope = TaskScope::enter(collector_r, tid);
+                                // None = assembly skipped by an abort
+                                let Some(input) = inputs_r[idx].lock().unwrap().take() else {
+                                    return;
+                                };
+                                if aborted_r.load(Ordering::Acquire) {
+                                    return;
+                                }
+                                if let Some(out) = empty_slab_output(&input, halo) {
+                                    *outputs_r[idx].lock().unwrap() = Some(out);
+                                    return;
+                                }
+                                inflight_r.fetch_add(1, Ordering::Relaxed);
+                                let t = Instant::now();
+                                let res = workers[w].run_slab(spec, &input, tb);
+                                let dt = t.elapsed();
+                                inflight_r.fetch_sub(1, Ordering::Relaxed);
+                                busy_r[k * nw + w]
+                                    .fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+                                match res {
+                                    Ok(out) => {
                                         *outputs_r[idx].lock().unwrap() = Some(out);
-                                        return;
                                     }
-                                    inflight_r.fetch_add(1, Ordering::Relaxed);
-                                    let t = Instant::now();
-                                    let res = workers[w].run_slab(spec, &input, tb);
-                                    let dt = t.elapsed();
-                                    inflight_r.fetch_sub(1, Ordering::Relaxed);
-                                    busy_r[k * nw + w]
-                                        .fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
-                                    match res {
-                                        Ok(out) => {
-                                            *outputs_r[idx].lock().unwrap() = Some(out);
-                                        }
-                                        Err(err) => {
-                                            failures_r.lock().unwrap().push(format!(
-                                                "worker {w} failed (field {f}, block {b}): {err}"
-                                            ));
-                                            aborted_r.store(true, Ordering::Relaxed);
-                                        }
+                                    Err(err) => {
+                                        failures_r.lock().unwrap().push(format!(
+                                            "worker {w} failed (field {f}, block {b}): {err}"
+                                        ));
+                                        aborted_r.store(true, Ordering::Release);
                                     }
-                                },
-                                vec![a_id],
-                            );
-                            // Writeback into the back buffer.
-                            let p_id = g.add(
-                                move || {
-                                    let t = Instant::now();
-                                    let taken = outputs_r[idx].lock().unwrap().take();
-                                    if let Some(out) = taken {
-                                        let mut off = vec![s + halo];
-                                        off.extend(vec![halo; nd - 1]);
-                                        bufs[write_par][f].write().unwrap().paste(&off, &out);
-                                    }
-                                    let dt = t.elapsed().as_nanos() as u64;
-                                    paste_r.fetch_add(dt, Ordering::Relaxed);
-                                    if inflight_r.load(Ordering::Relaxed) > 0 {
-                                        hidden_r.fetch_add(dt, Ordering::Relaxed);
-                                        overlapped_r[k].store(true, Ordering::Relaxed);
-                                    }
-                                },
-                                vec![c_id],
-                            );
-                            this_paste.push(p_id);
-                        }
-                    }
-                    prev_paste = this_paste;
+                                }
+                            },
+                            deps,
+                            access,
+                        ),
+                        // Writeback into the back buffer.
+                        TaskKind::Writeback => g.add_with_access(
+                            move || {
+                                let _scope = TaskScope::enter(collector_r, tid);
+                                let t = Instant::now();
+                                let taken = outputs_r[idx].lock().unwrap().take();
+                                if let Some(out) = taken {
+                                    let mut off = vec![s + halo];
+                                    off.extend(vec![halo; nd - 1]);
+                                    bufs[write_par][f].write().unwrap().paste(&off, &out);
+                                }
+                                let dt = t.elapsed().as_nanos() as u64;
+                                paste_r.fetch_add(dt, Ordering::Relaxed);
+                                if inflight_r.load(Ordering::Relaxed) > 0 {
+                                    hidden_r.fetch_add(dt, Ordering::Relaxed);
+                                    overlapped_r[k].store(true, Ordering::Relaxed);
+                                }
+                            },
+                            deps,
+                            access,
+                        ),
+                    };
+                    debug_assert_eq!(id, tid, "plan/graph id drift");
                 }
+                // Certify the DAG we are about to run (no-op in release).
+                g.assert_race_free();
                 g.run(threads);
+            }
+
+            // Debug builds: the tasks' observed Field traffic must stay
+            // within what the plan declared (trivially Ok in release).
+            if let Err(msg) = collector.validate(&plan.model.accesses) {
+                panic!("pipelined window failed dynamic access validation: {msg}");
             }
 
             if let Some(msg) = failures.into_inner().unwrap().into_iter().next() {

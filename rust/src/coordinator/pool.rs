@@ -22,6 +22,8 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
+use crate::analyze::checker::TaskAccess;
+
 /// A unit of work scheduled on the pool.
 pub type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
 
@@ -194,10 +196,16 @@ pub fn run_dag<'a>(threads: usize, tasks: Vec<Task<'a>>, deps: &[Vec<usize>]) {
 /// leader uses it to wire the assemble → compute → writeback stages per
 /// `(block, field, worker)` slab, where each stage's dependencies are
 /// task ids returned by earlier [`TaskGraph::add`] calls.
+///
+/// Each task can optionally carry a declared read/write access summary
+/// ([`TaskAccess`]); [`TaskGraph::assert_race_free`] feeds the deps and
+/// summaries to the static checker (`analyze::checker`) so debug builds
+/// verify the graph they are about to execute is race-free.
 #[derive(Default)]
 pub struct TaskGraph<'a> {
     tasks: Vec<Task<'a>>,
     deps: Vec<Vec<usize>>,
+    accesses: Vec<TaskAccess>,
 }
 
 impl<'a> TaskGraph<'a> {
@@ -214,12 +222,45 @@ impl<'a> TaskGraph<'a> {
     }
 
     /// Register a task that runs after every task in `deps`; returns its
-    /// id for later stages to depend on.
+    /// id for later stages to depend on.  The task carries an empty
+    /// access summary (declares no shared-buffer traffic).
     pub fn add(&mut self, task: impl FnOnce() + Send + 'a, deps: Vec<usize>) -> usize {
+        self.add_with_access(task, deps, TaskAccess::default())
+    }
+
+    /// [`TaskGraph::add`], declaring the task's shared-buffer reads and
+    /// writes for the race checker.
+    pub fn add_with_access(
+        &mut self,
+        task: impl FnOnce() + Send + 'a,
+        deps: Vec<usize>,
+        access: TaskAccess,
+    ) -> usize {
         debug_assert!(deps.iter().all(|&d| d < self.tasks.len()), "dep on a future task");
         self.tasks.push(Box::new(task));
         self.deps.push(deps);
+        self.accesses.push(access);
         self.tasks.len() - 1
+    }
+
+    /// The declared access summaries, indexed by task id.
+    pub fn accesses(&self) -> &[TaskAccess] {
+        &self.accesses
+    }
+
+    /// Debug-assert that no two conflicting tasks are unordered.  Call
+    /// after construction, before [`TaskGraph::run`]; compiles to
+    /// nothing in release builds.
+    pub fn assert_race_free(&self) {
+        if cfg!(debug_assertions) {
+            let races = crate::analyze::checker::races(&self.deps, &self.accesses);
+            debug_assert!(
+                races.is_empty(),
+                "task graph has {} race(s):\n{}",
+                races.len(),
+                races.iter().map(|r| r.to_string()).collect::<Vec<_>>().join("\n")
+            );
+        }
     }
 
     /// Execute the graph on up to `threads` workers (see [`run_dag`]).
@@ -411,5 +452,46 @@ mod tests {
     fn run_dag_rejects_cycles() {
         let tasks: Vec<Task<'_>> = vec![Box::new(|| {}), Box::new(|| {})];
         run_dag(2, tasks, &[vec![1], vec![0]]);
+    }
+
+    #[test]
+    fn task_graph_carries_access_summaries() {
+        use crate::analyze::{BufferId, IntervalSet};
+        let buf = BufferId::Global { field: 0, parity: 0 };
+        let mut g = TaskGraph::new();
+        let w = g.add_with_access(
+            || {},
+            vec![],
+            TaskAccess::new("write").write(buf, IntervalSet::single(0, 4)),
+        );
+        g.add_with_access(
+            || {},
+            vec![w],
+            TaskAccess::new("read").read(buf, IntervalSet::single(0, 4)),
+        );
+        assert_eq!(g.accesses().len(), 2);
+        assert_eq!(g.accesses()[0].label, "write");
+        g.assert_race_free(); // ordered: fine in every build
+        g.run(2);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "race")]
+    fn task_graph_debug_asserts_on_unordered_conflict() {
+        use crate::analyze::{BufferId, IntervalSet};
+        let buf = BufferId::Global { field: 0, parity: 0 };
+        let mut g = TaskGraph::new();
+        g.add_with_access(
+            || {},
+            vec![],
+            TaskAccess::new("w0").write(buf, IntervalSet::single(0, 4)),
+        );
+        g.add_with_access(
+            || {},
+            vec![], // missing edge: unordered W/R on the same rows
+            TaskAccess::new("r1").read(buf, IntervalSet::single(2, 6)),
+        );
+        g.assert_race_free();
     }
 }

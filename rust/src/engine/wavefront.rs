@@ -16,7 +16,8 @@
 
 use std::sync::OnceLock;
 
-use crate::coordinator::pool;
+use crate::analyze::model::wave_model;
+use crate::coordinator::pool::TaskGraph;
 use crate::stencil::{Field, StencilSpec};
 
 use super::tessellate::{assemble, build_inverted, build_pyramid, tile_boundaries, Inner, Pyramid};
@@ -58,31 +59,41 @@ impl Engine for WavefrontEngine {
         let inner = Inner::Fused;
 
         // Task graph: A_k = pyramid of tile k (no deps); B_k = inverted
-        // triangle at boundary k+1, released by {A_k, A_{k+1}}.
+        // triangle at boundary k+1, released by {A_k, A_{k+1}}.  Deps and
+        // access summaries come from the analyzable model (`wave_model`)
+        // so the executed DAG is the one the race checker certifies.
+        let model = wave_model(&bs, halo);
         let pyramid_cells: Vec<OnceLock<Pyramid>> = (0..ntiles).map(|_| OnceLock::new()).collect();
         let gap_cells: Vec<OnceLock<Field>> = (0..ntiles - 1).map(|_| OnceLock::new()).collect();
         {
-            let mut tasks: Vec<pool::Task<'_>> = Vec::with_capacity(2 * ntiles - 1);
-            let mut deps: Vec<Vec<usize>> = Vec::with_capacity(2 * ntiles - 1);
+            let mut g = TaskGraph::new();
             for k in 0..ntiles {
                 let (cells, bsr) = (&pyramid_cells, &bs);
-                tasks.push(Box::new(move || {
-                    let p = build_pyramid(inner, spec, input, bsr[k], bsr[k + 1], steps);
-                    let _ = cells[k].set(p);
-                }));
-                deps.push(Vec::new());
+                g.add_with_access(
+                    move || {
+                        let p = build_pyramid(inner, spec, input, bsr[k], bsr[k + 1], steps);
+                        let _ = cells[k].set(p);
+                    },
+                    model.deps[k].clone(),
+                    model.accesses[k].clone(),
+                );
             }
             for k in 0..ntiles - 1 {
                 let (pyrs, gaps, bsr, extr) = (&pyramid_cells, &gap_cells, &bs, &ext);
-                tasks.push(Box::new(move || {
-                    let l = pyrs[k].get().expect("left pyramid ready");
-                    let r = pyrs[k + 1].get().expect("right pyramid ready");
-                    let f = build_inverted(inner, spec, input, l, r, bsr[k + 1], steps, extr);
-                    let _ = gaps[k].set(f);
-                }));
-                deps.push(vec![k, k + 1]);
+                g.add_with_access(
+                    move || {
+                        let l = pyrs[k].get().expect("left pyramid ready");
+                        let r = pyrs[k + 1].get().expect("right pyramid ready");
+                        let f = build_inverted(inner, spec, input, l, r, bsr[k + 1], steps, extr);
+                        let _ = gaps[k].set(f);
+                    },
+                    model.deps[ntiles + k].clone(),
+                    model.accesses[ntiles + k].clone(),
+                );
             }
-            pool::run_dag(self.threads, tasks, &deps);
+            debug_assert_eq!(g.len(), model.len(), "wave model/graph drift");
+            g.assert_race_free();
+            g.run(self.threads);
         }
 
         let pyramids: Vec<Pyramid> = pyramid_cells.into_iter().map(|c| c.into_inner().expect("pyramid computed")).collect();

@@ -7,6 +7,11 @@
 //!
 //! Layer map:
 //! * [`stencil`] — specs, fields, reference oracle (substrate).
+//! * [`analyze`] — static region-aliasing race checker over the task
+//!   DAGs (`tetris analyze`): declared read/write row-interval
+//!   summaries + bitset reachability ⇒ races and over-synchronization;
+//!   debug builds cross-validate declarations against real `Field`
+//!   region traffic.
 //! * [`engine`] — optimized CPU engines: tessellate tiling + skewed
 //!   swizzling (the paper's §3.1/§4.1), i.e. **Tetris (CPU)**, plus the
 //!   dependency-DAG temporal wavefront (**tetris-wave**).
@@ -34,6 +39,11 @@
 //! * [`apps`] — thermal-diffusion case study (§6.5), accuracy study.
 //! * [`bench`] — harness that regenerates every paper table/figure.
 
+// The whole stack is std-only safe Rust: the pool, the pipelined
+// leader and the serving layer get their concurrency from scoped
+// threads + locks/atomics, never from `unsafe` — so the race checker's
+// task-graph model (plus TSAN/Miri in CI) covers everything there is.
+#![forbid(unsafe_code)]
 // Stencil index arithmetic reads better with explicit loops and wide
 // argument lists; keep clippy focused on correctness lints.
 #![allow(
@@ -44,6 +54,7 @@
     clippy::uninlined_format_args
 )]
 
+pub mod analyze;
 pub mod apps;
 pub mod baselines;
 pub mod bench;

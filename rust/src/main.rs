@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   info                      platform + artifact inventory
 //!   validate                  golden-check every AOT artifact via PJRT
+//!   analyze  [--all] [--bench B --tb N --boundary C[,C...] --workers W
+//!            --fields F --adapt K --rows R] [--verbose] [--inject-race]
+//!                              static region-aliasing race check of the task DAGs
 //!   run      --bench B --engine E|auto [--steps N] [--threads T]
 //!            [--boundary C] [--adapt K] [--workers W]  scheduler mode
 //!            [--overlap on|off|auto]  §5.3 pipelined leader loop
@@ -95,6 +98,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "info" => cmd_info(),
         "validate" => cmd_validate(),
+        "analyze" => cmd_analyze(&args),
         "run" => cmd_run(&args),
         "hetero" => cmd_hetero(&args),
         "tune" => cmd_tune(&args),
@@ -120,6 +124,15 @@ fn print_help() {
          \n\
          info                          platform + artifact inventory\n\
          validate                      golden-check every AOT artifact\n\
+         analyze [--all]               static region-aliasing race check: every task\n\
+                                       of the pipelined window DAGs and tetris-wave\n\
+                                       DAGs declares (buffer, parity, rows); report\n\
+                                       unordered conflicts (races) and over-sync\n\
+                                       edges.  [--bench B --tb N --boundary C[,C...]\n\
+                                       --workers W --fields F --adapt K --rows R\n\
+                                       --verbose]; --all sweeps the full matrix;\n\
+                                       --inject-race drops one writeback->assemble\n\
+                                       edge and must exit nonzero\n\
          run    --bench B --engine E   single-engine run  [--steps N --threads T --scale F]\n\
                 [--boundary C --adapt K --workers W]   scheduler run on W native workers\n\
                 [--overlap on|off|auto]   §5.3 double-buffered leader loop: prefetch\n\
@@ -217,6 +230,169 @@ fn cmd_validate() -> Result<()> {
         bail!("{failed} artifacts failed golden validation");
     }
     println!("all artifacts validated against python goldens");
+    Ok(())
+}
+
+/// Running totals across one `tetris analyze` sweep.
+#[derive(Default)]
+struct AnalyzeTotals {
+    cases: usize,
+    races: usize,
+    oversync: usize,
+    redundant: usize,
+}
+
+/// Fold one DAG's report into the sweep totals, printing failures
+/// always and clean cases only under `--verbose`.
+fn analyze_report(desc: &str, report: &tetris::analyze::Report, verbose: bool, t: &mut AnalyzeTotals) {
+    t.cases += 1;
+    t.races += report.races.len();
+    t.oversync += report.oversync.len();
+    t.redundant += report.redundant_edges;
+    if !report.is_clean() {
+        println!("FAIL {desc}: {}", report.summary());
+        for r in &report.races {
+            println!("  {r}");
+        }
+    } else if verbose {
+        println!("ok   {desc}: {}", report.summary());
+    }
+}
+
+/// Check every window plan of one pipeline configuration: each
+/// partition layout the retuner could plausibly produce (balanced,
+/// skewed, zero-share) at both window start parities.
+#[allow(clippy::too_many_arguments)]
+fn analyze_pipeline_config(
+    label: &str,
+    halo: usize,
+    rows: usize,
+    boundary: Boundary,
+    nw: usize,
+    nf: usize,
+    bw: usize,
+    verbose: bool,
+    t: &mut AnalyzeTotals,
+) {
+    use tetris::analyze::{sweep_partitions, WindowPlan};
+    for (pi, part) in sweep_partitions(nw, rows).iter().enumerate() {
+        let spans = part.spans();
+        for b0 in [0usize, 1] {
+            let plan = WindowPlan::build(&spans, halo, rows, boundary, nf, b0, bw);
+            let desc =
+                format!("pipeline[{label} {boundary} nw{nw} nf{nf} part{pi} b0={b0} bw{bw}]");
+            analyze_report(&desc, &plan.model.check(), verbose, t);
+        }
+    }
+}
+
+/// Negative path: drop one writeback -> assemble edge from a canonical
+/// window plan; the checker MUST report the resulting races and this
+/// command MUST exit nonzero (CI asserts both).
+fn analyze_inject_race() -> Result<()> {
+    use tetris::analyze::{TaskKind, WindowPlan};
+    let spans = vec![(0usize, 8usize), (8, 16)];
+    let mut plan = WindowPlan::build(&spans, 2, 16, Boundary::Dirichlet(0.0), 1, 0, 2);
+    let wb = plan.id(0, 0, 0, TaskKind::Writeback);
+    let a = plan.id(1, 0, 1, TaskKind::Assemble);
+    assert!(plan.model.drop_dep(a, wb), "canonical edge missing from plan");
+    let report = plan.model.check();
+    println!("injected: dropped edge writeback[b0 f0 w0] -> assemble[b1 f0 w1]");
+    println!("{}", report.summary());
+    for r in &report.races {
+        println!("  {r}");
+    }
+    if report.is_clean() {
+        bail!("checker MISSED the injected race — detector is broken");
+    }
+    bail!("{} race(s) detected from the injected edge drop", report.races.len())
+}
+
+/// `tetris analyze` — static region-aliasing race check over the task
+/// DAGs the repo schedules (pipelined leader windows + tetris-wave).
+fn cmd_analyze(args: &Args) -> Result<()> {
+    use tetris::analyze::wave_model_auto;
+    if args.flags.contains_key("inject-race") {
+        return analyze_inject_race();
+    }
+    let verbose = args.flags.contains_key("verbose");
+    let mut t = AnalyzeTotals::default();
+    if args.flags.contains_key("all") {
+        // Full matrix: bench (radius) x Tb (halo depth) x boundary x
+        // workers x fields x partition shape x window parity x window
+        // length — the configurations `run`/`hetero`/`serve` actually
+        // reach, zero-share partitions included.
+        let rows = 24;
+        for bench in ["heat2d", "box2d25p"] {
+            let radius = spec::get(bench).expect("builtin bench").radius;
+            for tb in [1usize, 2, 4] {
+                for boundary in
+                    [Boundary::Dirichlet(0.0), Boundary::Neumann, Boundary::Periodic]
+                {
+                    for nw in 1..=4 {
+                        for nf in 1..=3 {
+                            for bw in [2usize, 3] {
+                                analyze_pipeline_config(
+                                    &format!("{bench} tb{tb}"),
+                                    radius * tb,
+                                    rows,
+                                    boundary,
+                                    nw,
+                                    nf,
+                                    bw,
+                                    verbose,
+                                    &mut t,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            for steps in [1usize, 2, 4] {
+                for threads in [1usize, 2, 4] {
+                    let halo = radius * steps;
+                    let model = wave_model_auto(64 + 2 * halo, halo, 64, steps, threads);
+                    let desc = format!("wave[{bench} steps{steps} threads{threads}]");
+                    analyze_report(&desc, &model.check(), verbose, &mut t);
+                }
+            }
+        }
+    } else {
+        let bench = args.str("bench", "heat2d");
+        let Some(s) = spec::get(&bench) else {
+            bail!("unknown bench {bench:?}");
+        };
+        let tb = args.get("tb", 2usize).max(1);
+        let nw = args.get("workers", 3usize).max(1);
+        let nf = args.get("fields", 2usize).max(1);
+        let rows = args.get("rows", 24usize).max(nw.max(2));
+        let bw = args.get("adapt", 4usize).max(1);
+        for spec_str in args.str("boundary", "dirichlet:0,neumann,periodic").split(',') {
+            let boundary: Boundary = spec_str.trim().parse().context("--boundary")?;
+            analyze_pipeline_config(
+                &format!("{bench} tb{tb}"),
+                s.radius * tb,
+                rows,
+                boundary,
+                nw,
+                nf,
+                bw,
+                verbose,
+                &mut t,
+            );
+        }
+        let halo = s.radius * tb;
+        let model = wave_model_auto(64 + 2 * halo, halo, 64, tb, nw);
+        analyze_report(&format!("wave[{bench} steps{tb} threads{nw}]"), &model.check(), verbose, &mut t);
+    }
+    println!(
+        "analyzed {} DAGs: {} race(s), {} over-sync edge(s), {} redundant edge(s)",
+        t.cases, t.races, t.oversync, t.redundant
+    );
+    if t.races > 0 {
+        bail!("{} race(s) detected across {} DAGs", t.races, t.cases);
+    }
+    println!("race-free: every conflicting pair is ordered by its DAG");
     Ok(())
 }
 

@@ -7,11 +7,23 @@
 
 use std::fmt;
 
-#[derive(Clone, PartialEq)]
+#[derive(Clone)]
 pub struct Field {
     shape: Vec<usize>,
     strides: Vec<usize>,
     data: Vec<f64>,
+    /// Debug-only id linking this buffer to the race checker's dynamic
+    /// mode (`analyze::dynamic`); 0 = untraced.  Absent in release.
+    #[cfg(debug_assertions)]
+    trace: u64,
+}
+
+/// Equality is over shape and contents only — the debug-only trace id
+/// is bookkeeping, not data, and must never affect test assertions.
+impl PartialEq for Field {
+    fn eq(&self, other: &Field) -> bool {
+        self.shape == other.shape && self.data == other.data
+    }
 }
 
 impl fmt::Debug for Field {
@@ -35,12 +47,24 @@ impl Field {
 
     pub fn full(shape: &[usize], v: f64) -> Self {
         let n = shape.iter().product();
-        Field { shape: shape.to_vec(), strides: strides_for(shape), data: vec![v; n] }
+        Field {
+            shape: shape.to_vec(),
+            strides: strides_for(shape),
+            data: vec![v; n],
+            #[cfg(debug_assertions)]
+            trace: 0,
+        }
     }
 
     pub fn from_vec(shape: &[usize], data: Vec<f64>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
-        Field { shape: shape.to_vec(), strides: strides_for(shape), data }
+        Field {
+            shape: shape.to_vec(),
+            strides: strides_for(shape),
+            data,
+            #[cfg(debug_assertions)]
+            trace: 0,
+        }
     }
 
     /// Deterministic pseudorandom field (SplitMix64), for tests/benches.
@@ -50,6 +74,35 @@ impl Field {
             shape: shape.to_vec(),
             strides: strides_for(shape),
             data: crate::util::prng::SplitMix64::new(seed).fill(n),
+            #[cfg(debug_assertions)]
+            trace: 0,
+        }
+    }
+
+    /// Tag this buffer for the debug-build dynamic race validator
+    /// (`analyze::dynamic`): region primitives on a traced field report
+    /// their dim-0 row ranges to the active task scope.  No-op in
+    /// release builds.
+    pub fn set_trace(&mut self, id: u64) {
+        #[cfg(debug_assertions)]
+        {
+            self.trace = id;
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            let _ = id;
+        }
+    }
+
+    /// This buffer's trace id (always 0 in release builds).
+    pub fn trace(&self) -> u64 {
+        #[cfg(debug_assertions)]
+        {
+            self.trace
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            0
         }
     }
 
@@ -115,6 +168,10 @@ impl Field {
                 self.shape[d]
             );
         }
+        #[cfg(debug_assertions)]
+        if self.ndim() > 0 {
+            crate::analyze::dynamic::record(self.trace, false, offset[0], offset[0] + shape[0]);
+        }
         let mut out = Field::zeros(shape);
         copy_region(
             &self.data,
@@ -137,6 +194,11 @@ impl Field {
                 offset[d] + src.shape[d] <= self.shape[d],
                 "paste oob: dim {d}"
             );
+        }
+        #[cfg(debug_assertions)]
+        if self.ndim() > 0 {
+            crate::analyze::dynamic::record(self.trace, true, offset[0], offset[0] + src.shape[0]);
+            crate::analyze::dynamic::record(src.trace, false, 0, src.shape[0]);
         }
         let shape = self.shape.clone();
         copy_region(
@@ -171,6 +233,11 @@ impl Field {
                 "copy_region_from oob: dim {d}"
             );
         }
+        #[cfg(debug_assertions)]
+        if self.ndim() > 0 {
+            crate::analyze::dynamic::record(src.trace, false, src_off[0], src_off[0] + count[0]);
+            crate::analyze::dynamic::record(self.trace, true, dst_off[0], dst_off[0] + count[0]);
+        }
         let dst_shape = self.shape.clone();
         copy_region(&src.data, &src.shape, src_off, &mut self.data, &dst_shape, dst_off, count);
     }
@@ -198,6 +265,8 @@ impl Field {
             self.data[0] = v;
             return;
         }
+        #[cfg(debug_assertions)]
+        crate::analyze::dynamic::record(self.trace, true, offset[0], offset[0] + count[0]);
         let row = count[nd - 1];
         let outer: usize = count[..nd - 1].iter().product();
         let mut idx = vec![0usize; nd - 1];
@@ -254,6 +323,11 @@ impl Field {
             outer_equal || outer_disjoint || inner_disjoint,
             "copy_region_within: regions overlap across an outer dimension"
         );
+        #[cfg(debug_assertions)]
+        {
+            crate::analyze::dynamic::record(self.trace, false, src_off[0], src_off[0] + count[0]);
+            crate::analyze::dynamic::record(self.trace, true, dst_off[0], dst_off[0] + count[0]);
+        }
         let row = count[nd - 1];
         let outer: usize = count[..nd - 1].iter().product();
         let mut idx = vec![0usize; nd - 1];

@@ -4,6 +4,7 @@
 //! the in-tree SplitMix64 (deterministic, seeds printed on failure) — the
 //! same "many random cases + invariant assertions" methodology.
 
+use tetris::analyze::{TaskKind, WindowPlan};
 use tetris::coordinator::partition::{capacity_units, Partition};
 use tetris::coordinator::{tuner, CommLedger, CommModel, NativeWorker, Overlap, Scheduler, Worker};
 use tetris::stencil::{reference, spec, Boundary, Field};
@@ -224,6 +225,73 @@ fn prop_capacity_units_monotone() {
         let a = pick(&mut rng, 0, 1 << 24);
         let b = a + pick(&mut rng, 0, 1 << 24);
         assert!(capacity_units(a, unit, rest) <= capacity_units(b, unit, rest));
+    }
+}
+
+/// Random partition/boundary/field/window draw for the race-checker
+/// properties: shares may be zero (squeezed-out workers), the window may
+/// start at either parity, halos may dwarf individual slabs.
+fn random_window_plan(rng: &mut SplitMix64, case: usize, min_bw: usize) -> WindowPlan {
+    let nw = pick(rng, 1, 5);
+    let mut shares: Vec<usize> = (0..nw).map(|_| pick(rng, 0, 6)).collect();
+    if shares.iter().sum::<usize>() == 0 {
+        shares[pick(rng, 0, nw - 1)] = pick(rng, 1, 6);
+    }
+    let p = Partition { unit: pick(rng, 1, 3), shares };
+    let spans = p.spans();
+    let rows = spans.last().unwrap().1;
+    let halo = pick(rng, 1, 4);
+    let nf = pick(rng, 1, 3);
+    let bw = pick(rng, min_bw, 4);
+    let b0 = pick(rng, 0, 3);
+    let boundary = match case % 3 {
+        0 => Boundary::Dirichlet(rng.next_f64()),
+        1 => Boundary::Neumann,
+        _ => Boundary::Periodic,
+    };
+    WindowPlan::build(&spans, halo, rows, boundary, nf, b0, bw)
+}
+
+/// Race-checker soundness over the pipelined leader's real dependency
+/// scheme: every window plan the scheduler could build — any partition
+/// (zero shares included), boundary, field count, window length and
+/// start parity — is race-free with NO over-synchronizing and NO
+/// redundant edges (the §5.3 edge set is exactly minimal).
+#[test]
+fn prop_window_plans_race_free_and_minimal() {
+    for case in 0..CASES {
+        let mut rng = rng_for(7000 + case);
+        let plan = random_window_plan(&mut rng, case, 1);
+        let r = plan.model.check();
+        assert!(r.is_clean(), "case {case}: {:?}", r.races);
+        assert!(r.oversync.is_empty(), "case {case}: {:?}", r.oversync);
+        assert_eq!(r.redundant_edges, 0, "case {case}");
+    }
+}
+
+/// Detector completeness: dropping ANY single writeback -> assemble
+/// dependency from any window plan produces at least one reported race
+/// (every cross-block edge of the scheme is load-bearing, and the
+/// checker sees it go missing).
+#[test]
+fn prop_dropped_assemble_dep_always_races() {
+    for case in 0..CASES {
+        let mut rng = rng_for(8000 + case);
+        let plan = random_window_plan(&mut rng, case, 2);
+        let k = pick(&mut rng, 1, plan.bw - 1);
+        let f = pick(&mut rng, 0, plan.nf - 1);
+        let w = pick(&mut rng, 0, plan.nw - 1);
+        let a_id = plan.id(k, f, w, TaskKind::Assemble);
+        let deps = plan.model.deps[a_id].clone();
+        assert!(!deps.is_empty(), "case {case}: block-{k} assembles always have owners");
+        let victim = deps[pick(&mut rng, 0, deps.len() - 1)];
+        let mut m = plan.model.clone();
+        assert!(m.drop_dep(a_id, victim));
+        let races = m.races();
+        assert!(
+            !races.is_empty(),
+            "case {case}: dropping dep #{victim} of assemble #{a_id} must surface a race"
+        );
     }
 }
 

@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Static race-analysis gate for CI: build the release binary, run the
+# full `tetris analyze --all` sweep (pipelined-window plans across
+# boundary x workers x partition shape x fields x window length x window
+# parity, plus the tetris-wave DAGs) and fail on any reported race.
+# Then prove the detector actually detects: `tetris analyze
+# --inject-race` drops one writeback -> assemble edge from a known plan
+# and MUST exit nonzero while reporting an unordered conflict.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+BIN=rust/target/release/tetris
+
+# Always (re)build: incremental with a warm target dir, and it protects
+# against driving a stale cache-restored binary.
+cargo build --release --manifest-path rust/Cargo.toml
+
+echo "== tetris analyze --all =="
+"$BIN" analyze --all
+
+echo "== negative path: injected race must be detected =="
+out=$(mktemp)
+if "$BIN" analyze --inject-race >"$out" 2>&1; then
+    echo "FAIL: 'tetris analyze --inject-race' must exit nonzero" >&2
+    cat "$out" >&2
+    rm -f "$out"
+    exit 1
+fi
+if ! grep -q "no ordering path" "$out"; then
+    echo "FAIL: injected race was not reported as an unordered conflict" >&2
+    cat "$out" >&2
+    rm -f "$out"
+    exit 1
+fi
+cat "$out"
+rm -f "$out"
+echo "analyze smoke OK: sweep clean, injected race detected"
