@@ -13,7 +13,14 @@
 //!   the serial loop's (parsed from the rows' `extra` strings);
 //! * load suites: every rung conserves jobs (`offered = completed +
 //!   rejected + errors + lost`), nothing is lost, and the deterministic
-//!   Suite A has zero rejects and zero errors.
+//!   Suite A has zero rejects and zero errors;
+//! * per-rung `METRICS` snapshots: flat numeric maps whose `_total`
+//!   counters are monotone from rung to rung (one server's cumulative
+//!   stats), whose queue-depth gauge respects the capacity gauge, and
+//!   whose flattened histogram ladders (`*_p50_ms` … `*_p999_ms`) are
+//!   monotone within each snapshot.
+
+use std::collections::BTreeMap;
 
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
@@ -32,6 +39,7 @@ pub fn check_json(name: &str, j: &Json) -> Vec<String> {
     check_serve_batching(name, j, &mut v);
     check_overlap_idle(name, j, &mut v);
     check_suite(name, j, &mut v);
+    check_rung_metrics(name, j, &mut v);
     v
 }
 
@@ -172,6 +180,76 @@ fn check_suite(name: &str, j: &Json, out: &mut Vec<String>) {
     }
 }
 
+/// The flattened-percentile suffix ladder a `MetricsRegistry` snapshot
+/// writes for each merged histogram.
+const FLAT_LADDER: [&str; 4] = ["_p50_ms", "_p90_ms", "_p99_ms", "_p999_ms"];
+
+/// Per-rung server `METRICS` snapshots (attached by `tetris load`).
+fn check_rung_metrics(name: &str, j: &Json, out: &mut Vec<String>) {
+    let Some(suite) = j.get("suite") else { return };
+    let Some(rungs) = suite.at(&["rungs"]).as_arr() else { return };
+    let mut prev: Option<(usize, &BTreeMap<String, Json>)> = None;
+    for (i, rung) in rungs.iter().enumerate() {
+        let label = rung.at(&["label"]).as_str().unwrap_or("?");
+        let Some(m) = rung.at(&["metrics"]).as_obj() else { continue };
+        for (k, v) in m {
+            if v.as_f64().is_none() {
+                out.push(format!(
+                    "{name}: suite rung {i} ({label}): metrics.{k} is not a number"
+                ));
+            }
+        }
+        if let (Some(depth), Some(cap)) = (
+            m.get("serve.queue_depth").and_then(Json::as_f64),
+            m.get("serve.queue_capacity").and_then(Json::as_f64),
+        ) {
+            if depth > cap {
+                out.push(format!(
+                    "{name}: suite rung {i} ({label}): serve.queue_depth {depth} above \
+                     serve.queue_capacity {cap}"
+                ));
+            }
+        }
+        // flattened histogram ladders within one snapshot
+        for k in m.keys() {
+            let Some(stem) = k.strip_suffix(FLAT_LADDER[0]) else { continue };
+            let present: Vec<(String, f64)> = FLAT_LADDER
+                .iter()
+                .filter_map(|suf| {
+                    let key = format!("{stem}{suf}");
+                    m.get(&key).and_then(Json::as_f64).map(|v| (key, v))
+                })
+                .collect();
+            for w in present.windows(2) {
+                if w[0].1 > w[1].1 {
+                    out.push(format!(
+                        "{name}: suite rung {i} ({label}): metrics ladder not monotone: \
+                         {}={} > {}={}",
+                        w[0].0, w[0].1, w[1].0, w[1].1
+                    ));
+                }
+            }
+        }
+        // cumulative counters must be monotone from rung to rung
+        if let Some((pi, pm)) = prev {
+            for (k, v) in m {
+                if !k.ends_with("_total") {
+                    continue;
+                }
+                if let (Some(a), Some(b)) = (pm.get(k).and_then(Json::as_f64), v.as_f64()) {
+                    if b < a {
+                        out.push(format!(
+                            "{name}: metrics.{k} not monotone across rungs: {a} (rung {pi}) \
+                             -> {b} (rung {i})"
+                        ));
+                    }
+                }
+            }
+        }
+        prev = Some((i, m));
+    }
+}
+
 /// Driver for `tetris bench check FILE...`: parse each artifact, print
 /// per-file verdicts, error out if anything is violated.
 pub fn check_files(paths: &[String]) -> Result<()> {
@@ -308,6 +386,53 @@ mod tests {
         let v = check_json("b", &bad);
         assert_eq!(v.len(), 1);
         assert!(v[0].contains("latency samples"), "{v:?}");
+    }
+
+    #[test]
+    fn rung_metrics_envelope_passes_monotone_snapshots() {
+        let good = parse(
+            r#"{"suite":{"name":"suiteB","rungs":[
+                {"label":"rate=10","offered":5,"completed":5,"rejected":0,"errors":0,"lost":0,
+                 "latency_ms":{"total":{"count":5}},
+                 "metrics":{"serve.completed_total":5,"serve.queue_depth":0,
+                            "serve.queue_capacity":64,
+                            "serve.latency_ms_p50_ms":1.0,"serve.latency_ms_p99_ms":2.0}},
+                {"label":"rate=20","offered":8,"completed":8,"rejected":0,"errors":0,"lost":0,
+                 "latency_ms":{"total":{"count":8}},
+                 "metrics":{"serve.completed_total":13,"serve.queue_depth":2,
+                            "serve.queue_capacity":64,
+                            "serve.latency_ms_p50_ms":1.0,"serve.latency_ms_p99_ms":3.0}}]}}"#,
+        );
+        let v = check_json("g", &good);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn rung_metrics_envelope_flags_violations() {
+        let bad = parse(
+            r#"{"suite":{"name":"suiteB","rungs":[
+                {"label":"rate=10","offered":5,"completed":5,"rejected":0,"errors":0,"lost":0,
+                 "latency_ms":{"total":{"count":5}},
+                 "metrics":{"serve.completed_total":9,"serve.queue_depth":70,
+                            "serve.queue_capacity":64,
+                            "serve.latency_ms_p50_ms":4.0,"serve.latency_ms_p99_ms":2.0,
+                            "serve.engine":"simd"}},
+                {"label":"rate=20","offered":8,"completed":8,"rejected":0,"errors":0,"lost":0,
+                 "latency_ms":{"total":{"count":8}},
+                 "metrics":{"serve.completed_total":7}}]}}"#,
+        );
+        let v = check_json("b", &bad);
+        assert!(v.iter().any(|m| m.contains("not monotone across rungs")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("above") && m.contains("capacity")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("ladder not monotone")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("is not a number")), "{v:?}");
+        // rungs without a metrics block stay vacuously fine
+        let none = parse(
+            r#"{"suite":{"name":"suiteB","rungs":[
+                {"label":"rate=10","offered":5,"completed":5,"rejected":0,"errors":0,"lost":0,
+                 "latency_ms":{"total":{"count":5}}}]}}"#,
+        );
+        assert!(check_json("g", &none).is_empty());
     }
 
     #[test]

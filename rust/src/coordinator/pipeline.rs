@@ -38,6 +38,7 @@ use crate::util::error::{Context, Result};
 use crate::analyze::dynamic::{global_trace, Collector, TaskScope};
 use crate::analyze::model::{TaskKind, WindowPlan};
 use crate::stencil::{Boundary, Field, StencilSpec};
+use crate::trace;
 
 use super::comm::{CommLedger, CommModel};
 use super::metrics::RunMetrics;
@@ -219,9 +220,11 @@ impl Scheduler {
         for b in 0..blocks {
             // (0) Ghost refresh from each field's current core state.
             let tg = Instant::now();
+            let sp = trace::span("leader", "ghost", &[("block", b.into())]);
             for g in globals.iter_mut() {
                 self.boundary.fill(g, halo);
             }
+            drop(sp);
             leader_ghost += tg.elapsed();
 
             // (1) Halo snapshot: one extraction per worker per field per
@@ -232,6 +235,7 @@ impl Scheduler {
             // inter-device links instead of W-1.  A single worker's
             // wrap-around is a local copy, not a message.
             let te = Instant::now();
+            let sp = trace::span("leader", "extract", &[("block", b.into())]);
             let inputs: Vec<Vec<Field>> = globals
                 .iter()
                 .map(|g| {
@@ -247,6 +251,7 @@ impl Scheduler {
                         .collect()
                 })
                 .collect();
+            drop(sp);
             leader_extract += te.elapsed();
             // Only boundaries between *non-empty* spans are real links: a
             // zero-share worker holds no rows, so its neighbours abut
@@ -258,7 +263,9 @@ impl Scheduler {
             }
 
             // (2) One concurrent dispatch over all (field, worker) slabs.
+            let sp = trace::span("leader", "dispatch", &[("block", b.into())]);
             let results = dispatch(&self.workers, &self.spec, &inputs, self.tb, halo);
+            drop(sp);
 
             // (3) Writeback + accounting.  A worker's block busy time is
             // the sum over its fields; bubbles are judged against the
@@ -271,6 +278,7 @@ impl Scheduler {
             }
             let slowest = block_busy.iter().copied().max().unwrap_or_default();
             let tp = Instant::now();
+            let sp = trace::span("leader", "paste", &[("block", b.into())]);
             for (f, per_field) in results.into_iter().enumerate() {
                 for (i, ((res, _), &(s, _e))) in per_field.into_iter().zip(&spans).enumerate() {
                     let out = res.with_context(|| format!("worker {i} failed (field {f})"))?;
@@ -279,6 +287,7 @@ impl Scheduler {
                     globals[f].paste(&off, &out);
                 }
             }
+            drop(sp);
             leader_paste += tp.elapsed();
             for i in 0..nw {
                 busy[i] += block_busy[i];
@@ -405,6 +414,12 @@ impl Scheduler {
         const MAX_WINDOW: usize = 256;
         let window = if self.adapt_every > 0 { self.adapt_every } else { MAX_WINDOW };
 
+        // One tag per pipelined run: its stage spans stay separable from
+        // concurrent schedulers (serve sessions, parallel tests) in a
+        // shared trace, and `tetris trace check` scopes the task-id
+        // universe per tag.
+        let sched_tag = trace::fresh_tag();
+
         let mut b0 = 0usize;
         while b0 < blocks {
             let bw = window.min(blocks - b0);
@@ -415,6 +430,19 @@ impl Scheduler {
             // order — so the graph the race checker certifies is the
             // graph the pool executes, by construction.
             let plan = WindowPlan::build(&spans, halo, n_rows, boundary, nf, b0, bw);
+            // Announce the window geometry so `tetris trace check` can
+            // bound this tag's task-id universe (3·bw·nf·nw).
+            trace::instant(
+                "pipeline",
+                "window",
+                &[
+                    ("b0", b0.into()),
+                    ("bw", bw.into()),
+                    ("nf", nf.into()),
+                    ("nw", nw.into()),
+                    ("sched", sched_tag.into()),
+                ],
+            );
             // Debug-build sink for the tasks' observed region traffic.
             let collector = Collector::shared();
             let nslots = bw * nf * nw;
@@ -476,6 +504,17 @@ impl Scheduler {
                         TaskKind::Assemble => g.add_with_access(
                             move || {
                                 let _scope = TaskScope::enter(collector_r, tid);
+                                let _span = trace::span(
+                                    "pipeline",
+                                    "assemble",
+                                    &[
+                                        ("task", tid.into()),
+                                        ("block", b.into()),
+                                        ("field", f.into()),
+                                        ("worker", w.into()),
+                                        ("sched", sched_tag.into()),
+                                    ],
+                                );
                                 if aborted_r.load(Ordering::Acquire) {
                                     return;
                                 }
@@ -499,6 +538,17 @@ impl Scheduler {
                         TaskKind::Compute => g.add_with_access(
                             move || {
                                 let _scope = TaskScope::enter(collector_r, tid);
+                                let _span = trace::span(
+                                    "pipeline",
+                                    "compute",
+                                    &[
+                                        ("task", tid.into()),
+                                        ("block", b.into()),
+                                        ("field", f.into()),
+                                        ("worker", w.into()),
+                                        ("sched", sched_tag.into()),
+                                    ],
+                                );
                                 // None = assembly skipped by an abort
                                 let Some(input) = inputs_r[idx].lock().unwrap().take() else {
                                     return;
@@ -536,6 +586,17 @@ impl Scheduler {
                         TaskKind::Writeback => g.add_with_access(
                             move || {
                                 let _scope = TaskScope::enter(collector_r, tid);
+                                let _span = trace::span(
+                                    "pipeline",
+                                    "writeback",
+                                    &[
+                                        ("task", tid.into()),
+                                        ("block", b.into()),
+                                        ("field", f.into()),
+                                        ("worker", w.into()),
+                                        ("sched", sched_tag.into()),
+                                    ],
+                                );
                                 let t = Instant::now();
                                 let taken = outputs_r[idx].lock().unwrap().take();
                                 if let Some(out) = taken {
@@ -998,6 +1059,114 @@ mod tests {
         let core = Field::random(&[8], 20);
         let sched = sched(&s, 4, vec![native("naive")], 8, vec![1], Boundary::Dirichlet(0.0));
         assert!(sched.run(&core, 6).is_err());
+    }
+
+    /// Tentpole acceptance: a pipelined run's drained stage spans carry
+    /// exactly the task ids the analyze [`WindowPlan`] certifies — one
+    /// span per plan id, span name matching the id's stage, block/field/
+    /// worker args matching the plan meta — plus a window-geometry
+    /// instant on the leader track.  Results stay bit-identical under
+    /// tracing.  Assertions are scoped to this run's `sched` tag, read
+    /// off the nonce-marked leader track, so concurrently-running tests
+    /// (which also emit while the global tracer is on) cannot interfere.
+    #[test]
+    fn pipelined_trace_ids_match_window_plan() {
+        use crate::trace::{self, Arg, Phase};
+        let _guard = trace::testutil::lock();
+        let s = spec::get("heat1d").unwrap();
+        let core = Field::random(&[24], 5);
+        let (tb, blocks, nf, nw) = (1usize, 3usize, 1usize, 2usize);
+        let mut sc = sched(
+            &s,
+            tb,
+            vec![native("simd"), native("autovec")],
+            4,
+            vec![3, 3],
+            Boundary::Dirichlet(0.0),
+        );
+        sc.overlap = Overlap::On;
+        trace::enable();
+        let nonce = trace::fresh_tag() << 32;
+        trace::instant("test", "pipe-nonce", &[("nonce", nonce.into())]);
+        let (got, m) = sc.run(&core, blocks * tb).unwrap();
+        trace::disable();
+        let drained = trace::drain();
+        assert!(m.overlap);
+        let want = reference_evolution(&core, &s, blocks * tb, tb, Boundary::Dirichlet(0.0));
+        assert!(got.allclose(&want, 1e-12, 1e-14), "tracing changed results");
+
+        // Our sched tag: the window instant following the nonce on the
+        // leader track (the test thread; nothing else writes there).
+        let mut tag = None;
+        for te in &drained {
+            let Some(pos) = te.events.iter().position(|e| {
+                e.name == "pipe-nonce"
+                    && e.args.iter().any(|(k, v)| *k == "nonce" && *v == Arg::U(nonce))
+            }) else {
+                continue;
+            };
+            for ev in &te.events[pos..] {
+                if ev.cat == "pipeline" && ev.name == "window" {
+                    let f = |k: &str| ev.args.iter().find(|(n, _)| *n == k).map(|(_, v)| v.clone());
+                    assert_eq!(f("b0"), Some(Arg::U(0)));
+                    assert_eq!(f("bw"), Some(Arg::U(blocks as u64)));
+                    assert_eq!(f("nf"), Some(Arg::U(nf as u64)));
+                    assert_eq!(f("nw"), Some(Arg::U(nw as u64)));
+                    match f("sched") {
+                        Some(Arg::U(t)) => tag = Some(t),
+                        other => panic!("window instant without sched tag: {other:?}"),
+                    }
+                }
+            }
+        }
+        let tag = tag.expect("no window instant on the leader track");
+
+        // Rebuild the same plan the scheduler derived and diff the span
+        // set against it, across every worker track.
+        let plan = WindowPlan::build(
+            &[(0, 12), (12, 24)],
+            s.radius * tb,
+            24,
+            Boundary::Dirichlet(0.0),
+            nf,
+            0,
+            blocks,
+        );
+        assert_eq!(plan.meta.len(), 3 * blocks * nf * nw);
+        let stage_name = |k: &TaskKind| match k {
+            TaskKind::Assemble => "assemble",
+            TaskKind::Compute => "compute",
+            TaskKind::Writeback => "writeback",
+        };
+        let mut seen = vec![0usize; plan.meta.len()];
+        for te in &drained {
+            for ev in &te.events {
+                if ev.cat != "pipeline" || ev.phase != Phase::Begin || ev.name == "window" {
+                    continue;
+                }
+                let f = |k: &str| {
+                    ev.args.iter().find(|(n, _)| *n == k).and_then(|(_, v)| match v {
+                        Arg::U(x) => Some(*x),
+                        _ => None,
+                    })
+                };
+                if f("sched") != Some(tag) {
+                    continue;
+                }
+                let task = f("task").expect("stage span without task id") as usize;
+                assert!(task < plan.meta.len(), "task {task} outside the plan universe");
+                let meta = &plan.meta[task];
+                assert_eq!(ev.name, stage_name(&meta.kind), "task {task}");
+                assert_eq!(f("block"), Some(meta.block as u64), "task {task}");
+                assert_eq!(f("field"), Some(meta.field as u64), "task {task}");
+                assert_eq!(f("worker"), Some(meta.worker as u64), "task {task}");
+                seen[task] += 1;
+            }
+        }
+        assert!(
+            seen.iter().all(|&c| c == 1),
+            "trace span multiset != WindowPlan ids: {seen:?}"
+        );
     }
 
     #[test]

@@ -18,11 +18,12 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 use crate::analyze::checker::TaskAccess;
+use crate::trace;
 
 /// A unit of work scheduled on the pool.
 pub type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
@@ -45,6 +46,10 @@ struct Shared<'a> {
     panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
     idle: Mutex<()>,
     wake: Condvar,
+    /// Tracer timestamp (µs) at which each task became runnable — only
+    /// written while tracing is enabled, so `pool` spans can report the
+    /// ready-to-execute queue wait.
+    released_us: Vec<AtomicU64>,
 }
 
 impl<'a> Shared<'a> {
@@ -73,6 +78,18 @@ impl<'a> Shared<'a> {
 
     fn run_task(&self, w: usize, t: usize) {
         let task = self.slots[t].lock().unwrap().take().expect("task scheduled twice");
+        let _span = if trace::enabled() {
+            let released = self.released_us[t].load(Ordering::Relaxed);
+            let wait_us =
+                if released == 0 { 0 } else { trace::now_us().saturating_sub(released) };
+            trace::span(
+                "pool",
+                "task",
+                &[("task", t.into()), ("worker", w.into()), ("wait_us", wait_us.into())],
+            )
+        } else {
+            trace::Span::off()
+        };
         if let Err(p) = catch_unwind(AssertUnwindSafe(task)) {
             // Abort the whole graph; run_dag re-raises on the caller.
             *self.panic.lock().unwrap() = Some(p);
@@ -82,6 +99,9 @@ impl<'a> Shared<'a> {
         }
         for &s in &self.succs[t] {
             if self.pending[s].fetch_sub(1, Ordering::AcqRel) == 1 {
+                if trace::enabled() {
+                    self.released_us[s].store(trace::now_us(), Ordering::Relaxed);
+                }
                 self.queues[w].lock().unwrap().push_back(s);
                 self.wake.notify_all();
             }
@@ -157,7 +177,17 @@ pub fn run_dag<'a>(threads: usize, tasks: Vec<Task<'a>>, deps: &[Vec<usize>]) {
         let mut slots: Vec<Option<Task<'a>>> = tasks.into_iter().map(Some).collect();
         let mut ready: VecDeque<usize> = (0..n).filter(|&i| pending_init[i] == 0).collect();
         while let Some(i) = ready.pop_front() {
+            let _span = if trace::enabled() {
+                trace::span(
+                    "pool",
+                    "task",
+                    &[("task", i.into()), ("worker", 0u64.into()), ("wait_us", 0u64.into())],
+                )
+            } else {
+                trace::Span::off()
+            };
             (slots[i].take().expect("task ran twice"))();
+            drop(_span);
             for &s in &succs[i] {
                 pending_init[s] -= 1;
                 if pending_init[s] == 0 {
@@ -179,7 +209,18 @@ pub fn run_dag<'a>(threads: usize, tasks: Vec<Task<'a>>, deps: &[Vec<usize>]) {
         panic: Mutex::new(None),
         idle: Mutex::new(()),
         wake: Condvar::new(),
+        released_us: (0..n).map(|_| AtomicU64::new(0)).collect(),
     };
+    if trace::enabled() {
+        // Initially-ready tasks became runnable "now": their pool spans
+        // report queue wait from graph start, not from the epoch.
+        let now = trace::now_us();
+        for (i, &p) in pending_init.iter().enumerate() {
+            if p == 0 {
+                shared.released_us[i].store(now, Ordering::Relaxed);
+            }
+        }
+    }
     let sh = &shared;
     std::thread::scope(|scope| {
         for w in 1..nworkers {
@@ -444,6 +485,79 @@ mod tests {
                     assert!(pos("b", j) < pos("c", k), "threads={threads} b{j} c{k}");
                 }
             }
+        }
+    }
+
+    /// With tracing enabled, every task of a DAG run produces exactly
+    /// one balanced `pool`/`task` span carrying task/worker/wait_us
+    /// args, in both the inline and the threaded path.  Concurrent
+    /// tests may emit their own events while the global tracer is on,
+    /// but never into another thread's buffer — so each task body marks
+    /// its track with a unique nonce instant and assertions stay scoped
+    /// to the nonce-marked tracks (after dropping leading `End`s that a
+    /// foreign span from an earlier enabled window can force-record on
+    /// a reused harness thread).
+    #[test]
+    fn run_dag_emits_one_pool_span_per_task() {
+        use crate::trace::{Arg, Phase};
+        let _guard = crate::trace::testutil::lock();
+        for threads in [1usize, 4] {
+            crate::trace::enable();
+            let nonce = crate::trace::fresh_tag() << 32;
+            let n = 9;
+            let tasks: Vec<Task<'_>> = (0..n)
+                .map(|_| {
+                    Box::new(move || {
+                        crate::trace::instant("test", "pool-nonce", &[("nonce", nonce.into())]);
+                    }) as Task<'_>
+                })
+                .collect();
+            let deps: Vec<Vec<usize>> =
+                (0..n).map(|i| if i < 3 { vec![] } else { vec![i - 3] }).collect();
+            run_dag(threads, tasks, &deps);
+            crate::trace::disable();
+            let drained = crate::trace::drain();
+            let marked = |ev: &crate::trace::Event| {
+                ev.name == "pool-nonce"
+                    && ev.args.iter().any(|(k, v)| *k == "nonce" && *v == Arg::U(nonce))
+            };
+            let mut begun: Vec<u64> = Vec::new();
+            let mut ended = 0usize;
+            for te in &drained {
+                if !te.events.iter().any(|e| marked(e)) {
+                    continue;
+                }
+                let start = te
+                    .events
+                    .iter()
+                    .position(|e| e.phase != Phase::End)
+                    .unwrap_or(te.events.len());
+                for ev in &te.events[start..] {
+                    if marked(ev) {
+                        continue;
+                    }
+                    assert_eq!(ev.cat, "pool", "threads={threads}: {ev:?}");
+                    assert_eq!(ev.name, "task");
+                    match ev.phase {
+                        Phase::Begin => {
+                            let arg = |k: &str| {
+                                ev.args.iter().find(|(n, _)| *n == k).map(|(_, v)| v)
+                            };
+                            match arg("task") {
+                                Some(Arg::U(t)) => begun.push(*t),
+                                other => panic!("bad task arg {other:?}"),
+                            }
+                            assert!(matches!(arg("worker"), Some(Arg::U(_))));
+                            assert!(matches!(arg("wait_us"), Some(Arg::U(_))));
+                        }
+                        Phase::End => ended += 1,
+                        Phase::Instant => panic!("unexpected instant {ev:?}"),
+                    }
+                }
+            }
+            begun.sort_unstable();
+            assert_eq!(begun, (0..n as u64).collect::<Vec<_>>(), "threads={threads}");
+            assert_eq!(ended, n, "threads={threads}");
         }
     }
 

@@ -165,7 +165,20 @@ pub fn retune_gated(
         .map(|(&s, &u)| s as f64 * u)
         .fold(0.0, f64::max);
     let gain = (cur - proj) * remaining_blocks as f64;
-    if gain > migration_cost(model, partition, &cand, move_rest_cells) {
+    let cost = migration_cost(model, partition, &cand, move_rest_cells);
+    let migrate = gain > cost;
+    // The §5.2 decision, auditable in a trace: projected idle saving vs
+    // the k·(α+nβ) slab-migration estimate it has to beat.
+    crate::trace::instant(
+        "retune",
+        if migrate { "migrated" } else { "kept" },
+        &[
+            ("gain_s", gain.into()),
+            ("migration_cost_s", cost.into()),
+            ("remaining_blocks", remaining_blocks.into()),
+        ],
+    );
+    if migrate {
         Some(cand)
     } else {
         None

@@ -36,6 +36,11 @@
 //!   Tb, tile), and the persistent plan store behind `--engine auto`
 //!   and `tetris tune`.
 //! * [`model`] — analytical cost models (α+β communication, roofline).
+//! * [`trace`] — cross-layer span tracing + unified metrics registry:
+//!   a process-global tracer (`--trace FILE` / `TETRIS_TRACE`) records
+//!   pool/pipeline/retune/plan/serve spans into per-thread buffers and
+//!   exports Chrome trace-event JSON (`tetris trace check` validates
+//!   it against the analyze model's task ids).
 //! * [`apps`] — thermal-diffusion case study (§6.5), accuracy study.
 //! * [`bench`] — harness that regenerates every paper table/figure.
 
@@ -66,6 +71,7 @@ pub mod plan;
 pub mod runtime;
 pub mod serve;
 pub mod stencil;
+pub mod trace;
 pub mod util;
 
 pub use stencil::{Field, StencilSpec};

@@ -240,7 +240,13 @@ pub fn run_suite_a(addr: &str, cfg: &LoadConfig) -> Result<SuiteReport> {
     for r in per_conn {
         rec.merge(&r?);
     }
-    let rung = Rung { label: format!("conns={conns}"), offered_rate: 0.0, rec, wall };
+    let rung = Rung {
+        label: format!("conns={conns}"),
+        offered_rate: 0.0,
+        rec,
+        wall,
+        metrics: snapshot_metrics(addr),
+    };
     Ok(SuiteReport { name: "suiteA".into(), seed: cfg.seed, rungs: vec![rung] })
 }
 
@@ -304,7 +310,22 @@ fn run_rung_b(addr: &str, cfg: &LoadConfig, rate: f64, rung_idx: usize) -> Resul
         }
     });
     let wall = t0.elapsed();
-    Ok(Rung { label: format!("rate={rate:.1}"), offered_rate: rate, rec, wall })
+    Ok(Rung {
+        label: format!("rate={rate:.1}"),
+        offered_rate: rate,
+        rec,
+        wall,
+        metrics: snapshot_metrics(addr),
+    })
+}
+
+/// One `METRICS` snapshot on a fresh connection, taken right after a
+/// rung settles.  Observational only: a snapshot failure degrades to
+/// `None` (the rung report just omits the `metrics` block), never to a
+/// harness error.
+fn snapshot_metrics(addr: &str) -> Option<crate::util::json::Json> {
+    let mut client = Client::connect(addr).ok()?;
+    client.metrics().ok()
 }
 
 /// Suite B: the stochastic open-loop study.  Without `sweep`, one rung

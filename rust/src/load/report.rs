@@ -29,6 +29,9 @@ pub struct Rung {
     pub offered_rate: f64,
     pub rec: Recorder,
     pub wall: Duration,
+    /// Server-side `METRICS` snapshot taken right after the rung (flat
+    /// `layer.metric -> number`); `None` when the snapshot failed.
+    pub metrics: Option<Json>,
 }
 
 impl Rung {
@@ -59,6 +62,14 @@ impl Rung {
         m.insert("reject_fraction".into(), Json::Num(self.reject_fraction()));
         m.insert("latency_ms".into(), self.rec.latency_json());
         m.insert("retry_after_ms".into(), self.rec.retry_hint_json());
+        // the client's own view of the rung, in the same flat registry
+        // vocabulary as the server-side `metrics` snapshot
+        let mut reg = crate::trace::MetricsRegistry::new();
+        reg.feed_recorder(&self.rec);
+        m.insert("client_metrics".into(), reg.snapshot_json());
+        if let Some(metrics) = &self.metrics {
+            m.insert("metrics".into(), metrics.clone());
+        }
         Json::Obj(m)
     }
 }
@@ -133,6 +144,7 @@ mod tests {
             offered_rate: 100.0,
             rec,
             wall: Duration::from_millis(500),
+            metrics: None,
         }
     }
 
@@ -146,6 +158,10 @@ mod tests {
         assert_eq!(j.at(&["offered"]).as_usize(), Some(10));
         assert_eq!(j.at(&["retry_after_ms", "count"]).as_usize(), Some(2));
         assert!(j.at(&["latency_ms", "total", "p999_ms"]).as_f64().unwrap() > 0.0);
+        // client-side registry snapshot rides along in the same flat vocabulary
+        assert_eq!(j.at(&["client_metrics", "load.completed_total"]).as_usize(), Some(8));
+        assert_eq!(j.at(&["client_metrics", "load.rejected_total"]).as_usize(), Some(2));
+        assert!(j.get("metrics").is_none(), "no server snapshot attached here");
     }
 
     #[test]
@@ -155,7 +171,13 @@ mod tests {
             seed: 42,
             rungs: vec![rung("rate=100", 10, 0), rung("rate=200", 9, 6)],
         };
-        let proc = ProcSummary { samples: 4, rss_max_bytes: 1 << 20, rss_mean_bytes: 1 << 19, cpu_secs: 0.5 };
+        let proc = ProcSummary {
+            samples: 4,
+            rss_max_bytes: 1 << 20,
+            rss_mean_bytes: 1 << 19,
+            cpu_secs: 0.5,
+            ..Default::default()
+        };
         let j = suite.to_json(0.1, 2, Some(&proc));
         let text = j.to_string();
         assert!(!text.contains('\n'));

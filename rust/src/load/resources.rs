@@ -11,7 +11,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
 
@@ -51,11 +51,17 @@ pub fn sample(pid: u32) -> Option<ProcSample> {
 /// Aggregate over a monitoring window.
 #[derive(Clone, Debug, Default)]
 pub struct ProcSummary {
+    /// Actual number of samples taken (NOT elapsed/interval: a slow
+    /// sampler or a skipped deadline shows up as a smaller count).
     pub samples: usize,
     pub rss_max_bytes: u64,
     pub rss_mean_bytes: u64,
     /// CPU seconds burned between the first and last sample.
     pub cpu_secs: f64,
+    /// Configured polling interval (0 when built from raw samples).
+    pub interval_ms: f64,
+    /// Wall time the monitor ran, start to stop.
+    pub elapsed_secs: f64,
 }
 
 impl ProcSummary {
@@ -71,6 +77,8 @@ impl ProcSummary {
             rss_max_bytes: rss_max,
             rss_mean_bytes: rss_mean,
             cpu_secs: ticks as f64 / TICKS_PER_SEC,
+            interval_ms: 0.0,
+            elapsed_secs: 0.0,
         }
     }
 
@@ -80,6 +88,8 @@ impl ProcSummary {
         m.insert("rss_max_bytes".into(), Json::Num(self.rss_max_bytes as f64));
         m.insert("rss_mean_bytes".into(), Json::Num(self.rss_mean_bytes as f64));
         m.insert("cpu_secs".into(), Json::Num(self.cpu_secs));
+        m.insert("interval_ms".into(), Json::Num(self.interval_ms));
+        m.insert("elapsed_secs".into(), Json::Num(self.elapsed_secs));
         Json::Obj(m)
     }
 }
@@ -89,29 +99,61 @@ pub struct ProcMonitor {
     stop: Arc<AtomicBool>,
     samples: Arc<Mutex<Vec<ProcSample>>>,
     handle: thread::JoinHandle<()>,
+    every: Duration,
+    started: Instant,
 }
 
 impl ProcMonitor {
     pub fn start(pid: u32, every: Duration) -> ProcMonitor {
+        Self::start_with(every, move || sample(pid))
+    }
+
+    /// Same loop with an injectable sampler, so tests can substitute a
+    /// deliberately slow fake and prove the schedule doesn't stretch.
+    pub fn start_with(
+        every: Duration,
+        mut sampler: impl FnMut() -> Option<ProcSample> + Send + 'static,
+    ) -> ProcMonitor {
+        let every = every.max(Duration::from_millis(1));
         let stop = Arc::new(AtomicBool::new(false));
         let samples = Arc::new(Mutex::new(Vec::new()));
         let (stop2, samples2) = (stop.clone(), samples.clone());
+        let started = Instant::now();
         let handle = thread::spawn(move || {
+            // Pace against absolute deadlines (start + k*every), like
+            // the load generator's arrival schedule: a sampler that
+            // takes a sizable fraction of the interval no longer
+            // stretches the period (the old sleep-after-work loop ran
+            // at `work + every`, under-counting the busiest windows —
+            // exactly when samples matter most).  A deadline the
+            // sampler overran entirely is skipped, not burst-replayed.
+            let start = Instant::now();
+            let mut k: u32 = 0;
             while !stop2.load(Ordering::Relaxed) {
-                if let Some(s) = sample(pid) {
+                if let Some(s) = sampler() {
                     samples2.lock().unwrap().push(s);
                 }
+                let now = Instant::now();
+                while start + every * (k + 1) <= now {
+                    k += 1; // missed deadline: skip it
+                }
+                k += 1;
+                let next = start + every * k;
                 // short ticks so stop() returns promptly even for long
                 // polling intervals
-                let mut slept = Duration::ZERO;
-                while slept < every && !stop2.load(Ordering::Relaxed) {
-                    let tick = Duration::from_millis(25).min(every - slept);
-                    thread::sleep(tick);
-                    slept += tick;
+                loop {
+                    if stop2.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let now = Instant::now();
+                    if now >= next {
+                        break;
+                    }
+                    thread::sleep((next - now).min(Duration::from_millis(25)));
                 }
             }
         });
-        ProcMonitor { stop, samples, handle }
+        ProcMonitor { stop, samples, handle, every, started }
     }
 
     /// Stop polling and summarize what was seen.
@@ -119,7 +161,10 @@ impl ProcMonitor {
         self.stop.store(true, Ordering::Relaxed);
         let _ = self.handle.join();
         let samples = self.samples.lock().unwrap();
-        ProcSummary::from_samples(&samples)
+        let mut summary = ProcSummary::from_samples(&samples);
+        summary.interval_ms = self.every.as_secs_f64() * 1e3;
+        summary.elapsed_secs = self.started.elapsed().as_secs_f64();
+        summary
     }
 }
 
@@ -170,9 +215,31 @@ mod tests {
         let mon = ProcMonitor::start(std::process::id(), Duration::from_millis(10));
         thread::sleep(Duration::from_millis(80));
         let summary = mon.stop();
+        assert!((summary.interval_ms - 10.0).abs() < 1e-9);
+        assert!(summary.elapsed_secs >= 0.08, "{summary:?}");
         if cfg!(target_os = "linux") {
             assert!(summary.samples >= 2, "{summary:?}");
             assert!(summary.rss_max_bytes > 0);
         }
+    }
+
+    /// Regression for the drift bug: the old loop slept `every` AFTER
+    /// each sample, so a sampler taking w ran at period `every + w`.
+    /// With an 8ms fake sampler at a 10ms interval over ~500ms, the
+    /// drifting loop lands ~28 samples (18ms period); deadline pacing
+    /// lands ~50.  The threshold sits between with margin on both sides.
+    #[test]
+    fn slow_sampler_does_not_stretch_the_period() {
+        let mon = ProcMonitor::start_with(Duration::from_millis(10), || {
+            thread::sleep(Duration::from_millis(8));
+            Some(ProcSample { rss_bytes: 1, cpu_ticks: 0 })
+        });
+        thread::sleep(Duration::from_millis(500));
+        let summary = mon.stop();
+        assert!(
+            summary.samples >= 35,
+            "deadline pacing must absorb sampler latency: {summary:?}"
+        );
+        assert!(summary.elapsed_secs >= 0.5, "{summary:?}");
     }
 }

@@ -30,6 +30,13 @@
 //!   bench    breakdown|sota|scaling|comm|mxu|boundary|serve|plan|overlap
 //!            [--scale F] [--threads T] [--json FILE]   single-line JSON for CI
 //!   bench    check FILE...        assert structural invariants over BENCH_*.json
+//!   trace    check FILE...        validate Chrome trace-event JSON from --trace
+//!
+//! `run`, `hetero`, `serve` and `bench` all accept `--trace FILE` (or
+//! `$TETRIS_TRACE`) to record a cross-layer span trace and write it as
+//! Chrome trace-event JSON (loadable in Perfetto / chrome://tracing)
+//! when the command finishes; `run`/`hetero` also accept `--metrics`
+//! to print the flat metrics-registry snapshot of the run.
 
 #![allow(clippy::uninlined_format_args)]
 
@@ -108,6 +115,7 @@ fn main() -> Result<()> {
         "thermal" => cmd_thermal(&args),
         "accuracy" => cmd_accuracy(&args),
         "bench" => cmd_bench(&args),
+        "trace" => cmd_trace(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -171,6 +179,13 @@ fn print_help() {
          bench  breakdown|sota|scaling|comm|mxu|boundary|serve|plan|overlap\n\
                                        [--scale F --threads T --json FILE]\n\
          bench  check FILE...          fail on broken BENCH_*.json invariants\n\
+         trace  check FILE...          validate Chrome trace-event JSON (balanced\n\
+                                       spans, monotone timestamps, plan-model ids)\n\
+         \n\
+         observability: run/hetero/serve/bench accept --trace FILE (or $TETRIS_TRACE)\n\
+                        to record a cross-layer span trace as Chrome trace-event JSON\n\
+                        (open in Perfetto); run/hetero accept --metrics to print the\n\
+                        flat metrics snapshot; serve answers a METRICS verb\n\
          \n\
          boundaries (C): dirichlet[:V] (fixed-value ghosts), neumann (zero-flux),\n\
                          periodic (torus wrap); --adapt K retunes the partition\n\
@@ -396,6 +411,54 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Arm the process tracer when `--trace FILE` (or `$TETRIS_TRACE`)
+/// asks for it; returns the output path to hand to [`trace_finish`].
+/// A bare `--trace` with no operand falls back to `TRACE.json`.
+fn trace_setup(args: &Args) -> Option<String> {
+    let path = args
+        .flags
+        .get("trace")
+        .cloned()
+        .or_else(|| std::env::var("TETRIS_TRACE").ok())?;
+    let path = if path.is_empty() || path == "true" { "TRACE.json".to_string() } else { path };
+    tetris::trace::enable();
+    Some(path)
+}
+
+/// Stop the tracer and write everything recorded as Chrome trace-event
+/// JSON; a no-op when [`trace_setup`] didn't arm it.
+fn trace_finish(path: Option<String>) -> Result<()> {
+    let Some(path) = path else { return Ok(()) };
+    tetris::trace::disable();
+    let events = tetris::trace::write_chrome_file(&path)?;
+    let dropped = tetris::trace::dropped();
+    println!(
+        "trace: wrote {events} events to {path}{} (open in Perfetto or chrome://tracing)",
+        if dropped > 0 { format!(", {dropped} dropped at the ring-buffer cap") } else { String::new() }
+    );
+    Ok(())
+}
+
+/// `tetris trace check FILE...` — structural validation of recorded
+/// Chrome trace-event JSON (balanced spans per thread, monotone
+/// timestamps, pipeline task ids within the analyze-model universe).
+fn cmd_trace(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("check") => tetris::trace::check::check_files(&args.positional[1..]),
+        other => bail!("unknown trace subcommand {other:?} (expected `trace check FILE...`)"),
+    }
+}
+
+/// Print the flat metrics-registry snapshot of one scheduler run when
+/// `--metrics` asks for it.
+fn print_run_metrics(args: &Args, metrics: &tetris::coordinator::RunMetrics) {
+    if args.flags.contains_key("metrics") {
+        let mut reg = tetris::trace::MetricsRegistry::new();
+        reg.feed_run_metrics(metrics);
+        println!("{}", reg.snapshot_json());
+    }
+}
+
 /// Parse the shared `--overlap on|off|auto` flag (auto by default);
 /// `explicit` reports whether the user passed it (a stored plan's
 /// searched preference only applies when they did not).
@@ -457,6 +520,7 @@ fn resolve_auto_flag(
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    let trace_path = trace_setup(args);
     let bench = args.str("bench", "heat2d");
     let mut engine = args.str("engine", "tetris-cpu");
     let mut threads = args.get("threads", 1usize);
@@ -512,7 +576,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
         println!("{}", metrics.report(&sched.comm_model));
         println!("final field mean={:.6} l2={:.3}", out.mean(), out.l2());
-        return Ok(());
+        print_run_metrics(args, &metrics);
+        return trace_finish(trace_path);
     }
     let eng = build_engine()?;
     let (g, d) = harness::time_engine(eng.as_ref(), &s, &core, steps, tb);
@@ -521,10 +586,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         g,
         tetris::util::timer::fmt_duration(d)
     );
-    Ok(())
+    trace_finish(trace_path)
 }
 
 fn cmd_hetero(args: &Args) -> Result<()> {
+    let trace_path = trace_setup(args);
     let bench = args.str("bench", "heat2d");
     let mut engine = args.str("engine", "tetris-cpu");
     let mut threads = args.get("threads", 1usize);
@@ -558,7 +624,8 @@ fn cmd_hetero(args: &Args) -> Result<()> {
     let (out, metrics) = sched.run(&core, steps)?;
     println!("{}", metrics.report(&sched.comm_model));
     println!("final field mean={:.6} l2={:.3}", out.mean(), out.l2());
-    Ok(())
+    print_run_metrics(args, &metrics);
+    trace_finish(trace_path)
 }
 
 /// `tetris tune`: run (or refresh) the Pattern Mapper search for a
@@ -621,6 +688,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
 /// `SHUTDOWN` line (or handle signal) drains it.
 fn cmd_serve(args: &Args) -> Result<()> {
     use tetris::serve::{default_worker_factory, ServeConfig, Server};
+    let trace_path = trace_setup(args);
     let threads = args.get("threads", 2usize);
     let (overlap, overlap_explicit) = overlap_flag(args)?;
     // Planning defaults ON for the real server (that's the point of a
@@ -657,10 +725,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "tetris serve: listening on {} (dispatchers={}, queue={} jobs, batch<={})",
         handle.addr, cfg.dispatchers, cfg.queue_jobs, cfg.max_batch
     );
-    println!("protocol: one JSON job per line; STATS; SHUTDOWN (see README \"Serving\")");
+    println!("protocol: one JSON job per line; STATS; METRICS; SHUTDOWN (see README \"Serving\")");
     handle.join();
     println!("tetris serve: drained and stopped");
-    Ok(())
+    // the trace flushes at drain, so a whole serve lifetime lands in one file
+    trace_finish(trace_path)
 }
 
 /// `tetris submit`: drive a pipelined job stream (or STATS/SHUTDOWN) at
@@ -959,6 +1028,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         // invariant gate over already-emitted artifacts; no timing runs
         return tetris::bench::check::check_files(&args.positional[1..]);
     }
+    let trace_path = trace_setup(args);
     let scale = args.get("scale", 0.25f64);
     // scaling sweeps up to at least 4 threads; record what actually ran.
     let threads = match which {
@@ -986,7 +1056,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         std::fs::write(path, format!("{summary}\n"))?;
         println!("wrote {path}");
     }
-    Ok(())
+    trace_finish(trace_path)
 }
 
 /// Smoke-usable single-worker scheduler for quick CLI experiments.

@@ -190,7 +190,23 @@ pub fn search_with(
         if tried > 0 && Instant::now() >= deadline {
             break;
         }
-        match trial(&cand, &s, &proxy, TRIAL_STEPS) {
+        let span = if crate::trace::enabled() {
+            // engine names are dynamic — only marshal when recording
+            crate::trace::span(
+                "plan",
+                "trial",
+                &[
+                    ("engine", cand.engine.as_str().into()),
+                    ("threads", cand.threads.into()),
+                    ("tb", cand.tb.into()),
+                ],
+            )
+        } else {
+            crate::trace::Span::off()
+        };
+        let outcome = trial(&cand, &s, &proxy, TRIAL_STEPS);
+        drop(span);
+        match outcome {
             Ok(secs) => {
                 tried += 1;
                 let gsps = (cells * TRIAL_STEPS) as f64 / secs.max(1e-9) / 1e9;

@@ -307,7 +307,26 @@ impl Executor {
     /// Errors never escape: they become structured per-job replies.
     pub fn run_jobs(&self, batch: Vec<QueuedJob>) {
         let released: usize = batch.iter().map(|j| j.cost_bytes).sum();
+        let span = if crate::trace::enabled() {
+            crate::trace::instant(
+                "serve",
+                "batch",
+                &[
+                    ("jobs", batch.len().into()),
+                    ("job", batch[0].spec.id.as_str().into()),
+                    ("bytes", released.into()),
+                ],
+            );
+            crate::trace::span(
+                "serve",
+                "run",
+                &[("job", batch[0].spec.id.as_str().into()), ("jobs", batch.len().into())],
+            )
+        } else {
+            crate::trace::Span::off()
+        };
         let outcome = self.try_run(&batch);
+        drop(span);
         match outcome {
             Ok(results) => {
                 let mut stats = self.stats.lock().unwrap();
@@ -318,6 +337,15 @@ impl Executor {
                 }
                 for (job, result) in batch.iter().zip(results) {
                     stats.record_latency(job.admitted_at.elapsed());
+                    // instant BEFORE the send: once a client observes the
+                    // reply line, the trace event is already recorded
+                    if crate::trace::enabled() {
+                        crate::trace::instant(
+                            "serve",
+                            "reply",
+                            &[("job", job.spec.id.as_str().into()), ("ok", 1u64.into())],
+                        );
+                    }
                     let _ = job.reply.send(result.to_json().to_string());
                 }
             }
@@ -325,6 +353,13 @@ impl Executor {
                 self.stats.lock().unwrap().errors += batch.len() as u64;
                 for job in &batch {
                     let reply = JobResult::failure(&job.spec.id, format!("{e}"));
+                    if crate::trace::enabled() {
+                        crate::trace::instant(
+                            "serve",
+                            "reply",
+                            &[("job", job.spec.id.as_str().into()), ("ok", 0u64.into())],
+                        );
+                    }
                     let _ = job.reply.send(reply.to_json().to_string());
                 }
             }

@@ -108,6 +108,14 @@ impl Client {
         Json::parse(line.trim()).context("stats parse")
     }
 
+    /// Fetch the server's `METRICS` line: a flat map of stable metric
+    /// names to numbers (see `trace::metrics` for the naming policy).
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.send_line("METRICS")?;
+        let line = self.recv_line()?;
+        Json::parse(line.trim()).context("metrics parse")
+    }
+
     /// Ask the server to drain and exit; returns the ack.
     pub fn shutdown(&mut self) -> Result<Json> {
         self.send_line("SHUTDOWN")?;

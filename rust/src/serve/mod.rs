@@ -18,7 +18,7 @@
 //!   engine/Tb), writes back observed plans from live runs, and evicts
 //!   cold sessions by TTL/LRU;
 //! * [`server`] — `std::net` TCP line protocol (JSON job in, JSON
-//!   result out, `STATS`, graceful `SHUTDOWN`);
+//!   result out, `STATS`, `METRICS`, graceful `SHUTDOWN`);
 //! * [`client`] — blocking pipelined client (`tetris submit`);
 //! * [`stats`] — counters + log₂ latency histogram behind `STATS`.
 

@@ -84,6 +84,27 @@ impl AdmissionQueue {
     /// Admit or reject a job.  The byte cost (input + output + scratch)
     /// stays accounted until [`AdmissionQueue::release`].
     pub fn push(&self, spec: JobSpec, input: Field, reply: Sender<String>) -> Admission {
+        // only clone the id for the trace when recording is on
+        let trace_id = crate::trace::enabled().then(|| spec.id.clone());
+        let adm = self.push_inner(spec, input, reply);
+        if let Some(id) = trace_id {
+            match &adm {
+                Admission::Admitted(seq) => crate::trace::instant(
+                    "serve",
+                    "admit",
+                    &[("job", id.as_str().into()), ("seq", (*seq).into())],
+                ),
+                Admission::Rejected { retry_after_ms, .. } => crate::trace::instant(
+                    "serve",
+                    "reject",
+                    &[("job", id.as_str().into()), ("retry_after_ms", (*retry_after_ms).into())],
+                ),
+            }
+        }
+        adm
+    }
+
+    fn push_inner(&self, spec: JobSpec, input: Field, reply: Sender<String>) -> Admission {
         let cost_bytes = 3 * input.len() * 8;
         let mut g = self.inner.lock().unwrap();
         if g.closed {
@@ -175,6 +196,19 @@ impl AdmissionQueue {
         for job in &mut batch {
             job.start_seq = g.next_start;
             g.next_start += 1;
+        }
+        drop(g);
+        if crate::trace::enabled() {
+            for job in &batch {
+                crate::trace::instant(
+                    "serve",
+                    "dequeue",
+                    &[
+                        ("job", job.spec.id.as_str().into()),
+                        ("queue_us", (job.admitted_at.elapsed().as_micros() as u64).into()),
+                    ],
+                );
+            }
         }
         Some(batch)
     }

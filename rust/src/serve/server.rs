@@ -5,6 +5,10 @@
 //!
 //! * `STATS` — one JSON line: queue depths, per-session shares and
 //!   cache counters, latency percentiles;
+//! * `METRICS` — one flat JSON line: the unified
+//!   [`crate::trace::MetricsRegistry`] snapshot (monotone `serve.*_total`
+//!   counters, queue gauges, flattened latency percentiles) under the
+//!   stable naming policy `tetris bench check` gates on;
 //! * `SHUTDOWN` — acks, stops admission, lets the dispatchers drain
 //!   every queued job, then closes the listener.
 //!
@@ -20,6 +24,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::trace::MetricsRegistry;
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
@@ -343,6 +348,9 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx) -> Result<()> {
             "STATS" => {
                 let _ = tx.send(stats_line(ctx).to_string());
             }
+            "METRICS" => {
+                let _ = tx.send(metrics_line(ctx).to_string());
+            }
             "SHUTDOWN" => {
                 let mut ack = BTreeMap::new();
                 ack.insert("ok".to_string(), Json::Bool(true));
@@ -367,6 +375,13 @@ fn handle_job_line(line: &str, ctx: &Ctx, tx: mpsc::Sender<String>) {
             return;
         }
     };
+    if crate::trace::enabled() {
+        crate::trace::instant(
+            "serve",
+            "accept",
+            &[("job", spec.id.as_str().into()), ("bench", spec.bench.as_str().into())],
+        );
+    }
     let default_shape = match crate::stencil::spec::get(&spec.bench) {
         Some(_) => crate::bench::scaled_problem(&spec.bench, ctx.scale).0,
         None => {
@@ -389,6 +404,13 @@ fn handle_job_line(line: &str, ctx: &Ctx, tx: mpsc::Sender<String>) {
         Some(b) if b <= ctx.queue.max_bytes => {}
         _ => {
             ctx.stats.lock().unwrap().rejected += 1;
+            if crate::trace::enabled() {
+                crate::trace::instant(
+                    "serve",
+                    "reject",
+                    &[("job", spec.id.as_str().into()), ("retry_after_ms", 0u64.into())],
+                );
+            }
             let reply = JobResult::reject(
                 &spec.id,
                 format!(
@@ -422,19 +444,30 @@ fn handle_job_line(line: &str, ctx: &Ctx, tx: mpsc::Sender<String>) {
     }
 }
 
+/// One STATS reply.  Snapshot-then-format: each shared lock (queue
+/// internals, the session registry, the stats mutex) is held only long
+/// enough to clone the state out, and all JSON formatting happens after
+/// release — so a STATS request can never stall the dispatchers'
+/// per-job stats updates behind string building.
 fn stats_line(ctx: &Ctx) -> Json {
+    let depths = ctx.queue.depths();
+    let inflight_bytes = ctx.queue.inflight_bytes();
+    let closed = ctx.queue.is_closed();
+    let metas = ctx.exec.session_meta();
+    let stats = ctx.stats.lock().unwrap().clone();
+    // every lock released — format below
     let mut m = BTreeMap::new();
     m.insert("ok".to_string(), Json::Bool(true));
     let mut q = BTreeMap::new();
     q.insert(
         "depths".to_string(),
-        Json::Arr(ctx.queue.depths().into_iter().map(|d| Json::Num(d as f64)).collect()),
+        Json::Arr(depths.into_iter().map(|d| Json::Num(d as f64)).collect()),
     );
-    q.insert("inflight_bytes".to_string(), Json::Num(ctx.queue.inflight_bytes() as f64));
-    q.insert("closed".to_string(), Json::Bool(ctx.queue.is_closed()));
+    q.insert("inflight_bytes".to_string(), Json::Num(inflight_bytes as f64));
+    q.insert("closed".to_string(), Json::Bool(closed));
     m.insert("queue".to_string(), Json::Obj(q));
     let mut sessions = BTreeMap::new();
-    for (key, meta) in ctx.exec.session_meta() {
+    for (key, meta) in metas {
         let mut s = BTreeMap::new();
         s.insert(
             "shares".to_string(),
@@ -450,6 +483,26 @@ fn stats_line(ctx: &Ctx) -> Json {
         sessions.insert(key, Json::Obj(s));
     }
     m.insert("sessions".to_string(), Json::Obj(sessions));
-    m.insert("stats".to_string(), ctx.stats.lock().unwrap().to_json());
+    m.insert("stats".to_string(), stats.to_json());
     Json::Obj(m)
+}
+
+/// One METRICS reply: the flat [`MetricsRegistry`] snapshot.  The
+/// registry is built fresh per request from the *cumulative* stats plus
+/// point-in-time queue/session gauges (same snapshot-then-format
+/// discipline as [`stats_line`]), so successive snapshots from one
+/// server have monotone `_total` counters by construction.
+fn metrics_line(ctx: &Ctx) -> Json {
+    let stats = ctx.stats.lock().unwrap().clone();
+    let queued = ctx.queue.queued();
+    let inflight_bytes = ctx.queue.inflight_bytes();
+    let sessions = ctx.exec.session_meta().len();
+    // every lock released — format below
+    let mut reg = MetricsRegistry::new();
+    reg.feed_serve_stats(&stats);
+    reg.gauge_set("serve.queue_depth", queued as f64);
+    reg.gauge_set("serve.queue_capacity", ctx.queue.max_jobs as f64);
+    reg.gauge_set("serve.inflight_bytes", inflight_bytes as f64);
+    reg.gauge_set("serve.sessions", sessions as f64);
+    reg.snapshot_json()
 }

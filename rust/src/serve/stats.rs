@@ -104,7 +104,12 @@ impl LatencyHistogram {
 }
 
 /// Counters + end-to-end (admission -> reply) latency histogram.
-#[derive(Debug, Default)]
+///
+/// `Clone` is load-bearing: the `STATS`/`METRICS` verbs snapshot the
+/// shared `Mutex<ServeStats>` with one clone and format the reply
+/// *after* releasing the lock, so a slow stats consumer can never stall
+/// the dispatcher's completion path.
+#[derive(Clone, Debug, Default)]
 pub struct ServeStats {
     pub submitted: u64,
     pub completed: u64,
@@ -139,6 +144,12 @@ impl ServeStats {
 
     pub fn latency_count(&self) -> u64 {
         self.hist.count()
+    }
+
+    /// The end-to-end latency histogram (read-only view for the
+    /// [`crate::trace::MetricsRegistry`] feed).
+    pub fn histogram(&self) -> &LatencyHistogram {
+        &self.hist
     }
 
     pub fn to_json(&self) -> Json {

@@ -1,0 +1,297 @@
+//! Well-formedness validation of exported Chrome traces — `tetris
+//! trace check FILE...` in CI fails when an instrumented run emitted a
+//! malformed or model-inconsistent trace.
+//!
+//! Checked invariants:
+//! * the document is a Chrome trace-event object with a `traceEvents`
+//!   array of `ph`/`ts`/`tid` events;
+//! * per `(pid, tid)` track, timestamps are monotone non-decreasing in
+//!   array order;
+//! * per track, `B`/`E` duration events balance as a LIFO stack with
+//!   matching `name` and `cat`, and no span is left open at the end;
+//! * pipeline-stage spans are consistent with the analyze model: every
+//!   `pipeline` span's `task` arg must be a valid
+//!   [`crate::analyze::WindowPlan`] id for a `window` instant with the
+//!   same `sched` tag — `task < 3·bw·nf·nw` — and the span's name must
+//!   match the id's stage under the fixed `3·chain + stage` layout
+//!   (stage 0/1/2 = assemble/compute/writeback), so recorded ids are
+//!   bit-equal to the ids the static race checker certified.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+/// Stage names in WindowPlan id order (`id % 3` indexes this).
+const STAGES: [&str; 3] = ["assemble", "compute", "writeback"];
+
+/// All violations in one parsed trace; empty means it passed.
+pub fn check_json(name: &str, j: &Json) -> Vec<String> {
+    let mut out = Vec::new();
+    let Some(events) = j.at(&["traceEvents"]).as_arr() else {
+        out.push(format!("{name}: no traceEvents array"));
+        return out;
+    };
+    if events.is_empty() {
+        out.push(format!("{name}: traceEvents is empty"));
+        return out;
+    }
+
+    // group per (pid, tid) track, preserving array order
+    let mut tracks: BTreeMap<(u64, u64), Vec<&Json>> = BTreeMap::new();
+    for (i, e) in events.iter().enumerate() {
+        if e.at(&["ph"]).as_str().is_none() {
+            out.push(format!("{name}: traceEvents[{i}] has no ph"));
+            continue;
+        }
+        let pid = e.at(&["pid"]).as_u64().unwrap_or(0);
+        let tid = e.at(&["tid"]).as_u64().unwrap_or(0);
+        tracks.entry((pid, tid)).or_default().push(e);
+    }
+
+    // per-sched window geometry: sched tag -> max valid task-id bound
+    let mut universe: BTreeMap<u64, u64> = BTreeMap::new();
+    for e in events {
+        if e.at(&["cat"]).as_str() == Some("pipeline") && e.at(&["name"]).as_str() == Some("window")
+        {
+            let bw = e.at(&["args", "bw"]).as_u64().unwrap_or(0);
+            let nf = e.at(&["args", "nf"]).as_u64().unwrap_or(0);
+            let nw = e.at(&["args", "nw"]).as_u64().unwrap_or(0);
+            let sched = e.at(&["args", "sched"]).as_u64().unwrap_or(0);
+            let bound = universe.entry(sched).or_insert(0);
+            *bound = (*bound).max(3 * bw * nf * nw);
+        }
+    }
+
+    for ((pid, tid), track) in &tracks {
+        let mut last_ts = f64::NEG_INFINITY;
+        let mut stack: Vec<(String, String)> = Vec::new();
+        for e in track {
+            let ts = e.at(&["ts"]).as_f64().unwrap_or(f64::NEG_INFINITY);
+            if ts < last_ts {
+                out.push(format!(
+                    "{name}: pid {pid} tid {tid}: timestamps regress ({ts} after {last_ts})"
+                ));
+            }
+            last_ts = last_ts.max(ts);
+            let ename = e.at(&["name"]).as_str().unwrap_or("").to_string();
+            let cat = e.at(&["cat"]).as_str().unwrap_or("").to_string();
+            match e.at(&["ph"]).as_str().unwrap_or("") {
+                "B" => stack.push((cat, ename)),
+                "E" => match stack.pop() {
+                    None => out.push(format!(
+                        "{name}: pid {pid} tid {tid}: end of {cat}/{ename:?} with no open span"
+                    )),
+                    Some((bcat, bname)) => {
+                        if bname != ename || bcat != cat {
+                            out.push(format!(
+                                "{name}: pid {pid} tid {tid}: span mismatch: \
+                                 {bcat}/{bname:?} closed by {cat}/{ename:?}"
+                            ));
+                        }
+                    }
+                },
+                // instants, metadata, counters, flow events: no pairing
+                _ => {}
+            }
+        }
+        for (cat, sname) in &stack {
+            out.push(format!("{name}: pid {pid} tid {tid}: unclosed span {cat}/{sname:?}"));
+        }
+    }
+
+    // pipeline task-id ⊆ analyze-model id universe, stage-consistent
+    for (i, e) in events.iter().enumerate() {
+        if e.at(&["cat"]).as_str() != Some("pipeline") || e.at(&["ph"]).as_str() != Some("B") {
+            continue;
+        }
+        let ename = e.at(&["name"]).as_str().unwrap_or("");
+        if !STAGES.contains(&ename) {
+            continue;
+        }
+        let Some(task) = e.at(&["args", "task"]).as_u64() else {
+            out.push(format!("{name}: traceEvents[{i}]: pipeline {ename} span without task id"));
+            continue;
+        };
+        let sched = e.at(&["args", "sched"]).as_u64().unwrap_or(0);
+        match universe.get(&sched) {
+            None => out.push(format!(
+                "{name}: traceEvents[{i}]: pipeline {ename} task {task} (sched {sched}) \
+                 has no window geometry event"
+            )),
+            Some(&bound) => {
+                if task >= bound {
+                    out.push(format!(
+                        "{name}: traceEvents[{i}]: task {task} outside the analyze model \
+                         (window has {bound} tasks)"
+                    ));
+                }
+            }
+        }
+        let stage = STAGES[(task % 3) as usize];
+        if stage != ename {
+            out.push(format!(
+                "{name}: traceEvents[{i}]: task {task} is a {stage} id but span is {ename:?}"
+            ));
+        }
+    }
+    out
+}
+
+/// Driver for `tetris trace check FILE...`: parse each trace, print
+/// per-file verdicts, error out if anything is violated.
+pub fn check_files(paths: &[String]) -> Result<()> {
+    crate::ensure!(!paths.is_empty(), "trace check needs at least one trace-file path");
+    let mut violations = Vec::new();
+    for path in paths {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let parsed = Json::parse(text.trim()).with_context(|| format!("parsing {path}"))?;
+        let v = check_json(path, &parsed);
+        let n = parsed.at(&["traceEvents"]).as_arr().map_or(0, |a| a.len());
+        if v.is_empty() {
+            println!("trace check: {path}: OK ({n} events)");
+        } else {
+            for msg in &v {
+                println!("trace check: VIOLATION: {msg}");
+            }
+            violations.extend(v);
+        }
+    }
+    crate::ensure!(
+        violations.is_empty(),
+        "{} trace violation(s) across {} file(s)",
+        violations.len(),
+        paths.len()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    fn ev(ph: &str, ts: f64, tid: u64, cat: &str, name: &str, extra: &str) -> String {
+        let comma = if extra.is_empty() { "" } else { "," };
+        format!(
+            r#"{{"ph":"{ph}","ts":{ts},"pid":1,"tid":{tid},"cat":"{cat}","name":"{name}"{comma}{extra}}}"#
+        )
+    }
+
+    fn doc(events: &[String]) -> Json {
+        parse(&format!(r#"{{"traceEvents":[{}]}}"#, events.join(",")))
+    }
+
+    #[test]
+    fn balanced_trace_passes() {
+        let d = doc(&[
+            ev("B", 0.0, 0, "pool", "task", r#""args":{"task":0,"worker":1}"#),
+            ev("B", 1.0, 0, "pool", "inner", ""),
+            ev("E", 2.0, 0, "pool", "inner", ""),
+            ev("i", 2.5, 0, "retune", "kept", ""),
+            ev("E", 3.0, 0, "pool", "task", ""),
+        ]);
+        assert!(check_json("t", &d).is_empty());
+    }
+
+    #[test]
+    fn missing_or_empty_trace_events_fail() {
+        assert_eq!(check_json("t", &parse("{}")).len(), 1);
+        assert_eq!(check_json("t", &parse(r#"{"traceEvents":[]}"#)).len(), 1);
+    }
+
+    #[test]
+    fn unbalanced_and_mismatched_spans_fail() {
+        let unclosed = doc(&[ev("B", 0.0, 0, "pool", "task", "")]);
+        let v = check_json("t", &unclosed);
+        assert!(v.iter().any(|m| m.contains("unclosed span")), "{v:?}");
+
+        let orphan = doc(&[ev("E", 0.0, 0, "pool", "task", "")]);
+        let v = check_json("t", &orphan);
+        assert!(v.iter().any(|m| m.contains("no open span")), "{v:?}");
+
+        let crossed = doc(&[
+            ev("B", 0.0, 0, "pool", "a", ""),
+            ev("E", 1.0, 0, "pool", "b", ""),
+        ]);
+        let v = check_json("t", &crossed);
+        assert!(v.iter().any(|m| m.contains("span mismatch")), "{v:?}");
+    }
+
+    #[test]
+    fn timestamp_regressions_fail_per_track_only() {
+        let bad = doc(&[
+            ev("i", 5.0, 0, "serve", "admit", ""),
+            ev("i", 1.0, 0, "serve", "admit", ""),
+        ]);
+        let v = check_json("t", &bad);
+        assert!(v.iter().any(|m| m.contains("timestamps regress")), "{v:?}");
+        // different tids are independent tracks
+        let ok = doc(&[
+            ev("i", 5.0, 0, "serve", "admit", ""),
+            ev("i", 1.0, 1, "serve", "admit", ""),
+        ]);
+        assert!(check_json("t", &ok).is_empty());
+    }
+
+    #[test]
+    fn pipeline_ids_must_fit_the_window_model() {
+        let win = ev("i", 0.0, 0, "pipeline", "window", r#""args":{"b0":0,"bw":2,"nf":1,"nw":2,"sched":3}"#);
+        // bound = 3*2*1*2 = 12; task 7 is id (k=1,f=0,w=0,stage=compute)
+        let ok = doc(&[
+            win.clone(),
+            ev("B", 1.0, 1, "pipeline", "compute", r#""args":{"task":7,"sched":3}"#),
+            ev("E", 2.0, 1, "pipeline", "compute", ""),
+        ]);
+        assert!(check_json("t", &ok).is_empty(), "{:?}", check_json("t", &ok));
+
+        let out_of_range = doc(&[
+            win.clone(),
+            ev("B", 1.0, 1, "pipeline", "writeback", r#""args":{"task":14,"sched":3}"#),
+            ev("E", 2.0, 1, "pipeline", "writeback", ""),
+        ]);
+        let v = check_json("t", &out_of_range);
+        assert!(v.iter().any(|m| m.contains("outside the analyze model")), "{v:?}");
+
+        let wrong_stage = doc(&[
+            win.clone(),
+            ev("B", 1.0, 1, "pipeline", "assemble", r#""args":{"task":7,"sched":3}"#),
+            ev("E", 2.0, 1, "pipeline", "assemble", ""),
+        ]);
+        let v = check_json("t", &wrong_stage);
+        assert!(v.iter().any(|m| m.contains("is a compute id")), "{v:?}");
+
+        let no_window = doc(&[
+            ev("B", 1.0, 1, "pipeline", "compute", r#""args":{"task":7,"sched":9}"#),
+            ev("E", 2.0, 1, "pipeline", "compute", ""),
+        ]);
+        let v = check_json("t", &no_window);
+        assert!(v.iter().any(|m| m.contains("no window geometry")), "{v:?}");
+
+        let no_task = doc(&[
+            win,
+            ev("B", 1.0, 1, "pipeline", "compute", r#""args":{"sched":3}"#),
+            ev("E", 2.0, 1, "pipeline", "compute", ""),
+        ]);
+        let v = check_json("t", &no_task);
+        assert!(v.iter().any(|m| m.contains("without task id")), "{v:?}");
+    }
+
+    #[test]
+    fn check_files_flags_missing_and_bad_files() {
+        assert!(check_files(&[]).is_err());
+        assert!(check_files(&["/nonexistent/trace.json".into()]).is_err());
+        let dir = std::env::temp_dir();
+        let good = dir.join(format!("trace_check_good_{}.json", std::process::id()));
+        std::fs::write(&good, r#"{"traceEvents":[{"ph":"i","ts":0,"pid":1,"tid":0,"cat":"serve","name":"accept"}]}"#).unwrap();
+        assert!(check_files(&[good.to_string_lossy().into_owned()]).is_ok());
+        let bad = dir.join(format!("trace_check_bad_{}.json", std::process::id()));
+        std::fs::write(&bad, r#"{"traceEvents":[{"ph":"B","ts":0,"pid":1,"tid":0,"cat":"x","name":"y"}]}"#).unwrap();
+        assert!(check_files(&[bad.to_string_lossy().into_owned()]).is_err());
+        let _ = std::fs::remove_file(&good);
+        let _ = std::fs::remove_file(&bad);
+    }
+}

@@ -1,0 +1,234 @@
+//! Unified metrics registry: counters, gauges and latency histograms
+//! behind one flat, stable namespace.
+//!
+//! Every aggregate the stack already keeps — the coordinator's
+//! [`RunMetrics`], the server's [`ServeStats`], the load harness's
+//! [`Recorder`] — feeds the same registry type, and every consumer
+//! (the serve `METRICS` verb, per-rung snapshots in
+//! `BENCH_serve_suite*.json`, `tetris run --metrics`) reads the same
+//! flat JSON shape, so `tetris bench check` can assert cross-layer
+//! invariants without per-source parsing.
+//!
+//! **Naming policy (stable API):** metric names are dot-separated
+//! `layer.metric` strings.  Monotone counters end in `_total`; gauges
+//! carry a unit suffix where meaningful (`_ms`, `_bytes`); a histogram
+//! named `x_ms` flattens to `x_ms_count_total` plus
+//! `x_ms_p50_ms`/`_p90_ms`/`_p99_ms`/`_p999_ms`.  Renaming or
+//! repurposing a published name is a breaking change: add a new name
+//! and keep emitting the old one for a deprecation window instead.
+//! `tetris bench check` relies on exactly two conventions: `_total`
+//! keys never decrease across snapshots of one process, and flattened
+//! percentile ladders are monotone.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::RunMetrics;
+use crate::load::Recorder;
+use crate::serve::{LatencyHistogram, ServeStats};
+use crate::util::json::Json;
+
+/// Counters (monotone, `_total`), gauges and histograms under one flat
+/// namespace.  Build one per snapshot and feed it from cumulative
+/// sources — an absolute `counter_add` onto a fresh registry yields the
+/// source's running total, which keeps successive snapshots monotone.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, LatencyHistogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add to a monotone counter (name must end in `_total`).
+    pub fn counter_add(&mut self, name: &str, v: u64) {
+        debug_assert!(name.ends_with("_total"), "counter {name:?} must end in _total");
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge to its current value.
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Merge a latency histogram under `name` (use a `_ms` suffix).
+    pub fn hist_merge(&mut self, name: &str, h: &LatencyHistogram) {
+        self.hists.entry(name.to_string()).or_default().merge(h);
+    }
+
+    /// Feed the server's cumulative counters + end-to-end latency.
+    pub fn feed_serve_stats(&mut self, s: &ServeStats) {
+        self.counter_add("serve.submitted_total", s.submitted);
+        self.counter_add("serve.completed_total", s.completed);
+        self.counter_add("serve.rejected_total", s.rejected);
+        self.counter_add("serve.errors_total", s.errors);
+        self.counter_add("serve.batches_total", s.batches);
+        self.counter_add("serve.batched_jobs_total", s.batched_jobs);
+        self.counter_add("serve.evictions_total", s.evictions);
+        self.gauge_set("serve.overlap_hidden_ms", s.overlap_hidden_ms);
+        self.hist_merge("serve.latency_ms", s.histogram());
+    }
+
+    /// Feed one completed scheduler run's aggregates.
+    pub fn feed_run_metrics(&mut self, m: &RunMetrics) {
+        self.counter_add("run.steps_total", m.total_steps as u64);
+        self.counter_add("run.blocks_total", m.blocks as u64);
+        self.counter_add("run.retunes_total", m.retunes as u64);
+        self.counter_add("run.comm_messages_total", m.comm.messages as u64);
+        self.counter_add("run.comm_bytes_total", m.comm.bytes as u64);
+        self.gauge_set("run.gstencils_per_sec", m.gstencils_per_sec());
+        self.gauge_set("run.bubble_fraction", m.bubble_fraction());
+        self.gauge_set("run.summed_idle_ms", m.summed_idle_secs() * 1e3);
+        self.gauge_set("run.overlap", if m.overlap { 1.0 } else { 0.0 });
+        self.gauge_set("run.overlap_hidden_ms", m.overlap_hidden.as_secs_f64() * 1e3);
+    }
+
+    /// Feed the load harness's client-side view of one rung.
+    pub fn feed_recorder(&mut self, r: &Recorder) {
+        self.counter_add("load.offered_total", r.offered);
+        self.counter_add("load.completed_total", r.completed);
+        self.counter_add("load.rejected_total", r.rejected);
+        self.counter_add("load.errors_total", r.errors);
+        self.counter_add("load.lost_total", r.lost);
+        self.hist_merge("load.queue_ms", &r.queue);
+        self.hist_merge("load.service_ms", &r.service);
+        self.hist_merge("load.total_ms", &r.total);
+    }
+
+    /// The flat snapshot: one JSON object, counters as integers, gauges
+    /// as numbers, histograms flattened to `<name>_count_total` +
+    /// `<name>_p50_ms`…`_p999_ms`.
+    pub fn snapshot_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        for (k, v) in &self.counters {
+            m.insert(k.clone(), Json::Num(*v as f64));
+        }
+        for (k, v) in &self.gauges {
+            m.insert(k.clone(), Json::Num(*v));
+        }
+        for (k, h) in &self.hists {
+            m.insert(format!("{k}_count_total"), Json::Num(h.count() as f64));
+            m.insert(format!("{k}_p50_ms"), Json::Num(h.percentile_ms(0.50)));
+            m.insert(format!("{k}_p90_ms"), Json::Num(h.percentile_ms(0.90)));
+            m.insert(format!("{k}_p99_ms"), Json::Num(h.percentile_ms(0.99)));
+            m.insert(format!("{k}_p999_ms"), Json::Num(h.percentile_ms(0.999)));
+        }
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counters_accumulate_and_gauges_overwrite() {
+        let mut r = MetricsRegistry::new();
+        r.counter_add("serve.completed_total", 3);
+        r.counter_add("serve.completed_total", 2);
+        r.gauge_set("serve.queue_depth", 4.0);
+        r.gauge_set("serve.queue_depth", 1.0);
+        assert_eq!(r.counter("serve.completed_total"), 5);
+        assert_eq!(r.gauge("serve.queue_depth"), Some(1.0));
+        assert_eq!(r.counter("serve.missing_total"), 0);
+        assert_eq!(r.gauge("serve.missing"), None);
+    }
+
+    #[test]
+    fn snapshot_is_flat_and_stable() {
+        let mut r = MetricsRegistry::new();
+        r.counter_add("serve.completed_total", 7);
+        r.gauge_set("serve.queue_depth", 2.0);
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_millis(3));
+        r.hist_merge("serve.latency_ms", &h);
+        let j = r.snapshot_json();
+        let text = j.to_string();
+        assert!(!text.contains('\n'));
+        // every value is a top-level scalar — flat by construction
+        for (k, v) in j.as_obj().unwrap() {
+            assert!(v.as_f64().is_some(), "{k} is not a scalar");
+        }
+        assert_eq!(j.at(&["serve.completed_total"]).as_usize(), Some(7));
+        assert_eq!(j.at(&["serve.latency_ms_count_total"]).as_usize(), Some(1));
+        assert!(j.at(&["serve.latency_ms_p999_ms"]).as_f64().unwrap() > 0.0);
+        // flattened ladder is monotone
+        let ladder: Vec<f64> = ["p50", "p90", "p99", "p999"]
+            .iter()
+            .map(|p| j.at(&[&format!("serve.latency_ms_{p}_ms")[..]]).as_f64().unwrap())
+            .collect();
+        for w in ladder.windows(2) {
+            assert!(w[0] <= w[1], "{ladder:?}");
+        }
+    }
+
+    #[test]
+    fn feeds_produce_the_documented_names() {
+        let mut stats = ServeStats::new();
+        stats.submitted = 5;
+        stats.completed = 4;
+        stats.rejected = 1;
+        stats.record_latency(Duration::from_millis(2));
+        let mut reg = MetricsRegistry::new();
+        reg.feed_serve_stats(&stats);
+        assert_eq!(reg.counter("serve.submitted_total"), 5);
+        assert_eq!(reg.counter("serve.completed_total"), 4);
+        assert_eq!(reg.counter("serve.rejected_total"), 1);
+
+        let m = RunMetrics {
+            total_steps: 8,
+            blocks: 4,
+            retunes: 1,
+            core_cells: 1000,
+            elapsed: Duration::from_millis(10),
+            overlap: true,
+            ..Default::default()
+        };
+        let mut reg = MetricsRegistry::new();
+        reg.feed_run_metrics(&m);
+        assert_eq!(reg.counter("run.steps_total"), 8);
+        assert_eq!(reg.counter("run.retunes_total"), 1);
+        assert_eq!(reg.gauge("run.overlap"), Some(1.0));
+
+        let mut rec = Recorder::new();
+        rec.on_send();
+        rec.on_lost();
+        let mut reg = MetricsRegistry::new();
+        reg.feed_recorder(&rec);
+        assert_eq!(reg.counter("load.offered_total"), 1);
+        assert_eq!(reg.counter("load.lost_total"), 1);
+    }
+
+    /// Successive snapshots fed from a cumulative source are monotone in
+    /// every `_total` key — the invariant `bench check` gates on.
+    #[test]
+    fn successive_snapshots_are_monotone() {
+        let mut stats = ServeStats::new();
+        stats.completed = 3;
+        let mut a = MetricsRegistry::new();
+        a.feed_serve_stats(&stats);
+        stats.completed = 9;
+        stats.record_latency(Duration::from_millis(1));
+        let mut b = MetricsRegistry::new();
+        b.feed_serve_stats(&stats);
+        let (ja, jb) = (a.snapshot_json(), b.snapshot_json());
+        for (k, va) in ja.as_obj().unwrap() {
+            if k.ends_with("_total") {
+                let vb = jb.at(&[k.as_str()]).as_f64().unwrap();
+                assert!(vb >= va.as_f64().unwrap(), "{k} regressed");
+            }
+        }
+    }
+}

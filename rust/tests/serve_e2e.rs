@@ -446,3 +446,170 @@ fn concurrent_clients_keep_fifo_within_class_and_drain_on_shutdown() {
         }
     }
 }
+
+/// `METRICS` verb: a flat `layer.metric -> number` object whose
+/// `_total` counters are monotone across snapshots from one server and
+/// whose queue-depth gauge respects the configured capacity.
+#[test]
+fn metrics_verb_returns_flat_monotone_snapshot() {
+    let handle = start_server(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatchers: 1,
+        scale: 0.05,
+        ..Default::default()
+    });
+    let mut client = Client::connect(handle.addr).unwrap();
+    let submit = |client: &mut Client, i: u64| {
+        let r = client
+            .submit(&JobSpec {
+                id: format!("m-{i}"),
+                bench: "heat1d".into(),
+                shape: Some(vec![24]),
+                steps: 8,
+                seed: 100 + i,
+                ..Default::default()
+            })
+            .unwrap();
+        assert!(r.ok, "{r:?}");
+    };
+    submit(&mut client, 0);
+    let m1 = client.metrics().unwrap();
+    let m1 = m1.as_obj().expect("METRICS must be a flat JSON object").clone();
+    for (k, v) in &m1 {
+        assert!(v.as_f64().is_some(), "{k} must be numeric, got {v:?}");
+        assert!(k.contains('.'), "metric {k} must follow the layer.metric naming policy");
+    }
+    for want in [
+        "serve.submitted_total",
+        "serve.completed_total",
+        "serve.rejected_total",
+        "serve.errors_total",
+        "serve.batches_total",
+        "serve.queue_depth",
+        "serve.queue_capacity",
+        "serve.inflight_bytes",
+        "serve.sessions",
+        "serve.latency_ms_count_total",
+        "serve.latency_ms_p50_ms",
+    ] {
+        assert!(m1.contains_key(want), "missing {want}: {:?}", m1.keys().collect::<Vec<_>>());
+    }
+    assert_eq!(m1["serve.completed_total"].as_usize(), Some(1));
+    assert!(
+        m1["serve.queue_depth"].as_f64().unwrap()
+            <= m1["serve.queue_capacity"].as_f64().unwrap(),
+        "queue depth gauge must respect the configured capacity"
+    );
+    submit(&mut client, 1);
+    submit(&mut client, 2);
+    let m2 = client.metrics().unwrap();
+    let m2 = m2.as_obj().unwrap().clone();
+    for (k, v1) in &m1 {
+        if k.ends_with("_total") {
+            let (a, b) = (v1.as_f64().unwrap(), m2[k].as_f64().unwrap());
+            assert!(b >= a, "{k} must be monotone across snapshots: {a} -> {b}");
+        }
+    }
+    assert_eq!(m2["serve.completed_total"].as_usize(), Some(3));
+    client.shutdown().unwrap();
+    handle.join();
+}
+
+/// Satellite fix: a connection that spams `STATS` without ever reading
+/// its replies (blocking its private writer thread on a full socket
+/// buffer) must not stall job replies on other connections — the STATS
+/// handler snapshots state under brief locks and formats after release.
+#[test]
+fn slow_stats_consumer_does_not_stall_job_replies() {
+    use std::io::Write;
+    let handle = start_server(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatchers: 1,
+        scale: 0.05,
+        ..Default::default()
+    });
+    let mut hog = std::net::TcpStream::connect(handle.addr).unwrap();
+    // Enough unread replies to overrun both socket buffers: the hog
+    // connection's writer thread ends up blocked mid-write.
+    for _ in 0..2000 {
+        hog.write_all(b"STATS\n").unwrap();
+    }
+    let mut client = Client::connect(handle.addr).unwrap();
+    for j in 0..4u64 {
+        let r = client
+            .submit(&JobSpec {
+                id: format!("live-{j}"),
+                bench: "heat1d".into(),
+                shape: Some(vec![24]),
+                steps: 8,
+                seed: 500 + j,
+                ..Default::default()
+            })
+            .unwrap();
+        assert!(r.ok, "job replies must flow while a STATS hog is blocked: {r:?}");
+    }
+    // Closing the hog socket errors its blocked writer out so shutdown
+    // can proceed.
+    drop(hog);
+    client.shutdown().unwrap();
+    handle.join();
+}
+
+/// Tentpole: with the process tracer enabled, one job's serve lifecycle
+/// is recorded as the accept -> admit -> dequeue -> run -> reply chain,
+/// linked by job id, with monotone timestamps along the chain.  (Only
+/// this test in the binary drives the global tracer; concurrent tests
+/// merely add foreign events, which the job-id filter discards.)
+#[test]
+fn trace_records_full_serve_job_lifecycle() {
+    use tetris::trace::{self, Arg, Phase};
+    let handle = start_server(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatchers: 1,
+        scale: 0.05,
+        ..Default::default()
+    });
+    let mut client = Client::connect(handle.addr).unwrap();
+    let id = format!("traced-{}", trace::fresh_tag());
+    trace::enable();
+    let r = client
+        .submit(&JobSpec {
+            id: id.clone(),
+            bench: "heat1d".into(),
+            shape: Some(vec![24]),
+            steps: 8,
+            seed: 77,
+            ..Default::default()
+        })
+        .unwrap();
+    trace::disable();
+    assert!(r.ok, "{r:?}");
+    let ours: Vec<trace::Event> = trace::drain()
+        .into_iter()
+        .flat_map(|t| t.events)
+        .filter(|e| {
+            e.args.iter().any(|(k, v)| *k == "job" && matches!(v, Arg::S(s) if *s == id))
+        })
+        .collect();
+    for want in ["accept", "admit", "dequeue", "reply"] {
+        assert_eq!(
+            ours.iter()
+                .filter(|e| e.phase == Phase::Instant && e.cat == "serve" && e.name == want)
+                .count(),
+            1,
+            "exactly one {want} instant for {id}: {ours:?}"
+        );
+    }
+    assert_eq!(
+        ours.iter().filter(|e| e.phase == Phase::Begin && e.name == "run").count(),
+        1,
+        "one dispatcher run span for {id}: {ours:?}"
+    );
+    let ts = |name: &str| ours.iter().find(|e| e.phase != Phase::End && e.name == name).unwrap().ts_us;
+    assert!(ts("accept") <= ts("admit"), "accept precedes admit");
+    assert!(ts("admit") <= ts("dequeue"), "admit precedes dequeue");
+    assert!(ts("dequeue") <= ts("run"), "dequeue precedes run");
+    assert!(ts("run") <= ts("reply"), "run begin precedes reply");
+    client.shutdown().unwrap();
+    handle.join();
+}

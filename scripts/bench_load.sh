@@ -6,8 +6,11 @@
 # the real socket path).  Emits single-line JSON reports
 # BENCH_serve_suiteA.json / BENCH_serve_suiteB.json with queue/service/
 # total latency percentiles up to p99.9, reject counts + retry_after_ms
-# hint stats, goodput vs offered load, and /proc RSS+CPU samples of the
-# server process — then gates both with `tetris bench check`.
+# hint stats, goodput vs offered load, per-rung server METRICS snapshots
+# (flat layer.metric registry dumps; bench check enforces monotone
+# _total counters and the queue-depth <= capacity gauge bound), and
+# /proc RSS+CPU samples of the server process — then gates both with
+# `tetris bench check`.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."

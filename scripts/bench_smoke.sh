@@ -18,6 +18,7 @@ BOUNDARY_OUT="${TETRIS_SMOKE_BOUNDARY_OUT:-BENCH_boundary.json}"
 SERVE_OUT="${TETRIS_SMOKE_SERVE_OUT:-BENCH_serve.json}"
 SERVE_LIVE_OUT="${TETRIS_SMOKE_SERVE_LIVE_OUT:-BENCH_serve_live.json}"
 OVERLAP_OUT="${TETRIS_SMOKE_OVERLAP_OUT:-BENCH_overlap.json}"
+OVERLAP_TRACE_OUT="${TETRIS_SMOKE_OVERLAP_TRACE_OUT:-BENCH_overlap_trace.json}"
 PLAN_OUT="${TETRIS_SMOKE_PLAN_OUT:-BENCH_plan.json}"
 PLAN_STORE_OUT="${TETRIS_SMOKE_PLAN_STORE_OUT:-BENCH_plans.jsonl}"
 BIN=rust/target/release/tetris
@@ -39,8 +40,16 @@ cargo build --release --manifest-path rust/Cargo.toml
 
 # §5.3 overlap study: the pipelined (double-buffered) leader loop vs the
 # serial one on an imbalanced 2-worker run — summed worker idle and the
-# leader time hidden under compute, tracked per commit.
-"$BIN" bench overlap --scale "$SCALE" --threads "$THREADS" --json "$OVERLAP_OUT"
+# leader time hidden under compute, tracked per commit.  --trace records
+# the cross-layer span trace of the whole rung (pool tasks, pipelined
+# assemble/compute/writeback chains, leader phases) as Chrome
+# trace-event JSON, archived next to the summaries and gated below.
+"$BIN" bench overlap --scale "$SCALE" --threads "$THREADS" \
+  --json "$OVERLAP_OUT" --trace "$OVERLAP_TRACE_OUT"
+
+# Structural gate on the recorded trace: balanced spans, monotone
+# timestamps, pipeline task ids within the analyze-model universe.
+"$BIN" trace check "$OVERLAP_TRACE_OUT"
 
 # Plan/autotune study: tune heat2d against a throwaway store (budgeted
 # search, seeded for reproducible trial ordering), then the auto-vs-
@@ -84,3 +93,4 @@ for f in "$OUT" "$BOUNDARY_OUT" "$SERVE_OUT" "$OVERLAP_OUT" "$SERVE_LIVE_OUT" "$
   echo "--- $f ---"
   cat "$f"
 done
+echo "--- $OVERLAP_TRACE_OUT: $(wc -c < "$OVERLAP_TRACE_OUT") bytes (Chrome trace-event JSON, load in Perfetto) ---"
