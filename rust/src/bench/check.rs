@@ -12,13 +12,18 @@
 //! * §5.3 overlap: the pipelined loop's summed worker idle is at most
 //!   the serial loop's (parsed from the rows' `extra` strings);
 //! * load suites: every rung conserves jobs (`offered = completed +
-//!   rejected + errors + lost`), nothing is lost, and the deterministic
-//!   Suite A has zero rejects and zero errors;
+//!   rejected + errors + lost`), nothing is lost, the deterministic
+//!   Suite A has zero rejects and zero errors, and retry accounting is
+//!   sane (`gave_up ≤ rejected` and `gave_up ≤ retried`);
 //! * per-rung `METRICS` snapshots: flat numeric maps whose `_total`
 //!   counters are monotone from rung to rung (one server's cumulative
 //!   stats), whose queue-depth gauge respects the capacity gauge, and
 //!   whose flattened histogram ladders (`*_p50_ms` … `*_p999_ms`) are
-//!   monotone within each snapshot.
+//!   monotone within each snapshot;
+//! * metrics-scrape JSONL files (`serve --metrics-scrape`, recognized
+//!   by a `ts_ms` key on the first snapshot line): every line is a flat
+//!   numeric registry snapshot, `ts_ms` strictly increases, and every
+//!   `_total` counter is monotone line to line.
 
 use std::collections::BTreeMap;
 
@@ -157,6 +162,17 @@ fn check_suite(name: &str, j: &Json, out: &mut Vec<String>) {
         if offered == 0.0 {
             out.push(format!("{name}: suite rung {i} ({label}): offered nothing"));
         }
+        let (retried, gave_up) = (rung_count(rung, "retried"), rung_count(rung, "gave_up"));
+        if gave_up > rejected {
+            out.push(format!(
+                "{name}: suite rung {i} ({label}): gave_up {gave_up} exceeds rejected {rejected}"
+            ));
+        }
+        if gave_up > retried {
+            out.push(format!(
+                "{name}: suite rung {i} ({label}): gave_up {gave_up} exceeds retried {retried}"
+            ));
+        }
         if suite_name == "suiteA" {
             if rejected > 0.0 {
                 out.push(format!(
@@ -250,15 +266,96 @@ fn check_rung_metrics(name: &str, j: &Json, out: &mut Vec<String>) {
     }
 }
 
+/// A metrics-scrape JSONL file (`serve --metrics-scrape FILE[:SECS]`):
+/// one flat `MetricsRegistry` snapshot per line, each stamped `ts_ms`
+/// (ms since the scrape thread started).  Checked: every line parses to
+/// a flat numeric object, timestamps strictly increase, and every
+/// `_total` counter is monotone line to line (they come from one
+/// process's cumulative stats, so a decrease means a broken feed).
+pub fn check_scrape(name: &str, text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut prev: Option<(usize, f64, BTreeMap<String, f64>)> = None;
+    let mut lines = 0usize;
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        lines += 1;
+        let j = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                out.push(format!("{name}: line {}: unparseable scrape snapshot: {e}", i + 1));
+                continue;
+            }
+        };
+        let Some(m) = j.as_obj() else {
+            out.push(format!("{name}: line {}: snapshot is not an object", i + 1));
+            continue;
+        };
+        let mut flat = BTreeMap::new();
+        for (k, v) in m {
+            match v.as_f64() {
+                Some(x) => {
+                    flat.insert(k.clone(), x);
+                }
+                None => out.push(format!("{name}: line {}: {k} is not a number", i + 1)),
+            }
+        }
+        let Some(ts) = flat.get("ts_ms").copied() else {
+            out.push(format!("{name}: line {}: snapshot has no ts_ms", i + 1));
+            continue;
+        };
+        if let Some((pi, pts, pflat)) = &prev {
+            if ts <= *pts {
+                out.push(format!(
+                    "{name}: ts_ms not strictly increasing: {pts} (line {}) -> {ts} (line {})",
+                    pi + 1,
+                    i + 1,
+                ));
+            }
+            for (k, v) in &flat {
+                if !k.ends_with("_total") {
+                    continue;
+                }
+                if let Some(p) = pflat.get(k) {
+                    if v < p {
+                        out.push(format!(
+                            "{name}: {k} not monotone across snapshots: {p} (line {}) -> {v} \
+                             (line {})",
+                            pi + 1,
+                            i + 1,
+                        ));
+                    }
+                }
+            }
+        }
+        prev = Some((i, ts, flat));
+    }
+    if lines == 0 {
+        out.push(format!("{name}: scrape file has no snapshots"));
+    }
+    out
+}
+
 /// Driver for `tetris bench check FILE...`: parse each artifact, print
-/// per-file verdicts, error out if anything is violated.
+/// per-file verdicts, error out if anything is violated.  A file whose
+/// first non-empty line is an object with a `ts_ms` key is checked as a
+/// metrics-scrape JSONL; anything else as one whole-file JSON document.
 pub fn check_files(paths: &[String]) -> Result<()> {
     crate::ensure!(!paths.is_empty(), "bench check needs at least one BENCH_*.json path");
     let mut violations = Vec::new();
     for path in paths {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        let parsed = Json::parse(text.trim()).with_context(|| format!("parsing {path}"))?;
-        let v = check_json(path, &parsed);
+        let first = text.lines().find(|l| !l.trim().is_empty()).unwrap_or("").trim();
+        let is_scrape =
+            Json::parse(first).ok().map_or(false, |j| j.get("ts_ms").is_some());
+        let v = if is_scrape {
+            check_scrape(path, &text)
+        } else {
+            let parsed = Json::parse(text.trim()).with_context(|| format!("parsing {path}"))?;
+            check_json(path, &parsed)
+        };
         if v.is_empty() {
             println!("bench check: {path}: OK");
         } else {
@@ -433,6 +530,79 @@ mod tests {
                  "latency_ms":{"total":{"count":5}}}]}}"#,
         );
         assert!(check_json("g", &none).is_empty());
+    }
+
+    #[test]
+    fn retry_accounting_must_stay_sane() {
+        // gave_up beyond rejected (or retried) is impossible by
+        // construction in the recorder — flag a forged report.
+        let bad = parse(
+            r#"{"suite":{"name":"suiteB","rungs":[
+                {"label":"rate=100","offered":50,"completed":40,"rejected":10,"errors":0,"lost":0,
+                 "retried":4,"gave_up":12,
+                 "latency_ms":{"total":{"count":40}}}]}}"#,
+        );
+        let v = check_json("b", &bad);
+        assert!(v.iter().any(|m| m.contains("exceeds rejected")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("exceeds retried")), "{v:?}");
+        let good = parse(
+            r#"{"suite":{"name":"suiteB","rungs":[
+                {"label":"rate=100","offered":50,"completed":40,"rejected":10,"errors":0,"lost":0,
+                 "retried":12,"gave_up":8,
+                 "latency_ms":{"total":{"count":40}}}]}}"#,
+        );
+        assert!(check_json("g", &good).is_empty());
+        // pre-retry artifacts have neither key: vacuously fine (0 <= 0)
+        let old = parse(
+            r#"{"suite":{"name":"suiteB","rungs":[
+                {"label":"rate=100","offered":5,"completed":5,"rejected":0,"errors":0,"lost":0,
+                 "latency_ms":{"total":{"count":5}}}]}}"#,
+        );
+        assert!(check_json("g", &old).is_empty());
+    }
+
+    #[test]
+    fn scrape_jsonl_monotone_and_timestamped() {
+        let good = "{\"ts_ms\":0.0,\"serve.completed_total\":3}\n\
+                    {\"ts_ms\":1000.5,\"serve.completed_total\":9}\n";
+        assert!(check_scrape("g", good).is_empty());
+        let regressed = "{\"ts_ms\":0.0,\"serve.completed_total\":9}\n\
+                         {\"ts_ms\":1000.0,\"serve.completed_total\":3}\n";
+        let v = check_scrape("b", regressed);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("not monotone across snapshots"), "{v:?}");
+        let backwards = "{\"ts_ms\":5.0}\n{\"ts_ms\":5.0}\n";
+        let v = check_scrape("b", backwards);
+        assert!(v.iter().any(|m| m.contains("strictly increasing")), "{v:?}");
+        let missing_ts = "{\"ts_ms\":0.0}\n{\"serve.completed_total\":1}\n";
+        let v = check_scrape("b", missing_ts);
+        assert!(v.iter().any(|m| m.contains("no ts_ms")), "{v:?}");
+        let nonnumeric = "{\"ts_ms\":0.0,\"serve.engine\":\"simd\"}\n";
+        let v = check_scrape("b", nonnumeric);
+        assert!(v.iter().any(|m| m.contains("is not a number")), "{v:?}");
+        assert!(check_scrape("b", "\n\n").iter().any(|m| m.contains("no snapshots")));
+    }
+
+    #[test]
+    fn check_files_routes_scrape_jsonl_by_first_line() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let good = dir.join(format!("BENCH_scrape_good_{pid}.jsonl"));
+        std::fs::write(
+            &good,
+            "{\"ts_ms\":0.0,\"load.offered_total\":1}\n{\"ts_ms\":2.0,\"load.offered_total\":4}\n",
+        )
+        .unwrap();
+        assert!(check_files(&[good.to_string_lossy().into_owned()]).is_ok());
+        let bad = dir.join(format!("BENCH_scrape_bad_{pid}.jsonl"));
+        std::fs::write(
+            &bad,
+            "{\"ts_ms\":3.0,\"load.offered_total\":9}\n{\"ts_ms\":1.0,\"load.offered_total\":9}\n",
+        )
+        .unwrap();
+        assert!(check_files(&[bad.to_string_lossy().into_owned()]).is_err());
+        let _ = std::fs::remove_file(&good);
+        let _ = std::fs::remove_file(&bad);
     }
 
     #[test]

@@ -621,11 +621,28 @@ pub fn run_plan(scale: f64, threads: usize, store_path: Option<&str>) -> Vec<(St
 /// Both rows compute bit-identical fields (asserted in `cargo test`);
 /// CI archives this as `BENCH_overlap.json`.
 pub fn run_overlap(scale: f64, threads: usize) -> Vec<(String, Vec<Row>)> {
+    run_overlap_mode(scale, threads, None)
+}
+
+/// `run_overlap` restricted to one mode (`bench overlap --mode on|off`):
+/// CI records separate per-mode runs so each gets its own trace file,
+/// then diffs the two traces and reconciles the pipelined trace against
+/// its `RunMetrics.overlap_hidden`.  `None` runs both rows as always.
+pub fn run_overlap_mode(
+    scale: f64,
+    threads: usize,
+    mode: Option<Overlap>,
+) -> Vec<(String, Vec<Row>)> {
     let (_, steps, _) = scaled_problem("heat2d", scale);
     let core = overlap_bench_field(scale);
     let mut rows = Vec::new();
     let mut base = 0.0;
-    for (label, overlap) in [("overlap=off", Overlap::Off), ("overlap=on", Overlap::On)] {
+    let both = [("overlap=off", Overlap::Off), ("overlap=on", Overlap::On)];
+    let modes: Vec<(&str, Overlap)> = both
+        .into_iter()
+        .filter(|(_, o)| mode.map_or(true, |m| m == *o))
+        .collect();
+    for (label, overlap) in modes {
         match overlap_bench_sched(scale, threads, overlap).run(&core, steps) {
             Ok((_, m)) => {
                 let g = m.gstencils_per_sec();
@@ -636,6 +653,10 @@ pub fn run_overlap(scale: f64, threads: usize) -> Vec<(String, Vec<Row>)> {
                     label: label.into(),
                     gstencils: g,
                     speedup: g / base.max(1e-12),
+                    // `check::idle_ms_from_extra` and
+                    // `trace::diff::extract_hidden_ms` parse this string:
+                    // the "summed idle"/"hidden … ms" wording is a
+                    // published contract, not cosmetics.
                     extra: format!(
                         "summed idle {:.3} ms; hidden {:.3} ms; overlapped msgs {}/{}",
                         m.summed_idle_secs() * 1e3,

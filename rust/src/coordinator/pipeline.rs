@@ -217,10 +217,21 @@ impl Scheduler {
         let mut leader_paste = Duration::ZERO;
         let t0 = Instant::now();
 
+        // Data-volume span args (bytes of f64 payload each leader phase
+        // touches/ships), so a Perfetto track shows volume, not just
+        // duration, and `tetris trace diff` can report per-phase deltas.
+        let ghost_bytes = nf * (globals[0].len() - core0.len()) * 8;
+        let extract_rows: usize = spans.iter().map(|&(s, e)| (e - s) + 2 * halo).sum();
+        let paste_bytes = nf * core0.len() * 8;
+
         for b in 0..blocks {
             // (0) Ghost refresh from each field's current core state.
             let tg = Instant::now();
-            let sp = trace::span("leader", "ghost", &[("block", b.into())]);
+            let sp = trace::span(
+                "leader",
+                "ghost",
+                &[("block", b.into()), ("bytes", ghost_bytes.into())],
+            );
             for g in globals.iter_mut() {
                 self.boundary.fill(g, halo);
             }
@@ -235,7 +246,17 @@ impl Scheduler {
             // inter-device links instead of W-1.  A single worker's
             // wrap-around is a local copy, not a message.
             let te = Instant::now();
-            let sp = trace::span("leader", "extract", &[("block", b.into())]);
+            // rows sums (e-s)+2·halo over workers (= n_rows + 2·halo·nw,
+            // invariant under retunes); bytes is the full slab snapshot.
+            let sp = trace::span(
+                "leader",
+                "extract",
+                &[
+                    ("block", b.into()),
+                    ("rows", extract_rows.into()),
+                    ("bytes", (nf * extract_rows * ext_rest_cells * 8).into()),
+                ],
+            );
             let inputs: Vec<Vec<Field>> = globals
                 .iter()
                 .map(|g| {
@@ -263,7 +284,16 @@ impl Scheduler {
             }
 
             // (2) One concurrent dispatch over all (field, worker) slabs.
-            let sp = trace::span("leader", "dispatch", &[("block", b.into())]);
+            // bytes = this block's inter-device halo traffic (the same
+            // quantity the CommLedger records above).
+            let sp = trace::span(
+                "leader",
+                "dispatch",
+                &[
+                    ("block", b.into()),
+                    ("bytes", (links * nf * 2 * halo * core_rest_cells * 8).into()),
+                ],
+            );
             let results = dispatch(&self.workers, &self.spec, &inputs, self.tb, halo);
             drop(sp);
 
@@ -278,7 +308,11 @@ impl Scheduler {
             }
             let slowest = block_busy.iter().copied().max().unwrap_or_default();
             let tp = Instant::now();
-            let sp = trace::span("leader", "paste", &[("block", b.into())]);
+            let sp = trace::span(
+                "leader",
+                "paste",
+                &[("block", b.into()), ("bytes", paste_bytes.into())],
+            );
             for (f, per_field) in results.into_iter().enumerate() {
                 for (i, ((res, _), &(s, _e))) in per_field.into_iter().zip(&spans).enumerate() {
                     let out = res.with_context(|| format!("worker {i} failed (field {f})"))?;
@@ -445,6 +479,11 @@ impl Scheduler {
             );
             // Debug-build sink for the tasks' observed region traffic.
             let collector = Collector::shared();
+            // Per-window flow namespace: each (block,field,worker) chain
+            // gets one `chain` flow (assemble s → compute t → writeback
+            // f), id = window_tag<<20 | slot, so flows from concurrent
+            // windows/schedulers never collide.
+            let window_tag = trace::fresh_tag();
             let nslots = bw * nf * nw;
             let inputs: Vec<Mutex<Option<Field>>> = (0..nslots).map(|_| Mutex::new(None)).collect();
             let outputs: Vec<Mutex<Option<Field>>> =
@@ -497,6 +536,13 @@ impl Scheduler {
                     let (s, e) = spans_r[w];
                     let deps = plan.model.deps[tid].clone();
                     let access = plan.model.accesses[tid].clone();
+                    // Slab geometry for the volume args: assemble/compute
+                    // move the padded slab, writeback the unpadded core.
+                    let slab_rows = (e - s) + 2 * halo;
+                    let slab_cells = slab_rows * ext_rest_cells;
+                    let out_rows = e - s;
+                    let out_cells = out_rows * core_rest_cells;
+                    let chain = (window_tag << 20) | idx as u64;
                     let id = match m.kind {
                         // Assemble: the §5.3 prefetch.  Its plan deps are
                         // only the neighbouring slabs' previous-block
@@ -513,8 +559,12 @@ impl Scheduler {
                                         ("field", f.into()),
                                         ("worker", w.into()),
                                         ("sched", sched_tag.into()),
+                                        ("rows", slab_rows.into()),
+                                        ("slab_cells", slab_cells.into()),
+                                        ("bytes", (slab_cells * 8).into()),
                                     ],
                                 );
+                                trace::flow_start("pipeline", "chain", chain, &[]);
                                 if aborted_r.load(Ordering::Acquire) {
                                     return;
                                 }
@@ -547,8 +597,12 @@ impl Scheduler {
                                         ("field", f.into()),
                                         ("worker", w.into()),
                                         ("sched", sched_tag.into()),
+                                        ("rows", slab_rows.into()),
+                                        ("slab_cells", slab_cells.into()),
+                                        ("bytes", (slab_cells * 8).into()),
                                     ],
                                 );
+                                trace::flow_step("pipeline", "chain", chain, &[]);
                                 // None = assembly skipped by an abort
                                 let Some(input) = inputs_r[idx].lock().unwrap().take() else {
                                     return;
@@ -595,8 +649,12 @@ impl Scheduler {
                                         ("field", f.into()),
                                         ("worker", w.into()),
                                         ("sched", sched_tag.into()),
+                                        ("rows", out_rows.into()),
+                                        ("slab_cells", out_cells.into()),
+                                        ("bytes", (out_cells * 8).into()),
                                     ],
                                 );
+                                trace::flow_finish("pipeline", "chain", chain, &[]);
                                 let t = Instant::now();
                                 let taken = outputs_r[idx].lock().unwrap().take();
                                 if let Some(out) = taken {

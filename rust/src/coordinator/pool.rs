@@ -551,7 +551,7 @@ mod tests {
                             assert!(matches!(arg("wait_us"), Some(Arg::U(_))));
                         }
                         Phase::End => ended += 1,
-                        Phase::Instant => panic!("unexpected instant {ev:?}"),
+                        other => panic!("unexpected {other:?} {ev:?}"),
                     }
                 }
             }

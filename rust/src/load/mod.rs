@@ -19,6 +19,12 @@
 //!   multiplies the arrival rate rung by rung until sustained admission
 //!   rejects — the saturation walk that locates the service's knee.
 //!
+//! With `--retry N` both suites *obey* the server's `retry_after_ms`
+//! backpressure hint: a retryable reject is resubmitted after a capped,
+//! jittered backoff (see [`backoff_delay`]) up to N times per job, and
+//! the recorder counts resubmissions (`retried`) and exhausted budgets
+//! (`gave_up`) without breaking the offered-jobs conservation check.
+//!
 //! Submodules: [`workload`] (job kinds + seeded mixes), [`arrival`]
 //! (Poisson schedules), [`recorder`] (per-rung counts + the shared
 //! [`crate::serve::LatencyHistogram`] views), [`resources`]
@@ -37,8 +43,10 @@ pub use report::{Rung, SuiteReport};
 pub use resources::{ProcMonitor, ProcSummary};
 pub use workload::{standard_catalog, zipf_weights, JobKind, JobMix};
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
@@ -83,6 +91,12 @@ pub struct LoadConfig {
     pub max_rungs: usize,
     /// Sweep stops once a rung's reject fraction reaches this.
     pub stop_reject_frac: f64,
+    /// Max resubmissions per job after a retryable reject (0 = the
+    /// pre-retry behavior: every reject is terminal).
+    pub retry: usize,
+    /// `FILE[:SECS]` passed through to the spawned server's
+    /// `--metrics-scrape` flag (periodic JSONL metrics snapshots).
+    pub metrics_scrape: Option<String>,
 }
 
 impl Default for LoadConfig {
@@ -104,8 +118,17 @@ impl Default for LoadConfig {
             sweep_factor: 2.0,
             max_rungs: 6,
             stop_reject_frac: 0.5,
+            retry: 0,
+            metrics_scrape: None,
         }
     }
+}
+
+/// Jittered, capped backoff for an obeyed `retry_after_ms` hint: the
+/// hint (capped at 2s) scaled by a uniform factor in `[0.5, 1.5)` so
+/// retrying clients don't re-arrive at the server in lockstep.
+pub fn backoff_delay(hint_ms: u64, rng: &mut SplitMix64) -> Duration {
+    Duration::from_millis(((hint_ms.min(2_000) as f64) * (0.5 + rng.next_f64())) as u64)
 }
 
 /// A `tetris serve` child process the harness booted and owns.  Dropping
@@ -155,8 +178,8 @@ pub fn spawn_server(cfg: &LoadConfig) -> Result<SpawnedServer> {
         cfg.seed
     ));
     let _ = std::fs::remove_file(&addr_file);
-    let child = Command::new(&bin)
-        .arg("serve")
+    let mut cmd = Command::new(&bin);
+    cmd.arg("serve")
         .args(["--addr", "127.0.0.1:0"])
         .arg("--addr-file")
         .arg(&addr_file)
@@ -164,7 +187,11 @@ pub fn spawn_server(cfg: &LoadConfig) -> Result<SpawnedServer> {
         .args(["--workers", &cfg.dispatchers.to_string()])
         .args(["--queue", &cfg.queue_jobs.to_string()])
         .args(["--threads", &cfg.threads.to_string()])
-        .args(["--scale", &cfg.scale.to_string()])
+        .args(["--scale", &cfg.scale.to_string()]);
+    if let Some(scrape) = &cfg.metrics_scrape {
+        cmd.args(["--metrics-scrape", scrape]);
+    }
+    let child = cmd
         .stdin(Stdio::null())
         .stdout(Stdio::null())
         .stderr(Stdio::inherit())
@@ -209,17 +236,36 @@ pub fn run_suite_a(addr: &str, cfg: &LoadConfig) -> Result<SuiteReport> {
                     let mut rng = SplitMix64::new(cfg.seed ^ (0xA150_0000 + c as u64));
                     let mut client = Client::connect(addr)?;
                     let mut rec = Recorder::new();
-                    for j in 0..jobs {
+                    'jobs: for j in 0..jobs {
                         let kind = mix.sample(&mut rng);
                         let spec =
                             mix.spec(kind, format!("a{c}-{j}"), cfg.seed + (c * jobs + j) as u64);
                         let sent_at = Instant::now();
                         rec.on_send();
-                        match client.submit(&spec) {
-                            Ok(reply) => rec.on_reply(&reply, sent_at.elapsed()),
-                            Err(_) => {
-                                rec.on_lost();
-                                break;
+                        let mut attempts = 0usize;
+                        loop {
+                            match client.submit(&spec) {
+                                Ok(reply) => {
+                                    let hint =
+                                        if reply.ok { 0 } else { reply.retry_after_ms.unwrap_or(0) };
+                                    if hint > 0 && attempts < cfg.retry {
+                                        attempts += 1;
+                                        rec.on_retry(hint);
+                                        thread::sleep(backoff_delay(hint, &mut rng));
+                                        continue;
+                                    }
+                                    // Round trip includes the backoff the client
+                                    // chose to take — that's the latency it saw.
+                                    rec.on_reply(&reply, sent_at.elapsed());
+                                    if attempts > 0 && !reply.ok && reply.retry_after_ms.is_some() {
+                                        rec.on_gave_up();
+                                    }
+                                    break;
+                                }
+                                Err(_) => {
+                                    rec.on_lost();
+                                    break 'jobs;
+                                }
                             }
                         }
                     }
@@ -252,9 +298,17 @@ pub fn run_suite_a(addr: &str, cfg: &LoadConfig) -> Result<SuiteReport> {
 
 /// One Suite B rung: a seeded Poisson schedule at `rate` jobs/sec over
 /// `cfg.duration`, sent open-loop down one pipelined connection.  The
-/// sender thread paces arrivals and hands each send timestamp to the
-/// receiver through a channel; the server's per-connection reply
-/// ordering pairs timestamps with replies with no job-id bookkeeping.
+/// sender thread paces arrivals and hands each `(job idx, first send
+/// instant, send failed)` to the receiver through a channel; the
+/// server's per-connection reply ordering pairs those with replies in
+/// order.  Retries flow the other way: the receiver schedules obeyed
+/// `retry_after_ms` hints on a second channel and the sender resubmits
+/// them once the schedule is drained (or between paced arrivals' ends).
+/// The `inflight` counter is the shutdown handshake: the sender only
+/// quits on "retry queue empty AND nothing in flight", and because the
+/// receiver enqueues a retry *before* decrementing `inflight`, the
+/// sender re-checks the retry queue once after seeing zero — a retry
+/// can never fall into the gap.
 fn run_rung_b(addr: &str, cfg: &LoadConfig, rate: f64, rung_idx: usize) -> Result<Rung> {
     let mix = JobMix::standard_zipf(cfg.zipf_s);
     let seed = cfg.seed.wrapping_add(0x9E37_79B9u64.wrapping_mul(rung_idx as u64 + 1));
@@ -272,41 +326,120 @@ fn run_rung_b(addr: &str, cfg: &LoadConfig, rate: f64, rung_idx: usize) -> Resul
         })
         .collect();
     let (mut send, mut recv) = Client::connect(addr)?.split();
-    let (tx, rx) = mpsc::channel::<Instant>();
+    // Sent jobs: (job idx, instant of the job's FIRST send, send failed).
+    let (tx, rx) = mpsc::channel::<(usize, Instant, bool)>();
+    // Scheduled retries: (job idx, earliest resend instant, first send).
+    let (retry_tx, retry_rx) = mpsc::channel::<(usize, Instant, Instant)>();
+    let inflight = AtomicUsize::new(0);
     let t0 = Instant::now();
     let mut rec = Recorder::new();
     thread::scope(|s| {
-        let (offsets, specs) = (&offsets, &specs);
+        let (offsets, specs, inflight) = (&offsets, &specs, &inflight);
         s.spawn(move || {
             let start = Instant::now();
-            for (off, spec) in offsets.iter().zip(specs) {
+            for (i, (off, spec)) in offsets.iter().zip(specs).enumerate() {
                 let now = start.elapsed();
                 if *off > now {
                     thread::sleep(*off - now);
                 }
-                if send.send_spec(spec).is_err() {
-                    break;
+                // Count the job in flight BEFORE the send: every
+                // fetch_add is matched by exactly one tx item, and only
+                // the receiver ever decrements (once per rx item).
+                inflight.fetch_add(1, Ordering::SeqCst);
+                let failed = send.send_spec(spec).is_err();
+                if tx.send((i, Instant::now(), failed)).is_err() {
+                    return;
                 }
-                if tx.send(Instant::now()).is_err() {
-                    break;
+                if failed {
+                    break; // connection dead; skip to the drain below
+                }
+            }
+            // Drain scheduled retries until none remain and none can
+            // still appear (the receiver has nothing left in flight).
+            loop {
+                let item = match retry_rx.try_recv() {
+                    Ok(it) => Some(it),
+                    Err(mpsc::TryRecvError::Disconnected) => None,
+                    Err(mpsc::TryRecvError::Empty) => {
+                        if inflight.load(Ordering::SeqCst) > 0 {
+                            thread::sleep(Duration::from_millis(1));
+                            continue;
+                        }
+                        // A retry is enqueued before its reply's
+                        // decrement, so after seeing zero one more
+                        // look settles whether a retry raced in.
+                        retry_rx.try_recv().ok()
+                    }
+                };
+                let Some((i, not_before, first_sent)) = item else { break };
+                let now = Instant::now();
+                if not_before > now {
+                    thread::sleep(not_before - now);
+                }
+                inflight.fetch_add(1, Ordering::SeqCst);
+                let failed = send.send_spec(&specs[i]).is_err();
+                if tx.send((i, first_sent, failed)).is_err() {
+                    return;
+                }
+                if failed {
+                    break; // receiver loses the rest via pending_retry
                 }
             }
             // tx drops here: the receiver's channel drains and closes
         });
+        // Receiver runs inline: replies come back in send order, so the
+        // i-th rx item pairs with the i-th reply on the wire.
+        let mut attempts: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut pending_retry = 0usize;
+        let mut backoff_rng = SplitMix64::new(seed ^ 0xC);
         let mut dead = false;
-        for sent_at in rx {
-            rec.on_send();
-            if dead {
+        for (i, first_sent, failed) in rx {
+            let prior = attempts.get(&i).copied().unwrap_or(0);
+            if prior == 0 {
+                rec.on_send();
+            } else {
+                pending_retry -= 1; // this scheduled retry made it out
+            }
+            if failed || dead {
                 rec.on_lost();
+                dead = true;
+                inflight.fetch_sub(1, Ordering::SeqCst);
                 continue;
             }
             match recv.recv_result() {
-                Ok(reply) => rec.on_reply(&reply, sent_at.elapsed()),
+                Ok(reply) => {
+                    let hint = if reply.ok { 0 } else { reply.retry_after_ms.unwrap_or(0) };
+                    if hint > 0 && prior < cfg.retry {
+                        attempts.insert(i, prior + 1);
+                        rec.on_retry(hint);
+                        pending_retry += 1;
+                        // Enqueue BEFORE the decrement below — the
+                        // sender's shutdown check depends on it.
+                        let _ = retry_tx.send((
+                            i,
+                            Instant::now() + backoff_delay(hint, &mut backoff_rng),
+                            first_sent,
+                        ));
+                    } else {
+                        // Latency from the FIRST send: retrying is part
+                        // of the round trip the client experienced.
+                        rec.on_reply(&reply, first_sent.elapsed());
+                        if prior > 0 && !reply.ok && reply.retry_after_ms.is_some() {
+                            rec.on_gave_up();
+                        }
+                    }
+                }
                 Err(_) => {
                     rec.on_lost();
                     dead = true;
                 }
             }
+            inflight.fetch_sub(1, Ordering::SeqCst);
+        }
+        // Retries the sender never resent (dead connection): each was
+        // offered once and is still unaccounted — lost, not rejected.
+        for _ in 0..pending_retry {
+            rec.on_lost();
         }
     });
     let wall = t0.elapsed();

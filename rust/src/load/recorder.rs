@@ -11,6 +11,13 @@
 //! their `retry_after_ms` hints collected verbatim, because the hint
 //! distribution is itself an output of the experiment (it is the
 //! backpressure signal a well-behaved client would obey).
+//!
+//! With `--retry N` the clients *do* obey it: a retryable reject is
+//! recorded via [`Recorder::on_retry`] (not a terminal outcome), and
+//! only the final reply settles the job — so `offered` keeps counting
+//! unique jobs and the conservation invariant
+//! `offered == completed + rejected + errors + lost` survives retries,
+//! extended by `gave_up <= rejected` and `gave_up <= retried`.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -30,6 +37,12 @@ pub struct Recorder {
     pub errors: u64,
     /// Offered jobs that never got any reply (connection died).
     pub lost: u64,
+    /// Resubmissions after a retryable reject (`--retry`); NOT new
+    /// offered jobs — `offered` counts unique jobs only.
+    pub retried: u64,
+    /// Retried jobs whose final reply was still a reject (a subset of
+    /// `rejected`: the retry budget ran out).
+    pub gave_up: u64,
     pub queue: LatencyHistogram,
     pub service: LatencyHistogram,
     pub total: LatencyHistogram,
@@ -67,6 +80,19 @@ impl Recorder {
         self.lost += 1;
     }
 
+    /// A retryable reject the client will obey: record the hint and the
+    /// resubmission; terminal accounting waits for the final reply.
+    pub fn on_retry(&mut self, hint_ms: u64) {
+        self.retried += 1;
+        self.retry_hints_ms.push(hint_ms);
+    }
+
+    /// A retried job's final reply was still a reject — call *after*
+    /// the terminal [`Recorder::on_reply`].
+    pub fn on_gave_up(&mut self) {
+        self.gave_up += 1;
+    }
+
     /// Fold a per-connection recorder into the rung total.
     pub fn merge(&mut self, other: &Recorder) {
         self.offered += other.offered;
@@ -74,15 +100,22 @@ impl Recorder {
         self.rejected += other.rejected;
         self.errors += other.errors;
         self.lost += other.lost;
+        self.retried += other.retried;
+        self.gave_up += other.gave_up;
         self.queue.merge(&other.queue);
         self.service.merge(&other.service);
         self.total.merge(&other.total);
         self.retry_hints_ms.extend_from_slice(&other.retry_hints_ms);
     }
 
-    /// Every offered job must be accounted for exactly once.
+    /// Every offered job must be accounted for exactly once; retries
+    /// are resubmissions of already-offered jobs, so they extend rather
+    /// than weaken the balance: giving up implies a terminal reject and
+    /// at least one earlier resubmission.
     pub fn conserved(&self) -> bool {
         self.offered == self.completed + self.rejected + self.errors + self.lost
+            && self.gave_up <= self.rejected
+            && self.gave_up <= self.retried
     }
 
     /// Summary of the observed `retry_after_ms` hints: count, how many
@@ -164,6 +197,31 @@ mod tests {
         assert_eq!(a.total.count(), 1);
         assert_eq!(a.retry_hints_ms, vec![50]);
         assert!(a.conserved());
+    }
+
+    #[test]
+    fn retries_keep_conservation_over_unique_jobs() {
+        let mut rec = Recorder::new();
+        // Job 1: rejected once, retried, then completes.
+        rec.on_send();
+        rec.on_retry(50);
+        rec.on_reply(&ok_reply(1.0, 2.0), Duration::from_millis(60));
+        // Job 2: rejected, retried twice, budget exhausted — terminal reject.
+        rec.on_send();
+        rec.on_retry(100);
+        rec.on_retry(100);
+        rec.on_reply(&JobResult::reject("j2", "full", 100), Duration::from_millis(5));
+        rec.on_gave_up();
+        assert_eq!((rec.offered, rec.completed, rec.rejected), (2, 1, 1));
+        assert_eq!((rec.retried, rec.gave_up), (3, 1));
+        assert!(rec.conserved());
+        // Hints from obeyed retries and the terminal reject all land.
+        assert_eq!(rec.retry_hints_ms, vec![50, 100, 100, 100]);
+
+        let mut total = Recorder::new();
+        total.merge(&rec);
+        assert_eq!((total.retried, total.gave_up), (3, 1));
+        assert!(total.conserved());
     }
 
     #[test]

@@ -57,6 +57,8 @@ impl Rung {
         m.insert("rejected".into(), Json::Num(self.rec.rejected as f64));
         m.insert("errors".into(), Json::Num(self.rec.errors as f64));
         m.insert("lost".into(), Json::Num(self.rec.lost as f64));
+        m.insert("retried".into(), Json::Num(self.rec.retried as f64));
+        m.insert("gave_up".into(), Json::Num(self.rec.gave_up as f64));
         m.insert("offered_per_sec".into(), Json::Num(self.offered_per_sec()));
         m.insert("goodput_per_sec".into(), Json::Num(self.goodput_per_sec()));
         m.insert("reject_fraction".into(), Json::Num(self.reject_fraction()));
@@ -156,6 +158,8 @@ mod tests {
         assert!((r.reject_fraction() - 0.2).abs() < 1e-9);
         let j = r.to_json();
         assert_eq!(j.at(&["offered"]).as_usize(), Some(10));
+        assert_eq!(j.at(&["retried"]).as_usize(), Some(0));
+        assert_eq!(j.at(&["gave_up"]).as_usize(), Some(0));
         assert_eq!(j.at(&["retry_after_ms", "count"]).as_usize(), Some(2));
         assert!(j.at(&["latency_ms", "total", "p999_ms"]).as_f64().unwrap() > 0.0);
         // client-side registry snapshot rides along in the same flat vocabulary

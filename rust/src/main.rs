@@ -17,20 +17,28 @@
 //!   serve    [--addr A] [--workers W] [--queue N] [--batch B] [--threads T]
 //!            [--adapt K] [--drift F] [--scale F] [--addr-file FILE]
 //!            [--session-ttl SECS] [--max-sessions N] [--overlap M]
-//!            [--plan-store FILE|none]
+//!            [--plan-store FILE|none] [--metrics-scrape FILE[:SECS]]
 //!   submit   [--addr A] --bench B [--boundary C[,C...]] [--steps N]
 //!            [--jobs K] [--priority P] [--shape NxM] [--seed S]
 //!            [--json FILE] | --stats | --shutdown
 //!   load     [suiteA|suiteB|both] [--addr A | --bin PATH] [--seed S]
 //!            [--conns N --jobs K] [--rate R --duration SECS --zipf S]
 //!            [--sweep --sweep-factor F --max-rungs N --stop-reject-frac F]
+//!            [--retry N] [--metrics-scrape FILE[:SECS]]
 //!            [--json-a FILE] [--json-b FILE]   stochastic load harness
 //!   thermal  [--size N] [--steps N] [--viz DIR] [--insulated]
 //!   accuracy [--blocks K]
 //!   bench    breakdown|sota|scaling|comm|mxu|boundary|serve|plan|overlap
 //!            [--scale F] [--threads T] [--json FILE]   single-line JSON for CI
+//!            overlap also takes [--mode on|off|both] for per-mode traces
 //!   bench    check FILE...        assert structural invariants over BENCH_*.json
-//!   trace    check FILE...        validate Chrome trace-event JSON from --trace
+//!                                 (metrics-scrape JSONL files included)
+//!   trace    check FILE... [--strict] [--require-flows]
+//!                                 validate Chrome trace-event JSON from --trace
+//!   trace    diff A B [--fail-over PCT]   per-phase count/us/bytes deltas
+//!   trace    hidden TRACE --bench-json FILE [--tolerance-pct P]
+//!                                 reconcile trace-derived hidden leader time
+//!                                 with RunMetrics.overlap_hidden
 //!
 //! `run`, `hetero`, `serve` and `bench` all accept `--trace FILE` (or
 //! `$TETRIS_TRACE`) to record a cross-layer span trace and write it as
@@ -159,7 +167,9 @@ fn print_help() {
                                        --queue N --batch B --threads T --adapt K\n\
                                        --drift F --scale F --addr-file FILE\n\
                                        --session-ttl SECS --max-sessions N\n\
-                                       --overlap on|off|auto --plan-store FILE|none]\n\
+                                       --overlap on|off|auto --plan-store FILE|none\n\
+                                       --metrics-scrape FILE[:SECS]]  the scrape\n\
+                                       appends one flat metrics snapshot per line\n\
          submit [--addr A]             send jobs over the line protocol [--bench B\n\
                                        --boundary C[,C...] --steps N --jobs K\n\
                                        --priority P --shape NxM --seed S --json FILE]\n\
@@ -171,16 +181,27 @@ fn print_help() {
                                        Poisson open loop [--rate R --duration SECS\n\
                                        --zipf S], --sweep walks rates to saturation\n\
                                        [--sweep-factor F --max-rungs N\n\
-                                       --stop-reject-frac F].  Reports land in\n\
+                                       --stop-reject-frac F].  --retry N obeys\n\
+                                       retry_after_ms hints with jittered backoff;\n\
+                                       --metrics-scrape FILE[:SECS] arms the spawned\n\
+                                       server's scrape.  Reports land in\n\
                                        --json-a/--json-b (BENCH_serve_suite*.json)\n\
          thermal [--size N --steps N --viz DIR --threads T]   Table-3 case study\n\
                 [--insulated]          Neumann zero-flux plate (conserves total heat)\n\
          accuracy [--blocks K]         Table-4 FP64-vs-FP32 study\n\
          bench  breakdown|sota|scaling|comm|mxu|boundary|serve|plan|overlap\n\
                                        [--scale F --threads T --json FILE]\n\
-         bench  check FILE...          fail on broken BENCH_*.json invariants\n\
-         trace  check FILE...          validate Chrome trace-event JSON (balanced\n\
-                                       spans, monotone timestamps, plan-model ids)\n\
+                                       (overlap: --mode on|off|both for per-mode traces)\n\
+         bench  check FILE...          fail on broken BENCH_*.json invariants;\n\
+                                       metrics-scrape JSONL files checked too\n\
+         trace  check FILE... [--strict] [--require-flows]\n\
+                                       validate Chrome trace-event JSON (balanced\n\
+                                       spans, monotone timestamps, plan-model ids,\n\
+                                       flow pairing; flags go after the files)\n\
+         trace  diff A B [--fail-over PCT]   per-phase count/us/bytes deltas\n\
+         trace  hidden TRACE --bench-json FILE [--tolerance-pct P]\n\
+                                       trace-derived hidden leader time must match\n\
+                                       RunMetrics.overlap_hidden within P percent\n\
          \n\
          observability: run/hetero/serve/bench accept --trace FILE (or $TETRIS_TRACE)\n\
                         to record a cross-layer span trace as Chrome trace-event JSON\n\
@@ -439,13 +460,54 @@ fn trace_finish(path: Option<String>) -> Result<()> {
     Ok(())
 }
 
-/// `tetris trace check FILE...` — structural validation of recorded
-/// Chrome trace-event JSON (balanced spans per thread, monotone
-/// timestamps, pipeline task ids within the analyze-model universe).
+/// `tetris trace check|diff|hidden` — the trace analysis surface.
+///
+/// * `check FILE... [--strict] [--require-flows]` — structural
+///   validation (balanced spans, monotone timestamps, pipeline-model
+///   ids, flow-event pairing).  Truncated traces (`dropped_events > 0`)
+///   demote balance/flow findings to warnings unless `--strict`;
+///   `--require-flows` fails traces recorded without flow events.
+/// * `diff A B [--fail-over PCT]` — align two traces by span phase and
+///   report count/total-µs/total-bytes deltas; with `--fail-over`,
+///   error when any shared phase's total time grew by more than PCT%.
+/// * `hidden TRACE --bench-json FILE [--tolerance-pct P]` — recompute
+///   the §5.3 hidden leader time from the trace and fail unless it
+///   agrees with the bench row's `RunMetrics.overlap_hidden`.
+///
+/// Boolean flags (`--strict`, `--require-flows`) swallow a following
+/// bare token, so pass them *after* the file operands.
 fn cmd_trace(args: &Args) -> Result<()> {
     match args.positional.first().map(String::as_str) {
-        Some("check") => tetris::trace::check::check_files(&args.positional[1..]),
-        other => bail!("unknown trace subcommand {other:?} (expected `trace check FILE...`)"),
+        Some("check") => {
+            let strict = args.flags.contains_key("strict");
+            let require_flows = args.flags.contains_key("require-flows");
+            tetris::trace::check::check_files(&args.positional[1..], strict, require_flows)
+        }
+        Some("diff") => {
+            let [a, b] = &args.positional[1..] else {
+                bail!(
+                    "trace diff needs exactly two trace files (got {})",
+                    args.positional.len() - 1
+                );
+            };
+            let fail_over = args
+                .flags
+                .get("fail-over")
+                .map(|v| v.parse::<f64>())
+                .transpose()
+                .context("--fail-over")?;
+            tetris::trace::diff::diff_files(a, b, fail_over)
+        }
+        Some("hidden") => {
+            let Some(trace) = args.positional.get(1) else {
+                bail!("trace hidden needs a trace file (plus --bench-json FILE)");
+            };
+            let Some(bench_json) = args.flags.get("bench-json") else {
+                bail!("trace hidden needs --bench-json FILE (the overlap bench artifact)");
+            };
+            tetris::trace::diff::hidden_files(trace, bench_json, args.get("tolerance-pct", 15.0f64))
+        }
+        other => bail!("unknown trace subcommand {other:?} (expected check, diff or hidden)"),
     }
 }
 
@@ -698,6 +760,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "" => Some(tetris::plan::PlanStore::default_path().to_string_lossy().into_owned()),
         p => Some(p.to_string()),
     };
+    // `--metrics-scrape FILE[:SECS]`: split on the LAST ':' so paths
+    // with colons still work; a non-numeric suffix is part of the path.
+    let metrics_scrape = args.flags.get("metrics-scrape").map(|spec| {
+        match spec.rsplit_once(':') {
+            Some((path, secs)) if !path.is_empty() => match secs.parse::<u64>() {
+                Ok(s) => (path.to_string(), s.max(1)),
+                Err(_) => (spec.clone(), 1),
+            },
+            _ => (spec.clone(), 1),
+        }
+    });
     let cfg = ServeConfig {
         addr: args.str("addr", "127.0.0.1:7466"),
         dispatchers: args.get("workers", 2usize).max(1),
@@ -716,6 +789,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fingerprint: None,
         overlap,
         overlap_explicit,
+        metrics_scrape,
     };
     let handle = Server::start(cfg.clone(), default_worker_factory(threads))?;
     if let Some(path) = args.flags.get("addr-file") {
@@ -865,7 +939,15 @@ fn cmd_load(args: &Args) -> Result<()> {
         sweep_factor: args.get("sweep-factor", 2.0f64),
         max_rungs: args.get("max-rungs", 6usize).max(1),
         stop_reject_frac: args.get("stop-reject-frac", 0.5f64),
+        retry: args.get("retry", 0usize),
+        metrics_scrape: args.flags.get("metrics-scrape").cloned(),
     };
+    if cfg.metrics_scrape.is_some() && cfg.addr.is_some() {
+        println!(
+            "tetris load: note: --metrics-scrape only applies to a server this harness \
+             spawns; pass it to the running `tetris serve` instead"
+        );
+    }
     // Target: an already-running server via --addr (no /proc sampling —
     // we may not own the pid), else spawn the release binary ourselves.
     let (addr, mut spawned) = match &cfg.addr {
@@ -1043,7 +1125,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "boundary" => harness::run_boundary(scale, threads),
         "serve" => harness::run_serve(scale, threads),
         "plan" => harness::run_plan(scale, threads, args.flags.get("plan-store").map(String::as_str)),
-        "overlap" => harness::run_overlap(scale, threads),
+        "overlap" => {
+            let mode = match args.str("mode", "both").as_str() {
+                "on" => Some(Overlap::On),
+                "off" => Some(Overlap::Off),
+                "both" => None,
+                other => bail!("unknown overlap --mode {other:?} (expected on, off or both)"),
+            };
+            harness::run_overlap_mode(scale, threads, mode)
+        }
         "comm" => vec![("comm".to_string(), harness::run_comm())],
         "mxu" => {
             let rt = rt.context("mxu bench needs artifacts")?;

@@ -345,6 +345,12 @@ impl Executor {
                             "reply",
                             &[("job", job.spec.id.as_str().into()), ("ok", 1u64.into())],
                         );
+                        crate::trace::flow_finish(
+                            "serve",
+                            "job",
+                            crate::trace::flow_id(&job.spec.id),
+                            &[],
+                        );
                     }
                     let _ = job.reply.send(result.to_json().to_string());
                 }
@@ -358,6 +364,12 @@ impl Executor {
                             "serve",
                             "reply",
                             &[("job", job.spec.id.as_str().into()), ("ok", 0u64.into())],
+                        );
+                        crate::trace::flow_finish(
+                            "serve",
+                            "job",
+                            crate::trace::flow_id(&job.spec.id),
+                            &[],
                         );
                     }
                     let _ = job.reply.send(reply.to_json().to_string());

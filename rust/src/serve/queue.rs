@@ -89,11 +89,16 @@ impl AdmissionQueue {
         let adm = self.push_inner(spec, input, reply);
         if let Some(id) = trace_id {
             match &adm {
-                Admission::Admitted(seq) => crate::trace::instant(
-                    "serve",
-                    "admit",
-                    &[("job", id.as_str().into()), ("seq", (*seq).into())],
-                ),
+                Admission::Admitted(seq) => {
+                    crate::trace::instant(
+                        "serve",
+                        "admit",
+                        &[("job", id.as_str().into()), ("seq", (*seq).into())],
+                    );
+                    // step in the job's accept→reply flow (rejects are
+                    // finished by the caller's reject reply instead)
+                    crate::trace::flow_step("serve", "job", crate::trace::flow_id(&id), &[]);
+                }
                 Admission::Rejected { retry_after_ms, .. } => crate::trace::instant(
                     "serve",
                     "reject",
@@ -207,6 +212,12 @@ impl AdmissionQueue {
                         ("job", job.spec.id.as_str().into()),
                         ("queue_us", (job.admitted_at.elapsed().as_micros() as u64).into()),
                     ],
+                );
+                crate::trace::flow_step(
+                    "serve",
+                    "job",
+                    crate::trace::flow_id(&job.spec.id),
+                    &[],
                 );
             }
         }

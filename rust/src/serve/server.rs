@@ -75,6 +75,11 @@ pub struct ServeConfig {
     pub overlap: Overlap,
     /// Whether `--overlap` was passed explicitly (beats stored plans).
     pub overlap_explicit: bool,
+    /// Periodic metrics scrape (`--metrics-scrape FILE[:SECS]`):
+    /// `Some((path, secs))` appends one timestamped
+    /// [`MetricsRegistry`] snapshot per interval to `path` as JSONL,
+    /// gated by `tetris bench check`.
+    pub metrics_scrape: Option<(String, u64)>,
 }
 
 impl Default for ServeConfig {
@@ -95,6 +100,7 @@ impl Default for ServeConfig {
             fingerprint: None,
             overlap: Overlap::Auto,
             overlap_explicit: false,
+            metrics_scrape: None,
         }
     }
 }
@@ -279,12 +285,57 @@ impl Server {
             addr,
             scale: cfg.scale,
         });
+        if let Some((path, secs)) = cfg.metrics_scrape.clone() {
+            let ctx = ctx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("tetris-scrape".into())
+                    .spawn(move || scrape_loop(&path, secs, &ctx))?,
+            );
+        }
         threads.push(
             std::thread::Builder::new()
                 .name("tetris-accept".into())
                 .spawn(move || accept_loop(listener, ctx))?,
         );
         Ok(ServerHandle { addr, queue, shutdown, pending, threads })
+    }
+}
+
+/// Append-only JSONL scraper: one [`metrics_line`] snapshot per
+/// interval plus a `ts_ms` key (milliseconds since the scraper
+/// started), flushed line by line so the file is valid mid-run.  The
+/// snapshot reuses the same snapshot-then-format path as the `METRICS`
+/// verb, so `_total` keys are monotone across lines by construction —
+/// the two invariants (`ts_ms` strictly increasing, `_total` monotone)
+/// are what `tetris bench check` gates on the file.
+fn scrape_loop(path: &str, secs: u64, ctx: &Ctx) {
+    let mut file = match std::fs::OpenOptions::new().create(true).append(true).open(path) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("tetris serve: cannot open metrics scrape file {path}: {e}");
+            return;
+        }
+    };
+    let start = Instant::now();
+    let period = Duration::from_secs(secs.max(1));
+    let mut next = start;
+    loop {
+        let mut m = match metrics_line(ctx) {
+            Json::Obj(m) => m,
+            _ => return,
+        };
+        m.insert("ts_ms".to_string(), Json::Num(start.elapsed().as_secs_f64() * 1e3));
+        if writeln!(file, "{}", Json::Obj(m)).is_err() {
+            return;
+        }
+        next += period;
+        while Instant::now() < next {
+            if ctx.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
     }
 }
 
@@ -381,12 +432,18 @@ fn handle_job_line(line: &str, ctx: &Ctx, tx: mpsc::Sender<String>) {
             "accept",
             &[("job", spec.id.as_str().into()), ("bench", spec.bench.as_str().into())],
         );
+        // One flow per job, started at the accept instant and finished
+        // exactly once at whichever reply ends the job's life — the
+        // dispatcher's reply for admitted jobs, the local error/reject
+        // reply otherwise.  `trace check` enforces the pairing.
+        crate::trace::flow_start("serve", "job", crate::trace::flow_id(&spec.id), &[]);
     }
     let default_shape = match crate::stencil::spec::get(&spec.bench) {
         Some(_) => crate::bench::scaled_problem(&spec.bench, ctx.scale).0,
         None => {
             ctx.stats.lock().unwrap().errors += 1;
             let reply = JobResult::failure(&spec.id, format!("unknown bench {:?}", spec.bench));
+            flow_finish_job(&spec.id);
             let _ = tx.send(reply.to_json().to_string());
             return;
         }
@@ -419,6 +476,7 @@ fn handle_job_line(line: &str, ctx: &Ctx, tx: mpsc::Sender<String>) {
                 ),
                 0,
             );
+            flow_finish_job(&spec.id);
             let _ = tx.send(reply.to_json().to_string());
             return;
         }
@@ -427,6 +485,7 @@ fn handle_job_line(line: &str, ctx: &Ctx, tx: mpsc::Sender<String>) {
         Ok(input) => input,
         Err(e) => {
             ctx.stats.lock().unwrap().errors += 1;
+            flow_finish_job(&spec.id);
             let _ = tx.send(JobResult::failure(&spec.id, format!("{e}")).to_json().to_string());
             return;
         }
@@ -439,8 +498,18 @@ fn handle_job_line(line: &str, ctx: &Ctx, tx: mpsc::Sender<String>) {
         Admission::Rejected { reason, retry_after_ms } => {
             ctx.stats.lock().unwrap().rejected += 1;
             let reply = JobResult::reject(&id, reason, retry_after_ms);
+            flow_finish_job(&id);
             let _ = tx.send(reply.to_json().to_string());
         }
+    }
+}
+
+/// Finish a serve `job` flow (started at the accept instant).  Recorded
+/// before the reply is sent, so a client observing the reply line is
+/// guaranteed the trace already holds the flow finish.
+fn flow_finish_job(id: &str) {
+    if crate::trace::enabled() {
+        crate::trace::flow_finish("serve", "job", crate::trace::flow_id(id), &[]);
     }
 }
 

@@ -15,9 +15,19 @@
 //!   same `sched` tag — `task < 3·bw·nf·nw` — and the span's name must
 //!   match the id's stage under the fixed `3·chain + stage` layout
 //!   (stage 0/1/2 = assemble/compute/writeback), so recorded ids are
-//!   bit-equal to the ids the static race checker certified.
+//!   bit-equal to the ids the static race checker certified;
+//! * flow events (`ph:"s"/"t"/"f"`) pair per `(cat, name, id)`: exactly
+//!   one start and exactly one finish each, and every `serve`/`job`
+//!   flow id must be the FNV-1a of some job id seen on a serve instant
+//!   — the cross-thread arrows point at real traced jobs.
+//!
+//! Traces truncated at the ring-buffer cap (`metadata.dropped_events >
+//! 0`) get their balance/flow findings demoted to counted warnings —
+//! drop-newest truncation legitimately leaves spans unclosed and flows
+//! unpaired on the affected tids — unless `--strict`.  `--require-flows`
+//! additionally fails a trace containing no flow events at all.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
@@ -25,16 +35,29 @@ use crate::util::json::Json;
 /// Stage names in WindowPlan id order (`id % 3` indexes this).
 const STAGES: [&str; 3] = ["assemble", "compute", "writeback"];
 
-/// All violations in one parsed trace; empty means it passed.
+/// All violations in one parsed trace (strict: truncation demotes
+/// nothing); empty means it passed.
 pub fn check_json(name: &str, j: &Json) -> Vec<String> {
+    check_json_opts(name, j, true).0
+}
+
+/// `(violations, warnings)`.  With `strict == false` and
+/// `metadata.dropped_events > 0`, span-balance and flow-pairing
+/// findings are demoted to warnings reporting the truncated tids;
+/// timestamp and pipeline-model violations stay fatal either way (the
+/// drop-newest policy cannot produce those).
+pub fn check_json_opts(name: &str, j: &Json, strict: bool) -> (Vec<String>, Vec<String>) {
     let mut out = Vec::new();
+    // balance/flow findings: demotable under truncation
+    let mut soft = Vec::new();
+    let mut truncated_tids: BTreeSet<u64> = BTreeSet::new();
     let Some(events) = j.at(&["traceEvents"]).as_arr() else {
         out.push(format!("{name}: no traceEvents array"));
-        return out;
+        return (out, Vec::new());
     };
     if events.is_empty() {
         out.push(format!("{name}: traceEvents is empty"));
-        return out;
+        return (out, Vec::new());
     }
 
     // group per (pid, tid) track, preserving array order
@@ -79,12 +102,16 @@ pub fn check_json(name: &str, j: &Json) -> Vec<String> {
             match e.at(&["ph"]).as_str().unwrap_or("") {
                 "B" => stack.push((cat, ename)),
                 "E" => match stack.pop() {
-                    None => out.push(format!(
-                        "{name}: pid {pid} tid {tid}: end of {cat}/{ename:?} with no open span"
-                    )),
+                    None => {
+                        truncated_tids.insert(*tid);
+                        soft.push(format!(
+                            "{name}: pid {pid} tid {tid}: end of {cat}/{ename:?} with no open span"
+                        ));
+                    }
                     Some((bcat, bname)) => {
                         if bname != ename || bcat != cat {
-                            out.push(format!(
+                            truncated_tids.insert(*tid);
+                            soft.push(format!(
                                 "{name}: pid {pid} tid {tid}: span mismatch: \
                                  {bcat}/{bname:?} closed by {cat}/{ename:?}"
                             ));
@@ -96,7 +123,8 @@ pub fn check_json(name: &str, j: &Json) -> Vec<String> {
             }
         }
         for (cat, sname) in &stack {
-            out.push(format!("{name}: pid {pid} tid {tid}: unclosed span {cat}/{sname:?}"));
+            truncated_tids.insert(*tid);
+            soft.push(format!("{name}: pid {pid} tid {tid}: unclosed span {cat}/{sname:?}"));
         }
     }
 
@@ -135,21 +163,101 @@ pub fn check_json(name: &str, j: &Json) -> Vec<String> {
             ));
         }
     }
-    out
+
+    // flow pairing per (cat, name, id): exactly one start, exactly one
+    // finish; serve/job flow ids must hash back to a traced job id
+    #[derive(Default)]
+    struct FlowAgg {
+        starts: u64,
+        steps: u64,
+        finishes: u64,
+    }
+    let mut flows: BTreeMap<(String, String, String), FlowAgg> = BTreeMap::new();
+    let mut job_ids: BTreeSet<String> = BTreeSet::new();
+    for (i, e) in events.iter().enumerate() {
+        let ph = e.at(&["ph"]).as_str().unwrap_or("");
+        if ph == "i" && e.at(&["cat"]).as_str() == Some("serve") {
+            if let Some(job) = e.at(&["args", "job"]).as_str() {
+                job_ids.insert(format!("{:x}", super::flow_id(job)));
+            }
+        }
+        if !matches!(ph, "s" | "t" | "f") {
+            continue;
+        }
+        let Some(id) = e.at(&["id"]).as_str() else {
+            soft.push(format!("{name}: traceEvents[{i}]: flow event without a string id"));
+            continue;
+        };
+        let cat = e.at(&["cat"]).as_str().unwrap_or("").to_string();
+        let fname = e.at(&["name"]).as_str().unwrap_or("").to_string();
+        let f = flows.entry((cat, fname, id.to_string())).or_default();
+        match ph {
+            "s" => f.starts += 1,
+            "t" => f.steps += 1,
+            _ => f.finishes += 1,
+        }
+    }
+    for ((cat, fname, id), f) in &flows {
+        if f.starts == 0 {
+            soft.push(format!(
+                "{name}: flow {cat}/{fname} id {id}: {} step/finish event(s) with no start",
+                f.steps + f.finishes
+            ));
+        } else if f.starts > 1 {
+            soft.push(format!(
+                "{name}: flow {cat}/{fname} id {id}: {} starts (want exactly 1)",
+                f.starts
+            ));
+        } else if f.finishes != 1 {
+            soft.push(format!(
+                "{name}: flow {cat}/{fname} id {id}: started but {} finish(es) (want exactly 1)",
+                f.finishes
+            ));
+        }
+        if cat == "serve" && fname == "job" && !job_ids.contains(id) {
+            soft.push(format!("{name}: flow serve/job id {id} matches no traced job id"));
+        }
+    }
+
+    let mut warnings = Vec::new();
+    let dropped = j.at(&["metadata", "dropped_events"]).as_u64().unwrap_or(0);
+    if dropped > 0 && !strict {
+        warnings.push(format!(
+            "{name}: {dropped} event(s) dropped at the ring-buffer cap; \
+             {} balance/flow finding(s) demoted to warnings (tids {:?})",
+            soft.len(),
+            truncated_tids
+        ));
+        warnings.append(&mut soft);
+    } else {
+        out.append(&mut soft);
+    }
+    (out, warnings)
 }
 
-/// Driver for `tetris trace check FILE...`: parse each trace, print
-/// per-file verdicts, error out if anything is violated.
-pub fn check_files(paths: &[String]) -> Result<()> {
+/// Driver for `tetris trace check [--strict] [--require-flows]
+/// FILE...`: parse each trace, print per-file verdicts (warnings are
+/// printed but not fatal), error out if anything is violated.
+pub fn check_files(paths: &[String], strict: bool, require_flows: bool) -> Result<()> {
     crate::ensure!(!paths.is_empty(), "trace check needs at least one trace-file path");
     let mut violations = Vec::new();
     for path in paths {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         let parsed = Json::parse(text.trim()).with_context(|| format!("parsing {path}"))?;
-        let v = check_json(path, &parsed);
-        let n = parsed.at(&["traceEvents"]).as_arr().map_or(0, |a| a.len());
+        let (mut v, warnings) = check_json_opts(path, &parsed, strict);
+        let events = parsed.at(&["traceEvents"]).as_arr().unwrap_or(&[]);
+        let nflows = events
+            .iter()
+            .filter(|e| matches!(e.at(&["ph"]).as_str(), Some("s" | "t" | "f")))
+            .count();
+        if require_flows && nflows == 0 {
+            v.push(format!("{path}: no flow events (--require-flows)"));
+        }
+        for w in &warnings {
+            println!("trace check: WARNING: {w}");
+        }
         if v.is_empty() {
-            println!("trace check: {path}: OK ({n} events)");
+            println!("trace check: {path}: OK ({} events, {nflows} flow)", events.len());
         } else {
             for msg in &v {
                 println!("trace check: VIOLATION: {msg}");
@@ -282,16 +390,110 @@ mod tests {
 
     #[test]
     fn check_files_flags_missing_and_bad_files() {
-        assert!(check_files(&[]).is_err());
-        assert!(check_files(&["/nonexistent/trace.json".into()]).is_err());
+        assert!(check_files(&[], false, false).is_err());
+        assert!(check_files(&["/nonexistent/trace.json".into()], false, false).is_err());
         let dir = std::env::temp_dir();
         let good = dir.join(format!("trace_check_good_{}.json", std::process::id()));
         std::fs::write(&good, r#"{"traceEvents":[{"ph":"i","ts":0,"pid":1,"tid":0,"cat":"serve","name":"accept"}]}"#).unwrap();
-        assert!(check_files(&[good.to_string_lossy().into_owned()]).is_ok());
+        let good_path = good.to_string_lossy().into_owned();
+        assert!(check_files(&[good_path.clone()], false, false).is_ok());
+        // --require-flows fails a trace with no flow events at all
+        assert!(check_files(&[good_path], false, true).is_err());
         let bad = dir.join(format!("trace_check_bad_{}.json", std::process::id()));
         std::fs::write(&bad, r#"{"traceEvents":[{"ph":"B","ts":0,"pid":1,"tid":0,"cat":"x","name":"y"}]}"#).unwrap();
-        assert!(check_files(&[bad.to_string_lossy().into_owned()]).is_err());
+        assert!(check_files(&[bad.to_string_lossy().into_owned()], false, false).is_err());
         let _ = std::fs::remove_file(&good);
         let _ = std::fs::remove_file(&bad);
+    }
+
+    fn flow(ph: &str, ts: f64, tid: u64, cat: &str, name: &str, id: &str) -> String {
+        format!(
+            r#"{{"ph":"{ph}","ts":{ts},"pid":1,"tid":{tid},"cat":"{cat}","name":"{name}","id":"{id}"}}"#
+        )
+    }
+
+    /// The satellite negative test: an orphaned flow start (no matching
+    /// finish) must fail `trace check`; a paired flow passes, including
+    /// across threads.
+    #[test]
+    fn orphaned_flow_start_fails() {
+        let hex = format!("{:x}", crate::trace::flow_id("j1"));
+        let accept = ev("i", 0.0, 0, "serve", "accept", r#""args":{"job":"j1"}"#);
+        let orphan = doc(&[accept.clone(), flow("s", 1.0, 0, "serve", "job", &hex)]);
+        let v = check_json("t", &orphan);
+        assert!(v.iter().any(|m| m.contains("0 finish(es)")), "{v:?}");
+
+        let paired = doc(&[
+            accept.clone(),
+            flow("s", 1.0, 0, "serve", "job", &hex),
+            flow("t", 2.0, 1, "serve", "job", &hex),
+            flow("f", 3.0, 2, "serve", "job", &hex),
+        ]);
+        assert!(check_json("t", &paired).is_empty(), "{:?}", check_json("t", &paired));
+
+        let finish_only = doc(&[accept.clone(), flow("f", 1.0, 0, "serve", "job", &hex)]);
+        let v = check_json("t", &finish_only);
+        assert!(v.iter().any(|m| m.contains("with no start")), "{v:?}");
+
+        let double_start = doc(&[
+            accept,
+            flow("s", 1.0, 0, "serve", "job", &hex),
+            flow("s", 2.0, 1, "serve", "job", &hex),
+            flow("f", 3.0, 2, "serve", "job", &hex),
+        ]);
+        let v = check_json("t", &double_start);
+        assert!(v.iter().any(|m| m.contains("2 starts")), "{v:?}");
+    }
+
+    /// serve/job flow ids must hash back to a job id seen on a serve
+    /// instant; other categories' flows are exempt from the subset rule.
+    #[test]
+    fn serve_flow_ids_must_match_traced_jobs() {
+        let hex = format!("{:x}", crate::trace::flow_id("ghost-job"));
+        let d = doc(&[
+            ev("i", 0.0, 0, "serve", "accept", r#""args":{"job":"other"}"#),
+            flow("s", 1.0, 0, "serve", "job", &hex),
+            flow("f", 2.0, 1, "serve", "job", &hex),
+        ]);
+        let v = check_json("t", &d);
+        assert!(v.iter().any(|m| m.contains("matches no traced job id")), "{v:?}");
+
+        let pipeline = doc(&[
+            flow("s", 1.0, 0, "pipeline", "chain", "100000"),
+            flow("f", 2.0, 1, "pipeline", "chain", "100000"),
+        ]);
+        assert!(check_json("t", &pipeline).is_empty(), "{:?}", check_json("t", &pipeline));
+    }
+
+    /// Truncated traces (`metadata.dropped_events > 0`) demote balance
+    /// and flow findings to warnings unless strict; fatal model errors
+    /// (timestamp regressions) stay fatal either way.
+    #[test]
+    fn dropped_events_demote_balance_findings() {
+        let with_meta = |events: &[String]| {
+            parse(&format!(
+                r#"{{"traceEvents":[{}],"metadata":{{"dropped_events":3}}}}"#,
+                events.join(",")
+            ))
+        };
+        let truncated = with_meta(&[ev("B", 0.0, 0, "pool", "task", "")]);
+        let (v, w) = check_json_opts("t", &truncated, false);
+        assert!(v.is_empty(), "{v:?}");
+        assert!(w.iter().any(|m| m.contains("unclosed span")), "{w:?}");
+        assert!(w.iter().any(|m| m.contains("3 event(s) dropped")), "{w:?}");
+        // --strict keeps the finding fatal
+        let (v, _) = check_json_opts("t", &truncated, true);
+        assert!(v.iter().any(|m| m.contains("unclosed span")), "{v:?}");
+        // without the metadata key, non-strict still fails
+        let plain = doc(&[ev("B", 0.0, 0, "pool", "task", "")]);
+        let (v, _) = check_json_opts("t", &plain, false);
+        assert!(v.iter().any(|m| m.contains("unclosed span")), "{v:?}");
+        // a timestamp regression is fatal even under truncation
+        let regress = with_meta(&[
+            ev("i", 5.0, 0, "serve", "admit", ""),
+            ev("i", 1.0, 0, "serve", "admit", ""),
+        ]);
+        let (v, _) = check_json_opts("t", &regress, false);
+        assert!(v.iter().any(|m| m.contains("timestamps regress")), "{v:?}");
     }
 }

@@ -1,0 +1,406 @@
+//! Quantitative trace comparison — `tetris trace diff A B` aligns two
+//! exported Chrome traces by `(cat, name)` phase and reports per-phase
+//! count / total-µs / total-bytes deltas, so "paste grew 40%" reads as
+//! exactly that instead of "the run got slower".  `--fail-over PCT`
+//! turns the report into a CI gate: any phase present in both traces
+//! whose total µs grew by more than PCT% is a violation.
+//!
+//! The same module derives the §5.3 overlap witness (`tetris trace
+//! hidden`): summed assemble/writeback span time whose *end* falls
+//! inside some `pipeline/compute` span interval — leader work that
+//! demonstrably ran while a compute slab was in flight.  CI compares it
+//! against `RunMetrics.overlap_hidden` from the matching
+//! `BENCH_overlap_on.json`, making the trace an independent second
+//! witness for the overlap claim.
+//!
+//! Output is byte-stable: phases sort by key, durations round to whole
+//! µs, and growth percentages print with one decimal — golden-file
+//! tests assert the exact text.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+/// Aggregate of one `(cat, name)` phase in one trace: `count` is the
+/// number of `B` spans plus `i` instants, `total_us` the summed
+/// (LIFO-paired) span durations, `total_bytes` the summed `bytes` args
+/// on begin/instant events.  Flow events carry no duration or payload
+/// and are excluded.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseAgg {
+    pub count: u64,
+    pub total_us: u64,
+    pub total_bytes: u64,
+}
+
+/// Fold a parsed Chrome trace into per-phase aggregates, keyed
+/// `"{cat}/{name}"`.  Span pairing mirrors `trace check`: a LIFO stack
+/// per `(pid, tid)` track, so a malformed trace degrades gracefully
+/// (orphan ends attribute nothing) rather than erroring — `check` is
+/// the well-formedness gate, `diff` only measures.
+pub fn aggregate(j: &Json) -> BTreeMap<String, PhaseAgg> {
+    let mut out: BTreeMap<String, PhaseAgg> = BTreeMap::new();
+    let Some(events) = j.at(&["traceEvents"]).as_arr() else {
+        return out;
+    };
+    let mut stacks: BTreeMap<(u64, u64), Vec<(String, f64)>> = BTreeMap::new();
+    for e in events {
+        let cat = e.at(&["cat"]).as_str().unwrap_or("");
+        let name = e.at(&["name"]).as_str().unwrap_or("");
+        let ts = e.at(&["ts"]).as_f64().unwrap_or(0.0);
+        let bytes = e.at(&["args", "bytes"]).as_u64().unwrap_or(0);
+        let track =
+            (e.at(&["pid"]).as_u64().unwrap_or(0), e.at(&["tid"]).as_u64().unwrap_or(0));
+        match e.at(&["ph"]).as_str().unwrap_or("") {
+            "B" => {
+                let key = format!("{cat}/{name}");
+                let agg = out.entry(key.clone()).or_default();
+                agg.count += 1;
+                agg.total_bytes += bytes;
+                stacks.entry(track).or_default().push((key, ts));
+            }
+            "E" => {
+                if let Some((bkey, bts)) = stacks.entry(track).or_default().pop() {
+                    out.entry(bkey).or_default().total_us += (ts - bts).max(0.0).round() as u64;
+                }
+            }
+            "i" => {
+                let agg = out.entry(format!("{cat}/{name}")).or_default();
+                agg.count += 1;
+                agg.total_bytes += bytes;
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Render the per-phase comparison (byte-stable) and collect
+/// `--fail-over` violations: phases present in both whose total µs grew
+/// by more than `fail_over` percent.
+pub fn diff_report(
+    a_name: &str,
+    b_name: &str,
+    a: &BTreeMap<String, PhaseAgg>,
+    b: &BTreeMap<String, PhaseAgg>,
+    fail_over: Option<f64>,
+) -> (String, Vec<String>) {
+    let mut lines = vec![format!("trace diff: A={a_name} B={b_name}")];
+    let mut violations = Vec::new();
+    let keys: BTreeSet<&String> = a.keys().chain(b.keys()).collect();
+    for key in keys {
+        match (a.get(key), b.get(key)) {
+            (Some(x), None) => lines.push(format!(
+                "{key}: only in A (count {}, us {}, bytes {})",
+                x.count, x.total_us, x.total_bytes
+            )),
+            (None, Some(y)) => lines.push(format!(
+                "{key}: only in B (count {}, us {}, bytes {})",
+                y.count, y.total_us, y.total_bytes
+            )),
+            (Some(x), Some(y)) => {
+                let pct = (x.total_us > 0).then(|| {
+                    (y.total_us as f64 - x.total_us as f64) / x.total_us as f64 * 100.0
+                });
+                let pct_s = match pct {
+                    Some(p) => format!("{p:+.1}%"),
+                    None => "n/a".into(),
+                };
+                lines.push(format!(
+                    "{key}: count {} -> {}; us {} -> {} ({pct_s}); bytes {} -> {}",
+                    x.count, y.count, x.total_us, y.total_us, x.total_bytes, y.total_bytes
+                ));
+                if let (Some(limit), Some(p)) = (fail_over, pct) {
+                    if p > limit {
+                        violations.push(format!(
+                            "{key}: total us grew {p:+.1}% > {limit}% ({} -> {})",
+                            x.total_us, y.total_us
+                        ));
+                    }
+                }
+            }
+            (None, None) => unreachable!("key came from one of the maps"),
+        }
+    }
+    (lines.join("\n"), violations)
+}
+
+/// Driver for `tetris trace diff A B [--fail-over PCT]`: print the
+/// report, error out when any phase crossed the threshold.
+pub fn diff_files(a_path: &str, b_path: &str, fail_over: Option<f64>) -> Result<()> {
+    let read = |p: &str| -> Result<BTreeMap<String, PhaseAgg>> {
+        let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+        let j = Json::parse(text.trim()).with_context(|| format!("parsing {p}"))?;
+        Ok(aggregate(&j))
+    };
+    let a = read(a_path)?;
+    let b = read(b_path)?;
+    let (report, violations) = diff_report(a_path, b_path, &a, &b, fail_over);
+    println!("{report}");
+    for v in &violations {
+        println!("trace diff: VIOLATION: {v}");
+    }
+    crate::ensure!(
+        violations.is_empty(),
+        "{} phase(s) over the --fail-over threshold",
+        violations.len()
+    );
+    Ok(())
+}
+
+/// Disagreements smaller than this are never flagged: the compute span
+/// brackets the whole task closure (slightly wider than the timed
+/// `run_slab` the `inflight` gauge brackets), so the two witnesses can
+/// legitimately differ by scheduling-noise amounts on short runs.
+pub const HIDDEN_FLOOR_MS: f64 = 2.0;
+
+/// Trace-derived §5.3 hidden-leader-time: summed duration (ms) of
+/// `pipeline` assemble/writeback spans whose **end** timestamp falls
+/// inside some `pipeline/compute` span interval — the same "leader work
+/// finished while a slab was in flight" accounting
+/// `RunMetrics.overlap_hidden` keeps, reconstructed independently from
+/// the trace (intervals may live on different threads; the comparison
+/// is global, which is the point of a cross-thread trace).
+pub fn hidden_ms_from_trace(j: &Json) -> f64 {
+    let Some(events) = j.at(&["traceEvents"]).as_arr() else {
+        return 0.0;
+    };
+    let mut stacks: BTreeMap<(u64, u64), Vec<(String, String, f64)>> = BTreeMap::new();
+    let mut compute: Vec<(f64, f64)> = Vec::new();
+    let mut moved: Vec<(f64, f64)> = Vec::new();
+    for e in events {
+        let ts = e.at(&["ts"]).as_f64().unwrap_or(0.0);
+        let track =
+            (e.at(&["pid"]).as_u64().unwrap_or(0), e.at(&["tid"]).as_u64().unwrap_or(0));
+        match e.at(&["ph"]).as_str().unwrap_or("") {
+            "B" => {
+                let cat = e.at(&["cat"]).as_str().unwrap_or("").to_string();
+                let name = e.at(&["name"]).as_str().unwrap_or("").to_string();
+                stacks.entry(track).or_default().push((cat, name, ts));
+            }
+            "E" => {
+                if let Some((cat, name, bts)) = stacks.entry(track).or_default().pop() {
+                    if cat == "pipeline" {
+                        match name.as_str() {
+                            "compute" => compute.push((bts, ts)),
+                            "assemble" | "writeback" => moved.push((bts, ts)),
+                            _ => {}
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    let hidden_us: f64 = moved
+        .iter()
+        .filter(|&&(_, end)| compute.iter().any(|&(cb, ce)| cb <= end && end <= ce))
+        .map(|&(b, e)| e - b)
+        .sum();
+    hidden_us / 1e3
+}
+
+/// Pull the `hidden {:.3} ms` figure out of a `run_overlap` row's
+/// `extra` string — the format is the contract (see
+/// `crate::bench::run_overlap`); a format change there must update this.
+pub fn extract_hidden_ms(extra: &str) -> Option<f64> {
+    let rest = &extra[extra.find("hidden ")? + "hidden ".len()..];
+    rest[..rest.find(" ms")?].parse().ok()
+}
+
+/// Driver for `tetris trace hidden TRACE --bench-json FILE`: the trace
+/// and `RunMetrics.overlap_hidden` (from the bench artifact's
+/// `overlap=on` row) must agree within `tolerance_pct` percent of the
+/// larger figure, with a [`HIDDEN_FLOOR_MS`] absolute floor.
+pub fn hidden_files(trace_path: &str, bench_path: &str, tolerance_pct: f64) -> Result<()> {
+    let text =
+        std::fs::read_to_string(trace_path).with_context(|| format!("reading {trace_path}"))?;
+    let trace =
+        Json::parse(text.trim()).with_context(|| format!("parsing {trace_path}"))?;
+    let trace_ms = hidden_ms_from_trace(&trace);
+    let btext =
+        std::fs::read_to_string(bench_path).with_context(|| format!("reading {bench_path}"))?;
+    let bench = Json::parse(btext.trim()).with_context(|| format!("parsing {bench_path}"))?;
+    let metric_ms = bench
+        .at(&["sections", "overlap"])
+        .as_arr()
+        .into_iter()
+        .flatten()
+        .filter(|r| r.at(&["label"]).as_str() == Some("overlap=on"))
+        .find_map(|r| extract_hidden_ms(r.at(&["extra"]).as_str().unwrap_or("")));
+    let Some(metric_ms) = metric_ms else {
+        crate::bail!("{bench_path}: no overlap=on row with a 'hidden X ms' extra");
+    };
+    let tol = (tolerance_pct / 100.0 * trace_ms.max(metric_ms)).max(HIDDEN_FLOOR_MS);
+    println!(
+        "trace hidden: {trace_path}: trace-derived {trace_ms:.3} ms vs \
+         RunMetrics.overlap_hidden {metric_ms:.3} ms (tolerance +/-{tol:.3} ms)"
+    );
+    crate::ensure!(
+        (trace_ms - metric_ms).abs() <= tol,
+        "trace-derived hidden time {trace_ms:.3} ms disagrees with \
+         RunMetrics.overlap_hidden {metric_ms:.3} ms beyond +/-{tol:.3} ms"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOLDEN_A: &str = include_str!("../../tests/golden/trace_diff_a.json");
+    const GOLDEN_B: &str = include_str!("../../tests/golden/trace_diff_b.json");
+    const GOLDEN_EXPECTED: &str = include_str!("../../tests/golden/trace_diff.expected");
+
+    fn parse(s: &str) -> Json {
+        Json::parse(s.trim()).unwrap()
+    }
+
+    #[test]
+    fn aggregate_counts_durations_and_bytes() {
+        let j = parse(
+            r#"{"traceEvents":[
+              {"ph":"B","ts":10,"pid":1,"tid":0,"cat":"leader","name":"extract","args":{"bytes":100}},
+              {"ph":"E","ts":40,"pid":1,"tid":0,"cat":"leader","name":"extract"},
+              {"ph":"B","ts":50,"pid":1,"tid":0,"cat":"leader","name":"extract","args":{"bytes":60}},
+              {"ph":"E","ts":55,"pid":1,"tid":0,"cat":"leader","name":"extract"},
+              {"ph":"i","ts":60,"pid":1,"tid":0,"cat":"serve","name":"batch","args":{"bytes":7}},
+              {"ph":"s","ts":61,"pid":1,"tid":0,"cat":"serve","name":"job","id":"ab"}
+            ]}"#,
+        );
+        let agg = aggregate(&j);
+        let ex = agg.get("leader/extract").unwrap();
+        assert_eq!((ex.count, ex.total_us, ex.total_bytes), (2, 35, 160));
+        let batch = agg.get("serve/batch").unwrap();
+        assert_eq!((batch.count, batch.total_us, batch.total_bytes), (1, 0, 7));
+        // flow events are excluded from aggregation
+        assert!(!agg.contains_key("serve/job"), "{agg:?}");
+    }
+
+    /// Nested and cross-thread spans pair per-track LIFO, like `check`.
+    #[test]
+    fn aggregate_pairs_per_track() {
+        let j = parse(
+            r#"{"traceEvents":[
+              {"ph":"B","ts":0,"pid":1,"tid":0,"cat":"pool","name":"task"},
+              {"ph":"B","ts":5,"pid":1,"tid":1,"cat":"pool","name":"task"},
+              {"ph":"E","ts":7,"pid":1,"tid":1,"cat":"pool","name":"task"},
+              {"ph":"E","ts":20,"pid":1,"tid":0,"cat":"pool","name":"task"}
+            ]}"#,
+        );
+        let agg = aggregate(&j);
+        assert_eq!(agg.get("pool/task").unwrap().total_us, 22);
+    }
+
+    /// The golden pair's report is byte-identical to the checked-in
+    /// expectation — the CLI output is a stable format.
+    #[test]
+    fn golden_diff_is_byte_stable() {
+        let a = aggregate(&parse(GOLDEN_A));
+        let b = aggregate(&parse(GOLDEN_B));
+        let (report, violations) = diff_report("A", "B", &a, &b, None);
+        assert_eq!(report, GOLDEN_EXPECTED.trim_end(), "golden drift");
+        assert!(violations.is_empty());
+    }
+
+    #[test]
+    fn fail_over_threshold_gates_growth() {
+        let a = aggregate(&parse(GOLDEN_A));
+        let b = aggregate(&parse(GOLDEN_B));
+        // leader/extract grows +30.0% in the golden pair
+        let (_, v) = diff_report("A", "B", &a, &b, Some(20.0));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("leader/extract"), "{v:?}");
+        let (_, v) = diff_report("A", "B", &a, &b, Some(50.0));
+        assert!(v.is_empty(), "{v:?}");
+        // shrinkage never violates
+        let (_, v) = diff_report("B", "A", &b, &a, Some(0.0));
+        assert!(v.iter().all(|m| !m.contains("leader/extract")), "{v:?}");
+    }
+
+    #[test]
+    fn diff_files_exit_codes() {
+        let dir = std::env::temp_dir();
+        let pa = dir.join(format!("trace_diff_a_{}.json", std::process::id()));
+        let pb = dir.join(format!("trace_diff_b_{}.json", std::process::id()));
+        std::fs::write(&pa, GOLDEN_A).unwrap();
+        std::fs::write(&pb, GOLDEN_B).unwrap();
+        let (pa, pb) = (pa.to_string_lossy().into_owned(), pb.to_string_lossy().into_owned());
+        assert!(diff_files(&pa, &pb, None).is_ok());
+        assert!(diff_files(&pa, &pb, Some(50.0)).is_ok());
+        assert!(diff_files(&pa, &pb, Some(20.0)).is_err());
+        assert!(diff_files("/nonexistent/a.json", &pb, None).is_err());
+        let _ = std::fs::remove_file(&pa);
+        let _ = std::fs::remove_file(&pb);
+    }
+
+    #[test]
+    fn hidden_counts_only_ends_inside_compute() {
+        let j = parse(
+            r#"{"traceEvents":[
+              {"ph":"B","ts":100,"pid":1,"tid":1,"cat":"pipeline","name":"compute","args":{"task":1}},
+              {"ph":"E","ts":200,"pid":1,"tid":1,"cat":"pipeline","name":"compute"},
+              {"ph":"B","ts":50,"pid":1,"tid":2,"cat":"pipeline","name":"assemble","args":{"task":0}},
+              {"ph":"E","ts":90,"pid":1,"tid":2,"cat":"pipeline","name":"assemble"},
+              {"ph":"B","ts":120,"pid":1,"tid":2,"cat":"pipeline","name":"writeback","args":{"task":2}},
+              {"ph":"E","ts":180,"pid":1,"tid":2,"cat":"pipeline","name":"writeback"},
+              {"ph":"B","ts":190,"pid":1,"tid":3,"cat":"leader","name":"paste"},
+              {"ph":"E","ts":195,"pid":1,"tid":3,"cat":"leader","name":"paste"}
+            ]}"#,
+        );
+        // assemble ends at 90 (outside compute [100,200]) — not hidden;
+        // writeback ends at 180 (inside) — its full 60us counts; the
+        // leader span is not a pipeline stage and never counts.
+        let ms = hidden_ms_from_trace(&j);
+        assert!((ms - 0.060).abs() < 1e-9, "{ms}");
+    }
+
+    #[test]
+    fn hidden_extraction_from_overlap_extra() {
+        let extra = "summed idle 12.500 ms; hidden 3.250 ms; overlapped msgs 5/9";
+        assert_eq!(extract_hidden_ms(extra), Some(3.25));
+        assert_eq!(extract_hidden_ms("no such key"), None);
+        assert_eq!(extract_hidden_ms("hidden x ms"), None);
+    }
+
+    #[test]
+    fn hidden_files_agreement_gate() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let tp = dir.join(format!("trace_hidden_{pid}.json"));
+        std::fs::write(
+            &tp,
+            r#"{"traceEvents":[
+              {"ph":"B","ts":0,"pid":1,"tid":1,"cat":"pipeline","name":"compute"},
+              {"ph":"E","ts":10000,"pid":1,"tid":1,"cat":"pipeline","name":"compute"},
+              {"ph":"B","ts":1000,"pid":1,"tid":2,"cat":"pipeline","name":"writeback"},
+              {"ph":"E","ts":5000,"pid":1,"tid":2,"cat":"pipeline","name":"writeback"}
+            ]}"#,
+        )
+        .unwrap();
+        let bench = |hidden: f64| {
+            let bp = dir.join(format!("bench_hidden_{pid}_{hidden}.json"));
+            std::fs::write(
+                &bp,
+                format!(
+                    r#"{{"sections":{{"overlap":[{{"label":"overlap=off","extra":"summed idle 9.000 ms; hidden 0.000 ms; overlapped msgs 0/9"}},{{"label":"overlap=on","extra":"summed idle 2.000 ms; hidden {hidden:.3} ms; overlapped msgs 5/9"}}]}}}}"#
+                ),
+            )
+            .unwrap();
+            bp.to_string_lossy().into_owned()
+        };
+        let tp = tp.to_string_lossy().into_owned();
+        // trace-derived hidden = 4 ms; 4.5 ms agrees within 15%+floor
+        assert!(hidden_files(&tp, &bench(4.5), 15.0).is_ok());
+        // 60 ms disagrees far beyond tolerance
+        assert!(hidden_files(&tp, &bench(60.0), 15.0).is_err());
+        // a bench json without the overlap=on row is an error
+        let empty = dir.join(format!("bench_hidden_{pid}_empty.json"));
+        std::fs::write(&empty, r#"{"sections":{}}"#).unwrap();
+        assert!(hidden_files(&tp, &empty.to_string_lossy(), 15.0).is_err());
+        for f in [tp, bench(4.5), bench(60.0), empty.to_string_lossy().into_owned()] {
+            let _ = std::fs::remove_file(f);
+        }
+    }
+}

@@ -101,6 +101,8 @@ impl MetricsRegistry {
         self.counter_add("load.rejected_total", r.rejected);
         self.counter_add("load.errors_total", r.errors);
         self.counter_add("load.lost_total", r.lost);
+        self.counter_add("load.retried_total", r.retried);
+        self.counter_add("load.gave_up_total", r.gave_up);
         self.hist_merge("load.queue_ms", &r.queue);
         self.hist_merge("load.service_ms", &r.service);
         self.hist_merge("load.total_ms", &r.total);
@@ -205,10 +207,13 @@ mod tests {
         let mut rec = Recorder::new();
         rec.on_send();
         rec.on_lost();
+        rec.on_retry(50);
         let mut reg = MetricsRegistry::new();
         reg.feed_recorder(&rec);
         assert_eq!(reg.counter("load.offered_total"), 1);
         assert_eq!(reg.counter("load.lost_total"), 1);
+        assert_eq!(reg.counter("load.retried_total"), 1);
+        assert_eq!(reg.counter("load.gave_up_total"), 0);
     }
 
     /// Successive snapshots fed from a cumulative source are monotone in

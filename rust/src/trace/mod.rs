@@ -36,9 +36,24 @@
 //!   k·(α+nβ) migration-cost estimate as args;
 //! * `plan` — one `trial` span per timed plan-search candidate;
 //! * `serve` — `accept`/`admit`/`reject`/`dequeue`/`batch`/`reply`
-//!   instants plus `run` spans, linked across threads by the `job` arg.
+//!   instants plus `run` spans, linked across threads by the `job` arg
+//!   **and** by a `job` flow (`ph:"s"` at accept, `ph:"t"` at
+//!   admit/dequeue, `ph:"f"` at the reply — one finish per job, even
+//!   rejects), so Perfetto draws the cross-thread arrow;
+//! * `pipeline` flows — a `chain` flow per `(block, field, worker)`
+//!   linking assemble (`s`) → compute (`t`) → writeback (`f`), id =
+//!   `window_tag << 20 | task/3` with a [`fresh_tag`] per window so
+//!   chains never collide across windows or schedulers.
+//!
+//! Data-volume args: leader `ghost`/`extract`/`dispatch`/`paste` spans
+//! and pipeline `assemble`/`compute`/`writeback` spans carry `bytes`
+//! (f64 payload actually moved/shipped), and the per-slab stages add
+//! `rows`/`slab_cells`, so a Perfetto track shows volume, not just
+//! duration — and `tetris trace diff` (see [`diff`]) can report
+//! per-phase byte deltas between two runs.
 
 pub mod check;
+pub mod diff;
 pub mod metrics;
 
 pub use metrics::MetricsRegistry;
@@ -106,6 +121,12 @@ pub enum Phase {
     End,
     /// Thread-scoped instant (`ph:"i"`).
     Instant,
+    /// Flow start (`ph:"s"`) — the tail of a cross-thread arrow.
+    FlowStart,
+    /// Flow step (`ph:"t"`) — an intermediate hop of a flow.
+    FlowStep,
+    /// Flow finish (`ph:"f"`, `bp:"e"`) — the arrowhead.
+    FlowFinish,
 }
 
 impl Phase {
@@ -114,17 +135,24 @@ impl Phase {
             Phase::Begin => "B",
             Phase::End => "E",
             Phase::Instant => "i",
+            Phase::FlowStart => "s",
+            Phase::FlowStep => "t",
+            Phase::FlowFinish => "f",
         }
     }
 }
 
 /// One recorded event; `ts_us` is microseconds since the tracer epoch.
+/// `id` is meaningful only for the flow phases (0 elsewhere): events of
+/// one flow share it, and the chrome export writes it as a hex string so
+/// full-width u64 ids survive the f64 JSON number space.
 #[derive(Clone, Debug)]
 pub struct Event {
     pub ts_us: u64,
     pub phase: Phase,
     pub cat: &'static str,
     pub name: String,
+    pub id: u64,
     pub args: Vec<(&'static str, Arg)>,
 }
 
@@ -208,7 +236,14 @@ fn with_buffer<R>(f: impl FnOnce(&Buffer) -> R) -> R {
 
 /// `force` bypasses the cap — used for end events so a begin that made
 /// it into the buffer is always balanced by its end.
-fn record(phase: Phase, cat: &'static str, name: String, args: Vec<(&'static str, Arg)>, force: bool) -> bool {
+fn record(
+    phase: Phase,
+    cat: &'static str,
+    name: String,
+    id: u64,
+    args: Vec<(&'static str, Arg)>,
+    force: bool,
+) -> bool {
     let ts_us = now_us();
     with_buffer(|buf| {
         let mut events = buf.events.lock().unwrap();
@@ -216,7 +251,7 @@ fn record(phase: Phase, cat: &'static str, name: String, args: Vec<(&'static str
             TRACER.dropped.fetch_add(1, Ordering::Relaxed);
             return false;
         }
-        events.push(Event { ts_us, phase, cat, name, args });
+        events.push(Event { ts_us, phase, cat, name, id, args });
         true
     })
 }
@@ -227,7 +262,49 @@ pub fn instant(cat: &'static str, name: &str, args: &[(&'static str, Arg)]) {
     if !enabled() {
         return;
     }
-    record(Phase::Instant, cat, name.to_string(), args.to_vec(), false);
+    record(Phase::Instant, cat, name.to_string(), 0, args.to_vec(), false);
+}
+
+/// FNV-1a of a string — the flow-id convention for serve jobs, so the
+/// start (accept thread), steps (queue) and finish (dispatcher thread)
+/// of one job's flow agree on an id without sharing state.
+pub fn flow_id(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+/// Record a flow start (`ph:"s"`) — the tail of a cross-thread arrow.
+/// Events of one flow share `(cat, name, id)`.
+#[inline]
+pub fn flow_start(cat: &'static str, name: &str, id: u64, args: &[(&'static str, Arg)]) {
+    if !enabled() {
+        return;
+    }
+    record(Phase::FlowStart, cat, name.to_string(), id, args.to_vec(), false);
+}
+
+/// Record a flow step (`ph:"t"`) — an intermediate hop.
+#[inline]
+pub fn flow_step(cat: &'static str, name: &str, id: u64, args: &[(&'static str, Arg)]) {
+    if !enabled() {
+        return;
+    }
+    record(Phase::FlowStep, cat, name.to_string(), id, args.to_vec(), false);
+}
+
+/// Record a flow finish (`ph:"f"`, binding `bp:"e"`) — the arrowhead.
+/// Forced past the cap like span ends: a started flow always finishes,
+/// so `trace check`'s pairing invariant survives ring-buffer pressure.
+#[inline]
+pub fn flow_finish(cat: &'static str, name: &str, id: u64, args: &[(&'static str, Arg)]) {
+    if !enabled() {
+        return;
+    }
+    record(Phase::FlowFinish, cat, name.to_string(), id, args.to_vec(), true);
 }
 
 /// RAII duration span: records `Begin` on creation (when tracing is on)
@@ -250,14 +327,14 @@ pub fn span(cat: &'static str, name: &str, args: &[(&'static str, Arg)]) -> Span
     if !enabled() {
         return Span::off();
     }
-    let recorded = record(Phase::Begin, cat, name.to_string(), args.to_vec(), false);
+    let recorded = record(Phase::Begin, cat, name.to_string(), 0, args.to_vec(), false);
     Span { live: recorded.then(|| (cat, name.to_string())) }
 }
 
 impl Drop for Span {
     fn drop(&mut self) {
         if let Some((cat, name)) = self.live.take() {
-            record(Phase::End, cat, name, Vec::new(), true);
+            record(Phase::End, cat, name, 0, Vec::new(), true);
         }
     }
 }
@@ -294,9 +371,20 @@ pub fn chrome_json(threads: &[ThreadEvents]) -> Json {
             m.insert("tid".into(), Json::Num(t.tid as f64));
             m.insert("cat".into(), Json::Str(e.cat.into()));
             m.insert("name".into(), Json::Str(e.name.clone()));
-            if e.phase == Phase::Instant {
-                // thread-scoped instants; chrome wants the scope key
-                m.insert("s".into(), Json::Str("t".into()));
+            match e.phase {
+                Phase::Instant => {
+                    // thread-scoped instants; chrome wants the scope key
+                    m.insert("s".into(), Json::Str("t".into()));
+                }
+                Phase::FlowStart | Phase::FlowStep | Phase::FlowFinish => {
+                    // hex string: u64 flow ids survive the f64 number space
+                    m.insert("id".into(), Json::Str(format!("{:x}", e.id)));
+                    if e.phase == Phase::FlowFinish {
+                        // bind the arrowhead to the enclosing slice's end
+                        m.insert("bp".into(), Json::Str("e".into()));
+                    }
+                }
+                Phase::Begin | Phase::End => {}
             }
             if !e.args.is_empty() {
                 let args: BTreeMap<String, Json> =
@@ -416,7 +504,7 @@ mod tests {
             match e.phase {
                 Phase::Begin => stack.push(e.name.clone()),
                 Phase::End => assert_eq!(stack.pop().as_deref(), Some(e.name.as_str())),
-                Phase::Instant => {}
+                _ => {}
             }
         }
         assert!(stack.is_empty(), "unbalanced spans: {events:?}");
@@ -449,6 +537,47 @@ mod tests {
         let inst = evs.iter().find(|e| e.at(&["ph"]).as_str() == Some("i")).unwrap();
         assert_eq!(inst.at(&["s"]).as_str(), Some("t"));
         assert_eq!(inst.at(&["args", "job"]).as_str(), Some("j1"));
+    }
+
+    /// Flow events export with `ph:"s"/"t"/"f"`, a shared hex-string id
+    /// (u64-lossless) and `bp:"e"` on the finish only.
+    #[test]
+    fn flow_export_shape() {
+        let _g = testutil::lock();
+        enable();
+        let _ = drain();
+        // an id above 2^53: would be mangled as an f64 JSON number
+        let id = flow_id("job-xyz") | (1u64 << 63);
+        flow_start("flowcat", "job", id, &[("job", Arg::S("job-xyz".into()))]);
+        flow_step("flowcat", "job", id, &[]);
+        flow_finish("flowcat", "job", id, &[]);
+        disable();
+        let events = own_events(drain(), |e| e.cat == "flowcat");
+        let doc = chrome_json(&[ThreadEvents { tid: 0, events }]);
+        let back = Json::parse(&doc.to_string()).unwrap();
+        let evs = back.at(&["traceEvents"]).as_arr().unwrap();
+        assert_eq!(evs.len(), 3);
+        let by_ph = |ph: &str| {
+            evs.iter().find(|e| e.at(&["ph"]).as_str() == Some(ph)).unwrap_or_else(|| {
+                panic!("no {ph} event in {evs:?}");
+            })
+        };
+        let want_id = format!("{id:x}");
+        for ph in ["s", "t", "f"] {
+            let e = by_ph(ph);
+            assert_eq!(e.at(&["id"]).as_str(), Some(want_id.as_str()), "{ph}");
+            assert_eq!(e.at(&["name"]).as_str(), Some("job"), "{ph}");
+        }
+        assert_eq!(by_ph("f").at(&["bp"]).as_str(), Some("e"));
+        assert!(by_ph("s").at(&["bp"]).as_str().is_none());
+    }
+
+    #[test]
+    fn flow_id_is_deterministic_and_spread() {
+        assert_eq!(flow_id("job-1"), flow_id("job-1"));
+        assert_ne!(flow_id("job-1"), flow_id("job-2"));
+        // the empty string hashes to the FNV offset basis
+        assert_eq!(flow_id(""), 0xcbf2_9ce4_8422_2325);
     }
 
     /// Satellite: multi-thread emission racing a mid-stream drain must
@@ -513,7 +642,7 @@ mod tests {
                         assert!(seen.insert(id), "duplicate span id {id}");
                     }
                     Phase::End => ends += 1,
-                    Phase::Instant => {}
+                    _ => {}
                 }
             }
         }

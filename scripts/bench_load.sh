@@ -9,8 +9,12 @@
 # hint stats, goodput vs offered load, per-rung server METRICS snapshots
 # (flat layer.metric registry dumps; bench check enforces monotone
 # _total counters and the queue-depth <= capacity gauge bound), and
-# /proc RSS+CPU samples of the server process — then gates both with
-# `tetris bench check`.
+# /proc RSS+CPU samples of the server process.  The Suite B rung also
+# arms the spawned server's --metrics-scrape (one flat snapshot per
+# second appended to BENCH_serve_scrape.jsonl) and retries retryable
+# rejects with --retry.  Everything is then gated with `tetris bench
+# check`, the scrape file included (strictly increasing ts_ms, monotone
+# _total counters line to line).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -23,8 +27,10 @@ JOBS="${TETRIS_LOAD_JOBS:-25}"
 RATE="${TETRIS_LOAD_RATE:-40}"
 DURATION="${TETRIS_LOAD_DURATION:-30}"
 ZIPF="${TETRIS_LOAD_ZIPF:-1.1}"
+RETRY="${TETRIS_LOAD_RETRY:-2}"
 A_OUT="${TETRIS_LOAD_A_OUT:-BENCH_serve_suiteA.json}"
 B_OUT="${TETRIS_LOAD_B_OUT:-BENCH_serve_suiteB.json}"
+SCRAPE_OUT="${TETRIS_LOAD_SCRAPE_OUT:-BENCH_serve_scrape.jsonl}"
 BIN=rust/target/release/tetris
 
 # Always (re)build: incremental with a warm target dir, and it protects
@@ -38,18 +44,27 @@ cargo build --release --manifest-path rust/Cargo.toml
   --conns "$CONNS" --jobs "$JOBS" --json-a "$A_OUT"
 
 # Suite B: one 30s open-loop rung — seeded Poisson arrivals over the
-# zipfian job mix.  (Pass --sweep via TETRIS_LOAD_EXTRA to walk rates
-# to saturation locally; CI keeps the single calibrated rung.)
+# zipfian job mix, retryable rejects obeyed with capped jittered backoff
+# (--retry), and the spawned server's periodic metrics scrape armed
+# (append-only JSONL; wiped first so reruns start fresh).  (Pass --sweep
+# via TETRIS_LOAD_EXTRA to walk rates to saturation locally; CI keeps
+# the single calibrated rung.)
+rm -f "$SCRAPE_OUT"
 # shellcheck disable=SC2086
 "$BIN" load suiteB --scale "$SCALE" --threads "$THREADS" --seed "$SEED" \
-  --rate "$RATE" --duration "$DURATION" --zipf "$ZIPF" \
+  --rate "$RATE" --duration "$DURATION" --zipf "$ZIPF" --retry "$RETRY" \
+  --metrics-scrape "$SCRAPE_OUT:1" \
   --json-b "$B_OUT" ${TETRIS_LOAD_EXTRA:-}
 
 # Fail fast on structurally broken reports (the CI job re-runs this
-# gate as its own step, but local runs should see it too).
-"$BIN" bench check "$A_OUT" "$B_OUT"
+# gate as its own step, but local runs should see it too).  The scrape
+# JSONL rides through the same gate: strictly increasing ts_ms,
+# monotone _total counters across snapshots.
+"$BIN" bench check "$A_OUT" "$B_OUT" "$SCRAPE_OUT"
 
 for f in "$A_OUT" "$B_OUT"; do
   echo "--- $f ---"
   cat "$f"
 done
+echo "--- $SCRAPE_OUT: $(wc -l < "$SCRAPE_OUT") snapshots ---"
+head -n 2 "$SCRAPE_OUT"

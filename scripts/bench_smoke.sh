@@ -18,7 +18,10 @@ BOUNDARY_OUT="${TETRIS_SMOKE_BOUNDARY_OUT:-BENCH_boundary.json}"
 SERVE_OUT="${TETRIS_SMOKE_SERVE_OUT:-BENCH_serve.json}"
 SERVE_LIVE_OUT="${TETRIS_SMOKE_SERVE_LIVE_OUT:-BENCH_serve_live.json}"
 OVERLAP_OUT="${TETRIS_SMOKE_OVERLAP_OUT:-BENCH_overlap.json}"
-OVERLAP_TRACE_OUT="${TETRIS_SMOKE_OVERLAP_TRACE_OUT:-BENCH_overlap_trace.json}"
+OVERLAP_OFF_OUT="${TETRIS_SMOKE_OVERLAP_OFF_OUT:-BENCH_overlap_off.json}"
+OVERLAP_ON_OUT="${TETRIS_SMOKE_OVERLAP_ON_OUT:-BENCH_overlap_on.json}"
+OVERLAP_TRACE_OFF_OUT="${TETRIS_SMOKE_OVERLAP_TRACE_OFF_OUT:-BENCH_overlap_trace_off.json}"
+OVERLAP_TRACE_ON_OUT="${TETRIS_SMOKE_OVERLAP_TRACE_ON_OUT:-BENCH_overlap_trace_on.json}"
 PLAN_OUT="${TETRIS_SMOKE_PLAN_OUT:-BENCH_plan.json}"
 PLAN_STORE_OUT="${TETRIS_SMOKE_PLAN_STORE_OUT:-BENCH_plans.jsonl}"
 BIN=rust/target/release/tetris
@@ -40,16 +43,41 @@ cargo build --release --manifest-path rust/Cargo.toml
 
 # §5.3 overlap study: the pipelined (double-buffered) leader loop vs the
 # serial one on an imbalanced 2-worker run — summed worker idle and the
-# leader time hidden under compute, tracked per commit.  --trace records
-# the cross-layer span trace of the whole rung (pool tasks, pipelined
-# assemble/compute/writeback chains, leader phases) as Chrome
-# trace-event JSON, archived next to the summaries and gated below.
-"$BIN" bench overlap --scale "$SCALE" --threads "$THREADS" \
-  --json "$OVERLAP_OUT" --trace "$OVERLAP_TRACE_OUT"
+# leader time hidden under compute, tracked per commit.  The combined
+# two-row run feeds the idle invariant in bench check.
+"$BIN" bench overlap --scale "$SCALE" --threads "$THREADS" --json "$OVERLAP_OUT"
 
-# Structural gate on the recorded trace: balanced spans, monotone
-# timestamps, pipeline task ids within the analyze-model universe.
-"$BIN" trace check "$OVERLAP_TRACE_OUT"
+# Per-mode reruns with tracing: each mode gets its own span trace (pool
+# tasks, pipelined assemble/compute/writeback chains + flow events,
+# leader phases with bytes/rows args) so the two can be diffed.
+"$BIN" bench overlap --mode off --scale "$SCALE" --threads "$THREADS" \
+  --json "$OVERLAP_OFF_OUT" --trace "$OVERLAP_TRACE_OFF_OUT"
+"$BIN" bench overlap --mode on --scale "$SCALE" --threads "$THREADS" \
+  --json "$OVERLAP_ON_OUT" --trace "$OVERLAP_TRACE_ON_OUT"
+
+# Gate 1 — structural: balanced spans, monotone timestamps, pipeline
+# task ids within the analyze-model universe, flow pairing.  The
+# pipelined trace must actually carry flow events (--require-flows).
+"$BIN" trace check "$OVERLAP_TRACE_OFF_OUT"
+"$BIN" trace check "$OVERLAP_TRACE_ON_OUT" --require-flows
+
+# Gate 2 — trace diff: the pipelined run must show leader time moving
+# into pipelined spans (pipeline/* phases exclusive to overlap=on);
+# --fail-over is a generous sanity ceiling on shared-phase growth.
+DIFF_OUT="$(mktemp)"
+"$BIN" trace diff "$OVERLAP_TRACE_OFF_OUT" "$OVERLAP_TRACE_ON_OUT" \
+  --fail-over 500 | tee "$DIFF_OUT"
+grep -E '^pipeline/(assemble|compute|writeback): only in B' "$DIFF_OUT" >/dev/null || {
+  echo "trace diff shows no pipelined spans exclusive to overlap=on" >&2
+  exit 1
+}
+rm -f "$DIFF_OUT"
+
+# Gate 3 — evidence reconciliation: hidden leader time recomputed from
+# the trace (pipeline assemble/writeback durations that end inside a
+# compute span) must agree with RunMetrics.overlap_hidden within 15%.
+"$BIN" trace hidden "$OVERLAP_TRACE_ON_OUT" \
+  --bench-json "$OVERLAP_ON_OUT" --tolerance-pct 15
 
 # Plan/autotune study: tune heat2d against a throwaway store (budgeted
 # search, seeded for reproducible trial ordering), then the auto-vs-
@@ -89,8 +117,10 @@ wait "$SERVE_PID"
 trap - EXIT
 rm -f "$ADDR_FILE"
 
-for f in "$OUT" "$BOUNDARY_OUT" "$SERVE_OUT" "$OVERLAP_OUT" "$SERVE_LIVE_OUT" "$PLAN_OUT" "$PLAN_STORE_OUT"; do
+for f in "$OUT" "$BOUNDARY_OUT" "$SERVE_OUT" "$OVERLAP_OUT" "$OVERLAP_OFF_OUT" "$OVERLAP_ON_OUT" "$SERVE_LIVE_OUT" "$PLAN_OUT" "$PLAN_STORE_OUT"; do
   echo "--- $f ---"
   cat "$f"
 done
-echo "--- $OVERLAP_TRACE_OUT: $(wc -c < "$OVERLAP_TRACE_OUT") bytes (Chrome trace-event JSON, load in Perfetto) ---"
+for f in "$OVERLAP_TRACE_OFF_OUT" "$OVERLAP_TRACE_ON_OUT"; do
+  echo "--- $f: $(wc -c < "$f") bytes (Chrome trace-event JSON, load in Perfetto) ---"
+done
