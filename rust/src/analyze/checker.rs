@@ -60,16 +60,27 @@ impl fmt::Display for BufferId {
     }
 }
 
-/// One declared access: a set of dim-0 rows of one buffer.
+/// One declared access: a per-axis interval *product* over one buffer —
+/// a set of dim-0 rows times a set of dim-1 columns.  1-D summaries (and
+/// any access that does not constrain dim 1) use [`IntervalSet::full`]
+/// for `cols`, so the degenerate case keeps exactly the old
+/// rows-intersect conflict semantics.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Region {
     pub buffer: BufferId,
     pub rows: IntervalSet,
+    pub cols: IntervalSet,
 }
 
 impl Region {
+    /// Rows-only region: dim 1 unconstrained (full width).
     pub fn new(buffer: BufferId, rows: IntervalSet) -> Region {
-        Region { buffer, rows }
+        Region { buffer, rows, cols: IntervalSet::full() }
+    }
+
+    /// Full 2-D region: rows × cols.
+    pub fn rect(buffer: BufferId, rows: IntervalSet, cols: IntervalSet) -> Region {
+        Region { buffer, rows, cols }
     }
 }
 
@@ -93,6 +104,28 @@ impl TaskAccess {
 
     pub fn write(mut self, buffer: BufferId, rows: IntervalSet) -> TaskAccess {
         self.writes.push(Region::new(buffer, rows));
+        self
+    }
+
+    /// 2-D read: rows × cols product region.
+    pub fn read_rect(
+        mut self,
+        buffer: BufferId,
+        rows: IntervalSet,
+        cols: IntervalSet,
+    ) -> TaskAccess {
+        self.reads.push(Region::rect(buffer, rows, cols));
+        self
+    }
+
+    /// 2-D write: rows × cols product region.
+    pub fn write_rect(
+        mut self,
+        buffer: BufferId,
+        rows: IntervalSet,
+        cols: IntervalSet,
+    ) -> TaskAccess {
+        self.writes.push(Region::rect(buffer, rows, cols));
         self
     }
 }
@@ -124,15 +157,25 @@ pub struct Conflict {
     pub buffer: BufferId,
     /// An example overlapping row range (first overlap found).
     pub rows: (usize, usize),
+    /// An example overlapping column range; `(0, usize::MAX)` when
+    /// neither side constrained dim 1 (the 1-D degenerate case).
+    pub cols: (usize, usize),
 }
 
 impl fmt::Display for Conflict {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "race: {} conflict on {} rows [{}, {}) between #{} {} and #{} {} (no ordering path)",
-            self.kind, self.buffer, self.rows.0, self.rows.1, self.a, self.a_label, self.b,
-            self.b_label
+            "race: {} conflict on {} rows [{}, {})",
+            self.kind, self.buffer, self.rows.0, self.rows.1
+        )?;
+        if self.cols != (0, usize::MAX) {
+            write!(f, " cols [{}, {})", self.cols.0, self.cols.1)?;
+        }
+        write!(
+            f,
+            " between #{} {} and #{} {} (no ordering path)",
+            self.a, self.a_label, self.b, self.b_label
         )
     }
 }
@@ -233,37 +276,41 @@ impl Closure {
     }
 }
 
-/// All conflicting pairs `(a, b, kind, buffer, rows)` with `a < b`,
-/// grouped by buffer.  A pair conflicting on several buffers is
-/// reported once per buffer.
+/// All conflicting pairs `(a, b, kind, buffer, rows, cols)` with
+/// `a < b`, grouped by buffer.  A pair conflicts only when BOTH axes of
+/// the two product regions intersect (a shared row range in disjoint
+/// column bands is not aliasing).  A pair conflicting on several
+/// buffers is reported once per buffer.
 fn conflicting_pairs(
     accesses: &[TaskAccess],
-) -> Vec<(usize, usize, ConflictKind, BufferId, (usize, usize))> {
-    // Flatten to per-buffer touch lists: (task, rows, wrote).
-    let mut by_buffer: BTreeMap<BufferId, Vec<(usize, &IntervalSet, bool)>> = BTreeMap::new();
+) -> Vec<(usize, usize, ConflictKind, BufferId, (usize, usize), (usize, usize))> {
+    // Flatten to per-buffer touch lists: (task, region, wrote).
+    let mut by_buffer: BTreeMap<BufferId, Vec<(usize, &Region, bool)>> = BTreeMap::new();
     for (t, acc) in accesses.iter().enumerate() {
         for r in &acc.reads {
-            by_buffer.entry(r.buffer).or_default().push((t, &r.rows, false));
+            by_buffer.entry(r.buffer).or_default().push((t, r, false));
         }
         for r in &acc.writes {
-            by_buffer.entry(r.buffer).or_default().push((t, &r.rows, true));
+            by_buffer.entry(r.buffer).or_default().push((t, r, true));
         }
     }
     let mut out = Vec::new();
     for (buf, touches) in &by_buffer {
-        for (i, &(ta, rows_a, wa)) in touches.iter().enumerate() {
-            for &(tb, rows_b, wb) in &touches[i + 1..] {
+        for (i, &(ta, ra, wa)) in touches.iter().enumerate() {
+            for &(tb, rb, wb) in &touches[i + 1..] {
                 if ta == tb || (!wa && !wb) {
                     continue;
                 }
-                if let Some(overlap) = rows_a.first_overlap(rows_b) {
+                if let (Some(rows), Some(cols)) =
+                    (ra.rows.first_overlap(&rb.rows), ra.cols.first_overlap(&rb.cols))
+                {
                     let (lo, hi) = (ta.min(tb), ta.max(tb));
                     let kind = if wa && wb {
                         ConflictKind::WriteWrite
                     } else {
                         ConflictKind::ReadWrite
                     };
-                    out.push((lo, hi, kind, *buf, overlap));
+                    out.push((lo, hi, kind, *buf, rows, cols));
                 }
             }
         }
@@ -271,8 +318,8 @@ fn conflicting_pairs(
     // A task reading AND writing the same rows of one buffer pairs up
     // with a peer twice (R/W and W/W); keep the W/W (stronger) and drop
     // duplicate pair/buffer entries.
-    out.sort_by_key(|&(a, b, k, buf, _)| (a, b, buf, k == ConflictKind::ReadWrite));
-    out.dedup_by_key(|&mut (a, b, _, buf, _)| (a, b, buf));
+    out.sort_by_key(|&(a, b, k, buf, _, _)| (a, b, buf, k == ConflictKind::ReadWrite));
+    out.dedup_by_key(|&mut (a, b, _, buf, _, _)| (a, b, buf));
     out
 }
 
@@ -283,8 +330,8 @@ pub fn races(deps: &[Vec<usize>], accesses: &[TaskAccess]) -> Vec<Conflict> {
     let closure = Closure::build(deps, None);
     conflicting_pairs(accesses)
         .into_iter()
-        .filter(|&(a, b, _, _, _)| !closure.ordered(a, b))
-        .map(|(a, b, kind, buffer, rows)| Conflict {
+        .filter(|&(a, b, _, _, _, _)| !closure.ordered(a, b))
+        .map(|(a, b, kind, buffer, rows, cols)| Conflict {
             a,
             b,
             a_label: accesses[a].label.clone(),
@@ -292,6 +339,7 @@ pub fn races(deps: &[Vec<usize>], accesses: &[TaskAccess]) -> Vec<Conflict> {
             kind,
             buffer,
             rows,
+            cols,
         })
         .collect()
 }
@@ -308,7 +356,7 @@ pub fn check(deps: &[Vec<usize>], accesses: &[TaskAccess]) -> Report {
         edges: deps.iter().map(|d| d.len()).sum(),
         ..Report::default()
     };
-    for &(a, b, kind, buffer, rows) in &pairs {
+    for &(a, b, kind, buffer, rows, cols) in &pairs {
         if closure.ordered(a, b) {
             report.ordered_conflicts += 1;
         } else {
@@ -320,6 +368,7 @@ pub fn check(deps: &[Vec<usize>], accesses: &[TaskAccess]) -> Report {
                 kind,
                 buffer,
                 rows,
+                cols,
             });
         }
     }
@@ -336,7 +385,7 @@ pub fn check(deps: &[Vec<usize>], accesses: &[TaskAccess]) -> Report {
             if without.ordered(from, to) {
                 report.redundant_edges += 1;
             }
-            if pairs.iter().all(|&(a, b, _, _, _)| without.ordered(a, b)) {
+            if pairs.iter().all(|&(a, b, _, _, _, _)| without.ordered(a, b)) {
                 report.oversync.push(Oversync {
                     from,
                     to,
@@ -407,6 +456,51 @@ mod tests {
             acc("c"),
         ];
         assert!(races(&deps, &accesses).is_empty());
+    }
+
+    #[test]
+    fn disjoint_cols_make_shared_rows_conflict_free() {
+        // Two unordered writers share rows but live in disjoint column
+        // bands — a 2-D grid's side-by-side tiles.  No conflict.
+        let deps = vec![vec![], vec![]];
+        let accesses = vec![
+            acc("west")
+                .write_rect(G0, IntervalSet::single(0, 8), IntervalSet::single(0, 4)),
+            acc("east")
+                .write_rect(G0, IntervalSet::single(0, 8), IntervalSet::single(4, 8)),
+        ];
+        assert!(races(&deps, &accesses).is_empty());
+        // A rows-only (full-width) access DOES conflict with either.
+        let accesses = vec![
+            acc("west")
+                .write_rect(G0, IntervalSet::single(0, 8), IntervalSet::single(0, 4)),
+            acc("fullwidth").read(G0, IntervalSet::single(2, 3)),
+        ];
+        let got = races(&deps, &accesses);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].rows, (2, 3));
+        assert_eq!(got[0].cols, (0, 4));
+        assert!(format!("{}", got[0]).contains("cols [0, 4)"));
+    }
+
+    #[test]
+    fn corner_products_conflict_only_on_both_axes() {
+        // Diagonal tiles overlap only in the halo corner: both axes must
+        // intersect for a conflict, and the reported rect is the corner.
+        let deps = vec![vec![], vec![], vec![]];
+        let accesses = vec![
+            acc("nw")
+                .write_rect(G0, IntervalSet::single(0, 6), IntervalSet::single(0, 6)),
+            acc("se_corner_reader")
+                .read_rect(G0, IntervalSet::single(4, 10), IntervalSet::single(4, 10)),
+            acc("far")
+                .write_rect(G0, IntervalSet::single(4, 10), IntervalSet::single(20, 30)),
+        ];
+        let got = races(&deps, &accesses);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!((got[0].a, got[0].b), (0, 1));
+        assert_eq!(got[0].rows, (4, 6));
+        assert_eq!(got[0].cols, (4, 6));
     }
 
     #[test]

@@ -26,8 +26,6 @@ use super::interval::IntervalSet;
 #[cfg(debug_assertions)]
 use std::cell::RefCell;
 #[cfg(debug_assertions)]
-use std::collections::BTreeMap;
-#[cfg(debug_assertions)]
 use std::sync::Mutex;
 
 /// Trace id for the padded global of `field` at double-buffer `parity`
@@ -53,6 +51,9 @@ struct Event {
     trace: u64,
     write: bool,
     rows: (usize, usize),
+    /// Dim-1 columns of the access; `(0, usize::MAX)` for fields with
+    /// fewer than two dims (no column axis to constrain).
+    cols: (usize, usize),
 }
 
 /// Per-run sink for observed accesses.  Fieldless (and `validate`
@@ -74,39 +75,42 @@ impl Collector {
         Arc::new(Collector::default())
     }
 
-    /// Check observed ⊆ declared for every task/buffer/direction pair.
-    /// `accesses[t]` is task `t`'s declared summary; only buffers with
-    /// a trace mapping (the globals) are validated.
+    /// Check observed ⊆ declared for every recorded access.  Each event
+    /// is a contiguous rect (rows × cols); it passes when its rows fit
+    /// inside the union of declared row sets over the regions of that
+    /// buffer/direction whose column set covers the event's columns.
+    /// With full-width columns everywhere (1-D summaries) this reduces
+    /// exactly to the old rows-union subset check.  Only buffers with a
+    /// trace mapping (the globals) are validated.
     pub fn validate(&self, accesses: &[TaskAccess]) -> Result<(), String> {
         #[cfg(debug_assertions)]
         {
-            // Fold events into per-(task, buffer) observed row sets.
-            let mut observed: BTreeMap<(usize, BufferId, bool), IntervalSet> = BTreeMap::new();
             for ev in self.events.lock().unwrap().iter() {
                 let Some(buf) = decode_trace(ev.trace) else { continue };
-                observed
-                    .entry((ev.task, buf, ev.write))
-                    .or_default()
-                    .insert(ev.rows.0, ev.rows.1);
-            }
-            for ((task, buf, write), rows) in &observed {
-                if *task >= accesses.len() {
+                if ev.task >= accesses.len() {
+                    let task = ev.task;
                     return Err(format!("observed access from unknown task #{task} on {buf}"));
                 }
-                let acc = &accesses[*task];
-                let declared = if *write { &acc.writes } else { &acc.reads };
+                let acc = &accesses[ev.task];
+                let declared = if ev.write { &acc.writes } else { &acc.reads };
+                let cols = IntervalSet::single(ev.cols.0, ev.cols.1);
                 let mut allowed = IntervalSet::empty();
-                for r in declared.iter().filter(|r| r.buffer == *buf) {
-                    for &(a, b) in r.rows.intervals() {
-                        allowed.insert(a, b);
+                for r in declared.iter().filter(|r| r.buffer == buf) {
+                    if cols.subset_of(&r.cols) {
+                        for &(a, b) in r.rows.intervals() {
+                            allowed.insert(a, b);
+                        }
                     }
                 }
+                let rows = IntervalSet::single(ev.rows.0, ev.rows.1);
                 if !rows.subset_of(&allowed) {
+                    let task = ev.task;
                     return Err(format!(
-                        "task #{task} {} observed {} rows {:?} of {buf} outside its declared {:?}",
+                        "task #{task} {} observed {} rows {:?} cols {:?} of {buf} outside its declared rows {:?}",
                         acc.label,
-                        if *write { "writing" } else { "reading" },
-                        rows.intervals(),
+                        if ev.write { "writing" } else { "reading" },
+                        ev.rows,
+                        ev.cols,
                         allowed.intervals()
                     ));
                 }
@@ -148,11 +152,13 @@ impl Drop for TaskScope {
 }
 
 /// Report one observed access on a traced field (called by the `Field`
-/// region primitives).  No-op unless a scope is active, the field is
-/// traced, and the row range is non-empty.
+/// region primitives).  `(c0, c1)` is the dim-1 column range; callers
+/// on fields without a column axis pass `(0, usize::MAX)`.  No-op
+/// unless a scope is active, the field is traced, and the rect is
+/// non-empty on both axes.
 #[cfg(debug_assertions)]
-pub(crate) fn record(trace: u64, write: bool, lo: usize, hi: usize) {
-    if trace == 0 || lo >= hi {
+pub(crate) fn record(trace: u64, write: bool, lo: usize, hi: usize, c0: usize, c1: usize) {
+    if trace == 0 || lo >= hi || c0 >= c1 {
         return;
     }
     CURRENT.with(|c| {
@@ -161,7 +167,7 @@ pub(crate) fn record(trace: u64, write: bool, lo: usize, hi: usize) {
                 .events
                 .lock()
                 .unwrap()
-                .push(Event { task: *task, trace, write, rows: (lo, hi) });
+                .push(Event { task: *task, trace, write, rows: (lo, hi), cols: (c0, c1) });
         }
     });
 }
@@ -190,8 +196,8 @@ mod tests {
         let collector = Collector::shared();
         {
             let _scope = TaskScope::enter(&collector, 0);
-            record(global_trace(0, 0), false, 2, 5);
-            record(global_trace(0, 0), true, 8, 9);
+            record(global_trace(0, 0), false, 2, 5, 0, usize::MAX);
+            record(global_trace(0, 0), true, 8, 9, 0, usize::MAX);
         }
         let declared = vec![TaskAccess::new("t0")
             .read(buf, IntervalSet::single(0, 6))
@@ -212,11 +218,12 @@ mod tests {
     fn recording_requires_scope_and_trace() {
         let collector = Collector::shared();
         // no scope: dropped on the floor
-        record(global_trace(0, 0), true, 0, 4);
+        record(global_trace(0, 0), true, 0, 4, 0, usize::MAX);
         {
             let _scope = TaskScope::enter(&collector, 0);
-            record(0, true, 0, 4); // untraced field
-            record(global_trace(0, 0), true, 3, 3); // empty range
+            record(0, true, 0, 4, 0, usize::MAX); // untraced field
+            record(global_trace(0, 0), true, 3, 3, 0, usize::MAX); // empty rows
+            record(global_trace(0, 0), true, 0, 4, 2, 2); // empty cols
         }
         assert!(collector.events.lock().unwrap().is_empty());
         // validation with nothing observed always passes
@@ -247,5 +254,40 @@ mod tests {
             .read(buf, IntervalSet::single(2, 5))
             .write(buf, IntervalSet::single(4, 5));
         assert!(collector.validate(&declared).is_err());
+        // tighten only the write's *columns* (paste touched cols [1, 5))
+        // and the 2-D check catches it too
+        declared[7] = TaskAccess::new("t7")
+            .read(buf, IntervalSet::single(2, 5))
+            .write_rect(buf, IntervalSet::single(4, 6), IntervalSet::single(0, 3));
+        let err = collector.validate(&declared).unwrap_err();
+        assert!(err.contains("writing"), "{err}");
+        // widen the columns back out (over-approximation is fine)
+        declared[7] = TaskAccess::new("t7")
+            .read(buf, IntervalSet::single(2, 5))
+            .write_rect(buf, IntervalSet::single(4, 6), IntervalSet::single(0, 6));
+        assert!(collector.validate(&declared).is_ok());
+    }
+
+    #[test]
+    fn column_ranges_validate_per_event() {
+        // Two rects declared as two product regions: each observed rect
+        // must fit one covering region — the product of the folded row
+        // and column unions is NOT assumed.
+        let buf = BufferId::Global { field: 0, parity: 0 };
+        let collector = Collector::shared();
+        {
+            let _scope = TaskScope::enter(&collector, 0);
+            record(global_trace(0, 0), false, 0, 4, 0, 4);
+            record(global_trace(0, 0), false, 8, 12, 8, 12);
+        }
+        let two_rects = vec![TaskAccess::new("t0")
+            .read_rect(buf, IntervalSet::single(0, 4), IntervalSet::single(0, 4))
+            .read_rect(buf, IntervalSet::single(8, 12), IntervalSet::single(8, 12))];
+        assert!(collector.validate(&two_rects).is_ok());
+        // swap the column bands: every event now falls outside both
+        let swapped = vec![TaskAccess::new("t0")
+            .read_rect(buf, IntervalSet::single(0, 4), IntervalSet::single(8, 12))
+            .read_rect(buf, IntervalSet::single(8, 12), IntervalSet::single(0, 4))];
+        assert!(collector.validate(&swapped).is_err());
     }
 }

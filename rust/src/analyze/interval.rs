@@ -26,6 +26,19 @@ impl IntervalSet {
         s
     }
 
+    /// The whole axis, `[0, usize::MAX)` — the "this access does not
+    /// constrain that axis" element of the per-axis interval products.
+    /// Using a real interval (rather than an empty-means-full sentinel)
+    /// keeps intersection/subset algebra uniform across axes.
+    pub fn full() -> IntervalSet {
+        IntervalSet::single(0, usize::MAX)
+    }
+
+    /// Is this the [`IntervalSet::full`] axis?
+    pub fn is_full(&self) -> bool {
+        self.ivs == [(0, usize::MAX)]
+    }
+
     pub fn is_empty(&self) -> bool {
         self.ivs.is_empty()
     }

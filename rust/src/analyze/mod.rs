@@ -14,8 +14,9 @@
 //! per task and assert observed ⊆ declared ([`dynamic`]).
 //!
 //! Everything here is pure, std-only and Miri-friendly; the CLI sweep
-//! (`tetris analyze --all`) covers boundary × workers × partition shape
-//! (zero shares included) × fields × window length × window parity.
+//! (`tetris analyze --all`) covers boundary × grid shape (Wy×Wx, zero
+//! shares and zero-width bands included) × fields × window length ×
+//! window parity.
 
 pub mod checker;
 pub mod dynamic;
@@ -67,9 +68,30 @@ pub fn sweep_partitions(nw: usize, rows: usize) -> Vec<Partition> {
                 let big = (0..shares.len()).max_by_key(|&i| shares[i]).unwrap();
                 shares[big] -= sum - rows;
             }
-            Partition { unit: 1, shares }
+            Partition::rows(1, shares)
         })
         .collect()
+}
+
+/// Band-width layouts a sweep should try for `wy` bands over `cols`
+/// columns: the balanced split, a skewed split, and (when `wy > 1`) a
+/// zero-width band — the dim-1 mirror of [`sweep_partitions`].  `wy=1`
+/// yields the single degenerate full-width layout.
+pub fn sweep_band_layouts(wy: usize, cols: usize) -> Vec<Vec<usize>> {
+    assert!(wy >= 1 && cols >= wy.max(2));
+    if wy == 1 {
+        return vec![vec![cols]];
+    }
+    let mut out = vec![crate::coordinator::partition::even_split(cols, wy)];
+    let weights: usize = (1..=wy).sum();
+    let mut skew: Vec<usize> = (1..=wy).map(|i| i * cols / weights).collect();
+    let sum: usize = skew.iter().sum();
+    skew[wy - 1] += cols - sum;
+    out.push(skew);
+    let mut zero = crate::coordinator::partition::even_split(cols, wy - 1);
+    zero.insert(wy / 2, 0);
+    out.push(zero);
+    out
 }
 
 #[cfg(test)]
@@ -89,5 +111,20 @@ mod tests {
         }
         // zero-share layouts really appear for nw > 1
         assert!(sweep_partitions(3, 12).iter().any(|p| p.shares.contains(&0)));
+    }
+
+    #[test]
+    fn sweep_band_layouts_cover_cols_exactly() {
+        for wy in 1..=3 {
+            for cols in [8usize, 12, 17] {
+                for bands in sweep_band_layouts(wy, cols) {
+                    assert_eq!(bands.len(), wy);
+                    assert_eq!(bands.iter().sum::<usize>(), cols, "wy={wy} cols={cols}");
+                }
+            }
+        }
+        assert_eq!(sweep_band_layouts(1, 12), vec![vec![12]]);
+        // zero-width bands really appear for wy > 1
+        assert!(sweep_band_layouts(2, 8).iter().any(|b| b.contains(&0)));
     }
 }

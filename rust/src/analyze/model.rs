@@ -121,6 +121,8 @@ impl WindowPlan {
     /// Mirror of the leader-loop task construction: per `(k, f, w)` an
     /// assemble → compute → writeback chain; block `k > 0` assembles
     /// wait on the symmetric-owner writebacks of block `k - 1`.
+    /// Degenerate single-band wrapper of [`WindowPlan::build_grid`] —
+    /// the 1-D shape every pre-grid call site keeps.
     pub fn build(
         spans: &[(usize, usize)],
         halo: usize,
@@ -130,8 +132,41 @@ impl WindowPlan {
         b0: usize,
         bw: usize,
     ) -> WindowPlan {
-        let nw = spans.len();
-        let owners = crate::coordinator::pipeline::symmetric_owners(spans, halo, n_rows, boundary);
+        WindowPlan::build_grid(spans, &[], halo, n_rows, 0, boundary, nf, b0, bw)
+    }
+
+    /// 2-D grid plan: workers are the row-major product of dim-0 runs
+    /// (`rows`, one span per grid column) and dim-1 bands (`bands`, one
+    /// interval per grid row), `w = gy * rows.len() + gx`.  Region
+    /// summaries become per-axis interval products and the block-to-
+    /// block dependencies become 2-D symmetric-owner sets — edge AND
+    /// corner neighbours, since an assemble's halo rect reads into
+    /// diagonal tiles.  `bands` with zero or one entry selects the
+    /// degenerate path: column summaries stay full-width and `n_cols`
+    /// is ignored, which reproduces the pre-grid plan exactly.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_grid(
+        rows: &[(usize, usize)],
+        bands: &[(usize, usize)],
+        halo: usize,
+        n_rows: usize,
+        n_cols: usize,
+        boundary: Boundary,
+        nf: usize,
+        b0: usize,
+        bw: usize,
+    ) -> WindowPlan {
+        let wx = rows.len();
+        let grid = bands.len() > 1;
+        let wy = if grid { bands.len() } else { 1 };
+        let nw = wy * wx;
+        let owners = if grid {
+            crate::coordinator::pipeline::symmetric_owners_grid(
+                rows, bands, halo, n_rows, n_cols, boundary,
+            )
+        } else {
+            crate::coordinator::pipeline::symmetric_owners(rows, halo, n_rows, boundary)
+        };
         let mut model = DagModel::default();
         let mut meta = Vec::with_capacity(3 * bw * nf * nw);
         let cell = || IntervalSet::single(0, 1);
@@ -144,7 +179,16 @@ impl WindowPlan {
             for f in 0..nf {
                 for w in 0..nw {
                     let idx = (k * nf + f) * nw + w;
-                    let (s, e) = spans[w];
+                    let (s, e) = rows[w % wx];
+                    let (read_cols, write_cols) = if grid {
+                        let (c0, c1) = bands[w / wx];
+                        (
+                            assemble_reads((c0, c1), halo, n_cols, boundary),
+                            IntervalSet::single(c0 + halo, c1 + halo),
+                        )
+                    } else {
+                        (IntervalSet::full(), IntervalSet::full())
+                    };
                     let a_deps: Vec<usize> = if k == 0 {
                         Vec::new()
                     } else {
@@ -154,9 +198,10 @@ impl WindowPlan {
                     model.deps.push(a_deps);
                     model.accesses.push(
                         TaskAccess::new(format!("assemble[b{b} f{f} w{w}]"))
-                            .read(
+                            .read_rect(
                                 BufferId::Global { field: f, parity: read_par },
                                 assemble_reads((s, e), halo, n_rows, boundary),
+                                read_cols,
                             )
                             .write(BufferId::SlabIn(idx), cell()),
                     );
@@ -175,9 +220,10 @@ impl WindowPlan {
                         TaskAccess::new(format!("writeback[b{b} f{f} w{w}]"))
                             .read(BufferId::SlabOut(idx), cell())
                             .write(BufferId::SlabOut(idx), cell())
-                            .write(
+                            .write_rect(
                                 BufferId::Global { field: f, parity: write_par },
                                 IntervalSet::single(s + halo, e + halo),
+                                write_cols,
                             ),
                     );
                     meta.push(TaskMeta {
@@ -380,6 +426,101 @@ mod tests {
         );
         // restoring the edge restores cleanliness
         p.model.deps[a11].push(wb00);
+        assert!(p.model.races().is_empty());
+    }
+
+    #[test]
+    fn grid_plan_degenerate_band_matches_rows_only_plan() {
+        // A single (or absent) band is the old 1-D plan, access summary
+        // for access summary — the refactor's safety rail.
+        let spans = vec![(0usize, 5usize), (5, 12), (12, 16)];
+        for b in [Boundary::Dirichlet(0.0), Boundary::Neumann, Boundary::Periodic] {
+            let p1 = WindowPlan::build(&spans, 2, 16, b, 2, 1, 2);
+            let p2 = WindowPlan::build_grid(&spans, &[(0, 9)], 2, 16, 9, b, 2, 1, 2);
+            assert_eq!(p1.model.deps, p2.model.deps);
+            assert_eq!(p1.model.accesses, p2.model.accesses);
+            assert_eq!(p1.nw, p2.nw);
+        }
+    }
+
+    #[test]
+    fn grid_window_plan_clean_across_boundaries() {
+        // 3×2 grid with a zero-share run and (second config) a
+        // zero-width band: clean, zero over-sync, zero redundancy for
+        // every boundary × window parity × field count.
+        let layouts: Vec<(Vec<(usize, usize)>, Vec<(usize, usize)>)> = vec![
+            (vec![(0, 6), (6, 16)], vec![(0, 5), (5, 12), (12, 12)]),
+            (vec![(0, 0), (0, 9), (9, 16)], vec![(0, 8), (8, 12)]),
+            // zero-share run AND zero-width band together: the
+            // empty-on-one-axis tile pair must get neither a race nor a
+            // conflict-free (over-sync) edge.
+            (vec![(0, 0), (0, 16)], vec![(0, 12), (12, 12)]),
+        ];
+        for (rows, bands) in &layouts {
+            for b in [Boundary::Dirichlet(1.0), Boundary::Neumann, Boundary::Periodic] {
+                for b0 in [0usize, 1] {
+                    for nf in [1usize, 2] {
+                        let p = WindowPlan::build_grid(rows, bands, 2, 16, 12, b, nf, b0, 3);
+                        assert_eq!(p.nw, rows.len() * bands.len());
+                        let r = p.model.check();
+                        assert!(r.is_clean(), "{b} b0={b0} nf={nf}: {:?}", r.races);
+                        assert!(r.oversync.is_empty(), "{b} b0={b0} nf={nf}: {:?}", r.oversync);
+                        assert_eq!(r.redundant_edges, 0, "{b} b0={b0} nf={nf}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grid_window_plan_detects_dropped_corner_edge() {
+        // 2×2 grid, halo 2: drop the *diagonal* dependency
+        // writeback(b0, NW) -> assemble(b1, SE).  Exactly the corner's
+        // RAW/WAR pair must surface:
+        //  * RAW on Global{f0, parity 1}: wb(0, w0) writes rows [2, 10)
+        //    × cols [2, 10); asm(1, w3) reads rows [8, 18) × cols
+        //    [8, 18) — overlap is the 2×2 halo corner [8, 10)².
+        //  * WAR on Global{f0, parity 0}: asm(0, w0) reads [2, 12)²,
+        //    wb(1, w3) overwrites [10, 18)² — ordered only through the
+        //    dropped edge's chain.
+        let rows = vec![(0usize, 8usize), (8, 16)];
+        let bands = vec![(0usize, 8usize), (8, 16)];
+        let mut p = WindowPlan::build_grid(
+            &rows,
+            &bands,
+            2,
+            16,
+            16,
+            Boundary::Dirichlet(0.0),
+            1,
+            0,
+            2,
+        );
+        // w = gy * wx + gx: w0 = NW tile, w3 = SE tile.
+        let wb00 = p.id(0, 0, 0, TaskKind::Writeback);
+        let a13 = p.id(1, 0, 3, TaskKind::Assemble);
+        assert!(p.model.deps[a13].contains(&wb00), "corner dep must exist");
+        assert!(p.model.drop_dep(a13, wb00));
+        let races = p.model.races();
+        assert_eq!(races.len(), 2, "{races:?}");
+        assert!(
+            races.iter().any(|r| (r.a, r.b) == (wb00, a13)
+                && r.buffer == BufferId::Global { field: 0, parity: 1 }
+                && r.rows == (8, 10)
+                && r.cols == (8, 10)),
+            "missing the dropped-corner RAW race: {races:?}"
+        );
+        let a00 = p.id(0, 0, 0, TaskKind::Assemble);
+        let wb13 = p.id(1, 0, 3, TaskKind::Writeback);
+        assert!(
+            races.iter().any(|r| (r.a, r.b) == (a00, wb13)
+                && r.buffer == BufferId::Global { field: 0, parity: 0 }
+                && r.rows == (10, 12)
+                && r.cols == (10, 12)),
+            "missing the corner WAR race: {races:?}"
+        );
+        // restoring the corner edge restores cleanliness
+        p.model.deps[a13].push(wb00);
         assert!(p.model.races().is_empty());
     }
 

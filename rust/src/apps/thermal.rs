@@ -79,7 +79,7 @@ fn scheduler_for(
         _ => crate::bail!("unknown method {method}"),
     };
     let partition = if workers.len() == 1 {
-        Partition { unit, shares: vec![units] }
+        Partition::rows(unit, vec![units])
     } else {
         // §5.2 profile initialization + balanced partition.
         let prof = tuner::profile_workers(&workers, spec_, &[unit, n], tb, 2)?;
@@ -172,7 +172,7 @@ pub fn run_insulated(
             Box::new(NativeWorker::new(crate::engine::by_name("tetris-cpu", threads).unwrap(), 1 << 33)),
             Box::new(NativeWorker::new(crate::engine::by_name("simd", 1).unwrap(), 1 << 33)),
         ],
-        partition: Partition { unit: n / 8, shares: vec![4, 4] },
+        partition: Partition::rows(n / 8, vec![4, 4]),
         comm_model: CommModel::default(),
         boundary: Boundary::Neumann,
         adapt_every,

@@ -39,12 +39,24 @@ const LADDERS: [&[&str]; 2] = [
 /// All violations in one parsed artifact; empty means it passed.
 /// `name` prefixes each message so multi-file output stays attributable.
 pub fn check_json(name: &str, j: &Json) -> Vec<String> {
+    check_json_with(name, j, None)
+}
+
+/// [`check_json`] plus the opt-in latency gate: with
+/// `p999_degrade_max = Some(f)`, every Suite-B rung's total p99.9 must
+/// stay within `f x` the first rung's (off by default — saturated
+/// sweep tails are load-bearing noise unless the caller arms a bound).
+pub fn check_json_with(name: &str, j: &Json, p999_degrade_max: Option<f64>) -> Vec<String> {
     let mut v = Vec::new();
     walk_percentiles(name, "$", j, &mut v);
     check_serve_batching(name, j, &mut v);
     check_overlap_idle(name, j, &mut v);
+    check_grid_halo_bytes(name, j, &mut v);
     check_suite(name, j, &mut v);
     check_rung_metrics(name, j, &mut v);
+    if let Some(max) = p999_degrade_max {
+        check_p999_degrade(name, j, max, &mut v);
+    }
     v
 }
 
@@ -127,6 +139,67 @@ fn check_overlap_idle(name: &str, j: &Json, out: &mut Vec<String>) {
             out.push(format!(
                 "{name}: overlap: pipelined summed idle {on:.3} ms exceeds serial {off:.3} ms"
             ));
+        }
+    }
+}
+
+/// Pull `key=N` out of a machine-parseable `extra` string
+/// (`"halo_bytes=1024 msgs=8 workers=4"`).
+fn extra_field(extra: &str, key: &str) -> Option<f64> {
+    extra
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix(key)?.strip_prefix('='))
+        .and_then(|v| v.parse().ok())
+}
+
+/// `BENCH_grid.json`: at `W >= 4` workers the `WyxWx` tile grid (wy >
+/// 1) must ship fewer halo bytes than the flat `1xW` row split — the
+/// perimeter-over-area claim the 2-D refactor exists to cash in.
+fn check_grid_halo_bytes(name: &str, j: &Json, out: &mut Vec<String>) {
+    let Some(rows) = j.at(&["sections", "grid"]).as_arr() else { return };
+    let stats_of = |r: &Json| -> Option<(String, f64, f64)> {
+        let label = r.at(&["label"]).as_str()?.to_string();
+        let extra = r.at(&["extra"]).as_str()?;
+        Some((label, extra_field(extra, "halo_bytes")?, extra_field(extra, "workers")?))
+    };
+    let parsed: Vec<(String, f64, f64)> = rows.iter().filter_map(stats_of).collect();
+    let Some((_, flat_bytes, flat_workers)) =
+        parsed.iter().find(|(l, _, _)| l.starts_with("grid=1x")).cloned()
+    else {
+        return;
+    };
+    for (label, bytes, workers) in &parsed {
+        if label.starts_with("grid=1x") || *workers < 4.0 || *workers != flat_workers {
+            continue;
+        }
+        if *bytes >= flat_bytes {
+            out.push(format!(
+                "{name}: grid: {label} ships {bytes} halo bytes, not fewer than the flat \
+                 1-D split's {flat_bytes} at {workers} workers"
+            ));
+        }
+    }
+}
+
+/// Opt-in Suite-B tail-latency gate (`--p999-degrade-max F`): each
+/// rung's total p99.9 must stay within `F x` the first rung's.
+fn check_p999_degrade(name: &str, j: &Json, max: f64, out: &mut Vec<String>) {
+    let Some(suite) = j.get("suite") else { return };
+    if suite.at(&["name"]).as_str() != Some("suiteB") {
+        return;
+    }
+    let Some(rungs) = suite.at(&["rungs"]).as_arr() else { return };
+    let p999 = |r: &Json| r.at(&["latency_ms", "total", "p999_ms"]).as_f64();
+    let Some(base) = rungs.first().and_then(&p999).filter(|&b| b > 0.0) else { return };
+    for (i, rung) in rungs.iter().enumerate().skip(1) {
+        let label = rung.at(&["label"]).as_str().unwrap_or("?");
+        if let Some(p) = p999(rung) {
+            if p > base * max {
+                out.push(format!(
+                    "{name}: suiteB rung {i} ({label}): total p99.9 {p:.3} ms exceeds \
+                     {max}x the first rung's {base:.3} ms"
+                ));
+            }
         }
     }
 }
@@ -343,6 +416,12 @@ pub fn check_scrape(name: &str, text: &str) -> Vec<String> {
 /// first non-empty line is an object with a `ts_ms` key is checked as a
 /// metrics-scrape JSONL; anything else as one whole-file JSON document.
 pub fn check_files(paths: &[String]) -> Result<()> {
+    check_files_with(paths, None)
+}
+
+/// [`check_files`] plus the opt-in `--p999-degrade-max` Suite-B
+/// tail-latency bound (see [`check_json_with`]).
+pub fn check_files_with(paths: &[String], p999_degrade_max: Option<f64>) -> Result<()> {
     crate::ensure!(!paths.is_empty(), "bench check needs at least one BENCH_*.json path");
     let mut violations = Vec::new();
     for path in paths {
@@ -354,7 +433,7 @@ pub fn check_files(paths: &[String]) -> Result<()> {
             check_scrape(path, &text)
         } else {
             let parsed = Json::parse(text.trim()).with_context(|| format!("parsing {path}"))?;
-            check_json(path, &parsed)
+            check_json_with(path, &parsed, p999_degrade_max)
         };
         if v.is_empty() {
             println!("bench check: {path}: OK");
@@ -603,6 +682,58 @@ mod tests {
         assert!(check_files(&[bad.to_string_lossy().into_owned()]).is_err());
         let _ = std::fs::remove_file(&good);
         let _ = std::fs::remove_file(&bad);
+    }
+
+    #[test]
+    fn grid_halo_bytes_invariant() {
+        let good = parse(
+            r#"{"sections":{"grid":[
+                {"label":"grid=1x4","gstencils_per_sec":1.0,"extra":"halo_bytes=4096 msgs=12 workers=4"},
+                {"label":"grid=2x2","gstencils_per_sec":1.1,"extra":"halo_bytes=2304 msgs=16 workers=4"}]}}"#,
+        );
+        assert!(check_json("g", &good).is_empty());
+        let bad = parse(
+            r#"{"sections":{"grid":[
+                {"label":"grid=1x4","gstencils_per_sec":1.0,"extra":"halo_bytes=2048 msgs=12 workers=4"},
+                {"label":"grid=2x2","gstencils_per_sec":1.1,"extra":"halo_bytes=4096 msgs=16 workers=4"}]}}"#,
+        );
+        let v = check_json("b", &bad);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("not fewer than the flat"), "{v:?}");
+        // below the W >= 4 crossover the comparison is vacuous
+        let small = parse(
+            r#"{"sections":{"grid":[
+                {"label":"grid=1x2","gstencils_per_sec":1.0,"extra":"halo_bytes=1024 msgs=6 workers=2"},
+                {"label":"grid=2x1","gstencils_per_sec":1.0,"extra":"halo_bytes=2048 msgs=6 workers=2"}]}}"#,
+        );
+        assert!(check_json("g", &small).is_empty());
+    }
+
+    #[test]
+    fn p999_degrade_gate_is_opt_in_and_bounded() {
+        let j = parse(
+            r#"{"suite":{"name":"suiteB","rungs":[
+                {"label":"rate=10","offered":5,"completed":5,"rejected":0,"errors":0,"lost":0,
+                 "latency_ms":{"total":{"count":5,"p999_ms":10.0}}},
+                {"label":"rate=20","offered":8,"completed":8,"rejected":0,"errors":0,"lost":0,
+                 "latency_ms":{"total":{"count":8,"p999_ms":45.0}}}]}}"#,
+        );
+        // off by default
+        assert!(check_json("g", &j).is_empty());
+        // generous bound passes, tight bound trips
+        assert!(check_json_with("g", &j, Some(5.0)).is_empty());
+        let v = check_json_with("b", &j, Some(2.0));
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("p99.9") && v[0].contains("2x"), "{v:?}");
+        // suiteA is never gated (closed loop, no rate ladder)
+        let a = parse(
+            r#"{"suite":{"name":"suiteA","rungs":[
+                {"label":"conns=4","offered":4,"completed":4,"rejected":0,"errors":0,"lost":0,
+                 "latency_ms":{"total":{"count":4,"p999_ms":1.0}}},
+                {"label":"conns=8","offered":8,"completed":8,"rejected":0,"errors":0,"lost":0,
+                 "latency_ms":{"total":{"count":8,"p999_ms":99.0}}}]}}"#,
+        );
+        assert!(check_json_with("g", &a, Some(2.0)).is_empty());
     }
 
     #[test]

@@ -401,6 +401,78 @@ pub fn run_boundary(scale: f64, threads: usize) -> Vec<(String, Vec<Row>)> {
     out
 }
 
+/// 2-D worker-grid study: the same `W`-worker heat2d problem split as
+/// the flat `1xW` row partition vs a `2x(W/2)` tile grid — identical
+/// physics and inputs, so the gap in the comm ledger is purely the
+/// tile perimeter (full-width dim-1 links vs half-width links plus
+/// tiny corner exchanges).  `extra` carries `halo_bytes=` / `msgs=` in
+/// machine-parseable form; CI archives this as `BENCH_grid.json` and
+/// asserts the 2-D rung ships fewer halo bytes at `W >= 4`.
+pub fn run_grid(scale: f64, threads: usize) -> Vec<(String, Vec<Row>)> {
+    use crate::coordinator::partition::even_split;
+    let bench = "heat2d";
+    let s = spec::get(bench).unwrap();
+    let (core_shape, steps, tb) = scaled_problem(bench, scale);
+    let w = 4usize;
+    let core = Field::random(&core_shape, 0x6121D);
+    let mk = |wy: usize, wx: usize| Scheduler {
+        spec: s.clone(),
+        tb,
+        workers: (0..wy * wx).map(|_| native("tetris-cpu", threads)).collect(),
+        partition: Partition::rows(1, even_split(core_shape[0], wx))
+            .with_bands(if wy > 1 { even_split(core_shape[1], wy) } else { Vec::new() }),
+        comm_model: CommModel::default(),
+        boundary: Boundary::Periodic,
+        adapt_every: 0,
+        overlap: Overlap::Auto,
+    };
+    let mut rows = Vec::new();
+    let mut outs: Vec<Field> = Vec::new();
+    let mut base = 0.0;
+    for (wy, wx) in [(1, w), (2, w / 2)] {
+        match mk(wy, wx).run(&core, steps) {
+            Ok((out, m)) => {
+                let g = m.gstencils_per_sec();
+                if base == 0.0 {
+                    base = g;
+                }
+                rows.push(Row {
+                    label: format!("grid={wy}x{wx}"),
+                    gstencils: g,
+                    speedup: g / base.max(1e-12),
+                    extra: format!(
+                        "halo_bytes={} msgs={} workers={}",
+                        m.comm.bytes,
+                        m.comm.messages,
+                        wy * wx
+                    ),
+                });
+                outs.push(out);
+            }
+            Err(e) => rows.push(Row {
+                label: format!("grid={wy}x{wx}"),
+                gstencils: 0.0,
+                speedup: 0.0,
+                extra: format!("ERROR: {e}"),
+            }),
+        }
+    }
+    // Slab decomposition is numerically invisible, so the grid shape
+    // must not change a single bit of the result.
+    if outs.len() == 2 {
+        assert!(
+            outs[0].data() == outs[1].data(),
+            "1x{w} and 2x{} grids diverged numerically",
+            w / 2
+        );
+    }
+    print_table(
+        &format!("2-D worker grid: heat2d, {w} workers, periodic"),
+        &rows,
+    );
+    vec![("grid".to_string(), rows)]
+}
+
 /// Serving-layer throughput study: jobs/sec at varying batch widths.
 ///
 /// The first section runs the same 8-job mix through one partition-

@@ -36,6 +36,69 @@ impl CommModel {
     }
 }
 
+/// Per-block halo exchanges implied by a 2-D worker-grid topology: one
+/// entry per inter-worker link, valued at that link's bytes (both
+/// directions folded into one centralized message, exactly like the
+/// historical 1-D accounting).
+///
+/// * dim-0 edge links: adjacent non-empty row runs, once per non-empty
+///   band — `2 * halo * band_width * rest2 * 8` bytes each;
+/// * dim-1 edge links: adjacent non-empty bands, once per non-empty
+///   run — `2 * halo * run_rows * rest2 * 8` bytes each;
+/// * corner links: per (adjacent run pair × adjacent band pair), two
+///   diagonal exchanges of `2 * halo * halo * rest2 * 8` bytes each —
+///   only a true grid (both axes split) has corners.
+///
+/// `periodic` adds the wrap link on any axis with more than one active
+/// run/band.  `rest2` is the product of the *core* extents of dims 2+
+/// (1 for 2-D fields).  With a single band this reproduces the 1-D
+/// ledger exactly: one message per adjacent run pair (plus the
+/// periodic wrap), each `2 * halo * band_width * rest2 * 8` bytes.
+pub fn grid_exchanges(
+    rows: &[(usize, usize)],
+    bands: &[(usize, usize)],
+    halo: usize,
+    rest2: usize,
+    periodic: bool,
+) -> Vec<usize> {
+    // Adjacent pairs among the non-empty runs of one axis, in order;
+    // periodic adds the wrap pair when more than one run is active.
+    fn adjacent_pairs(spans: &[(usize, usize)], periodic: bool) -> usize {
+        let active = spans.iter().filter(|&&(s, e)| e > s).count();
+        if active == 0 {
+            return 0;
+        }
+        if periodic && active > 1 {
+            active
+        } else {
+            active - 1
+        }
+    }
+    let x_pairs = adjacent_pairs(rows, periodic);
+    let y_pairs = adjacent_pairs(bands, periodic);
+    let mut out = Vec::new();
+    // dim-0 edges: once per non-empty band
+    for &(c0, c1) in bands.iter().filter(|&&(c0, c1)| c1 > c0) {
+        for _ in 0..x_pairs {
+            out.push(2 * halo * (c1 - c0) * rest2 * 8);
+        }
+    }
+    // dim-1 edges: once per non-empty run
+    for &(s, e) in rows.iter().filter(|&&(s, e)| e > s) {
+        for _ in 0..y_pairs {
+            out.push(2 * halo * (e - s) * rest2 * 8);
+        }
+    }
+    // corners: only when both axes are split
+    if bands.len() > 1 && rows.len() > 1 {
+        for _ in 0..x_pairs * y_pairs {
+            out.push(2 * halo * halo * rest2 * 8);
+            out.push(2 * halo * halo * rest2 * 8);
+        }
+    }
+    out
+}
+
 /// Ledger of halo traffic accumulated over a run.
 #[derive(Clone, Debug, Default)]
 pub struct CommLedger {
@@ -101,6 +164,43 @@ mod tests {
         let m = CommModel::default();
         let (c, s) = l.modeled_cost(&m);
         assert!(c < s);
+    }
+
+    #[test]
+    fn grid_exchanges_single_band_matches_1d_accounting() {
+        // 4 non-empty runs, one full band of 64 cols, halo 2: the 1-D
+        // ledger — 3 links (4 with wrap) of 2*halo*row_width*8 bytes.
+        let rows = vec![(0, 16), (16, 32), (32, 48), (48, 64)];
+        let ex = grid_exchanges(&rows, &[(0, 64)], 2, 1, false);
+        assert_eq!(ex, vec![2048; 3]);
+        let ex = grid_exchanges(&rows, &[(0, 64)], 2, 1, true);
+        assert_eq!(ex, vec![2048; 4]);
+        // zero-share runs don't form links
+        let rows = vec![(0, 32), (32, 32), (32, 64)];
+        let ex = grid_exchanges(&rows, &[(0, 64)], 2, 1, false);
+        assert_eq!(ex, vec![2048; 1]);
+        // a single worker exchanges nothing
+        assert!(grid_exchanges(&[(0, 64)], &[(0, 64)], 2, 1, false).is_empty());
+    }
+
+    #[test]
+    fn grid_cuts_halo_bytes_versus_1d_at_four_workers() {
+        // 64×64, halo 2, W=4: the 2×2 grid trades more messages
+        // (perimeter has corners) for strictly fewer halo bytes than
+        // the 1×4 split — the perimeter-over-area argument.
+        let flat = grid_exchanges(
+            &[(0, 16), (16, 32), (32, 48), (48, 64)],
+            &[(0, 64)],
+            2,
+            1,
+            false,
+        );
+        let grid = grid_exchanges(&[(0, 32), (32, 64)], &[(0, 32), (32, 64)], 2, 1, false);
+        // 2 x-links + 2 y-links of 1024 B plus 2 corner links of 64 B
+        assert_eq!(grid.len(), 6);
+        assert_eq!(grid.iter().sum::<usize>(), 2 * 1024 + 2 * 1024 + 2 * 64);
+        assert_eq!(flat.iter().sum::<usize>(), 3 * 2048);
+        assert!(grid.iter().sum::<usize>() < flat.iter().sum::<usize>());
     }
 
     #[test]

@@ -28,6 +28,12 @@ pub struct RunMetrics {
     /// partition under `adapt_every`; callers can reuse it as the next
     /// run's starting partition without a lossy ratio round-trip).
     pub final_shares: Vec<usize>,
+    /// Per-band dim-1 cell widths at the end of the run — empty for the
+    /// degenerate 1-D partition, mirroring `Partition::cols`.  Together
+    /// with [`final_shares`] this reconstructs the converged 2-D grid.
+    ///
+    /// [`final_shares`]: RunMetrics::final_shares
+    pub final_bands: Vec<usize>,
     /// §5.2 mid-run rebalances that actually moved slabs (0 = static).
     pub retunes: usize,
     /// Whether the §5.3 pipelined (double-buffered) leader loop ran.

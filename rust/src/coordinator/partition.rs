@@ -9,21 +9,66 @@
 //! fully occupied, the remaining part left on CPU is still
 //! well-addressed").
 
-/// Assignment of `unit`-row slabs to workers, in worker order.
+/// Assignment of tiles to workers, in worker order.
+///
+/// 1-D (the historical shape): `cols` is empty and each worker owns a
+/// contiguous run of `unit`-row slabs — worker `i` gets `shares[i]`
+/// units of dim 0.  2-D: `cols` holds the dim-1 cell widths of `wy`
+/// grid bands, the `shares` run along dim 0 is shared by every band,
+/// and worker `w = gy * wx + gx` owns the rect
+/// `rows(gx) × band(gy)`.  `cols.is_empty()` is the degenerate `wy = 1`
+/// grid and must behave bit-identically to the pre-grid partition.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Partition {
     /// Rows per unit (dim-0 quantum).
     pub unit: usize,
-    /// Units owned by each worker (contiguous, in order).
+    /// Dim-0 units owned by each grid column (contiguous, in order).
     pub shares: Vec<usize>,
+    /// Dim-1 cells owned by each grid band (contiguous, in order);
+    /// empty for the degenerate 1-D partition.
+    pub cols: Vec<usize>,
 }
 
 impl Partition {
+    /// The historical 1-D shape: dim-0 runs only.
+    pub fn rows(unit: usize, shares: Vec<usize>) -> Partition {
+        Partition { unit, shares, cols: Vec::new() }
+    }
+
+    /// Attach dim-1 bands, turning this into a `cols.len() × wx` grid.
+    /// A single band covers the whole axis and is normalized away — a
+    /// `1 × wx` grid IS the degenerate partition, by construction.
+    pub fn with_bands(mut self, cols: Vec<usize>) -> Partition {
+        self.cols = if cols.len() > 1 { cols } else { Vec::new() };
+        self
+    }
+
+    /// Grid height (bands along dim 1).
+    pub fn wy(&self) -> usize {
+        self.cols.len().max(1)
+    }
+
+    /// Grid width (runs along dim 0).
+    pub fn wx(&self) -> usize {
+        self.shares.len()
+    }
+
+    /// Total workers: `wy * wx` (== `shares.len()` when degenerate).
+    pub fn workers(&self) -> usize {
+        self.wy() * self.wx()
+    }
+
     pub fn total_units(&self) -> usize {
         self.shares.iter().sum()
     }
 
-    /// Row spans [start, end) per worker (dim-0, core coordinates).
+    /// Total dim-1 cells across the bands (0 when degenerate).
+    pub fn total_cols(&self) -> usize {
+        self.cols.iter().sum()
+    }
+
+    /// Row spans [start, end) per grid column (dim-0, core
+    /// coordinates).  One entry per worker when degenerate.
     pub fn spans(&self) -> Vec<(usize, usize)> {
         let mut out = Vec::with_capacity(self.shares.len());
         let mut x = 0;
@@ -34,9 +79,62 @@ impl Partition {
         out
     }
 
-    /// GPU:CPU style scheduling ratio of worker `i` (paper Fig. 14).
+    /// Column spans [start, end) per grid band (dim-1, core cell
+    /// coordinates).  `n_cols` is the domain's dim-1 extent, returned
+    /// as the single full-width band when degenerate.
+    pub fn bands(&self, n_cols: usize) -> Vec<(usize, usize)> {
+        if self.cols.is_empty() {
+            return vec![(0, n_cols)];
+        }
+        let mut out = Vec::with_capacity(self.cols.len());
+        let mut c = 0;
+        for &w in &self.cols {
+            out.push((c, c + w));
+            c += w;
+        }
+        out
+    }
+
+    /// Per-worker 2-D rects `((r0, r1), (c0, c1))` in worker order
+    /// `w = gy * wx + gx` — rows in dim-0 core coordinates, cols in
+    /// dim-1 core cell coordinates.  Degenerate partitions yield one
+    /// full-width rect per span.
+    pub fn rects(&self, n_cols: usize) -> Vec<((usize, usize), (usize, usize))> {
+        let spans = self.spans();
+        let mut out = Vec::with_capacity(self.workers());
+        for band in self.bands(n_cols) {
+            for &span in &spans {
+                out.push((span, band));
+            }
+        }
+        out
+    }
+
+    /// Cells owned by each worker, scaled by `rest_cells` (the product
+    /// of the dims the partition does not split: dims 1.. when
+    /// degenerate, dims 2.. for a grid).  Worker order.
+    pub fn worker_cells(&self, rest_cells: usize) -> Vec<usize> {
+        if self.cols.is_empty() {
+            return self.shares.iter().map(|&s| s * self.unit * rest_cells).collect();
+        }
+        let mut out = Vec::with_capacity(self.workers());
+        for &c in &self.cols {
+            for &s in &self.shares {
+                out.push(s * self.unit * c * rest_cells);
+            }
+        }
+        out
+    }
+
+    /// GPU:CPU style scheduling ratio of worker `i` (paper Fig. 14) —
+    /// the fraction of domain cells worker `i` owns.
     pub fn ratio(&self, i: usize) -> f64 {
-        self.shares[i] as f64 / self.total_units() as f64
+        if self.cols.is_empty() {
+            return self.shares[i] as f64 / self.total_units() as f64;
+        }
+        let (gy, gx) = (i / self.wx(), i % self.wx());
+        let total = self.total_units() as f64 * self.total_cols() as f64;
+        (self.shares[gx] * self.cols[gy]) as f64 / total
     }
 
     /// Split `units` across workers proportionally to `weights`
@@ -90,8 +188,17 @@ impl Partition {
             }
         }
         assert_eq!(spill, 0, "total capacity smaller than the domain");
-        Partition { unit, shares }
+        Partition::rows(unit, shares)
     }
+}
+
+/// Split `total` cells into `k` contiguous runs as evenly as possible
+/// (the leading runs absorb the remainder) — the default band layout
+/// for `--grid WyxWx`.
+pub fn even_split(total: usize, k: usize) -> Vec<usize> {
+    assert!(k > 0, "cannot split into zero runs");
+    let (q, r) = (total / k, total % k);
+    (0..k).map(|i| q + usize::from(i < r)).collect()
 }
 
 /// Units a worker with `capacity_bytes` can hold: each unit needs
@@ -107,9 +214,57 @@ mod tests {
 
     #[test]
     fn spans_are_contiguous_and_cover() {
-        let p = Partition { unit: 4, shares: vec![3, 1, 2] };
+        let p = Partition::rows(4, vec![3, 1, 2]);
         assert_eq!(p.spans(), vec![(0, 12), (12, 16), (16, 24)]);
         assert_eq!(p.total_units(), 6);
+        assert_eq!((p.wy(), p.wx(), p.workers()), (1, 3, 3));
+    }
+
+    #[test]
+    fn grid_rects_tile_the_domain() {
+        // 2×3 grid over 24 rows × 10 cols: row-major worker rects.
+        let p = Partition::rows(4, vec![3, 1, 2]).with_bands(vec![6, 4]);
+        assert_eq!((p.wy(), p.wx(), p.workers()), (2, 3, 6));
+        assert_eq!(p.bands(10), vec![(0, 6), (6, 10)]);
+        assert_eq!(
+            p.rects(10),
+            vec![
+                ((0, 12), (0, 6)),
+                ((12, 16), (0, 6)),
+                ((16, 24), (0, 6)),
+                ((0, 12), (6, 10)),
+                ((12, 16), (6, 10)),
+                ((16, 24), (6, 10)),
+            ]
+        );
+        // per-worker cells and ratios follow the area product
+        assert_eq!(
+            p.worker_cells(1),
+            vec![72, 24, 48, 48, 16, 32]
+        );
+        assert!((p.ratio(0) - 72.0 / 240.0).abs() < 1e-12);
+        assert!((p.ratio(4) - 16.0 / 240.0).abs() < 1e-12);
+        let total: f64 = (0..p.workers()).map(|i| p.ratio(i)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_band_normalizes_to_degenerate() {
+        // a 1×wx grid IS the degenerate partition, by construction
+        let p = Partition::rows(2, vec![2, 2]).with_bands(vec![10]);
+        assert!(p.cols.is_empty());
+        assert_eq!(p, Partition::rows(2, vec![2, 2]));
+        assert_eq!(p.bands(10), vec![(0, 10)]);
+        assert_eq!(p.rects(10), vec![((0, 4), (0, 10)), ((4, 8), (0, 10))]);
+        assert_eq!(p.worker_cells(5), vec![20, 20]);
+    }
+
+    #[test]
+    fn even_split_distributes_remainder_first() {
+        assert_eq!(even_split(10, 3), vec![4, 3, 3]);
+        assert_eq!(even_split(9, 3), vec![3, 3, 3]);
+        assert_eq!(even_split(2, 4), vec![1, 1, 0, 0]);
+        assert_eq!(even_split(0, 2), vec![0, 0]);
     }
 
     #[test]
@@ -195,7 +350,7 @@ mod tests {
 
     #[test]
     fn ratio_matches_shares() {
-        let p = Partition { unit: 1, shares: vec![1, 3] };
+        let p = Partition::rows(1, vec![1, 3]);
         assert!((p.ratio(1) - 0.75).abs() < 1e-12);
     }
 

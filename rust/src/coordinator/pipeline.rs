@@ -168,7 +168,7 @@ impl Scheduler {
             self.tb
         );
         crate::ensure!(
-            !self.workers.is_empty() && self.workers.len() == self.partition.shares.len(),
+            !self.workers.is_empty() && self.workers.len() == self.partition.workers(),
             "workers/partition mismatch"
         );
         let spans = self.partition.spans();
@@ -178,6 +178,18 @@ impl Scheduler {
             spans.last().unwrap().1,
             cores[0].shape()[0]
         );
+        if self.partition.cols.len() > 1 {
+            crate::ensure!(
+                cores[0].ndim() >= 2,
+                "2-D worker grid needs a field with a column axis"
+            );
+            crate::ensure!(
+                self.partition.total_cols() == cores[0].shape()[1],
+                "grid bands cover {} cols, domain has {}",
+                self.partition.total_cols(),
+                cores[0].shape()[1]
+            );
+        }
         let blocks = total_steps / self.tb;
         if self.overlap.enabled(self.workers.len(), blocks) {
             self.run_batch_pipelined(cores, total_steps)
@@ -196,13 +208,22 @@ impl Scheduler {
         let nd = core0.ndim();
         let mut globals: Vec<Field> =
             cores.iter().map(|c| c.pad(halo, self.boundary.pad_value())).collect();
-        let ext_rest: Vec<usize> = globals[0].shape()[1..].to_vec();
-        let ext_rest_cells: usize = ext_rest.iter().product::<usize>().max(1);
+        let ext_rest_cells: usize = globals[0].shape()[1..].iter().product::<usize>().max(1);
         // What one internal-boundary halo message actually ships on a
         // real two-device deployment: core-row cells.  The padding of the
         // non-split dims is each device's own ghost ring, filled locally
         // from the boundary condition, never sent over the link.
         let core_rest_cells: usize = core0.shape()[1..].iter().product::<usize>().max(1);
+        // Grid geometry: dim-1 cells per band plus the dims-2+ rest
+        // products; 1-D fields carry the single unit-width band so the
+        // per-link byte formulas stay uniform.
+        let n_cols = if nd >= 2 { core0.shape()[1] } else { 1 };
+        let ext2: Vec<usize> = if nd >= 2 { globals[0].shape()[2..].to_vec() } else { Vec::new() };
+        let rest2: usize =
+            if nd >= 2 { core0.shape()[2..].iter().product::<usize>().max(1) } else { 1 };
+        let periodic = matches!(self.boundary, Boundary::Periodic);
+        let mut rects = partition.rects(n_cols);
+        let mut bands = partition.bands(n_cols);
 
         let blocks = total_steps / self.tb;
         let nw = self.workers.len();
@@ -221,7 +242,7 @@ impl Scheduler {
         // touches/ships), so a Perfetto track shows volume, not just
         // duration, and `tetris trace diff` can report per-phase deltas.
         let ghost_bytes = nf * (globals[0].len() - core0.len()) * 8;
-        let extract_rows: usize = spans.iter().map(|&(s, e)| (e - s) + 2 * halo).sum();
+        let extract_rows: usize = rects.iter().map(|&((s, e), _)| (e - s) + 2 * halo).sum();
         let paste_bytes = nf * core0.len() * 8;
 
         for b in 0..blocks {
@@ -246,27 +267,39 @@ impl Scheduler {
             // inter-device links instead of W-1.  A single worker's
             // wrap-around is a local copy, not a message.
             let te = Instant::now();
-            // rows sums (e-s)+2·halo over workers (= n_rows + 2·halo·nw,
-            // invariant under retunes); bytes is the full slab snapshot.
+            // rows sums (e-s)+2·halo over worker rects (invariant under
+            // retunes); bytes is the full slab snapshot.
+            let ext2_cells = ext2.iter().product::<usize>().max(1);
+            let snapshot_cells: usize = rects
+                .iter()
+                .map(|&((s, e), (c0, c1))| {
+                    let r = (e - s) + 2 * halo;
+                    if nd >= 2 { r * ((c1 - c0) + 2 * halo) * ext2_cells } else { r }
+                })
+                .sum();
             let sp = trace::span(
                 "leader",
                 "extract",
                 &[
                     ("block", b.into()),
                     ("rows", extract_rows.into()),
-                    ("bytes", (nf * extract_rows * ext_rest_cells * 8).into()),
+                    ("bytes", (nf * snapshot_cells * 8).into()),
                 ],
             );
             let inputs: Vec<Vec<Field>> = globals
                 .iter()
                 .map(|g| {
-                    spans
+                    rects
                         .iter()
-                        .map(|&(s, e)| {
+                        .map(|&((s, e), (c0, c1))| {
                             let mut off = vec![s];
-                            off.extend(vec![0usize; nd - 1]);
                             let mut shape = vec![(e - s) + 2 * halo];
-                            shape.extend(&ext_rest);
+                            if nd >= 2 {
+                                off.push(c0);
+                                off.extend(vec![0usize; nd - 2]);
+                                shape.push((c1 - c0) + 2 * halo);
+                                shape.extend(&ext2);
+                            }
                             g.extract(&off, &shape)
                         })
                         .collect()
@@ -274,13 +307,17 @@ impl Scheduler {
                 .collect();
             drop(sp);
             leader_extract += te.elapsed();
-            // Only boundaries between *non-empty* spans are real links: a
-            // zero-share worker holds no rows, so its neighbours abut
-            // directly (and a lone active worker's wrap is a local copy).
-            let links = internal_links(&spans, self.boundary);
-            for _ in 0..links * nf {
-                // two directions x halo rows x core-row cells
-                comm.record_exchange(2 * halo * core_rest_cells * 8, self.tb);
+            // Only boundaries between *non-empty* runs/bands are real
+            // links: a zero-area worker holds no cells, so its
+            // neighbours abut directly (and a lone active worker's wrap
+            // is a local copy).  Per link, two directions x halo depth x
+            // the link's cross-section, once per block.
+            let exchanges =
+                super::comm::grid_exchanges(&spans, &bands, halo, rest2, periodic);
+            for _ in 0..nf {
+                for &bytes in &exchanges {
+                    comm.record_exchange(bytes, self.tb);
+                }
             }
 
             // (2) One concurrent dispatch over all (field, worker) slabs.
@@ -291,7 +328,7 @@ impl Scheduler {
                 "dispatch",
                 &[
                     ("block", b.into()),
-                    ("bytes", (links * nf * 2 * halo * core_rest_cells * 8).into()),
+                    ("bytes", (nf * exchanges.iter().sum::<usize>()).into()),
                 ],
             );
             let results = dispatch(&self.workers, &self.spec, &inputs, self.tb, halo);
@@ -314,10 +351,15 @@ impl Scheduler {
                 &[("block", b.into()), ("bytes", paste_bytes.into())],
             );
             for (f, per_field) in results.into_iter().enumerate() {
-                for (i, ((res, _), &(s, _e))) in per_field.into_iter().zip(&spans).enumerate() {
+                for (i, ((res, _), &((s, _e), (c0, _c1)))) in
+                    per_field.into_iter().zip(&rects).enumerate()
+                {
                     let out = res.with_context(|| format!("worker {i} failed (field {f})"))?;
                     let mut off = vec![s + halo];
-                    off.extend(vec![halo; nd - 1]);
+                    if nd >= 2 {
+                        off.push(c0 + halo);
+                        off.extend(vec![halo; nd - 2]);
+                    }
                     globals[f].paste(&off, &out);
                 }
             }
@@ -346,6 +388,8 @@ impl Scheduler {
                 ) {
                     partition = next;
                     spans = partition.spans();
+                    rects = partition.rects(n_cols);
+                    bands = partition.bands(n_cols);
                     retunes += 1;
                 }
                 window_busy.fill(0.0);
@@ -365,6 +409,7 @@ impl Scheduler {
             comm,
             ratios: (0..nw).map(|i| partition.ratio(i)).collect(),
             final_shares: partition.shares.clone(),
+            final_bands: partition.cols.clone(),
             retunes,
             overlap: false,
             overlap_hidden: Duration::ZERO,
@@ -397,6 +442,20 @@ impl Scheduler {
         let ext_rest_cells: usize =
             core0.shape()[1..].iter().map(|n| n + 2 * halo).product::<usize>().max(1);
         let core_rest_cells: usize = core0.shape()[1..].iter().product::<usize>().max(1);
+        // Grid geometry (see run_batch_serial): per-band dim-1 spans
+        // plus the dims-2+ rest products behind the per-link byte and
+        // slab-volume formulas.
+        let n_cols = if nd >= 2 { core0.shape()[1] } else { 1 };
+        let ext_rest2: usize = if nd >= 2 {
+            core0.shape()[2..].iter().map(|n| n + 2 * halo).product::<usize>().max(1)
+        } else {
+            1
+        };
+        let core_rest2: usize =
+            if nd >= 2 { core0.shape()[2..].iter().product::<usize>().max(1) } else { 1 };
+        let periodic = matches!(self.boundary, Boundary::Periodic);
+        let mut rects = partition.rects(n_cols);
+        let mut bands = partition.bands(n_cols);
         let blocks = total_steps / self.tb;
         let nw = self.workers.len();
         let tb = self.tb;
@@ -463,7 +522,7 @@ impl Scheduler {
             // wiring), and the closures below are registered in plan
             // order — so the graph the race checker certifies is the
             // graph the pool executes, by construction.
-            let plan = WindowPlan::build(&spans, halo, n_rows, boundary, nf, b0, bw);
+            let plan = WindowPlan::build_grid(&spans, &bands, halo, n_rows, n_cols, boundary, nf, b0, bw);
             // Announce the window geometry so `tetris trace check` can
             // bound this tag's task-id universe (3·bw·nf·nw).
             trace::instant(
@@ -502,7 +561,7 @@ impl Scheduler {
 
             {
                 let bufs = &buffers;
-                let spans_r = &spans;
+                let rects_r = &rects;
                 let inputs_r = &inputs;
                 let outputs_r = &outputs;
                 let busy_r = &busy_ns;
@@ -533,15 +592,17 @@ impl Scheduler {
                     let read_par = b % 2;
                     let write_par = (b + 1) % 2;
                     let idx = (k * nf + f) * nw + w;
-                    let (s, e) = spans_r[w];
+                    let ((s, e), (c0, c1)) = rects_r[w];
                     let deps = plan.model.deps[tid].clone();
                     let access = plan.model.accesses[tid].clone();
                     // Slab geometry for the volume args: assemble/compute
                     // move the padded slab, writeback the unpadded core.
                     let slab_rows = (e - s) + 2 * halo;
-                    let slab_cells = slab_rows * ext_rest_cells;
+                    let slab_cells = slab_rows
+                        * if nd >= 2 { ((c1 - c0) + 2 * halo) * ext_rest2 } else { 1 };
                     let out_rows = e - s;
-                    let out_cells = out_rows * core_rest_cells;
+                    let out_cells =
+                        out_rows * if nd >= 2 { (c1 - c0) * core_rest2 } else { 1 };
                     let chain = (window_tag << 20) | idx as u64;
                     let id = match m.kind {
                         // Assemble: the §5.3 prefetch.  Its plan deps are
@@ -571,7 +632,7 @@ impl Scheduler {
                                 let t = Instant::now();
                                 let slab = {
                                     let gbuf = bufs[read_par][f].read().unwrap();
-                                    assemble_slab(&gbuf, s, e, halo, boundary)
+                                    assemble_slab(&gbuf, s, e, c0, c1, halo, boundary)
                                 };
                                 *inputs_r[idx].lock().unwrap() = Some(slab);
                                 let dt = t.elapsed().as_nanos() as u64;
@@ -659,7 +720,10 @@ impl Scheduler {
                                 let taken = outputs_r[idx].lock().unwrap().take();
                                 if let Some(out) = taken {
                                     let mut off = vec![s + halo];
-                                    off.extend(vec![halo; nd - 1]);
+                                    if nd >= 2 {
+                                        off.push(c0 + halo);
+                                        off.extend(vec![halo; nd - 2]);
+                                    }
                                     bufs[write_par][f].write().unwrap().paste(&off, &out);
                                 }
                                 let dt = t.elapsed().as_nanos() as u64;
@@ -692,8 +756,8 @@ impl Scheduler {
 
             // Per-block accounting, identical quantities to the serial
             // loop (busy from the timed compute tasks, idle against the
-            // slowest slab, comm counts from the span topology).
-            let links = internal_links(&spans, boundary);
+            // slowest slab, comm counts from the grid topology).
+            let exchanges = super::comm::grid_exchanges(&spans, &bands, halo, core_rest2, periodic);
             for k in 0..bw {
                 let mut block_busy = vec![Duration::ZERO; nw];
                 for w in 0..nw {
@@ -705,11 +769,13 @@ impl Scheduler {
                     busy[w] += block_busy[w];
                     idle[w] += slowest - block_busy[w];
                 }
-                for _ in 0..links * nf {
-                    comm.record_exchange(2 * halo * core_rest_cells * 8, tb);
+                for _ in 0..nf {
+                    for &bytes in &exchanges {
+                        comm.record_exchange(bytes, tb);
+                    }
                 }
                 if block_overlapped[k].load(Ordering::Relaxed) {
-                    comm.record_overlapped(links * nf);
+                    comm.record_overlapped(exchanges.len() * nf);
                 }
             }
             leader_extract += Duration::from_nanos(extract_ns.load(Ordering::Relaxed));
@@ -736,6 +802,8 @@ impl Scheduler {
                 ) {
                     partition = next;
                     spans = partition.spans();
+                    rects = partition.rects(n_cols);
+                    bands = partition.bands(n_cols);
                     retunes += 1;
                 }
             }
@@ -762,6 +830,7 @@ impl Scheduler {
             comm,
             ratios: (0..nw).map(|i| partition.ratio(i)).collect(),
             final_shares: partition.shares.clone(),
+            final_bands: partition.cols.clone(),
             retunes,
             overlap: true,
             overlap_hidden,
@@ -785,23 +854,45 @@ impl Scheduler {
         blocks_left: usize,
     ) -> Option<Partition> {
         let tmax = per_block.iter().cloned().fold(0.0, f64::max);
-        let caps_cover = self
-            .workers
-            .iter()
-            .map(|w| capacity_units(w.mem_capacity(), partition.unit, ext_rest_cells))
-            .sum::<usize>()
-            >= partition.total_units();
-        if tmax <= 0.0 || !caps_cover {
+        if tmax <= 0.0 {
             return None;
         }
-        // A zero-share worker measured ~nothing; feed it the slowest
+        let grid = partition.cols.len() > 1;
+        if !grid {
+            let caps_cover = self
+                .workers
+                .iter()
+                .map(|w| capacity_units(w.mem_capacity(), partition.unit, ext_rest_cells))
+                .sum::<usize>()
+                >= partition.total_units();
+            if !caps_cover {
+                return None;
+            }
+        }
+        // A zero-area worker measured ~nothing; feed it the slowest
         // time so its exploration weight stays modest.
-        let measured: Vec<f64> = partition
-            .shares
+        let cells = partition.worker_cells(1);
+        let measured: Vec<f64> = cells
             .iter()
             .zip(per_block)
-            .map(|(&s, &t)| if s == 0 || t <= 0.0 { tmax } else { t })
+            .map(|(&c, &t)| if c == 0 || t <= 0.0 { tmax } else { t })
             .collect();
+        if grid {
+            // Per-axis rest products: the tuner's grid path reasons in
+            // (row x col) cells, so rest means dims 2+ only.
+            let halo = self.spec.radius * self.tb;
+            let ext_rest2 = ext_rest_cells / (partition.total_cols() + 2 * halo).max(1);
+            let core_rest2 = (core_rest_cells / partition.total_cols().max(1)).max(1);
+            return tuner::retune_gated_grid(
+                partition,
+                &measured,
+                &self.workers,
+                ext_rest2.max(1),
+                &self.comm_model,
+                core_rest2,
+                blocks_left,
+            );
+        }
         tuner::retune_gated(
             partition,
             &measured,
@@ -819,33 +910,29 @@ impl Scheduler {
 /// is never handed to an engine — it yields an empty result of the
 /// unpadded shape.  Returns `None` for slabs that must actually compute.
 fn empty_slab_output(input: &Field, halo: usize) -> Option<Field> {
-    if input.shape()[0] != 2 * halo {
+    let empty_rows = input.shape()[0] == 2 * halo;
+    let empty_cols = input.ndim() >= 2 && input.shape()[1] == 2 * halo;
+    if !empty_rows && !empty_cols {
         return None;
     }
     let shape: Vec<usize> = input.shape().iter().map(|&n| n - 2 * halo).collect();
     Some(Field::zeros(&shape))
 }
 
-/// Inter-device links implied by the span topology under `boundary`.
-fn internal_links(spans: &[(usize, usize)], boundary: Boundary) -> usize {
-    let active_spans = spans.iter().filter(|&&(s, e)| e > s).count();
-    match boundary {
-        Boundary::Periodic if active_spans > 1 => active_spans,
-        _ => active_spans.saturating_sub(1),
-    }
-}
-
-/// Assemble worker slab input for core span `[s, e)` directly from the
-/// padded global's **core rows** (its ghost ring may be stale): every
-/// value is either a copy of a core cell (dim-0 rows via the boundary's
-/// row map, non-split-dim ghosts via the same axis passes as
-/// [`Boundary::fill`]) or the Dirichlet wall constant — bit-identical
-/// to `boundary.fill(global); global.extract(...)`, without reading any
-/// row outside `[s-halo, e+halo)` and the boundary-mapped edge rows.
+/// Assemble worker slab input for core rect `[s, e) × [c0, c1)` directly
+/// from the padded global's **core cells** (its ghost ring may be
+/// stale): every value is either a copy of a core cell (split-dim rows
+/// and columns via the boundary's index map, non-split-dim ghosts via
+/// the same axis passes as [`Boundary::fill`]) or the Dirichlet wall
+/// constant — bit-identical to `boundary.fill(global);
+/// global.extract(...)` over the rect's padded window.  1-D fields have
+/// no column axis and ignore `(c0, c1)`.
 pub(crate) fn assemble_slab(
     global: &Field,
     s: usize,
     e: usize,
+    c0: usize,
+    c1: usize,
     halo: usize,
     boundary: Boundary,
 ) -> Field {
@@ -853,39 +940,74 @@ pub(crate) fn assemble_slab(
     let gshape = global.shape().to_vec();
     let n_rows = gshape[0] - 2 * halo;
     let rows = (e - s) + 2 * halo;
-    let mut shape = vec![rows];
-    shape.extend(&gshape[1..]);
+    if nd == 1 {
+        let mut out = Field::zeros(&[rows]);
+        for i in 0..rows {
+            match boundary.source_index(s + i, halo, n_rows) {
+                Some(src) => out.copy_region_from(global, &[src], &[i], &[1]),
+                None => out.fill_region(&[i], &[1], boundary.pad_value()),
+            }
+        }
+        return out;
+    }
+    let n_cols = gshape[1] - 2 * halo;
+    let cols = (c1 - c0) + 2 * halo;
+    let mut shape = vec![rows, cols];
+    shape.extend(&gshape[2..]);
     let mut out = Field::zeros(&shape);
-    let rest_core_cnt: Vec<usize> = gshape[1..].iter().map(|n| n - 2 * halo).collect();
-    // Dim-0 rows: each slab row copies its source row's core columns
-    // (identity for core rows, reflect/wrap for edge ghosts); Dirichlet
-    // ghost rows hold the wall constant across the full width.
+    let rest_core_cnt: Vec<usize> = gshape[2..].iter().map(|n| n - 2 * halo).collect();
+    // Identity columns: the padded window's overlap with the global's
+    // core columns `[halo, halo + n_cols)` — copied in place in one run
+    // per row.  Everything outside is a dim-1 ghost of this rect,
+    // mapped column by column exactly like the dim-0 rows.
+    let id_lo = c0.max(halo);
+    let id_hi = (c1 + 2 * halo).min(halo + n_cols);
     for i in 0..rows {
         let pr = s + i;
-        match boundary.source_index(pr, halo, n_rows) {
-            Some(src) => {
-                let mut soff = vec![src];
-                soff.extend(vec![halo; nd - 1]);
-                let mut doff = vec![i];
-                doff.extend(vec![halo; nd - 1]);
-                let mut cnt = vec![1];
-                cnt.extend(&rest_core_cnt);
-                out.copy_region_from(global, &soff, &doff, &cnt);
-            }
-            None => {
-                let mut off = vec![i];
-                off.extend(vec![0; nd - 1]);
-                let mut cnt = vec![1];
-                cnt.extend(&gshape[1..]);
-                out.fill_region(&off, &cnt, boundary.pad_value());
+        let Some(src) = boundary.source_index(pr, halo, n_rows) else {
+            // Dirichlet ghost row: wall constant across the whole row.
+            let mut off = vec![i, 0];
+            off.extend(vec![0; nd - 2]);
+            let mut cnt = vec![1, cols];
+            cnt.extend(&gshape[2..]);
+            out.fill_region(&off, &cnt, boundary.pad_value());
+            continue;
+        };
+        if id_lo < id_hi {
+            let mut soff = vec![src, id_lo];
+            soff.extend(vec![halo; nd - 2]);
+            let mut doff = vec![i, id_lo - c0];
+            doff.extend(vec![halo; nd - 2]);
+            let mut cnt = vec![1, id_hi - id_lo];
+            cnt.extend(&rest_core_cnt);
+            out.copy_region_from(global, &soff, &doff, &cnt);
+        }
+        for pc in (c0..id_lo).chain(id_hi..c1 + 2 * halo) {
+            match boundary.source_index(pc, halo, n_cols) {
+                Some(srcc) => {
+                    let mut soff = vec![src, srcc];
+                    soff.extend(vec![halo; nd - 2]);
+                    let mut doff = vec![i, pc - c0];
+                    doff.extend(vec![halo; nd - 2]);
+                    let mut cnt = vec![1, 1];
+                    cnt.extend(&rest_core_cnt);
+                    out.copy_region_from(global, &soff, &doff, &cnt);
+                }
+                None => {
+                    let mut off = vec![i, pc - c0];
+                    off.extend(vec![0; nd - 2]);
+                    let mut cnt = vec![1, 1];
+                    cnt.extend(&gshape[2..]);
+                    out.fill_region(&off, &cnt, boundary.pad_value());
+                }
             }
         }
     }
     // Non-split-dim ghost faces: the same axis-by-axis passes as the
-    // global ring fill, restricted to this slab's rows — each pass
+    // global ring fill, restricted to this slab's rows/cols — each pass
     // sources coordinates whose earlier axes were already mapped, so
     // corners come out all-axes-mapped exactly like the full fill.
-    for d in 1..nd {
+    for d in 2..nd {
         match boundary {
             Boundary::Dirichlet(v) => {
                 let mut cnt = shape.clone();
@@ -915,38 +1037,91 @@ pub(crate) fn assemble_slab(
     out
 }
 
-/// For each worker: which workers own the core rows its slab assembly
-/// reads (direct `[s-halo, e+halo)` neighbourhood plus boundary-mapped
-/// edge rows), symmetrized — if A reads rows B owns, B also waits on
-/// A's previous-block writeback, the anti-dependency that keeps the
-/// two-buffer scheme race-free by construction.
-pub(crate) fn symmetric_owners(
+/// Per span of one axis: which spans own the core cells its padded
+/// window `[s, e + 2*halo)` reads through the boundary's index map —
+/// the *forward* (read-direction) scan, before any symmetrization.
+fn forward_scan_owners(
     spans: &[(usize, usize)],
     halo: usize,
-    n_rows: usize,
+    n: usize,
     boundary: Boundary,
-) -> Vec<Vec<usize>> {
-    let nw = spans.len();
+) -> Vec<BTreeSet<usize>> {
     let owner_of = |r: usize| spans.iter().position(|&(a, b)| r >= a && r < b);
-    let mut owners: Vec<BTreeSet<usize>> = Vec::with_capacity(nw);
-    for &(s, e) in spans {
-        let mut need = BTreeSet::new();
-        for pr in s..e + 2 * halo {
-            if let Some(src) = boundary.source_index(pr, halo, n_rows) {
-                if let Some(o) = owner_of(src - halo) {
-                    need.insert(o);
+    spans
+        .iter()
+        .map(|&(s, e)| {
+            let mut need = BTreeSet::new();
+            for pr in s..e + 2 * halo {
+                if let Some(src) = boundary.source_index(pr, halo, n) {
+                    if let Some(o) = owner_of(src - halo) {
+                        need.insert(o);
+                    }
                 }
             }
-        }
-        owners.push(need);
-    }
-    for w in 0..nw {
+            need
+        })
+        .collect()
+}
+
+/// Close the read sets under symmetry: if A reads cells B owns, B also
+/// waits on A's previous-block writeback — the anti-dependency that
+/// keeps the two-buffer scheme race-free by construction.
+fn symmetrize(mut owners: Vec<BTreeSet<usize>>) -> Vec<Vec<usize>> {
+    for w in 0..owners.len() {
         let reads: Vec<usize> = owners[w].iter().copied().collect();
         for o in reads {
             owners[o].insert(w);
         }
     }
     owners.into_iter().map(|set| set.into_iter().collect()).collect()
+}
+
+/// For each worker: which workers own the core rows its slab assembly
+/// reads (direct `[s-halo, e+halo)` neighbourhood plus boundary-mapped
+/// edge rows), symmetrized.
+pub(crate) fn symmetric_owners(
+    spans: &[(usize, usize)],
+    halo: usize,
+    n_rows: usize,
+    boundary: Boundary,
+) -> Vec<Vec<usize>> {
+    symmetrize(forward_scan_owners(spans, halo, n_rows, boundary))
+}
+
+/// 2-D owner sets for a `bands.len() × rows.len()` worker grid
+/// (`w = gy * wx + gx`): each worker's forward read set is the
+/// *product* of its per-axis forward scans — its halo rect reads rows
+/// owned by the X-scan runs and columns owned by the Y-scan bands, so
+/// edge AND corner neighbours appear — then the whole set is
+/// symmetrized at the worker level.  Symmetrizing per axis *before*
+/// taking the product would over-approximate: a (zero-row, live-col)
+/// tile and a (live-row, zero-col) tile share no cells in either
+/// direction, and the product of symmetrized axis sets would still
+/// link them (a conflict-free edge the checker flags as over-sync).
+pub(crate) fn symmetric_owners_grid(
+    rows: &[(usize, usize)],
+    bands: &[(usize, usize)],
+    halo: usize,
+    n_rows: usize,
+    n_cols: usize,
+    boundary: Boundary,
+) -> Vec<Vec<usize>> {
+    let xscan = forward_scan_owners(rows, halo, n_rows, boundary);
+    let yscan = forward_scan_owners(bands, halo, n_cols, boundary);
+    let wx = rows.len();
+    let mut owners: Vec<BTreeSet<usize>> = Vec::with_capacity(wx * bands.len());
+    for gy in 0..bands.len() {
+        for gx in 0..wx {
+            let mut need = BTreeSet::new();
+            for &oy in &yscan[gy] {
+                for &ox in &xscan[gx] {
+                    need.insert(oy * wx + ox);
+                }
+            }
+            owners.push(need);
+        }
+    }
+    symmetrize(owners)
 }
 
 /// Run every (field, worker) slab concurrently on one pool scope; returns
@@ -1026,7 +1201,28 @@ mod tests {
             spec: s.clone(),
             tb,
             workers,
-            partition: Partition { unit, shares },
+            partition: Partition::rows(unit, shares),
+            comm_model: CommModel::default(),
+            boundary,
+            adapt_every: 0,
+            overlap: Overlap::Off,
+        }
+    }
+
+    fn gsched(
+        s: &StencilSpec,
+        tb: usize,
+        workers: Vec<Box<dyn Worker>>,
+        unit: usize,
+        shares: Vec<usize>,
+        cols: Vec<usize>,
+        boundary: Boundary,
+    ) -> Scheduler {
+        Scheduler {
+            spec: s.clone(),
+            tb,
+            workers,
+            partition: Partition::rows(unit, shares).with_bands(cols),
             comm_model: CommModel::default(),
             boundary,
             adapt_every: 0,
@@ -1530,8 +1726,8 @@ mod tests {
     /// The load-bearing equivalence behind the pipelined loop: slab
     /// assembly from an unfilled global is bit-identical to a full ghost
     /// ring fill + extract, for every boundary kind, rank, halo depth
-    /// and span layout (including spans smaller than the halo and spans
-    /// pinned to the domain edges).
+    /// and rect layout (including spans/runs smaller than the halo and
+    /// rects pinned to the domain edges or corners).
     #[test]
     fn assemble_slab_matches_fill_plus_extract_bitwise() {
         for shape in [vec![12usize], vec![9, 5], vec![6, 4, 5]] {
@@ -1550,18 +1746,36 @@ mod tests {
                         (rows / 2, rows),
                         (0, rows),
                     ];
+                    let runs: Vec<(usize, usize)> = if shape.len() == 1 {
+                        vec![(0, 1)] // no column axis: (c0, c1) is ignored
+                    } else {
+                        let nc = shape[1];
+                        vec![
+                            (0, nc),
+                            (0, nc / 2),
+                            (nc / 2, nc),
+                            (1, nc - 1),
+                            (nc / 2, nc / 2), // empty run
+                        ]
+                    };
                     for &(s, e) in &spans {
-                        let got = assemble_slab(&global, s, e, halo, b);
-                        let mut off = vec![s];
-                        off.extend(vec![0usize; shape.len() - 1]);
-                        let mut sl_shape = vec![(e - s) + 2 * halo];
-                        sl_shape.extend(&filled.shape()[1..]);
-                        let want = filled.extract(&off, &sl_shape);
-                        assert_eq!(
-                            got.data(),
-                            want.data(),
-                            "{b} shape {shape:?} halo {halo} span ({s},{e})"
-                        );
+                        for &(c0, c1) in &runs {
+                            let got = assemble_slab(&global, s, e, c0, c1, halo, b);
+                            let mut off = vec![s];
+                            let mut sl_shape = vec![(e - s) + 2 * halo];
+                            if shape.len() >= 2 {
+                                off.push(c0);
+                                sl_shape.push((c1 - c0) + 2 * halo);
+                            }
+                            off.extend(vec![0usize; shape.len().saturating_sub(2)]);
+                            sl_shape.extend(&filled.shape()[2..]);
+                            let want = filled.extract(&off, &sl_shape);
+                            assert_eq!(
+                                got.data(),
+                                want.data(),
+                                "{b} shape {shape:?} halo {halo} rect ({s},{e})x({c0},{c1})"
+                            );
+                        }
                     }
                 }
             }
@@ -1793,5 +2007,290 @@ mod tests {
         assert!(Overlap::Auto.enabled(2, 2));
         assert!(!Overlap::Auto.enabled(1, 8), "single worker gains nothing");
         assert!(!Overlap::Auto.enabled(4, 1), "single block has no next block to prefetch");
+    }
+
+    // -----------------------------------------------------------------
+    // 2-D worker grids (Wy×Wx tiles)
+    // -----------------------------------------------------------------
+
+    /// Tentpole acceptance: a 2×2 tile grid computes exactly what the
+    /// single-worker evolution computes, across ranks and all three
+    /// boundary kinds, and its comm ledger carries exactly the per-link
+    /// perimeter accounting `grid_exchanges` declares (edges + corners).
+    #[test]
+    fn grid_run_matches_reference_evolution() {
+        for bench in ["heat2d", "box2d25p", "heat3d"] {
+            let s = spec::get(bench).unwrap();
+            let mut shape = vec![24usize, 12];
+            shape.extend(vec![8usize; s.ndim - 2]);
+            let core = Field::random(&shape, 117);
+            let tb = 2;
+            for boundary in [Boundary::Dirichlet(0.5), Boundary::Neumann, Boundary::Periodic] {
+                let sc = gsched(
+                    &s,
+                    tb,
+                    vec![native("simd"), native("autovec"), native("tetris-cpu"), native("naive")],
+                    4,
+                    vec![2, 4],
+                    vec![5, 7],
+                    boundary,
+                );
+                let (got, m) = sc.run(&core, 8).unwrap();
+                let want = reference_evolution(&core, &s, 8, tb, boundary);
+                assert!(
+                    got.allclose(&want, 1e-12, 1e-14),
+                    "{bench}/{boundary}: maxdiff={}",
+                    got.max_abs_diff(&want)
+                );
+                let halo = s.radius * tb;
+                let part = Partition::rows(4, vec![2, 4]).with_bands(vec![5, 7]);
+                let rest2: usize = shape[2..].iter().product::<usize>().max(1);
+                let ex = crate::coordinator::comm::grid_exchanges(
+                    &part.spans(),
+                    &part.bands(12),
+                    halo,
+                    rest2,
+                    matches!(boundary, Boundary::Periodic),
+                );
+                assert_eq!(m.comm.messages, ex.len() * 4, "{bench}/{boundary}");
+                assert_eq!(m.comm.bytes, ex.iter().sum::<usize>() * 4, "{bench}/{boundary}");
+                assert_eq!(m.final_bands, vec![5, 7], "{bench}/{boundary}");
+            }
+        }
+    }
+
+    /// A column-only split (Wx=1, Wy=2) exercises the dim-1 path alone.
+    #[test]
+    fn grid_split_only_on_columns_matches_reference() {
+        let s = spec::get("heat2d").unwrap();
+        let core = Field::random(&[24, 12], 119);
+        for boundary in [Boundary::Dirichlet(0.0), Boundary::Neumann, Boundary::Periodic] {
+            let sc = gsched(
+                &s,
+                2,
+                vec![native("simd"), native("autovec")],
+                4,
+                vec![6],
+                vec![4, 8],
+                boundary,
+            );
+            let (got, m) = sc.run(&core, 8).unwrap();
+            let want = reference_evolution(&core, &s, 8, 2, boundary);
+            assert!(
+                got.allclose(&want, 1e-12, 1e-14),
+                "{boundary}: maxdiff={}",
+                got.max_abs_diff(&want)
+            );
+            // one run, two bands: only dim-1 links, no corners
+            let links = if matches!(boundary, Boundary::Periodic) { 2 } else { 1 };
+            assert_eq!(m.comm.messages, links * 4, "{boundary}");
+        }
+    }
+
+    /// §5.3 on the grid: the pipelined leader loop is bit-invisible for
+    /// every boundary kind, with identical comm accounting.
+    #[test]
+    fn grid_overlap_bit_matches_serial() {
+        let s = spec::get("heat2d").unwrap();
+        let core = Field::random(&[24, 12], 123);
+        for boundary in [Boundary::Dirichlet(0.75), Boundary::Neumann, Boundary::Periodic] {
+            let make = || {
+                gsched(
+                    &s,
+                    2,
+                    vec![native("simd"), native("autovec"), native("tetris-cpu"), native("naive")],
+                    4,
+                    vec![2, 4],
+                    vec![5, 7],
+                    boundary,
+                )
+            };
+            let (off, m_off) = make().run(&core, 8).unwrap();
+            let mut on_sched = make();
+            on_sched.overlap = Overlap::On;
+            let (on, m_on) = on_sched.run(&core, 8).unwrap();
+            assert_eq!(off.data(), on.data(), "{boundary}: grid overlap must be bit-invisible");
+            assert!(!m_off.overlap && m_on.overlap);
+            assert_eq!(m_off.comm.messages, m_on.comm.messages, "{boundary}");
+            assert_eq!(m_off.comm.bytes, m_on.comm.bytes, "{boundary}");
+        }
+    }
+
+    /// Multi-field batches ride the grid path bit-exactly too.
+    #[test]
+    fn grid_batch_matches_individual_runs_bitwise() {
+        let s = spec::get("heat2d").unwrap();
+        let make = || {
+            gsched(
+                &s,
+                2,
+                vec![native("simd"), native("autovec"), native("tetris-cpu"), native("naive")],
+                4,
+                vec![1, 2],
+                vec![6, 6],
+                Boundary::Periodic,
+            )
+        };
+        let fields: Vec<Field> = (0..3).map(|i| Field::random(&[12, 12], 150 + i)).collect();
+        let (outs, m) = make().run_batch(&fields, 4).unwrap();
+        assert_eq!(m.fields, 3);
+        for (f, out) in fields.iter().zip(&outs) {
+            let (want, _) = make().run(f, 4).unwrap();
+            assert_eq!(out.data(), want.data(), "batched grid result must be bit-identical");
+        }
+    }
+
+    /// Config validation: band widths must cover the column extent, the
+    /// worker list must match Wy×Wx, and a 1-D field has no column axis
+    /// to band.
+    #[test]
+    fn grid_rejects_bad_configs() {
+        let s2 = spec::get("heat2d").unwrap();
+        let core = Field::random(&[16, 8], 19);
+        let four = || vec![native("naive"), native("naive"), native("naive"), native("naive")];
+        // 4 + 2 != 8 cols
+        let sc = gsched(&s2, 1, four(), 4, vec![2, 2], vec![4, 2], Boundary::Dirichlet(0.0));
+        assert!(sc.run(&core, 1).is_err());
+        // 2 workers can't fill a 2x2 grid
+        let sc = gsched(
+            &s2,
+            1,
+            vec![native("naive"), native("naive")],
+            4,
+            vec![2, 2],
+            vec![4, 4],
+            Boundary::Dirichlet(0.0),
+        );
+        assert!(sc.run(&core, 1).is_err());
+        // 1-D fields have no dim 1 to band
+        let s1 = spec::get("heat1d").unwrap();
+        let core1 = Field::random(&[16], 21);
+        let sc = gsched(&s1, 1, four(), 4, vec![2, 2], vec![8, 8], Boundary::Dirichlet(0.0));
+        assert!(sc.run(&core1, 1).is_err());
+    }
+
+    /// Zero-area tiles (zero-share run and zero-width band) are skipped,
+    /// not crashed into zero-extent engine calls — and a single live
+    /// tile exchanges nothing, even on the torus.
+    #[test]
+    fn grid_zero_area_tiles_are_skipped() {
+        let s = spec::get("heat2d").unwrap();
+        let core = Field::random(&[24, 12], 77);
+        let make = || {
+            gsched(
+                &s,
+                2,
+                vec![native("simd"), native("autovec"), native("tetris-cpu"), native("naive")],
+                4,
+                vec![0, 6],
+                vec![0, 12],
+                Boundary::Periodic,
+            )
+        };
+        let (got, m) = make().run(&core, 4).unwrap();
+        let want = reference::evolve_periodic(&core, &s, 4);
+        assert!(got.allclose(&want, 1e-12, 1e-14), "maxdiff={}", got.max_abs_diff(&want));
+        for w in [0usize, 1, 2] {
+            assert_eq!(m.worker_busy[w], Duration::ZERO, "tile {w} owns no cells");
+        }
+        assert_eq!(m.comm.messages, 0);
+        let mut on_sched = make();
+        on_sched.overlap = Overlap::On;
+        let (on, _) = on_sched.run(&core, 4).unwrap();
+        assert_eq!(on.data(), got.data());
+    }
+
+    /// Grid owner sets are per-axis forward-scan *products* symmetrized
+    /// at the worker level: interior 2×2 tiles link all four neighbours
+    /// (corners included), while a layout mixing an empty run with an
+    /// empty band must NOT link the two zero-area tiles' hosts — the
+    /// over-sync edge a per-axis symmetrization would invent.
+    #[test]
+    fn symmetric_owners_grid_covers_corners_without_phantom_links() {
+        let b = Boundary::Dirichlet(0.0);
+        let o = symmetric_owners_grid(
+            &[(0, 8), (8, 16)],
+            &[(0, 8), (8, 16)],
+            2,
+            16,
+            16,
+            b,
+        );
+        for w in 0..4 {
+            assert_eq!(o[w], vec![0, 1, 2, 3], "tile {w} must see edge + corner neighbours");
+        }
+        // worker 1 owns everything; 0, 2, 3 own nothing
+        let o = symmetric_owners_grid(
+            &[(0, 0), (0, 16)],
+            &[(0, 12), (12, 12)],
+            2,
+            16,
+            12,
+            b,
+        );
+        assert_eq!(o[0], vec![1]);
+        assert_eq!(o[1], vec![0, 1, 2, 3]);
+        assert_eq!(o[2], vec![1]);
+        assert_eq!(o[3], vec![1]);
+        // symmetry holds for every boundary with a deep halo
+        for b in [Boundary::Neumann, Boundary::Periodic, Boundary::Dirichlet(1.0)] {
+            let o = symmetric_owners_grid(
+                &[(0, 4), (4, 10), (10, 16)],
+                &[(0, 6), (6, 12)],
+                6,
+                16,
+                12,
+                b,
+            );
+            for w in 0..o.len() {
+                for &x in &o[w] {
+                    assert!(o[x].contains(&w), "{b}: {w} reads {x} but not vice versa");
+                }
+            }
+        }
+    }
+
+    /// A mid-run grid retune keeps the run correct against the oracle,
+    /// preserves both axis totals, and stays bit-identical between the
+    /// serial and pipelined leader loops.
+    #[test]
+    fn grid_midrun_retune_stays_correct() {
+        let s = spec::get("heat2d").unwrap();
+        let core = Field::random(&[16, 8], 83);
+        let steps = 8;
+        let make = || {
+            let mut sc = gsched(
+                &s,
+                1,
+                vec![
+                    delayed("simd", 1500),
+                    delayed("simd", 400),
+                    delayed("simd", 1500),
+                    delayed("simd", 400),
+                ],
+                2,
+                vec![4, 4],
+                vec![4, 4],
+                Boundary::Neumann,
+            );
+            sc.adapt_every = 2;
+            sc
+        };
+        let (want, m) = make().run(&core, steps).unwrap();
+        let oracle = reference_evolution(&core, &s, steps, 1, Boundary::Neumann);
+        assert!(
+            want.allclose(&oracle, 1e-12, 1e-14),
+            "maxdiff={}",
+            want.max_abs_diff(&oracle)
+        );
+        // run gx=0 is ~4x slower at ms scale: the x-axis must rebalance
+        assert!(m.retunes >= 1, "no grid retune happened");
+        assert_eq!(m.final_shares.iter().sum::<usize>(), 8);
+        assert_eq!(m.final_bands.iter().sum::<usize>(), 8);
+        assert_eq!(m.final_bands.len(), 2, "retune must preserve the grid shape");
+        let mut on_sched = make();
+        on_sched.overlap = Overlap::On;
+        let (got, _) = on_sched.run(&core, steps).unwrap();
+        assert_eq!(got.data(), want.data(), "grid retune must stay bit-identical under overlap");
     }
 }

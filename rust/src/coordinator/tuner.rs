@@ -95,16 +95,20 @@ pub fn retune(
 }
 
 /// Deployment cost of migrating from partition `from` to `to`: every
-/// moved unit ships its slab rows once, and every worker whose share
+/// moved cell ships once, and every worker whose owned-cell count
 /// changed participates in (at least) one transfer — the k·(α+nβ) term
 /// the ROADMAP's slab-migration item asks for.  `rest_cells` is the
 /// core-row cell count of the non-split dims (what a halo/slab message
 /// actually carries; locally-filled ghost padding is never shipped).
+/// Works for both 1-D row partitions and 2-D grids: cells are counted
+/// per worker rect, so a pure band reshuffle costs too.
 pub fn migration_cost(model: &CommModel, from: &Partition, to: &Partition, rest_cells: usize) -> f64 {
-    let moved_units: usize =
-        from.shares.iter().zip(&to.shares).map(|(&a, &b)| a.abs_diff(b)).sum::<usize>() / 2;
-    let links = from.shares.iter().zip(&to.shares).filter(|(a, b)| a != b).count();
-    model.cost(links, moved_units * from.unit * rest_cells * 8)
+    let a = from.worker_cells(rest_cells);
+    let b = to.worker_cells(rest_cells);
+    let moved_cells: usize =
+        a.iter().zip(&b).map(|(&x, &y)| x.abs_diff(y)).sum::<usize>() / 2;
+    let links = a.iter().zip(&b).filter(|(x, y)| x != y).count();
+    model.cost(links, moved_cells * 8)
 }
 
 /// Hysteresis-gated rebalance: compute the [`retune`] candidate, then
@@ -169,6 +173,153 @@ pub fn retune_gated(
     let migrate = gain > cost;
     // The §5.2 decision, auditable in a trace: projected idle saving vs
     // the k·(α+nβ) slab-migration estimate it has to beat.
+    crate::trace::instant(
+        "retune",
+        if migrate { "migrated" } else { "kept" },
+        &[
+            ("gain_s", gain.into()),
+            ("migration_cost_s", cost.into()),
+            ("remaining_blocks", remaining_blocks.into()),
+        ],
+    );
+    if migrate {
+        Some(cand)
+    } else {
+        None
+    }
+}
+
+/// Hysteresis-gated rebalance for a 2-D worker grid: redistribute the
+/// dim-0 row shares and the dim-1 band widths independently (the grid
+/// stays a product partition — worker (gy,gx) always owns
+/// rows(gx) × cols(gy)), then adopt the candidate only when the
+/// projected idle saving over the remaining blocks beats the slab
+/// migration cost.
+///
+/// Axis times come from the grid structure itself: run gx is as slow as
+/// its slowest tile (max over gy), and symmetrically for bands.  The
+/// capacity squeezer is evaluated against the worst-case tile of each
+/// run/band.  `rest2` is the per-(row,col) cell count of dims 2+
+/// (extended extents, for capacity); `move_rest2` the core dims-2+
+/// cells (what a migration ships).  Returns `None` when the candidate
+/// equals the current grid, is infeasible under capacity, or fails the
+/// migration gate.
+pub fn retune_gated_grid(
+    partition: &Partition,
+    measured_secs: &[f64],
+    workers: &[Box<dyn Worker>],
+    rest2: usize,
+    model: &CommModel,
+    move_rest2: usize,
+    remaining_blocks: usize,
+) -> Option<Partition> {
+    assert!(!partition.cols.is_empty(), "grid retune needs a banded partition");
+    let (wy, wx) = (partition.wy(), partition.wx());
+    assert_eq!(measured_secs.len(), wy * wx);
+    assert_eq!(workers.len(), wy * wx);
+    if remaining_blocks == 0 {
+        return None;
+    }
+    // Per-run (dim 0) rebalance: a run is as slow as its slowest tile.
+    let time_x: Vec<f64> = (0..wx)
+        .map(|gx| {
+            (0..wy)
+                .map(|gy| measured_secs[gy * wx + gx])
+                .fold(0.0_f64, f64::max)
+                .max(1e-12)
+        })
+        .collect();
+    let weight_x: Vec<f64> = partition
+        .shares
+        .iter()
+        .zip(&time_x)
+        .map(|(&s, &t)| if s == 0 { 0.25 / t } else { s as f64 / t })
+        .collect();
+    // Capacity in row units: the worst-case (widest-band) tile of the
+    // run must still fit, whatever band it lands in.
+    let caps_x: Vec<usize> = (0..wx)
+        .map(|gx| {
+            (0..wy)
+                .map(|gy| {
+                    let band_cells = partition.cols[gy].max(1) * rest2;
+                    capacity_units(workers[gy * wx + gx].mem_capacity(), partition.unit, band_cells)
+                })
+                .min()
+                .unwrap_or(0)
+        })
+        .collect();
+    if caps_x.iter().sum::<usize>() < partition.total_units() {
+        return None; // infeasible: keep the current grid
+    }
+    let cand_rows = Partition::balanced(partition.unit, partition.total_units(), &weight_x, &caps_x);
+    // Per-band (dim 1) rebalance, symmetric, in single-column units.
+    let time_y: Vec<f64> = (0..wy)
+        .map(|gy| {
+            (0..wx)
+                .map(|gx| measured_secs[gy * wx + gx])
+                .fold(0.0_f64, f64::max)
+                .max(1e-12)
+        })
+        .collect();
+    let weight_y: Vec<f64> = partition
+        .cols
+        .iter()
+        .zip(&time_y)
+        .map(|(&c, &t)| if c == 0 { 0.25 / t } else { c as f64 / t })
+        .collect();
+    let caps_y: Vec<usize> = (0..wy)
+        .map(|gy| {
+            (0..wx)
+                .filter(|&gx| partition.shares[gx] > 0)
+                .map(|gx| {
+                    let run_cells = partition.shares[gx] * partition.unit * rest2;
+                    capacity_units(workers[gy * wx + gx].mem_capacity(), 1, run_cells)
+                })
+                .min()
+                .unwrap_or(0)
+        })
+        .collect();
+    if caps_y.iter().sum::<usize>() < partition.total_cols() {
+        return None;
+    }
+    let cand_cols = Partition::balanced(1, partition.total_cols(), &weight_y, &caps_y);
+    let cand = Partition::rows(partition.unit, cand_rows.shares).with_bands(cand_cols.shares);
+    if cand == *partition {
+        return None;
+    }
+    // Migration gate, per tile: project each worker's block time from
+    // its measured per-cell throughput, optimistic prior for empty
+    // tiles (same rationale as the 1-D gate).
+    let cells = partition.worker_cells(1);
+    let best_active = cells
+        .iter()
+        .zip(measured_secs)
+        .filter(|(&c, _)| c > 0)
+        .map(|(&c, &t)| t / c as f64)
+        .fold(f64::INFINITY, f64::min);
+    let per_cell: Vec<f64> = cells
+        .iter()
+        .zip(measured_secs)
+        .map(|(&c, &t)| {
+            if c > 0 {
+                t / c as f64
+            } else if best_active.is_finite() {
+                best_active
+            } else {
+                t
+            }
+        })
+        .collect();
+    let cur = measured_secs.iter().cloned().fold(0.0, f64::max);
+    let proj = cand
+        .worker_cells(1)
+        .iter()
+        .zip(&per_cell)
+        .map(|(&c, &u)| c as f64 * u)
+        .fold(0.0, f64::max);
+    let gain = (cur - proj) * remaining_blocks as f64;
+    let cost = migration_cost(model, partition, &cand, move_rest2);
+    let migrate = gain > cost;
     crate::trace::instant(
         "retune",
         if migrate { "migrated" } else { "kept" },
@@ -265,7 +416,7 @@ mod tests {
     #[test]
     fn converge_reaches_balance() {
         let ws = workers(&[1 << 30, 1 << 30]);
-        let start = Partition { unit: 1, shares: vec![15, 1] };
+        let start = Partition::rows(1, vec![15, 1]);
         // per-unit: worker1 4x faster
         let (p, iters) = converge(start, &[4e-3, 1e-3], &ws, 64, 0.26, 10);
         // balanced split is ~(3.2, 12.8): within tol of equal times
@@ -278,7 +429,7 @@ mod tests {
     #[test]
     fn retune_keeps_total() {
         let ws = workers(&[1 << 30, 1 << 30]);
-        let p = Partition { unit: 2, shares: vec![5, 5] };
+        let p = Partition::rows(2, vec![5, 5]);
         let q = retune(&p, &[0.010, 0.002], &ws, 64);
         assert_eq!(q.total_units(), 10);
         assert!(q.shares[1] > q.shares[0]);
@@ -313,7 +464,7 @@ mod tests {
         // a later rebalance can bring it back when the loaded worker
         // turns out to be slow.
         let ws = workers(&[1 << 30, 1 << 30]);
-        let p = Partition { unit: 1, shares: vec![0, 12] };
+        let p = Partition::rows(1, vec![0, 12]);
         let q = retune(&p, &[1e-3, 1e-1], &ws, 64);
         assert_eq!(q.total_units(), 12);
         assert!(q.shares[0] > 0, "{q:?}");
@@ -322,13 +473,75 @@ mod tests {
     #[test]
     fn migration_cost_counts_moved_units_and_links() {
         let m = CommModel::default();
-        let from = Partition { unit: 2, shares: vec![6, 2] };
-        let to = Partition { unit: 2, shares: vec![4, 4] };
+        let from = Partition::rows(2, vec![6, 2]);
+        let to = Partition::rows(2, vec![4, 4]);
         // 2 moved units x 2 rows x 64 cells x 8 B = 2048 B across 2 links
         let c = migration_cost(&m, &from, &to, 64);
         assert!((c - (2.0 * m.alpha + 2048.0 * m.beta)).abs() < 1e-15, "{c}");
         // no movement, no cost
         assert_eq!(migration_cost(&m, &from, &from, 64), 0.0);
+    }
+
+    #[test]
+    fn migration_cost_counts_band_reshuffles() {
+        // Same row shares, different band widths: a pure dim-1 move.
+        let m = CommModel::default();
+        let from = Partition::rows(1, vec![4, 4]).with_bands(vec![6, 2]);
+        let to = Partition::rows(1, vec![4, 4]).with_bands(vec![4, 4]);
+        // cells/worker go [24,24,8,8] -> [16,16,16,16]: 16 moved cells
+        // x 8 B across 4 links
+        let c = migration_cost(&m, &from, &to, 1);
+        assert!((c - (4.0 * m.alpha + 128.0 * m.beta)).abs() < 1e-15, "{c}");
+    }
+
+    #[test]
+    fn retune_gated_grid_shifts_rows_on_run_skew() {
+        // 2x2 grid, run gx=1 uniformly 4x slower at ms scale: the x-axis
+        // repartitions, the bands stay put.
+        let ws = workers(&[1 << 30; 4]);
+        let m = CommModel::default();
+        let p = Partition::rows(1, vec![8, 8]).with_bands(vec![8, 8]);
+        let q = retune_gated_grid(&p, &[10e-3, 40e-3, 10e-3, 40e-3], &ws, 1, &m, 1, 4)
+            .expect("genuine run skew must repartition");
+        assert!(q.shares[0] > q.shares[1], "{q:?}");
+        assert_eq!(q.total_units(), 16);
+        assert_eq!(q.cols, vec![8, 8], "band widths must not move on a pure run skew");
+    }
+
+    #[test]
+    fn retune_gated_grid_shifts_bands_on_band_skew() {
+        // Band gy=1 uniformly 4x slower: dim-1 rebalances, shares stay.
+        let ws = workers(&[1 << 30; 4]);
+        let m = CommModel::default();
+        let p = Partition::rows(1, vec![8, 8]).with_bands(vec![8, 8]);
+        let q = retune_gated_grid(&p, &[10e-3, 10e-3, 40e-3, 40e-3], &ws, 1, &m, 1, 4)
+            .expect("genuine band skew must repartition");
+        assert_eq!(q.shares, vec![8, 8], "row shares must not move on a pure band skew");
+        assert!(q.cols[0] > q.cols[1], "{q:?}");
+        assert_eq!(q.total_cols(), 16);
+    }
+
+    #[test]
+    fn retune_gated_grid_skips_marginal_imbalance() {
+        // µs-scale tile skew: the candidate exists but the projected gain
+        // is far below the 4-link migration latency.
+        let ws = workers(&[1 << 30; 4]);
+        let m = CommModel::default();
+        let p = Partition::rows(1, vec![8, 8]).with_bands(vec![8, 8]);
+        assert!(retune_gated_grid(&p, &[1.2e-6, 0.8e-6, 1.2e-6, 0.8e-6], &ws, 1, &m, 1, 4)
+            .is_none());
+    }
+
+    #[test]
+    fn retune_gated_grid_infeasible_capacity_keeps_grid() {
+        // Every worker can hold exactly one row unit of an 8-col band:
+        // 2 cap units total < 16 units, so the grid must stay as-is even
+        // under a genuine skew instead of panicking in the squeezer.
+        let ws = workers(&[192; 4]);
+        let m = CommModel::default();
+        let p = Partition::rows(1, vec![8, 8]).with_bands(vec![8, 8]);
+        assert!(retune_gated_grid(&p, &[10e-3, 40e-3, 10e-3, 40e-3], &ws, 1, &m, 1, 4)
+            .is_none());
     }
 
     /// ROADMAP hysteresis acceptance: a noise-scale imbalance produces a
@@ -338,7 +551,7 @@ mod tests {
     fn retune_gated_skips_marginal_imbalance() {
         let ws = workers(&[1 << 30, 1 << 30]);
         let m = CommModel::default();
-        let p = Partition { unit: 1, shares: vec![8, 8] };
+        let p = Partition::rows(1, vec![8, 8]);
         let measured = [1.2e-6, 0.8e-6]; // µs-scale blocks: gain ≪ α
         assert_ne!(retune(&p, &measured, &ws, 64), p, "imbalance must produce a candidate");
         assert!(retune_gated(&p, &measured, &ws, 64, &m, 64, 4).is_none());
@@ -351,7 +564,7 @@ mod tests {
     fn retune_gated_does_not_thrash_on_noise() {
         let ws = workers(&[1 << 30, 1 << 30]);
         let m = CommModel::default();
-        let mut p = Partition { unit: 1, shares: vec![8, 8] };
+        let mut p = Partition::rows(1, vec![8, 8]);
         for i in 0..10 {
             let measured =
                 if i % 2 == 0 { [1.2e-6, 0.8e-6] } else { [0.8e-6, 1.2e-6] };
@@ -366,7 +579,7 @@ mod tests {
     fn retune_gated_fires_on_genuine_skew() {
         let ws = workers(&[1 << 30, 1 << 30]);
         let m = CommModel::default();
-        let p = Partition { unit: 1, shares: vec![8, 8] };
+        let p = Partition::rows(1, vec![8, 8]);
         // 4x skew at ms scale: projected gain (tens of ms) ≫ migration cost
         let q = retune_gated(&p, &[40e-3, 10e-3], &ws, 64, &m, 64, 4)
             .expect("genuine skew must repartition");
@@ -378,7 +591,7 @@ mod tests {
     fn retune_gated_never_fires_on_last_block() {
         let ws = workers(&[1 << 30, 1 << 30]);
         let m = CommModel::default();
-        let p = Partition { unit: 1, shares: vec![8, 8] };
+        let p = Partition::rows(1, vec![8, 8]);
         // migrating with no blocks left to amortize it is pure cost
         assert!(retune_gated(&p, &[40e-3, 10e-3], &ws, 64, &m, 64, 0).is_none());
     }
@@ -386,7 +599,7 @@ mod tests {
     #[test]
     fn converge_single_worker_trivial() {
         let ws = workers(&[1 << 30]);
-        let start = Partition { unit: 2, shares: vec![6] };
+        let start = Partition::rows(2, vec![6]);
         let (p, iters) = converge(start.clone(), &[1e-3], &ws, 64, 0.1, 5);
         assert_eq!(p, start);
         assert_eq!(iters, 0);

@@ -4,14 +4,16 @@
 //!   info                      platform + artifact inventory
 //!   validate                  golden-check every AOT artifact via PJRT
 //!   analyze  [--all] [--bench B --tb N --boundary C[,C...] --workers W
-//!            --fields F --adapt K --rows R] [--verbose] [--inject-race]
+//!            --grid WyxWx --fields F --adapt K --rows R --cols N]
+//!            [--verbose] [--inject-race]
 //!                              static region-aliasing race check of the task DAGs
 //!   run      --bench B --engine E|auto [--steps N] [--threads T]
 //!            [--boundary C] [--adapt K] [--workers W]  scheduler mode
+//!            [--grid WyxWx|auto]  2-D worker grid (Wy*Wx = W)
 //!            [--overlap on|off|auto]  §5.3 pipelined leader loop
 //!            [--plan-store FILE] [--budget-ms MS] [--seed S]  for auto
 //!   hetero   --bench B [--engine E|auto] [--steps N] [--threads T]
-//!            [--boundary C] [--adapt K] [--overlap M]
+//!            [--boundary C] [--adapt K] [--overlap M] [--grid G]
 //!   tune     --bench B [--boundary C] [--shape NxM] [--steps N]
 //!            [--budget-ms MS] [--seed S] [--plan-store FILE] [--force]
 //!   serve    [--addr A] [--workers W] [--queue N] [--batch B] [--threads T]
@@ -28,10 +30,11 @@
 //!            [--json-a FILE] [--json-b FILE]   stochastic load harness
 //!   thermal  [--size N] [--steps N] [--viz DIR] [--insulated]
 //!   accuracy [--blocks K]
-//!   bench    breakdown|sota|scaling|comm|mxu|boundary|serve|plan|overlap
+//!   bench    breakdown|sota|scaling|comm|mxu|boundary|serve|plan|overlap|grid
 //!            [--scale F] [--threads T] [--json FILE]   single-line JSON for CI
 //!            overlap also takes [--mode on|off|both] for per-mode traces
-//!   bench    check FILE...        assert structural invariants over BENCH_*.json
+//!   bench    check FILE... [--p999-degrade-max F]
+//!                                 assert structural invariants over BENCH_*.json
 //!                                 (metrics-scrape JSONL files included)
 //!   trace    check FILE... [--strict] [--require-flows]
 //!                                 validate Chrome trace-event JSON from --trace
@@ -58,7 +61,26 @@ use tetris::coordinator::{CommModel, NativeWorker, Overlap, Partition, Scheduler
 use tetris::runtime::XlaService;
 use tetris::stencil::{spec, Boundary, Field};
 
-/// Minimal `--key value` flag parser (the vendored crate set has no clap).
+/// Flags that never take a value.  Listing them here makes boolean
+/// flags position-independent: `trace check --strict a.json` no longer
+/// swallows `a.json` as the value of `--strict`.  `--trace` is NOT
+/// listed — it keeps its optional-path operand (`--trace [FILE]`).
+const BOOL_FLAGS: &[&str] = &[
+    "all",
+    "force",
+    "inject-race",
+    "insulated",
+    "metrics",
+    "require-flows",
+    "shutdown",
+    "stats",
+    "strict",
+    "sweep",
+    "verbose",
+];
+
+/// Minimal `--key value` / `--key=value` flag parser (the vendored
+/// crate set has no clap).
 struct Args {
     positional: Vec<String>,
     flags: HashMap<String, String>,
@@ -71,7 +93,13 @@ impl Args {
         let mut i = 0;
         while i < argv.len() {
             if let Some(key) = argv[i].strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                    i += 1;
+                } else if BOOL_FLAGS.contains(&key) {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
                     flags.insert(key.to_string(), argv[i + 1].clone());
                     i += 2;
                 } else {
@@ -145,19 +173,22 @@ fn print_help() {
                                        DAGs declares (buffer, parity, rows); report\n\
                                        unordered conflicts (races) and over-sync\n\
                                        edges.  [--bench B --tb N --boundary C[,C...]\n\
-                                       --workers W --fields F --adapt K --rows R\n\
-                                       --verbose]; --all sweeps the full matrix;\n\
+                                       --workers W --grid WyxWx --fields F --adapt K\n\
+                                       --rows R --cols N --verbose]; --all sweeps the\n\
+                                       full matrix (grid shapes included);\n\
                                        --inject-race drops one writeback->assemble\n\
                                        edge and must exit nonzero\n\
          run    --bench B --engine E   single-engine run  [--steps N --threads T --scale F]\n\
                 [--boundary C --adapt K --workers W]   scheduler run on W native workers\n\
+                [--grid WyxWx|auto]    2-D worker grid: Wy column bands x Wx row runs\n\
+                                       (Wy*Wx = W; auto picks by halo perimeter)\n\
                 [--overlap on|off|auto]   §5.3 double-buffered leader loop: prefetch\n\
                                        block N+1 halos while block N computes\n\
                 --engine auto          resolve engine/threads/Tb through the plan\n\
                                        store [--plan-store FILE --budget-ms MS --seed S]\n\
          hetero --bench B              auto-tuned CPU+XLA run [--engine E|auto\n\
                                        --steps N --threads T --boundary C --adapt K\n\
-                                       --overlap on|off|auto]\n\
+                                       --overlap on|off|auto --grid WyxWx|auto]\n\
          tune   --bench B              search (engine, threads, Tb, tile) for this\n\
                                        machine and persist the plan [--boundary C\n\
                                        --shape NxM --steps N --budget-ms MS --seed S\n\
@@ -189,15 +220,18 @@ fn print_help() {
          thermal [--size N --steps N --viz DIR --threads T]   Table-3 case study\n\
                 [--insulated]          Neumann zero-flux plate (conserves total heat)\n\
          accuracy [--blocks K]         Table-4 FP64-vs-FP32 study\n\
-         bench  breakdown|sota|scaling|comm|mxu|boundary|serve|plan|overlap\n\
+         bench  breakdown|sota|scaling|comm|mxu|boundary|serve|plan|overlap|grid\n\
                                        [--scale F --threads T --json FILE]\n\
-                                       (overlap: --mode on|off|both for per-mode traces)\n\
-         bench  check FILE...          fail on broken BENCH_*.json invariants;\n\
-                                       metrics-scrape JSONL files checked too\n\
+                                       (overlap: --mode on|off|both for per-mode traces;\n\
+                                       grid: 1xW vs 2x(W/2) halo-byte comparison)\n\
+         bench  check FILE... [--p999-degrade-max F]\n\
+                                       fail on broken BENCH_*.json invariants;\n\
+                                       metrics-scrape JSONL files checked too; the\n\
+                                       flag bounds Suite-B p99.9 growth across rungs\n\
          trace  check FILE... [--strict] [--require-flows]\n\
                                        validate Chrome trace-event JSON (balanced\n\
                                        spans, monotone timestamps, plan-model ids,\n\
-                                       flow pairing; flags go after the files)\n\
+                                       flow pairing; flags may go anywhere)\n\
          trace  diff A B [--fail-over PCT]   per-phase count/us/bytes deltas\n\
          trace  hidden TRACE --bench-json FILE [--tolerance-pct P]\n\
                                        trace-derived hidden leader time must match\n\
@@ -297,27 +331,47 @@ fn analyze_report(desc: &str, report: &tetris::analyze::Report, verbose: bool, t
 
 /// Check every window plan of one pipeline configuration: each
 /// partition layout the retuner could plausibly produce (balanced,
-/// skewed, zero-share) at both window start parities.
+/// skewed, zero-share) crossed with each band layout (balanced, skewed,
+/// zero-width — `wy = 1` is the degenerate 1-D grid) at both window
+/// start parities.
 #[allow(clippy::too_many_arguments)]
 fn analyze_pipeline_config(
     label: &str,
     halo: usize,
     rows: usize,
+    cols: usize,
     boundary: Boundary,
-    nw: usize,
+    wx: usize,
+    wy: usize,
     nf: usize,
     bw: usize,
     verbose: bool,
     t: &mut AnalyzeTotals,
 ) {
-    use tetris::analyze::{sweep_partitions, WindowPlan};
-    for (pi, part) in sweep_partitions(nw, rows).iter().enumerate() {
+    use tetris::analyze::{sweep_band_layouts, sweep_partitions, WindowPlan};
+    for (pi, part) in sweep_partitions(wx, rows).iter().enumerate() {
         let spans = part.spans();
-        for b0 in [0usize, 1] {
-            let plan = WindowPlan::build(&spans, halo, rows, boundary, nf, b0, bw);
-            let desc =
-                format!("pipeline[{label} {boundary} nw{nw} nf{nf} part{pi} b0={b0} bw{bw}]");
-            analyze_report(&desc, &plan.model.check(), verbose, t);
+        for (bi, widths) in sweep_band_layouts(wy, cols).iter().enumerate() {
+            let bands: Vec<(usize, usize)> = {
+                let mut at = 0usize;
+                widths
+                    .iter()
+                    .map(|&w| {
+                        let s = at;
+                        at += w;
+                        (s, at)
+                    })
+                    .collect()
+            };
+            for b0 in [0usize, 1] {
+                let plan = WindowPlan::build_grid(
+                    &spans, &bands, halo, rows, cols, boundary, nf, b0, bw,
+                );
+                let desc = format!(
+                    "pipeline[{label} {boundary} grid{wy}x{wx} part{pi} bands{bi} nf{nf} b0={b0} bw{bw}]"
+                );
+                analyze_report(&desc, &plan.model.check(), verbose, t);
+            }
         }
     }
 }
@@ -355,30 +409,36 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     let mut t = AnalyzeTotals::default();
     if args.flags.contains_key("all") {
         // Full matrix: bench (radius) x Tb (halo depth) x boundary x
-        // workers x fields x partition shape x window parity x window
-        // length — the configurations `run`/`hetero`/`serve` actually
-        // reach, zero-share partitions included.
+        // grid shape (Wy×Wx, zero-share rows and zero-width bands
+        // included) x fields x partition/band layout x window parity x
+        // window length — the configurations `run`/`hetero`/`serve`
+        // actually reach.
         let rows = 24;
+        let cols = 12;
         for bench in ["heat2d", "box2d25p"] {
             let radius = spec::get(bench).expect("builtin bench").radius;
             for tb in [1usize, 2, 4] {
                 for boundary in
                     [Boundary::Dirichlet(0.0), Boundary::Neumann, Boundary::Periodic]
                 {
-                    for nw in 1..=4 {
-                        for nf in 1..=3 {
-                            for bw in [2usize, 3] {
-                                analyze_pipeline_config(
-                                    &format!("{bench} tb{tb}"),
-                                    radius * tb,
-                                    rows,
-                                    boundary,
-                                    nw,
-                                    nf,
-                                    bw,
-                                    verbose,
-                                    &mut t,
-                                );
+                    for wy in 1..=2 {
+                        for wx in 1..=3 {
+                            for nf in 1..=3 {
+                                for bw in [2usize, 3] {
+                                    analyze_pipeline_config(
+                                        &format!("{bench} tb{tb}"),
+                                        radius * tb,
+                                        rows,
+                                        cols,
+                                        boundary,
+                                        wx,
+                                        wy,
+                                        nf,
+                                        bw,
+                                        verbose,
+                                        &mut t,
+                                    );
+                                }
                             }
                         }
                     }
@@ -401,16 +461,25 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         let tb = args.get("tb", 2usize).max(1);
         let nw = args.get("workers", 3usize).max(1);
         let nf = args.get("fields", 2usize).max(1);
-        let rows = args.get("rows", 24usize).max(nw.max(2));
         let bw = args.get("adapt", 4usize).max(1);
+        // `--grid WyxWx` checks a 2-D worker grid (default: the 1-D
+        // Wy=1 row split over `--workers`).
+        let (wy, wx) = match args.flags.get("grid") {
+            Some(g) => parse_grid_spec(g)?,
+            None => (1, nw),
+        };
+        let rows = args.get("rows", 24usize).max(wx.max(2));
+        let cols = args.get("cols", 12usize).max(wy.max(2));
         for spec_str in args.str("boundary", "dirichlet:0,neumann,periodic").split(',') {
             let boundary: Boundary = spec_str.trim().parse().context("--boundary")?;
             analyze_pipeline_config(
                 &format!("{bench} tb{tb}"),
                 s.radius * tb,
                 rows,
+                cols,
                 boundary,
-                nw,
+                wx,
+                wy,
                 nf,
                 bw,
                 verbose,
@@ -474,8 +543,8 @@ fn trace_finish(path: Option<String>) -> Result<()> {
 ///   the §5.3 hidden leader time from the trace and fail unless it
 ///   agrees with the bench row's `RunMetrics.overlap_hidden`.
 ///
-/// Boolean flags (`--strict`, `--require-flows`) swallow a following
-/// bare token, so pass them *after* the file operands.
+/// Boolean flags are position-independent (see [`BOOL_FLAGS`]): they
+/// may appear before, between or after the file operands.
 fn cmd_trace(args: &Args) -> Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("check") => {
@@ -519,6 +588,67 @@ fn print_run_metrics(args: &Args, metrics: &tetris::coordinator::RunMetrics) {
         reg.feed_run_metrics(metrics);
         println!("{}", reg.snapshot_json());
     }
+}
+
+/// Parse a `WyxWx` grid spec ("2x3" → 2 bands of 3 runs each).
+fn parse_grid_spec(spec: &str) -> Result<(usize, usize)> {
+    let parsed = spec.split_once('x').and_then(|(a, b)| {
+        let wy: usize = a.trim().parse().ok()?;
+        let wx: usize = b.trim().parse().ok()?;
+        (wy >= 1 && wx >= 1).then_some((wy, wx))
+    });
+    match parsed {
+        Some(g) => Ok(g),
+        None => bail!("--grid expects WyxWx (e.g. 2x3) or auto, got {spec:?}"),
+    }
+}
+
+/// Apply `--grid WyxWx|auto` to a scheduler whose partition holds the
+/// default 1-D row split: rebuild it as a `Wy×Wx` grid of even tiles
+/// (the §5.2 retuner refines both axes at run time).  `auto` asks the
+/// planner's perimeter-over-area prior ([`CostModel::choose_grid`])
+/// and keeps the 1-D split when no factorization wins.
+///
+/// [`CostModel::choose_grid`]: tetris::plan::CostModel::choose_grid
+fn apply_grid_flag(args: &Args, sched: &mut Scheduler, shape: &[usize]) -> Result<()> {
+    let Some(spec_str) = args.flags.get("grid") else { return Ok(()) };
+    let workers = sched.workers.len();
+    let halo = sched.spec.radius * sched.tb;
+    let (wy, wx) = if spec_str == "auto" {
+        let model =
+            tetris::plan::CostModel { comm: sched.comm_model, calib_gsps: 1.0 };
+        match model.choose_grid(workers, shape, halo) {
+            Some(g) => g,
+            None => {
+                println!("grid: auto kept the 1-D row split");
+                return Ok(());
+            }
+        }
+    } else {
+        parse_grid_spec(spec_str)?
+    };
+    if wy * wx != workers {
+        bail!("--grid {wy}x{wx} needs {} workers, have {workers} (--workers)", wy * wx);
+    }
+    if wy > 1 && shape.len() < 2 {
+        bail!("--grid {wy}x{wx}: a 1-D field has no column axis to band");
+    }
+    let unit = sched.partition.unit;
+    let units = sched.partition.total_units();
+    if wx > units {
+        bail!("--grid {wy}x{wx}: only {units} dim-0 units for {wx} runs");
+    }
+    let mut part =
+        Partition::rows(unit, tetris::coordinator::partition::even_split(units, wx));
+    if wy > 1 {
+        if wy > shape[1] {
+            bail!("--grid {wy}x{wx}: only {} columns for {wy} bands", shape[1]);
+        }
+        part = part.with_bands(tetris::coordinator::partition::even_split(shape[1], wy));
+    }
+    sched.partition = part;
+    println!("grid: {wy}x{wx} worker tiles over {shape:?}");
+    Ok(())
 }
 
 /// Parse the shared `--overlap on|off|auto` flag (auto by default);
@@ -593,11 +723,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     let (boundary, adapt) = boundary_flags(args)?;
     let (mut overlap, overlap_explicit) = overlap_flag(args)?;
     let mut tile_w = None;
+    let mut plan_grid = None;
     if engine == "auto" {
         let res = resolve_auto_flag(args, &bench, &boundary, &core, steps)?;
         engine = res.plan.engine.clone();
         tb = res.plan.tb.max(1);
         tile_w = res.plan.tile_w;
+        plan_grid = res.plan.grid;
         if !args.flags.contains_key("threads") {
             threads = res.plan.threads;
         }
@@ -616,7 +748,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             .build()
             .with_context(|| format!("unknown engine {engine}"))
     };
-    let scheduler_mode = ["boundary", "adapt", "workers"]
+    let scheduler_mode = ["boundary", "adapt", "workers", "grid"]
         .iter()
         .any(|k| args.flags.contains_key(*k));
     if scheduler_mode {
@@ -631,6 +763,20 @@ fn cmd_run(args: &Args) -> Result<()> {
             .collect::<Result<_>>()?;
         let mut sched = Scheduler::from_plan(s, tb, workers, core[0], boundary, adapt);
         sched.overlap = overlap;
+        apply_grid_flag(args, &mut sched, &core)?;
+        // A stored plan's searched grid shape applies when the flag was
+        // not passed and the worker fleet matches the factorization —
+        // same deference rule as the plan's overlap preference.
+        if !args.flags.contains_key("grid") {
+            if let Some((wy, wx)) = plan_grid {
+                if wy > 1 && wy * wx == nworkers && core.len() >= 2 && wy <= core[1] {
+                    use tetris::coordinator::partition::even_split;
+                    sched.partition = Partition::rows(1, even_split(core[0], wx))
+                        .with_bands(even_split(core[1], wy));
+                    println!("grid: {wy}x{wx} worker tiles (stored plan)");
+                }
+            }
+        }
         let field = Field::random(&core, 0xA11CE);
         let (out, metrics) = sched.run(&field, steps)?;
         println!(
@@ -678,6 +824,7 @@ fn cmd_hetero(args: &Args) -> Result<()> {
     sched.boundary = boundary;
     sched.adapt_every = adapt;
     sched.overlap = overlap;
+    apply_grid_flag(args, &mut sched, &global)?;
     let steps = {
         let s = args.get("steps", sched.tb * 4);
         s - s % sched.tb
@@ -1108,7 +1255,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .unwrap_or("breakdown");
     if which == "check" {
         // invariant gate over already-emitted artifacts; no timing runs
-        return tetris::bench::check::check_files(&args.positional[1..]);
+        let p999 = args
+            .flags
+            .get("p999-degrade-max")
+            .map(|v| v.parse::<f64>())
+            .transpose()
+            .context("--p999-degrade-max")?;
+        return tetris::bench::check::check_files_with(&args.positional[1..], p999);
     }
     let trace_path = trace_setup(args);
     let scale = args.get("scale", 0.25f64);
@@ -1123,6 +1276,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "sota" => harness::run_sota(rt.as_ref(), scale, threads),
         "scaling" => harness::run_scaling(rt.as_ref(), scale, threads),
         "boundary" => harness::run_boundary(scale, threads),
+        "grid" => harness::run_grid(scale, threads),
         "serve" => harness::run_serve(scale, threads),
         "plan" => harness::run_plan(scale, threads, args.flags.get("plan-store").map(String::as_str)),
         "overlap" => {
@@ -1160,7 +1314,7 @@ fn single_worker_sched(bench: &str, engine: &str, threads: usize) -> Result<Sche
             tetris::engine::by_name(engine, threads).context("engine")?,
             1 << 33,
         ))],
-        partition: Partition { unit: 8, shares: vec![1] },
+        partition: Partition::rows(8, vec![1]),
         comm_model: CommModel::default(),
         boundary: Boundary::Dirichlet(0.0),
         adapt_every: 0,

@@ -86,6 +86,59 @@ impl CostModel {
         let ring = (ext_cells - cells).max(0.0);
         base * ext_ratio + blocks * (self.comm.alpha * (1.0 + threads) + ring * 8.0 * self.comm.beta)
     }
+
+    /// Perimeter-over-area prior: pick the `Wy×Wx` worker-grid shape for
+    /// `workers` tiles over `shape` that minimizes per-block halo
+    /// **bytes** (the tile perimeter), enumerating the factorizations of
+    /// `workers` laid out as even splits and accounting edges + corners
+    /// with [`grid_exchanges`].  Bytes rank first — under the §5.3
+    /// pipelined loop the extra corner-message launches overlap with
+    /// compute, the bandwidth doesn't — with fewer messages and then
+    /// smaller `wy` as tie-breaks.  `None` for 1-D fields, a single
+    /// worker, or when no factorization fits the domain (an axis
+    /// shorter than its worker count).
+    ///
+    /// [`grid_exchanges`]: crate::coordinator::comm::grid_exchanges
+    pub fn choose_grid(
+        &self,
+        workers: usize,
+        shape: &[usize],
+        halo: usize,
+    ) -> Option<(usize, usize)> {
+        if workers < 2 || shape.len() < 2 {
+            return None;
+        }
+        let rest2: usize = shape[2..].iter().product::<usize>().max(1);
+        let spans_of = |widths: Vec<usize>| -> Vec<(usize, usize)> {
+            let mut at = 0usize;
+            widths
+                .into_iter()
+                .map(|w| {
+                    let s = at;
+                    at += w;
+                    (s, at)
+                })
+                .collect()
+        };
+        let mut best: Option<((usize, usize), (usize, usize, usize))> = None;
+        for wy in 1..=workers {
+            if workers % wy != 0 || wy > shape[1] {
+                continue;
+            }
+            let wx = workers / wy;
+            if wx > shape[0] {
+                continue;
+            }
+            let rows = spans_of(crate::coordinator::partition::even_split(shape[0], wx));
+            let bands = spans_of(crate::coordinator::partition::even_split(shape[1], wy));
+            let ex = crate::coordinator::comm::grid_exchanges(&rows, &bands, halo, rest2, false);
+            let key = (ex.iter().sum::<usize>(), ex.len(), wy);
+            if best.as_ref().map_or(true, |(_, k)| key < *k) {
+                best = Some(((wy, wx), key));
+            }
+        }
+        best.map(|(g, _)| g)
+    }
 }
 
 #[cfg(test)]
@@ -144,6 +197,35 @@ mod tests {
         let shallow = m.estimate_secs(&s, &[64, 64], 16, &cand("tetris-cpu", 1, 2));
         let deep = m.estimate_secs(&s, &[64, 64], 16, &cand("tetris-cpu", 1, 8));
         assert!(deep > shallow, "{deep} !> {shallow}");
+    }
+
+    #[test]
+    fn choose_grid_prefers_square_tiles_on_square_domains() {
+        // 64×64 at W=4: the 2×2 grid's perimeter (edges + corners) ships
+        // fewer bytes than the 1×4 flat split's three full-width links.
+        let m = model();
+        assert_eq!(m.choose_grid(4, &[64, 64], 2), Some((2, 2)));
+        // W=9 on a square: 3×3
+        assert_eq!(m.choose_grid(9, &[81, 81], 1), Some((3, 3)));
+    }
+
+    #[test]
+    fn choose_grid_splits_the_long_axis_on_flat_domains() {
+        let m = model();
+        assert_eq!(m.choose_grid(4, &[256, 8], 2), Some((1, 4)));
+        assert_eq!(m.choose_grid(4, &[8, 256], 2), Some((4, 1)));
+    }
+
+    #[test]
+    fn choose_grid_degenerate_cases() {
+        let m = model();
+        assert_eq!(m.choose_grid(1, &[64, 64], 2), None, "one worker has no grid to pick");
+        assert_eq!(m.choose_grid(4, &[4096], 2), None, "1-D fields have no column axis");
+        // prime W on a square domain: both 1×5 and 5×1 ship the same
+        // bytes; ties break toward fewer bands
+        assert_eq!(m.choose_grid(5, &[64, 64], 2), Some((1, 5)));
+        // no factorization fits a 4-cell-wide domain with 8 workers/axis
+        assert_eq!(m.choose_grid(64, &[4, 4], 1), None);
     }
 
     #[test]

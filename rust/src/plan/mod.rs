@@ -92,6 +92,12 @@ pub struct Plan {
     /// serial, `None` = let the scheduler's `auto` heuristic decide.
     /// Searched by the tuner's overlap probe; bit-exact either way.
     pub overlap: Option<bool>,
+    /// Worker-grid shape `(wy, wx)` for scheduler-mode runs: `Some` when
+    /// the planner chose a 2-D tile grid over 1-D row spans (the
+    /// perimeter-over-area prior — see [`cost::choose_grid`]), `None` =
+    /// dim-0 spans only.  Runs with fewer workers than `wy*wx` fall back
+    /// to 1-D.
+    pub grid: Option<(usize, usize)>,
     /// Throughput observed when the plan was selected (GStencils/s on
     /// the proxy grid for tuned plans, on the real run for observed ones).
     pub gsps: f64,
@@ -140,6 +146,12 @@ impl Plan {
         if let Some(o) = self.overlap {
             m.insert("overlap".into(), Json::Bool(o));
         }
+        if let Some((wy, wx)) = self.grid {
+            m.insert(
+                "grid".into(),
+                Json::Arr(vec![Json::Num(wy as f64), Json::Num(wx as f64)]),
+            );
+        }
         m.insert("gsps".into(), Json::Num(self.gsps));
         m.insert("source".into(), Json::Str(self.source.clone()));
         m.insert("seed".into(), Json::Num(self.seed as f64));
@@ -162,6 +174,11 @@ impl Plan {
             tb: v.at(&["tb"]).as_usize().unwrap_or(1).max(1),
             tile_w: v.get("tile_w").and_then(|t| t.as_usize()),
             overlap: v.get("overlap").and_then(|o| o.as_bool()),
+            grid: v
+                .get("grid")
+                .and_then(|g| g.usize_vec())
+                .filter(|v| v.len() == 2 && v[0] >= 1 && v[1] >= 1)
+                .map(|v| (v[0], v[1])),
             gsps: v.at(&["gsps"]).as_f64().unwrap_or(0.0),
             source: v.at(&["source"]).as_str().unwrap_or("tuned").to_string(),
             seed: v.at(&["seed"]).as_u64().unwrap_or(0),
@@ -246,6 +263,7 @@ mod tests {
             tb: 4,
             tile_w: Some(64),
             overlap: Some(true),
+            grid: Some((2, 2)),
             gsps: 1.25,
             source: "tuned".into(),
             seed: 42,
@@ -269,6 +287,16 @@ mod tests {
         assert_eq!(Plan::parse_line(&rline).unwrap(), r);
         let s = Plan { overlap: Some(false), ..p.clone() };
         assert_eq!(Plan::parse_line(&s.to_json().to_string()).unwrap(), s);
+        // grid: omitted when None (pre-grid records stay valid), and a
+        // degenerate/malformed stored grid decodes as None
+        let g = Plan { grid: None, ..p.clone() };
+        let gline = g.to_json().to_string();
+        assert!(!gline.contains("grid"));
+        assert_eq!(Plan::parse_line(&gline).unwrap(), g);
+        let bad = gline.replacen('{', "{\"grid\":[0,2],", 1);
+        assert_eq!(Plan::parse_line(&bad).unwrap().grid, None);
+        let bad = gline.replacen('{', "{\"grid\":[2],", 1);
+        assert_eq!(Plan::parse_line(&bad).unwrap().grid, None);
     }
 
     #[test]

@@ -225,6 +225,10 @@ pub fn search_with(
         }
     }
     let (gsps, _, c) = best.with_context(|| format!("no plan trial succeeded for {bench}"))?;
+    // Worker-grid prior for scheduler-mode consumers: the Wy×Wx shape a
+    // one-worker-per-core fleet would tile this domain with (pure
+    // arithmetic — deterministic under the seed like everything else).
+    let grid = model.choose_grid(fp.cores, shape, s.radius * c.tb.max(1));
     Ok(Plan {
         version: PLAN_VERSION,
         fingerprint: fp.id(),
@@ -236,6 +240,7 @@ pub fn search_with(
         tb: c.tb,
         tile_w: c.tile_w,
         overlap: None,
+        grid,
         gsps,
         source: "tuned".to_string(),
         seed: cfg.seed,

@@ -288,6 +288,7 @@ mod tests {
             tb: 2,
             tile_w: None,
             overlap: None,
+            grid: None,
             gsps: 1.0,
             source: "tuned".into(),
             seed: 0,

@@ -493,6 +493,7 @@ impl Executor {
             // observed plans record throughput, not a leader-loop
             // preference — the tuner's probe owns that knob
             overlap: None,
+            grid: None,
             gsps,
             source: "observed".to_string(),
             seed: 0,
@@ -654,7 +655,7 @@ mod tests {
                 crate::engine::by_name("simd", 1).unwrap(),
                 1 << 30,
             ))],
-            partition: crate::coordinator::Partition { unit: 24, shares: vec![1] },
+            partition: crate::coordinator::Partition::rows(24, vec![1]),
             comm_model: crate::coordinator::CommModel::default(),
             boundary: Boundary::Dirichlet(0.0),
             adapt_every: 0,
@@ -777,6 +778,7 @@ mod tests {
                 tb: 4,
                 tile_w: None,
                 overlap: Some(true),
+                grid: None,
                 gsps: 1.0,
                 source: "tuned".into(),
                 seed: 0,

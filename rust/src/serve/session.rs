@@ -135,8 +135,11 @@ impl Session {
             cached.iter().zip(&metrics.final_shares).map(|(a, b)| a.abs_diff(*b)).sum();
         if drift as f64 / total as f64 > self.drift_threshold {
             self.invalidations += 1;
+            // Carry both axes: shares plus (for grid sessions) the
+            // converged band widths, so the rebuild is the exact grid.
             self.sched.partition =
-                Partition { unit: self.sched.partition.unit, shares: metrics.final_shares.clone() };
+                Partition::rows(self.sched.partition.unit, metrics.final_shares.clone())
+                    .with_bands(metrics.final_bands.clone());
         } else {
             self.cache_hits += 1;
         }

@@ -40,6 +40,18 @@ fn strides_for(shape: &[usize]) -> Vec<usize> {
     s
 }
 
+/// Dim-1 column range of a region access, for the dynamic race
+/// validator's 2-D rects; fields without a column axis report the
+/// unconstrained full range.
+#[cfg(debug_assertions)]
+fn dim1_range(offset: &[usize], count: &[usize]) -> (usize, usize) {
+    if offset.len() >= 2 {
+        (offset[1], offset[1] + count[1])
+    } else {
+        (0, usize::MAX)
+    }
+}
+
 impl Field {
     pub fn zeros(shape: &[usize]) -> Self {
         Self::full(shape, 0.0)
@@ -170,7 +182,8 @@ impl Field {
         }
         #[cfg(debug_assertions)]
         if self.ndim() > 0 {
-            crate::analyze::dynamic::record(self.trace, false, offset[0], offset[0] + shape[0]);
+            let (c0, c1) = dim1_range(offset, shape);
+            crate::analyze::dynamic::record(self.trace, false, offset[0], offset[0] + shape[0], c0, c1);
         }
         let mut out = Field::zeros(shape);
         copy_region(
@@ -197,8 +210,10 @@ impl Field {
         }
         #[cfg(debug_assertions)]
         if self.ndim() > 0 {
-            crate::analyze::dynamic::record(self.trace, true, offset[0], offset[0] + src.shape[0]);
-            crate::analyze::dynamic::record(src.trace, false, 0, src.shape[0]);
+            let (c0, c1) = dim1_range(offset, &src.shape);
+            crate::analyze::dynamic::record(self.trace, true, offset[0], offset[0] + src.shape[0], c0, c1);
+            let (s0, s1) = dim1_range(&vec![0; src.ndim()], &src.shape);
+            crate::analyze::dynamic::record(src.trace, false, 0, src.shape[0], s0, s1);
         }
         let shape = self.shape.clone();
         copy_region(
@@ -235,8 +250,10 @@ impl Field {
         }
         #[cfg(debug_assertions)]
         if self.ndim() > 0 {
-            crate::analyze::dynamic::record(src.trace, false, src_off[0], src_off[0] + count[0]);
-            crate::analyze::dynamic::record(self.trace, true, dst_off[0], dst_off[0] + count[0]);
+            let (sc0, sc1) = dim1_range(src_off, count);
+            crate::analyze::dynamic::record(src.trace, false, src_off[0], src_off[0] + count[0], sc0, sc1);
+            let (dc0, dc1) = dim1_range(dst_off, count);
+            crate::analyze::dynamic::record(self.trace, true, dst_off[0], dst_off[0] + count[0], dc0, dc1);
         }
         let dst_shape = self.shape.clone();
         copy_region(&src.data, &src.shape, src_off, &mut self.data, &dst_shape, dst_off, count);
@@ -266,7 +283,10 @@ impl Field {
             return;
         }
         #[cfg(debug_assertions)]
-        crate::analyze::dynamic::record(self.trace, true, offset[0], offset[0] + count[0]);
+        {
+            let (c0, c1) = dim1_range(offset, count);
+            crate::analyze::dynamic::record(self.trace, true, offset[0], offset[0] + count[0], c0, c1);
+        }
         let row = count[nd - 1];
         let outer: usize = count[..nd - 1].iter().product();
         let mut idx = vec![0usize; nd - 1];
@@ -325,8 +345,10 @@ impl Field {
         );
         #[cfg(debug_assertions)]
         {
-            crate::analyze::dynamic::record(self.trace, false, src_off[0], src_off[0] + count[0]);
-            crate::analyze::dynamic::record(self.trace, true, dst_off[0], dst_off[0] + count[0]);
+            let (sc0, sc1) = dim1_range(src_off, count);
+            crate::analyze::dynamic::record(self.trace, false, src_off[0], src_off[0] + count[0], sc0, sc1);
+            let (dc0, dc1) = dim1_range(dst_off, count);
+            crate::analyze::dynamic::record(self.trace, true, dst_off[0], dst_off[0] + count[0], dc0, dc1);
         }
         let row = count[nd - 1];
         let outer: usize = count[..nd - 1].iter().product();

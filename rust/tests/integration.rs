@@ -72,7 +72,7 @@ fn hetero_cpu_plus_xla_matches_reference() {
             Box::new(XlaWorker::new(svc.clone(), &format!("{bench}_block"), 1 << 33).unwrap()),
         ];
         let units = meta.global_core[0] / meta.unit;
-        let partition = Partition { unit: meta.unit, shares: vec![units / 2, units - units / 2] };
+        let partition = Partition::rows(meta.unit, vec![units / 2, units - units / 2]);
         let sched = Scheduler {
             spec: s.clone(),
             tb: meta.tb,
@@ -195,7 +195,7 @@ fn hetero_cpu_plus_xla_periodic_matches_torus_oracle() {
         spec: s.clone(),
         tb: meta.tb,
         workers,
-        partition: Partition { unit: meta.unit, shares: vec![units / 2, units - units / 2] },
+        partition: Partition::rows(meta.unit, vec![units / 2, units - units / 2]),
         comm_model: CommModel::default(),
         boundary: Boundary::Periodic,
         adapt_every: 0,
@@ -239,7 +239,7 @@ fn worker_failure_propagates() {
             Box::new(NativeWorker::new(tetris::engine::by_name("simd", 1).unwrap(), 1 << 40)),
             Box::new(FailingWorker),
         ],
-        partition: Partition { unit: 8, shares: vec![1, 1] },
+        partition: Partition::rows(8, vec![1, 1]),
         comm_model: CommModel::default(),
         boundary: Boundary::Dirichlet(0.0),
         adapt_every: 0,

@@ -104,6 +104,7 @@ fn scratch_store_append_compact_cycle() {
         tb: 4,
         tile_w: None,
         overlap: None,
+        grid: None,
         gsps,
         source: "tuned".into(),
         seed: 9,

@@ -108,7 +108,7 @@ fn prop_scheduler_equals_reference() {
             spec: s.clone(),
             tb,
             workers,
-            partition: Partition { unit, shares },
+            partition: Partition::rows(unit, shares),
             comm_model: CommModel::default(),
             boundary,
             adapt_every: 0,
@@ -237,7 +237,7 @@ fn random_window_plan(rng: &mut SplitMix64, case: usize, min_bw: usize) -> Windo
     if shares.iter().sum::<usize>() == 0 {
         shares[pick(rng, 0, nw - 1)] = pick(rng, 1, 6);
     }
-    let p = Partition { unit: pick(rng, 1, 3), shares };
+    let p = Partition::rows(pick(rng, 1, 3), shares);
     let spans = p.spans();
     let rows = spans.last().unwrap().1;
     let halo = pick(rng, 1, 4);
@@ -293,6 +293,139 @@ fn prop_dropped_assemble_dep_always_races() {
             "case {case}: dropping dep #{victim} of assemble #{a_id} must surface a race"
         );
     }
+}
+
+/// Grid tiling invariant: for any Wy×Wx partition — zero-share runs
+/// and zero-width bands included — the per-worker rects cover every
+/// cell of the domain exactly once, and `worker_cells` agrees with the
+/// rect areas.
+#[test]
+fn prop_grid_rects_tile_domain_exactly() {
+    for case in 0..CASES {
+        let mut rng = rng_for(9000 + case);
+        let wx = pick(&mut rng, 1, 4);
+        let wy = pick(&mut rng, 1, 4);
+        let unit = pick(&mut rng, 1, 3);
+        let mut shares: Vec<usize> = (0..wx).map(|_| pick(&mut rng, 0, 5)).collect();
+        if shares.iter().sum::<usize>() == 0 {
+            shares[pick(&mut rng, 0, wx - 1)] = pick(&mut rng, 1, 5);
+        }
+        let mut cols: Vec<usize> = (0..wy).map(|_| pick(&mut rng, 0, 6)).collect();
+        if cols.iter().sum::<usize>() == 0 {
+            cols[pick(&mut rng, 0, wy - 1)] = pick(&mut rng, 1, 6);
+        }
+        let p = Partition::rows(unit, shares).with_bands(cols);
+        let n_rows = p.total_units() * unit;
+        let n_cols = if p.cols.is_empty() { pick(&mut rng, 1, 8) } else { p.total_cols() };
+        let rects = p.rects(n_cols);
+        assert_eq!(rects.len(), p.workers(), "case {case}");
+        let mut hits = vec![0u32; n_rows * n_cols];
+        for ((r0, r1), (c0, c1)) in &rects {
+            for r in *r0..*r1 {
+                for c in *c0..*c1 {
+                    hits[r * n_cols + c] += 1;
+                }
+            }
+        }
+        assert!(
+            hits.iter().all(|&h| h == 1),
+            "case {case}: {}x{} rects don't tile {n_rows}x{n_cols} exactly once",
+            p.wy(),
+            p.wx()
+        );
+        let cells = if p.cols.is_empty() { p.worker_cells(n_cols) } else { p.worker_cells(1) };
+        for (w, ((r0, r1), (c0, c1))) in rects.iter().enumerate() {
+            assert_eq!(cells[w], (r1 - r0) * (c1 - c0), "case {case}: worker {w}");
+        }
+    }
+}
+
+/// Random Wy×Wx grid draw for the race-checker properties (wy >= 2 so
+/// the 2-D owner scheme — corner edges included — is actually
+/// exercised; zero-share runs and zero-width bands stay in the pool).
+fn random_grid_window_plan(rng: &mut SplitMix64, case: usize, min_bw: usize) -> (WindowPlan, usize) {
+    let wx = pick(rng, 1, 3);
+    let wy = pick(rng, 2, 3);
+    let mut shares: Vec<usize> = (0..wx).map(|_| pick(rng, 0, 5)).collect();
+    if shares.iter().sum::<usize>() == 0 {
+        shares[pick(rng, 0, wx - 1)] = pick(rng, 1, 5);
+    }
+    let mut cols: Vec<usize> = (0..wy).map(|_| pick(rng, 0, 6)).collect();
+    while cols.iter().sum::<usize>() < 2 {
+        cols[pick(rng, 0, wy - 1)] += 1;
+    }
+    let p = Partition::rows(pick(rng, 1, 3), shares).with_bands(cols);
+    let spans = p.spans();
+    let rows = spans.last().unwrap().1;
+    let n_cols = p.total_cols();
+    let bands = p.bands(n_cols);
+    let halo = pick(rng, 1, 3);
+    let nf = pick(rng, 1, 2);
+    let bw = pick(rng, min_bw, 3);
+    let b0 = pick(rng, 0, 3);
+    let boundary = match case % 3 {
+        0 => Boundary::Dirichlet(rng.next_f64()),
+        1 => Boundary::Neumann,
+        _ => Boundary::Periodic,
+    };
+    (WindowPlan::build_grid(&spans, &bands, halo, rows, n_cols, boundary, nf, b0, bw), wx)
+}
+
+/// The 2-D mirror of `prop_window_plans_race_free_and_minimal`: every
+/// grid window plan — zero-area tiles, any boundary, any parity — is
+/// race-free with no over-synchronizing and no redundant edges.  The
+/// oversync half is the sharp one: per-axis symmetrization before the
+/// product would link the hosts of empty tiles spuriously.
+#[test]
+fn prop_grid_window_plans_race_free_and_minimal() {
+    for case in 0..CASES {
+        let mut rng = rng_for(10_000 + case);
+        let (plan, _) = random_grid_window_plan(&mut rng, case, 1);
+        let r = plan.model.check();
+        assert!(r.is_clean(), "case {case}: {:?}", r.races);
+        assert!(r.oversync.is_empty(), "case {case}: {:?}", r.oversync);
+        assert_eq!(r.redundant_edges, 0, "case {case}");
+    }
+}
+
+/// Detector completeness on grids, corner exchanges included: dropping
+/// any single writeback -> assemble dependency — preferring an edge
+/// from a *diagonal* neighbour when the draw has one — must surface a
+/// race.  This is the 2-D extension of the 1-D dropped-edge property:
+/// corner edges are load-bearing, not belt-and-braces.
+#[test]
+fn prop_dropped_grid_corner_dep_always_races() {
+    let mut corner_cases = 0usize;
+    for case in 0..CASES {
+        let mut rng = rng_for(11_000 + case);
+        let (plan, wx) = random_grid_window_plan(&mut rng, case, 2);
+        let k = pick(&mut rng, 1, plan.bw - 1);
+        let f = pick(&mut rng, 0, plan.nf - 1);
+        let w = pick(&mut rng, 0, plan.nw - 1);
+        let a_id = plan.id(k, f, w, TaskKind::Assemble);
+        let deps = plan.model.deps[a_id].clone();
+        assert!(!deps.is_empty(), "case {case}: block-{k} assembles always have owners");
+        // Prefer a dependency on a diagonal tile (both axes differ).
+        let (gy, gx) = (w / wx, w % wx);
+        let is_corner = |dep: &usize| {
+            let o = plan.meta[*dep].worker;
+            (o / wx != gy) && (o % wx != gx)
+        };
+        let victim = match deps.iter().find(|d| is_corner(d)) {
+            Some(&d) => {
+                corner_cases += 1;
+                d
+            }
+            None => deps[pick(&mut rng, 0, deps.len() - 1)],
+        };
+        let mut m = plan.model.clone();
+        assert!(m.drop_dep(a_id, victim));
+        assert!(
+            !m.races().is_empty(),
+            "case {case}: dropping dep #{victim} of assemble #{a_id} must surface a race"
+        );
+    }
+    assert!(corner_cases > 0, "the draw never produced a corner exchange to drop");
 }
 
 /// PRNG fill agrees with reference::block determinism: same seed, same

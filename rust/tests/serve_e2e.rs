@@ -48,7 +48,7 @@ fn direct_run_tb(
             tetris::engine::by_name("simd", 1).unwrap(),
             1 << 33,
         ))],
-        partition: Partition { unit: shape[0], shares: vec![1] },
+        partition: Partition::rows(shape[0], vec![1]),
         comm_model: CommModel::default(),
         boundary,
         adapt_every: 0,
@@ -151,6 +151,7 @@ fn e2e_session_adopts_stored_plan_and_matches_fixed_engine_bits() {
             gsps: 2.0,
             tile_w: None,
             overlap: Some(true),
+            grid: None,
             source: "tuned".into(),
             seed: 0,
         })

@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # Static race-analysis gate for CI: build the release binary, run the
 # full `tetris analyze --all` sweep (pipelined-window plans across
-# boundary x workers x partition shape x fields x window length x window
-# parity, plus the tetris-wave DAGs) and fail on any reported race.
+# boundary x grid shape (Wy x Wx) x partition/band layout x fields x
+# window length x window parity, plus the tetris-wave DAGs) and fail on
+# any reported race.  An explicit grid matrix then re-walks Wy x Wx in
+# {1,2} x {1..3} — every boundary, both window parities — through the
+# single-config path, so a regression in one grid shape names itself.
 # Then prove the detector actually detects: `tetris analyze
 # --inject-race` drops one writeback -> assemble edge from a known plan
 # and MUST exit nonzero while reporting an unordered conflict.
@@ -18,6 +21,15 @@ cargo build --release --manifest-path rust/Cargo.toml
 
 echo "== tetris analyze --all =="
 "$BIN" analyze --all
+
+echo "== grid matrix: Wy x Wx in {1,2} x {1..3} =="
+for wy in 1 2; do
+  for wx in 1 2 3; do
+    echo "-- grid ${wy}x${wx} --"
+    "$BIN" analyze --bench heat2d --grid "${wy}x${wx}" \
+      --boundary dirichlet:0,neumann,periodic
+  done
+done
 
 echo "== negative path: injected race must be detected =="
 out=$(mktemp)

@@ -22,6 +22,7 @@ OVERLAP_OFF_OUT="${TETRIS_SMOKE_OVERLAP_OFF_OUT:-BENCH_overlap_off.json}"
 OVERLAP_ON_OUT="${TETRIS_SMOKE_OVERLAP_ON_OUT:-BENCH_overlap_on.json}"
 OVERLAP_TRACE_OFF_OUT="${TETRIS_SMOKE_OVERLAP_TRACE_OFF_OUT:-BENCH_overlap_trace_off.json}"
 OVERLAP_TRACE_ON_OUT="${TETRIS_SMOKE_OVERLAP_TRACE_ON_OUT:-BENCH_overlap_trace_on.json}"
+GRID_OUT="${TETRIS_SMOKE_GRID_OUT:-BENCH_grid.json}"
 PLAN_OUT="${TETRIS_SMOKE_PLAN_OUT:-BENCH_plan.json}"
 PLAN_STORE_OUT="${TETRIS_SMOKE_PLAN_STORE_OUT:-BENCH_plans.jsonl}"
 BIN=rust/target/release/tetris
@@ -40,6 +41,14 @@ cargo build --release --manifest-path rust/Cargo.toml
 # on the same job mix — batched must beat unbatched) + a TCP loopback
 # drive with p99, all in-process.
 "$BIN" bench serve --scale "$SCALE" --threads "$THREADS" --json "$SERVE_OUT"
+
+# 2-D worker-grid study: the same 4-worker heat2d run as a flat 1x4 row
+# split vs a 2x2 tile grid.  The rows carry halo_bytes= in parseable
+# form; `bench check` asserts the 2-D rung ships fewer halo bytes than
+# the 1-D split at W >= 4 (the perimeter-over-area claim) and the run
+# itself asserts the two shapes stay bit-identical.
+"$BIN" bench grid --scale "$SCALE" --threads "$THREADS" --json "$GRID_OUT"
+"$BIN" bench check "$GRID_OUT"
 
 # §5.3 overlap study: the pipelined (double-buffered) leader loop vs the
 # serial one on an imbalanced 2-worker run — summed worker idle and the
@@ -117,7 +126,7 @@ wait "$SERVE_PID"
 trap - EXIT
 rm -f "$ADDR_FILE"
 
-for f in "$OUT" "$BOUNDARY_OUT" "$SERVE_OUT" "$OVERLAP_OUT" "$OVERLAP_OFF_OUT" "$OVERLAP_ON_OUT" "$SERVE_LIVE_OUT" "$PLAN_OUT" "$PLAN_STORE_OUT"; do
+for f in "$OUT" "$BOUNDARY_OUT" "$GRID_OUT" "$SERVE_OUT" "$OVERLAP_OUT" "$OVERLAP_OFF_OUT" "$OVERLAP_ON_OUT" "$SERVE_LIVE_OUT" "$PLAN_OUT" "$PLAN_STORE_OUT"; do
   echo "--- $f ---"
   cat "$f"
 done
